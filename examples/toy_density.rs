@@ -1,0 +1,36 @@
+//! Fig. 1 reproduction: trace the first 100 steps of SGHMC vs EC-SGHMC on
+//! the 2-D Gaussian and write the trajectories to CSV for plotting.
+//!
+//! Run: `cargo run --release --example toy_density [-- <out_dir>]`
+
+use ecsgmcmc::experiments::fig1;
+
+fn main() {
+    let out_dir = std::env::args().nth(1).unwrap_or_else(|| "out".to_string());
+    std::fs::create_dir_all(&out_dir).expect("create out dir");
+
+    println!("FIG1: 2-D Gaussian, alpha=1, eps=1e-2, C=V=I, 100 steps");
+    let result = fig1::run(100, 42);
+
+    let path = format!("{out_dir}/fig1_traces.csv");
+    fig1::write_traces_csv(&result, &path).expect("write csv");
+
+    println!("\nper-trace metrics (first 100 steps):");
+    println!("{:<16} {:>12} {:>14}", "trace", "mean U", "frac in HDR90");
+    let labels = ["sghmc-0", "sghmc-1", "ec-0", "ec-1", "ec-2", "ec-3"];
+    for (i, label) in labels.iter().enumerate() {
+        println!(
+            "{label:<16} {:>12.4} {:>14.3}",
+            result.mean_potential[i], result.frac_hdr90[i]
+        );
+    }
+    println!("\nscheme averages (the paper's qualitative claim, quantified):");
+    println!("  SGHMC    mean U = {:.4}", result.sghmc_mean_u);
+    println!("  EC-SGHMC mean U = {:.4}", result.ec_mean_u);
+    if result.ec_mean_u < result.sghmc_mean_u {
+        println!("  -> EC chains spend early steps in higher-density regions ✓");
+    } else {
+        println!("  -> note: with this seed SGHMC did not wander; try others");
+    }
+    println!("\ntraces written to {path} (columns: scheme,chain,step,x,y)");
+}

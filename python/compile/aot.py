@@ -1,0 +1,263 @@
+"""AOT compile path: lower every model/kernel entry point to HLO text.
+
+This is the only place Python touches the system. ``make artifacts`` runs
+this module once; the Rust coordinator then loads ``artifacts/*.hlo.txt``
+through the PJRT CPU client and Python never appears on the request path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects; the text
+parser reassigns ids and round-trips cleanly.
+
+Artifacts (see the manifest for exact shapes):
+
+  gaussian_grad        (theta,)                       -> (u, grad)
+  mlp_grad             (theta, x, y)                  -> (u, grad)
+  mlp_predict          (theta, x)                     -> (logits,)
+  mlp_sghmc_update     (scal, theta, p, x, y, noise)  -> (theta', p', u)
+  mlp_ec_update        (scal, theta, p, c, x, y, noise) -> (theta', p', u)
+  resnet_grad / resnet_predict / resnet_sghmc_update / resnet_ec_update
+  center_update        (scal, c, r, theta_mean, noise) -> (c', r')
+                       (lowered per padded length: center_update_mlp, ...)
+  sghmc_step / ec_step (pure sampler steps, per padded length -- used by
+                       the XLA-stepper backend and for kernel round-trip
+                       tests from Rust)
+
+``--preset test`` shrinks the models so the pytest/CI path stays fast;
+the manifest records every shape so the Rust side adapts automatically.
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import center_step as k_center
+from .kernels import ec_step as k_ec
+from .kernels import ref as k_ref
+from .kernels import sghmc_step as k_sghmc
+
+PRESETS = {
+    # CPU-tractable default: 2x256 MLP (paper: 2x800), resnet-lite with 15
+    # residual blocks = 32 weight layers (paper: ResNet-32), batch 100.
+    "default": dict(
+        mlp=M.MlpSpec(hidden=256, batch=100),
+        resnet=M.ResNetSpec(width=96, blocks=15, batch=100),
+    ),
+    # Paper-scale MLP width (slow on CPU; for completeness).
+    "paper": dict(
+        mlp=M.MlpSpec(hidden=800, batch=100),
+        resnet=M.ResNetSpec(width=128, blocks=15, batch=100),
+    ),
+    # Tiny preset for tests.
+    "test": dict(
+        mlp=M.MlpSpec(hidden=32, batch=16, n_total=2048),
+        resnet=M.ResNetSpec(width=32, blocks=3, batch=16, n_total=2048),
+    ),
+}
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def spec_i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def io_entry(name, shape, dtype=F32):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"version": 1, "artifacts": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def lower(self, name, fn, arg_specs, inputs, outputs, meta=None):
+        """Lower ``fn`` at ``arg_specs`` and record a manifest entry."""
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": inputs,
+            "outputs": outputs,
+            "meta": meta or {},
+        }
+        print(f"  {name}: {len(text)} chars, {len(inputs)} inputs")
+
+    def finish(self, extra_meta):
+        self.manifest["meta"] = extra_meta
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=2, sort_keys=True)
+        print(f"wrote {path} ({len(self.manifest['artifacts'])} artifacts)")
+
+
+def lower_step_kernels(b: Builder, tag: str, np_: int):
+    """Pure sampler-step kernels for padded length ``np_`` (per model)."""
+    scal = spec_f32(k_ref.SCAL_DIM)
+    vec = spec_f32(np_)
+    scal_io = io_entry("scal", (k_ref.SCAL_DIM,))
+    vec_io = lambda nm: io_entry(nm, (np_,))  # noqa: E731
+
+    b.lower(
+        f"sghmc_step_{tag}",
+        k_sghmc.sghmc_step,
+        (scal, vec, vec, vec, vec),
+        [scal_io, vec_io("theta"), vec_io("p"), vec_io("grad"), vec_io("noise")],
+        [vec_io("theta_new"), vec_io("p_new")],
+        meta={"padded_n": np_},
+    )
+    b.lower(
+        f"ec_step_{tag}",
+        k_ec.ec_worker_step,
+        (scal, vec, vec, vec, vec, vec),
+        [
+            scal_io,
+            vec_io("theta"),
+            vec_io("p"),
+            vec_io("grad"),
+            vec_io("center"),
+            vec_io("noise"),
+        ],
+        [vec_io("theta_new"), vec_io("p_new")],
+        meta={"padded_n": np_},
+    )
+    b.lower(
+        f"center_update_{tag}",
+        k_center.center_step,
+        (scal, vec, vec, vec, vec),
+        [scal_io, vec_io("center"), vec_io("r"), vec_io("theta_mean"), vec_io("noise")],
+        [vec_io("center_new"), vec_io("r_new")],
+        meta={"padded_n": np_},
+    )
+
+
+def lower_model(b: Builder, tag: str, spec):
+    """Grad / predict / fused-update artifacts for one model spec."""
+    np_ = spec.padded_n
+    batch = spec.batch
+    in_dim = spec.in_dim
+    scal = spec_f32(k_ref.SCAL_DIM)
+    theta = spec_f32(np_)
+    x = spec_f32(batch, in_dim)
+    y = spec_i32(batch)
+    meta = {
+        "n_params": spec.n,
+        "padded_n": np_,
+        "batch": batch,
+        "in_dim": in_dim,
+        "out_dim": spec.out_dim,
+        "n_total": spec.n_total,
+    }
+    if hasattr(spec, "hidden"):
+        meta.update(hidden=spec.hidden, depth=spec.depth)
+    else:
+        meta.update(width=spec.width, blocks=spec.blocks)
+
+    scal_io = io_entry("scal", (k_ref.SCAL_DIM,))
+    theta_io = io_entry("theta", (np_,))
+    vec_io = lambda nm: io_entry(nm, (np_,))  # noqa: E731
+    x_io = io_entry("x", (batch, in_dim))
+    y_io = io_entry("y", (batch,), I32)
+    u_io = io_entry("u", ())
+
+    b.lower(
+        f"{tag}_grad",
+        spec.grad,
+        (theta, x, y),
+        [theta_io, x_io, y_io],
+        [u_io, vec_io("grad")],
+        meta=meta,
+    )
+    b.lower(
+        f"{tag}_predict",
+        spec.logits,
+        (theta, x),
+        [theta_io, x_io],
+        [io_entry("logits", (batch, spec.out_dim))],
+        meta=meta,
+    )
+    b.lower(
+        f"{tag}_sghmc_update",
+        functools.partial(M.fused_sghmc_update, spec),
+        (scal, theta, theta, x, y, theta),
+        [scal_io, theta_io, vec_io("p"), x_io, y_io, vec_io("noise")],
+        [vec_io("theta_new"), vec_io("p_new"), u_io],
+        meta=meta,
+    )
+    b.lower(
+        f"{tag}_ec_update",
+        functools.partial(M.fused_ec_update, spec),
+        (scal, theta, theta, theta, x, y, theta),
+        [scal_io, theta_io, vec_io("p"), vec_io("center"), x_io, y_io, vec_io("noise")],
+        [vec_io("theta_new"), vec_io("p_new"), u_io],
+        meta=meta,
+    )
+    lower_step_kernels(b, tag, np_)
+
+
+def lower_gaussian(b: Builder):
+    """Fig. 1 toy: grad of the fixed 2-D Gaussian potential."""
+    theta = spec_f32(2)
+    b.lower(
+        "gaussian_grad",
+        M.gaussian_grad,
+        (theta,),
+        [io_entry("theta", (2,))],
+        [io_entry("u", ()), io_entry("grad", (2,))],
+        meta={"n_params": 2, "padded_n": 2, "cov": [list(r) for r in M.GAUSS_COV]},
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--preset", default=os.environ.get("AOT_PRESET", "default"),
+                    choices=sorted(PRESETS))
+    args = ap.parse_args()
+
+    preset = PRESETS[args.preset]
+    b = Builder(args.out)
+    print(f"AOT preset={args.preset} -> {args.out}")
+    lower_gaussian(b)
+    lower_model(b, "mlp", preset["mlp"])
+    lower_model(b, "resnet", preset["resnet"])
+    b.finish(
+        {
+            "preset": args.preset,
+            "scal_dim": k_ref.SCAL_DIM,
+            "scal_layout": ["eps", "minv", "fric", "alpha", "noise_scale",
+                            "reserved", "reserved", "reserved"],
+            "block": 1024,
+            "weight_decay": M.WEIGHT_DECAY,
+        }
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

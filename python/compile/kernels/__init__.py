@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for EC-SGHMC.
+
+Every kernel here is the compute hot-spot of one of the paper's update
+equations (Springenberg et al. 2016, Eqs. 4 and 6), written as a Pallas
+kernel and lowered with ``interpret=True`` so the resulting HLO runs on the
+CPU PJRT client used by the Rust coordinator.
+
+Kernels:
+  * :mod:`.sghmc_step`   -- fused SGHMC update (Eq. 4).
+  * :mod:`.ec_step`      -- fused elastically-coupled worker update (Eq. 6,
+    rows 1 and 3).
+  * :mod:`.center_step`  -- center-variable update (Eq. 6, rows 2 and 4).
+  * :mod:`.dense`        -- fused matmul+bias+activation used by the L2
+    models (MLP / residual net).
+  * :mod:`.ref`          -- pure-jnp oracles for all of the above; the
+    pytest suite asserts allclose between each kernel and its oracle.
+"""
+
+from . import center_step, dense, ec_step, ref, sghmc_step  # noqa: F401

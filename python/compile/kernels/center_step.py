@@ -1,0 +1,32 @@
+"""Pallas kernel: center-variable update (paper Eq. 6, rows 2+4).
+
+Advances the centering mass (c, r). The mean over worker positions
+``theta_mean = (1/K) sum_i theta^i`` is computed by the coordinator (it is
+the only party that sees every worker) and passed in as a vector, keeping
+the kernel independent of K.
+"""
+
+from .common import elementwise_call
+from .ref import SCAL_ALPHA, SCAL_EPS, SCAL_FRIC, SCAL_MINV, SCAL_NOISE
+
+
+def _kernel(scal_ref, center_ref, r_ref, theta_mean_ref, noise_ref, center_out, r_out):
+    eps = scal_ref[SCAL_EPS]
+    minv = scal_ref[SCAL_MINV]
+    fric = scal_ref[SCAL_FRIC]
+    alpha = scal_ref[SCAL_ALPHA]
+    nscale = scal_ref[SCAL_NOISE]
+    center = center_ref[...]
+    r = r_ref[...]
+    center_out[...] = center + eps * minv * r
+    r_out[...] = (
+        r
+        - eps * fric * minv * r
+        - eps * alpha * (center - theta_mean_ref[...])
+        + nscale * noise_ref[...]
+    )
+
+
+def center_step(scal, center, r, theta_mean, noise):
+    """Center-variable step; mirrors :func:`compile.kernels.ref.center_step`."""
+    return elementwise_call(_kernel, scal, [center, r, theta_mean, noise], n_out=2)

@@ -1,0 +1,90 @@
+"""Shared Pallas plumbing for the elementwise sampler-update kernels.
+
+All three sampler kernels (sghmc_step / ec_step / center_step) are
+elementwise over flat f32 parameter vectors plus one small f32[8] scalar
+block. They share the same grid/BlockSpec layout:
+
+  * the parameter vectors are tiled in ``BLOCK``-element chunks
+    (``BLOCK = 8 * 128 = 1024``, i.e. one (8, 128) VMEM tile when viewed
+    2-D -- the natural TPU register shape);
+  * the scalar block is replicated to every grid step (index_map -> 0);
+  * the grid is ``ceil(n / BLOCK)``; Pallas masks the ragged tail.
+
+``interpret=True`` is mandatory on this image: the CPU PJRT client cannot
+execute Mosaic custom-calls, and interpret-mode lowers the kernel to plain
+HLO that round-trips through the Rust runtime.
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import SCAL_DIM
+
+# One (8, 128) f32 VMEM tile worth of elements. See module docstring.
+# Parameter vectors are always *padded* to a multiple of this.
+BLOCK = 1024
+
+# CPU-PJRT optimization (EXPERIMENTS.md §Perf L1): interpret-mode Pallas
+# lowers each grid step to a dynamic-slice loop trip, which dominates the
+# fused-update latency on CPU (hundreds of trips for NN-sized vectors).
+# With AOT_CPU_OPT=1 (the default for this CPU-only image) the elementwise
+# kernels use ONE whole-vector tile (grid = 1). On a real TPU target the
+# whole-vector tile is still VMEM-feasible for these models (<= ~1 MiB per
+# buffer, 7 buffers in flight << 16 MiB), but the 1024-element tiling
+# (AOT_CPU_OPT=0) is the shape-validated configuration for larger models.
+CPU_OPT = os.environ.get("AOT_CPU_OPT", "1") == "1"
+
+
+def block_for(n: int) -> int:
+    """Tile length for an n-element vector (grid = ceil(n / block))."""
+    return n if CPU_OPT else BLOCK
+
+
+def scal_spec():
+    """BlockSpec for the replicated f32[8] hyperparameter block."""
+    return pl.BlockSpec((SCAL_DIM,), lambda i: (0,))
+
+
+def vec_spec(block):
+    """BlockSpec for a block-chunked flat parameter vector."""
+    return pl.BlockSpec((block,), lambda i: (i,))
+
+
+def elementwise_call(kernel, scal, vectors, n_out):
+    """Run an elementwise sampler kernel over flat vectors.
+
+    Args:
+      kernel: the Pallas kernel body; receives ``(scal_ref, *vec_refs,
+        *out_refs)``.
+      scal: f32[SCAL_DIM] hyperparameter block.
+      vectors: sequence of equal-length flat f32 vectors.
+      n_out: number of output vectors (same length as the inputs).
+
+    Returns:
+      Tuple of ``n_out`` flat f32 vectors.
+    """
+    n = vectors[0].shape[0]
+    for v in vectors:
+        if v.shape != (n,):
+            raise ValueError(f"vector shape mismatch: {v.shape} vs ({n},)")
+    block = block_for(n)
+    grid = (pl.cdiv(n, block),)
+    out_shape = tuple(jax.ShapeDtypeStruct((n,), jnp.float32) for _ in range(n_out))
+    fn = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[scal_spec()] + [vec_spec(block) for _ in vectors],
+        out_specs=tuple(vec_spec(block) for _ in range(n_out)),
+        out_shape=out_shape,
+        interpret=True,
+    )
+    return fn(scal, *vectors)
+
+
+def jit_wrap(fn):
+    """Jit an update function (all-array signature, no static args)."""
+    return functools.partial(jax.jit(fn))

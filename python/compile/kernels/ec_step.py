@@ -1,0 +1,33 @@
+"""Pallas kernel: fused elastically-coupled worker update (paper Eq. 6, rows 1+3).
+
+Identical to the SGHMC step plus the elastic restoring force
+``-eps * alpha * (theta - c~)`` pulling the worker toward its (possibly
+stale) view of the center variable. The staleness model lives in the Rust
+coordinator; the kernel just consumes whatever ``center`` it is handed.
+"""
+
+from .common import elementwise_call
+from .ref import SCAL_ALPHA, SCAL_EPS, SCAL_FRIC, SCAL_MINV, SCAL_NOISE
+
+
+def _kernel(scal_ref, theta_ref, p_ref, grad_ref, center_ref, noise_ref, theta_out, p_out):
+    eps = scal_ref[SCAL_EPS]
+    minv = scal_ref[SCAL_MINV]
+    fric = scal_ref[SCAL_FRIC]
+    alpha = scal_ref[SCAL_ALPHA]
+    nscale = scal_ref[SCAL_NOISE]
+    theta = theta_ref[...]
+    p = p_ref[...]
+    theta_out[...] = theta + eps * minv * p
+    p_out[...] = (
+        p
+        - eps * grad_ref[...]
+        - eps * fric * minv * p
+        - eps * alpha * (theta - center_ref[...])
+        + nscale * noise_ref[...]
+    )
+
+
+def ec_worker_step(scal, theta, p, grad, center, noise):
+    """Fused EC worker step; mirrors :func:`compile.kernels.ref.ec_worker_step`."""
+    return elementwise_call(_kernel, scal, [theta, p, grad, center, noise], n_out=2)

@@ -1,0 +1,107 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These implement the paper's update equations exactly as written and are the
+single source of truth for kernel correctness: the pytest suite sweeps
+shapes/values (via hypothesis) and asserts each Pallas kernel matches its
+oracle to float32 tolerance.
+
+Scalar packing convention (shared with the Rust coordinator, see
+``rust/src/runtime/artifact.rs``): hyperparameters arrive as a single
+``f32[8]`` vector ``scal``::
+
+    scal[0] = eps          step size (epsilon)
+    scal[1] = minv         inverse mass (M^-1, isotropic)
+    scal[2] = fric         friction / gradient-noise estimate (V or C)
+    scal[3] = alpha        elastic coupling strength
+    scal[4] = noise_scale  std-dev multiplier applied to the unit-normal
+                           noise input (precomputed by the caller, e.g.
+                           sqrt(2 eps^2 (V + C)))
+    scal[5..8]             reserved (must be 0)
+"""
+
+import jax.numpy as jnp
+
+SCAL_DIM = 8
+SCAL_EPS = 0
+SCAL_MINV = 1
+SCAL_FRIC = 2
+SCAL_ALPHA = 3
+SCAL_NOISE = 4
+
+
+def sghmc_step(scal, theta, p, grad, noise):
+    """One SGHMC step, Eq. (4) of the paper.
+
+    theta_{t+1} = theta_t + eps M^-1 p_t
+    p_{t+1}     = p_t - eps grad - eps V M^-1 p_t + noise_scale * noise
+
+    Both updates use time-t values (the paper's equations are written in
+    simultaneous form); ``grad`` is nabla U~(theta_t) computed beforehand.
+    """
+    eps = scal[SCAL_EPS]
+    minv = scal[SCAL_MINV]
+    fric = scal[SCAL_FRIC]
+    nscale = scal[SCAL_NOISE]
+    theta_new = theta + eps * minv * p
+    p_new = p - eps * grad - eps * fric * minv * p + nscale * noise
+    return theta_new, p_new
+
+
+def ec_worker_step(scal, theta, p, grad, center, noise):
+    """One elastically-coupled worker step, Eq. (6) rows 1 and 3.
+
+    theta_{t+1} = theta_t + eps M^-1 p_t
+    p_{t+1}     = p_t - eps grad - eps V M^-1 p_t
+                  - eps alpha (theta_t - c~_t) + noise_scale * noise
+
+    ``center`` is the worker's (possibly stale) estimate c~ of the center
+    variable; staleness is the coordinator's concern, not the kernel's.
+    """
+    eps = scal[SCAL_EPS]
+    minv = scal[SCAL_MINV]
+    fric = scal[SCAL_FRIC]
+    alpha = scal[SCAL_ALPHA]
+    nscale = scal[SCAL_NOISE]
+    theta_new = theta + eps * minv * p
+    p_new = (
+        p
+        - eps * grad
+        - eps * fric * minv * p
+        - eps * alpha * (theta - center)
+        + nscale * noise
+    )
+    return theta_new, p_new
+
+
+def center_step(scal, center, r, theta_mean, noise):
+    """One center-variable step, Eq. (6) rows 2 and 4.
+
+    c_{t+1} = c_t + eps M^-1 r_t
+    r_{t+1} = r_t - eps C M^-1 r_t - eps alpha (c_t - mean_i theta_t^i)
+              + noise_scale * noise
+
+    ``theta_mean`` is (1/K) sum_i theta^i, computed by the coordinator from
+    its most recent view of every worker.
+    """
+    eps = scal[SCAL_EPS]
+    minv = scal[SCAL_MINV]
+    fric = scal[SCAL_FRIC]
+    alpha = scal[SCAL_ALPHA]
+    nscale = scal[SCAL_NOISE]
+    center_new = center + eps * minv * r
+    r_new = (
+        r - eps * fric * minv * r - eps * alpha * (center - theta_mean) + nscale * noise
+    )
+    return center_new, r_new
+
+
+def dense(x, w, b, activation="relu"):
+    """Fused dense layer: activation(x @ w + b)."""
+    y = jnp.dot(x, w) + b
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "none":
+        pass
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return y

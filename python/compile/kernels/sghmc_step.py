@@ -1,0 +1,27 @@
+"""Pallas kernel: fused SGHMC update step (paper Eq. 4).
+
+One kernel invocation advances (theta, p) by one discretized SGHMC step
+given a precomputed stochastic gradient and a unit-normal noise vector.
+The five hyperparameters arrive packed in a replicated f32[8] block (see
+``ref.py`` for the layout). Elementwise over BLOCK-sized VMEM tiles.
+"""
+
+from .common import elementwise_call
+from .ref import SCAL_EPS, SCAL_FRIC, SCAL_MINV, SCAL_NOISE
+
+
+def _kernel(scal_ref, theta_ref, p_ref, grad_ref, noise_ref, theta_out, p_out):
+    eps = scal_ref[SCAL_EPS]
+    minv = scal_ref[SCAL_MINV]
+    fric = scal_ref[SCAL_FRIC]
+    nscale = scal_ref[SCAL_NOISE]
+    theta = theta_ref[...]
+    p = p_ref[...]
+    # Simultaneous-form update: both rows read time-t state (Eq. 4).
+    theta_out[...] = theta + eps * minv * p
+    p_out[...] = p - eps * grad_ref[...] - eps * fric * minv * p + nscale * noise_ref[...]
+
+
+def sghmc_step(scal, theta, p, grad, noise):
+    """Fused SGHMC step; mirrors :func:`compile.kernels.ref.sghmc_step`."""
+    return elementwise_call(_kernel, scal, [theta, p, grad, noise], n_out=2)

@@ -1,0 +1,283 @@
+"""Layer-2 JAX models: the potential energies the paper samples from.
+
+Three workloads, matching the paper's three experiments:
+
+  * :func:`gaussian_potential`   -- 2-D Gaussian toy (Fig. 1);
+  * :class:`MlpSpec`             -- Bayesian fully-connected net, the
+    MNIST experiment (Fig. 2 left);
+  * :class:`ResNetSpec`          -- residual network without batch-norm,
+    the CIFAR-10 experiment (Fig. 2 right).
+
+Each model exposes
+
+  ``potential(theta_pad, x, y)``        -> scalar U(theta)
+  ``grad(theta_pad, x, y)``             -> (U, dU/dtheta_pad)
+  ``predict(theta_pad, x)``             -> logits
+  ``sghmc_update(...)`` / ``ec_update(...)`` -- the *fused* hot path:
+    gradient + Pallas sampler step in a single XLA module, so the Rust
+    coordinator performs exactly one PJRT execution per sampler step.
+
+Parameter vectors are flat f32 and padded to a multiple of the Pallas
+block (1024 elements); all model math slices the live prefix, so gradient
+tails are exactly zero and the sampler kernels can run on the padded
+vector unmasked (the Rust side zeroes noise tails; see
+``rust/src/runtime/mod.rs``).
+
+The posterior follows the paper's Eq. (8): a categorical likelihood
+(Eq. 7) with a Gaussian prior on the weights. U(theta) is the minibatch
+potential of Sec. 1.1.1:
+
+    U~(theta) = (N/|B|) * sum_{(x,y) in B} nll(y | x, theta)
+                + weight_decay * ||theta||^2
+
+with weight_decay = lambda = 1e-5 (the paper writes the prior as
+exp(lambda ||theta||^2); we take the standard sign, exp(-lambda
+||theta||^2), treating the paper's sign as a typo -- documented in
+DESIGN.md).
+"""
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import center_step as k_center
+from .kernels import dense as k_dense
+from .kernels import ec_step as k_ec
+from .kernels import ref as k_ref
+from .kernels import sghmc_step as k_sghmc
+from .kernels.common import BLOCK
+
+WEIGHT_DECAY = 1e-5
+
+
+def pad_len(n: int) -> int:
+    """Round ``n`` up to a multiple of the Pallas block length."""
+    return ((n + BLOCK - 1) // BLOCK) * BLOCK
+
+
+# ---------------------------------------------------------------------------
+# Parameter flattening
+# ---------------------------------------------------------------------------
+
+
+def layer_sizes(dims: Sequence[int]) -> List[Tuple[Tuple[int, int], Tuple[int]]]:
+    """(W, b) shapes for a dense chain through ``dims``."""
+    return [((dims[i], dims[i + 1]), (dims[i + 1],)) for i in range(len(dims) - 1)]
+
+
+def n_params(shapes) -> int:
+    total = 0
+    for w_shape, b_shape in shapes:
+        total += w_shape[0] * w_shape[1] + b_shape[0]
+    return total
+
+
+def unflatten(theta: jnp.ndarray, shapes):
+    """Slice a flat (padded) vector into (W, b) pairs."""
+    params = []
+    off = 0
+    for w_shape, b_shape in shapes:
+        wn = w_shape[0] * w_shape[1]
+        w = theta[off : off + wn].reshape(w_shape)
+        off += wn
+        b = theta[off : off + b_shape[0]]
+        off += b_shape[0]
+        params.append((w, b))
+    return params
+
+
+def init_flat(shapes, key, scale: float = 0.05, padded: bool = True) -> jnp.ndarray:
+    """He-ish Gaussian init, flattened (used by tests and by aot metadata)."""
+    n = n_params(shapes)
+    total = pad_len(n) if padded else n
+    vals = scale * jax.random.normal(key, (n,), dtype=jnp.float32)
+    return jnp.concatenate([vals, jnp.zeros((total - n,), jnp.float32)])
+
+
+# ---------------------------------------------------------------------------
+# Likelihood / prior
+# ---------------------------------------------------------------------------
+
+
+def categorical_nll(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Sum over the batch of -log p(y | x, theta) (Eq. 7)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    return -jnp.sum(picked)
+
+
+def scaled_potential(logits, y, theta_live, n_total: int, batch: int) -> jnp.ndarray:
+    """Minibatch potential U~ of Sec. 1.1.1 (unbiased N/|B| scaling + prior)."""
+    nll = categorical_nll(logits, y)
+    prior = WEIGHT_DECAY * jnp.sum(theta_live * theta_live)
+    return (n_total / batch) * nll + prior
+
+
+# ---------------------------------------------------------------------------
+# Gaussian toy (Fig. 1)
+# ---------------------------------------------------------------------------
+
+# Fixed mildly-correlated 2-D covariance; the Rust side mirrors these
+# constants (rust/src/potentials/gaussian.rs::fig1_covariance).
+GAUSS_COV = ((1.0, 0.6), (0.6, 0.8))
+
+
+def gaussian_precision() -> jnp.ndarray:
+    # Closed-form 2x2 inverse: jnp.linalg.inv lowers to a LAPACK typed-FFI
+    # custom call that xla_extension 0.5.1 (the Rust runtime) cannot
+    # execute; this keeps the artifact pure-HLO.
+    (a, b), (c, d) = GAUSS_COV
+    det = a * d - b * c
+    return jnp.array([[d, -b], [-c, a]], dtype=jnp.float32) / det
+
+
+def gaussian_potential(theta: jnp.ndarray) -> jnp.ndarray:
+    """U(theta) = 0.5 theta^T Sigma^-1 theta for the Fig. 1 toy."""
+    prec = gaussian_precision()
+    live = theta[:2]
+    return 0.5 * jnp.dot(live, jnp.dot(prec, live))
+
+
+def gaussian_grad(theta: jnp.ndarray):
+    return jax.value_and_grad(gaussian_potential)(theta)
+
+
+# ---------------------------------------------------------------------------
+# MLP (Fig. 2 left)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpSpec:
+    """Fully-connected ReLU classifier (paper: 2 hidden layers, 800 units).
+
+    The hidden width is configurable so the AOT presets can trade fidelity
+    for CPU tractability; the architecture (2 hidden ReLU layers, Gaussian
+    prior, categorical likelihood) matches the paper exactly.
+    """
+
+    in_dim: int = 784
+    hidden: int = 256
+    out_dim: int = 10
+    depth: int = 2
+    batch: int = 100
+    n_total: int = 60000  # dataset size N for the N/|B| scaling
+
+    @property
+    def dims(self):
+        return [self.in_dim] + [self.hidden] * self.depth + [self.out_dim]
+
+    @property
+    def shapes(self):
+        return layer_sizes(self.dims)
+
+    @property
+    def n(self) -> int:
+        return n_params(self.shapes)
+
+    @property
+    def padded_n(self) -> int:
+        return pad_len(self.n)
+
+    def logits(self, theta: jnp.ndarray, x: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
+        params = unflatten(theta, self.shapes)
+        h = x
+        layer = k_dense.dense if use_pallas else k_ref.dense
+        for i, (w, b) in enumerate(params):
+            act = "relu" if i < len(params) - 1 else "none"
+            h = layer(h, w, b, activation=act)
+        return h
+
+    def potential(self, theta, x, y, use_pallas: bool = True):
+        logits = self.logits(theta, x, use_pallas=use_pallas)
+        return scaled_potential(logits, y, theta[: self.n], self.n_total, self.batch)
+
+    def grad(self, theta, x, y, use_pallas: bool = True):
+        return jax.value_and_grad(lambda t: self.potential(t, x, y, use_pallas))(theta)
+
+
+# ---------------------------------------------------------------------------
+# Residual net without batch-norm (Fig. 2 right)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetSpec:
+    """Residual MLP, the CPU-tractable stand-in for ResNet-32-no-BN.
+
+    Structure: input projection -> ``blocks`` residual blocks
+    ``h + W2 relu(W1 h)`` (two weight layers per block, identity skip,
+    no normalization -- the paper removes BN too) -> linear head. Depth in
+    weight-layers is ``2 * blocks + 2``; the default 15 blocks gives 32
+    weight layers, matching the paper's depth at reduced width.
+    """
+
+    in_dim: int = 192  # 3 x 8 x 8 synthetic-CIFAR images
+    width: int = 96
+    blocks: int = 15
+    out_dim: int = 10
+    batch: int = 100
+    n_total: int = 50000
+
+    @property
+    def shapes(self):
+        shapes = layer_sizes([self.in_dim, self.width])
+        for _ in range(self.blocks):
+            shapes += layer_sizes([self.width, self.width])  # W1
+            shapes += layer_sizes([self.width, self.width])  # W2
+        shapes += layer_sizes([self.width, self.out_dim])
+        return shapes
+
+    @property
+    def n(self) -> int:
+        return n_params(self.shapes)
+
+    @property
+    def padded_n(self) -> int:
+        return pad_len(self.n)
+
+    def logits(self, theta, x, use_pallas: bool = True):
+        params = unflatten(theta, self.shapes)
+        layer = k_dense.dense if use_pallas else k_ref.dense
+        (w_in, b_in), params = params[0], params[1:]
+        h = layer(x, w_in, b_in, activation="relu")
+        for i in range(self.blocks):
+            (w1, b1) = params[2 * i]
+            (w2, b2) = params[2 * i + 1]
+            inner = layer(h, w1, b1, activation="relu")
+            h = h + layer(inner, w2, b2, activation="none")
+        (w_out, b_out) = params[2 * self.blocks]
+        return layer(h, w_out, b_out, activation="none")
+
+    def potential(self, theta, x, y, use_pallas: bool = True):
+        logits = self.logits(theta, x, use_pallas=use_pallas)
+        return scaled_potential(logits, y, theta[: self.n], self.n_total, self.batch)
+
+    def grad(self, theta, x, y, use_pallas: bool = True):
+        return jax.value_and_grad(lambda t: self.potential(t, x, y, use_pallas))(theta)
+
+
+# ---------------------------------------------------------------------------
+# Fused sampler-update entry points (the AOT hot path)
+# ---------------------------------------------------------------------------
+
+
+def fused_sghmc_update(spec, scal, theta, p, x, y, noise):
+    """grad + SGHMC step in one XLA module: one PJRT call per sampler step."""
+    u, g = spec.grad(theta, x, y)
+    theta_new, p_new = k_sghmc.sghmc_step(scal, theta, p, g, noise)
+    return theta_new, p_new, u
+
+
+def fused_ec_update(spec, scal, theta, p, center, x, y, noise):
+    """grad + elastically-coupled worker step in one XLA module (Eq. 6)."""
+    u, g = spec.grad(theta, x, y)
+    theta_new, p_new = k_ec.ec_worker_step(scal, theta, p, g, center, noise)
+    return theta_new, p_new, u
+
+
+def fused_center_update(scal, center, r, theta_mean, noise):
+    """Center-variable step (Eq. 6 rows 2+4); K-independent."""
+    return k_center.center_step(scal, center, r, theta_mean, noise)

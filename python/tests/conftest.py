@@ -1,0 +1,11 @@
+"""Test configuration.
+
+Kernel tests validate the TPU-shaped (8,128)-tiled Pallas configuration
+(AOT_CPU_OPT=0), exercising multi-block grids and ragged tails; the AOT
+subprocess tests run the CPU-optimized whole-vector tiling (the shipping
+default), so both lowering configurations stay covered.
+"""
+
+import os
+
+os.environ.setdefault("AOT_CPU_OPT", "0")

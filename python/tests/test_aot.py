@@ -1,0 +1,104 @@
+"""AOT smoke tests: artifacts lower, manifest is consistent, HLO text parses.
+
+Uses the ``test`` preset so lowering stays fast; the Rust integration tests
+exercise the full round-trip (load + execute through PJRT).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+EXPECTED_ARTIFACTS = {
+    "gaussian_grad",
+    "mlp_grad",
+    "mlp_predict",
+    "mlp_sghmc_update",
+    "mlp_ec_update",
+    "sghmc_step_mlp",
+    "ec_step_mlp",
+    "center_update_mlp",
+    "resnet_grad",
+    "resnet_predict",
+    "resnet_sghmc_update",
+    "resnet_ec_update",
+    "sghmc_step_resnet",
+    "ec_step_resnet",
+    "center_update_resnet",
+}
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--preset", "test"],
+        cwd=ROOT,
+        capture_output=True,
+        text=True,
+    )
+    assert res.returncode == 0, res.stderr
+    return out
+
+
+def load_manifest(out):
+    with open(out / "manifest.json") as f:
+        return json.load(f)
+
+
+def test_all_artifacts_present(built):
+    manifest = load_manifest(built)
+    assert set(manifest["artifacts"]) == EXPECTED_ARTIFACTS
+    for name, entry in manifest["artifacts"].items():
+        path = built / entry["file"]
+        assert path.exists(), f"missing {path}"
+        assert path.stat().st_size > 0
+
+
+def test_hlo_text_is_parseable_text(built):
+    manifest = load_manifest(built)
+    for name, entry in manifest["artifacts"].items():
+        text = (built / entry["file"]).read_text()
+        assert "ENTRY" in text, f"{name}: no ENTRY computation"
+        assert "HloModule" in text, f"{name}: not HLO text"
+
+
+def test_manifest_shapes_consistent(built):
+    manifest = load_manifest(built)
+    arts = manifest["artifacts"]
+    block = manifest["meta"]["block"]
+    for tag in ("mlp", "resnet"):
+        meta = arts[f"{tag}_grad"]["meta"]
+        np_ = meta["padded_n"]
+        assert np_ % block == 0
+        assert meta["n_params"] <= np_
+        # grad: theta in, (u, grad) out
+        grad = arts[f"{tag}_grad"]
+        assert grad["inputs"][0]["shape"] == [np_]
+        assert grad["outputs"][0]["shape"] == []
+        assert grad["outputs"][1]["shape"] == [np_]
+        # fused updates share the padded length
+        for suffix in ("sghmc_update", "ec_update"):
+            ent = arts[f"{tag}_{suffix}"]
+            assert ent["inputs"][1]["shape"] == [np_], f"{tag}_{suffix}"
+            assert ent["outputs"][0]["shape"] == [np_]
+        # batch inputs
+        assert grad["inputs"][1]["shape"] == [meta["batch"], meta["in_dim"]]
+        assert grad["inputs"][2]["dtype"] == "i32"
+
+
+def test_manifest_scal_layout(built):
+    manifest = load_manifest(built)
+    layout = manifest["meta"]["scal_layout"]
+    assert layout[:5] == ["eps", "minv", "fric", "alpha", "noise_scale"]
+    assert manifest["meta"]["scal_dim"] == 8
+
+
+def test_gaussian_artifact_records_covariance(built):
+    manifest = load_manifest(built)
+    cov = manifest["artifacts"]["gaussian_grad"]["meta"]["cov"]
+    assert cov == [[1.0, 0.6], [0.6, 0.8]]

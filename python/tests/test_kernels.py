@@ -1,0 +1,178 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps vector lengths (block-aligned and ragged), hyperparameter
+magnitudes, and value scales; every case asserts allclose at f32 tolerance.
+This is the CORE correctness signal for the kernels the Rust hot path runs.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import center_step as k_center
+from compile.kernels import dense as k_dense
+from compile.kernels import ec_step as k_ec
+from compile.kernels import ref
+from compile.kernels import sghmc_step as k_sghmc
+from compile.kernels.common import BLOCK
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def make_scal(eps=1e-2, minv=1.0, fric=1.0, alpha=1.0, noise=0.1):
+    s = np.zeros(ref.SCAL_DIM, dtype=np.float32)
+    s[ref.SCAL_EPS] = eps
+    s[ref.SCAL_MINV] = minv
+    s[ref.SCAL_FRIC] = fric
+    s[ref.SCAL_ALPHA] = alpha
+    s[ref.SCAL_NOISE] = noise
+    return jnp.asarray(s)
+
+
+def rand_vecs(rng, n, count, scale=1.0):
+    return [jnp.asarray(rng.standard_normal(n).astype(np.float32) * scale) for _ in range(count)]
+
+
+# Lengths: tiny, sub-block, exactly one block, ragged multi-block, aligned multi-block.
+LENGTHS = [2, 7, 100, BLOCK, BLOCK + 1, 3 * BLOCK - 5, 4 * BLOCK]
+
+
+@pytest.mark.parametrize("n", LENGTHS)
+def test_sghmc_step_matches_ref(n):
+    rng = np.random.default_rng(n)
+    scal = make_scal()
+    theta, p, grad, noise = rand_vecs(rng, n, 4)
+    t_k, p_k = k_sghmc.sghmc_step(scal, theta, p, grad, noise)
+    t_r, p_r = ref.sghmc_step(scal, theta, p, grad, noise)
+    np.testing.assert_allclose(t_k, t_r, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(p_k, p_r, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("n", LENGTHS)
+def test_ec_step_matches_ref(n):
+    rng = np.random.default_rng(n + 1)
+    scal = make_scal(alpha=0.7)
+    theta, p, grad, center, noise = rand_vecs(rng, n, 5)
+    t_k, p_k = k_ec.ec_worker_step(scal, theta, p, grad, center, noise)
+    t_r, p_r = ref.ec_worker_step(scal, theta, p, grad, center, noise)
+    np.testing.assert_allclose(t_k, t_r, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(p_k, p_r, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("n", LENGTHS)
+def test_center_step_matches_ref(n):
+    rng = np.random.default_rng(n + 2)
+    scal = make_scal(alpha=0.3, fric=0.5)
+    c, r, tm, noise = rand_vecs(rng, n, 4)
+    c_k, r_k = k_center.center_step(scal, c, r, tm, noise)
+    c_r, r_r = ref.center_step(scal, c, r, tm, noise)
+    np.testing.assert_allclose(c_k, c_r, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(r_k, r_r, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=2 * BLOCK + 3),
+    eps=st.floats(1e-5, 1.0),
+    minv=st.floats(0.1, 10.0),
+    fric=st.floats(0.0, 10.0),
+    alpha=st.floats(0.0, 10.0),
+    noise=st.floats(0.0, 2.0),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ec_step_hypothesis(n, eps, minv, fric, alpha, noise, scale, seed):
+    """Property sweep: EC kernel == oracle across shape/hparam/value space."""
+    rng = np.random.default_rng(seed)
+    scal = make_scal(eps, minv, fric, alpha, noise)
+    theta, p, grad, center, nz = rand_vecs(rng, n, 5, scale=scale)
+    t_k, p_k = k_ec.ec_worker_step(scal, theta, p, grad, center, nz)
+    t_r, p_r = ref.ec_worker_step(scal, theta, p, grad, center, nz)
+    np.testing.assert_allclose(t_k, t_r, rtol=1e-4, atol=1e-4 * scale)
+    np.testing.assert_allclose(p_k, p_r, rtol=1e-4, atol=1e-4 * scale)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=BLOCK + 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sghmc_step_hypothesis(n, seed):
+    rng = np.random.default_rng(seed)
+    scal = make_scal(eps=float(rng.uniform(1e-4, 0.5)))
+    theta, p, grad, nz = rand_vecs(rng, n, 4)
+    t_k, p_k = k_sghmc.sghmc_step(scal, theta, p, grad, nz)
+    t_r, p_r = ref.sghmc_step(scal, theta, p, grad, nz)
+    np.testing.assert_allclose(t_k, t_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(p_k, p_r, rtol=1e-4, atol=1e-5)
+
+
+def test_alpha_zero_reduces_ec_to_sghmc():
+    """Eq. (5) decomposition: alpha=0 makes the EC step an SGHMC step."""
+    rng = np.random.default_rng(0)
+    n = 257
+    scal = make_scal(alpha=0.0)
+    theta, p, grad, center, nz = rand_vecs(rng, n, 5)
+    t_ec, p_ec = k_ec.ec_worker_step(scal, theta, p, grad, center, nz)
+    t_s, p_s = k_sghmc.sghmc_step(scal, theta, p, grad, nz)
+    np.testing.assert_allclose(t_ec, t_s, rtol=0, atol=0)
+    np.testing.assert_allclose(p_ec, p_s, rtol=0, atol=0)
+
+
+def test_center_at_theta_exerts_no_force():
+    """theta == center ==> the elastic term vanishes exactly."""
+    rng = np.random.default_rng(1)
+    n = 100
+    scal = make_scal(alpha=5.0)
+    theta, p, grad, nz = rand_vecs(rng, n, 4)
+    t_ec, p_ec = k_ec.ec_worker_step(scal, theta, p, grad, theta, nz)
+    t_s, p_s = k_sghmc.sghmc_step(scal, theta, p, grad, nz)
+    np.testing.assert_allclose(p_ec, p_s, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(t_ec, t_s, rtol=0, atol=0)
+
+
+DENSE_SHAPES = [(1, 1, 1), (4, 8, 16), (16, 784, 256), (100, 256, 10), (32, 96, 128), (5, 3, 130)]
+
+
+@pytest.mark.parametrize("m,k,n", DENSE_SHAPES)
+@pytest.mark.parametrize("activation", ["relu", "none"])
+def test_dense_matches_ref(m, k, n, activation):
+    rng = np.random.default_rng(m * 1000 + k + n)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32) * 0.1)
+    b = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    got = k_dense.dense(x, w, b, activation=activation)
+    want = ref.dense(x, w, b, activation=activation)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 300),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32) * 0.05)
+    b = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    got = k_dense.dense(x, w, b)
+    want = ref.dense(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_rejects_bad_shapes():
+    x = jnp.zeros((2, 3))
+    w = jnp.zeros((4, 5))
+    b = jnp.zeros((5,))
+    with pytest.raises(ValueError):
+        k_dense.dense(x, w, b)
+    with pytest.raises(ValueError):
+        k_dense.dense(jnp.zeros((2, 4)), w, jnp.zeros((6,)))
+    with pytest.raises(ValueError):
+        k_dense.dense(jnp.zeros((2, 4)), w, b, activation="tanh")

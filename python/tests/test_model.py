@@ -1,0 +1,186 @@
+"""L2 correctness: model shapes, gradients vs finite differences, potentials."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels.common import BLOCK
+
+TINY_MLP = M.MlpSpec(in_dim=12, hidden=8, out_dim=4, batch=6, n_total=600)
+TINY_RESNET = M.ResNetSpec(in_dim=10, width=8, blocks=2, out_dim=4, batch=6, n_total=600)
+
+
+def make_batch(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((spec.batch, spec.in_dim)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, spec.out_dim, spec.batch).astype(np.int32))
+    return x, y
+
+
+def make_theta(spec, seed=1):
+    return M.init_flat(spec.shapes, jax.random.PRNGKey(seed), scale=0.3)
+
+
+# ---------------------------------------------------------------------------
+# Shape / padding bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_pad_len():
+    assert M.pad_len(1) == BLOCK
+    assert M.pad_len(BLOCK) == BLOCK
+    assert M.pad_len(BLOCK + 1) == 2 * BLOCK
+    assert M.pad_len(0) == 0
+
+
+def test_mlp_param_count():
+    # 12*8+8 + 8*8+8 + 8*4+4 = 104 + 72 + 36 = 212
+    assert TINY_MLP.n == 212
+    assert TINY_MLP.padded_n == BLOCK
+
+
+def test_resnet_param_count():
+    # in: 10*8+8=88; per block 2*(8*8+8)=144; head 8*4+4=36
+    assert TINY_RESNET.n == 88 + 2 * 144 + 36
+    assert TINY_RESNET.padded_n == BLOCK
+
+
+def test_paper_mlp_depth_and_dims():
+    spec = M.MlpSpec(hidden=800)
+    assert spec.dims == [784, 800, 800, 10]
+
+
+def test_resnet_weight_layer_depth():
+    # 15 blocks * 2 + input proj + head = 32 weight layers (paper: ResNet-32)
+    spec = M.ResNetSpec(blocks=15)
+    assert len(spec.shapes) == 32
+
+
+@pytest.mark.parametrize("spec", [TINY_MLP, TINY_RESNET], ids=["mlp", "resnet"])
+def test_logits_shape(spec):
+    x, _ = make_batch(spec)
+    theta = make_theta(spec)
+    logits = spec.logits(theta, x)
+    assert logits.shape == (spec.batch, spec.out_dim)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+# ---------------------------------------------------------------------------
+# Gradient correctness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", [TINY_MLP, TINY_RESNET], ids=["mlp", "resnet"])
+def test_grad_matches_finite_differences(spec):
+    x, y = make_batch(spec)
+    theta = make_theta(spec)
+    u, g = spec.grad(theta, x, y)
+    assert g.shape == theta.shape
+    # central differences on a random subset of live coordinates
+    rng = np.random.default_rng(7)
+    idxs = rng.choice(spec.n, size=12, replace=False)
+    h = 1e-3
+    for i in idxs:
+        e = jnp.zeros_like(theta).at[i].set(h)
+        up = spec.potential(theta + e, x, y)
+        dn = spec.potential(theta - e, x, y)
+        fd = (up - dn) / (2 * h)
+        np.testing.assert_allclose(g[i], fd, rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("spec", [TINY_MLP, TINY_RESNET], ids=["mlp", "resnet"])
+def test_grad_tail_is_zero(spec):
+    """Padding tail must receive exactly zero gradient."""
+    x, y = make_batch(spec)
+    theta = make_theta(spec)
+    _, g = spec.grad(theta, x, y)
+    tail = g[spec.n :]
+    assert tail.shape[0] == spec.padded_n - spec.n
+    np.testing.assert_array_equal(np.asarray(tail), 0.0)
+
+
+@pytest.mark.parametrize("spec", [TINY_MLP, TINY_RESNET], ids=["mlp", "resnet"])
+def test_pallas_and_ref_paths_agree(spec):
+    x, y = make_batch(spec)
+    theta = make_theta(spec)
+    u_pallas, g_pallas = spec.grad(theta, x, y, use_pallas=True)
+    u_ref, g_ref = spec.grad(theta, x, y, use_pallas=False)
+    np.testing.assert_allclose(u_pallas, u_ref, rtol=1e-4)
+    np.testing.assert_allclose(g_pallas, g_ref, rtol=1e-3, atol=1e-4)
+
+
+def test_potential_scaling_matches_paper():
+    """U~ = (N/|B|) sum nll + lambda ||theta||^2 (Sec. 1.1.1 + Eq. 8)."""
+    spec = TINY_MLP
+    x, y = make_batch(spec)
+    theta = make_theta(spec)
+    logits = spec.logits(theta, x)
+    logp = jax.nn.log_softmax(logits)
+    nll = -sum(float(logp[i, int(y[i])]) for i in range(spec.batch))
+    live = theta[: spec.n]
+    expected = spec.n_total / spec.batch * nll + M.WEIGHT_DECAY * float(live @ live)
+    np.testing.assert_allclose(float(spec.potential(theta, x, y)), expected, rtol=1e-5)
+
+
+def test_gradient_descent_reduces_potential():
+    spec = TINY_MLP
+    x, y = make_batch(spec)
+    theta = make_theta(spec)
+    u0, g = spec.grad(theta, x, y)
+    theta2 = theta - 1e-5 * g
+    u1 = spec.potential(theta2, x, y)
+    assert float(u1) < float(u0)
+
+
+# ---------------------------------------------------------------------------
+# Gaussian toy
+# ---------------------------------------------------------------------------
+
+
+def test_gaussian_grad_analytic():
+    theta = jnp.asarray([0.7, -1.2], dtype=jnp.float32)
+    u, g = M.gaussian_grad(theta)
+    prec = np.linalg.inv(np.array(M.GAUSS_COV))
+    want_g = prec @ np.asarray(theta)
+    want_u = 0.5 * np.asarray(theta) @ want_g
+    np.testing.assert_allclose(np.asarray(g), want_g, rtol=1e-5)
+    np.testing.assert_allclose(float(u), want_u, rtol=1e-5)
+
+
+def test_gaussian_potential_minimum_at_origin():
+    assert float(M.gaussian_potential(jnp.zeros(2))) == 0.0
+    assert float(M.gaussian_potential(jnp.ones(2))) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Fused updates
+# ---------------------------------------------------------------------------
+
+
+def test_fused_ec_update_composes_grad_and_kernel():
+    from compile.kernels import ref as k_ref
+
+    spec = TINY_MLP
+    x, y = make_batch(spec)
+    theta = make_theta(spec)
+    rng = np.random.default_rng(3)
+    p = jnp.asarray(rng.standard_normal(spec.padded_n).astype(np.float32))
+    c = jnp.asarray(rng.standard_normal(spec.padded_n).astype(np.float32))
+    nz = jnp.asarray(rng.standard_normal(spec.padded_n).astype(np.float32))
+    scal = np.zeros(k_ref.SCAL_DIM, np.float32)
+    scal[k_ref.SCAL_EPS] = 1e-3
+    scal[k_ref.SCAL_MINV] = 1.0
+    scal[k_ref.SCAL_FRIC] = 1.0
+    scal[k_ref.SCAL_ALPHA] = 0.5
+    scal[k_ref.SCAL_NOISE] = 0.01
+    scal = jnp.asarray(scal)
+
+    t_new, p_new, u = M.fused_ec_update(spec, scal, theta, p, c, x, y, nz)
+    u_want, g = spec.grad(theta, x, y)
+    t_want, p_want = k_ref.ec_worker_step(scal, theta, p, g, c, nz)
+    np.testing.assert_allclose(float(u), float(u_want), rtol=1e-5)
+    np.testing.assert_allclose(t_new, t_want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(p_new, p_want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,32 @@
+//! SEC5 bench — regenerates the paper's Section-5 "initial test":
+//! EC-MSGD (Eq. 9, deterministic limit of the EC dynamics) vs EAMSGD
+//! (Eq. 10, Zhang et al. 2015) vs plain EASGD on the MNIST MLP objective.
+//!
+//! Expected shape: Eq. 9 performs at least as well as EAMSGD.
+//!
+//! Run: `cargo bench --bench bench_easgd`
+
+use ecsgmcmc::bench::print_series_table;
+use ecsgmcmc::experiments::easgd_cmp;
+use ecsgmcmc::experiments::Scale;
+
+fn main() {
+    let scale = Scale::from_env();
+    println!("SEC5: elastic optimizer comparison (scale {scale:?})");
+    let r = easgd_cmp::run(scale, 42);
+
+    let refs: Vec<(&str, &[f64])> =
+        r.series.iter().map(|s| (s.label.as_str(), s.ys.as_slice())).collect();
+    print_series_table("SEC5: train U~ vs step", "step", &r.series[0].xs, &refs);
+
+    println!("\nfinal center test NLL:");
+    for (label, nll) in &r.final_nll {
+        println!("  {label:<20} {nll:.4}");
+    }
+    let eamsgd = r.final_nll.iter().find(|(l, _)| l.contains("Eq. 10")).unwrap().1;
+    let ecmsgd = r.final_nll.iter().find(|(l, _)| l.contains("Eq. 9")).unwrap().1;
+    println!(
+        "paper shape — Eq. 9 at least as good as EAMSGD: {}",
+        if ecmsgd <= eamsgd * 1.05 { "✓" } else { "✗" }
+    );
+}

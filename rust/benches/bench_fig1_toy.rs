@@ -1,0 +1,53 @@
+//! FIG1 bench — regenerates paper Fig. 1 (2-D Gaussian, first 100 steps,
+//! SGHMC vs EC-SGHMC K=4, α=1, ε=1e-2, C=V=I).
+//!
+//! Reports (a) the coverage metrics that quantify the figure's qualitative
+//! claim, averaged over many seeds, and (b) step-throughput of both
+//! schemes on the toy target.
+//!
+//! Run: `cargo bench --bench bench_fig1_toy`
+//! Fast: `ECSGMCMC_BENCH_FAST=1 cargo bench --bench bench_fig1_toy`
+
+use ecsgmcmc::bench::{print_series_table, Bench};
+use ecsgmcmc::experiments::fig1;
+use ecsgmcmc::experiments::Scale;
+
+fn main() {
+    let scale = Scale::from_env();
+    let seeds = scale.pick(5, 40) as u64;
+
+    // ---- Figure regeneration: coverage metrics over seeds. ----
+    let mut sghmc_u = Vec::new();
+    let mut ec_u = Vec::new();
+    let mut sghmc_hdr = Vec::new();
+    let mut ec_hdr = Vec::new();
+    for seed in 0..seeds {
+        let r = fig1::run(100, 1000 + seed);
+        sghmc_u.push(r.sghmc_mean_u);
+        ec_u.push(r.ec_mean_u);
+        sghmc_hdr.push(r.frac_hdr90[..2].iter().sum::<f64>() / 2.0);
+        ec_hdr.push(r.frac_hdr90[2..].iter().sum::<f64>() / 4.0);
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    print_series_table(
+        &format!("FIG1: coverage over first 100 steps ({seeds} seeds)"),
+        "metric",
+        &[0.0, 1.0],
+        &[
+            ("SGHMC", &[mean(&sghmc_u), mean(&sghmc_hdr)]),
+            ("EC-SGHMC(K=4)", &[mean(&ec_u), mean(&ec_hdr)]),
+        ],
+    );
+    println!("  row 0 = mean U along trace (lower better), row 1 = frac in 90% HDR (higher better)");
+    println!(
+        "  paper shape: EC explores high-density regions faster -> EC mean-U {} SGHMC mean-U",
+        if mean(&ec_u) < mean(&sghmc_u) { "<" } else { ">= (!)" }
+    );
+
+    // ---- Throughput. ----
+    let mut b = Bench::new("fig1_toy");
+    b.bench("fig1_full_run_100_steps", || {
+        let _ = fig1::run(100, 7);
+    });
+    b.finish();
+}

@@ -1,0 +1,39 @@
+//! FIG2R bench — regenerates paper Fig. 2 right: NLL over wall-clock time
+//! for SGHMC vs EC-SGHMC sampling a residual-net (no BN) posterior on the
+//! synthetic-CIFAR workload.
+//!
+//! Expected shape (paper): "EC-SGHMC leads to a significant speed-up over
+//! standard SGHMC sampling."
+//!
+//! Run: `cargo bench --bench bench_fig2_cifar`
+
+use ecsgmcmc::experiments::fig2;
+use ecsgmcmc::experiments::{series_to_csv, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    println!("FIG2R: CIFAR residual net posterior (scale {scale:?})");
+    let series = fig2::run_cifar(scale, 42);
+
+    for s in &series {
+        println!("\n-- {} --", s.label);
+        for (t, nll) in s.xs.iter().zip(&s.ys) {
+            println!("  t={t:>8.1}  nll={nll:.4}");
+        }
+    }
+
+    println!("\n== FIG2R summary ==");
+    for s in &series {
+        println!("  {:<22} tail NLL {:.4}", s.label, s.tail_mean(3));
+    }
+    let speedup_holds = series[1].tail_mean(3) < series[0].tail_mean(3);
+    println!(
+        "shape check — EC-SGHMC below SGHMC at equal wall-clock: {}",
+        if speedup_holds { "✓" } else { "✗" }
+    );
+
+    std::fs::create_dir_all("out").ok();
+    let refs: Vec<&ecsgmcmc::experiments::Series> = series.iter().collect();
+    series_to_csv("out/fig2_cifar.csv", "t", &refs).expect("csv");
+    println!("-> wrote out/fig2_cifar.csv");
+}

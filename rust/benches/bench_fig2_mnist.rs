@@ -1,0 +1,53 @@
+//! FIG2L bench — regenerates paper Fig. 2 left: NLL over wall-clock time
+//! for SGHMC vs Async-SGHMC vs EC-SGHMC (K = 6, s ∈ {2, 8}) sampling the
+//! Bayesian-MLP posterior on the synthetic-MNIST workload.
+//!
+//! Expected shape (paper): both parallel samplers beat SGHMC at s = 2; at
+//! s = 8 Async-SGHMC degrades sharply while EC-SGHMC degrades gracefully.
+//!
+//! Run: `cargo bench --bench bench_fig2_mnist`
+
+use ecsgmcmc::bench::print_series_table;
+use ecsgmcmc::experiments::fig2;
+use ecsgmcmc::experiments::{series_to_csv, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    println!("FIG2L: MNIST MLP posterior, K=6 (scale {scale:?})");
+    let series = fig2::run_mnist(scale, 42);
+
+    // Print each curve the way the paper plots them.
+    for s in &series {
+        println!("\n-- {} --", s.label);
+        for (t, nll) in s.xs.iter().zip(&s.ys) {
+            println!("  t={t:>8.1}  nll={nll:.4}");
+        }
+    }
+
+    let finals: Vec<f64> = series.iter().map(|s| s.tail_mean(3)).collect();
+    let labels: Vec<&str> = series.iter().map(|s| s.label.as_str()).collect();
+    println!("\n== FIG2L summary: tail-mean test NLL ==");
+    for (l, f) in labels.iter().zip(&finals) {
+        println!("  {l:<22} {f:.4}");
+    }
+    print_series_table(
+        "FIG2L final NLL",
+        "idx",
+        &(0..series.len()).map(|i| i as f64).collect::<Vec<_>>(),
+        &[("tail NLL", &finals)],
+    );
+
+    std::fs::create_dir_all("out").ok();
+    let refs: Vec<&ecsgmcmc::experiments::Series> = series.iter().collect();
+    series_to_csv("out/fig2_mnist.csv", "t", &refs).expect("csv");
+    println!("-> wrote out/fig2_mnist.csv");
+
+    // Shape assertions printed (not panicking — the bench reports).
+    let sghmc = finals[0];
+    let ec2 = finals[2];
+    let async8 = finals[3];
+    let ec8 = finals[4];
+    println!("\nshape checks:");
+    println!("  EC(s=2) < SGHMC:      {}", if ec2 < sghmc { "✓" } else { "✗" });
+    println!("  EC(s=8) < Async(s=8): {}", if ec8 < async8 { "✓" } else { "✗" });
+}

@@ -1,0 +1,41 @@
+//! SEC2 bench — the staleness sweep behind the paper's Sec. 2 analysis:
+//! naive async parallelization tolerates small communication periods
+//! (1 < s < 4) but degrades as s grows; EC-SGHMC copes gracefully.
+//!
+//! Run: `cargo bench --bench bench_staleness`
+
+use ecsgmcmc::bench::print_series_table;
+use ecsgmcmc::experiments::staleness_sweep;
+use ecsgmcmc::experiments::Scale;
+
+fn main() {
+    let scale = Scale::from_env();
+    println!("SEC2: staleness sweep on the MNIST MLP workload (scale {scale:?})");
+    let r = staleness_sweep::run(scale, 42);
+
+    let xs: Vec<f64> = r.s_values.iter().map(|&s| s as f64).collect();
+    print_series_table(
+        "SEC2: final test NLL vs communication period s",
+        "s",
+        &xs,
+        &[
+            ("Async SGHMC", &r.async_nll),
+            ("EC-SGHMC", &r.ec_nll),
+            ("mean staleness", &r.mean_staleness),
+        ],
+    );
+
+    let (deg_async, deg_ec) = r.degradation();
+    println!("\ndegradation NLL(s=max)/NLL(s=1):");
+    println!("  Async SGHMC: {deg_async:.3}");
+    println!("  EC-SGHMC:    {deg_ec:.3}");
+    println!(
+        "paper shape — async degrades more than EC with growing s: {}",
+        if deg_async > deg_ec { "✓" } else { "✗" }
+    );
+
+    std::fs::create_dir_all("out").ok();
+    let (a, e) = r.to_series();
+    ecsgmcmc::experiments::series_to_csv("out/staleness.csv", "s", &[&a, &e]).expect("csv");
+    println!("-> wrote out/staleness.csv");
+}

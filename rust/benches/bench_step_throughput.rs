@@ -1,0 +1,99 @@
+//! PERF bench — step-throughput microbenchmarks feeding EXPERIMENTS.md
+//! §Perf:
+//!
+//! * native sampler-step components (RNG fill, vecops, SGHMC update);
+//! * native gradient vs fused-XLA update for the MLP/resnet workloads
+//!   (the L3-vs-L1/L2 backend comparison);
+//! * EC worker scaling K ∈ 1..=cores.
+//!
+//! Run: `cargo bench --bench bench_step_throughput`
+
+use ecsgmcmc::bench::{print_series_table, Bench};
+use ecsgmcmc::coordinator::engine::{NativeEngine, StepKind, WorkerEngine, XlaEngine};
+use ecsgmcmc::data::synth_mnist;
+use ecsgmcmc::experiments::throughput;
+use ecsgmcmc::experiments::{fig2, Scale};
+use ecsgmcmc::math::rng::Pcg64;
+use ecsgmcmc::potentials::xla::XlaFusedSampler;
+use ecsgmcmc::runtime::Engine;
+use ecsgmcmc::samplers::{ChainState, SghmcParams};
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut b = Bench::new("step_throughput");
+
+    // ---- Sampler-step primitives (n = 263k ≈ default-preset MLP). ----
+    let n = 263 * 1024;
+    let mut rng = Pcg64::seeded(1);
+    let mut noise = vec![0.0f32; n];
+    b.bench("rng_fill_normal_263k", || {
+        rng.fill_normal(&mut noise);
+    });
+
+    let params = SghmcParams { eps: 1e-4, ..Default::default() };
+    let mut stepper = ecsgmcmc::samplers::sghmc::SghmcStepper::new(params, n);
+    let mut state = ChainState::zeros(n);
+    let grad = vec![0.1f32; n];
+    let center = vec![0.0f32; n];
+    b.bench("sghmc_step_native_263k", || {
+        stepper.step(&mut state, &grad, None, &mut rng);
+    });
+    b.bench("ec_step_native_263k", || {
+        stepper.step(&mut state, &grad, Some((&center, 1.0)), &mut rng);
+    });
+
+    // ---- Native NN gradient throughput. ----
+    use ecsgmcmc::potentials::Potential as _;
+    let pot = fig2::mnist_potential(scale);
+    let mut g = vec![0.0f32; pot.padded_dim()];
+    let theta = {
+        let mut r = Pcg64::seeded(2);
+        pot.init_theta(0.1, &mut r)
+    };
+    b.bench("mlp_native_stoch_grad", || {
+        let _ = pot.stoch_grad(&theta, &mut g, &mut rng);
+    });
+    {
+        use ecsgmcmc::potentials::Potential;
+        let mut engine =
+            NativeEngine::new(pot.clone() as std::sync::Arc<dyn Potential>, params, StepKind::Sghmc);
+        let mut st = ChainState::zeros(pot.padded_dim());
+        b.bench("mlp_native_full_step", || {
+            engine.step(&mut st, None, &mut rng);
+        });
+    }
+
+    // ---- Fused XLA update (needs artifacts). ----
+    match Engine::new(Engine::default_dir()) {
+        Ok(engine) => {
+            let spec = engine.manifest.artifacts.get("mlp_grad").unwrap();
+            let n_total = spec.meta_usize("n_total").unwrap_or(4096).min(4096);
+            let train = synth_mnist::generate(n_total, 0.15, 77);
+            let sampler =
+                XlaFusedSampler::new(&engine, "mlp", train, params).expect("fused sampler");
+            let mut xla_engine = XlaEngine::new(sampler);
+            let mut st = ChainState::zeros(xla_engine.dim());
+            // Warm the executable cache before timing.
+            xla_engine.step(&mut st, None, &mut rng);
+            b.bench("mlp_xla_fused_step", || {
+                xla_engine.step(&mut st, None, &mut rng);
+            });
+            b.bench("mlp_xla_fused_ec_step", || {
+                let c = vec![0.0f32; st.theta.len()];
+                xla_engine.step(&mut st, Some((&c, 1.0)), &mut rng);
+            });
+        }
+        Err(e) => println!("[skip] XLA benches: {e}"),
+    }
+
+    b.finish();
+
+    // ---- Worker scaling. ----
+    let max_k = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
+    let s = throughput::worker_scaling(scale, max_k, 3);
+    let eff = throughput::parallel_efficiency(&s);
+    print_series_table("PERF: EC worker scaling (native MLP)", "K", &s.xs, &[
+        ("steps/sec", &s.ys),
+        ("efficiency", &eff),
+    ]);
+}

@@ -1,0 +1,198 @@
+//! Criterion-lite benchmark harness (criterion is not available offline).
+//!
+//! The paper-figure benches (`rust/benches/*.rs`, `harness = false`) use
+//! this: warmup, adaptive iteration count targeting a measurement budget,
+//! mean / std / min / p50 reporting, and JSON dumps under `out/bench/` so
+//! EXPERIMENTS.md numbers are regenerable. It also hosts the *figure
+//! harness* helpers that print paper-style series tables.
+
+use crate::util::json::Json;
+use std::time::{Duration, Instant};
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+}
+
+impl Measurement {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// Throughput given work items per iteration.
+    pub fn per_sec(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_secs()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("std_ns", Json::Num(self.std_ns)),
+            ("min_ns", Json::Num(self.min_ns)),
+            ("p50_ns", Json::Num(self.p50_ns)),
+        ])
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per benchmark.
+pub struct Bench {
+    warmup: Duration,
+    budget: Duration,
+    min_samples: usize,
+    results: Vec<Measurement>,
+    suite: String,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        // ECSGMCMC_BENCH_FAST=1 slashes budgets for smoke runs / CI.
+        let fast = std::env::var("ECSGMCMC_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        Bench {
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            budget: if fast { Duration::from_millis(300) } else { Duration::from_secs(2) },
+            min_samples: 5,
+            results: Vec::new(),
+            suite: suite.to_string(),
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Bench {
+        self.budget = budget;
+        self
+    }
+
+    /// Measure `f` (one logical iteration per call).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup || warm_iters < 1 {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = start.elapsed().as_secs_f64() / warm_iters as f64;
+        // Pick a batch size so each sample is ~1/20 of the budget but at
+        // least one iteration.
+        let target_sample = self.budget.as_secs_f64() / 20.0;
+        let batch = ((target_sample / per_iter).floor() as u64).max(1);
+
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let bench_start = Instant::now();
+        while bench_start.elapsed() < self.budget || samples_ns.len() < self.min_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            if samples_ns.len() >= 10_000 {
+                break;
+            }
+        }
+
+        let n = samples_ns.len() as f64;
+        let mean = samples_ns.iter().sum::<f64>() / n;
+        let var = samples_ns.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let mut sorted = samples_ns.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement {
+            name: name.to_string(),
+            iters: batch * samples_ns.len() as u64,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: sorted[0],
+            p50_ns: sorted[sorted.len() / 2],
+        };
+        println!(
+            "{:<48} {:>12.3} us/iter (± {:>8.3}, min {:>10.3}, n={})",
+            format!("{}/{}", self.suite, name),
+            m.mean_ns / 1e3,
+            m.std_ns / 1e3,
+            m.min_ns / 1e3,
+            m.iters,
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Write all measurements as JSON under `out/bench/<suite>.json`.
+    pub fn finish(self) {
+        let arr = Json::Arr(self.results.iter().map(|m| m.to_json()).collect());
+        let doc = Json::from_pairs(vec![
+            ("suite", Json::Str(self.suite.clone())),
+            ("results", arr),
+        ]);
+        let dir = std::path::Path::new("out/bench");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{}.json", self.suite));
+            let _ = std::fs::write(&path, doc.emit_pretty());
+            println!("-> wrote {}", path.display());
+        }
+    }
+}
+
+/// Pretty-print a paper-style series table: one row per x value, one column
+/// per labeled series. Used by the figure benches to report the same
+/// series the paper plots.
+pub fn print_series_table(
+    title: &str,
+    x_label: &str,
+    xs: &[f64],
+    series: &[(&str, &[f64])],
+) {
+    println!("\n== {title} ==");
+    print!("{x_label:>12}");
+    for (name, _) in series {
+        print!(" {name:>18}");
+    }
+    println!();
+    for (i, x) in xs.iter().enumerate() {
+        print!("{x:>12.4}");
+        for (_, ys) in series {
+            if i < ys.len() {
+                print!(" {:>18.6}", ys[i]);
+            } else {
+                print!(" {:>18}", "-");
+            }
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("ECSGMCMC_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest").with_budget(Duration::from_millis(50));
+        let mut acc = 0u64;
+        let m = b.bench("noop-ish", || {
+            acc = acc.wrapping_add(1);
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters > 0);
+        assert!(m.min_ns <= m.mean_ns * 1.5);
+    }
+
+    #[test]
+    fn measurement_throughput() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 10,
+            mean_ns: 1e9,
+            std_ns: 0.0,
+            min_ns: 1e9,
+            p50_ns: 1e9,
+        };
+        assert!((m.per_sec(100.0) - 100.0).abs() < 1e-9);
+    }
+}

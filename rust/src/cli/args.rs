@@ -1,0 +1,98 @@
+//! Minimal argument parser: `<command> [--key value | --flag]*`.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Parsed {
+    pub command: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Parsed {
+    /// Parse argv (without the binary name).
+    pub fn parse(argv: Vec<String>) -> Result<Parsed> {
+        let mut parsed = Parsed::default();
+        let mut iter = argv.into_iter().peekable();
+        parsed.command = iter.next().unwrap_or_default();
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' is not a valid option");
+                }
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    parsed.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let val = iter.next().unwrap();
+                    parsed.options.insert(key.to_string(), val);
+                } else {
+                    parsed.flags.push(key.to_string());
+                }
+            } else {
+                bail!("unexpected positional argument '{arg}'");
+            }
+        }
+        Ok(parsed)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let p = Parsed::parse(argv("experiment --id FIG1 --fast --seed 7")).unwrap();
+        assert_eq!(p.command, "experiment");
+        assert_eq!(p.opt("id"), Some("FIG1"));
+        assert!(p.has_flag("fast"));
+        assert_eq!(p.opt_u64("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let p = Parsed::parse(argv("sample --config=configs/a.toml")).unwrap();
+        assert_eq!(p.opt("config"), Some("configs/a.toml"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let p = Parsed::parse(argv("experiment --fast")).unwrap();
+        assert!(p.has_flag("fast"));
+        assert_eq!(p.opt("fast"), None);
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Parsed::parse(argv("sample positional")).is_err());
+    }
+
+    #[test]
+    fn default_u64_used_when_missing() {
+        let p = Parsed::parse(argv("experiment")).unwrap();
+        assert_eq!(p.opt_u64("seed", 42).unwrap(), 42);
+        let p = Parsed::parse(argv("experiment --seed notanum")).unwrap();
+        assert!(p.opt_u64("seed", 42).is_err());
+    }
+}

@@ -1,0 +1,350 @@
+//! CLI subcommand implementations.
+
+use super::args::Parsed;
+use crate::bench::print_series_table;
+use crate::config::{Backend, RunConfig, Scheme, Target};
+use crate::coordinator::ec::run_ec;
+use crate::coordinator::engine::{NativeEngine, StepKind, WorkerEngine, XlaEngine};
+use crate::coordinator::single::run_single;
+use crate::coordinator::{
+    DelayModel, EcConfig, IndependentCoordinator, NaiveConfig, NaiveCoordinator, RunOptions,
+    RunResult,
+};
+use crate::data::{synth_cifar, synth_mnist};
+use crate::experiments::{self, Scale, Series};
+use crate::potentials::banana::BananaPotential;
+use crate::potentials::gaussian::GaussianPotential;
+use crate::potentials::mixture::MixturePotential;
+use crate::potentials::nn::mlp::NativeMlp;
+use crate::potentials::nn::resnet::NativeResNet;
+use crate::potentials::xla::{XlaFusedSampler, XlaPotential};
+use crate::potentials::Potential;
+use crate::runtime::Engine;
+use crate::{log_info, log_warn};
+use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
+
+/// `ecsgmcmc sample --config <file>`.
+pub fn cmd_sample(p: &Parsed) -> Result<i32> {
+    let path = p.opt("config").ok_or_else(|| anyhow!("--config is required"))?;
+    let mut cfg = RunConfig::from_file(path)?;
+    if let Some(seed) = p.opt("seed") {
+        cfg.seed = seed.parse().context("--seed")?;
+    }
+    let result = run_configured(&cfg)?;
+    report_run(&cfg, &result);
+    Ok(0)
+}
+
+/// Build the potential described by the config.
+pub fn build_potential(cfg: &RunConfig) -> Result<Arc<dyn Potential>> {
+    Ok(match &cfg.target {
+        Target::Gaussian => Arc::new(GaussianPotential::fig1()),
+        Target::Mixture => Arc::new(MixturePotential::bimodal(4.0, 1.0)),
+        Target::Banana => Arc::new(BananaPotential::standard()),
+        Target::Mlp { backend } => match backend {
+            Backend::Native => {
+                let data = synth_mnist::generate(5120, 0.15, cfg.seed ^ 0xDA7A);
+                let (train, test) = data.split(4096);
+                Arc::new(NativeMlp::new(train, test, 128, 2, cfg.batch_size))
+            }
+            Backend::Xla => {
+                let engine = Engine::new(&cfg.artifacts_dir)?;
+                let spec = engine
+                    .manifest
+                    .artifacts
+                    .get("mlp_grad")
+                    .ok_or_else(|| anyhow!("mlp_grad not in manifest"))?;
+                let batch = spec.meta_usize("batch").unwrap_or(cfg.batch_size);
+                let n_total = spec.meta_usize("n_total").unwrap_or(4096);
+                let data = synth_mnist::generate(n_total + n_total / 4, 0.15, cfg.seed ^ 0xDA7A);
+                let (train, test) = data.split(n_total);
+                let _ = batch;
+                Arc::new(XlaPotential::new(&engine, "mlp", train, test)?)
+            }
+        },
+        Target::Resnet { backend } => match backend {
+            Backend::Native => {
+                let data = synth_cifar::generate(5120, 0.2, cfg.seed ^ 0xC1FA);
+                let (train, test) = data.split(4096);
+                Arc::new(NativeResNet::new(train, test, 64, 15, cfg.batch_size))
+            }
+            Backend::Xla => {
+                let engine = Engine::new(&cfg.artifacts_dir)?;
+                let spec = engine
+                    .manifest
+                    .artifacts
+                    .get("resnet_grad")
+                    .ok_or_else(|| anyhow!("resnet_grad not in manifest"))?;
+                let n_total = spec.meta_usize("n_total").unwrap_or(4096);
+                let data = synth_cifar::generate(n_total + n_total / 4, 0.2, cfg.seed ^ 0xC1FA);
+                let (train, test) = data.split(n_total);
+                Arc::new(XlaPotential::new(&engine, "resnet", train, test)?)
+            }
+        },
+    })
+}
+
+fn run_options(cfg: &RunConfig) -> RunOptions {
+    RunOptions {
+        log_every: (cfg.steps / 100).max(1),
+        thin: cfg.thin,
+        burn_in: cfg.burn_in,
+        init_sigma: 0.5,
+        ..Default::default()
+    }
+}
+
+/// Build fused-XLA engines when the config asks for the XLA backend with
+/// an NN target; otherwise native engines.
+fn build_engines(
+    cfg: &RunConfig,
+    potential: &Arc<dyn Potential>,
+    kind: StepKind,
+) -> Result<Vec<Box<dyn WorkerEngine>>> {
+    let tag = match &cfg.target {
+        Target::Mlp { backend: Backend::Xla } => Some("mlp"),
+        Target::Resnet { backend: Backend::Xla } => Some("resnet"),
+        _ => None,
+    };
+    if let Some(tag) = tag {
+        let engine = Engine::new(&cfg.artifacts_dir)?;
+        let spec = engine
+            .manifest
+            .artifacts
+            .get(&format!("{tag}_grad"))
+            .ok_or_else(|| anyhow!("{tag}_grad missing"))?;
+        let n_total = spec.meta_usize("n_total").unwrap_or(4096);
+        let gen = if tag == "mlp" {
+            synth_mnist::generate(n_total, 0.15, cfg.seed ^ 0xDA7A)
+        } else {
+            synth_cifar::generate(n_total, 0.2, cfg.seed ^ 0xC1FA)
+        };
+        (0..cfg.workers)
+            .map(|_| {
+                let sampler = XlaFusedSampler::new(&engine, tag, gen.clone(), cfg.sampler)?;
+                Ok(Box::new(XlaEngine::new(sampler)) as Box<dyn WorkerEngine>)
+            })
+            .collect()
+    } else {
+        Ok((0..cfg.workers)
+            .map(|_| {
+                Box::new(NativeEngine::new(potential.clone(), cfg.sampler, kind))
+                    as Box<dyn WorkerEngine>
+            })
+            .collect())
+    }
+}
+
+/// Run a fully-resolved config.
+pub fn run_configured(cfg: &RunConfig) -> Result<RunResult> {
+    let potential = build_potential(cfg)?;
+    let opts = run_options(cfg);
+    let delay = DelayModel::with_exchange_ms(cfg.delay_ms);
+    log_info!(
+        "sampling: scheme={} workers={} s={} alpha={} steps={} dim={}",
+        cfg.scheme.name(),
+        cfg.workers,
+        cfg.sync_every,
+        cfg.alpha,
+        cfg.steps,
+        potential.dim()
+    );
+    let kind = match cfg.scheme {
+        Scheme::Sgld | Scheme::EcSgld => StepKind::Sgld,
+        _ => StepKind::Sghmc,
+    };
+    Ok(match cfg.scheme {
+        Scheme::Sghmc | Scheme::Sgld => {
+            let mut engines = build_engines(cfg, &potential, kind)?;
+            run_single(engines.remove(0), cfg.steps, opts, cfg.seed)
+        }
+        Scheme::Independent => {
+            let engines = build_engines(cfg, &potential, kind)?;
+            IndependentCoordinator::new(cfg.steps, opts).run(engines, cfg.seed)
+        }
+        Scheme::ElasticCoupling | Scheme::EcSgld => {
+            let engines = build_engines(cfg, &potential, kind)?;
+            let ec_cfg = EcConfig {
+                workers: cfg.workers,
+                alpha: cfg.alpha,
+                sync_every: cfg.sync_every,
+                steps: cfg.steps,
+                delay,
+                opts,
+            };
+            run_ec(&ec_cfg, cfg.sampler, engines, cfg.seed)
+        }
+        Scheme::NaiveAsync => {
+            let naive = NaiveConfig {
+                workers: cfg.workers,
+                collect: cfg.collect,
+                sync_every: cfg.sync_every,
+                steps: cfg.steps,
+                synchronous: false,
+                delay,
+                opts,
+            };
+            NaiveCoordinator::new(naive, cfg.sampler, potential.clone()).run(cfg.seed)
+        }
+        Scheme::Synchronous => {
+            let naive = NaiveConfig::synchronous(cfg.workers, cfg.steps, opts);
+            NaiveCoordinator::new(naive, cfg.sampler, potential.clone()).run(cfg.seed)
+        }
+    })
+}
+
+fn report_run(cfg: &RunConfig, r: &RunResult) {
+    println!(
+        "done: {} chains, {} samples, {:.1} steps/s, elapsed {:.2}s",
+        r.chains.len(),
+        r.samples.len(),
+        r.metrics.steps_per_sec,
+        r.elapsed
+    );
+    if r.metrics.exchanges > 0 {
+        println!(
+            "exchanges: {}  mean staleness: {:.2}",
+            r.metrics.exchanges,
+            r.metrics.mean_staleness()
+        );
+    }
+    // For low-dimensional analytic targets, print sample moments.
+    if matches!(cfg.target, Target::Gaussian | Target::Mixture | Target::Banana)
+        && !r.samples.is_empty()
+    {
+        let samples = crate::diagnostics::to_f64_samples(&r.thetas(), 2);
+        let m = crate::diagnostics::moments(&samples);
+        println!("sample mean: [{:.4}, {:.4}]", m.mean[0], m.mean[1]);
+        println!(
+            "sample cov:  [[{:.4}, {:.4}], [{:.4}, {:.4}]]",
+            m.cov[0], m.cov[1], m.cov[2], m.cov[3]
+        );
+    }
+}
+
+/// `ecsgmcmc experiment --id ...`.
+pub fn cmd_experiment(p: &Parsed) -> Result<i32> {
+    let id = p.opt("id").ok_or_else(|| anyhow!("--id is required"))?.to_uppercase();
+    let seed = p.opt_u64("seed", 42)?;
+    let out = p.opt("out").unwrap_or("out").to_string();
+    let scale = if p.has_flag("fast") { Scale::Fast } else { Scale::from_env() };
+    std::fs::create_dir_all(&out).ok();
+
+    match id.as_str() {
+        "FIG1" => {
+            let r = experiments::fig1::run(100, seed);
+            let path = format!("{out}/fig1_traces.csv");
+            experiments::fig1::write_traces_csv(&r, &path)?;
+            println!("== FIG1: 2-D Gaussian, first 100 steps ==");
+            println!("mean U along trace  (lower = more time in high-density regions)");
+            println!("  SGHMC (2 runs avg):    {:.4}", r.sghmc_mean_u);
+            println!("  EC-SGHMC (4 workers):  {:.4}", r.ec_mean_u);
+            println!("frac of steps in 90% HDR per trace: {:?}", r.frac_hdr90);
+            println!("traces -> {path}");
+        }
+        "FIG2L" => {
+            let series = experiments::fig2::run_mnist(scale, seed);
+            print_fig2(&series, "FIG2L: MNIST MLP, NLL vs simulated cluster time", &out, "fig2_mnist")?;
+        }
+        "FIG2R" => {
+            let series = experiments::fig2::run_cifar(scale, seed);
+            print_fig2(&series, "FIG2R: CIFAR resnet, NLL vs simulated cluster time", &out, "fig2_cifar")?;
+        }
+        "SEC2" => {
+            let r = experiments::staleness_sweep::run(scale, seed);
+            let (a, e) = r.to_series();
+            let xs: Vec<f64> = r.s_values.iter().map(|&s| s as f64).collect();
+            print_series_table(
+                "SEC2: staleness sweep (final test NLL vs s)",
+                "s",
+                &xs,
+                &[(&a.label, &a.ys), (&e.label, &e.ys), ("mean staleness", &r.mean_staleness)],
+            );
+            let (da, de) = r.degradation();
+            println!("degradation NLL(s=16)/NLL(s=1): async {da:.3}  ec {de:.3}");
+            experiments::series_to_csv(&format!("{out}/staleness.csv"), "s", &[&a, &e])?;
+        }
+        "SEC5" => {
+            let r = experiments::easgd_cmp::run(scale, seed);
+            let refs: Vec<(&str, &[f64])> =
+                r.series.iter().map(|s| (s.label.as_str(), s.ys.as_slice())).collect();
+            print_series_table(
+                "SEC5: elastic optimizers (train U~ vs step)",
+                "step",
+                &r.series[0].xs,
+                &refs,
+            );
+            println!("final center test NLL:");
+            for (label, nll) in &r.final_nll {
+                println!("  {label:<20} {nll:.4}");
+            }
+        }
+        "ABL-ALPHA" => {
+            let r = experiments::alpha_sweep::run(scale, seed);
+            let series = r.to_series();
+            let refs: Vec<(&str, &[f64])> =
+                series.iter().map(|s| (s.label.as_str(), s.ys.as_slice())).collect();
+            print_series_table("ABL-α: coupling-strength ablation", "alpha", &r.alphas, &refs);
+        }
+        "PERF" => {
+            let max_k = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+            let s = experiments::throughput::worker_scaling(scale, max_k, seed);
+            let eff = experiments::throughput::parallel_efficiency(&s);
+            print_series_table(
+                "PERF: EC worker scaling",
+                "K",
+                &s.xs,
+                &[("steps/sec", &s.ys), ("efficiency", &eff)],
+            );
+        }
+        other => {
+            log_warn!("unknown experiment id {other}");
+            return Ok(2);
+        }
+    }
+    Ok(0)
+}
+
+fn print_fig2(series: &[Series], title: &str, out: &str, stem: &str) -> Result<()> {
+    for s in series {
+        println!("\n-- {} --", s.label);
+        for (x, y) in s.xs.iter().zip(&s.ys) {
+            println!("  t={x:>8.2}s  nll={y:.4}");
+        }
+        println!("  final: {:.4}", s.last_y());
+    }
+    println!("\n== {title} summary (final NLL) ==");
+    for s in series {
+        println!("  {:<22} {:.4}", s.label, s.last_y());
+    }
+    let refs: Vec<&Series> = series.iter().collect();
+    experiments::series_to_csv(&format!("{out}/{stem}.csv"), "t", &refs)?;
+    Ok(())
+}
+
+/// `ecsgmcmc artifacts [--dir d]`.
+pub fn cmd_artifacts(p: &Parsed) -> Result<i32> {
+    let dir = p
+        .opt("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Engine::default_dir);
+    let engine = Engine::new(&dir)?;
+    println!(
+        "artifacts dir: {:?}  (preset {}, platform {})",
+        dir,
+        engine.manifest.preset,
+        engine.platform()
+    );
+    println!("{:<24} {:>8} {:>10}  shapes", "name", "inputs", "params");
+    for (name, spec) in &engine.manifest.artifacts {
+        let n = spec.meta_usize("n_params").unwrap_or(0);
+        let shapes: Vec<String> = spec
+            .inputs
+            .iter()
+            .map(|io| format!("{}{:?}", io.name, io.shape))
+            .collect();
+        println!("{name:<24} {:>8} {n:>10}  {}", spec.inputs.len(), shapes.join(" "));
+    }
+    Ok(0)
+}

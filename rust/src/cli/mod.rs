@@ -1,0 +1,66 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! Subcommands:
+//!
+//! * `sample --config <file.toml>` — run one configured sampling job;
+//! * `experiment --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF>` — run
+//!   a paper experiment and print its table (plus CSVs under `--out`);
+//! * `artifacts [--dir <dir>]` — inspect the AOT artifact manifest;
+//! * `version` / `help`.
+
+pub mod args;
+pub mod commands;
+
+use anyhow::Result;
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> Result<i32> {
+    let parsed = args::Parsed::parse(argv)?;
+    match parsed.command.as_str() {
+        "sample" => commands::cmd_sample(&parsed),
+        "experiment" => commands::cmd_experiment(&parsed),
+        "artifacts" => commands::cmd_artifacts(&parsed),
+        "version" => {
+            println!("ecsgmcmc {}", crate::VERSION);
+            Ok(0)
+        }
+        "help" | "" => {
+            print_help();
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_help();
+            Ok(2)
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "ecsgmcmc {} — Asynchronous Stochastic Gradient MCMC with Elastic Coupling
+
+USAGE:
+    ecsgmcmc <COMMAND> [OPTIONS]
+
+COMMANDS:
+    sample      Run one sampling job
+                  --config <file.toml>   (see configs/)
+                  --seed <n>             override the config seed
+    experiment  Regenerate a paper experiment
+                  --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF>
+                  --fast                 smoke-scale run
+                  --seed <n>             (default 42)
+                  --out <dir>            CSV output dir (default out/)
+    artifacts   Inspect the AOT artifact manifest
+                  --dir <dir>            (default artifacts/)
+    version     Print the version
+    help        This message
+
+ENVIRONMENT:
+    ECSGMCMC_LOG         error|warn|info|debug|trace (default info)
+    ECSGMCMC_ARTIFACTS   artifacts directory override
+    ECSGMCMC_BENCH_FAST  1 = shrink all bench/experiment budgets",
+        crate::VERSION
+    );
+}

@@ -1,0 +1,302 @@
+//! Experiment configuration: a TOML-subset parser plus typed views.
+//!
+//! Configs live in `configs/*.toml` and drive the CLI (`ecsgmcmc
+//! experiment --config ...`). The parser supports the subset the project
+//! needs: `[section]` headers, `key = value` with integer / float / bool /
+//! string / homogeneous-array values, `#` comments. The typed layer
+//! ([`RunConfig`]) validates and defaults every field so experiments fail
+//! fast on typos instead of silently sampling garbage.
+
+pub mod toml;
+
+use crate::samplers::SghmcParams;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+pub use toml::{Toml, Value};
+
+/// Which parallelization scheme to run (paper Sec. 2–3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Single-chain SGHMC (Eq. 4) — the sequential baseline.
+    Sghmc,
+    /// Approach I: naive async parameter server with stale averaged grads.
+    NaiveAsync,
+    /// Approach II: K fully independent chains.
+    Independent,
+    /// s=1, O=K synchronous parallel gradients (preserves guarantees).
+    Synchronous,
+    /// Approach IIa: the paper's elastic-coupling sampler (Eq. 6).
+    ElasticCoupling,
+    /// First-order variants.
+    Sgld,
+    EcSgld,
+}
+
+impl Scheme {
+    pub fn from_str(s: &str) -> Result<Scheme> {
+        Ok(match s {
+            "sghmc" => Scheme::Sghmc,
+            "naive_async" | "async" => Scheme::NaiveAsync,
+            "independent" => Scheme::Independent,
+            "synchronous" | "sync" => Scheme::Synchronous,
+            "ec" | "elastic" | "ec_sghmc" => Scheme::ElasticCoupling,
+            "sgld" => Scheme::Sgld,
+            "ec_sgld" => Scheme::EcSgld,
+            other => bail!("unknown scheme '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Sghmc => "sghmc",
+            Scheme::NaiveAsync => "naive_async",
+            Scheme::Independent => "independent",
+            Scheme::Synchronous => "synchronous",
+            Scheme::ElasticCoupling => "ec_sghmc",
+            Scheme::Sgld => "sgld",
+            Scheme::EcSgld => "ec_sgld",
+        }
+    }
+}
+
+/// Which target distribution to sample.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Target {
+    /// Fig. 1 2-D correlated Gaussian (native gradient).
+    Gaussian,
+    /// Bayesian MLP on synthetic MNIST; `native` or `xla` backend.
+    Mlp { backend: Backend },
+    /// Residual net on synthetic CIFAR; `native` or `xla` backend.
+    Resnet { backend: Backend },
+    /// Gaussian mixture / banana toys for diagnostics.
+    Mixture,
+    Banana,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust forward/backward (fast on CPU; oracle for XLA path).
+    Native,
+    /// AOT-compiled HLO artifacts through PJRT (the paper's L1/L2 stack).
+    Xla,
+}
+
+impl Backend {
+    pub fn from_str(s: &str) -> Result<Backend> {
+        Ok(match s {
+            "native" => Backend::Native,
+            "xla" => Backend::Xla,
+            other => bail!("unknown backend '{other}' (native|xla)"),
+        })
+    }
+}
+
+/// Fully-resolved run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub scheme: Scheme,
+    pub target: Target,
+    pub sampler: SghmcParams,
+    /// Number of parallel workers K.
+    pub workers: usize,
+    /// Communication period s (worker<->server exchange every s steps).
+    pub sync_every: usize,
+    /// Gradients to collect per server step O (naive async only).
+    pub collect: usize,
+    /// Elastic coupling strength alpha.
+    pub alpha: f64,
+    /// Total sampler steps per worker.
+    pub steps: usize,
+    /// Record every `thin`-th position as a sample.
+    pub thin: usize,
+    /// Burn-in steps dropped before diagnostics.
+    pub burn_in: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Simulated extra communication delay (ms) per exchange, 0 = off.
+    pub delay_ms: u64,
+    /// Minibatch size for NN targets.
+    pub batch_size: usize,
+    /// Artifacts directory (xla backends).
+    pub artifacts_dir: String,
+    /// Output directory for traces/results.
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            scheme: Scheme::ElasticCoupling,
+            target: Target::Gaussian,
+            sampler: SghmcParams::default(),
+            workers: 4,
+            sync_every: 2,
+            collect: 1,
+            alpha: 1.0,
+            steps: 1000,
+            thin: 1,
+            burn_in: 0,
+            seed: 42,
+            delay_ms: 0,
+            batch_size: 100,
+            artifacts_dir: "artifacts".into(),
+            out_dir: "out".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load and validate a TOML config file.
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<RunConfig> {
+        let t = Toml::parse(text).context("parsing config")?;
+        let mut cfg = RunConfig::default();
+
+        if let Some(s) = t.get_str("run", "scheme") {
+            cfg.scheme = Scheme::from_str(s)?;
+        }
+        if let Some(s) = t.get_str("run", "target") {
+            let backend = match t.get_str("run", "backend") {
+                Some(b) => Backend::from_str(b)?,
+                None => Backend::Native,
+            };
+            cfg.target = match s {
+                "gaussian" => Target::Gaussian,
+                "mlp" | "mnist" => Target::Mlp { backend },
+                "resnet" | "cifar" => Target::Resnet { backend },
+                "mixture" => Target::Mixture,
+                "banana" => Target::Banana,
+                other => bail!("unknown target '{other}'"),
+            };
+        }
+
+        cfg.sampler.eps = t.get_f64("sampler", "eps").unwrap_or(cfg.sampler.eps);
+        cfg.sampler.friction = t.get_f64("sampler", "friction").unwrap_or(cfg.sampler.friction);
+        cfg.sampler.mass_inv = t.get_f64("sampler", "mass_inv").unwrap_or(cfg.sampler.mass_inv);
+        cfg.sampler.noise_var =
+            t.get_f64("sampler", "noise_var").unwrap_or(cfg.sampler.noise_var);
+        cfg.sampler.center_friction =
+            t.get_f64("sampler", "center_friction").unwrap_or(cfg.sampler.center_friction);
+
+        cfg.workers = t.get_usize("coordinator", "workers").unwrap_or(cfg.workers);
+        cfg.sync_every = t.get_usize("coordinator", "sync_every").unwrap_or(cfg.sync_every);
+        cfg.collect = t.get_usize("coordinator", "collect").unwrap_or(cfg.collect);
+        cfg.alpha = t.get_f64("coordinator", "alpha").unwrap_or(cfg.alpha);
+        cfg.delay_ms = t.get_usize("coordinator", "delay_ms").unwrap_or(0) as u64;
+
+        cfg.steps = t.get_usize("run", "steps").unwrap_or(cfg.steps);
+        cfg.thin = t.get_usize("run", "thin").unwrap_or(cfg.thin);
+        cfg.burn_in = t.get_usize("run", "burn_in").unwrap_or(cfg.burn_in);
+        cfg.seed = t.get_usize("run", "seed").unwrap_or(cfg.seed as usize) as u64;
+        cfg.batch_size = t.get_usize("run", "batch_size").unwrap_or(cfg.batch_size);
+        if let Some(s) = t.get_str("run", "artifacts_dir") {
+            cfg.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = t.get_str("run", "out_dir") {
+            cfg.out_dir = s.to_string();
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.sync_every == 0 {
+            bail!("sync_every must be >= 1");
+        }
+        if self.collect == 0 || self.collect > self.workers {
+            bail!("collect must be in 1..=workers (got {} of {})", self.collect, self.workers);
+        }
+        if self.thin == 0 {
+            bail!("thin must be >= 1");
+        }
+        if !(self.sampler.eps > 0.0) {
+            bail!("sampler.eps must be positive");
+        }
+        if self.alpha < 0.0 {
+            bail!("alpha must be non-negative");
+        }
+        if self.burn_in >= self.steps {
+            bail!("burn_in ({}) must be < steps ({})", self.burn_in, self.steps);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Fig. 2 left configuration
+[run]
+scheme = "ec"
+target = "mlp"
+backend = "native"
+steps = 500
+seed = 7
+batch_size = 100
+
+[sampler]
+eps = 0.002
+friction = 1.0
+
+[coordinator]
+workers = 6
+sync_every = 8
+alpha = 0.5
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RunConfig::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.scheme, Scheme::ElasticCoupling);
+        assert_eq!(cfg.target, Target::Mlp { backend: Backend::Native });
+        assert_eq!(cfg.workers, 6);
+        assert_eq!(cfg.sync_every, 8);
+        assert!((cfg.alpha - 0.5).abs() < 1e-12);
+        assert!((cfg.sampler.eps - 0.002).abs() < 1e-12);
+        assert_eq!(cfg.steps, 500);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn defaults_fill_missing_sections() {
+        let cfg = RunConfig::from_toml_str("[run]\nscheme = \"sghmc\"\n").unwrap();
+        assert_eq!(cfg.scheme, Scheme::Sghmc);
+        assert_eq!(cfg.workers, RunConfig::default().workers);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(RunConfig::from_toml_str("[coordinator]\nworkers = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("[run]\nscheme = \"nope\"\n").is_err());
+        assert!(RunConfig::from_toml_str("[sampler]\neps = -1.0\n").is_err());
+        assert!(
+            RunConfig::from_toml_str("[coordinator]\nworkers = 2\ncollect = 3\n").is_err()
+        );
+    }
+
+    #[test]
+    fn scheme_names_roundtrip() {
+        for s in [
+            Scheme::Sghmc,
+            Scheme::NaiveAsync,
+            Scheme::Independent,
+            Scheme::Synchronous,
+            Scheme::ElasticCoupling,
+            Scheme::Sgld,
+            Scheme::EcSgld,
+        ] {
+            assert_eq!(Scheme::from_str(s.name()).unwrap(), s);
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! TOML-subset parser.
+//!
+//! Supports exactly what the experiment configs use: `[section]` headers,
+//! `key = value` pairs with integer / float / boolean / quoted-string /
+//! homogeneous-array values, full-line and trailing `#` comments, blank
+//! lines. Nested tables, dates, and multi-line strings are out of scope and
+//! rejected with a line-numbered error.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value. Top-level keys live in the
+/// empty-string section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Toml {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml, TomlError> {
+        let mut doc = Toml::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() || name.contains('[') {
+                    return Err(err(lineno, "bad section name"));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            let prev = doc
+                .sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+            if prev.is_some() {
+                return Err(err(lineno, &format!("duplicate key '{key}'")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.as_f64()
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get(section, key)?.as_usize()
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key)?.as_str()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key)?.as_bool()
+    }
+}
+
+fn err(line: usize, msg: &str) -> TomlError {
+    TomlError { line, msg: msg.to_string() }
+}
+
+/// Strip a trailing comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<Value, TomlError> {
+    if text.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(lineno, "embedded quote in string"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| err(lineno, "unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            items.push(parse_value(part.trim(), lineno)?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if !text.contains(['.', 'e', 'E']) {
+        if let Ok(i) = text.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(lineno, &format!("cannot parse value '{text}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Toml::parse(
+            "top = 1\n[a]\nx = 2.5\nflag = true\nname = \"hi\" # comment\n[b]\narr = [1, 2, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&Value::Int(1)));
+        assert_eq!(doc.get_f64("a", "x"), Some(2.5));
+        assert_eq!(doc.get_bool("a", "flag"), Some(true));
+        assert_eq!(doc.get_str("a", "name"), Some("hi"));
+        match doc.get("b", "arr") {
+            Some(Value::Arr(items)) => assert_eq!(items.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = Toml::parse("# header\n\n[s]\n  # indented comment\nk = 3 # trailing\n").unwrap();
+        assert_eq!(doc.get_usize("s", "k"), Some(3));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Toml::parse("[s]\nk = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("s", "k"), Some("a#b"));
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let doc = Toml::parse("[s]\na = -3\nb = 1e-5\nc = -2.5\n").unwrap();
+        assert_eq!(doc.get("s", "a"), Some(&Value::Int(-3)));
+        assert_eq!(doc.get_f64("s", "b"), Some(1e-5));
+        assert_eq!(doc.get_f64("s", "c"), Some(-2.5));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Toml::parse("[ok]\nk = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        let e = Toml::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = Toml::parse("[s]\nk = 1\nk = 2\n").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn usize_rejects_negative() {
+        let doc = Toml::parse("[s]\nk = -1\n").unwrap();
+        assert_eq!(doc.get_usize("s", "k"), None);
+    }
+}

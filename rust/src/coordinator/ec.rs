@@ -1,0 +1,384 @@
+//! Approach IIa — the paper's contribution: elastically-coupled
+//! asynchronous SG-MCMC (EC-SGHMC / EC-SGLD), Eq. (6).
+//!
+//! Topology: K worker threads + one center-server thread.
+//!
+//! * Workers simulate Eq. (6) rows 1+3 against their *local, possibly
+//!   stale* copy c̃ of the center variable, exchanging with the server
+//!   every `sync_every` (= s) steps: they upload θᵢ and download the
+//!   current c. Between exchanges there is **no** synchronization — the
+//!   paper's "mostly asynchronous" regime.
+//! * The server owns (c, r) and the latest θ snapshots; per full round of
+//!   K uploads it advances the center dynamics (rows 2+4) by `s` steps
+//!   (budgeted fractionally per upload, so center time tracks worker
+//!   time), using the mean of its current snapshots.
+//!
+//! The server answers uploads in **round-robin worker order**. This keeps
+//! every worker trajectory a deterministic function of (seed, config) —
+//! crucial for the reproducibility property tests — while preserving the
+//! asynchrony that matters: workers never wait for *each other* between
+//! exchanges, only for their own round-trip, and the downloaded center is
+//! stale by up to s worker steps exactly as in the paper's protocol. The
+//! optional [`DelayModel`] adds simulated network latency and
+//! heterogeneous-machine jitter on top.
+
+use super::engine::WorkerEngine;
+use super::single::{init_state, Recorder};
+use super::{DelayModel, Metrics, RunOptions, RunResult};
+use crate::math::rng::Pcg64;
+use crate::math::vecops;
+use crate::samplers::sghmc::CenterStepper;
+use crate::samplers::{ChainState, SghmcParams};
+use crate::potentials::Potential;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// EC coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct EcConfig {
+    /// Number of worker chains K.
+    pub workers: usize,
+    /// Elastic coupling strength α (0 ⇒ decoupled chains, Eq. 5).
+    pub alpha: f64,
+    /// Communication period s: exchange with the server every s steps.
+    pub sync_every: usize,
+    /// Steps per worker.
+    pub steps: usize,
+    /// Simulated network/heterogeneity model.
+    pub delay: DelayModel,
+    /// Recording options.
+    pub opts: RunOptions,
+}
+
+impl Default for EcConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            alpha: 1.0,
+            sync_every: 2,
+            steps: 1000,
+            delay: DelayModel::none(),
+            opts: RunOptions::default(),
+        }
+    }
+}
+
+/// Upload from a worker: its id and current position.
+struct Upload {
+    worker: usize,
+    theta: Vec<f32>,
+}
+
+pub struct EcCoordinator {
+    cfg: EcConfig,
+    params: SghmcParams,
+    potential: Option<Arc<dyn Potential>>,
+}
+
+impl EcCoordinator {
+    /// Native-SGHMC construction (the common case).
+    pub fn new(cfg: EcConfig, params: SghmcParams, potential: Arc<dyn Potential>) -> Self {
+        Self { cfg, params, potential: Some(potential) }
+    }
+
+    /// Run with native engines built from the potential.
+    pub fn run(&self, seed: u64) -> RunResult {
+        use super::engine::{NativeEngine, StepKind};
+        let potential = self.potential.as_ref().expect("potential required").clone();
+        let engines: Vec<Box<dyn WorkerEngine>> = (0..self.cfg.workers)
+            .map(|_| {
+                Box::new(NativeEngine::new(potential.clone(), self.params, StepKind::Sghmc))
+                    as Box<dyn WorkerEngine>
+            })
+            .collect();
+        run_ec(&self.cfg, self.params, engines, seed)
+    }
+}
+
+/// Run the EC scheme over arbitrary worker engines (native or XLA).
+pub fn run_ec(
+    cfg: &EcConfig,
+    params: SghmcParams,
+    engines: Vec<Box<dyn WorkerEngine>>,
+    seed: u64,
+) -> RunResult {
+    assert_eq!(engines.len(), cfg.workers, "one engine per worker");
+    assert!(cfg.workers >= 1 && cfg.sync_every >= 1);
+    let start = Instant::now();
+    let k = cfg.workers;
+    let s = cfg.sync_every;
+    let dim = engines[0].dim();
+    let live = engines[0].live_dim();
+    let rounds = cfg.steps / s;
+
+    // Shared initial position (Fig. 1 semantics) or per-worker inits.
+    let init0 = init_state(dim, live, &cfg.opts, seed, 0);
+
+    // Channels: one upload lane per worker (server recvs round-robin), one
+    // download lane per worker.
+    let mut upload_txs = Vec::with_capacity(k);
+    let mut upload_rxs = Vec::with_capacity(k);
+    let mut download_txs = Vec::with_capacity(k);
+    let mut download_rxs = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (utx, urx) = mpsc::channel::<Upload>();
+        // Downloads are Arc-shared: the server publishes one snapshot,
+        // workers read it without a per-worker megabyte copy (§Perf L3).
+        let (dtx, drx) = mpsc::channel::<Arc<Vec<f32>>>();
+        upload_txs.push(utx);
+        upload_rxs.push(urx);
+        download_txs.push(dtx);
+        download_rxs.push(drx);
+    }
+
+    // ---- Server thread: owns (c, r), snapshots, center dynamics. ----
+    let server_cfg = cfg.clone();
+    let center_init = init0.theta.clone();
+    let server = std::thread::Builder::new()
+        .name("ec-server".into())
+        .spawn(move || {
+            let cfg = server_cfg;
+            let mut center = ChainState::from_theta(center_init.clone());
+            let mut stepper =
+                CenterStepper::new(params, cfg.alpha, dim).with_live_dim(live);
+            let mut rng = Pcg64::new(seed, 1);
+            let mut snapshots: Vec<Vec<f32>> = vec![center_init; k];
+            let mut theta_mean = vec![0.0f32; dim];
+            let mut budget = 0.0f64;
+            let mut metrics = Metrics::default();
+            let mut center_trace: Vec<(f64, Vec<f32>)> = Vec::new();
+            let mut center_steps = 0usize;
+            // Published snapshot cache: refreshed only when the center
+            // actually stepped since the last download, so consecutive
+            // downloads between center updates share one allocation.
+            let mut published: Arc<Vec<f32>> = Arc::new(center.theta.clone());
+            let mut published_at = 0usize;
+            let t0 = Instant::now();
+            for _round in 0..rounds {
+                for urx in upload_rxs.iter() {
+                    let up = urx.recv().expect("worker hung up early");
+                    snapshots[up.worker] = up.theta;
+                    metrics.exchanges += 1;
+                    // Center time advances s steps per K uploads.
+                    budget += s as f64 / k as f64;
+                    while budget >= 1.0 {
+                        let views: Vec<&[f32]> =
+                            snapshots.iter().map(|v| v.as_slice()).collect();
+                        vecops::mean_of(&views, &mut theta_mean);
+                        stepper.step(&mut center, &theta_mean, &mut rng);
+                        budget -= 1.0;
+                        center_steps += 1;
+                        if center_steps % cfg.opts.log_every == 0
+                            && center_trace.len() < cfg.opts.max_samples
+                        {
+                            center_trace
+                                .push((t0.elapsed().as_secs_f64(), center.theta.clone()));
+                        }
+                    }
+                    cfg.delay.exchange_sleep();
+                    if published_at != center_steps {
+                        published = Arc::new(center.theta.clone());
+                        published_at = center_steps;
+                    }
+                    download_txs[up.worker]
+                        .send(published.clone())
+                        .expect("worker download lane closed");
+                }
+            }
+            metrics.total_steps = center_steps as u64;
+            (center_trace, metrics)
+        })
+        .expect("spawn ec-server");
+
+    // ---- Worker threads. ----
+    let handles: Vec<_> = engines
+        .into_iter()
+        .enumerate()
+        .map(|(w, mut engine)| {
+            let opts = cfg.opts.clone();
+            let delay = cfg.delay;
+            let alpha = cfg.alpha;
+            let steps = cfg.steps;
+            let utx = upload_txs[w].clone();
+            let drx = std::mem::replace(&mut download_rxs[w], mpsc::channel().1);
+            let init = if opts.same_init {
+                init0.clone()
+            } else {
+                init_state(dim, live, &opts, seed, w)
+            };
+            std::thread::Builder::new()
+                .name(format!("ec-worker-{w}"))
+                .spawn(move || {
+                    let mut state = init;
+                    let mut rng = Pcg64::new(seed, 1000 + w as u64);
+                    let mut jitter_rng = Pcg64::new(seed ^ 0x9e37, 2000 + w as u64);
+                    let factor = delay.worker_factor(w, seed);
+                    let mut local_center: Arc<Vec<f32>> = Arc::new(state.theta.clone());
+                    let mut rec = Recorder::new(w, opts, start);
+                    for t in 0..steps {
+                        let u = engine.step(
+                            &mut state,
+                            Some((local_center.as_slice(), alpha)),
+                            &mut rng,
+                        );
+                        rec.observe(t, u, &state.theta);
+                        delay.step_sleep(factor, &mut jitter_rng);
+                        if (t + 1) % s == 0 {
+                            utx.send(Upload { worker: w, theta: state.theta.clone() })
+                                .expect("server hung up");
+                            local_center = drx.recv().expect("server reply lost");
+                        }
+                    }
+                    rec.trace
+                })
+                .expect("spawn ec-worker")
+        })
+        .collect();
+
+    let mut result = RunResult::default();
+    for h in handles {
+        result.chains.push(h.join().expect("ec worker panicked"));
+    }
+    result.chains.sort_by_key(|c| c.worker);
+    let (center_trace, server_metrics) = server.join().expect("ec server panicked");
+    result.center_trace = center_trace;
+    result.metrics = server_metrics;
+    result.elapsed = start.elapsed().as_secs_f64();
+    let worker_steps = (cfg.steps * k) as u64;
+    result.metrics.total_steps = worker_steps;
+    result.metrics.steps_per_sec = worker_steps as f64 / result.elapsed.max(1e-12);
+    result.merge_samples();
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{NativeEngine, StepKind};
+    use crate::potentials::gaussian::GaussianPotential;
+
+    fn coord(workers: usize, alpha: f64, s: usize, steps: usize) -> EcCoordinator {
+        EcCoordinator::new(
+            EcConfig {
+                workers,
+                alpha,
+                sync_every: s,
+                steps,
+                opts: RunOptions { log_every: 10, ..Default::default() },
+                ..Default::default()
+            },
+            SghmcParams { eps: 0.05, ..Default::default() },
+            Arc::new(GaussianPotential::fig1()),
+        )
+    }
+
+    #[test]
+    fn runs_and_records_everything() {
+        let r = coord(4, 1.0, 2, 200).run(3);
+        assert_eq!(r.chains.len(), 4);
+        assert_eq!(r.metrics.exchanges, 4 * 100);
+        assert!(!r.center_trace.is_empty());
+        for c in &r.chains {
+            assert_eq!(c.samples.len(), 200);
+            assert_eq!(c.u_trace.len(), 20);
+        }
+    }
+
+    #[test]
+    fn worker_trajectories_are_deterministic() {
+        let a = coord(3, 0.8, 4, 120).run(9);
+        let b = coord(3, 0.8, 4, 120).run(9);
+        for (ca, cb) in a.chains.iter().zip(&b.chains) {
+            assert_eq!(
+                ca.samples.last().unwrap().1,
+                cb.samples.last().unwrap().1,
+                "worker {} not deterministic",
+                ca.worker
+            );
+        }
+    }
+
+    #[test]
+    fn strong_coupling_keeps_chains_together() {
+        // alpha must respect the explicit-Euler stability bound
+        // (eps^2 * alpha < eps * friction), hence 5.0 at eps = 0.05.
+        let strong = coord(4, 5.0, 1, 2_000).run(5);
+        let weak = coord(4, 0.0, 1, 2_000).run(5);
+        // Mean pairwise distance between final worker positions.
+        let spread = |r: &RunResult| {
+            let finals: Vec<&Vec<f32>> =
+                r.chains.iter().map(|c| &c.samples.last().unwrap().1).collect();
+            let mut acc = 0.0;
+            let mut n = 0;
+            for i in 0..finals.len() {
+                for j in i + 1..finals.len() {
+                    acc += crate::math::vecops::l2_dist(finals[i], finals[j]);
+                    n += 1;
+                }
+            }
+            acc / n as f64
+        };
+        assert!(
+            spread(&strong) < spread(&weak),
+            "strong={} weak={}",
+            spread(&strong),
+            spread(&weak)
+        );
+    }
+
+    #[test]
+    fn ec_sampler_preserves_target_moments() {
+        // Proposition 3.1: stationary distribution is the posterior for
+        // every worker. Pooled worker samples must match the analytic
+        // Gaussian moments.
+        let cfg = EcConfig {
+            workers: 4,
+            alpha: 1.0,
+            sync_every: 2,
+            steps: 30_000,
+            opts: RunOptions {
+                thin: 10,
+                burn_in: 3_000,
+                log_every: 5_000,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let r = EcCoordinator::new(
+            cfg,
+            SghmcParams { eps: 0.05, ..Default::default() },
+            Arc::new(GaussianPotential::fig1()),
+        )
+        .run(17);
+        let samples = crate::diagnostics::to_f64_samples(&r.thetas(), 2);
+        let m = crate::diagnostics::moments(&samples);
+        assert!(m.mean_error(&[0.0, 0.0]) < 0.15, "mean={:?}", m.mean);
+        assert!(m.cov_error(&[1.0, 0.6, 0.6, 0.8]) < 0.3, "cov={:?}", m.cov);
+    }
+
+    #[test]
+    fn no_exchanges_when_period_exceeds_steps() {
+        let r = coord(2, 1.0, 1000, 50).run(1);
+        assert_eq!(r.metrics.exchanges, 0);
+        assert!(r.center_trace.is_empty());
+    }
+
+    #[test]
+    fn xla_style_engines_compose() {
+        // Engines trait-object path (same as the XLA backend uses).
+        let pot = Arc::new(GaussianPotential::fig1());
+        let engines: Vec<Box<dyn WorkerEngine>> = (0..2)
+            .map(|_| {
+                Box::new(NativeEngine::new(
+                    pot.clone(),
+                    SghmcParams::default(),
+                    StepKind::Sgld,
+                )) as Box<dyn WorkerEngine>
+            })
+            .collect();
+        let cfg = EcConfig { workers: 2, steps: 100, ..Default::default() };
+        let r = run_ec(&cfg, SghmcParams::default(), engines, 2);
+        assert_eq!(r.chains.len(), 2);
+    }
+}

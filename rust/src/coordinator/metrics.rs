@@ -1,0 +1,107 @@
+//! Run metrics: throughput, exchange counts, staleness distribution.
+
+use crate::util::json::Json;
+
+const STALENESS_BUCKETS: usize = 65;
+
+/// Counters filled by the coordinators.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    /// Sampler steps summed over workers (server steps for naive-async).
+    pub total_steps: u64,
+    /// Worker↔server exchanges.
+    pub exchanges: u64,
+    /// Gradients computed by workers (naive-async).
+    pub grads_computed: u64,
+    /// Histogram of observed staleness (server_version − grad_version),
+    /// bucket i = staleness i, last bucket = ≥64.
+    pub staleness_hist: Vec<u64>,
+    /// Steps per wall-clock second (filled at run end).
+    pub steps_per_sec: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            total_steps: 0,
+            exchanges: 0,
+            grads_computed: 0,
+            staleness_hist: vec![0; STALENESS_BUCKETS],
+            steps_per_sec: 0.0,
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record_staleness(&mut self, staleness: u64) {
+        let idx = (staleness as usize).min(STALENESS_BUCKETS - 1);
+        self.staleness_hist[idx] += 1;
+    }
+
+    /// Mean observed staleness.
+    pub fn mean_staleness(&self) -> f64 {
+        let total: u64 = self.staleness_hist.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let weighted: f64 = self
+            .staleness_hist
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| i as f64 * c as f64)
+            .sum();
+        weighted / total as f64
+    }
+
+    /// Largest staleness bucket with any mass.
+    pub fn max_staleness(&self) -> usize {
+        self.staleness_hist
+            .iter()
+            .rposition(|&c| c > 0)
+            .unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("total_steps", Json::Num(self.total_steps as f64)),
+            ("exchanges", Json::Num(self.exchanges as f64)),
+            ("grads_computed", Json::Num(self.grads_computed as f64)),
+            ("steps_per_sec", Json::Num(self.steps_per_sec)),
+            ("mean_staleness", Json::Num(self.mean_staleness())),
+            ("max_staleness", Json::Num(self.max_staleness() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staleness_accounting() {
+        let mut m = Metrics::default();
+        m.record_staleness(0);
+        m.record_staleness(2);
+        m.record_staleness(2);
+        m.record_staleness(500); // clamps to last bucket
+        assert_eq!(m.staleness_hist[0], 1);
+        assert_eq!(m.staleness_hist[2], 2);
+        assert_eq!(m.staleness_hist[64], 1);
+        assert_eq!(m.max_staleness(), 64);
+        let mean = m.mean_staleness();
+        assert!((mean - (0.0 + 2.0 + 2.0 + 64.0) / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_mean_is_zero() {
+        assert_eq!(Metrics::default().mean_staleness(), 0.0);
+        assert_eq!(Metrics::default().max_staleness(), 0);
+    }
+
+    #[test]
+    fn json_roundtrip_has_keys() {
+        let j = Metrics::default().to_json();
+        assert!(j.get("total_steps").is_some());
+        assert!(j.get("mean_staleness").is_some());
+    }
+}

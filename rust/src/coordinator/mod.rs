@@ -1,0 +1,139 @@
+//! The paper's coordination layer: parallel SG-MCMC schemes over threads
+//! and channels.
+//!
+//! Schemes (paper Sec. 2–3):
+//!
+//! * [`single`]       — one sequential SGHMC/SGLD chain (the baseline);
+//! * [`independent`]  — approach II: K chains, no interaction;
+//! * [`naive`]        — approach I: parameter server with stale averaged
+//!   gradients (communication period `s`, collection count `O`), including
+//!   the synchronous special case (s = 1, O = K);
+//! * [`ec`]           — approach IIa, the contribution: K workers
+//!   elastically coupled to a center variable (c, r) held by a server
+//!   thread, exchanging every `s` steps (Eq. 6).
+//!
+//! Every scheme uses real OS threads and mpsc channels — the paper's own
+//! experiments are thread-parallel — with an explicit, controllable
+//! delay/heterogeneity model ([`staleness`]) standing in for the network
+//! of a distributed deployment (DESIGN.md §2).
+
+pub mod ec;
+pub mod engine;
+pub mod independent;
+pub mod metrics;
+pub mod naive;
+pub mod single;
+pub mod staleness;
+
+pub use ec::{EcConfig, EcCoordinator};
+pub use engine::{NativeEngine, StepKind, WorkerEngine};
+pub use independent::IndependentCoordinator;
+pub use metrics::Metrics;
+pub use naive::{NaiveConfig, NaiveCoordinator};
+pub use staleness::DelayModel;
+
+/// One logged scalar observation along a chain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TracePoint {
+    /// Worker-local step index.
+    pub step: usize,
+    /// Wall-clock seconds since run start.
+    pub t: f64,
+    /// Minibatch potential Ũ(θ) observed at this step.
+    pub u: f64,
+}
+
+/// Everything recorded by one chain/worker.
+#[derive(Debug, Clone, Default)]
+pub struct ChainTrace {
+    pub worker: usize,
+    /// (step, wall-time, Ũ) every `log_every` steps.
+    pub u_trace: Vec<TracePoint>,
+    /// (wall-time, θ) every `thin` steps after burn-in, capped at
+    /// `max_samples`.
+    pub samples: Vec<(f64, Vec<f32>)>,
+}
+
+/// Result of a coordinated run.
+#[derive(Debug, Default)]
+pub struct RunResult {
+    pub chains: Vec<ChainTrace>,
+    /// Center-variable trajectory (EC only): (wall-time, c).
+    pub center_trace: Vec<(f64, Vec<f32>)>,
+    pub metrics: Metrics,
+    /// Total wall-clock seconds.
+    pub elapsed: f64,
+    /// All samples across chains, merged (convenience view).
+    pub samples: Vec<(f64, Vec<f32>)>,
+}
+
+impl RunResult {
+    pub(crate) fn merge_samples(&mut self) {
+        self.samples = self
+            .chains
+            .iter()
+            .flat_map(|c| c.samples.iter().cloned())
+            .collect();
+        self.samples.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    }
+
+    /// θ samples only (drop timestamps).
+    pub fn thetas(&self) -> Vec<Vec<f32>> {
+        self.samples.iter().map(|(_, t)| t.clone()).collect()
+    }
+}
+
+/// Recording/limits shared by all schemes.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Record Ũ every this many steps.
+    pub log_every: usize,
+    /// Keep every `thin`-th position as a sample.
+    pub thin: usize,
+    /// Steps discarded before sample recording starts.
+    pub burn_in: usize,
+    /// Per-chain sample cap (memory guard for NN-sized θ).
+    pub max_samples: usize,
+    /// Record θ samples at all (figures that only need Ũ disable this).
+    pub record_samples: bool,
+    /// Std-dev of the Gaussian position init.
+    pub init_sigma: f32,
+    /// Start every chain from the same draw (the paper's Fig. 1 setup).
+    pub same_init: bool,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self {
+            log_every: 10,
+            thin: 1,
+            burn_in: 0,
+            max_samples: 100_000,
+            record_samples: true,
+            init_sigma: 1.0,
+            same_init: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_samples_sorts_by_time() {
+        let mut r = RunResult::default();
+        r.chains = vec![
+            ChainTrace {
+                worker: 0,
+                u_trace: vec![],
+                samples: vec![(2.0, vec![1.0]), (0.5, vec![2.0])],
+            },
+            ChainTrace { worker: 1, u_trace: vec![], samples: vec![(1.0, vec![3.0])] },
+        ];
+        r.merge_samples();
+        let times: Vec<f64> = r.samples.iter().map(|s| s.0).collect();
+        assert_eq!(times, vec![0.5, 1.0, 2.0]);
+        assert_eq!(r.thetas().len(), 3);
+    }
+}

@@ -1,0 +1,93 @@
+//! Communication-delay / heterogeneity model.
+//!
+//! The paper's motivation for s > 1 is that real clusters have
+//! "heterogeneous machines and communication delays". Running in-process,
+//! we make those first-class simulated parameters instead:
+//!
+//! * `exchange_delay` — fixed latency added to every worker↔server
+//!   exchange (the network RTT stand-in);
+//! * `jitter` — optional per-step compute jitter with worker-dependent
+//!   mean (heterogeneous machines: worker k is slowed by a factor drawn
+//!   once from its stream).
+
+use crate::math::rng::Pcg64;
+use std::time::Duration;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DelayModel {
+    /// Added to every exchange round-trip.
+    pub exchange_delay: Duration,
+    /// Max per-step compute jitter (uniform in [0, jitter]); zero = off.
+    pub step_jitter: Duration,
+    /// Heterogeneity spread: worker slowdown factor uniform in
+    /// [1, 1 + spread].
+    pub hetero_spread: f64,
+}
+
+impl DelayModel {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with_exchange_ms(ms: u64) -> Self {
+        Self { exchange_delay: Duration::from_millis(ms), ..Default::default() }
+    }
+
+    /// Per-worker slowdown factor, deterministic in the worker's stream.
+    pub fn worker_factor(&self, worker: usize, seed: u64) -> f64 {
+        if self.hetero_spread <= 0.0 {
+            return 1.0;
+        }
+        let mut rng = Pcg64::new(seed ^ 0x5737_414c, worker as u64);
+        1.0 + rng.next_f64() * self.hetero_spread
+    }
+
+    /// Sleep for the exchange latency (no-op when zero).
+    pub fn exchange_sleep(&self) {
+        if !self.exchange_delay.is_zero() {
+            std::thread::sleep(self.exchange_delay);
+        }
+    }
+
+    /// Sleep for per-step jitter scaled by the worker factor.
+    pub fn step_sleep(&self, factor: f64, rng: &mut Pcg64) {
+        if self.step_jitter.is_zero() && factor <= 1.0 {
+            return;
+        }
+        let base = self.step_jitter.as_secs_f64() * rng.next_f64();
+        let extra = base * factor.max(1.0);
+        if extra > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(extra));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_delay_is_cheap() {
+        let d = DelayModel::none();
+        let t0 = std::time::Instant::now();
+        for _ in 0..1000 {
+            d.exchange_sleep();
+        }
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn worker_factor_deterministic_and_bounded() {
+        let d = DelayModel { hetero_spread: 0.5, ..Default::default() };
+        let f1 = d.worker_factor(3, 42);
+        let f2 = d.worker_factor(3, 42);
+        assert_eq!(f1, f2);
+        assert!((1.0..=1.5).contains(&f1));
+        assert_ne!(d.worker_factor(0, 42), d.worker_factor(1, 42));
+    }
+
+    #[test]
+    fn zero_spread_gives_unity() {
+        assert_eq!(DelayModel::none().worker_factor(7, 1), 1.0);
+    }
+}

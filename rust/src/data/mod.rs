@@ -1,0 +1,183 @@
+//! Datasets and minibatching.
+//!
+//! The paper's experiments use MNIST and CIFAR-10; this image has no
+//! network access, so [`synth_mnist`] and [`synth_cifar`] generate
+//! deterministic class-structured synthetic stand-ins (documented in
+//! DESIGN.md §2) that exercise the identical code path: class-conditional
+//! templates plus pixel noise, normalized features, int labels.
+
+pub mod synth_cifar;
+pub mod synth_mnist;
+
+use crate::math::rng::Pcg64;
+
+/// In-memory dense classification dataset (row-major features).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// n * d features, row-major.
+    pub x: Vec<f32>,
+    /// n labels in [0, classes).
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub d: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Vec<i32>, d: usize, classes: usize) -> Self {
+        assert_eq!(x.len() % d, 0);
+        let n = x.len() / d;
+        assert_eq!(y.len(), n);
+        for &label in &y {
+            assert!((0..classes as i32).contains(&label), "label {label} out of range");
+        }
+        Self { x, y, n, d, classes }
+    }
+
+    /// Feature row i.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Split into (train, test) with the first `train_n` rows as train.
+    pub fn split(&self, train_n: usize) -> (Dataset, Dataset) {
+        assert!(train_n <= self.n);
+        let train = Dataset::new(
+            self.x[..train_n * self.d].to_vec(),
+            self.y[..train_n].to_vec(),
+            self.d,
+            self.classes,
+        );
+        let test = Dataset::new(
+            self.x[train_n * self.d..].to_vec(),
+            self.y[train_n..].to_vec(),
+            self.d,
+            self.classes,
+        );
+        (train, test)
+    }
+
+    /// Copy a minibatch sampled i.i.d. with replacement into the caller's
+    /// buffers (the hot path — no allocation).
+    pub fn sample_batch(
+        &self,
+        batch: usize,
+        rng: &mut Pcg64,
+        x_out: &mut [f32],
+        y_out: &mut [i32],
+    ) {
+        assert_eq!(x_out.len(), batch * self.d);
+        assert_eq!(y_out.len(), batch);
+        for b in 0..batch {
+            let i = rng.below(self.n as u64) as usize;
+            x_out[b * self.d..(b + 1) * self.d].copy_from_slice(self.row(i));
+            y_out[b] = self.y[i];
+        }
+    }
+
+    /// Per-class counts (for generator sanity checks).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.classes];
+        for &label in &self.y {
+            counts[label as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// Epoch-based batcher sampling without replacement (reshuffles each epoch).
+pub struct EpochBatcher {
+    order: Vec<usize>,
+    cursor: usize,
+}
+
+impl EpochBatcher {
+    pub fn new(n: usize) -> Self {
+        Self { order: (0..n).collect(), cursor: n } // force shuffle on first use
+    }
+
+    /// Fill the next batch of indices, reshuffling at epoch boundaries.
+    pub fn next_batch(&mut self, batch: usize, rng: &mut Pcg64, out: &mut Vec<usize>) {
+        out.clear();
+        while out.len() < batch {
+            if self.cursor >= self.order.len() {
+                rng.shuffle(&mut self.order);
+                self.cursor = 0;
+            }
+            let remaining = self.order.len() - self.cursor;
+            let take = remaining.min(batch - out.len());
+            out.extend_from_slice(&self.order[self.cursor..self.cursor + take]);
+            self.cursor += take;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            vec![0.0, 0.1, 1.0, 1.1, 2.0, 2.1, 3.0, 3.1],
+            vec![0, 1, 0, 1],
+            2,
+            2,
+        )
+    }
+
+    #[test]
+    fn rows_and_counts() {
+        let d = toy();
+        assert_eq!(d.n, 4);
+        assert_eq!(d.row(2), &[2.0, 2.1]);
+        assert_eq!(d.class_counts(), vec![2, 2]);
+    }
+
+    #[test]
+    fn split_preserves_rows() {
+        let d = toy();
+        let (tr, te) = d.split(3);
+        assert_eq!(tr.n, 3);
+        assert_eq!(te.n, 1);
+        assert_eq!(te.row(0), d.row(3));
+        assert_eq!(te.y[0], d.y[3]);
+    }
+
+    #[test]
+    fn sample_batch_draws_valid_rows() {
+        let d = toy();
+        let mut rng = Pcg64::seeded(1);
+        let mut x = vec![0.0f32; 6 * 2];
+        let mut y = vec![0i32; 6];
+        d.sample_batch(6, &mut rng, &mut x, &mut y);
+        for b in 0..6 {
+            let row = &x[b * 2..b * 2 + 2];
+            let idx = (row[0].round()) as usize;
+            assert!(idx < 4);
+            assert_eq!(row, d.row(idx));
+            assert_eq!(y[b], d.y[idx]);
+        }
+    }
+
+    #[test]
+    fn epoch_batcher_visits_everything_once_per_epoch() {
+        let mut rng = Pcg64::seeded(2);
+        let mut batcher = EpochBatcher::new(10);
+        let mut seen = vec![0usize; 10];
+        let mut buf = Vec::new();
+        // Exactly two epochs in batches of 5.
+        for _ in 0..4 {
+            batcher.next_batch(5, &mut rng, &mut buf);
+            for &i in &buf {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 2), "{seen:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_bad_labels() {
+        let _ = Dataset::new(vec![0.0], vec![5], 1, 2);
+    }
+}

@@ -1,0 +1,77 @@
+//! Density-coverage metrics for the Fig. 1 comparison.
+//!
+//! The paper's Fig. 1 argument is qualitative: EC chains "quickly sample
+//! from high density regions and show coherent behaviour" while
+//! independent SGHMC chains may wander low-density regions early. These
+//! metrics quantify that claim so the bench can report it as numbers:
+//!
+//! * [`mean_potential_along_trace`] — average U(θ_t) over the first T
+//!   steps (lower = more time in high-density regions);
+//! * [`frac_in_hdr`] — fraction of trace points inside the analytic
+//!   highest-density region of mass `q` (for a Gaussian: the ellipsoid
+//!   U(θ) ≤ χ²_d(q)/2);
+//! * [`steps_to_hdr`] — first step index entering that region.
+
+use crate::potentials::Potential;
+
+/// Average potential along a trace of positions.
+pub fn mean_potential_along_trace(potential: &dyn Potential, trace: &[Vec<f32>]) -> f64 {
+    assert!(!trace.is_empty());
+    trace.iter().map(|t| potential.full_potential(t)).sum::<f64>() / trace.len() as f64
+}
+
+/// χ² quantile for d=2 via the closed form: χ²_2(q) = -2 ln(1-q).
+pub fn chi2_quantile_2d(q: f64) -> f64 {
+    assert!((0.0..1.0).contains(&q));
+    -2.0 * (1.0 - q).ln()
+}
+
+/// Fraction of trace points with U(θ) ≤ threshold.
+pub fn frac_in_hdr(potential: &dyn Potential, trace: &[Vec<f32>], u_threshold: f64) -> f64 {
+    assert!(!trace.is_empty());
+    let inside = trace
+        .iter()
+        .filter(|t| potential.full_potential(t) <= u_threshold)
+        .count();
+    inside as f64 / trace.len() as f64
+}
+
+/// First step index whose potential is ≤ threshold (None if never).
+pub fn steps_to_hdr(
+    potential: &dyn Potential,
+    trace: &[Vec<f32>],
+    u_threshold: f64,
+) -> Option<usize> {
+    trace
+        .iter()
+        .position(|t| potential.full_potential(t) <= u_threshold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potentials::gaussian::GaussianPotential;
+
+    #[test]
+    fn chi2_2d_known_values() {
+        // 90% HDR of a 2-D Gaussian: chi2 = 4.605.
+        assert!((chi2_quantile_2d(0.9) - 4.60517).abs() < 1e-4);
+        assert!((chi2_quantile_2d(0.5) - 1.38629).abs() < 1e-4);
+    }
+
+    #[test]
+    fn coverage_of_synthetic_trace() {
+        let pot = GaussianPotential::standard(2);
+        // U = ||theta||^2 / 2; threshold 0.5 => ||theta|| <= 1.
+        let trace = vec![
+            vec![2.0f32, 0.0], // U = 2
+            vec![0.5, 0.0],    // U = 0.125
+            vec![0.0, 0.1],    // tiny
+        ];
+        assert_eq!(frac_in_hdr(&pot, &trace, 0.5), 2.0 / 3.0);
+        assert_eq!(steps_to_hdr(&pot, &trace, 0.5), Some(1));
+        assert_eq!(steps_to_hdr(&pot, &trace, 1e-9), None);
+        let mean_u = mean_potential_along_trace(&pot, &trace);
+        assert!((mean_u - (2.0 + 0.125 + 0.005) / 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,102 @@
+//! Effective sample size via the initial-positive-sequence estimator
+//! (Geyer 1992): ESS = n / (1 + 2 Σ ρ_t), truncating the autocorrelation
+//! sum at the first negative pair (ρ_{2k} + ρ_{2k+1} < 0).
+
+use crate::math::stats;
+
+/// ESS of a scalar chain.
+pub fn ess(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 4 {
+        return n as f64;
+    }
+    let c0 = stats::autocovariance(xs, 0);
+    if c0 <= 0.0 {
+        return n as f64;
+    }
+    let mut sum = 0.0;
+    let mut t = 1;
+    while t + 1 < n {
+        let pair =
+            stats::autocovariance(xs, t) / c0 + stats::autocovariance(xs, t + 1) / c0;
+        if pair < 0.0 {
+            break;
+        }
+        sum += pair;
+        t += 2;
+        if t > n / 2 {
+            break;
+        }
+    }
+    (n as f64 / (1.0 + 2.0 * sum)).min(n as f64)
+}
+
+/// Minimum ESS over coordinates of vector samples (the usual scalar
+/// summary for multidimensional chains).
+pub fn min_ess(samples: &[Vec<f64>]) -> f64 {
+    assert!(!samples.is_empty());
+    let d = samples[0].len();
+    (0..d)
+        .map(|j| ess(&samples.iter().map(|s| s[j]).collect::<Vec<_>>()))
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// ESS per wall-clock second — the paper's implicit efficiency metric
+/// (its figures plot progress against time).
+pub fn ess_per_sec(samples: &[Vec<f64>], elapsed_secs: f64) -> f64 {
+    if elapsed_secs <= 0.0 {
+        return f64::NAN;
+    }
+    min_ess(samples) / elapsed_secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Pcg64;
+
+    #[test]
+    fn iid_samples_have_ess_near_n() {
+        let mut rng = Pcg64::seeded(71);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.next_normal()).collect();
+        let e = ess(&xs);
+        assert!(e > 3500.0, "ess={e}");
+        assert!(e <= 5000.0);
+    }
+
+    #[test]
+    fn ar1_chain_has_reduced_ess() {
+        // x_t = 0.95 x_{t-1} + noise: theoretical ESS ≈ n (1-ρ)/(1+ρ) ≈ n/39.
+        let mut rng = Pcg64::seeded(72);
+        let n = 20_000;
+        let mut xs = vec![0.0f64; n];
+        for t in 1..n {
+            xs[t] = 0.95 * xs[t - 1] + rng.next_normal();
+        }
+        let e = ess(&xs);
+        let expect = n as f64 * 0.05 / 1.95;
+        assert!(e < 2.5 * expect, "ess={e} expect~{expect}");
+        assert!(e > 0.3 * expect, "ess={e} expect~{expect}");
+    }
+
+    #[test]
+    fn min_ess_takes_worst_coordinate() {
+        let mut rng = Pcg64::seeded(73);
+        let n = 4000;
+        let mut cor = vec![0.0f64; n];
+        for t in 1..n {
+            cor[t] = 0.9 * cor[t - 1] + rng.next_normal();
+        }
+        let samples: Vec<Vec<f64>> =
+            (0..n).map(|t| vec![rng.next_normal(), cor[t]]).collect();
+        let m = min_ess(&samples);
+        let e_cor = ess(&cor);
+        assert!((m - e_cor).abs() / e_cor < 0.05, "min={m} cor={e_cor}");
+    }
+
+    #[test]
+    fn constant_chain_is_degenerate() {
+        let xs = vec![2.0; 100];
+        assert_eq!(ess(&xs), 100.0); // zero variance treated as iid
+    }
+}

@@ -1,0 +1,103 @@
+//! Kolmogorov–Smirnov test of sampler marginals against analytic normals.
+//!
+//! For the Gaussian toys every marginal θ_j is N(0, Σ_jj); the KS distance
+//! between the empirical CDF of the (thinned) chain and that normal is a
+//! sharp stationarity check that catches both bias and mis-scaled noise.
+
+/// Standard normal CDF via the Abramowitz–Stegun erf approximation
+/// (|error| < 7.5e-8 — far below sampler tolerances).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// KS statistic of `xs` against N(mean, std²).
+pub fn ks_statistic(xs: &[f64], mean: f64, std: f64) -> f64 {
+    assert!(!xs.is_empty());
+    assert!(std > 0.0);
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len() as f64;
+    let mut d = 0.0f64;
+    for (i, x) in sorted.iter().enumerate() {
+        let cdf = normal_cdf((x - mean) / std);
+        let lo = i as f64 / n;
+        let hi = (i + 1) as f64 / n;
+        d = d.max((cdf - lo).abs()).max((hi - cdf).abs());
+    }
+    d
+}
+
+/// Approximate KS p-value (Kolmogorov distribution asymptotic series),
+/// valid for effective sample sizes beyond ~35.
+pub fn ks_pvalue(d: f64, n_eff: f64) -> f64 {
+    let lambda = (n_eff.sqrt() + 0.12 + 0.11 / n_eff.sqrt()) * d;
+    let mut p = 0.0;
+    for k in 1..=100 {
+        let term = 2.0 * (-1.0f64).powi(k as i32 + 1) * (-2.0 * lambda * lambda * (k as f64) * (k as f64)).exp();
+        p += term;
+        if term.abs() < 1e-12 {
+            break;
+        }
+    }
+    p.clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Pcg64;
+
+    #[test]
+    fn cdf_known_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((normal_cdf(-1.96) - 0.025).abs() < 1e-3);
+        assert!(normal_cdf(8.0) > 0.9999999);
+    }
+
+    #[test]
+    fn exact_normal_samples_pass() {
+        let mut rng = Pcg64::seeded(91);
+        let xs: Vec<f64> = (0..5000).map(|_| 2.0 * rng.next_normal() + 1.0).collect();
+        let d = ks_statistic(&xs, 1.0, 2.0);
+        assert!(d < 0.025, "d={d}");
+        assert!(ks_pvalue(d, 5000.0) > 0.01, "p={}", ks_pvalue(d, 5000.0));
+    }
+
+    #[test]
+    fn wrong_scale_fails() {
+        let mut rng = Pcg64::seeded(92);
+        let xs: Vec<f64> = (0..5000).map(|_| 1.5 * rng.next_normal()).collect();
+        let d = ks_statistic(&xs, 0.0, 1.0);
+        assert!(d > 0.08, "d={d}");
+        assert!(ks_pvalue(d, 5000.0) < 1e-6);
+    }
+
+    #[test]
+    fn wrong_mean_fails() {
+        let mut rng = Pcg64::seeded(93);
+        let xs: Vec<f64> = (0..3000).map(|_| rng.next_normal() + 0.3).collect();
+        let d = ks_statistic(&xs, 0.0, 1.0);
+        assert!(d > 0.08, "d={d}");
+    }
+
+    #[test]
+    fn pvalue_monotone_in_d() {
+        let p1 = ks_pvalue(0.01, 1000.0);
+        let p2 = ks_pvalue(0.05, 1000.0);
+        let p3 = ks_pvalue(0.2, 1000.0);
+        assert!(p1 > p2 && p2 > p3, "{p1} {p2} {p3}");
+    }
+}

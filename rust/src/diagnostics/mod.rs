@@ -1,0 +1,86 @@
+//! MCMC diagnostics: effective sample size, Gelman–Rubin R̂,
+//! Kolmogorov–Smirnov tests against analytic marginals, moment checks,
+//! density-coverage metrics for the Fig. 1 comparison.
+
+pub mod coverage;
+pub mod ess;
+pub mod ks;
+pub mod rhat;
+
+use crate::math::stats;
+
+/// Summary moments of a set of d-dimensional samples.
+#[derive(Debug, Clone)]
+pub struct Moments {
+    pub mean: Vec<f64>,
+    /// Row-major d×d sample covariance.
+    pub cov: Vec<f64>,
+    pub n: usize,
+    pub d: usize,
+}
+
+pub fn moments(samples: &[Vec<f64>]) -> Moments {
+    assert!(!samples.is_empty());
+    let d = samples[0].len();
+    let mut mean = vec![0.0; d];
+    for s in samples {
+        for j in 0..d {
+            mean[j] += s[j];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= samples.len() as f64;
+    }
+    Moments { mean, cov: stats::covariance(samples), n: samples.len(), d }
+}
+
+impl Moments {
+    /// Max absolute deviation between sample and target mean.
+    pub fn mean_error(&self, target: &[f64]) -> f64 {
+        self.mean
+            .iter()
+            .zip(target)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Max absolute entry-wise deviation between sample and target cov.
+    pub fn cov_error(&self, target: &[f64]) -> f64 {
+        self.cov
+            .iter()
+            .zip(target)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Convert f32 sample vectors (possibly padded) to f64 truncated to `d`.
+pub fn to_f64_samples(samples: &[Vec<f32>], d: usize) -> Vec<Vec<f64>> {
+    samples
+        .iter()
+        .map(|s| s[..d].iter().map(|&x| x as f64).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_of_known_cloud() {
+        let samples = vec![vec![1.0, 0.0], vec![3.0, 0.0], vec![2.0, 1.0], vec![2.0, -1.0]];
+        let m = moments(&samples);
+        assert_eq!(m.mean, vec![2.0, 0.0]);
+        assert!((m.cov[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.cov[3] - 2.0 / 3.0).abs() < 1e-12);
+        assert!(m.mean_error(&[2.0, 0.0]) < 1e-12);
+        assert!((m.cov_error(&[0.0, 0.0, 0.0, 0.0]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn to_f64_truncates_padding() {
+        let s = vec![vec![1.0f32, 2.0, 99.0], vec![3.0, 4.0, 99.0]];
+        let out = to_f64_samples(&s, 2);
+        assert_eq!(out, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+    }
+}

@@ -1,0 +1,131 @@
+//! SEC5 — the paper's Section 5 comparison: EAMSGD (Zhang et al. 2015,
+//! Eq. 10) vs the physics-consistent EC-MSGD (Eq. 9, the deterministic
+//! limit of the EC-SGHMC dynamics), plus plain EASGD and single-worker
+//! MSGD as anchors.
+//!
+//! Paper claim: "An initial test we performed suggests that the former
+//! [Eq. 9 updates] perform at least as good as EAMSGD."
+//!
+//! Protocol: optimize the MLP objective (same potential as FIG2L) with
+//! identical ε, α, ξ, K, s; report training-objective and test-NLL
+//! trajectories over steps.
+
+use super::fig2::mnist_potential;
+use super::{Scale, Series};
+use crate::math::rng::Pcg64;
+use crate::optimizers::{ElasticKind, ParallelElastic};
+use crate::potentials::Potential;
+use std::sync::Arc;
+
+#[derive(Debug, Clone)]
+pub struct Sec5Config {
+    pub workers: usize,
+    pub steps: usize,
+    pub eps: f64,
+    pub alpha: f64,
+    pub xi: f64,
+    pub period: usize,
+    pub eval_points: usize,
+}
+
+impl Sec5Config {
+    pub fn default_for(scale: Scale) -> Self {
+        Self {
+            workers: 4,
+            steps: scale.pick(150, 1200),
+            eps: 1e-5,
+            alpha: 0.3,
+            xi: 0.1,
+            period: 4,
+            eval_points: scale.pick(6, 20),
+        }
+    }
+}
+
+/// Run one elastic optimizer; returns (train-U series, final test NLL).
+pub fn run_kind(
+    kind: ElasticKind,
+    cfg: &Sec5Config,
+    potential: Arc<dyn Potential>,
+    seed: u64,
+) -> (Series, f64) {
+    let dim = potential.padded_dim();
+    let mut rng = Pcg64::seeded(seed);
+    let mut init = vec![0.0f32; dim];
+    rng.fill_normal(&mut init[..potential.dim()]);
+    for t in init[..potential.dim()].iter_mut() {
+        *t *= 0.1;
+    }
+    let mut opt = ParallelElastic::new(
+        kind,
+        cfg.workers,
+        dim,
+        cfg.eps,
+        cfg.alpha,
+        cfg.xi,
+        cfg.period,
+        &init,
+    );
+    let label = match kind {
+        ElasticKind::Easgd => "EASGD",
+        ElasticKind::Eamsgd => "EAMSGD (Eq. 10)",
+        ElasticKind::EcMsgd => "EC-MSGD (Eq. 9)",
+    };
+    let mut series = Series::new(label);
+    let mut grad = vec![0.0f32; dim];
+    let log_every = (cfg.steps / cfg.eval_points.max(1)).max(1);
+    for t in 0..cfg.steps {
+        let u = opt.step(potential.as_ref(), &mut grad, &mut rng);
+        if t % log_every == 0 {
+            series.push(t as f64, u);
+        }
+    }
+    let final_nll = potential
+        .eval_nll_acc(opt.center())
+        .map(|(nll, _)| nll)
+        .unwrap_or(f64::NAN);
+    (series, final_nll)
+}
+
+#[derive(Debug)]
+pub struct Sec5Result {
+    pub series: Vec<Series>,
+    /// (label, final test NLL of the center variable).
+    pub final_nll: Vec<(String, f64)>,
+}
+
+pub fn run(scale: Scale, seed: u64) -> Sec5Result {
+    let cfg = Sec5Config::default_for(scale);
+    let pot: Arc<dyn Potential> = mnist_potential(scale);
+    let mut series = Vec::new();
+    let mut final_nll = Vec::new();
+    for kind in [ElasticKind::Easgd, ElasticKind::Eamsgd, ElasticKind::EcMsgd] {
+        let (s, nll) = run_kind(kind, &cfg, pot.clone(), seed);
+        final_nll.push((s.label.clone(), nll));
+        series.push(s);
+    }
+    Sec5Result { series, final_nll }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_descend_the_objective() {
+        let r = run(Scale::Fast, 21);
+        assert_eq!(r.series.len(), 3);
+        for s in &r.series {
+            assert!(
+                s.last_y() < s.ys[0],
+                "{} did not descend: {} -> {}",
+                s.label,
+                s.ys[0],
+                s.last_y()
+            );
+        }
+        for (label, nll) in &r.final_nll {
+            assert!(nll.is_finite(), "{label} NLL not finite");
+        }
+    }
+}

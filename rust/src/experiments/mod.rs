@@ -1,0 +1,133 @@
+//! Experiment harnesses: one module per paper table/figure (DESIGN.md §4).
+//!
+//! Each harness builds the workload, runs every compared scheme, and
+//! returns labeled series shaped like the paper's plots. They are invoked
+//! three ways: by the benches (`rust/benches/bench_*.rs`, which print the
+//! paper-style tables and JSON), by the CLI (`ecsgmcmc experiment --id`),
+//! and by the examples.
+//!
+//! | id     | paper artifact          | module                |
+//! |--------|-------------------------|-----------------------|
+//! | FIG1   | Fig. 1 toy traces       | [`fig1`]              |
+//! | FIG2L  | Fig. 2 left (MNIST)     | [`fig2`]              |
+//! | FIG2R  | Fig. 2 right (CIFAR)    | [`fig2`]              |
+//! | SEC2   | staleness analysis      | [`staleness_sweep`]   |
+//! | SEC5   | EAMSGD vs Eq. 9         | [`easgd_cmp`]         |
+//! | ABL-α  | coupling ablation       | [`alpha_sweep`]       |
+//! | PERF   | throughput microbench   | [`throughput`]        |
+
+pub mod alpha_sweep;
+pub mod easgd_cmp;
+pub mod fig1;
+pub mod fig2;
+pub mod staleness_sweep;
+pub mod throughput;
+
+/// A labeled (x, y) series — one curve of a figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), xs: Vec::new(), ys: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.xs.push(x);
+        self.ys.push(y);
+    }
+
+    /// Final y value (the usual summary scalar).
+    pub fn last_y(&self) -> f64 {
+        *self.ys.last().unwrap_or(&f64::NAN)
+    }
+
+    /// Mean of the last `k` y values (noise-robust tail summary).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        if self.ys.is_empty() {
+            return f64::NAN;
+        }
+        let k = k.min(self.ys.len());
+        self.ys[self.ys.len() - k..].iter().sum::<f64>() / k as f64
+    }
+}
+
+/// Experiment scale: `Fast` for CI/smoke (ECSGMCMC_BENCH_FAST=1),
+/// `Full` for paper-shaped runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Fast,
+    Full,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        if std::env::var("ECSGMCMC_BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+            Scale::Fast
+        } else {
+            Scale::Full
+        }
+    }
+
+    pub fn pick(&self, fast: usize, full: usize) -> usize {
+        match self {
+            Scale::Fast => fast,
+            Scale::Full => full,
+        }
+    }
+}
+
+/// Write series to a CSV file (one row per x, one column per series).
+pub fn series_to_csv(
+    path: &str,
+    x_label: &str,
+    series: &[&Series],
+) -> std::io::Result<()> {
+    use crate::util::csv::CsvWriter;
+    let mut header = vec![x_label.to_string()];
+    header.extend(series.iter().map(|s| s.label.clone()));
+    let refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut w = CsvWriter::create(path, &refs)?;
+    let rows = series.iter().map(|s| s.xs.len()).max().unwrap_or(0);
+    for i in 0..rows {
+        let mut fields = Vec::with_capacity(series.len() + 1);
+        let x = series
+            .iter()
+            .find(|s| i < s.xs.len())
+            .map(|s| s.xs[i])
+            .unwrap_or(f64::NAN);
+        fields.push(format!("{x}"));
+        for s in series {
+            fields.push(if i < s.ys.len() { format!("{}", s.ys[i]) } else { String::new() });
+        }
+        let refs: Vec<&str> = fields.iter().map(|s| s.as_str()).collect();
+        w.row(&refs)?;
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_summaries() {
+        let mut s = Series::new("x");
+        s.push(0.0, 4.0);
+        s.push(1.0, 2.0);
+        s.push(2.0, 0.0);
+        assert_eq!(s.last_y(), 0.0);
+        assert_eq!(s.tail_mean(2), 1.0);
+        assert_eq!(s.tail_mean(100), 2.0);
+    }
+
+    #[test]
+    fn scale_pick() {
+        assert_eq!(Scale::Fast.pick(1, 100), 1);
+        assert_eq!(Scale::Full.pick(1, 100), 100);
+    }
+}

@@ -1,0 +1,147 @@
+//! SEC2 — the paper's Sec. 2 staleness analysis: naive async
+//! parallelization is fine for small communication periods (1 < s < 4)
+//! but "becomes problematic with growing s", while EC-SGHMC degrades
+//! gracefully (echoed by the s = 8 curves of Fig. 2 left).
+//!
+//! The sweep runs both schemes at s ∈ {1, 2, 4, 8, 16} on the MNIST MLP
+//! workload with a fixed step budget and reports the final test NLL plus
+//! the observed staleness statistics.
+
+use super::fig2::{mnist_potential, nll_series, Fig2Config};
+use super::{Scale, Series};
+use crate::coordinator::ec::run_ec;
+use crate::coordinator::engine::{NativeEngine, StepKind};
+use crate::coordinator::{EcConfig, NaiveConfig, NaiveCoordinator, RunOptions};
+use crate::potentials::Potential;
+use crate::samplers::SghmcParams;
+use std::sync::Arc;
+
+#[derive(Debug)]
+pub struct StalenessResult {
+    pub s_values: Vec<usize>,
+    /// Final test NLL per s, per scheme.
+    pub async_nll: Vec<f64>,
+    pub ec_nll: Vec<f64>,
+    /// Mean observed staleness per s (async scheme).
+    pub mean_staleness: Vec<f64>,
+}
+
+pub fn default_s_values() -> Vec<usize> {
+    vec![1, 2, 4, 8, 16]
+}
+
+/// Divergence sentinel: NaN/inf NLL (exploded chain) reports as 1e3.
+pub fn clamp_nll(nll: f64) -> f64 {
+    if nll.is_finite() { nll.min(1e3) } else { 1e3 }
+}
+
+pub fn run(scale: Scale, seed: u64) -> StalenessResult {
+    let mut cfg = Fig2Config {
+        steps: scale.pick(120, 600),
+        eval_points: 4,
+        ..Fig2Config::mnist_default(scale)
+    };
+    // The sweep probes the *unstable-staleness* regime: one notch above
+    // the FIG2L step size, where tau * eps * curvature crosses the
+    // stability threshold as s grows (swept empirically; EXPERIMENTS.md).
+    if std::env::var("ECSGMCMC_FIG2_EPS").is_err() {
+        cfg.eps = match scale { Scale::Fast => 2e-3, Scale::Full => 1.5e-3 };
+    }
+    let pot: Arc<dyn Potential> = mnist_potential(scale);
+    let params = SghmcParams { eps: cfg.eps, ..Default::default() };
+    let opts = RunOptions {
+        log_every: (cfg.steps / 20).max(1),
+        thin: (cfg.steps / 8).max(1),
+        max_samples: 16,
+        init_sigma: 0.1,
+        ..Default::default()
+    };
+
+    let s_values = default_s_values();
+    let mut async_nll = Vec::new();
+    let mut ec_nll = Vec::new();
+    let mut mean_staleness = Vec::new();
+
+    for (i, &s) in s_values.iter().enumerate() {
+        let run_seed = seed + i as u64 * 101;
+        // Naive async: the server performs K updates per simulated time
+        // unit (see fig2 module docs), so its step budget is K * steps.
+        let naive_cfg = NaiveConfig {
+            workers: cfg.workers,
+            collect: 1,
+            sync_every: s,
+            steps: cfg.steps * cfg.workers,
+            synchronous: false,
+            delay: cfg.delay,
+            opts: opts.clone(),
+        };
+        let r = NaiveCoordinator::new(naive_cfg, params, pot.clone()).run(run_seed);
+        let series =
+            nll_series("async", pot.as_ref(), &r.chains[0].samples, cfg.eval_points);
+        // A diverged chain (NaN logits) IS the staleness failure mode;
+        // clamp to a large sentinel so the ratio stays reportable.
+        async_nll.push(clamp_nll(series.tail_mean(2)));
+        mean_staleness.push(r.metrics.mean_staleness());
+
+        // EC.
+        let engines: Vec<_> = (0..cfg.workers)
+            .map(|_| {
+                Box::new(NativeEngine::new(pot.clone(), params, StepKind::Sghmc))
+                    as Box<dyn crate::coordinator::WorkerEngine>
+            })
+            .collect();
+        let ec_cfg = EcConfig {
+            workers: cfg.workers,
+            alpha: cfg.alpha,
+            sync_every: s,
+            steps: cfg.steps,
+            delay: cfg.delay,
+            opts: opts.clone(),
+        };
+        let r = run_ec(&ec_cfg, params, engines, run_seed);
+        let series = nll_series("ec", pot.as_ref(), &r.chains[0].samples, cfg.eval_points);
+        ec_nll.push(clamp_nll(series.tail_mean(2)));
+    }
+
+    StalenessResult { s_values, async_nll, ec_nll, mean_staleness }
+}
+
+impl StalenessResult {
+    pub fn to_series(&self) -> (Series, Series) {
+        let mut a = Series::new("Async SGHMC final NLL");
+        let mut e = Series::new("EC-SGHMC final NLL");
+        for (i, &s) in self.s_values.iter().enumerate() {
+            a.push(s as f64, self.async_nll[i]);
+            e.push(s as f64, self.ec_nll[i]);
+        }
+        (a, e)
+    }
+
+    /// Degradation ratio: NLL(s = max) / NLL(s = 1) per scheme. The paper
+    /// predicts this ratio is much larger for the naive scheme.
+    pub fn degradation(&self) -> (f64, f64) {
+        let a = self.async_nll.last().unwrap() / self.async_nll.first().unwrap();
+        let e = self.ec_nll.last().unwrap() / self.ec_nll.first().unwrap();
+        (a, e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_produces_finite_numbers() {
+        std::env::set_var("ECSGMCMC_BENCH_FAST", "1");
+        let r = run(Scale::Fast, 3);
+        assert_eq!(r.s_values.len(), 5);
+        assert!(r.async_nll.iter().all(|x| x.is_finite()), "{:?}", r.async_nll);
+        assert!(r.ec_nll.iter().all(|x| x.is_finite()), "{:?}", r.ec_nll);
+        // Staleness grows with s.
+        assert!(
+            r.mean_staleness.last().unwrap() > r.mean_staleness.first().unwrap(),
+            "{:?}",
+            r.mean_staleness
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! PERF — step-throughput microbenchmarks: native vs XLA backends and
+//! worker scaling. Feeds EXPERIMENTS.md §Perf.
+
+use super::{Scale, Series};
+use crate::coordinator::ec::run_ec;
+use crate::coordinator::engine::{NativeEngine, StepKind, WorkerEngine};
+use crate::coordinator::{EcConfig, RunOptions};
+use crate::experiments::fig2::mnist_potential;
+use crate::potentials::Potential;
+use crate::samplers::SghmcParams;
+use std::sync::Arc;
+
+/// Worker-scaling curve: aggregate steps/sec for K ∈ 1..=max_k on the
+/// MNIST MLP workload.
+pub fn worker_scaling(scale: Scale, max_k: usize, seed: u64) -> Series {
+    let pot: Arc<dyn Potential> = mnist_potential(scale);
+    let params = SghmcParams { eps: 1e-4, ..Default::default() };
+    let steps = scale.pick(60, 400);
+    let mut series = Series::new("EC steps/sec");
+    for k in 1..=max_k {
+        let engines: Vec<Box<dyn WorkerEngine>> = (0..k)
+            .map(|_| {
+                Box::new(NativeEngine::new(pot.clone(), params, StepKind::Sghmc))
+                    as Box<dyn WorkerEngine>
+            })
+            .collect();
+        let cfg = EcConfig {
+            workers: k,
+            alpha: 1.0,
+            sync_every: 2,
+            steps,
+            opts: RunOptions {
+                record_samples: false,
+                log_every: usize::MAX / 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let r = run_ec(&cfg, params, engines, seed);
+        series.push(k as f64, r.metrics.steps_per_sec);
+    }
+    series
+}
+
+/// Parallel efficiency at K workers: throughput(K) / (K · throughput(1)).
+pub fn parallel_efficiency(series: &Series) -> Vec<f64> {
+    if series.ys.is_empty() {
+        return vec![];
+    }
+    let t1 = series.ys[0];
+    series
+        .xs
+        .iter()
+        .zip(&series.ys)
+        .map(|(k, t)| t / (k * t1))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_curve_reports_sane_numbers() {
+        let s = worker_scaling(Scale::Fast, 3, 2);
+        assert_eq!(s.xs.len(), 3);
+        // Aggregate steps/sec must not collapse with more workers. On a
+        // multi-core box it grows ~linearly; on a single-core testbed
+        // (threads time-slice) it stays ~flat — both acceptable here; the
+        // bench reports the measured curve either way.
+        assert!(s.ys.iter().all(|&y| y > 0.0), "{:?}", s.ys);
+        assert!(s.ys[2] > s.ys[0] * 0.3, "{:?}", s.ys);
+        let eff = parallel_efficiency(&s);
+        assert!(eff[0] > 0.99 && eff[0] < 1.01);
+        assert!(eff.iter().all(|&e| e > 0.05), "{eff:?}");
+    }
+}

@@ -1,0 +1,55 @@
+//! # ecsgmcmc — Asynchronous Stochastic Gradient MCMC with Elastic Coupling
+//!
+//! A production-shaped reproduction of *"Asynchronous Stochastic Gradient
+//! MCMC with Elastic Coupling"* (Springenberg, Klein, Falkner, Hutter, 2016)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: the
+//!   elastic-coupling center server ([`coordinator`]), the naive
+//!   parameter-server baseline, worker chains, the staleness/communication
+//!   model, plus every substrate it needs (samplers, potentials, synthetic
+//!   datasets, diagnostics, config, CLI, metrics).
+//! * **Layer 2 (python/compile/model.py, build-time)** — the JAX potentials
+//!   `U(θ)` (2-D Gaussian, Bayesian MLP, residual net) lowered AOT to HLO
+//!   text artifacts.
+//! * **Layer 1 (python/compile/kernels/, build-time)** — Pallas kernels for
+//!   the fused sampler updates (paper Eqs. 4 and 6) and the dense layers.
+//!
+//! The [`runtime`] module loads the HLO artifacts through the PJRT CPU
+//! client (`xla` crate); Python never runs on the sampling path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ecsgmcmc::coordinator::{EcConfig, EcCoordinator};
+//! use ecsgmcmc::potentials::gaussian::GaussianPotential;
+//! use ecsgmcmc::samplers::SghmcParams;
+//! use std::sync::Arc;
+//!
+//! let potential = Arc::new(GaussianPotential::fig1());
+//! let params = SghmcParams { eps: 1e-2, ..Default::default() };
+//! let cfg = EcConfig { workers: 4, alpha: 1.0, sync_every: 2, steps: 1000, ..Default::default() };
+//! let run = EcCoordinator::new(cfg, params, potential).run(42);
+//! println!("collected {} samples", run.samples.len());
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
+//! the harnesses that regenerate every figure in the paper.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod diagnostics;
+pub mod experiments;
+pub mod math;
+pub mod optimizers;
+pub mod potentials;
+pub mod runtime;
+pub mod samplers;
+pub mod testing;
+pub mod util;
+
+/// Crate version, re-exported for the CLI banner.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

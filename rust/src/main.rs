@@ -1,0 +1,15 @@
+//! `ecsgmcmc` binary: CLI front-end for the EC-SGHMC reproduction.
+//!
+//! See `ecsgmcmc help` (or README.md) for usage. All functionality lives
+//! in the library crate so examples / benches / tests share it.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match ecsgmcmc::cli::run(argv) {
+        Ok(code) => std::process::exit(code),
+        Err(err) => {
+            eprintln!("error: {err:#}");
+            std::process::exit(1);
+        }
+    }
+}

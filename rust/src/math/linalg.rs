@@ -1,0 +1,193 @@
+//! Small dense linear algebra: 2x2/ NxN helpers used by the Gaussian
+//! potentials and diagnostics (Cholesky, inverse, matvec). Sizes here are
+//! tiny (d <= ~32 for the analytic toys), so simple O(n^3) routines are
+//! exactly right.
+
+/// Row-major square matrix view helpers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub d: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(d: usize) -> Self {
+        Self { d, data: vec![0.0; d * d] }
+    }
+
+    pub fn identity(d: usize) -> Self {
+        let mut m = Self::zeros(d);
+        for i in 0..d {
+            m.data[i * d + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let d = rows.len();
+        let mut data = Vec::with_capacity(d * d);
+        for r in rows {
+            assert_eq!(r.len(), d, "matrix must be square");
+            data.extend_from_slice(r);
+        }
+        Self { d, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.d + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.d + j] = v;
+    }
+
+    /// `out = A x`
+    pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.d);
+        assert_eq!(out.len(), self.d);
+        for i in 0..self.d {
+            let mut acc = 0.0;
+            for j in 0..self.d {
+                acc += self.get(i, j) * x[j];
+            }
+            out[i] = acc;
+        }
+    }
+
+    /// Cholesky factor L (lower-triangular, A = L L^T). Panics if A is not
+    /// positive definite — the analytic toys construct PD matrices by
+    /// definition, so this is an assertion, not a runtime error path.
+    pub fn cholesky(&self) -> Matrix {
+        let d = self.d;
+        let mut l = Matrix::zeros(d);
+        for i in 0..d {
+            for j in 0..=i {
+                let mut sum = self.get(i, j);
+                for k in 0..j {
+                    sum -= l.get(i, k) * l.get(j, k);
+                }
+                if i == j {
+                    assert!(sum > 0.0, "matrix not positive definite");
+                    l.set(i, j, sum.sqrt());
+                } else {
+                    l.set(i, j, sum / l.get(j, j));
+                }
+            }
+        }
+        l
+    }
+
+    /// Inverse via Gauss–Jordan with partial pivoting.
+    pub fn inverse(&self) -> Matrix {
+        let d = self.d;
+        let mut a = self.clone();
+        let mut inv = Matrix::identity(d);
+        for col in 0..d {
+            // Pivot.
+            let mut pivot = col;
+            for r in col + 1..d {
+                if a.get(r, col).abs() > a.get(pivot, col).abs() {
+                    pivot = r;
+                }
+            }
+            assert!(a.get(pivot, col).abs() > 1e-12, "singular matrix");
+            if pivot != col {
+                for j in 0..d {
+                    let (x, y) = (a.get(col, j), a.get(pivot, j));
+                    a.set(col, j, y);
+                    a.set(pivot, j, x);
+                    let (x, y) = (inv.get(col, j), inv.get(pivot, j));
+                    inv.set(col, j, y);
+                    inv.set(pivot, j, x);
+                }
+            }
+            let diag = a.get(col, col);
+            for j in 0..d {
+                a.set(col, j, a.get(col, j) / diag);
+                inv.set(col, j, inv.get(col, j) / diag);
+            }
+            for r in 0..d {
+                if r != col {
+                    let f = a.get(r, col);
+                    if f != 0.0 {
+                        for j in 0..d {
+                            a.set(r, j, a.get(r, j) - f * a.get(col, j));
+                            inv.set(r, j, inv.get(r, j) - f * inv.get(col, j));
+                        }
+                    }
+                }
+            }
+        }
+        inv
+    }
+
+    /// Determinant via the Cholesky factor (PD matrices only).
+    pub fn det_pd(&self) -> f64 {
+        let l = self.cholesky();
+        let mut det = 1.0;
+        for i in 0..self.d {
+            det *= l.get(i, i);
+        }
+        det * det
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-9
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let m = Matrix::identity(3);
+        let mut out = [0.0; 3];
+        m.matvec(&[1.0, 2.0, 3.0], &mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn cholesky_of_known_matrix() {
+        let a = Matrix::from_rows(&[&[4.0, 2.0], &[2.0, 3.0]]);
+        let l = a.cholesky();
+        // L = [[2, 0], [1, sqrt(2)]]
+        assert!(approx(l.get(0, 0), 2.0));
+        assert!(approx(l.get(1, 0), 1.0));
+        assert!(approx(l.get(1, 1), 2f64.sqrt()));
+        assert!(approx(l.get(0, 1), 0.0));
+    }
+
+    #[test]
+    fn inverse_times_original_is_identity() {
+        let a = Matrix::from_rows(&[&[1.0, 0.6], &[0.6, 0.8]]);
+        let inv = a.inverse();
+        let mut out = [0.0; 2];
+        // Check A^-1 (A e_i) = e_i.
+        for i in 0..2 {
+            let e: Vec<f64> = (0..2).map(|j| if i == j { 1.0 } else { 0.0 }).collect();
+            let mut ae = [0.0; 2];
+            a.matvec(&e, &mut ae);
+            inv.matvec(&ae, &mut out);
+            for j in 0..2 {
+                assert!(approx(out[j], e[j]), "col {i}: {out:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn det_of_fig1_covariance() {
+        let a = Matrix::from_rows(&[&[1.0, 0.6], &[0.6, 0.8]]);
+        assert!(approx(a.det_pd(), 0.8 - 0.36));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive definite")]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]);
+        let _ = a.cholesky();
+    }
+}

@@ -1,0 +1,11 @@
+//! Numerics substrate: RNG, vector kernels, statistics.
+//!
+//! Everything here is hand-rolled (the image has no `rand`/`ndarray`):
+//! a PCG64 generator with Box–Muller normals, the allocation-free vector
+//! operations the sampler hot loop uses, and the streaming statistics the
+//! diagnostics are built on.
+
+pub mod linalg;
+pub mod rng;
+pub mod stats;
+pub mod vecops;

@@ -1,0 +1,235 @@
+//! PCG-XSL-RR 128/64 random generator + Gaussian sampling.
+//!
+//! PCG64 (O'Neill 2014): 128-bit LCG state, XSL-RR output. Passes BigCrush,
+//! is seedable/jumpable enough for per-worker streams (each worker derives
+//! an independent stream via the `stream` parameter, which selects an odd
+//! LCG increment), and needs no platform entropy — experiments are fully
+//! reproducible from the config seed.
+//!
+//! Normal variates use the polar Box–Muller method with a one-sample cache;
+//! `fill_normal` is the sampler hot path for noise vectors.
+
+const MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// PCG64 generator. `Clone` gives a fork that replays the same stream.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    cached_normal: Option<f64>,
+}
+
+impl Pcg64 {
+    /// Seed the generator. `stream` selects one of 2^127 independent
+    /// sequences (used to give every worker / chain its own stream).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 1) | 1) ^ 0xda3e_39cb_94b9_5bdb_5851_f42d_4c95_7f2d;
+        let inc = (inc << 1) | 1;
+        let mut rng = Self { state: 0, inc, cached_normal: None };
+        rng.state = rng.state.wrapping_add(seed as u128).wrapping_mul(MULT).wrapping_add(rng.inc);
+        rng.next_u64();
+        rng.next_u64();
+        rng
+    }
+
+    /// Seed with stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let threshold = n.wrapping_neg() % n;
+            while lo < threshold {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal variate (polar Box–Muller, cached pair).
+    pub fn next_normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let factor = (-2.0 * s.ln() / s).sqrt();
+                self.cached_normal = Some(v * factor);
+                return u * factor;
+            }
+        }
+    }
+
+    /// Fill `out` with i.i.d. standard normals (f32, sampler hot path).
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        let mut i = 0;
+        // Consume pairs directly; skip the cache for throughput.
+        while i + 1 < out.len() {
+            loop {
+                let u = 2.0 * self.next_f64() - 1.0;
+                let v = 2.0 * self.next_f64() - 1.0;
+                let s = u * u + v * v;
+                if s > 0.0 && s < 1.0 {
+                    let factor = (-2.0 * s.ln() / s).sqrt();
+                    out[i] = (u * factor) as f32;
+                    out[i + 1] = (v * factor) as f32;
+                    break;
+                }
+            }
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.next_normal() as f32;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            items.swap(i, j);
+        }
+    }
+
+    /// Derive a child generator (used to hand each worker its own stream).
+    pub fn fork(&mut self, stream: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64(), stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::seeded(7);
+        let mut b = Pcg64::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(7, 0);
+        let mut b = Pcg64::new(7, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_range_and_moments() {
+        let mut rng = Pcg64::seeded(42);
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut sum_sq = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+            sum_sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sum_sq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var={var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(1);
+        let n = 200_000;
+        let (mut m1, mut m2, mut m3, mut m4) = (0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.next_normal();
+            m1 += z;
+            m2 += z * z;
+            m3 += z * z * z;
+            m4 += z * z * z * z;
+        }
+        let nf = n as f64;
+        assert!((m1 / nf).abs() < 0.02);
+        assert!((m2 / nf - 1.0).abs() < 0.03);
+        assert!((m3 / nf).abs() < 0.05);
+        assert!((m4 / nf - 3.0).abs() < 0.15); // kurtosis of N(0,1)
+    }
+
+    #[test]
+    fn fill_normal_matches_moments() {
+        let mut rng = Pcg64::seeded(2);
+        let mut buf = vec![0f32; 100_001]; // odd length exercises the tail
+        rng.fill_normal(&mut buf);
+        let mean: f64 = buf.iter().map(|&x| x as f64).sum::<f64>() / buf.len() as f64;
+        let var: f64 =
+            buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / buf.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn below_is_unbiased_small_n() {
+        let mut rng = Pcg64::seeded(3);
+        let mut counts = [0usize; 5];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[rng.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            let p = c as f64 / n as f64;
+            assert!((p - 0.2).abs() < 0.01, "p={p}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(4);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fork_streams_are_decorrelated() {
+        let mut root = Pcg64::seeded(9);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

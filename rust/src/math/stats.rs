@@ -1,0 +1,223 @@
+//! Statistics for diagnostics: streaming moments, quantiles, autocovariance.
+
+/// Streaming mean/variance (Welford). Numerically stable for long chains.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n - 1 denominator); 0 for fewer than 2 samples.
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Merge another accumulator (Chan's parallel formula).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        self.mean += delta * other.n as f64 / n as f64;
+        self.m2 += other.m2 + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample variance (n-1).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Sample covariance matrix (row-major d x d) of `samples` (each length d).
+pub fn covariance(samples: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!samples.is_empty());
+    let d = samples[0].len();
+    let n = samples.len();
+    let mut means = vec![0.0; d];
+    for s in samples {
+        assert_eq!(s.len(), d);
+        for j in 0..d {
+            means[j] += s[j];
+        }
+    }
+    for m in means.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut cov = vec![0.0; d * d];
+    for s in samples {
+        for a in 0..d {
+            let da = s[a] - means[a];
+            for b in 0..d {
+                cov[a * d + b] += da * (s[b] - means[b]);
+            }
+        }
+    }
+    let denom = (n.max(2) - 1) as f64;
+    for c in cov.iter_mut() {
+        *c /= denom;
+    }
+    cov
+}
+
+/// Empirical quantile via linear interpolation (q in [0, 1]).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Biased autocovariance at `lag` (normalized by n, as in ESS estimators).
+pub fn autocovariance(xs: &[f64], lag: usize) -> f64 {
+    let n = xs.len();
+    if lag >= n {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let mut acc = 0.0;
+    for i in 0..n - lag {
+        acc += (xs[i] - m) * (xs[i + lag] - m);
+    }
+    acc / n as f64
+}
+
+/// Autocorrelation at `lag` (rho_0 = 1).
+pub fn autocorrelation(xs: &[f64], lag: usize) -> f64 {
+    let c0 = autocovariance(xs, 0);
+    if c0 == 0.0 {
+        return if lag == 0 { 1.0 } else { 0.0 };
+    }
+    autocovariance(xs, lag) / c0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.5];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.var() - variance(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_matches_combined() {
+        let xs: Vec<f64> = (0..50).map(|i| (i as f64).sin() * 3.0).collect();
+        let mut all = Welford::new();
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.push(x);
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-12);
+        assert!((a.var() - all.var()).abs() < 1e-12);
+        assert_eq!(a.count(), all.count());
+    }
+
+    #[test]
+    fn covariance_identity_for_axis_samples() {
+        // Samples along coordinate axes: cov = diag scaled.
+        let samples = vec![
+            vec![1.0, 0.0],
+            vec![-1.0, 0.0],
+            vec![0.0, 2.0],
+            vec![0.0, -2.0],
+        ];
+        let cov = covariance(&samples);
+        assert!((cov[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((cov[3] - 8.0 / 3.0).abs() < 1e-12);
+        assert!(cov[1].abs() < 1e-12);
+        assert!(cov[2].abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [3.0, 1.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn autocorrelation_of_alternating_sequence() {
+        let xs: Vec<f64> = (0..1000).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        assert!((autocorrelation(&xs, 0) - 1.0).abs() < 1e-12);
+        assert!((autocorrelation(&xs, 1) + 1.0).abs() < 1e-2);
+        assert!((autocorrelation(&xs, 2) - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn autocorrelation_of_iid_noise_decays() {
+        let mut rng = crate::math::rng::Pcg64::seeded(5);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.next_normal()).collect();
+        assert!(autocorrelation(&xs, 1).abs() < 0.03);
+        assert!(autocorrelation(&xs, 10).abs() < 0.03);
+    }
+}

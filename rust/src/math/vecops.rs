@@ -1,0 +1,148 @@
+//! Allocation-free f32 vector kernels for the sampler hot loop.
+//!
+//! Plain indexed loops over `&[f32]` — LLVM auto-vectorizes these to AVX on
+//! the target CPUs; the shapes are small enough (1e4–1e6 elements) that a
+//! hand-tiled version buys nothing (checked in the §Perf pass, see
+//! EXPERIMENTS.md).
+
+/// `y += a * x`
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..y.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// `y = a * x + b * y`
+#[inline]
+pub fn axpby(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..y.len() {
+        y[i] = a * x[i] + b * y[i];
+    }
+}
+
+/// `x *= a`
+#[inline]
+pub fn scale(a: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// `out = x - y`
+#[inline]
+pub fn sub(x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..out.len() {
+        out[i] = x[i] - y[i];
+    }
+}
+
+/// Dot product in f64 accumulation.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0f64;
+    for i in 0..x.len() {
+        acc += x[i] as f64 * y[i] as f64;
+    }
+    acc
+}
+
+/// Squared L2 norm (f64 accumulation).
+#[inline]
+pub fn norm_sq(x: &[f32]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean distance between two vectors.
+#[inline]
+pub fn l2_dist(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0f64;
+    for i in 0..x.len() {
+        let d = x[i] as f64 - y[i] as f64;
+        acc += d * d;
+    }
+    acc.sqrt()
+}
+
+/// Elementwise mean of several equal-length vectors into `out`.
+pub fn mean_of(vectors: &[&[f32]], out: &mut [f32]) {
+    assert!(!vectors.is_empty());
+    let n = out.len();
+    for v in vectors {
+        assert_eq!(v.len(), n, "mean_of length mismatch");
+    }
+    let inv = 1.0 / vectors.len() as f32;
+    out.fill(0.0);
+    for v in vectors {
+        for i in 0..n {
+            out[i] += v[i];
+        }
+    }
+    scale(inv, out);
+}
+
+/// Copy `src` into `dst` (same length).
+#[inline]
+pub fn copy(src: &[f32], dst: &mut [f32]) {
+    dst.copy_from_slice(src);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_works() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn axpby_works() {
+        let x = [1.0, 1.0];
+        let mut y = [2.0, 4.0];
+        axpby(3.0, &x, 0.5, &mut y);
+        assert_eq!(y, [4.0, 5.0]);
+    }
+
+    #[test]
+    fn dot_and_norms() {
+        let x = [3.0, 4.0];
+        assert_eq!(dot(&x, &x), 25.0);
+        assert_eq!(norm_sq(&x), 25.0);
+        assert_eq!(l2_dist(&x, &[0.0, 0.0]), 5.0);
+    }
+
+    #[test]
+    fn mean_of_vectors() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let mut out = [0.0f32; 2];
+        mean_of(&[&a, &b], &mut out);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn sub_works() {
+        let mut out = [0.0f32; 2];
+        sub(&[5.0, 1.0], &[2.0, 3.0], &mut out);
+        assert_eq!(out, [3.0, -2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mean_of_rejects_ragged() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32];
+        let mut out = [0.0f32; 2];
+        mean_of(&[&a, &b], &mut out);
+    }
+}

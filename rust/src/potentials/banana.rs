@@ -1,0 +1,97 @@
+//! Rosenbrock ("banana") potential:
+//! U(x, y) = (a − x)² / (2 σ²ₓ) + b (y − x²)².
+//!
+//! The classic curved-valley stress test for samplers — strong curvature
+//! and a narrow ridge make it a good diagnostic for whether elastic
+//! coupling distorts exploration of non-Gaussian geometry. `x_var` (σ²ₓ)
+//! controls how long the valley is; the classic Rosenbrock density uses 10.
+
+use super::Potential;
+use crate::math::rng::Pcg64;
+
+pub struct BananaPotential {
+    pub a: f64,
+    pub b: f64,
+    /// Variance scale of the x marginal (valley length).
+    pub x_var: f64,
+}
+
+impl BananaPotential {
+    pub fn new(a: f64, b: f64) -> Self {
+        Self { a, b, x_var: 10.0 }
+    }
+
+    /// The standard mild setting used by the diagnostics suite.
+    pub fn standard() -> Self {
+        Self::new(1.0, 5.0)
+    }
+
+    /// A short-valley variant (σ²ₓ = 1) that equilibrates quickly; used by
+    /// the cross-sampler agreement tests where run budget matters.
+    pub fn tight() -> Self {
+        Self { a: 1.0, b: 5.0, x_var: 1.0 }
+    }
+
+    fn grad_impl(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
+        let x = theta[0] as f64;
+        let y = theta[1] as f64;
+        let u = (self.a - x) * (self.a - x) / (2.0 * self.x_var)
+            + self.b * (y - x * x) * (y - x * x);
+        grad[0] = (-(self.a - x) / self.x_var - 4.0 * self.b * x * (y - x * x)) as f32;
+        grad[1] = (2.0 * self.b * (y - x * x)) as f32;
+        for g in grad[2..].iter_mut() {
+            *g = 0.0;
+        }
+        u
+    }
+}
+
+impl Potential for BananaPotential {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn stoch_grad(&self, theta: &[f32], grad: &mut [f32], _rng: &mut Pcg64) -> f64 {
+        self.grad_impl(theta, grad)
+    }
+
+    fn full_grad(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
+        self.grad_impl(theta, grad)
+    }
+
+    fn name(&self) -> &'static str {
+        "banana"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimum_at_valley_floor() {
+        let b = BananaPotential::standard();
+        let mut grad = [0.0f32; 2];
+        let u_min = b.full_grad(&[1.0, 1.0], &mut grad);
+        assert!(u_min.abs() < 1e-10);
+        assert!(grad[0].abs() < 1e-6 && grad[1].abs() < 1e-6);
+        assert!(b.full_potential(&[0.0, 0.0]) > u_min);
+    }
+
+    #[test]
+    fn finite_difference_check() {
+        let b = BananaPotential::new(1.5, 3.0);
+        let theta = [0.4f32, -0.7];
+        let mut grad = [0.0f32; 2];
+        b.full_grad(&theta, &mut grad);
+        let h = 1e-4f32;
+        for i in 0..2 {
+            let mut tp = theta;
+            tp[i] += h;
+            let mut tm = theta;
+            tm[i] -= h;
+            let fd = (b.full_potential(&tp) - b.full_potential(&tm)) / (2.0 * h as f64);
+            assert!((grad[i] as f64 - fd).abs() < 1e-2, "i={i} grad={} fd={fd}", grad[i]);
+        }
+    }
+}

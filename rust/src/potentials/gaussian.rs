@@ -1,0 +1,180 @@
+//! Multivariate Gaussian potential U(θ) = ½ θᵀ Σ⁻¹ θ (zero mean).
+//!
+//! The Fig. 1 toy target. Mirrors `python/compile/model.py::GAUSS_COV` so
+//! the native and XLA paths sample the identical distribution; provides an
+//! exact sampler (Cholesky) for ground-truth comparison and the analytic
+//! covariance for the KS / moment diagnostics.
+
+use super::Potential;
+use crate::math::linalg::Matrix;
+use crate::math::rng::Pcg64;
+
+pub struct GaussianPotential {
+    dim: usize,
+    prec: Matrix,
+    chol_cov: Matrix,
+    cov: Matrix,
+    /// Optional artificial gradient-noise std-dev, emulating minibatch
+    /// noise on this analytic target (the toy has no data).
+    pub grad_noise: f64,
+}
+
+impl GaussianPotential {
+    pub fn new(cov: Matrix) -> Self {
+        let prec = cov.inverse();
+        let chol_cov = cov.cholesky();
+        Self { dim: cov.d, prec, chol_cov, cov, grad_noise: 0.0 }
+    }
+
+    /// The paper's Fig. 1 target: the fixed mildly-correlated 2-D Gaussian
+    /// shared with the python model (`GAUSS_COV = [[1, .6], [.6, .8]]`).
+    pub fn fig1() -> Self {
+        Self::new(Matrix::from_rows(&[&[1.0, 0.6], &[0.6, 0.8]]))
+    }
+
+    /// Isotropic d-dimensional standard normal.
+    pub fn standard(dim: usize) -> Self {
+        Self::new(Matrix::identity(dim))
+    }
+
+    /// Add synthetic gradient noise (stand-in for minibatch noise V).
+    pub fn with_grad_noise(mut self, std: f64) -> Self {
+        self.grad_noise = std;
+        self
+    }
+
+    /// True covariance entry (row-major).
+    pub fn true_cov(&self) -> &Matrix {
+        &self.cov
+    }
+
+    /// Draw an exact sample (ground truth for diagnostics).
+    pub fn sample_exact(&self, rng: &mut Pcg64, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim);
+        let mut z = vec![0.0f64; self.dim];
+        for zi in z.iter_mut() {
+            *zi = rng.next_normal();
+        }
+        for i in 0..self.dim {
+            let mut acc = 0.0;
+            for j in 0..=i {
+                acc += self.chol_cov.get(i, j) * z[j];
+            }
+            out[i] = acc as f32;
+        }
+    }
+
+    fn grad_impl(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
+        let d = self.dim;
+        let live: Vec<f64> = theta[..d].iter().map(|&x| x as f64).collect();
+        let mut g = vec![0.0f64; d];
+        self.prec.matvec(&live, &mut g);
+        let mut u = 0.0;
+        for i in 0..d {
+            u += 0.5 * live[i] * g[i];
+            grad[i] = g[i] as f32;
+        }
+        for gi in grad[d..].iter_mut() {
+            *gi = 0.0;
+        }
+        u
+    }
+}
+
+impl Potential for GaussianPotential {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn stoch_grad(&self, theta: &[f32], grad: &mut [f32], rng: &mut Pcg64) -> f64 {
+        let u = self.grad_impl(theta, grad);
+        if self.grad_noise > 0.0 {
+            for g in grad[..self.dim].iter_mut() {
+                *g += (self.grad_noise * rng.next_normal()) as f32;
+            }
+        }
+        u
+    }
+
+    fn full_grad(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
+        self.grad_impl(theta, grad)
+    }
+
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::stats;
+
+    #[test]
+    fn gradient_is_precision_times_theta() {
+        let p = GaussianPotential::fig1();
+        let theta = [0.7f32, -1.2];
+        let mut grad = [0.0f32; 2];
+        let u = p.full_grad(&theta, &mut grad);
+        // Precision of [[1,.6],[.6,.8]] is 1/0.44 * [[.8,-.6],[-.6,1]].
+        let det = 0.44;
+        let want0 = (0.8 * 0.7 - 0.6 * -1.2) / det;
+        let want1 = (-0.6 * 0.7 + 1.0 * -1.2) / det;
+        assert!((grad[0] as f64 - want0).abs() < 1e-5);
+        assert!((grad[1] as f64 - want1).abs() < 1e-5);
+        let want_u = 0.5 * (0.7 * want0 + -1.2 * want1);
+        assert!((u - want_u).abs() < 1e-5);
+    }
+
+    #[test]
+    fn padded_tail_gets_zero_gradient() {
+        let p = GaussianPotential::fig1();
+        let theta = [0.5f32, 0.5, 99.0, -99.0];
+        let mut grad = [1.0f32; 4];
+        p.full_grad(&theta, &mut grad);
+        assert_eq!(&grad[2..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn exact_sampler_matches_covariance() {
+        let p = GaussianPotential::fig1();
+        let mut rng = Pcg64::seeded(31);
+        let mut samples = Vec::new();
+        let mut buf = [0.0f32; 2];
+        for _ in 0..60_000 {
+            p.sample_exact(&mut rng, &mut buf);
+            samples.push(vec![buf[0] as f64, buf[1] as f64]);
+        }
+        let cov = stats::covariance(&samples);
+        assert!((cov[0] - 1.0).abs() < 0.03, "{cov:?}");
+        assert!((cov[1] - 0.6).abs() < 0.03, "{cov:?}");
+        assert!((cov[3] - 0.8).abs() < 0.03, "{cov:?}");
+    }
+
+    #[test]
+    fn grad_noise_perturbs_stochastic_gradient() {
+        let p = GaussianPotential::fig1().with_grad_noise(1.0);
+        let mut rng = Pcg64::seeded(32);
+        let theta = [0.0f32, 0.0];
+        let mut g1 = [0.0f32; 2];
+        let mut g2 = [0.0f32; 2];
+        p.stoch_grad(&theta, &mut g1, &mut rng);
+        p.stoch_grad(&theta, &mut g2, &mut rng);
+        assert_ne!(g1, g2);
+        // Full gradient at 0 is exactly 0; noisy one is not.
+        assert!(g1[0] != 0.0 || g1[1] != 0.0);
+    }
+
+    #[test]
+    fn standard_normal_construction() {
+        let p = GaussianPotential::standard(5);
+        assert_eq!(p.dim(), 5);
+        let theta = [1.0f32; 5];
+        let mut grad = [0.0f32; 5];
+        let u = p.full_grad(&theta, &mut grad);
+        assert!((u - 2.5).abs() < 1e-6);
+        for g in grad {
+            assert!((g - 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Isotropic Gaussian mixture potential — the multimodal toy.
+//!
+//! U(θ) = −log Σₖ wₖ N(θ; μₖ, σ² I). Multiple chains + elastic coupling
+//! on a multimodal target is exactly the regime where the paper's Fig. 1
+//! intuition ("coherent exploration of high-density regions") is
+//! interesting; the ablation benches use this to study α's effect on mode
+//! coverage.
+
+use super::Potential;
+use crate::math::rng::Pcg64;
+
+pub struct MixturePotential {
+    dim: usize,
+    means: Vec<Vec<f64>>,
+    weights: Vec<f64>,
+    var: f64,
+}
+
+impl MixturePotential {
+    pub fn new(means: Vec<Vec<f64>>, weights: Vec<f64>, var: f64) -> Self {
+        assert!(!means.is_empty());
+        assert_eq!(means.len(), weights.len());
+        assert!(var > 0.0);
+        let dim = means[0].len();
+        for m in &means {
+            assert_eq!(m.len(), dim);
+        }
+        let total: f64 = weights.iter().sum();
+        let weights = weights.into_iter().map(|w| w / total).collect();
+        Self { dim, means, weights, var }
+    }
+
+    /// Symmetric 2-D bimodal target with modes at ±`sep`/2 on the x axis.
+    pub fn bimodal(sep: f64, var: f64) -> Self {
+        Self::new(
+            vec![vec![-sep / 2.0, 0.0], vec![sep / 2.0, 0.0]],
+            vec![0.5, 0.5],
+            var,
+        )
+    }
+
+    pub fn modes(&self) -> &[Vec<f64>] {
+        &self.means
+    }
+
+    /// Log-density (up to the normalization constant absorbed into U).
+    fn neg_log_density(&self, theta: &[f64]) -> (f64, Vec<f64>) {
+        // log-sum-exp over components, with responsibilities for the grad.
+        let mut logs = Vec::with_capacity(self.means.len());
+        for (mu, w) in self.means.iter().zip(&self.weights) {
+            let mut sq = 0.0;
+            for j in 0..self.dim {
+                let d = theta[j] - mu[j];
+                sq += d * d;
+            }
+            logs.push(w.ln() - 0.5 * sq / self.var);
+        }
+        let max = logs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let sum: f64 = logs.iter().map(|l| (l - max).exp()).sum();
+        let log_p = max + sum.ln();
+        let resp: Vec<f64> = logs.iter().map(|l| (l - log_p).exp()).collect();
+        (-log_p, resp)
+    }
+
+    fn grad_impl(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
+        let live: Vec<f64> = theta[..self.dim].iter().map(|&x| x as f64).collect();
+        let (u, resp) = self.neg_log_density(&live);
+        for j in 0..self.dim {
+            let mut g = 0.0;
+            for (k, mu) in self.means.iter().enumerate() {
+                g += resp[k] * (live[j] - mu[j]) / self.var;
+            }
+            grad[j] = g as f32;
+        }
+        for g in grad[self.dim..].iter_mut() {
+            *g = 0.0;
+        }
+        u
+    }
+}
+
+impl Potential for MixturePotential {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn stoch_grad(&self, theta: &[f32], grad: &mut [f32], _rng: &mut Pcg64) -> f64 {
+        self.grad_impl(theta, grad)
+    }
+
+    fn full_grad(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
+        self.grad_impl(theta, grad)
+    }
+
+    fn name(&self) -> &'static str {
+        "mixture"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_component_reduces_to_gaussian() {
+        let mix = MixturePotential::new(vec![vec![1.0, -1.0]], vec![1.0], 2.0);
+        let theta = [3.0f32, 0.0];
+        let mut grad = [0.0f32; 2];
+        mix.full_grad(&theta, &mut grad);
+        // grad = (theta - mu) / var
+        assert!((grad[0] - 1.0).abs() < 1e-6);
+        assert!((grad[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradient_vanishes_at_symmetric_midpoint() {
+        let mix = MixturePotential::bimodal(4.0, 1.0);
+        let theta = [0.0f32, 0.0];
+        let mut grad = [0.0f32; 2];
+        mix.full_grad(&theta, &mut grad);
+        assert!(grad[0].abs() < 1e-6, "{grad:?}");
+        assert!(grad[1].abs() < 1e-6, "{grad:?}");
+    }
+
+    #[test]
+    fn gradient_points_away_from_nearest_mode_uphill() {
+        let mix = MixturePotential::bimodal(4.0, 1.0);
+        // Right of the right mode at (2, 0): gradient of U is positive in x.
+        let theta = [3.0f32, 0.0];
+        let mut grad = [0.0f32; 2];
+        mix.full_grad(&theta, &mut grad);
+        assert!(grad[0] > 0.0);
+        // Between origin and right mode, pulled toward the mode.
+        let theta = [1.5f32, 0.0];
+        mix.full_grad(&theta, &mut grad);
+        assert!(grad[0] < 0.0);
+    }
+
+    #[test]
+    fn finite_difference_check() {
+        let mix = MixturePotential::new(
+            vec![vec![0.5, 1.0], vec![-1.0, 0.0], vec![2.0, -2.0]],
+            vec![0.2, 0.5, 0.3],
+            0.7,
+        );
+        let theta = [0.3f32, -0.4];
+        let mut grad = [0.0f32; 2];
+        mix.full_grad(&theta, &mut grad);
+        let h = 1e-4f32;
+        for i in 0..2 {
+            let mut tp = theta;
+            tp[i] += h;
+            let mut tm = theta;
+            tm[i] -= h;
+            let fd = (mix.full_potential(&tp) - mix.full_potential(&tm)) / (2.0 * h as f64);
+            assert!((grad[i] as f64 - fd).abs() < 1e-3, "i={i} grad={} fd={fd}", grad[i]);
+        }
+    }
+
+    #[test]
+    fn weights_are_normalized() {
+        let mix = MixturePotential::new(vec![vec![0.0], vec![1.0]], vec![2.0, 6.0], 1.0);
+        assert!((mix.weights[0] - 0.25).abs() < 1e-12);
+        assert!((mix.weights[1] - 0.75).abs() < 1e-12);
+    }
+}

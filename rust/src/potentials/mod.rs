@@ -1,0 +1,76 @@
+//! Target potentials U(θ): the distributions the samplers explore.
+//!
+//! The paper's three workloads plus extra analytic toys for diagnostics:
+//!
+//! * [`gaussian`] — the Fig. 1 correlated 2-D Gaussian (analytic truth);
+//! * [`mixture`], [`banana`] — multimodal / curved toys for validation;
+//! * [`logreg`] — Bayesian logistic regression on synthetic data;
+//! * [`nn`] — native-Rust Bayesian MLP and residual net with full
+//!   backprop (the pure-Rust twin of the JAX models, and the oracle the
+//!   XLA artifacts are integration-tested against);
+//! * [`xla`] — the production path: potentials backed by AOT-compiled
+//!   HLO artifacts executed through PJRT.
+
+pub mod banana;
+pub mod gaussian;
+pub mod logreg;
+pub mod mixture;
+pub mod nn;
+pub mod xla;
+
+use crate::math::rng::Pcg64;
+
+/// A (possibly stochastic) potential energy U(θ) with gradients.
+///
+/// `theta` buffers may be padded beyond [`Potential::dim`] (block padding
+/// for the XLA artifacts); implementations must ignore the tail and write
+/// zero gradient there. All methods take `&self` — implementations are
+/// shared across worker threads.
+pub trait Potential: Send + Sync {
+    /// Number of live parameters.
+    fn dim(&self) -> usize;
+
+    /// Buffer length the sampler should allocate (>= `dim`; artifacts pad
+    /// to the Pallas block size).
+    fn padded_dim(&self) -> usize {
+        self.dim()
+    }
+
+    /// Stochastic gradient ∇Ũ(θ) on a freshly drawn minibatch; returns Ũ.
+    /// `rng` drives minibatch selection so that every chain/worker has its
+    /// own independent data stream.
+    fn stoch_grad(&self, theta: &[f32], grad: &mut [f32], rng: &mut Pcg64) -> f64;
+
+    /// Exact full-data gradient ∇U(θ); returns U. Used by HMC and by
+    /// evaluation code.
+    fn full_grad(&self, theta: &[f32], grad: &mut [f32]) -> f64;
+
+    /// Full-data potential value.
+    fn full_potential(&self, theta: &[f32]) -> f64 {
+        let mut scratch = vec![0.0f32; theta.len()];
+        self.full_grad(theta, &mut scratch)
+    }
+
+    /// Held-out (test-set) NLL per example and accuracy, for classifier
+    /// targets; `None` for analytic toys.
+    fn eval_nll_acc(&self, _theta: &[f32]) -> Option<(f64, f64)> {
+        None
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::gaussian::GaussianPotential;
+    use super::*;
+
+    #[test]
+    fn default_full_potential_uses_full_grad() {
+        let p = GaussianPotential::fig1();
+        let theta = [1.0f32, 0.5];
+        let mut grad = [0.0f32; 2];
+        let u = p.full_grad(&theta, &mut grad);
+        assert!((p.full_potential(&theta) - u).abs() < 1e-12);
+    }
+}

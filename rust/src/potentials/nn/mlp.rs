@@ -1,0 +1,362 @@
+//! Native Bayesian MLP potential (the paper's MNIST target, Fig. 2 left).
+//!
+//! Architecture: `in_dim → hidden × depth (ReLU) → classes`, Gaussian
+//! prior λ‖θ‖², categorical likelihood — identical to
+//! `python/compile/model.py::MlpSpec` including the flat parameter layout,
+//! so a θ vector is interchangeable between this implementation and the
+//! XLA artifacts (cross-checked in `rust/tests/test_xla_roundtrip.rs`).
+
+use super::ops;
+use super::{layer_sizes, n_params, param_offsets, WEIGHT_DECAY};
+use crate::data::Dataset;
+use crate::math::rng::Pcg64;
+use crate::potentials::Potential;
+use crate::util::round_up;
+
+/// Pallas block length the artifacts pad to (manifest `meta.block`).
+pub const PAD_BLOCK: usize = 1024;
+
+pub struct NativeMlp {
+    pub dims: Vec<usize>,
+    shapes: Vec<((usize, usize), usize)>,
+    offsets: Vec<(usize, usize)>,
+    n: usize,
+    padded: usize,
+    train: Dataset,
+    test: Dataset,
+    pub batch: usize,
+    /// N in the N/|B| potential scaling (paper Sec. 1.1.1).
+    n_total: usize,
+}
+
+impl NativeMlp {
+    /// Build from train/test datasets. `hidden`/`depth` mirror MlpSpec.
+    pub fn new(train: Dataset, test: Dataset, hidden: usize, depth: usize, batch: usize) -> Self {
+        assert!(batch <= train.n);
+        let mut dims = vec![train.d];
+        dims.extend(std::iter::repeat(hidden).take(depth));
+        dims.push(train.classes);
+        let shapes = layer_sizes(&dims);
+        let offsets = param_offsets(&shapes);
+        let n = n_params(&shapes);
+        let n_total = train.n;
+        Self {
+            dims,
+            shapes,
+            offsets,
+            n,
+            padded: round_up(n, PAD_BLOCK),
+            train,
+            test,
+            batch,
+            n_total,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.n
+    }
+
+    pub fn train_size(&self) -> usize {
+        self.train.n
+    }
+
+    /// He-style Gaussian init of a padded flat parameter vector.
+    pub fn init_theta(&self, scale: f32, rng: &mut Pcg64) -> Vec<f32> {
+        let mut theta = vec![0.0f32; self.padded];
+        rng.fill_normal(&mut theta[..self.n]);
+        for t in theta[..self.n].iter_mut() {
+            *t *= scale;
+        }
+        theta
+    }
+
+    fn layer<'a>(&self, theta: &'a [f32], l: usize) -> (&'a [f32], &'a [f32]) {
+        let ((in_d, out_d), bias) = self.shapes[l];
+        let (w_off, b_off) = self.offsets[l];
+        (&theta[w_off..w_off + in_d * out_d], &theta[b_off..b_off + bias])
+    }
+
+    /// Forward pass: fills `acts[l]` with the post-activation of layer l
+    /// (last layer = raw logits). `acts` must have one buffer per layer of
+    /// size m * dims[l+1].
+    fn forward(&self, theta: &[f32], x: &[f32], m: usize, acts: &mut [Vec<f32>]) {
+        let layers = self.shapes.len();
+        debug_assert_eq!(acts.len(), layers);
+        for l in 0..layers {
+            let (in_d, out_d) = (self.dims[l], self.dims[l + 1]);
+            let (w, b) = self.layer(theta, l);
+            let (prev, rest) = acts.split_at_mut(l);
+            let input: &[f32] = if l == 0 { x } else { &prev[l - 1] };
+            let cur = &mut rest[0];
+            cur.resize(m * out_d, 0.0);
+            ops::gemm_nn(input, w, m, in_d, out_d, cur);
+            ops::add_bias(cur, b, m, out_d);
+            if l + 1 < layers {
+                ops::relu(cur);
+            }
+        }
+    }
+
+    /// Compute logits for arbitrary input (evaluation path).
+    pub fn logits(&self, theta: &[f32], x: &[f32], m: usize) -> Vec<f32> {
+        let mut acts: Vec<Vec<f32>> = vec![Vec::new(); self.shapes.len()];
+        self.forward(theta, x, m, &mut acts);
+        acts.pop().unwrap()
+    }
+
+    /// U~ and gradient on the given batch with likelihood scaling `scale`
+    /// (N/|B| for minibatches, 1 for full data). Gradient is accumulated
+    /// into `grad` (caller zeroes it, enabling chunked full-data passes).
+    fn grad_on_batch(
+        &self,
+        theta: &[f32],
+        x: &[f32],
+        y: &[i32],
+        m: usize,
+        scale: f64,
+        grad: &mut [f32],
+    ) -> f64 {
+        let layers = self.shapes.len();
+        let classes = *self.dims.last().unwrap();
+        let mut acts: Vec<Vec<f32>> = vec![Vec::new(); layers];
+        self.forward(theta, x, m, &mut acts);
+
+        // Loss + dlogits.
+        let mut dz = vec![0.0f32; m * classes];
+        let nll = ops::softmax_xent(&acts[layers - 1], y, m, classes, &mut dz);
+        let s = scale as f32;
+        for d in dz.iter_mut() {
+            *d *= s;
+        }
+
+        // Backward through the chain.
+        let mut dz_cur = dz;
+        for l in (0..layers).rev() {
+            let (in_d, out_d) = (self.dims[l], self.dims[l + 1]);
+            let (w_off, b_off) = self.offsets[l];
+            let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            // dW += inputᵀ dz ; db += colsum dz (accumulate into grad).
+            {
+                let mut dw = vec![0.0f32; in_d * out_d];
+                ops::gemm_tn(input, &dz_cur, m, in_d, out_d, &mut dw);
+                let gslice = &mut grad[w_off..w_off + in_d * out_d];
+                for (g, d) in gslice.iter_mut().zip(&dw) {
+                    *g += d;
+                }
+                let mut db = vec![0.0f32; out_d];
+                ops::bias_grad(&dz_cur, m, out_d, &mut db);
+                let bslice = &mut grad[b_off..b_off + out_d];
+                for (g, d) in bslice.iter_mut().zip(&db) {
+                    *g += d;
+                }
+            }
+            if l > 0 {
+                // dH = dz Wᵀ, masked by ReLU of the previous activation.
+                let (w, _) = self.layer(theta, l);
+                let mut dh = vec![0.0f32; m * in_d];
+                ops::gemm_nt(&dz_cur, w, m, out_d, in_d, &mut dh);
+                ops::relu_backward(&mut dh, &acts[l - 1]);
+                dz_cur = dh;
+            }
+        }
+        scale * nll
+    }
+
+    /// Add the Gaussian-prior term to U and grad.
+    fn add_prior(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
+        let mut sq = 0.0f64;
+        let wd = WEIGHT_DECAY as f32;
+        for i in 0..self.n {
+            sq += (theta[i] as f64) * (theta[i] as f64);
+            grad[i] += 2.0 * wd * theta[i];
+        }
+        WEIGHT_DECAY * sq
+    }
+
+    /// Batched evaluation over a dataset: (nll per example, accuracy).
+    fn eval_on(&self, theta: &[f32], data: &Dataset) -> (f64, f64) {
+        let chunk = 256.min(data.n);
+        let classes = data.classes;
+        let mut nll = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut dz = vec![0.0f32; chunk * classes];
+        let mut i = 0;
+        while i < data.n {
+            let m = chunk.min(data.n - i);
+            let x = &data.x[i * data.d..(i + m) * data.d];
+            let y = &data.y[i..i + m];
+            let logits = self.logits(theta, x, m);
+            dz.resize(m * classes, 0.0);
+            nll += ops::softmax_xent(&logits, y, m, classes, &mut dz);
+            correct += ops::accuracy(&logits, y, m, classes) * m as f64;
+            i += m;
+        }
+        (nll / data.n as f64, correct / data.n as f64)
+    }
+}
+
+impl Potential for NativeMlp {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn padded_dim(&self) -> usize {
+        self.padded
+    }
+
+    fn stoch_grad(&self, theta: &[f32], grad: &mut [f32], rng: &mut Pcg64) -> f64 {
+        let m = self.batch;
+        let mut x = vec![0.0f32; m * self.train.d];
+        let mut y = vec![0i32; m];
+        self.train.sample_batch(m, rng, &mut x, &mut y);
+        grad.fill(0.0);
+        let scale = self.n_total as f64 / m as f64;
+        let mut u = self.grad_on_batch(theta, &x, &y, m, scale, grad);
+        u += self.add_prior(theta, grad);
+        u
+    }
+
+    fn full_grad(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
+        grad.fill(0.0);
+        let chunk = 256.min(self.train.n);
+        let mut u = 0.0f64;
+        let mut i = 0;
+        while i < self.train.n {
+            let m = chunk.min(self.train.n - i);
+            let x = &self.train.x[i * self.train.d..(i + m) * self.train.d];
+            let y = &self.train.y[i..i + m];
+            u += self.grad_on_batch(theta, x, y, m, 1.0, grad);
+            i += m;
+        }
+        u += self.add_prior(theta, grad);
+        u
+    }
+
+    fn eval_nll_acc(&self, theta: &[f32]) -> Option<(f64, f64)> {
+        Some(self.eval_on(theta, &self.test))
+    }
+
+    fn name(&self) -> &'static str {
+        "mlp"
+    }
+}
+
+#[cfg(test)]
+pub fn tiny_mlp() -> NativeMlp {
+    use crate::data::synth_mnist;
+    let data = synth_mnist::generate_sized(80, 6, 4, 0.1, 11);
+    let (train, test) = data.split(60);
+    NativeMlp::new(train, test, 8, 2, 10)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_formula() {
+        let mlp = tiny_mlp();
+        // dims [36, 8, 8, 4]: 36*8+8 + 8*8+8 + 8*4+4
+        assert_eq!(mlp.n_params(), 36 * 8 + 8 + 8 * 8 + 8 + 8 * 4 + 4);
+        assert_eq!(mlp.padded_dim(), PAD_BLOCK);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let mlp = tiny_mlp();
+        let mut rng = Pcg64::seeded(41);
+        let theta = mlp.init_theta(0.3, &mut rng);
+        let mut grad = vec![0.0f32; mlp.padded_dim()];
+        let _ = mlp.full_grad(&theta, &mut grad);
+        let h = 1e-2f32;
+        // Spot-check a spread of live coordinates.
+        for &i in &[0usize, 7, 36 * 8 + 3, 36 * 8 + 8 + 10, mlp.n_params() - 1] {
+            let mut tp = theta.clone();
+            tp[i] += h;
+            let mut tm = theta.clone();
+            tm[i] -= h;
+            let fd = (mlp.full_potential(&tp) - mlp.full_potential(&tm)) / (2.0 * h as f64);
+            let rel = ((grad[i] as f64 - fd).abs()) / (1.0 + fd.abs());
+            assert!(rel < 5e-2, "i={i} grad={} fd={fd}", grad[i]);
+        }
+    }
+
+    #[test]
+    fn padded_tail_gradient_is_zero() {
+        let mlp = tiny_mlp();
+        let mut rng = Pcg64::seeded(42);
+        let theta = mlp.init_theta(0.3, &mut rng);
+        let mut grad = vec![1.0f32; mlp.padded_dim()];
+        mlp.stoch_grad(&theta, &mut grad, &mut rng);
+        assert!(grad[mlp.n_params()..].iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn stochastic_gradient_is_unbiased_estimate() {
+        // Mean of many stochastic grads ≈ full grad (same scaling).
+        let mlp = tiny_mlp();
+        let mut rng = Pcg64::seeded(43);
+        let theta = mlp.init_theta(0.2, &mut rng);
+        let n = mlp.padded_dim();
+        let mut full = vec![0.0f32; n];
+        mlp.full_grad(&theta, &mut full);
+        let mut acc = vec![0.0f64; n];
+        let reps = 600;
+        let mut g = vec![0.0f32; n];
+        for _ in 0..reps {
+            mlp.stoch_grad(&theta, &mut g, &mut rng);
+            for i in 0..n {
+                acc[i] += g[i] as f64;
+            }
+        }
+        // Compare cosine similarity of the averaged stochastic grad vs full.
+        let mut dot = 0.0;
+        let mut na = 0.0;
+        let mut nb = 0.0;
+        for i in 0..mlp.n_params() {
+            let a = acc[i] / reps as f64;
+            let b = full[i] as f64;
+            dot += a * b;
+            na += a * a;
+            nb += b * b;
+        }
+        let cos = dot / (na.sqrt() * nb.sqrt());
+        assert!(cos > 0.99, "cos={cos}");
+    }
+
+    #[test]
+    fn training_descends_and_improves_accuracy() {
+        let mlp = tiny_mlp();
+        let mut rng = Pcg64::seeded(44);
+        let mut theta = mlp.init_theta(0.3, &mut rng);
+        let n = mlp.padded_dim();
+        let mut grad = vec![0.0f32; n];
+        let (nll0, acc0) = mlp.eval_nll_acc(&theta).unwrap();
+        let lr = 1e-3f32; // scaled potential => large gradients
+        for _ in 0..800 {
+            mlp.stoch_grad(&theta, &mut grad, &mut rng);
+            for i in 0..n {
+                theta[i] -= lr * grad[i];
+            }
+        }
+        let (nll1, acc1) = mlp.eval_nll_acc(&theta).unwrap();
+        assert!(nll1 < nll0, "nll {nll0} -> {nll1}");
+        assert!(acc1 >= acc0, "acc {acc0} -> {acc1}");
+        assert!(acc1 > 0.5, "acc1={acc1}");
+    }
+
+    #[test]
+    fn potential_scaling_matches_paper_form() {
+        // stoch U~ should be ~N/B * batch-mean-nll + prior, i.e. about
+        // N * per-example-nll at init.
+        let mlp = tiny_mlp();
+        let mut rng = Pcg64::seeded(45);
+        let theta = mlp.init_theta(0.0, &mut rng); // zero weights
+        let mut grad = vec![0.0f32; mlp.padded_dim()];
+        let u = mlp.stoch_grad(&theta, &mut grad, &mut rng);
+        // Zero weights => uniform logits => nll = ln(4) per example.
+        let expect = mlp.train_size() as f64 * (4.0f64).ln();
+        assert!((u - expect).abs() / expect < 1e-5, "u={u} expect={expect}");
+    }
+}

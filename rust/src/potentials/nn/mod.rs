@@ -1,0 +1,63 @@
+//! Native-Rust Bayesian neural networks with full backprop.
+//!
+//! These are the pure-Rust twins of the JAX models in
+//! `python/compile/model.py`: identical architectures, identical flat
+//! parameter layout (row-major W then b, layer by layer), identical
+//! potential definition
+//!
+//!   U~(θ) = (N/|B|) Σ_{(x,y)∈B} −log p(y|x, θ) + λ‖θ‖²,  λ = 1e-5.
+//!
+//! They serve two roles: a fast native backend for the sampling
+//! experiments, and the cross-language oracle the XLA artifacts are
+//! integration-tested against (same θ ⇒ same U, same ∇U to f32 tolerance).
+
+pub mod mlp;
+pub mod ops;
+pub mod resnet;
+
+/// Gaussian-prior weight decay λ (matches `model.WEIGHT_DECAY`).
+pub const WEIGHT_DECAY: f64 = 1e-5;
+
+/// Shapes of one dense chain through `dims` (mirrors model.layer_sizes).
+pub fn layer_sizes(dims: &[usize]) -> Vec<((usize, usize), usize)> {
+    dims.windows(2).map(|w| ((w[0], w[1]), w[1])).collect()
+}
+
+/// Total parameter count for a list of ((in, out), bias) shapes.
+pub fn n_params(shapes: &[((usize, usize), usize)]) -> usize {
+    shapes.iter().map(|((i, o), b)| i * o + b).sum()
+}
+
+/// Offsets of each (W, b) pair in the flat vector.
+pub fn param_offsets(shapes: &[((usize, usize), usize)]) -> Vec<(usize, usize)> {
+    let mut offs = Vec::with_capacity(shapes.len());
+    let mut cursor = 0;
+    for ((i, o), b) in shapes {
+        let w_off = cursor;
+        cursor += i * o;
+        let b_off = cursor;
+        cursor += b;
+        offs.push((w_off, b_off));
+    }
+    offs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_sizes_and_counts() {
+        let shapes = layer_sizes(&[12, 8, 4]);
+        assert_eq!(shapes, vec![((12, 8), 8), ((8, 4), 4)]);
+        assert_eq!(n_params(&shapes), 12 * 8 + 8 + 8 * 4 + 4);
+    }
+
+    #[test]
+    fn offsets_are_contiguous() {
+        let shapes = layer_sizes(&[3, 2, 5]);
+        let offs = param_offsets(&shapes);
+        assert_eq!(offs[0], (0, 6));
+        assert_eq!(offs[1], (8, 18));
+    }
+}

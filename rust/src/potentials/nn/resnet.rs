@@ -1,0 +1,406 @@
+//! Native residual-network potential (the paper's CIFAR target, Fig. 2
+//! right): input projection → `blocks` residual blocks
+//! `h + W₂ relu(W₁ h)` (no batch-norm, matching the paper's removal of
+//! BN) → linear head. Mirrors `model.py::ResNetSpec` exactly, including
+//! the flat parameter layout, so θ vectors are interchangeable with the
+//! XLA artifacts.
+
+use super::ops;
+use super::{layer_sizes, n_params, param_offsets, WEIGHT_DECAY};
+use crate::data::Dataset;
+use crate::math::rng::Pcg64;
+use crate::potentials::nn::mlp::PAD_BLOCK;
+use crate::potentials::Potential;
+use crate::util::round_up;
+
+pub struct NativeResNet {
+    pub in_dim: usize,
+    pub width: usize,
+    pub blocks: usize,
+    pub classes: usize,
+    shapes: Vec<((usize, usize), usize)>,
+    offsets: Vec<(usize, usize)>,
+    n: usize,
+    padded: usize,
+    train: Dataset,
+    test: Dataset,
+    pub batch: usize,
+    n_total: usize,
+}
+
+impl NativeResNet {
+    pub fn new(train: Dataset, test: Dataset, width: usize, blocks: usize, batch: usize) -> Self {
+        let in_dim = train.d;
+        let classes = train.classes;
+        // Shape list mirrors ResNetSpec.shapes: proj, (W1, W2) per block, head.
+        let mut shapes = layer_sizes(&[in_dim, width]);
+        for _ in 0..blocks {
+            shapes.extend(layer_sizes(&[width, width]));
+            shapes.extend(layer_sizes(&[width, width]));
+        }
+        shapes.extend(layer_sizes(&[width, classes]));
+        let offsets = param_offsets(&shapes);
+        let n = n_params(&shapes);
+        let n_total = train.n;
+        Self {
+            in_dim,
+            width,
+            blocks,
+            classes,
+            shapes,
+            offsets,
+            n,
+            padded: round_up(n, PAD_BLOCK),
+            train,
+            test,
+            batch,
+            n_total,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.n
+    }
+
+    /// Weight-layer depth (2·blocks + 2); 15 blocks ⇒ 32 ≙ ResNet-32.
+    pub fn depth(&self) -> usize {
+        2 * self.blocks + 2
+    }
+
+    pub fn init_theta(&self, scale: f32, rng: &mut Pcg64) -> Vec<f32> {
+        let mut theta = vec![0.0f32; self.padded];
+        rng.fill_normal(&mut theta[..self.n]);
+        for t in theta[..self.n].iter_mut() {
+            *t *= scale;
+        }
+        theta
+    }
+
+    fn layer<'a>(&self, theta: &'a [f32], l: usize) -> (&'a [f32], &'a [f32]) {
+        let ((in_d, out_d), bias) = self.shapes[l];
+        let (w_off, b_off) = self.offsets[l];
+        (&theta[w_off..w_off + in_d * out_d], &theta[b_off..b_off + bias])
+    }
+
+    /// Forward pass storing the intermediates backprop needs:
+    /// `h[0]` = post-proj activation; per block k: `a[k]` = inner ReLU
+    /// activation, `h[k+1]` = block output; returns logits.
+    fn forward(
+        &self,
+        theta: &[f32],
+        x: &[f32],
+        m: usize,
+        h: &mut Vec<Vec<f32>>,
+        a: &mut Vec<Vec<f32>>,
+    ) -> Vec<f32> {
+        let w = self.width;
+        h.clear();
+        a.clear();
+        // Projection.
+        let (wp, bp) = self.layer(theta, 0);
+        let mut h0 = vec![0.0f32; m * w];
+        ops::gemm_nn(x, wp, m, self.in_dim, w, &mut h0);
+        ops::add_bias(&mut h0, bp, m, w);
+        ops::relu(&mut h0);
+        h.push(h0);
+        // Residual blocks.
+        for k in 0..self.blocks {
+            let (w1, b1) = self.layer(theta, 1 + 2 * k);
+            let (w2, b2) = self.layer(theta, 2 + 2 * k);
+            let prev = h.last().unwrap().clone();
+            let mut inner = vec![0.0f32; m * w];
+            ops::gemm_nn(&prev, w1, m, w, w, &mut inner);
+            ops::add_bias(&mut inner, b1, m, w);
+            ops::relu(&mut inner);
+            let mut out = vec![0.0f32; m * w];
+            ops::gemm_nn(&inner, w2, m, w, w, &mut out);
+            ops::add_bias(&mut out, b2, m, w);
+            for i in 0..m * w {
+                out[i] += prev[i]; // identity skip
+            }
+            a.push(inner);
+            h.push(out);
+        }
+        // Head.
+        let (wh, bh) = self.layer(theta, 1 + 2 * self.blocks);
+        let mut logits = vec![0.0f32; m * self.classes];
+        ops::gemm_nn(h.last().unwrap(), wh, m, w, self.classes, &mut logits);
+        ops::add_bias(&mut logits, bh, m, self.classes);
+        logits
+    }
+
+    pub fn logits(&self, theta: &[f32], x: &[f32], m: usize) -> Vec<f32> {
+        let mut h = Vec::new();
+        let mut a = Vec::new();
+        self.forward(theta, x, m, &mut h, &mut a)
+    }
+
+    fn grad_on_batch(
+        &self,
+        theta: &[f32],
+        x: &[f32],
+        y: &[i32],
+        m: usize,
+        scale: f64,
+        grad: &mut [f32],
+    ) -> f64 {
+        let w = self.width;
+        let mut h = Vec::new();
+        let mut a = Vec::new();
+        let logits = self.forward(theta, x, m, &mut h, &mut a);
+
+        let mut dlogits = vec![0.0f32; m * self.classes];
+        let nll = ops::softmax_xent(&logits, y, m, self.classes, &mut dlogits);
+        let s = scale as f32;
+        for d in dlogits.iter_mut() {
+            *d *= s;
+        }
+
+        // Head backward.
+        let head_l = 1 + 2 * self.blocks;
+        let (w_off, b_off) = self.offsets[head_l];
+        {
+            let mut dw = vec![0.0f32; w * self.classes];
+            ops::gemm_tn(h.last().unwrap(), &dlogits, m, w, self.classes, &mut dw);
+            for (g, d) in grad[w_off..w_off + w * self.classes].iter_mut().zip(&dw) {
+                *g += d;
+            }
+            let mut db = vec![0.0f32; self.classes];
+            ops::bias_grad(&dlogits, m, self.classes, &mut db);
+            for (g, d) in grad[b_off..b_off + self.classes].iter_mut().zip(&db) {
+                *g += d;
+            }
+        }
+        let (wh, _) = self.layer(theta, head_l);
+        let mut dh = vec![0.0f32; m * w];
+        ops::gemm_nt(&dlogits, wh, m, self.classes, w, &mut dh);
+
+        // Blocks backward (reverse order).
+        let mut dw_buf = vec![0.0f32; w * w];
+        let mut db_buf = vec![0.0f32; w];
+        for k in (0..self.blocks).rev() {
+            let (w1_l, w2_l) = (1 + 2 * k, 2 + 2 * k);
+            let inner = &a[k];
+            let prev = &h[k];
+            // out = prev + inner · W2 + b2 ; d(out) = dh.
+            let (w2_off, b2_off) = self.offsets[w2_l];
+            ops::gemm_tn(inner, &dh, m, w, w, &mut dw_buf);
+            for (g, d) in grad[w2_off..w2_off + w * w].iter_mut().zip(&dw_buf) {
+                *g += d;
+            }
+            ops::bias_grad(&dh, m, w, &mut db_buf);
+            for (g, d) in grad[b2_off..b2_off + w].iter_mut().zip(&db_buf) {
+                *g += d;
+            }
+            let (w2, _) = self.layer(theta, w2_l);
+            let mut da = vec![0.0f32; m * w];
+            ops::gemm_nt(&dh, w2, m, w, w, &mut da);
+            ops::relu_backward(&mut da, inner);
+            // inner = relu(prev · W1 + b1).
+            let (w1_off, b1_off) = self.offsets[w1_l];
+            ops::gemm_tn(prev, &da, m, w, w, &mut dw_buf);
+            for (g, d) in grad[w1_off..w1_off + w * w].iter_mut().zip(&dw_buf) {
+                *g += d;
+            }
+            ops::bias_grad(&da, m, w, &mut db_buf);
+            for (g, d) in grad[b1_off..b1_off + w].iter_mut().zip(&db_buf) {
+                *g += d;
+            }
+            // d(prev) = dh (skip) + da · W1ᵀ.
+            let (w1, _) = self.layer(theta, w1_l);
+            let mut dprev = vec![0.0f32; m * w];
+            ops::gemm_nt(&da, w1, m, w, w, &mut dprev);
+            for i in 0..m * w {
+                dh[i] += dprev[i];
+            }
+        }
+
+        // Projection backward: h[0] = relu(x · Wp + bp).
+        ops::relu_backward(&mut dh, &h[0]);
+        let (wp_off, bp_off) = self.offsets[0];
+        {
+            let mut dw = vec![0.0f32; self.in_dim * w];
+            ops::gemm_tn(x, &dh, m, self.in_dim, w, &mut dw);
+            for (g, d) in grad[wp_off..wp_off + self.in_dim * w].iter_mut().zip(&dw) {
+                *g += d;
+            }
+            ops::bias_grad(&dh, m, w, &mut db_buf);
+            for (g, d) in grad[bp_off..bp_off + w].iter_mut().zip(&db_buf) {
+                *g += d;
+            }
+        }
+        scale * nll
+    }
+
+    fn add_prior(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
+        let mut sq = 0.0f64;
+        let wd = WEIGHT_DECAY as f32;
+        for i in 0..self.n {
+            sq += (theta[i] as f64) * (theta[i] as f64);
+            grad[i] += 2.0 * wd * theta[i];
+        }
+        WEIGHT_DECAY * sq
+    }
+
+    fn eval_on(&self, theta: &[f32], data: &Dataset) -> (f64, f64) {
+        let chunk = 256.min(data.n);
+        let mut nll = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut i = 0;
+        let mut dz = Vec::new();
+        while i < data.n {
+            let m = chunk.min(data.n - i);
+            let x = &data.x[i * data.d..(i + m) * data.d];
+            let y = &data.y[i..i + m];
+            let logits = self.logits(theta, x, m);
+            dz.resize(m * self.classes, 0.0);
+            nll += ops::softmax_xent(&logits, y, m, self.classes, &mut dz);
+            correct += ops::accuracy(&logits, y, m, self.classes) * m as f64;
+            i += m;
+        }
+        (nll / data.n as f64, correct / data.n as f64)
+    }
+}
+
+impl Potential for NativeResNet {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn padded_dim(&self) -> usize {
+        self.padded
+    }
+
+    fn stoch_grad(&self, theta: &[f32], grad: &mut [f32], rng: &mut Pcg64) -> f64 {
+        let m = self.batch;
+        let mut x = vec![0.0f32; m * self.train.d];
+        let mut y = vec![0i32; m];
+        self.train.sample_batch(m, rng, &mut x, &mut y);
+        grad.fill(0.0);
+        let scale = self.n_total as f64 / m as f64;
+        let mut u = self.grad_on_batch(theta, &x, &y, m, scale, grad);
+        u += self.add_prior(theta, grad);
+        u
+    }
+
+    fn full_grad(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
+        grad.fill(0.0);
+        let chunk = 256.min(self.train.n);
+        let mut u = 0.0f64;
+        let mut i = 0;
+        while i < self.train.n {
+            let m = chunk.min(self.train.n - i);
+            let x = &self.train.x[i * self.train.d..(i + m) * self.train.d];
+            let y = &self.train.y[i..i + m];
+            u += self.grad_on_batch(theta, x, y, m, 1.0, grad);
+            i += m;
+        }
+        u += self.add_prior(theta, grad);
+        u
+    }
+
+    fn eval_nll_acc(&self, theta: &[f32]) -> Option<(f64, f64)> {
+        Some(self.eval_on(theta, &self.test))
+    }
+
+    fn name(&self) -> &'static str {
+        "resnet"
+    }
+}
+
+#[cfg(test)]
+pub fn tiny_resnet() -> NativeResNet {
+    use crate::data::synth_cifar;
+    let data = synth_cifar::generate(80, 0.2, 13);
+    let (train, test) = data.split(60);
+    NativeResNet::new(train, test, 8, 2, 10)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_and_depth() {
+        let net = tiny_resnet();
+        // proj 192*8+8, 2 blocks * 2*(8*8+8), head 8*10+10
+        assert_eq!(net.n_params(), 192 * 8 + 8 + 2 * 2 * (8 * 8 + 8) + 8 * 10 + 10);
+        assert_eq!(net.depth(), 6);
+        assert_eq!(net.padded_dim(), round_up(net.n_params(), PAD_BLOCK));
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let net = tiny_resnet();
+        let mut rng = Pcg64::seeded(51);
+        let theta = net.init_theta(0.25, &mut rng);
+        let mut grad = vec![0.0f32; net.padded_dim()];
+        net.full_grad(&theta, &mut grad);
+        let h = 1e-2f32;
+        // Indices spanning proj, block W1, block W2, head.
+        let probes = [
+            3usize,
+            192 * 8 + 2,                    // proj bias
+            192 * 8 + 8 + 5,                // block0 W1
+            192 * 8 + 8 + (8 * 8 + 8) + 9,  // block0 W2
+            net.n_params() - 3,             // head
+        ];
+        for &i in &probes {
+            let mut tp = theta.clone();
+            tp[i] += h;
+            let mut tm = theta.clone();
+            tm[i] -= h;
+            let fd = (net.full_potential(&tp) - net.full_potential(&tm)) / (2.0 * h as f64);
+            let rel = (grad[i] as f64 - fd).abs() / (1.0 + fd.abs());
+            assert!(rel < 5e-2, "i={i} grad={} fd={fd}", grad[i]);
+        }
+    }
+
+    #[test]
+    fn identity_skip_passes_signal_with_zero_block_weights() {
+        // Zero block weights => logits depend only on proj + head.
+        let net = tiny_resnet();
+        let mut rng = Pcg64::seeded(52);
+        let mut theta = net.init_theta(0.3, &mut rng);
+        // Zero out all block parameters.
+        let block_start = 192 * 8 + 8;
+        let block_len = 2 * 2 * (8 * 8 + 8);
+        for t in theta[block_start..block_start + block_len].iter_mut() {
+            *t = 0.0;
+        }
+        let x = &net.train.x[..net.train.d * 4];
+        let logits = net.logits(&theta, x, 4);
+        // Manually: h = relu(x Wp + bp); logits = h Wh + bh.
+        let (wp, bp) = net.layer(&theta, 0);
+        let mut h = vec![0.0f32; 4 * net.width];
+        ops::gemm_nn(x, wp, 4, net.in_dim, net.width, &mut h);
+        ops::add_bias(&mut h, bp, 4, net.width);
+        ops::relu(&mut h);
+        let (wh, bh) = net.layer(&theta, 1 + 2 * net.blocks);
+        let mut want = vec![0.0f32; 4 * net.classes];
+        ops::gemm_nn(&h, wh, 4, net.width, net.classes, &mut want);
+        ops::add_bias(&mut want, bh, 4, net.classes);
+        for (a, b) in logits.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn training_reduces_nll() {
+        let net = tiny_resnet();
+        let mut rng = Pcg64::seeded(53);
+        let mut theta = net.init_theta(0.2, &mut rng);
+        let n = net.padded_dim();
+        let mut grad = vec![0.0f32; n];
+        let (nll0, _) = net.eval_nll_acc(&theta).unwrap();
+        for _ in 0..200 {
+            net.stoch_grad(&theta, &mut grad, &mut rng);
+            for i in 0..n {
+                theta[i] -= 2e-4 * grad[i];
+            }
+        }
+        let (nll1, acc1) = net.eval_nll_acc(&theta).unwrap();
+        assert!(nll1 < nll0, "nll {nll0} -> {nll1}");
+        assert!(acc1 > 0.4, "acc={acc1}");
+    }
+}

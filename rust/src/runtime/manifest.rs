@@ -1,0 +1,195 @@
+//! Typed view of `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+/// One input or output tensor.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key)?.as_usize()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub preset: String,
+    pub block: usize,
+    pub scal_dim: usize,
+}
+
+fn parse_io(v: &Json) -> Result<IoSpec> {
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("io entry missing name"))?
+        .to_string();
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("io entry '{name}' missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in '{name}'")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = DType::parse(v.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?;
+    Ok(IoSpec { name, shape, dtype })
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Manifest> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {:?} (run `make artifacts`)", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let meta = root.get("meta").ok_or_else(|| anyhow!("manifest missing meta"))?;
+        let preset = meta.get("preset").and_then(Json::as_str).unwrap_or("?").to_string();
+        let block = meta.get("block").and_then(Json::as_usize).unwrap_or(1024);
+        let scal_dim = meta.get("scal_dim").and_then(Json::as_usize).unwrap_or(8);
+
+        let mut artifacts = BTreeMap::new();
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        for (name, entry) in arts {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact '{name}' missing file"))?
+                .to_string();
+            let inputs = entry
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact '{name}' missing inputs"))?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = entry
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact '{name}' missing outputs"))?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>>>()?;
+            let meta = entry
+                .get("meta")
+                .and_then(Json::as_obj)
+                .cloned()
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { name: name.clone(), file, inputs, outputs, meta },
+            );
+        }
+        Ok(Manifest { artifacts, preset, block, scal_dim })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "meta": {"preset": "test", "block": 1024, "scal_dim": 8},
+      "artifacts": {
+        "mlp_grad": {
+          "file": "mlp_grad.hlo.txt",
+          "inputs": [
+            {"name": "theta", "shape": [2048], "dtype": "f32"},
+            {"name": "x", "shape": [16, 784], "dtype": "f32"},
+            {"name": "y", "shape": [16], "dtype": "i32"}
+          ],
+          "outputs": [
+            {"name": "u", "shape": [], "dtype": "f32"},
+            {"name": "grad", "shape": [2048], "dtype": "f32"}
+          ],
+          "meta": {"n_params": 2000, "padded_n": 2048, "batch": 16}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.preset, "test");
+        assert_eq!(m.block, 1024);
+        let a = &m.artifacts["mlp_grad"];
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[1].elements(), 16 * 784);
+        assert_eq!(a.inputs[2].dtype, DType::I32);
+        assert_eq!(a.outputs[0].elements(), 1); // scalar: empty shape
+        assert_eq!(a.meta_usize("n_params"), Some(2000));
+    }
+
+    #[test]
+    fn scalar_shape_has_one_element() {
+        let io = IoSpec { name: "u".into(), shape: vec![], dtype: DType::F32 };
+        assert_eq!(io.elements(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"version":1,"meta":{},"artifacts":{"a":{}}}"#).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! `make artifacts` (python, build-time only) lowers the L2/L1 stack to
+//! `artifacts/*.hlo.txt` plus `manifest.json`; this module is the only
+//! consumer. Interchange is HLO **text** — xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids), while the text
+//! parser reassigns ids and round-trips cleanly.
+//!
+//! Flow: [`Engine::new`] → `PjRtClient::cpu()`; [`Engine::load`] →
+//! `HloModuleProto::from_text_file` → `client.compile` (cached per
+//! artifact name) → [`LoadedArtifact::run`] on the sampler hot path.
+
+pub mod manifest;
+
+use anyhow::{anyhow, bail, Context, Result};
+use manifest::{ArtifactSpec, DType, Manifest};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Argument to an artifact invocation.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> Arg<'a> {
+    fn len(&self) -> usize {
+        match self {
+            Arg::F32(s) => s.len(),
+            Arg::I32(s) => s.len(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            Arg::F32(_) => DType::F32,
+            Arg::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// A compiled artifact plus its manifest entry.
+///
+/// SAFETY of `Send + Sync`: `PjRtLoadedExecutable` wraps a PJRT CPU
+/// executable; the PJRT C API guarantees `Execute` is thread-safe, and the
+/// wrapper holds no interior mutability on the Rust side. Workers share
+/// one compiled executable and call [`run`](Self::run) concurrently.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+unsafe impl Send for LoadedArtifact {}
+unsafe impl Sync for LoadedArtifact {}
+
+impl LoadedArtifact {
+    /// Execute with shape/dtype validation against the manifest.
+    /// Returns one `Vec<f32>` per output (i32 outputs are not used by any
+    /// current artifact).
+    pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, io) in args.iter().zip(&self.spec.inputs) {
+            if arg.len() != io.elements() {
+                bail!(
+                    "artifact {} input '{}': expected {} elements ({:?}), got {}",
+                    self.spec.name,
+                    io.name,
+                    io.elements(),
+                    io.shape,
+                    arg.len()
+                );
+            }
+            if arg.dtype() != io.dtype {
+                bail!(
+                    "artifact {} input '{}': dtype mismatch (manifest {:?})",
+                    self.spec.name,
+                    io.name,
+                    io.dtype
+                );
+            }
+            let dims: Vec<i64> = io.shape.iter().map(|&d| d as i64).collect();
+            let lit = match arg {
+                Arg::F32(s) => xla::Literal::vec1(s),
+                Arg::I32(s) => xla::Literal::vec1(s),
+            };
+            let lit = if io.shape.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims).with_context(|| {
+                    format!("reshaping input '{}' to {:?}", io.name, io.shape)
+                })?
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact {}", self.spec.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = out.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {}: manifest promises {} outputs, module returned {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (part, io) in parts.iter().zip(&self.spec.outputs) {
+            let v: Vec<f32> = part
+                .to_vec()
+                .with_context(|| format!("reading output '{}'", io.name))?;
+            if v.len() != io.elements() {
+                bail!(
+                    "artifact {} output '{}': expected {} elements, got {}",
+                    self.spec.name,
+                    io.name,
+                    io.elements(),
+                    v.len()
+                );
+            }
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+}
+
+/// PJRT engine: client + manifest + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<LoadedArtifact>>>,
+}
+
+// SAFETY: see LoadedArtifact. PjRtClient (CPU) is thread-safe per the
+// PJRT C API contract; the cache is mutex-guarded.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Open the artifacts directory (reads `manifest.json`, creates the
+    /// PJRT CPU client).
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Locate the artifacts dir: explicit arg, `ECSGMCMC_ARTIFACTS`, or
+    /// `<repo>/artifacts` relative to the crate manifest.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("ECSGMCMC_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let repo = Path::new(env!("CARGO_MANIFEST_DIR"));
+        repo.join("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile-and-cache) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedArtifact>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling artifact '{name}': {e:?}"))?;
+        let loaded = Arc::new(LoadedArtifact { spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Pre-compile several artifacts (worker warm-up before timing starts).
+    pub fn preload(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine integration tests live in rust/tests/test_xla_roundtrip.rs
+    // (they need built artifacts); here we only cover Arg plumbing.
+
+    #[test]
+    fn arg_reports_len_and_dtype() {
+        let f = [1.0f32, 2.0];
+        let i = [1i32];
+        assert_eq!(Arg::F32(&f).len(), 2);
+        assert_eq!(Arg::I32(&i).len(), 1);
+        assert_eq!(Arg::F32(&f).dtype(), DType::F32);
+        assert_eq!(Arg::I32(&i).dtype(), DType::I32);
+    }
+
+    #[test]
+    fn default_dir_points_into_repo() {
+        std::env::remove_var("ECSGMCMC_ARTIFACTS");
+        let d = Engine::default_dir();
+        assert!(d.ends_with("artifacts"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Exact Hamiltonian Monte Carlo with Metropolis–Hastings correction
+//! (Duane et al. 1987, Neal 2010).
+//!
+//! Used as the gold-standard sampler on the analytic toys: it has no
+//! discretization bias, so the diagnostics suite can compare SGHMC / EC
+//! moments against both the analytic truth and HMC's empirical ones.
+//! Requires exact (full-data) potential and gradient — the toy potentials
+//! provide both.
+
+use crate::math::rng::Pcg64;
+use crate::math::vecops;
+use crate::potentials::Potential;
+
+pub struct HmcSampler {
+    pub eps: f64,
+    pub leapfrog_steps: usize,
+    pub accepted: u64,
+    pub proposed: u64,
+}
+
+impl HmcSampler {
+    pub fn new(eps: f64, leapfrog_steps: usize) -> Self {
+        Self { eps, leapfrog_steps, accepted: 0, proposed: 0 }
+    }
+
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.proposed as f64
+    }
+
+    /// One full HMC transition (leapfrog trajectory + MH accept/reject).
+    /// Returns the (possibly unchanged) potential value at the new state.
+    pub fn transition(
+        &mut self,
+        potential: &dyn Potential,
+        theta: &mut [f32],
+        rng: &mut Pcg64,
+    ) -> f64 {
+        let n = theta.len();
+        let mut p = vec![0.0f32; n];
+        rng.fill_normal(&mut p);
+
+        let mut grad = vec![0.0f32; n];
+        let u0 = potential.full_grad(theta, &mut grad);
+        let k0 = 0.5 * vecops::norm_sq(&p);
+
+        let mut prop = theta.to_vec();
+        let eps = self.eps as f32;
+
+        // Leapfrog: half-kick, L-1 (drift, kick), drift, half-kick.
+        vecops::axpy(-0.5 * eps, &grad, &mut p);
+        for step in 0..self.leapfrog_steps {
+            vecops::axpy(eps, &p, &mut prop);
+            let _ = potential.full_grad(&prop, &mut grad);
+            let kick = if step + 1 == self.leapfrog_steps { -0.5 * eps } else { -eps };
+            vecops::axpy(kick, &grad, &mut p);
+        }
+
+        let u1 = potential.full_grad(&prop, &mut grad);
+        let k1 = 0.5 * vecops::norm_sq(&p);
+
+        self.proposed += 1;
+        let log_accept = (u0 + k0) - (u1 + k1);
+        if log_accept >= 0.0 || rng.next_f64() < log_accept.exp() {
+            theta.copy_from_slice(&prop);
+            self.accepted += 1;
+            u1
+        } else {
+            u0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potentials::gaussian::GaussianPotential;
+
+    #[test]
+    fn samples_fig1_gaussian_exactly() {
+        let pot = GaussianPotential::fig1();
+        let mut hmc = HmcSampler::new(0.25, 8);
+        let mut rng = Pcg64::seeded(21);
+        let mut theta = vec![2.0f32, 2.0];
+        let mut samples: Vec<Vec<f64>> = Vec::new();
+        for t in 0..30_000 {
+            hmc.transition(&pot, &mut theta, &mut rng);
+            if t >= 2_000 {
+                samples.push(theta.iter().map(|&x| x as f64).collect());
+            }
+        }
+        assert!(hmc.acceptance_rate() > 0.8, "accept={}", hmc.acceptance_rate());
+        let cov = crate::math::stats::covariance(&samples);
+        // True covariance [[1, .6], [.6, .8]].
+        assert!((cov[0] - 1.0).abs() < 0.08, "cov00={}", cov[0]);
+        assert!((cov[1] - 0.6).abs() < 0.08, "cov01={}", cov[1]);
+        assert!((cov[3] - 0.8).abs() < 0.08, "cov11={}", cov[3]);
+        let mx = crate::math::stats::mean(&samples.iter().map(|s| s[0]).collect::<Vec<_>>());
+        assert!(mx.abs() < 0.06, "mean={mx}");
+    }
+
+    #[test]
+    fn energy_error_shrinks_with_step_size() {
+        // Acceptance should improve as eps decreases (symplectic integrator).
+        let pot = GaussianPotential::fig1();
+        let mut rng = Pcg64::seeded(22);
+        let mut rates = Vec::new();
+        for eps in [0.9, 0.3, 0.1] {
+            let mut hmc = HmcSampler::new(eps, 8);
+            let mut theta = vec![0.5f32, -0.5];
+            for _ in 0..2_000 {
+                hmc.transition(&pot, &mut theta, &mut rng);
+            }
+            rates.push(hmc.acceptance_rate());
+        }
+        assert!(rates[0] <= rates[1] + 0.05, "{rates:?}");
+        assert!(rates[1] <= rates[2] + 0.05, "{rates:?}");
+        assert!(rates[2] > 0.95, "{rates:?}");
+    }
+}

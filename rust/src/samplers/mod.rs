@@ -1,0 +1,186 @@
+//! Stochastic-gradient MCMC samplers (Layer-3 native implementations).
+//!
+//! The paper's dynamics, in the discretized forms it writes down:
+//!
+//! * [`sghmc`] — stochastic gradient Hamiltonian Monte Carlo, Eq. (4);
+//! * [`sgld`] — stochastic gradient Langevin dynamics (Welling & Teh),
+//!   which the paper notes also admits elastic coupling;
+//! * [`hmc`] — exact HMC with Metropolis–Hastings correction, the
+//!   gold-standard baseline for the analytic toys.
+//!
+//! Elastic coupling (Eq. 6) enters through the optional `coupling`
+//! argument of the step functions — the same code path serves standalone
+//! SGHMC (`coupling = None`) and EC workers, which is what makes the
+//! α = 0 ⇒ independent-chains decomposition of Eq. (5) testable bit-for-bit
+//! (see `rust/tests/test_ec_invariants.rs`).
+
+pub mod hmc;
+pub mod sgld;
+pub mod sghmc;
+
+use crate::math::rng::Pcg64;
+
+/// Which noise convention the EC dynamics use.
+///
+/// The paper's Eq. (6) writes the worker/center noise as N(0, 2ε²(V+C)) /
+/// N(0, 2ε²C) — *second order* in ε, consistent with V being the
+/// variance of the minibatch gradient noise that the ε∇Ũ term injects by
+/// itself (Chen et al. 2014 convention). On targets with **exact**
+/// gradients (the analytic toys) that leaves the dynamics under-noised
+/// and the stationary variance collapses by a factor of O(ε). We therefore
+/// support both conventions:
+///
+/// * [`NoiseMode::FirstOrder`] (default) — friction-matched first-order
+///   noise N(0, 2εV) as in Eq. (4), which yields the exact stationary
+///   distribution regardless of gradient-noise magnitude;
+/// * [`NoiseMode::PaperEq6`] — the literal Eq. (6) scales, appropriate
+///   when minibatch noise dominates (the NN experiments).
+///
+/// The discrepancy and this resolution are documented in DESIGN.md §5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NoiseMode {
+    #[default]
+    FirstOrder,
+    PaperEq6,
+}
+
+/// Hyperparameters shared by the SG-MCMC family.
+///
+/// The paper's Fig. 1 setting is `eps = 1e-2`, `M = I`, `C = V = I`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SghmcParams {
+    /// Step size ε.
+    pub eps: f64,
+    /// Isotropic inverse mass M⁻¹.
+    pub mass_inv: f64,
+    /// Gradient-noise / friction matrix V (isotropic scalar).
+    pub friction: f64,
+    /// Center-noise matrix C (isotropic scalar), Eq. (6).
+    pub center_friction: f64,
+    /// Variance of the injected noise; the paper uses V here too.
+    pub noise_var: f64,
+    /// Noise convention for the EC dynamics (see [`NoiseMode`]).
+    pub noise_mode: NoiseMode,
+}
+
+impl Default for SghmcParams {
+    fn default() -> Self {
+        Self {
+            eps: 1e-2,
+            mass_inv: 1.0,
+            friction: 1.0,
+            center_friction: 1.0,
+            noise_var: 1.0,
+            noise_mode: NoiseMode::FirstOrder,
+        }
+    }
+}
+
+impl SghmcParams {
+    /// Noise std-dev for plain SGHMC, Eq. (4): N(0, 2 ε V).
+    pub fn sghmc_noise_scale(&self) -> f64 {
+        (2.0 * self.eps * self.noise_var).sqrt()
+    }
+
+    /// Noise std-dev for an EC worker (Eq. 6; see [`NoiseMode`]).
+    pub fn ec_worker_noise_scale(&self) -> f64 {
+        match self.noise_mode {
+            NoiseMode::FirstOrder => (2.0 * self.eps * self.noise_var).sqrt(),
+            NoiseMode::PaperEq6 => {
+                (2.0 * self.eps * self.eps * (self.noise_var + self.center_friction)).sqrt()
+            }
+        }
+    }
+
+    /// Noise std-dev for the center variable (Eq. 6; see [`NoiseMode`]).
+    pub fn center_noise_scale(&self) -> f64 {
+        match self.noise_mode {
+            NoiseMode::FirstOrder => (2.0 * self.eps * self.center_friction).sqrt(),
+            NoiseMode::PaperEq6 => {
+                (2.0 * self.eps * self.eps * self.center_friction).sqrt()
+            }
+        }
+    }
+
+    /// Noise std-dev for SGLD: N(0, 2 ε).
+    pub fn sgld_noise_scale(&self) -> f64 {
+        (2.0 * self.eps).sqrt()
+    }
+}
+
+/// Position + momentum of one chain (flat f32, padded length allowed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainState {
+    pub theta: Vec<f32>,
+    pub p: Vec<f32>,
+}
+
+impl ChainState {
+    /// Zero-initialized state of dimension `n`.
+    pub fn zeros(n: usize) -> Self {
+        Self { theta: vec![0.0; n], p: vec![0.0; n] }
+    }
+
+    /// Gaussian-initialized position (scale σ), zero momentum.
+    pub fn init_gaussian(n: usize, sigma: f32, rng: &mut Pcg64) -> Self {
+        let mut theta = vec![0.0f32; n];
+        rng.fill_normal(&mut theta);
+        for t in theta.iter_mut() {
+            *t *= sigma;
+        }
+        Self { theta, p: vec![0.0; n] }
+    }
+
+    /// Start all chains from the same point (the paper's Fig. 1 setup).
+    pub fn from_theta(theta: Vec<f32>) -> Self {
+        let n = theta.len();
+        Self { theta, p: vec![0.0; n] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.theta.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noise_scales_match_paper_formulas() {
+        let p = SghmcParams {
+            eps: 0.01,
+            mass_inv: 1.0,
+            friction: 2.0,
+            center_friction: 3.0,
+            noise_var: 2.0,
+            noise_mode: NoiseMode::PaperEq6,
+        };
+        assert!((p.sghmc_noise_scale() - (2.0 * 0.01 * 2.0f64).sqrt()).abs() < 1e-15);
+        assert!(
+            (p.ec_worker_noise_scale() - (2.0 * 0.01f64 * 0.01 * 5.0).sqrt()).abs() < 1e-15
+        );
+        assert!((p.center_noise_scale() - (2.0 * 0.01f64 * 0.01 * 3.0).sqrt()).abs() < 1e-15);
+        assert!((p.sgld_noise_scale() - 0.02f64.sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn first_order_mode_matches_eq4_scale() {
+        let p = SghmcParams { eps: 0.01, noise_var: 2.0, ..Default::default() };
+        assert_eq!(p.noise_mode, NoiseMode::FirstOrder);
+        assert!((p.ec_worker_noise_scale() - p.sghmc_noise_scale()).abs() < 1e-15);
+        assert!((p.center_noise_scale() - (2.0 * 0.01f64).sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn chain_state_inits() {
+        let mut rng = Pcg64::seeded(0);
+        let z = ChainState::zeros(4);
+        assert_eq!(z.theta, vec![0.0; 4]);
+        let g = ChainState::init_gaussian(1000, 2.0, &mut rng);
+        let var: f64 =
+            g.theta.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / 1000.0;
+        assert!((var - 4.0).abs() < 0.6, "var={var}");
+        assert_eq!(g.p, vec![0.0; 1000]);
+    }
+}

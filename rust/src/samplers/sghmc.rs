@@ -1,0 +1,276 @@
+//! SGHMC stepper: the discretized dynamics of paper Eqs. (4) and (6).
+//!
+//! One struct serves three roles:
+//!
+//! * plain SGHMC (Eq. 4) with `coupling = None`;
+//! * an elastically-coupled worker (Eq. 6 rows 1+3) with
+//!   `coupling = Some((center, alpha))`;
+//! * the center variable itself (Eq. 6 rows 2+4) via [`center_step`] —
+//!   structurally the same update with the worker-mean as the attractor
+//!   and C in place of V.
+//!
+//! All updates are simultaneous-form exactly as the paper writes them:
+//! both rows read time-t state. Buffers are preallocated; the hot loop is
+//! allocation-free.
+
+use super::{ChainState, SghmcParams};
+use crate::math::rng::Pcg64;
+
+/// Reusable stepper holding the noise buffer.
+pub struct SghmcStepper {
+    pub params: SghmcParams,
+    noise: Vec<f32>,
+    /// Zero the noise tail beyond `live_dim` (padding hygiene for
+    /// artifact-backed potentials whose vectors are block-padded).
+    live_dim: usize,
+}
+
+impl SghmcStepper {
+    pub fn new(params: SghmcParams, dim: usize) -> Self {
+        Self { params, noise: vec![0.0; dim], live_dim: dim }
+    }
+
+    /// Restrict noise injection to the first `live` coordinates.
+    pub fn with_live_dim(mut self, live: usize) -> Self {
+        assert!(live <= self.noise.len());
+        self.live_dim = live;
+        self
+    }
+
+    /// Advance one SGHMC / EC-worker step.
+    ///
+    /// * `grad` — ∇Ũ(θ_t), computed by the caller *before* this call;
+    /// * `coupling` — `Some((center, alpha))` adds the elastic force of
+    ///   Eq. (6); the noise scale switches to the Eq. (6) form as well.
+    pub fn step(
+        &mut self,
+        state: &mut ChainState,
+        grad: &[f32],
+        coupling: Option<(&[f32], f64)>,
+        rng: &mut Pcg64,
+    ) {
+        let n = state.theta.len();
+        debug_assert_eq!(grad.len(), n);
+        debug_assert_eq!(self.noise.len(), n);
+        let eps = self.params.eps as f32;
+        let minv = self.params.mass_inv as f32;
+        let fric = self.params.friction as f32;
+        let nscale = match coupling {
+            None => self.params.sghmc_noise_scale() as f32,
+            Some(_) => self.params.ec_worker_noise_scale() as f32,
+        };
+
+        rng.fill_normal(&mut self.noise[..self.live_dim]);
+        if self.live_dim < n {
+            self.noise[self.live_dim..].fill(0.0);
+        }
+
+        match coupling {
+            None => {
+                for i in 0..n {
+                    let theta = state.theta[i];
+                    let p = state.p[i];
+                    // Eq. (4), simultaneous form.
+                    state.theta[i] = theta + eps * minv * p;
+                    state.p[i] =
+                        p - eps * grad[i] - eps * fric * minv * p + nscale * self.noise[i];
+                }
+            }
+            Some((center, alpha)) => {
+                debug_assert_eq!(center.len(), n);
+                let alpha = alpha as f32;
+                for i in 0..n {
+                    let theta = state.theta[i];
+                    let p = state.p[i];
+                    // Eq. (6) rows 1 + 3.
+                    state.theta[i] = theta + eps * minv * p;
+                    state.p[i] = p - eps * grad[i] - eps * fric * minv * p
+                        - eps * alpha * (theta - center[i])
+                        + nscale * self.noise[i];
+                }
+            }
+        }
+    }
+}
+
+/// Center-variable stepper (Eq. 6 rows 2+4). `state.theta` is c,
+/// `state.p` is r; `theta_mean` is (1/K) Σᵢ θᵢ.
+pub struct CenterStepper {
+    pub params: SghmcParams,
+    pub alpha: f64,
+    noise: Vec<f32>,
+    live_dim: usize,
+}
+
+impl CenterStepper {
+    pub fn new(params: SghmcParams, alpha: f64, dim: usize) -> Self {
+        Self { params, alpha, noise: vec![0.0; dim], live_dim: dim }
+    }
+
+    pub fn with_live_dim(mut self, live: usize) -> Self {
+        assert!(live <= self.noise.len());
+        self.live_dim = live;
+        self
+    }
+
+    pub fn step(&mut self, state: &mut ChainState, theta_mean: &[f32], rng: &mut Pcg64) {
+        let n = state.theta.len();
+        debug_assert_eq!(theta_mean.len(), n);
+        let eps = self.params.eps as f32;
+        let minv = self.params.mass_inv as f32;
+        let cfric = self.params.center_friction as f32;
+        let alpha = self.alpha as f32;
+        let nscale = self.params.center_noise_scale() as f32;
+
+        rng.fill_normal(&mut self.noise[..self.live_dim]);
+        if self.live_dim < n {
+            self.noise[self.live_dim..].fill(0.0);
+        }
+        for i in 0..n {
+            let c = state.theta[i];
+            let r = state.p[i];
+            state.theta[i] = c + eps * minv * r;
+            state.p[i] = r - eps * cfric * minv * r - eps * alpha * (c - theta_mean[i])
+                + nscale * self.noise[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::vecops;
+
+    fn params() -> SghmcParams {
+        SghmcParams { eps: 1e-2, ..Default::default() }
+    }
+
+    /// Hand-computed single step against the Eq. (4) formulas.
+    #[test]
+    fn single_step_matches_formula() {
+        let mut p = params();
+        p.noise_var = 0.0; // deterministic
+        let mut stepper = SghmcStepper::new(p, 2);
+        let mut state = ChainState { theta: vec![1.0, -2.0], p: vec![0.5, 0.25] };
+        let grad = [10.0f32, -4.0];
+        let mut rng = Pcg64::seeded(0);
+        stepper.step(&mut state, &grad, None, &mut rng);
+        let eps = 0.01f32;
+        // theta' = theta + eps * p
+        assert!((state.theta[0] - (1.0 + eps * 0.5)).abs() < 1e-7);
+        assert!((state.theta[1] - (-2.0 + eps * 0.25)).abs() < 1e-7);
+        // p' = p - eps*grad - eps*V*p  (noise off)
+        assert!((state.p[0] - (0.5 - eps * 10.0 - eps * 0.5)).abs() < 1e-7);
+        assert!((state.p[1] - (0.25 + eps * 4.0 - eps * 0.25)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn coupling_pulls_toward_center() {
+        let mut p = params();
+        p.noise_var = 0.0;
+        p.center_friction = 0.0;
+        let mut stepper = SghmcStepper::new(p, 1);
+        let center = [0.0f32];
+        let grad = [0.0f32];
+        let mut rng = Pcg64::seeded(1);
+        let mut state = ChainState { theta: vec![5.0], p: vec![0.0] };
+        stepper.step(&mut state, &grad, Some((&center, 10.0)), &mut rng);
+        // Momentum must have moved toward the center (negative).
+        assert!(state.p[0] < 0.0, "p={}", state.p[0]);
+        assert!((state.p[0] - (-0.01 * 10.0 * 5.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_alpha_coupling_equals_plain_step_with_ec_noise_off() {
+        let mut prm = params();
+        prm.noise_var = 0.0;
+        prm.center_friction = 0.0; // makes both noise scales zero
+        let grad = [3.0f32, -1.0];
+        let center = [100.0f32, -50.0];
+        let mut a = ChainState { theta: vec![1.0, 2.0], p: vec![0.1, -0.2] };
+        let mut b = a.clone();
+        let mut rng1 = Pcg64::seeded(2);
+        let mut rng2 = Pcg64::seeded(2);
+        SghmcStepper::new(prm, 2).step(&mut a, &grad, None, &mut rng1);
+        SghmcStepper::new(prm, 2).step(&mut b, &grad, Some((&center, 0.0)), &mut rng2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn live_dim_zeroes_padding_noise() {
+        let prm = params();
+        let mut stepper = SghmcStepper::new(prm, 8).with_live_dim(3);
+        let mut state = ChainState::zeros(8);
+        let grad = [0.0f32; 8];
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..10 {
+            stepper.step(&mut state, &grad, None, &mut rng);
+        }
+        // Tail coordinates received no noise and no gradient: still zero.
+        assert_eq!(&state.theta[3..], &[0.0; 5]);
+        assert_eq!(&state.p[3..], &[0.0; 5]);
+        // Live coordinates moved.
+        assert!(vecops::norm_sq(&state.theta[..3]) > 0.0);
+    }
+
+    #[test]
+    fn center_stepper_tracks_mean() {
+        let prm = SghmcParams { eps: 0.05, center_friction: 0.0, ..params() };
+        let mut cs = CenterStepper::new(prm, 4.0, 1);
+        let mut state = ChainState::zeros(1);
+        let mean = [2.0f32];
+        let mut rng = Pcg64::seeded(4);
+        for _ in 0..4000 {
+            cs.step(&mut state, &mean, &mut rng);
+        }
+        // Harmonic oscillator around the mean with no damping... add tiny
+        // friction via params to settle instead:
+        let prm2 = SghmcParams { eps: 0.05, center_friction: 1.0, ..params() };
+        let mut cs2 = CenterStepper::new(prm2, 4.0, 1);
+        let mut s2 = ChainState::zeros(1);
+        let mut acc = 0.0f64;
+        let mut count = 0usize;
+        for t in 0..8000 {
+            cs2.step(&mut s2, &mean, &mut rng);
+            if t >= 2000 {
+                acc += s2.theta[0] as f64;
+                count += 1;
+            }
+        }
+        // The center is an OU-like process around the worker mean: its
+        // time-average must settle at 2 (first-order noise keeps finite
+        // jitter, so average rather than point-check).
+        let avg = acc / count as f64;
+        assert!((avg - 2.0).abs() < 0.25, "avg c={avg}");
+        let _ = state;
+    }
+
+    /// Stationary check: sampling a 1-D standard normal via exact gradients.
+    #[test]
+    fn samples_standard_normal() {
+        let prm = SghmcParams { eps: 0.05, ..Default::default() };
+        let mut stepper = SghmcStepper::new(prm, 1);
+        let mut state = ChainState { theta: vec![3.0], p: vec![0.0] };
+        let mut rng = Pcg64::seeded(5);
+        let mut sum = 0.0f64;
+        let mut sum_sq = 0.0f64;
+        let total = 200_000;
+        let burn = 2_000;
+        let mut grad = [0.0f32];
+        for t in 0..total {
+            grad[0] = state.theta[0]; // dU/dtheta for U = theta^2/2
+            stepper.step(&mut state, &grad, None, &mut rng);
+            if t >= burn {
+                let x = state.theta[0] as f64;
+                sum += x;
+                sum_sq += x * x;
+            }
+        }
+        let n = (total - burn) as f64;
+        let mean = sum / n;
+        let var = sum_sq / n - mean * mean;
+        assert!(mean.abs() < 0.1, "mean={mean}");
+        // Discretization inflates variance by O(eps); allow 15%.
+        assert!((var - 1.0).abs() < 0.15, "var={var}");
+    }
+}

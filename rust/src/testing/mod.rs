@@ -1,0 +1,163 @@
+//! Property-testing micro-framework (proptest is not available offline).
+//!
+//! Usage:
+//!
+//! ```no_run
+//! // (no_run: doctest executables miss the libxla_extension rpath on
+//! // this image; the module's unit tests exercise the same API.)
+//! use ecsgmcmc::testing::{Prop, gens};
+//!
+//! Prop::new("abs is non-negative")
+//!     .cases(200)
+//!     .run(|rng| {
+//!         let x = gens::f64_range(rng, -1e6, 1e6);
+//!         assert!(x.abs() >= 0.0);
+//!     });
+//! ```
+//!
+//! Each case draws from a seeded [`Pcg64`](crate::math::rng::Pcg64); on
+//! failure the panic message reports the case seed so the exact input can
+//! be replayed with `.replay(seed)`. Set `ECSGMCMC_PROP_CASES` to scale the
+//! case count globally (CI can crank it up).
+
+use crate::math::rng::Pcg64;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// A named property with a case budget.
+pub struct Prop {
+    name: String,
+    cases: usize,
+    base_seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &str) -> Prop {
+        // Derive a stable per-property base seed from the name so distinct
+        // properties explore distinct streams.
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        Prop { name: name.to_string(), cases: 100, base_seed: h }
+    }
+
+    /// Set the number of cases (default 100, scaled by ECSGMCMC_PROP_CASES).
+    pub fn cases(mut self, n: usize) -> Prop {
+        self.cases = n;
+        self
+    }
+
+    fn effective_cases(&self) -> usize {
+        match std::env::var("ECSGMCMC_PROP_CASES").ok().and_then(|v| v.parse::<usize>().ok()) {
+            Some(n) => n,
+            None => self.cases,
+        }
+    }
+
+    /// Run the property; panics with the failing case seed on error.
+    pub fn run<F: FnMut(&mut Pcg64)>(&self, mut body: F) {
+        for case in 0..self.effective_cases() {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let mut rng = Pcg64::seeded(seed);
+            let result = catch_unwind(AssertUnwindSafe(|| body(&mut rng)));
+            if let Err(payload) = result {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| payload.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                panic!(
+                    "property '{}' failed on case {case} (replay seed {seed}): {msg}",
+                    self.name
+                );
+            }
+        }
+    }
+
+    /// Re-run a single failing case by seed (for debugging).
+    pub fn replay<F: FnMut(&mut Pcg64)>(&self, seed: u64, mut body: F) {
+        let mut rng = Pcg64::seeded(seed);
+        body(&mut rng);
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use crate::math::rng::Pcg64;
+
+    pub fn usize_range(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_range(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+        lo + rng.next_f64() * (hi - lo)
+    }
+
+    /// Log-uniform positive value in [lo, hi].
+    pub fn f64_log_range(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi >= lo);
+        (f64_range(rng, lo.ln(), hi.ln())).exp()
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        let mut v = vec![0f32; n];
+        rng.fill_normal(&mut v);
+        v
+    }
+
+    /// Vector of uniforms in [lo, hi).
+    pub fn uniform_vec(rng: &mut Pcg64, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| lo + rng.next_f32() * (hi - lo)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        Prop::new("trivially true").cases(25).run(|_| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            Prop::new("always fails").cases(3).run(|_| panic!("boom"));
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn cases_are_deterministic_across_runs() {
+        let mut first = Vec::new();
+        Prop::new("collect").cases(5).run(|rng| first.push(rng.next_u64()));
+        let mut second = Vec::new();
+        Prop::new("collect").cases(5).run(|rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        Prop::new("gen bounds").cases(50).run(|rng| {
+            let u = gens::usize_range(rng, 3, 9);
+            assert!((3..=9).contains(&u));
+            let f = gens::f64_range(rng, -2.0, 5.0);
+            assert!((-2.0..5.0).contains(&f));
+            let lg = gens::f64_log_range(rng, 1e-6, 1e3);
+            assert!((1e-6..=1e3).contains(&lg));
+            let v = gens::uniform_vec(rng, 4, 0.0, 1.0);
+            assert!(v.iter().all(|&x| (0.0..1.0).contains(&x)));
+        });
+    }
+}

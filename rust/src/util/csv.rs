@@ -1,0 +1,99 @@
+//! Tiny CSV writer for experiment traces (figure data series).
+//!
+//! Output is consumed by plotting scripts / spreadsheets; fields containing
+//! commas/quotes/newlines are quoted per RFC 4180.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter<W: Write> {
+    out: W,
+    columns: usize,
+}
+
+impl CsvWriter<BufWriter<File>> {
+    /// Create a CSV file and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = BufWriter::new(File::create(path)?);
+        Self::new(file, header)
+    }
+}
+
+impl<W: Write> CsvWriter<W> {
+    pub fn new(mut out: W, header: &[&str]) -> std::io::Result<Self> {
+        write_row_raw(&mut out, header)?;
+        Ok(Self { out, columns: header.len() })
+    }
+
+    /// Write one row of string fields; panics if the arity differs from the
+    /// header (programming error, not runtime input).
+    pub fn row(&mut self, fields: &[&str]) -> std::io::Result<()> {
+        assert_eq!(fields.len(), self.columns, "csv row arity mismatch");
+        write_row_raw(&mut self.out, fields)
+    }
+
+    /// Convenience: write a row of f64 values with full precision.
+    pub fn row_f64(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|v| format!("{v}")).collect();
+        let refs: Vec<&str> = strs.iter().map(|s| s.as_str()).collect();
+        self.row(&refs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn write_row_raw<W: Write>(out: &mut W, fields: &[&str]) -> std::io::Result<()> {
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            out.write_all(b",")?;
+        }
+        if f.contains([',', '"', '\n']) {
+            let escaped = f.replace('"', "\"\"");
+            write!(out, "\"{escaped}\"")?;
+        } else {
+            out.write_all(f.as_bytes())?;
+        }
+    }
+    out.write_all(b"\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut buf = Vec::new();
+        let mut w = CsvWriter::new(&mut buf, &["a", "b"]).unwrap();
+        w.row(&["1", "x,y"]).unwrap();
+        w.row_f64(&[0.5, 2.0]).unwrap();
+        drop(w);
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n0.5,2\n");
+    }
+
+    #[test]
+    fn escapes_quotes() {
+        let mut buf = Vec::new();
+        let mut w = CsvWriter::new(&mut buf, &["v"]).unwrap();
+        w.row(&["he said \"hi\""]).unwrap();
+        drop(w);
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn panics_on_arity_mismatch() {
+        let mut buf = Vec::new();
+        let mut w = CsvWriter::new(&mut buf, &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one"]);
+    }
+}

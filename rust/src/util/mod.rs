@@ -1,0 +1,28 @@
+//! General-purpose substrates built from scratch (no crates.io access on
+//! this image beyond `xla`/`anyhow`): JSON, CSV, logging, timing.
+
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod timer;
+
+/// Round `n` up to the next multiple of `m` (`m > 0`).
+pub fn round_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(1023, 1024), 1024);
+        assert_eq!(round_up(1025, 1024), 2048);
+    }
+}

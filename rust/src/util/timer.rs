@@ -1,0 +1,66 @@
+//! Wall-clock helpers: stopwatch and human-readable duration formatting.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch for experiment phases.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Format a duration like `1.23ms`, `4.5s`, `2m03s`.
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        let mins = (s / 60.0).floor() as u64;
+        format!("{mins}m{:02.0}s", s - 60.0 * mins as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_scales() {
+        assert_eq!(human_duration(Duration::from_micros(120)), "120.0us");
+        assert_eq!(human_duration(Duration::from_millis(42)), "42.00ms");
+        assert_eq!(human_duration(Duration::from_secs(3)), "3.00s");
+        assert_eq!(human_duration(Duration::from_secs(185)), "3m05s");
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let e1 = sw.restart();
+        assert!(e1.as_secs_f64() > 0.0);
+        assert!(sw.elapsed_secs() < e1.as_secs_f64() + 1.0);
+    }
+}

@@ -1,0 +1,88 @@
+//! CLI integration tests: the binary's argument surface and config files.
+
+use ecsgmcmc::cli::args::Parsed;
+use ecsgmcmc::config::{RunConfig, Scheme};
+
+fn argv(s: &str) -> Vec<String> {
+    s.split_whitespace().map(String::from).collect()
+}
+
+#[test]
+fn help_and_version_paths_exit_zero() {
+    assert_eq!(ecsgmcmc::cli::run(argv("help")).unwrap(), 0);
+    assert_eq!(ecsgmcmc::cli::run(argv("version")).unwrap(), 0);
+    assert_eq!(ecsgmcmc::cli::run(argv("definitely-not-a-command")).unwrap(), 2);
+}
+
+#[test]
+fn sample_requires_config() {
+    assert!(ecsgmcmc::cli::run(argv("sample")).is_err());
+}
+
+#[test]
+fn experiment_requires_id() {
+    assert!(ecsgmcmc::cli::run(argv("experiment")).is_err());
+    assert_eq!(ecsgmcmc::cli::run(argv("experiment --id NOPE")).unwrap(), 2);
+}
+
+#[test]
+fn fig1_experiment_runs_end_to_end() {
+    let out = std::env::temp_dir().join("ecsgmcmc-test-fig1");
+    let args = vec![
+        "experiment".to_string(),
+        "--id".to_string(),
+        "FIG1".to_string(),
+        "--out".to_string(),
+        out.to_string_lossy().to_string(),
+    ];
+    assert_eq!(ecsgmcmc::cli::run(args).unwrap(), 0);
+    assert!(out.join("fig1_traces.csv").exists());
+    let text = std::fs::read_to_string(out.join("fig1_traces.csv")).unwrap();
+    assert!(text.starts_with("scheme,chain,step,x,y"));
+    assert!(text.lines().count() > 500); // 6 traces * 100 steps + header
+}
+
+#[test]
+fn sample_command_with_config_file() {
+    let dir = std::env::temp_dir().join("ecsgmcmc-test-cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("toy.toml");
+    std::fs::write(
+        &cfg_path,
+        "[run]\nscheme = \"sghmc\"\ntarget = \"gaussian\"\nsteps = 200\n[sampler]\neps = 0.05\n",
+    )
+    .unwrap();
+    let args = vec![
+        "sample".to_string(),
+        "--config".to_string(),
+        cfg_path.to_string_lossy().to_string(),
+        "--seed".to_string(),
+        "9".to_string(),
+    ];
+    assert_eq!(ecsgmcmc::cli::run(args).unwrap(), 0);
+}
+
+#[test]
+fn shipped_configs_parse_and_validate() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut found = 0;
+    for entry in std::fs::read_dir(&dir).expect("configs/ dir exists") {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e == "toml").unwrap_or(false) {
+            let cfg = RunConfig::from_file(&path)
+                .unwrap_or_else(|e| panic!("{path:?} invalid: {e:#}"));
+            cfg.validate().unwrap();
+            found += 1;
+        }
+    }
+    assert!(found >= 4, "expected shipped configs, found {found}");
+}
+
+#[test]
+fn parsed_args_accessors() {
+    let p = Parsed::parse(argv("sample --config x.toml --seed 3 --fast")).unwrap();
+    assert_eq!(p.command, "sample");
+    assert_eq!(p.opt("config"), Some("x.toml"));
+    assert!(p.has_flag("fast"));
+    let _ = Scheme::from_str("ec").unwrap();
+}

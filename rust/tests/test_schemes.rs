@@ -1,0 +1,268 @@
+//! Cross-scheme integration tests: every parallelization scheme samples
+//! the same analytic target and must agree with it (Prop. 3.1 for EC, the
+//! standard guarantees for the others), plus end-to-end runs of the
+//! experiment harnesses at smoke scale.
+
+use ecsgmcmc::config::RunConfig;
+use ecsgmcmc::coordinator::engine::{NativeEngine, StepKind, WorkerEngine};
+use ecsgmcmc::coordinator::single::run_single;
+use ecsgmcmc::coordinator::{
+    EcConfig, EcCoordinator, IndependentCoordinator, NaiveConfig, NaiveCoordinator, RunOptions,
+};
+use ecsgmcmc::diagnostics::{ess, ks, moments, to_f64_samples};
+use ecsgmcmc::experiments::{easgd_cmp, fig1, fig2, Scale};
+use ecsgmcmc::potentials::banana::BananaPotential;
+use ecsgmcmc::potentials::gaussian::GaussianPotential;
+use ecsgmcmc::potentials::mixture::MixturePotential;
+use ecsgmcmc::potentials::Potential;
+use ecsgmcmc::samplers::hmc::HmcSampler;
+use ecsgmcmc::samplers::SghmcParams;
+use std::sync::Arc;
+
+const TARGET_MEAN: [f64; 2] = [0.0, 0.0];
+const TARGET_COV: [f64; 4] = [1.0, 0.6, 0.6, 0.8];
+
+fn gauss() -> Arc<dyn Potential> {
+    Arc::new(GaussianPotential::fig1())
+}
+
+fn params() -> SghmcParams {
+    SghmcParams { eps: 0.05, ..Default::default() }
+}
+
+fn check_moments(label: &str, thetas: &[Vec<f32>], tol_mean: f64, tol_cov: f64) {
+    let samples = to_f64_samples(thetas, 2);
+    let m = moments(&samples);
+    assert!(
+        m.mean_error(&TARGET_MEAN) < tol_mean,
+        "{label}: mean {:?}",
+        m.mean
+    );
+    assert!(
+        m.cov_error(&TARGET_COV) < tol_cov,
+        "{label}: cov {:?}",
+        m.cov
+    );
+}
+
+fn sample_opts(burn: usize) -> RunOptions {
+    RunOptions { thin: 5, burn_in: burn, log_every: 10_000, ..Default::default() }
+}
+
+#[test]
+fn all_schemes_sample_the_same_gaussian() {
+    // 1. Sequential SGHMC.
+    let engine = Box::new(NativeEngine::new(gauss(), params(), StepKind::Sghmc));
+    let r = run_single(engine, 60_000, sample_opts(3_000), 1);
+    check_moments("sghmc", &r.thetas(), 0.12, 0.25);
+
+    // 2. Independent chains.
+    let engines: Vec<Box<dyn WorkerEngine>> = (0..4)
+        .map(|_| {
+            Box::new(NativeEngine::new(gauss(), params(), StepKind::Sghmc))
+                as Box<dyn WorkerEngine>
+        })
+        .collect();
+    let r = IndependentCoordinator::new(25_000, sample_opts(3_000)).run(engines, 2);
+    check_moments("independent", &r.thetas(), 0.12, 0.25);
+
+    // 3. Synchronous parallel (s=1, O=K).
+    let r = NaiveCoordinator::new(
+        NaiveConfig::synchronous(4, 40_000, sample_opts(3_000)),
+        params(),
+        gauss(),
+    )
+    .run(3);
+    check_moments("synchronous", &r.thetas(), 0.12, 0.25);
+
+    // 4. Naive async with mild staleness. Stale gradients act as a
+    // feedback delay, so the step size must be well inside the stable
+    // region (eps * mean_staleness * curvature << 1); at eps = 0.05 the
+    // delayed dynamics visibly inflate the covariance — which is exactly
+    // the Sec. 2 phenomenon (see bench_staleness). Sample at eps = 0.01.
+    let r = NaiveCoordinator::new(
+        NaiveConfig {
+            workers: 4,
+            collect: 1,
+            sync_every: 2,
+            steps: 60_000,
+            synchronous: false,
+            opts: sample_opts(5_000),
+            ..Default::default()
+        },
+        SghmcParams { eps: 0.01, ..Default::default() },
+        gauss(),
+    )
+    .run(4);
+    check_moments("naive_async(s=2)", &r.thetas(), 0.15, 0.35);
+
+    // 5. EC-SGHMC.
+    let r = EcCoordinator::new(
+        EcConfig {
+            workers: 4,
+            alpha: 1.0,
+            sync_every: 2,
+            steps: 25_000,
+            opts: sample_opts(3_000),
+            ..Default::default()
+        },
+        params(),
+        gauss(),
+    )
+    .run(5);
+    check_moments("ec_sghmc", &r.thetas(), 0.15, 0.3);
+}
+
+#[test]
+fn ec_marginals_pass_ks_against_analytic_normal() {
+    let r = EcCoordinator::new(
+        EcConfig {
+            workers: 4,
+            alpha: 0.5,
+            sync_every: 2,
+            steps: 30_000,
+            opts: RunOptions { thin: 20, burn_in: 4_000, log_every: 10_000, ..Default::default() },
+            ..Default::default()
+        },
+        params(),
+        gauss(),
+    )
+    .run(7);
+    let samples = to_f64_samples(&r.thetas(), 2);
+    // Marginal 0 is N(0, 1); use ESS-deflated n for the p-value.
+    let xs: Vec<f64> = samples.iter().map(|s| s[0]).collect();
+    let d = ks::ks_statistic(&xs, 0.0, 1.0);
+    let n_eff = ess::ess(&xs);
+    let p = ks::ks_pvalue(d, n_eff);
+    assert!(p > 1e-3, "KS reject: d={d:.4} n_eff={n_eff:.0} p={p:.2e}");
+}
+
+#[test]
+fn ec_agrees_with_exact_hmc_on_banana() {
+    // Gold-standard cross-check on a non-Gaussian target: compare EC
+    // moments against exact-MH HMC moments on the short-valley banana
+    // (the classic sigma_x^2 = 10 valley needs far more steps than a test
+    // budget allows; curvature structure is identical).
+    let banana = Arc::new(BananaPotential::tight());
+    let mut hmc = HmcSampler::new(0.08, 10);
+    let mut rng = ecsgmcmc::math::rng::Pcg64::seeded(8);
+    let mut theta = vec![1.0f32, 1.0];
+    let mut hmc_samples = Vec::new();
+    for t in 0..60_000 {
+        hmc.transition(banana.as_ref(), &mut theta, &mut rng);
+        if t >= 6_000 && t % 4 == 0 {
+            hmc_samples.push(vec![theta[0] as f64, theta[1] as f64]);
+        }
+    }
+    assert!(hmc.acceptance_rate() > 0.7, "hmc accept {}", hmc.acceptance_rate());
+    let hmc_m = moments(&hmc_samples);
+
+    // Matched friction/noise keep the stationary distribution exact; the
+    // curvature near |x| ~ 2 demands a small step.
+    let ec_params =
+        SghmcParams { eps: 0.01, friction: 3.0, noise_var: 3.0, ..Default::default() };
+    let r = EcCoordinator::new(
+        EcConfig {
+            workers: 4,
+            alpha: 0.3,
+            sync_every: 2,
+            steps: 120_000,
+            opts: RunOptions { thin: 10, burn_in: 12_000, log_every: 30_000, ..Default::default() },
+            ..Default::default()
+        },
+        ec_params,
+        banana.clone() as Arc<dyn Potential>,
+    )
+    .run(9);
+    let ec_m = moments(&to_f64_samples(&r.thetas(), 2));
+    // SGHMC at finite eps carries discretization bias and mixes slowly
+    // along the curved valley, so agreement is approximate: means within a
+    // few tenths, variance scale within 2x (the y marginal is chi^2-like
+    // heavy-tailed, hence the wider band there).
+    assert!(
+        (ec_m.mean[0] - hmc_m.mean[0]).abs() < 0.35,
+        "mean x: ec {:?} hmc {:?}",
+        ec_m.mean,
+        hmc_m.mean
+    );
+    assert!(
+        (ec_m.mean[1] - hmc_m.mean[1]).abs() < 0.9,
+        "mean y: ec {:?} hmc {:?}",
+        ec_m.mean,
+        hmc_m.mean
+    );
+    let ratio = ec_m.cov[0] / hmc_m.cov[0];
+    assert!((0.4..2.2).contains(&ratio), "x-var ratio {ratio} (ec {:?} hmc {:?})", ec_m.cov, hmc_m.cov);
+}
+
+#[test]
+fn mixture_modes_both_visited_by_ec() {
+    let mix = Arc::new(MixturePotential::bimodal(3.0, 0.5));
+    let r = EcCoordinator::new(
+        EcConfig {
+            workers: 4,
+            alpha: 0.2, // weak coupling: let chains split across modes
+            sync_every: 4,
+            steps: 30_000,
+            opts: RunOptions {
+                thin: 10,
+                burn_in: 2_000,
+                log_every: 10_000,
+                same_init: false,
+                init_sigma: 2.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        SghmcParams { eps: 0.03, ..Default::default() },
+        mix as Arc<dyn Potential>,
+    )
+    .run(11);
+    let samples = to_f64_samples(&r.thetas(), 2);
+    let left = samples.iter().filter(|s| s[0] < 0.0).count();
+    let frac = left as f64 / samples.len() as f64;
+    assert!(
+        (0.15..=0.85).contains(&frac),
+        "mode coverage unbalanced: left frac {frac}"
+    );
+}
+
+#[test]
+fn fig1_harness_shapes() {
+    let r = fig1::run(50, 2);
+    assert_eq!(r.sghmc_traces.len(), 2);
+    assert_eq!(r.ec_traces.len(), 4);
+    assert!(r.mean_potential.iter().all(|u| u.is_finite()));
+}
+
+#[test]
+fn fig2_fast_run_produces_descending_nll() {
+    let series = fig2::run_mnist(Scale::Fast, 3);
+    assert_eq!(series.len(), 5);
+    for s in &series {
+        assert!(!s.ys.is_empty(), "{} empty", s.label);
+        assert!(s.ys.iter().all(|y| y.is_finite()), "{} NaN", s.label);
+    }
+    // At least the EC s=2 run should improve over its start.
+    let ec2 = &series[2];
+    assert!(ec2.last_y() < ec2.ys[0] * 1.05, "{:?}", ec2.ys);
+}
+
+#[test]
+fn sec5_fast_run_is_sane() {
+    let r = easgd_cmp::run(Scale::Fast, 4);
+    for s in &r.series {
+        assert!(s.last_y() < s.ys[0], "{} did not descend", s.label);
+    }
+}
+
+#[test]
+fn config_to_run_roundtrip_gaussian() {
+    let cfg = RunConfig::from_toml_str(
+        "[run]\nscheme = \"ec\"\ntarget = \"gaussian\"\nsteps = 300\n[coordinator]\nworkers = 2\n",
+    )
+    .unwrap();
+    let r = ecsgmcmc::cli::commands::run_configured(&cfg).unwrap();
+    assert_eq!(r.chains.len(), 2);
+    assert!(r.metrics.steps_per_sec > 0.0);
+}

@@ -1,0 +1,341 @@
+//! Integration tests of the full AOT round-trip: python-lowered HLO
+//! artifacts loaded and executed through PJRT from Rust, cross-checked
+//! against analytic values and the native-Rust oracles.
+//!
+//! Requires `make artifacts` (skips gracefully with a visible marker when
+//! artifacts are absent, so `cargo test` stays green pre-AOT).
+
+use ecsgmcmc::data::{synth_cifar, synth_mnist};
+use ecsgmcmc::math::rng::Pcg64;
+use ecsgmcmc::potentials::nn::mlp::NativeMlp;
+use ecsgmcmc::potentials::nn::resnet::NativeResNet;
+use ecsgmcmc::potentials::xla::{pack_scal, XlaFusedSampler, XlaPotential};
+use ecsgmcmc::potentials::Potential;
+use ecsgmcmc::runtime::{Arg, Engine};
+use ecsgmcmc::samplers::sghmc::SghmcStepper;
+use ecsgmcmc::samplers::{ChainState, SghmcParams};
+
+fn engine() -> Option<Engine> {
+    match Engine::new(Engine::default_dir()) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIPPED (no artifacts: {err}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn gaussian_grad_artifact_matches_analytic() {
+    let Some(engine) = engine() else { return };
+    let art = engine.load("gaussian_grad").unwrap();
+    let theta = [0.7f32, -1.2];
+    let outs = art.run(&[Arg::F32(&theta)]).unwrap();
+    let (u, grad) = (&outs[0], &outs[1]);
+    // Precision of [[1,.6],[.6,.8]] = 1/0.44 [[.8,-.6],[-.6,1]].
+    let det = 0.44f64;
+    let want0 = (0.8 * 0.7 + 0.6 * 1.2) / det;
+    let want1 = (-0.6 * 0.7 - 1.2) / det;
+    assert!((grad[0] as f64 - want0).abs() < 1e-4, "g0={} want {want0}", grad[0]);
+    assert!((grad[1] as f64 - want1).abs() < 1e-4, "g1={} want {want1}", grad[1]);
+    let want_u = 0.5 * (0.7 * want0 - 1.2 * want1);
+    assert!((u[0] as f64 - want_u).abs() < 1e-4);
+}
+
+#[test]
+fn sghmc_step_artifact_matches_native_stepper() {
+    let Some(engine) = engine() else { return };
+    let art = engine.load("sghmc_step_mlp").unwrap();
+    let n = art.spec.meta_usize("padded_n").unwrap();
+    let mut rng = Pcg64::seeded(5);
+    let mut theta = vec![0.0f32; n];
+    let mut p = vec![0.0f32; n];
+    let mut grad = vec![0.0f32; n];
+    let mut noise = vec![0.0f32; n];
+    rng.fill_normal(&mut theta);
+    rng.fill_normal(&mut p);
+    rng.fill_normal(&mut grad);
+    rng.fill_normal(&mut noise);
+
+    let params = SghmcParams { eps: 0.01, ..Default::default() };
+    let scal = pack_scal(params.eps, 1.0, 1.0, 0.0, params.sghmc_noise_scale());
+    let outs = art
+        .run(&[Arg::F32(&scal), Arg::F32(&theta), Arg::F32(&p), Arg::F32(&grad), Arg::F32(&noise)])
+        .unwrap();
+
+    // Native step with the identical precomputed noise: replicate the
+    // formula directly (the stepper draws its own noise, so compare math).
+    let eps = 0.01f32;
+    let nscale = params.sghmc_noise_scale() as f32;
+    for i in 0..n {
+        let want_theta = theta[i] + eps * p[i];
+        let want_p = p[i] - eps * grad[i] - eps * p[i] + nscale * noise[i];
+        assert!((outs[0][i] - want_theta).abs() < 1e-5, "i={i}");
+        assert!((outs[1][i] - want_p).abs() < 1e-5, "i={i}");
+    }
+}
+
+#[test]
+fn ec_step_artifact_applies_elastic_force() {
+    let Some(engine) = engine() else { return };
+    let art = engine.load("ec_step_mlp").unwrap();
+    let n = art.spec.meta_usize("padded_n").unwrap();
+    let theta = vec![1.0f32; n];
+    let p = vec![0.0f32; n];
+    let grad = vec![0.0f32; n];
+    let center = vec![0.0f32; n];
+    let noise = vec![0.0f32; n];
+    let alpha = 2.0;
+    let scal = pack_scal(0.01, 1.0, 0.0, alpha, 0.0);
+    let outs = art
+        .run(&[
+            Arg::F32(&scal),
+            Arg::F32(&theta),
+            Arg::F32(&p),
+            Arg::F32(&grad),
+            Arg::F32(&center),
+            Arg::F32(&noise),
+        ])
+        .unwrap();
+    // p' = -eps * alpha * (theta - c) = -0.02
+    for i in 0..n {
+        assert!((outs[1][i] + 0.02).abs() < 1e-6, "p'[{i}]={}", outs[1][i]);
+        assert!((outs[0][i] - 1.0).abs() < 1e-6); // theta' = theta (p was 0)
+    }
+}
+
+#[test]
+fn mlp_grad_artifact_matches_native_oracle() {
+    let Some(engine) = engine() else { return };
+    let art = engine.load("mlp_grad").unwrap();
+    let batch = art.spec.meta_usize("batch").unwrap();
+    let hidden = art.spec.meta_usize("hidden").unwrap();
+    let n_total = art.spec.meta_usize("n_total").unwrap();
+    let n_params = art.spec.meta_usize("n_params").unwrap();
+    let padded = art.spec.meta_usize("padded_n").unwrap();
+
+    // Same data, same theta for both paths.
+    let data = synth_mnist::generate(n_total, 0.15, 99);
+    let native = NativeMlp::new(data.clone(), data.clone(), hidden, 2, batch);
+    assert_eq!(native.n_params(), n_params, "architectures diverged");
+
+    let mut rng = Pcg64::seeded(6);
+    let theta = native.init_theta(0.1, &mut rng);
+    let mut x = vec![0.0f32; batch * data.d];
+    let mut y = vec![0i32; batch];
+    data.sample_batch(batch, &mut rng, &mut x, &mut y);
+
+    let outs = art.run(&[Arg::F32(&theta), Arg::F32(&x), Arg::I32(&y)]).unwrap();
+    let (u_xla, g_xla) = (outs[0][0] as f64, &outs[1]);
+
+    // Native gradient on the same batch via grad_on_batch equivalent:
+    // reconstruct by calling logits + manual loss is private; instead use
+    // the scaled potential identity with a single-batch dataset.
+    let single = ecsgmcmc::data::Dataset::new(x.clone(), y.clone(), data.d, data.classes);
+    let native_single = NativeMlp::new(single, data.clone(), hidden, 2, batch);
+    // full_grad over exactly this batch computes sum nll + prior; the
+    // artifact computes (N/B) sum nll + prior. Compare after rescaling the
+    // likelihood part.
+    let mut g_full = vec![0.0f32; padded];
+    let u_full = native_single.full_grad(&theta, &mut g_full);
+    let scale = n_total as f64 / batch as f64;
+    // prior term
+    let wd = 1e-5f64;
+    let prior: f64 = theta[..n_params].iter().map(|&t| (t as f64) * (t as f64)).sum::<f64>() * wd;
+    let u_native_scaled = (u_full - prior) * scale + prior;
+    assert!(
+        (u_xla - u_native_scaled).abs() / u_native_scaled.abs() < 1e-3,
+        "u_xla={u_xla} u_native={u_native_scaled}"
+    );
+    // Gradient cosine after the same rescaling.
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for i in 0..n_params {
+        let gn = (g_full[i] as f64 - 2.0 * wd * theta[i] as f64) * scale
+            + 2.0 * wd * theta[i] as f64;
+        let gx = g_xla[i] as f64;
+        dot += gn * gx;
+        na += gn * gn;
+        nb += gx * gx;
+    }
+    let cos = dot / (na.sqrt() * nb.sqrt());
+    assert!(cos > 0.9999, "cosine={cos}");
+}
+
+#[test]
+fn fused_update_equals_grad_plus_step() {
+    let Some(engine) = engine() else { return };
+    let grad_art = engine.load("mlp_grad").unwrap();
+    let fused = engine.load("mlp_ec_update").unwrap();
+    let n = fused.spec.meta_usize("padded_n").unwrap();
+    let batch = fused.spec.meta_usize("batch").unwrap();
+    let in_dim = fused.spec.inputs[4].shape[1];
+
+    let mut rng = Pcg64::seeded(7);
+    let mut theta = vec![0.0f32; n];
+    rng.fill_normal(&mut theta);
+    for t in theta.iter_mut() {
+        *t *= 0.05;
+    }
+    let mut p = vec![0.0f32; n];
+    let mut c = vec![0.0f32; n];
+    let mut noise = vec![0.0f32; n];
+    rng.fill_normal(&mut p);
+    rng.fill_normal(&mut c);
+    rng.fill_normal(&mut noise);
+    let mut x = vec![0.0f32; batch * in_dim];
+    rng.fill_normal(&mut x);
+    let y: Vec<i32> = (0..batch).map(|i| (i % 10) as i32).collect();
+
+    let params = SghmcParams { eps: 1e-4, ..Default::default() };
+    let alpha = 0.7;
+    let scal = pack_scal(params.eps, 1.0, 1.0, alpha, params.ec_worker_noise_scale());
+
+    // Path A: fused artifact.
+    let outs = fused
+        .run(&[
+            Arg::F32(&scal),
+            Arg::F32(&theta),
+            Arg::F32(&p),
+            Arg::F32(&c),
+            Arg::F32(&x),
+            Arg::I32(&y),
+            Arg::F32(&noise),
+        ])
+        .unwrap();
+
+    // Path B: grad artifact + native Eq. 6 math with the same noise.
+    let gouts = grad_art.run(&[Arg::F32(&theta), Arg::F32(&x), Arg::I32(&y)]).unwrap();
+    let g = &gouts[1];
+    let eps = params.eps as f32;
+    let nscale = params.ec_worker_noise_scale() as f32;
+    for i in (0..n).step_by(97) {
+        let want_theta = theta[i] + eps * p[i];
+        let want_p = p[i] - eps * g[i] - eps * p[i] - eps * (alpha as f32) * (theta[i] - c[i])
+            + nscale * noise[i];
+        assert!((outs[0][i] - want_theta).abs() < 1e-5, "theta[{i}]");
+        let tol = 1e-4 + want_p.abs() * 1e-4;
+        assert!((outs[1][i] - want_p).abs() < tol, "p[{i}]: {} vs {want_p}", outs[1][i]);
+    }
+    // U values agree.
+    assert!((outs[2][0] - gouts[0][0]).abs() / gouts[0][0].abs() < 1e-4);
+}
+
+#[test]
+fn fused_sampler_reduces_potential_over_steps() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.manifest.artifacts.get("mlp_grad").unwrap();
+    let n_total = spec.meta_usize("n_total").unwrap().min(2048);
+    let train = synth_mnist::generate(n_total, 0.15, 31);
+    let params = SghmcParams { eps: 1e-4, ..Default::default() };
+    let mut sampler = XlaFusedSampler::new(&engine, "mlp", train, params).unwrap();
+    let mut rng = Pcg64::seeded(8);
+    let mut state = ChainState::zeros(sampler.padded);
+    rng.fill_normal(&mut state.theta[..sampler.live]);
+    for t in state.theta[..sampler.live].iter_mut() {
+        *t *= 0.1;
+    }
+    let mut us = Vec::new();
+    for _ in 0..30 {
+        us.push(sampler.sghmc_step(&mut state, &mut rng).unwrap());
+    }
+    let head: f64 = us[..5].iter().sum::<f64>() / 5.0;
+    let tail: f64 = us[us.len() - 5..].iter().sum::<f64>() / 5.0;
+    assert!(tail < head, "potential did not decrease: {head} -> {tail}");
+}
+
+#[test]
+fn resnet_grad_artifact_matches_native_shapes_and_descends() {
+    let Some(engine) = engine() else { return };
+    let art = engine.load("resnet_grad").unwrap();
+    let batch = art.spec.meta_usize("batch").unwrap();
+    let width = art.spec.meta_usize("width").unwrap();
+    let blocks = art.spec.meta_usize("blocks").unwrap();
+    let n_params = art.spec.meta_usize("n_params").unwrap();
+    let data = synth_cifar::generate(batch.max(64), 0.2, 12);
+    let native = NativeResNet::new(data.clone(), data.clone(), width, blocks, batch);
+    assert_eq!(native.n_params(), n_params, "resnet architectures diverged");
+
+    // One gradient-descent step on the artifact gradient lowers U.
+    let mut rng = Pcg64::seeded(13);
+    let theta = native.init_theta(0.05, &mut rng);
+    let mut x = vec![0.0f32; batch * data.d];
+    let mut y = vec![0i32; batch];
+    data.sample_batch(batch, &mut rng, &mut x, &mut y);
+    let outs = art.run(&[Arg::F32(&theta), Arg::F32(&x), Arg::I32(&y)]).unwrap();
+    let u0 = outs[0][0];
+    let mut theta2 = theta.clone();
+    for i in 0..theta2.len() {
+        theta2[i] -= 1e-6 * outs[1][i];
+    }
+    let outs2 = art.run(&[Arg::F32(&theta2), Arg::F32(&x), Arg::I32(&y)]).unwrap();
+    assert!(outs2[0][0] < u0, "descent failed: {u0} -> {}", outs2[0][0]);
+}
+
+#[test]
+fn xla_potential_eval_and_dims_consistent() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.manifest.artifacts.get("mlp_grad").unwrap();
+    let n_total = spec.meta_usize("n_total").unwrap().min(2048);
+    let data = synth_mnist::generate(n_total + 256, 0.15, 55);
+    let (train, test) = data.split(n_total);
+    let pot = XlaPotential::new(&engine, "mlp", train, test).unwrap();
+    assert!(pot.padded_dim() >= pot.dim());
+    assert_eq!(pot.padded_dim() % 1024, 0);
+    let mut rng = Pcg64::seeded(9);
+    let mut theta = vec![0.0f32; pot.padded_dim()];
+    rng.fill_normal(&mut theta[..pot.dim()]);
+    for t in theta.iter_mut() {
+        *t *= 0.05;
+    }
+    let (nll, acc) = pot.eval_nll_acc(&theta).unwrap();
+    assert!(nll.is_finite() && nll > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+    let mut grad = vec![0.0f32; pot.padded_dim()];
+    let u = pot.stoch_grad(&theta, &mut grad, &mut rng);
+    assert!(u.is_finite());
+    // Padding tail must be exactly zero.
+    assert!(grad[pot.dim()..].iter().all(|&g| g == 0.0));
+}
+
+#[test]
+fn center_update_artifact_matches_native_center_step() {
+    let Some(engine) = engine() else { return };
+    let art = engine.load("center_update_mlp").unwrap();
+    let n = art.spec.meta_usize("padded_n").unwrap();
+    let mut rng = Pcg64::seeded(14);
+    let mut c = vec![0.0f32; n];
+    let mut r = vec![0.0f32; n];
+    let mut mean = vec![0.0f32; n];
+    let mut noise = vec![0.0f32; n];
+    rng.fill_normal(&mut c);
+    rng.fill_normal(&mut r);
+    rng.fill_normal(&mut mean);
+    rng.fill_normal(&mut noise);
+    let params = SghmcParams { eps: 0.01, ..Default::default() };
+    let alpha = 1.5;
+    let scal = pack_scal(0.01, 1.0, 1.0, alpha, params.center_noise_scale());
+    let outs = art
+        .run(&[Arg::F32(&scal), Arg::F32(&c), Arg::F32(&r), Arg::F32(&mean), Arg::F32(&noise)])
+        .unwrap();
+    let eps = 0.01f32;
+    let ns = params.center_noise_scale() as f32;
+    for i in (0..n).step_by(53) {
+        let want_c = c[i] + eps * r[i];
+        let want_r = r[i] - eps * r[i] - eps * (alpha as f32) * (c[i] - mean[i]) + ns * noise[i];
+        assert!((outs[0][i] - want_c).abs() < 1e-5);
+        assert!((outs[1][i] - want_r).abs() < 1e-5);
+    }
+    // Cross-check against the Rust CenterStepper formulas via a zero-noise
+    // case (the stepper draws internal noise; compare structure only).
+    let mut stepper =
+        ecsgmcmc::samplers::sghmc::CenterStepper::new(
+            SghmcParams { center_friction: 0.0, noise_var: 0.0, ..params },
+            alpha,
+            4,
+        );
+    let mut st = ChainState { theta: vec![1.0; 4], p: vec![0.5; 4] };
+    let m = vec![0.0f32; 4];
+    stepper.step(&mut st, &m, &mut rng);
+    assert!((st.theta[0] - (1.0 + 0.01 * 0.5)).abs() < 1e-6);
+    let _ = SghmcStepper::new(params, 4); // silence unused-import pattern
+}
