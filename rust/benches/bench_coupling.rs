@@ -3,10 +3,18 @@
 //! trades chain diversity for early-exploration coherence while the
 //! pooled stationary moments stay correct (Prop. 3.1).
 //!
+//! Plus the exchange-fabric comparison (DESIGN.md §6): at K = 8 workers
+//! and sync_every = 1 on the Fig. 1 Gaussian, the lock-free transport
+//! must sustain ≥ 2x the exchanges/sec of the deterministic channel
+//! round-robin on the same hardware — workers never block on the server
+//! round-trip, so exchange throughput stops being bounded by the one
+//! serialized server thread.
+//!
 //! Run: `cargo bench --bench bench_coupling`
 
 use ecsgmcmc::bench::print_series_table;
 use ecsgmcmc::experiments::alpha_sweep;
+use ecsgmcmc::experiments::throughput;
 use ecsgmcmc::experiments::Scale;
 
 fn main() {
@@ -42,4 +50,24 @@ fn main() {
     let refs: Vec<&ecsgmcmc::experiments::Series> = series.iter().collect();
     ecsgmcmc::experiments::series_to_csv("out/alpha_sweep.csv", "alpha", &refs).expect("csv");
     println!("-> wrote out/alpha_sweep.csv");
+
+    // ---- Exchange fabric: deterministic vs lock-free. ----
+    let k = 8;
+    println!("\nexchange fabric comparison: K={k} workers, s=1, Fig. 1 Gaussian");
+    let (det, lf) = throughput::transport_comparison(scale, k, 42);
+    for t in [&det, &lf] {
+        println!(
+            "  {:<14} {:>10} exchanges in {:>7.3}s  -> {:>12.0} ex/s  ({:>12.0} steps/s)",
+            t.transport.name(),
+            t.exchanges,
+            t.elapsed,
+            t.exchanges_per_sec,
+            t.steps_per_sec,
+        );
+    }
+    let speedup = lf.exchanges_per_sec / det.exchanges_per_sec.max(1e-12);
+    println!(
+        "  lockfree / deterministic: {speedup:.2}x  (target >= 2x): {}",
+        if speedup >= 2.0 { "✓" } else { "✗" }
+    );
 }

@@ -88,12 +88,17 @@ fn main() {
 
     b.finish();
 
-    // ---- Worker scaling. ----
+    // ---- Worker scaling, per exchange fabric. ----
+    use ecsgmcmc::coordinator::TransportKind;
     let max_k = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
-    let s = throughput::worker_scaling(scale, max_k, 3);
-    let eff = throughput::parallel_efficiency(&s);
-    print_series_table("PERF: EC worker scaling (native MLP)", "K", &s.xs, &[
-        ("steps/sec", &s.ys),
-        ("efficiency", &eff),
-    ]);
+    for transport in [TransportKind::Deterministic, TransportKind::LockFree] {
+        let s = throughput::worker_scaling_with(scale, max_k, 3, transport);
+        let eff = throughput::parallel_efficiency(&s);
+        print_series_table(
+            &format!("PERF: EC worker scaling (native MLP, {})", transport.name()),
+            "K",
+            &s.xs,
+            &[("steps/sec", &s.ys), ("efficiency", &eff)],
+        );
+    }
 }

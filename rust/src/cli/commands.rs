@@ -8,7 +8,7 @@ use crate::coordinator::engine::{NativeEngine, StepKind, WorkerEngine, XlaEngine
 use crate::coordinator::single::run_single;
 use crate::coordinator::{
     DelayModel, EcConfig, IndependentCoordinator, NaiveConfig, NaiveCoordinator, RunOptions,
-    RunResult,
+    RunResult, TransportKind,
 };
 use crate::data::{synth_cifar, synth_mnist};
 use crate::experiments::{self, Scale, Series};
@@ -24,13 +24,21 @@ use crate::{log_info, log_warn};
 use anyhow::{anyhow, Context, Result};
 use std::sync::Arc;
 
-/// `ecsgmcmc sample --config <file>`.
+/// `ecsgmcmc sample --config <file> [--seed n] [--transport t] [--shards n]`.
 pub fn cmd_sample(p: &Parsed) -> Result<i32> {
     let path = p.opt("config").ok_or_else(|| anyhow!("--config is required"))?;
     let mut cfg = RunConfig::from_file(path)?;
     if let Some(seed) = p.opt("seed") {
         cfg.seed = seed.parse().context("--seed")?;
     }
+    if let Some(t) = p.opt("transport") {
+        cfg.transport = TransportKind::from_str(t)
+            .ok_or_else(|| anyhow!("--transport expects deterministic|lockfree, got '{t}'"))?;
+    }
+    if let Some(s) = p.opt("shards") {
+        cfg.shards = s.parse().context("--shards")?;
+    }
+    cfg.validate()?;
     let result = run_configured(&cfg)?;
     report_run(&cfg, &result);
     Ok(0)
@@ -142,13 +150,15 @@ pub fn run_configured(cfg: &RunConfig) -> Result<RunResult> {
     let opts = run_options(cfg);
     let delay = DelayModel::with_exchange_ms(cfg.delay_ms);
     log_info!(
-        "sampling: scheme={} workers={} s={} alpha={} steps={} dim={}",
+        "sampling: scheme={} workers={} s={} alpha={} steps={} dim={} transport={} shards={}",
         cfg.scheme.name(),
         cfg.workers,
         cfg.sync_every,
         cfg.alpha,
         cfg.steps,
-        potential.dim()
+        potential.dim(),
+        cfg.transport.name(),
+        cfg.shards
     );
     let kind = match cfg.scheme {
         Scheme::Sgld | Scheme::EcSgld => StepKind::Sgld,
@@ -170,6 +180,8 @@ pub fn run_configured(cfg: &RunConfig) -> Result<RunResult> {
                 alpha: cfg.alpha,
                 sync_every: cfg.sync_every,
                 steps: cfg.steps,
+                transport: cfg.transport,
+                shards: cfg.shards,
                 delay,
                 opts,
             };
@@ -208,6 +220,9 @@ fn report_run(cfg: &RunConfig, r: &RunResult) {
             r.metrics.exchanges,
             r.metrics.mean_staleness()
         );
+    }
+    if r.metrics.center_steps > 0 {
+        println!("center steps: {}", r.metrics.center_steps);
     }
     // For low-dimensional analytic targets, print sample moments.
     if matches!(cfg.target, Target::Gaussian | Target::Mixture | Target::Banana)
@@ -289,13 +304,23 @@ pub fn cmd_experiment(p: &Parsed) -> Result<i32> {
         }
         "PERF" => {
             let max_k = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
-            let s = experiments::throughput::worker_scaling(scale, max_k, seed);
-            let eff = experiments::throughput::parallel_efficiency(&s);
-            print_series_table(
-                "PERF: EC worker scaling",
-                "K",
-                &s.xs,
-                &[("steps/sec", &s.ys), ("efficiency", &eff)],
+            for transport in [TransportKind::Deterministic, TransportKind::LockFree] {
+                let s = experiments::throughput::worker_scaling_with(scale, max_k, seed, transport);
+                let eff = experiments::throughput::parallel_efficiency(&s);
+                print_series_table(
+                    &format!("PERF: EC worker scaling ({})", transport.name()),
+                    "K",
+                    &s.xs,
+                    &[("steps/sec", &s.ys), ("efficiency", &eff)],
+                );
+            }
+            let (det, lf) = experiments::throughput::transport_comparison(scale, max_k, seed);
+            println!(
+                "\nexchange fabric at K={max_k}, s=1 (Fig. 1 Gaussian): \
+                 deterministic {:.0} ex/s, lockfree {:.0} ex/s ({:.2}x)",
+                det.exchanges_per_sec,
+                lf.exchanges_per_sec,
+                lf.exchanges_per_sec / det.exchanges_per_sec.max(1e-12)
             );
         }
         other => {

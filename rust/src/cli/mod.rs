@@ -47,6 +47,8 @@ COMMANDS:
     sample      Run one sampling job
                   --config <file.toml>   (see configs/)
                   --seed <n>             override the config seed
+                  --transport <t>        EC fabric: deterministic|lockfree
+                  --shards <n>           EC center shards (default 1)
     experiment  Regenerate a paper experiment
                   --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF>
                   --fast                 smoke-scale run

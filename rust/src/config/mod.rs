@@ -9,6 +9,7 @@
 
 pub mod toml;
 
+use crate::coordinator::TransportKind;
 use crate::samplers::SghmcParams;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -103,6 +104,10 @@ pub struct RunConfig {
     pub sync_every: usize,
     /// Gradients to collect per server step O (naive async only).
     pub collect: usize,
+    /// EC exchange fabric: deterministic channel round-robin or lock-free.
+    pub transport: TransportKind,
+    /// Contiguous center shards for EC (1 = unsharded).
+    pub shards: usize,
     /// Elastic coupling strength alpha.
     pub alpha: f64,
     /// Total sampler steps per worker.
@@ -132,6 +137,8 @@ impl Default for RunConfig {
             workers: 4,
             sync_every: 2,
             collect: 1,
+            transport: TransportKind::Deterministic,
+            shards: 1,
             alpha: 1.0,
             steps: 1000,
             thin: 1,
@@ -186,6 +193,11 @@ impl RunConfig {
         cfg.workers = t.get_usize("coordinator", "workers").unwrap_or(cfg.workers);
         cfg.sync_every = t.get_usize("coordinator", "sync_every").unwrap_or(cfg.sync_every);
         cfg.collect = t.get_usize("coordinator", "collect").unwrap_or(cfg.collect);
+        if let Some(s) = t.get_str("coordinator", "transport") {
+            cfg.transport = TransportKind::from_str(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown transport '{s}' (deterministic|lockfree)"))?;
+        }
+        cfg.shards = t.get_usize("coordinator", "shards").unwrap_or(cfg.shards);
         cfg.alpha = t.get_f64("coordinator", "alpha").unwrap_or(cfg.alpha);
         cfg.delay_ms = t.get_usize("coordinator", "delay_ms").unwrap_or(0) as u64;
 
@@ -217,6 +229,9 @@ impl RunConfig {
         }
         if self.thin == 0 {
             bail!("thin must be >= 1");
+        }
+        if self.shards == 0 || self.shards > 512 {
+            bail!("shards must be in 1..=512 (got {})", self.shards);
         }
         if !(self.sampler.eps > 0.0) {
             bail!("sampler.eps must be positive");
@@ -283,6 +298,24 @@ alpha = 0.5
         assert!(
             RunConfig::from_toml_str("[coordinator]\nworkers = 2\ncollect = 3\n").is_err()
         );
+        assert!(RunConfig::from_toml_str("[coordinator]\nshards = 0\n").is_err());
+        assert!(
+            RunConfig::from_toml_str("[coordinator]\ntransport = \"smoke-signal\"\n").is_err()
+        );
+    }
+
+    #[test]
+    fn parses_transport_and_shards() {
+        let cfg = RunConfig::from_toml_str(
+            "[coordinator]\ntransport = \"lockfree\"\nshards = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.transport, TransportKind::LockFree);
+        assert_eq!(cfg.shards, 4);
+        // Defaults: the reproducible fabric, unsharded.
+        let cfg = RunConfig::from_toml_str("[run]\nscheme = \"ec\"\n").unwrap();
+        assert_eq!(cfg.transport, TransportKind::Deterministic);
+        assert_eq!(cfg.shards, 1);
     }
 
     #[test]

@@ -1,36 +1,43 @@
 //! Approach IIa — the paper's contribution: elastically-coupled
 //! asynchronous SG-MCMC (EC-SGHMC / EC-SGLD), Eq. (6).
 //!
-//! Topology: K worker threads + one center-server thread.
+//! Topology: K worker threads + one center-server thread, connected by a
+//! swappable exchange fabric ([`super::transport`], DESIGN.md §6).
 //!
 //! * Workers simulate Eq. (6) rows 1+3 against their *local, possibly
 //!   stale* copy c̃ of the center variable, exchanging with the server
-//!   every `sync_every` (= s) steps: they upload θᵢ and download the
-//!   current c. Between exchanges there is **no** synchronization — the
-//!   paper's "mostly asynchronous" regime.
+//!   every `sync_every` (= s) steps: they upload θᵢ and refresh c̃.
+//!   Between exchanges there is **no** synchronization — the paper's
+//!   "mostly asynchronous" regime.
 //! * The server owns (c, r) and the latest θ snapshots; per full round of
-//!   K uploads it advances the center dynamics (rows 2+4) by `s` steps
-//!   (budgeted fractionally per upload, so center time tracks worker
-//!   time), using the mean of its current snapshots.
+//!   K upload credits it advances the center dynamics (rows 2+4) by `s`
+//!   steps (budgeted fractionally per credit, so center time tracks
+//!   worker time), using the mean of its current snapshots — shard by
+//!   shard under the configured [`ShardLayout`].
 //!
-//! The server answers uploads in **round-robin worker order**. This keeps
+//! Under [`TransportKind::Deterministic`] the server answers uploads in
+//! strict round-robin worker order over blocking round-trips, keeping
 //! every worker trajectory a deterministic function of (seed, config) —
-//! crucial for the reproducibility property tests — while preserving the
-//! asynchrony that matters: workers never wait for *each other* between
-//! exchanges, only for their own round-trip, and the downloaded center is
-//! stale by up to s worker steps exactly as in the paper's protocol. The
-//! optional [`DelayModel`] adds simulated network latency and
-//! heterogeneous-machine jitter on top.
+//! crucial for the reproducibility property tests. Under
+//! [`TransportKind::LockFree`] workers deposit into per-worker mailbox
+//! slots and read the seqlock-published center without ever blocking on
+//! the server or each other; trajectories are then genuinely racy (that
+//! is the point), while Prop. 3.1 stationarity is preserved (see
+//! `lockfree_ec_preserves_target_moments` in `test_ec_invariants.rs`).
+//! The optional [`DelayModel`] adds simulated network latency and
+//! heterogeneous-machine jitter on top of either fabric.
 
 use super::engine::WorkerEngine;
-use super::single::{init_state, Recorder};
+use super::topology::{init_state, spawn_worker, ExchangePolicy, ShardLayout, Topology};
+use super::transport::{
+    build_transport, CenterView, ServerPort, TransportKind, Upload, WorkerPort,
+};
 use super::{DelayModel, Metrics, RunOptions, RunResult};
 use crate::math::rng::Pcg64;
 use crate::math::vecops;
+use crate::potentials::Potential;
 use crate::samplers::sghmc::CenterStepper;
 use crate::samplers::{ChainState, SghmcParams};
-use crate::potentials::Potential;
-use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -45,6 +52,10 @@ pub struct EcConfig {
     pub sync_every: usize,
     /// Steps per worker.
     pub steps: usize,
+    /// Exchange fabric (deterministic round-robin or lock-free).
+    pub transport: TransportKind,
+    /// Contiguous center shards (1 = unsharded; see [`ShardLayout`]).
+    pub shards: usize,
     /// Simulated network/heterogeneity model.
     pub delay: DelayModel,
     /// Recording options.
@@ -58,16 +69,12 @@ impl Default for EcConfig {
             alpha: 1.0,
             sync_every: 2,
             steps: 1000,
+            transport: TransportKind::Deterministic,
+            shards: 1,
             delay: DelayModel::none(),
             opts: RunOptions::default(),
         }
     }
-}
-
-/// Upload from a worker: its id and current position.
-struct Upload {
-    worker: usize,
-    theta: Vec<f32>,
 }
 
 pub struct EcCoordinator {
@@ -96,6 +103,100 @@ impl EcCoordinator {
     }
 }
 
+/// The EC worker's [`ExchangePolicy`]: Eq. (6) rows 1+3 against the local
+/// center copy, exchanging through the worker's fabric endpoint every
+/// `sync_every` steps.
+struct EcPolicy {
+    engine: Box<dyn WorkerEngine>,
+    port: Box<dyn WorkerPort>,
+    center: CenterView,
+    alpha: f64,
+    sync_every: usize,
+}
+
+impl ExchangePolicy for EcPolicy {
+    fn step(&mut self, _t: usize, state: &mut ChainState, rng: &mut Pcg64) -> Option<f64> {
+        Some(self.engine.step(state, Some((self.center.as_slice(), self.alpha)), rng))
+    }
+
+    fn after_step(&mut self, t: usize, state: &ChainState) {
+        if (t + 1) % self.sync_every == 0 {
+            self.port.exchange(&state.theta, &mut self.center);
+        }
+    }
+}
+
+/// Center-server loop, generic over the fabric's [`ServerPort`]: consume
+/// uploads, advance the center dynamics by `sync_every / K` steps per
+/// upload credit, publish/ack through the port.
+#[allow(clippy::too_many_arguments)]
+fn run_center_server(
+    mut port: Box<dyn ServerPort>,
+    layout: ShardLayout,
+    params: SghmcParams,
+    alpha: f64,
+    workers: usize,
+    sync_every: usize,
+    delay: DelayModel,
+    opts: RunOptions,
+    live: usize,
+    init_center: Vec<f32>,
+    seed: u64,
+) -> (Vec<(f64, Vec<f32>)>, Metrics) {
+    let dim = init_center.len();
+    let mut center = ChainState::from_theta(init_center.clone());
+    let mut stepper = CenterStepper::new(params, alpha, dim).with_live_dim(live);
+    // One RNG stream per shard; shard 0 keeps the pre-sharding stream
+    // (seed, 1) so unsharded runs stay byte-compatible. Worker streams
+    // start at 1000 and run_ec caps shards at 512, so shard streams
+    // 1..=shards never collide with them.
+    let mut rngs: Vec<Pcg64> =
+        (0..layout.shards()).map(|j| Pcg64::new(seed, 1 + j as u64)).collect();
+    let mut snapshots: Vec<Vec<f32>> = vec![init_center; workers];
+    let mut theta_mean = vec![0.0f32; dim];
+    let mut budget = 0.0f64;
+    let mut metrics = Metrics::default();
+    let mut center_trace: Vec<(f64, Vec<f32>)> = Vec::new();
+    let mut center_steps = 0u64;
+    let t0 = Instant::now();
+    let mut uploads: Vec<Upload> = Vec::new();
+
+    loop {
+        uploads.clear();
+        if !port.recv(&mut uploads) {
+            break;
+        }
+        for up in uploads.drain(..) {
+            let worker = up.worker;
+            snapshots[worker] = up.theta;
+            metrics.exchanges += up.credits;
+            // Center time advances s steps per K upload credits.
+            budget += up.credits as f64 * sync_every as f64 / workers as f64;
+            while budget >= 1.0 {
+                let views: Vec<&[f32]> = snapshots.iter().map(|v| v.as_slice()).collect();
+                vecops::mean_of(&views, &mut theta_mean);
+                for j in 0..layout.shards() {
+                    stepper.step_range(&mut center, &theta_mean, layout.range(j), &mut rngs[j]);
+                }
+                budget -= 1.0;
+                center_steps += 1;
+                for j in 0..layout.shards() {
+                    port.publish(j, &center.theta, center_steps);
+                }
+                if center_steps as usize % opts.log_every == 0
+                    && center_trace.len() < opts.max_samples
+                {
+                    center_trace.push((t0.elapsed().as_secs_f64(), center.theta.clone()));
+                }
+            }
+            delay.exchange_sleep();
+            port.ack(worker, &center.theta, center_steps);
+        }
+    }
+    metrics.center_steps = center_steps;
+    (center_trace, metrics)
+}
+
 /// Run the EC scheme over arbitrary worker engines (native or XLA).
 pub fn run_ec(
     cfg: &EcConfig,
@@ -105,134 +206,76 @@ pub fn run_ec(
 ) -> RunResult {
     assert_eq!(engines.len(), cfg.workers, "one engine per worker");
     assert!(cfg.workers >= 1 && cfg.sync_every >= 1);
+    // Shard RNG streams live at (seed, 1 + j); worker dynamics streams
+    // start at (seed, 1000 + w). Bound the shard count so the two id
+    // spaces can never collide (512 shards is far past any publication-
+    // granularity benefit anyway).
+    assert!(cfg.shards <= 512, "shards must be <= 512 (got {})", cfg.shards);
     let start = Instant::now();
     let k = cfg.workers;
     let s = cfg.sync_every;
     let dim = engines[0].dim();
     let live = engines[0].live_dim();
     let rounds = cfg.steps / s;
+    let topo = Topology::centered(k, dim, cfg.shards);
 
     // Shared initial position (Fig. 1 semantics) or per-worker inits.
     let init0 = init_state(dim, live, &cfg.opts, seed, 0);
 
-    // Channels: one upload lane per worker (server recvs round-robin), one
-    // download lane per worker.
-    let mut upload_txs = Vec::with_capacity(k);
-    let mut upload_rxs = Vec::with_capacity(k);
-    let mut download_txs = Vec::with_capacity(k);
-    let mut download_rxs = Vec::with_capacity(k);
-    for _ in 0..k {
-        let (utx, urx) = mpsc::channel::<Upload>();
-        // Downloads are Arc-shared: the server publishes one snapshot,
-        // workers read it without a per-worker megabyte copy (§Perf L3).
-        let (dtx, drx) = mpsc::channel::<Arc<Vec<f32>>>();
-        upload_txs.push(utx);
-        upload_rxs.push(urx);
-        download_txs.push(dtx);
-        download_rxs.push(drx);
-    }
+    let mut transport = build_transport(cfg.transport, k, rounds, topo.layout(), &init0.theta);
+    let ports = transport.take_worker_ports();
+    let server_port = transport.take_server_port();
 
     // ---- Server thread: owns (c, r), snapshots, center dynamics. ----
-    let server_cfg = cfg.clone();
-    let center_init = init0.theta.clone();
-    let server = std::thread::Builder::new()
-        .name("ec-server".into())
-        .spawn(move || {
-            let cfg = server_cfg;
-            let mut center = ChainState::from_theta(center_init.clone());
-            let mut stepper =
-                CenterStepper::new(params, cfg.alpha, dim).with_live_dim(live);
-            let mut rng = Pcg64::new(seed, 1);
-            let mut snapshots: Vec<Vec<f32>> = vec![center_init; k];
-            let mut theta_mean = vec![0.0f32; dim];
-            let mut budget = 0.0f64;
-            let mut metrics = Metrics::default();
-            let mut center_trace: Vec<(f64, Vec<f32>)> = Vec::new();
-            let mut center_steps = 0usize;
-            // Published snapshot cache: refreshed only when the center
-            // actually stepped since the last download, so consecutive
-            // downloads between center updates share one allocation.
-            let mut published: Arc<Vec<f32>> = Arc::new(center.theta.clone());
-            let mut published_at = 0usize;
-            let t0 = Instant::now();
-            for _round in 0..rounds {
-                for urx in upload_rxs.iter() {
-                    let up = urx.recv().expect("worker hung up early");
-                    snapshots[up.worker] = up.theta;
-                    metrics.exchanges += 1;
-                    // Center time advances s steps per K uploads.
-                    budget += s as f64 / k as f64;
-                    while budget >= 1.0 {
-                        let views: Vec<&[f32]> =
-                            snapshots.iter().map(|v| v.as_slice()).collect();
-                        vecops::mean_of(&views, &mut theta_mean);
-                        stepper.step(&mut center, &theta_mean, &mut rng);
-                        budget -= 1.0;
-                        center_steps += 1;
-                        if center_steps % cfg.opts.log_every == 0
-                            && center_trace.len() < cfg.opts.max_samples
-                        {
-                            center_trace
-                                .push((t0.elapsed().as_secs_f64(), center.theta.clone()));
-                        }
-                    }
-                    cfg.delay.exchange_sleep();
-                    if published_at != center_steps {
-                        published = Arc::new(center.theta.clone());
-                        published_at = center_steps;
-                    }
-                    download_txs[up.worker]
-                        .send(published.clone())
-                        .expect("worker download lane closed");
-                }
-            }
-            metrics.total_steps = center_steps as u64;
-            (center_trace, metrics)
-        })
-        .expect("spawn ec-server");
+    let server = {
+        let layout = topo.layout().clone();
+        let (alpha, delay, opts) = (cfg.alpha, cfg.delay, cfg.opts.clone());
+        let center_init = init0.theta.clone();
+        std::thread::Builder::new()
+            .name("ec-server".into())
+            .spawn(move || {
+                run_center_server(
+                    server_port,
+                    layout,
+                    params,
+                    alpha,
+                    k,
+                    s,
+                    delay,
+                    opts,
+                    live,
+                    center_init,
+                    seed,
+                )
+            })
+            .expect("spawn ec-server")
+    };
 
-    // ---- Worker threads. ----
+    // ---- Worker threads, all through the shared loop. ----
     let handles: Vec<_> = engines
         .into_iter()
+        .zip(ports)
         .enumerate()
-        .map(|(w, mut engine)| {
-            let opts = cfg.opts.clone();
-            let delay = cfg.delay;
-            let alpha = cfg.alpha;
-            let steps = cfg.steps;
-            let utx = upload_txs[w].clone();
-            let drx = std::mem::replace(&mut download_rxs[w], mpsc::channel().1);
-            let init = if opts.same_init {
-                init0.clone()
-            } else {
-                init_state(dim, live, &opts, seed, w)
-            };
-            std::thread::Builder::new()
-                .name(format!("ec-worker-{w}"))
-                .spawn(move || {
-                    let mut state = init;
-                    let mut rng = Pcg64::new(seed, 1000 + w as u64);
-                    let mut jitter_rng = Pcg64::new(seed ^ 0x9e37, 2000 + w as u64);
-                    let factor = delay.worker_factor(w, seed);
-                    let mut local_center: Arc<Vec<f32>> = Arc::new(state.theta.clone());
-                    let mut rec = Recorder::new(w, opts, start);
-                    for t in 0..steps {
-                        let u = engine.step(
-                            &mut state,
-                            Some((local_center.as_slice(), alpha)),
-                            &mut rng,
-                        );
-                        rec.observe(t, u, &state.theta);
-                        delay.step_sleep(factor, &mut jitter_rng);
-                        if (t + 1) % s == 0 {
-                            utx.send(Upload { worker: w, theta: state.theta.clone() })
-                                .expect("server hung up");
-                            local_center = drx.recv().expect("server reply lost");
-                        }
-                    }
-                    rec.trace
-                })
-                .expect("spawn ec-worker")
+        .map(|(w, (engine, port))| {
+            let init = init_state(dim, live, &cfg.opts, seed, w);
+            let policy = Box::new(EcPolicy {
+                engine,
+                port,
+                center: CenterView::Owned(init.theta.clone()),
+                alpha: cfg.alpha,
+                sync_every: s,
+            });
+            spawn_worker(
+                format!("ec-worker-{w}"),
+                w,
+                cfg.steps,
+                init,
+                policy,
+                cfg.opts.clone(),
+                cfg.delay,
+                seed,
+                start,
+            )
         })
         .collect();
 
@@ -279,6 +322,8 @@ mod tests {
         assert_eq!(r.chains.len(), 4);
         assert_eq!(r.metrics.exchanges, 4 * 100);
         assert!(!r.center_trace.is_empty());
+        assert!(r.metrics.center_steps > 0);
+        assert_eq!(r.metrics.total_steps, 4 * 200);
         for c in &r.chains {
             assert_eq!(c.samples.len(), 200);
             assert_eq!(c.u_trace.len(), 20);
@@ -361,7 +406,67 @@ mod tests {
     fn no_exchanges_when_period_exceeds_steps() {
         let r = coord(2, 1.0, 1000, 50).run(1);
         assert_eq!(r.metrics.exchanges, 0);
+        assert_eq!(r.metrics.center_steps, 0);
         assert!(r.center_trace.is_empty());
+    }
+
+    #[test]
+    fn lockfree_transport_credits_every_exchange() {
+        for (k, s, steps, shards) in [(1, 1, 50, 1), (4, 2, 200, 1), (3, 1, 150, 2)] {
+            let cfg = EcConfig {
+                workers: k,
+                alpha: 1.0,
+                sync_every: s,
+                steps,
+                transport: TransportKind::LockFree,
+                shards,
+                opts: RunOptions { log_every: 10, ..Default::default() },
+                ..Default::default()
+            };
+            let r = EcCoordinator::new(
+                cfg,
+                SghmcParams { eps: 0.05, ..Default::default() },
+                Arc::new(GaussianPotential::fig1()),
+            )
+            .run(11);
+            assert_eq!(r.chains.len(), k);
+            // Every worker exchange is credited even when the mailbox
+            // overwrote intermediate uploads.
+            assert_eq!(r.metrics.exchanges as usize, k * (steps / s));
+            assert_eq!(r.metrics.total_steps as usize, k * steps);
+            for c in &r.chains {
+                assert_eq!(c.samples.len(), steps);
+                assert!(c.samples.iter().all(|(_, t)| t.iter().all(|x| x.is_finite())));
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_deterministic_runs_are_reproducible() {
+        // Sharded deterministic runs are still deterministic (per-shard
+        // streams), just not byte-equal to the unsharded trajectory.
+        let mk = |shards| EcConfig {
+            workers: 2,
+            alpha: 0.5,
+            sync_every: 2,
+            steps: 80,
+            shards,
+            opts: RunOptions { thin: 1, ..Default::default() },
+            ..Default::default()
+        };
+        let run = |cfg: EcConfig| {
+            EcCoordinator::new(
+                cfg,
+                SghmcParams { eps: 0.03, ..Default::default() },
+                Arc::new(GaussianPotential::fig1()),
+            )
+            .run(23)
+        };
+        let a = run(mk(2));
+        let b = run(mk(2));
+        for (ca, cb) in a.chains.iter().zip(&b.chains) {
+            assert_eq!(ca.samples.last().unwrap().1, cb.samples.last().unwrap().1);
+        }
     }
 
     #[test]

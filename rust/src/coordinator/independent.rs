@@ -5,11 +5,14 @@
 //! individual chains as there is no interaction." The EC scheme must beat
 //! this on time-to-low-NLL while matching its asymptotic correctness
 //! (and must *reduce* to it at α = 0 — Eq. 5).
+//!
+//! Driver: K [`DecoupledPolicy`] workers through the shared loop, one OS
+//! thread each. Worker stream ids match the EC coordinator so the α = 0
+//! equivalence is testable stream-for-stream.
 
 use super::engine::WorkerEngine;
-use super::single::{init_state, Recorder};
-use super::{RunOptions, RunResult};
-use crate::math::rng::Pcg64;
+use super::topology::{init_state, spawn_worker, DecoupledPolicy, Topology};
+use super::{DelayModel, RunOptions, RunResult};
 use std::time::Instant;
 
 pub struct IndependentCoordinator {
@@ -25,30 +28,23 @@ impl IndependentCoordinator {
     /// Run each engine as its own OS thread; chains never interact.
     pub fn run(&self, engines: Vec<Box<dyn WorkerEngine>>, seed: u64) -> RunResult {
         let start = Instant::now();
-        let steps = self.steps;
-        let opts = self.opts.clone();
-        let k = engines.len();
+        let topo = Topology::decoupled(engines.len());
         let handles: Vec<_> = engines
             .into_iter()
             .enumerate()
-            .map(|(w, mut engine)| {
-                let opts = opts.clone();
-                std::thread::Builder::new()
-                    .name(format!("chain-{w}"))
-                    .spawn(move || {
-                        let mut state =
-                            init_state(engine.dim(), engine.live_dim(), &opts, seed, w);
-                        // Worker stream ids match the EC coordinator so the
-                        // alpha=0 equivalence is testable stream-for-stream.
-                        let mut rng = Pcg64::new(seed, 1000 + w as u64);
-                        let mut rec = Recorder::new(w, opts, start);
-                        for t in 0..steps {
-                            let u = engine.step(&mut state, None, &mut rng);
-                            rec.observe(t, u, &state.theta);
-                        }
-                        rec.trace
-                    })
-                    .expect("spawn chain thread")
+            .map(|(w, engine)| {
+                let init = init_state(engine.dim(), engine.live_dim(), &self.opts, seed, w);
+                spawn_worker(
+                    format!("chain-{w}"),
+                    w,
+                    self.steps,
+                    init,
+                    Box::new(DecoupledPolicy::new(engine)),
+                    self.opts.clone(),
+                    DelayModel::none(),
+                    seed,
+                    start,
+                )
             })
             .collect();
 
@@ -58,8 +54,9 @@ impl IndependentCoordinator {
         }
         result.chains.sort_by_key(|c| c.worker);
         result.elapsed = start.elapsed().as_secs_f64();
-        result.metrics.total_steps = (steps * k) as u64;
-        result.metrics.steps_per_sec = result.metrics.total_steps as f64 / result.elapsed.max(1e-12);
+        result.metrics.total_steps = (self.steps * topo.workers) as u64;
+        result.metrics.steps_per_sec =
+            result.metrics.total_steps as f64 / result.elapsed.max(1e-12);
         result.merge_samples();
         result
     }

@@ -9,6 +9,10 @@ const STALENESS_BUCKETS: usize = 65;
 pub struct Metrics {
     /// Sampler steps summed over workers (server steps for naive-async).
     pub total_steps: u64,
+    /// Center-variable steps taken by the EC server (Eq. 6 rows 2+4).
+    /// Kept separate from `total_steps` so worker throughput never
+    /// clobbers the center-dynamics accounting.
+    pub center_steps: u64,
     /// Worker↔server exchanges.
     pub exchanges: u64,
     /// Gradients computed by workers (naive-async).
@@ -24,6 +28,7 @@ impl Default for Metrics {
     fn default() -> Self {
         Self {
             total_steps: 0,
+            center_steps: 0,
             exchanges: 0,
             grads_computed: 0,
             staleness_hist: vec![0; STALENESS_BUCKETS],
@@ -64,6 +69,7 @@ impl Metrics {
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("total_steps", Json::Num(self.total_steps as f64)),
+            ("center_steps", Json::Num(self.center_steps as f64)),
             ("exchanges", Json::Num(self.exchanges as f64)),
             ("grads_computed", Json::Num(self.grads_computed as f64)),
             ("steps_per_sec", Json::Num(self.steps_per_sec)),
@@ -102,6 +108,7 @@ mod tests {
     fn json_roundtrip_has_keys() {
         let j = Metrics::default().to_json();
         assert!(j.get("total_steps").is_some());
+        assert!(j.get("center_steps").is_some());
         assert!(j.get("mean_staleness").is_some());
     }
 }

@@ -12,10 +12,18 @@
 //!   elastically coupled to a center variable (c, r) held by a server
 //!   thread, exchanging every `s` steps (Eq. 6).
 //!
-//! Every scheme uses real OS threads and mpsc channels — the paper's own
-//! experiments are thread-parallel — with an explicit, controllable
-//! delay/heterogeneity model ([`staleness`]) standing in for the network
-//! of a distributed deployment (DESIGN.md §2).
+//! Every scheme uses real OS threads — the paper's own experiments are
+//! thread-parallel — with an explicit, controllable delay/heterogeneity
+//! model ([`staleness`]) standing in for the network of a distributed
+//! deployment (DESIGN.md §2).
+//!
+//! All four schemes share one worker loop ([`topology`]): engine step →
+//! recorder → delay model → per-scheme [`topology::ExchangePolicy`]. The
+//! EC exchange fabric is swappable ([`transport`], DESIGN.md §6): the
+//! deterministic channel round-robin kept for the reproducibility tests,
+//! or the lock-free seqlock/mailbox fabric where workers never block on
+//! the server — scaling (sharding, more workers, bigger θ) is a transport
+//! choice, not a rewrite of each scheme.
 
 pub mod ec;
 pub mod engine;
@@ -24,6 +32,8 @@ pub mod metrics;
 pub mod naive;
 pub mod single;
 pub mod staleness;
+pub mod topology;
+pub mod transport;
 
 pub use ec::{EcConfig, EcCoordinator};
 pub use engine::{NativeEngine, StepKind, WorkerEngine};
@@ -31,6 +41,8 @@ pub use independent::IndependentCoordinator;
 pub use metrics::Metrics;
 pub use naive::{NaiveConfig, NaiveCoordinator};
 pub use staleness::DelayModel;
+pub use topology::{ExchangePolicy, ShardLayout, Topology};
+pub use transport::TransportKind;
 
 /// One logged scalar observation along a chain.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -74,7 +86,10 @@ impl RunResult {
             .iter()
             .flat_map(|c| c.samples.iter().cloned())
             .collect();
-        self.samples.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // total_cmp: a NaN timestamp (e.g. from a poisoned clock or a
+        // diverged downstream consumer writing back) must never panic the
+        // merge; NaNs order after every finite time.
+        self.samples.sort_by(|a, b| a.0.total_cmp(&b.0));
     }
 
     /// θ samples only (drop timestamps).
@@ -135,5 +150,19 @@ mod tests {
         let times: Vec<f64> = r.samples.iter().map(|s| s.0).collect();
         assert_eq!(times, vec![0.5, 1.0, 2.0]);
         assert_eq!(r.thetas().len(), 3);
+    }
+
+    #[test]
+    fn merge_samples_tolerates_nan_timestamps() {
+        let mut r = RunResult::default();
+        r.chains = vec![ChainTrace {
+            worker: 0,
+            u_trace: vec![],
+            samples: vec![(f64::NAN, vec![1.0]), (0.5, vec![2.0]), (1.5, vec![3.0])],
+        }];
+        r.merge_samples(); // must not panic
+        assert_eq!(r.samples.len(), 3);
+        assert_eq!(r.samples[0].0, 0.5);
+        assert!(r.samples[2].0.is_nan()); // NaN sorts last under total_cmp
     }
 }

@@ -1,66 +1,19 @@
-//! Single-chain runner: the sequential SGHMC/SGLD baseline, and the
-//! building block the independent-chains scheme reuses.
+//! Single-chain runner: the sequential SGHMC/SGLD baseline.
+//!
+//! The thinnest possible driver over the shared worker loop
+//! ([`super::topology`]): one [`DecoupledPolicy`] worker, run inline on
+//! the calling thread. A single chain is bit-identical to worker 0 of an
+//! `IndependentCoordinator` run with the same seed — both use the uniform
+//! worker stream conventions.
 
 use super::engine::WorkerEngine;
-use super::{ChainTrace, RunOptions, RunResult, TracePoint};
-use crate::math::rng::Pcg64;
-use crate::samplers::ChainState;
+use super::topology::{init_state, run_worker_loop, DecoupledPolicy};
+use super::{DelayModel, RunOptions, RunResult};
 use std::time::Instant;
-
-/// Recorder shared by all worker loops: Ũ trace + thinned samples.
-pub(crate) struct Recorder {
-    pub trace: ChainTrace,
-    opts: RunOptions,
-    start: Instant,
-}
-
-impl Recorder {
-    pub fn new(worker: usize, opts: RunOptions, start: Instant) -> Self {
-        Self { trace: ChainTrace { worker, ..Default::default() }, opts, start }
-    }
-
-    #[inline]
-    pub fn observe(&mut self, step: usize, u: f64, theta: &[f32]) {
-        if step % self.opts.log_every == 0 {
-            self.trace.u_trace.push(TracePoint {
-                step,
-                t: self.start.elapsed().as_secs_f64(),
-                u,
-            });
-        }
-        if self.opts.record_samples
-            && step >= self.opts.burn_in
-            && (step - self.opts.burn_in) % self.opts.thin == 0
-            && self.trace.samples.len() < self.opts.max_samples
-        {
-            self.trace
-                .samples
-                .push((self.start.elapsed().as_secs_f64(), theta.to_vec()));
-        }
-    }
-}
-
-/// Initial position for chain `worker` under the given options.
-pub(crate) fn init_state(
-    dim: usize,
-    live: usize,
-    opts: &RunOptions,
-    seed: u64,
-    worker: usize,
-) -> ChainState {
-    let stream = if opts.same_init { 0 } else { worker as u64 };
-    let mut rng = Pcg64::new(seed ^ 0x1217, stream);
-    let mut state = ChainState::zeros(dim);
-    rng.fill_normal(&mut state.theta[..live]);
-    for t in state.theta[..live].iter_mut() {
-        *t *= opts.init_sigma;
-    }
-    state
-}
 
 /// Run one chain for `steps` steps.
 pub fn run_single(
-    mut engine: Box<dyn WorkerEngine>,
+    engine: Box<dyn WorkerEngine>,
     steps: usize,
     opts: RunOptions,
     seed: u64,
@@ -68,19 +21,19 @@ pub fn run_single(
     let start = Instant::now();
     let dim = engine.dim();
     let live = engine.live_dim();
-    let mut state = init_state(dim, live, &opts, seed, 0);
-    let mut rng = Pcg64::new(seed, 100);
-    let mut rec = Recorder::new(0, opts, start);
-    for t in 0..steps {
-        let u = engine.step(&mut state, None, &mut rng);
-        rec.observe(t, u, &state.theta);
-    }
+    let init = init_state(dim, live, &opts, seed, 0);
+    let trace = run_worker_loop(
+        0,
+        steps,
+        init,
+        Box::new(DecoupledPolicy::new(engine)),
+        opts,
+        DelayModel::none(),
+        seed,
+        start,
+    );
     let elapsed = start.elapsed().as_secs_f64();
-    let mut result = RunResult {
-        chains: vec![rec.trace],
-        elapsed,
-        ..Default::default()
-    };
+    let mut result = RunResult { chains: vec![trace], elapsed, ..Default::default() };
     result.metrics.total_steps = steps as u64;
     result.metrics.steps_per_sec = steps as f64 / elapsed.max(1e-12);
     result.merge_samples();
@@ -128,6 +81,20 @@ mod tests {
         let a = run_single(engine(), 50, opts.clone(), 9);
         let b = run_single(engine(), 50, opts, 9);
         assert_eq!(a.chains[0].samples.last().unwrap().1, b.chains[0].samples.last().unwrap().1);
+    }
+
+    #[test]
+    fn matches_independent_worker_zero_bitwise() {
+        // The shared worker loop gives every scheme the same stream
+        // layout, so a single chain IS independent-chains worker 0.
+        let opts = RunOptions { thin: 1, ..Default::default() };
+        let single = run_single(engine(), 60, opts.clone(), 13);
+        let indep =
+            crate::coordinator::IndependentCoordinator::new(60, opts).run(vec![engine()], 13);
+        assert_eq!(
+            single.chains[0].samples.last().unwrap().1,
+            indep.chains[0].samples.last().unwrap().1
+        );
     }
 
     #[test]

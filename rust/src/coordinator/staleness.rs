@@ -90,4 +90,38 @@ mod tests {
     fn zero_spread_gives_unity() {
         assert_eq!(DelayModel::none().worker_factor(7, 1), 1.0);
     }
+
+    #[test]
+    fn worker_factor_deterministic_across_seeds() {
+        // The heterogeneity draw is a pure function of (worker, seed):
+        // re-running any configuration reproduces the same slowdowns, and
+        // distinct seeds re-draw the cluster rather than reusing it.
+        let d = DelayModel { hetero_spread: 0.7, ..Default::default() };
+        for seed in [0u64, 1, 42, u64::MAX] {
+            for w in 0..6 {
+                let f = d.worker_factor(w, seed);
+                assert_eq!(f, d.worker_factor(w, seed), "w={w} seed={seed}");
+                assert!((1.0..=1.7).contains(&f), "w={w} seed={seed} f={f}");
+            }
+        }
+        let fingerprint = |seed: u64| -> Vec<f64> {
+            (0..6).map(|w| d.worker_factor(w, seed)).collect()
+        };
+        assert_ne!(fingerprint(1), fingerprint(2), "seeds share a cluster draw");
+    }
+
+    #[test]
+    fn sleeps_are_noops_under_none() {
+        // DelayModel::none() must add no measurable latency on either
+        // sleep path, including the factor > 1 branch of step_sleep.
+        let d = DelayModel::none();
+        let mut rng = Pcg64::seeded(3);
+        let t0 = std::time::Instant::now();
+        for _ in 0..1000 {
+            d.exchange_sleep();
+            d.step_sleep(1.0, &mut rng);
+            d.step_sleep(2.5, &mut rng);
+        }
+        assert!(t0.elapsed() < Duration::from_millis(100), "{:?}", t0.elapsed());
+    }
 }

@@ -1,0 +1,322 @@
+//! Coordination topology: the shape of a scheme's worker/center graph and
+//! the one worker loop every scheme runs through (DESIGN.md §6).
+//!
+//! Before this layer existed each scheme driver carried its own copy of
+//! the step/record/delay plumbing. Now a scheme is described by
+//!
+//! * a [`Topology`] — K workers plus, for centered schemes, the
+//!   [`ShardLayout`] of the center parameter vector;
+//! * an [`ExchangePolicy`] — what one worker iteration does (engine step
+//!   with or without the elastic force, gradient-oracle duty for the
+//!   naive parameter server) and how it talks to the server;
+//! * [`run_worker_loop`] — the shared driver: policy step → recorder →
+//!   delay model → policy exchange hook, with the per-worker RNG stream
+//!   conventions every determinism test assumes (`seed`-stream `1000+w`
+//!   for dynamics, `seed^0x9e37`-stream `2000+w` for jitter, and
+//!   [`init_state`]'s `seed^0x1217` for the position init).
+
+use super::{ChainTrace, DelayModel, RunOptions, TracePoint};
+use crate::math::rng::Pcg64;
+use crate::samplers::ChainState;
+use std::ops::Range;
+use std::time::Instant;
+
+/// Contiguous partition of a θ vector of dimension `dim` into shards.
+///
+/// Sharding is the scaling axis for NN-sized parameters: the center
+/// server steps and publishes each range independently, so publication
+/// granularity (and, on the lock-free fabric, reader retry windows) stay
+/// bounded as θ grows. `contiguous` splits as evenly as possible, the
+/// remainder spread over the leading shards; the shard count is clamped
+/// to `dim` so every range is non-empty.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardLayout {
+    dim: usize,
+    bounds: Vec<usize>,
+}
+
+impl ShardLayout {
+    pub fn contiguous(dim: usize, shards: usize) -> ShardLayout {
+        let shards = shards.max(1).min(dim.max(1));
+        let base = dim / shards;
+        let extra = dim % shards;
+        let mut bounds = Vec::with_capacity(shards + 1);
+        let mut at = 0;
+        bounds.push(0);
+        for j in 0..shards {
+            at += base + usize::from(j < extra);
+            bounds.push(at);
+        }
+        debug_assert_eq!(at, dim);
+        ShardLayout { dim, bounds }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn range(&self, shard: usize) -> Range<usize> {
+        self.bounds[shard]..self.bounds[shard + 1]
+    }
+}
+
+/// The coordination graph of a scheme: how many workers, and — when a
+/// center variable exists — how its parameter vector is sharded.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub workers: usize,
+    /// Center shard layout; `None` for center-free schemes.
+    pub center: Option<ShardLayout>,
+}
+
+impl Topology {
+    /// K workers, no center (single / independent chains).
+    pub fn decoupled(workers: usize) -> Topology {
+        Topology { workers, center: None }
+    }
+
+    /// K workers elastically coupled to a sharded center (EC), or served
+    /// by a parameter server (naive).
+    pub fn centered(workers: usize, dim: usize, shards: usize) -> Topology {
+        Topology { workers, center: Some(ShardLayout::contiguous(dim, shards)) }
+    }
+
+    pub fn layout(&self) -> &ShardLayout {
+        self.center.as_ref().expect("center-free topology has no shard layout")
+    }
+}
+
+/// Recorder shared by all worker loops: Ũ trace + thinned samples.
+pub(crate) struct Recorder {
+    pub trace: ChainTrace,
+    opts: RunOptions,
+    start: Instant,
+}
+
+impl Recorder {
+    pub fn new(worker: usize, opts: RunOptions, start: Instant) -> Recorder {
+        Recorder { trace: ChainTrace { worker, ..Default::default() }, opts, start }
+    }
+
+    #[inline]
+    pub fn observe(&mut self, step: usize, u: f64, theta: &[f32]) {
+        if step % self.opts.log_every == 0 {
+            self.trace.u_trace.push(TracePoint {
+                step,
+                t: self.start.elapsed().as_secs_f64(),
+                u,
+            });
+        }
+        if self.opts.record_samples
+            && step >= self.opts.burn_in
+            && (step - self.opts.burn_in) % self.opts.thin == 0
+            && self.trace.samples.len() < self.opts.max_samples
+        {
+            self.trace
+                .samples
+                .push((self.start.elapsed().as_secs_f64(), theta.to_vec()));
+        }
+    }
+}
+
+/// Initial position for chain `worker` under the given options.
+pub(crate) fn init_state(
+    dim: usize,
+    live: usize,
+    opts: &RunOptions,
+    seed: u64,
+    worker: usize,
+) -> ChainState {
+    let stream = if opts.same_init { 0 } else { worker as u64 };
+    let mut rng = Pcg64::new(seed ^ 0x1217, stream);
+    let mut state = ChainState::zeros(dim);
+    rng.fill_normal(&mut state.theta[..live]);
+    for t in state.theta[..live].iter_mut() {
+        *t *= opts.init_sigma;
+    }
+    state
+}
+
+/// What one worker iteration does for a particular scheme.
+///
+/// The policy owns the worker's engine (or, for the naive scheme, the
+/// potential it computes gradients with) and its endpoint of the exchange
+/// fabric; the loop owns the state, recorder, RNG streams and delay
+/// model. Splitting the iteration into `step` + `after_step` preserves
+/// the pre-refactor ordering exactly: step, record, simulated compute
+/// jitter, then communicate.
+pub trait ExchangePolicy: Send {
+    /// Advance one step; returns Ũ(θ_t) for the recorder, or `None` when
+    /// a server-terminated scheme tells this worker to stop.
+    fn step(&mut self, t: usize, state: &mut ChainState, rng: &mut Pcg64) -> Option<f64>;
+
+    /// Post-record hook for scheme communication (e.g. the EC upload /
+    /// center download every `sync_every` steps). Default: no exchange.
+    fn after_step(&mut self, _t: usize, _state: &ChainState) {}
+}
+
+/// Decoupled chains (single / independent): plain engine steps, no
+/// coupling, no communication.
+pub struct DecoupledPolicy {
+    engine: Box<dyn super::engine::WorkerEngine>,
+}
+
+impl DecoupledPolicy {
+    pub fn new(engine: Box<dyn super::engine::WorkerEngine>) -> DecoupledPolicy {
+        DecoupledPolicy { engine }
+    }
+}
+
+impl ExchangePolicy for DecoupledPolicy {
+    fn step(&mut self, _t: usize, state: &mut ChainState, rng: &mut Pcg64) -> Option<f64> {
+        Some(self.engine.step(state, None, rng))
+    }
+}
+
+/// The one worker loop every scheme runs: policy step → recorder → delay
+/// model → policy exchange hook. Returns the worker's recorded trace.
+///
+/// Pass `usize::MAX` as `steps` for server-terminated workers (the naive
+/// scheme's gradient oracles): the loop then runs until the policy
+/// returns `None`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_worker_loop(
+    worker: usize,
+    steps: usize,
+    init: ChainState,
+    mut policy: Box<dyn ExchangePolicy>,
+    opts: RunOptions,
+    delay: DelayModel,
+    seed: u64,
+    start: Instant,
+) -> ChainTrace {
+    let mut state = init;
+    let mut rng = Pcg64::new(seed, 1000 + worker as u64);
+    let mut jitter_rng = Pcg64::new(seed ^ 0x9e37, 2000 + worker as u64);
+    let factor = delay.worker_factor(worker, seed);
+    let mut rec = Recorder::new(worker, opts, start);
+    for t in 0..steps {
+        let Some(u) = policy.step(t, &mut state, &mut rng) else { break };
+        rec.observe(t, u, &state.theta);
+        delay.step_sleep(factor, &mut jitter_rng);
+        policy.after_step(t, &state);
+    }
+    rec.trace
+}
+
+/// Spawn [`run_worker_loop`] on its own OS thread.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn spawn_worker(
+    name: String,
+    worker: usize,
+    steps: usize,
+    init: ChainState,
+    policy: Box<dyn ExchangePolicy>,
+    opts: RunOptions,
+    delay: DelayModel,
+    seed: u64,
+    start: Instant,
+) -> std::thread::JoinHandle<ChainTrace> {
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || run_worker_loop(worker, steps, init, policy, opts, delay, seed, start))
+        .expect("spawn worker thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{NativeEngine, StepKind};
+    use crate::potentials::gaussian::GaussianPotential;
+    use crate::samplers::SghmcParams;
+    use std::sync::Arc;
+
+    #[test]
+    fn shard_layout_partitions_exactly() {
+        for (dim, shards) in [(10, 3), (2, 1), (7, 7), (5, 8), (263 * 1024, 16)] {
+            let l = ShardLayout::contiguous(dim, shards);
+            assert_eq!(l.dim(), dim);
+            assert!(l.shards() <= shards.max(1));
+            let mut covered = 0;
+            for j in 0..l.shards() {
+                let r = l.range(j);
+                assert_eq!(r.start, covered, "gap before shard {j}");
+                assert!(!r.is_empty(), "empty shard {j}");
+                covered = r.end;
+            }
+            assert_eq!(covered, dim);
+            // Balanced: sizes differ by at most one.
+            let sizes: Vec<usize> = (0..l.shards()).map(|j| l.range(j).len()).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn shard_count_clamps_to_dim() {
+        let l = ShardLayout::contiguous(2, 64);
+        assert_eq!(l.shards(), 2);
+        let l = ShardLayout::contiguous(3, 0);
+        assert_eq!(l.shards(), 1);
+        assert_eq!(l.range(0), 0..3);
+    }
+
+    #[test]
+    fn topology_constructors() {
+        let t = Topology::decoupled(4);
+        assert_eq!(t.workers, 4);
+        assert!(t.center.is_none());
+        let t = Topology::centered(8, 100, 4);
+        assert_eq!(t.layout().shards(), 4);
+        assert_eq!(t.layout().dim(), 100);
+    }
+
+    #[test]
+    fn worker_loop_records_like_the_recorder_contract() {
+        let engine = Box::new(NativeEngine::new(
+            Arc::new(GaussianPotential::fig1()),
+            SghmcParams { eps: 0.05, ..Default::default() },
+            StepKind::Sghmc,
+        ));
+        let opts = RunOptions { log_every: 10, thin: 5, burn_in: 20, ..Default::default() };
+        let init = init_state(2, 2, &opts, 7, 0);
+        let trace = run_worker_loop(
+            0,
+            100,
+            init,
+            Box::new(DecoupledPolicy::new(engine)),
+            opts,
+            DelayModel::none(),
+            7,
+            Instant::now(),
+        );
+        assert_eq!(trace.u_trace.len(), 10);
+        assert_eq!(trace.samples.len(), 16); // steps 20, 25, ..., 95
+    }
+
+    #[test]
+    fn worker_loop_stops_when_policy_says_none() {
+        struct Stopper(usize);
+        impl ExchangePolicy for Stopper {
+            fn step(&mut self, t: usize, _s: &mut ChainState, _r: &mut Pcg64) -> Option<f64> {
+                (t < self.0).then_some(0.0)
+            }
+        }
+        let opts = RunOptions { thin: 1, ..Default::default() };
+        let trace = run_worker_loop(
+            0,
+            usize::MAX,
+            ChainState::zeros(1),
+            Box::new(Stopper(7)),
+            opts,
+            DelayModel::none(),
+            1,
+            Instant::now(),
+        );
+        assert_eq!(trace.samples.len(), 7);
+    }
+}

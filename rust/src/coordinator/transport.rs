@@ -1,0 +1,597 @@
+//! Exchange fabric: how EC workers and the center server move θ and c
+//! between each other (DESIGN.md §6).
+//!
+//! Two [`Transport`] implementations share one worker/server contract:
+//!
+//! * [`DeterministicTransport`] — the original channel fabric: one mpsc
+//!   upload lane per worker, answered by the server in strict round-robin
+//!   worker order with a blocking round-trip reply. Every worker
+//!   trajectory is a pure function of (seed, config), which the
+//!   reproducibility property tests rely on — but each exchange stalls
+//!   the worker on the server, and exchange throughput is bounded by the
+//!   one serialized server thread.
+//! * [`LockFreeTransport`] — the asynchronous fabric the paper actually
+//!   argues for: the server publishes the center via seqlock-protected
+//!   atomic buffers (one per shard, epoch-counted), and each worker
+//!   uploads into its own single-writer mailbox slot. Workers never block
+//!   on the server or on each other; the server sweeps mailboxes and
+//!   credits skipped (overwritten) uploads so center time still advances
+//!   s steps per K worker exchanges.
+//!
+//! The seqlock ([`SeqBuf`]) keeps every data word in an `AtomicU32`
+//! (f32 bit patterns) so concurrent publish/read is well-defined without
+//! locks: writers bump the epoch to odd, store the words, bump to even;
+//! readers retry until they observe an even, unchanged epoch around their
+//! copy. `epoch / 2` doubles as the publish count, which is what lets the
+//! server detect skipped mailbox versions.
+
+use std::sync::atomic::{fence, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::topology::ShardLayout;
+
+/// Which exchange fabric an EC run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// Channel round-robin with blocking round-trips (reproducible).
+    #[default]
+    Deterministic,
+    /// Seqlock center publication + per-worker mailboxes (never blocks).
+    LockFree,
+}
+
+impl TransportKind {
+    pub fn from_str(s: &str) -> Option<TransportKind> {
+        match s {
+            "deterministic" | "det" | "channel" => Some(TransportKind::Deterministic),
+            "lockfree" | "lock_free" | "lock-free" => Some(TransportKind::LockFree),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Deterministic => "deterministic",
+            TransportKind::LockFree => "lockfree",
+        }
+    }
+}
+
+/// One worker upload as seen by the server.
+pub struct Upload {
+    pub worker: usize,
+    /// Exchange credits this upload carries. The deterministic fabric
+    /// delivers every upload, so this is always 1; the lock-free mailbox
+    /// keeps only the newest θ, so a sweep that observes version v after
+    /// last seeing v₀ carries v − v₀ credits (the overwritten uploads
+    /// still count toward center time, Eq. 6 budgeting).
+    pub credits: u64,
+    pub theta: Vec<f32>,
+}
+
+/// Worker-local view of the center variable c̃.
+///
+/// The deterministic fabric swaps in the server's shared snapshot
+/// without copying (one allocation per center step serves every worker —
+/// §Perf L3); the lock-free fabric reads shards into an owned buffer.
+pub enum CenterView {
+    Owned(Vec<f32>),
+    Shared(Arc<Vec<f32>>),
+}
+
+impl CenterView {
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            CenterView::Owned(v) => v.as_slice(),
+            CenterView::Shared(a) => a.as_slice(),
+        }
+    }
+
+    /// Mutable owned buffer, converting a shared snapshot into an owned
+    /// copy first (only happens if fabrics are mixed mid-run, which the
+    /// coordinator never does).
+    fn make_owned(&mut self) -> &mut Vec<f32> {
+        if let CenterView::Shared(a) = self {
+            *self = CenterView::Owned(a.as_ref().clone());
+        }
+        match self {
+            CenterView::Owned(v) => v,
+            CenterView::Shared(_) => unreachable!("just converted to owned"),
+        }
+    }
+}
+
+/// Worker-side endpoint of the fabric. Moved into the worker thread.
+pub trait WorkerPort: Send {
+    /// Upload θ and refresh `center` with the freshest center view
+    /// available. Deterministic: blocks for the server round-trip (the
+    /// refreshed center is exactly the post-upload snapshot, shared, not
+    /// copied). Lock-free: deposits into this worker's mailbox and reads
+    /// the latest published shards — never blocks.
+    fn exchange(&mut self, theta: &[f32], center: &mut CenterView);
+}
+
+/// Server-side endpoint of the fabric. Moved into the server thread.
+pub trait ServerPort: Send {
+    /// Pull the next batch of uploads into `out`. Deterministic: blocks
+    /// for exactly one upload in round-robin worker order. Lock-free:
+    /// sweeps all mailboxes for fresh versions, spinning politely while
+    /// none are available. Returns `false` when the run is over (all
+    /// expected uploads consumed / all workers done).
+    fn recv(&mut self, out: &mut Vec<Upload>) -> bool;
+
+    /// Publish shard `shard` of the center after a center step. `version`
+    /// is the center step count. Lock-free: seqlock store; deterministic:
+    /// no-op (workers get the center through [`ServerPort::ack`]).
+    fn publish(&mut self, shard: usize, center: &[f32], version: u64);
+
+    /// Acknowledge `worker`'s upload with the current center.
+    /// Deterministic: the blocking round-trip reply (the published
+    /// snapshot is cached per `version`, so replies between center steps
+    /// share one allocation). Lock-free: no-op.
+    fn ack(&mut self, worker: usize, center: &[f32], version: u64);
+}
+
+/// A fabric instance wired for K workers. `take_*` hand out each endpoint
+/// exactly once; the endpoints are then moved into their threads.
+pub trait Transport: Send {
+    fn kind(&self) -> TransportKind;
+    fn take_worker_ports(&mut self) -> Vec<Box<dyn WorkerPort>>;
+    fn take_server_port(&mut self) -> Box<dyn ServerPort>;
+}
+
+// ---------------------------------------------------------------------
+// Seqlock buffer
+// ---------------------------------------------------------------------
+
+/// Single-writer, many-reader f32 buffer protected by a seqlock epoch.
+///
+/// Writer protocol (exactly one designated writer): bump epoch to odd,
+/// store the words, bump to even. Reader protocol: retry until an even
+/// epoch is observed unchanged around the copy. All word accesses are
+/// atomic, so racing reads are well-defined; the epoch check only decides
+/// whether the copy was torn. `epoch / 2` counts publishes.
+pub(crate) struct SeqBuf {
+    epoch: AtomicU64,
+    words: Vec<AtomicU32>,
+}
+
+impl SeqBuf {
+    pub fn new(init: &[f32]) -> SeqBuf {
+        SeqBuf {
+            epoch: AtomicU64::new(0),
+            words: init.iter().map(|&x| AtomicU32::new(x.to_bits())).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Number of publishes so far.
+    pub fn version(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire) / 2
+    }
+
+    /// Publish `src`. Must only ever be called from the single designated
+    /// writer thread of this buffer.
+    pub fn publish(&self, src: &[f32]) {
+        debug_assert_eq!(src.len(), self.words.len());
+        let e = self.epoch.load(Ordering::Relaxed);
+        debug_assert_eq!(e % 2, 0, "seqlock writer reentered");
+        self.epoch.store(e + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        for (w, &x) in self.words.iter().zip(src) {
+            w.store(x.to_bits(), Ordering::Relaxed);
+        }
+        self.epoch.store(e + 2, Ordering::Release);
+    }
+
+    /// Copy the latest consistent snapshot into `dst`; returns its
+    /// version. Lock-free for the writer; the reader retries on tearing.
+    /// Retries yield periodically so a writer preempted mid-publish on an
+    /// oversubscribed core cannot livelock its readers.
+    pub fn read_into(&self, dst: &mut [f32]) -> u64 {
+        debug_assert_eq!(dst.len(), self.words.len());
+        let mut spins = 0u32;
+        loop {
+            let e1 = self.epoch.load(Ordering::Acquire);
+            if e1 % 2 == 0 {
+                for (d, w) in dst.iter_mut().zip(&self.words) {
+                    *d = f32::from_bits(w.load(Ordering::Relaxed));
+                }
+                fence(Ordering::Acquire);
+                if self.epoch.load(Ordering::Relaxed) == e1 {
+                    return e1 / 2;
+                }
+            }
+            spins += 1;
+            if spins % 64 == 0 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deterministic (channel round-robin) transport
+// ---------------------------------------------------------------------
+
+/// The reproducible fabric: mpsc lanes, strict round-robin service order,
+/// blocking round-trip per exchange. Kept bit-compatible with the
+/// pre-refactor EC coordinator so the determinism property tests pass
+/// unchanged.
+pub struct DeterministicTransport {
+    ports: Vec<Box<dyn WorkerPort>>,
+    server: Option<Box<dyn ServerPort>>,
+}
+
+impl DeterministicTransport {
+    /// `rounds` is the number of exchanges each worker will perform
+    /// (⌊steps / sync_every⌋); the server stops after `k · rounds`
+    /// uploads. `init_center` seeds the cached reply snapshot.
+    pub fn new(k: usize, rounds: usize, init_center: &[f32]) -> DeterministicTransport {
+        let mut upload_rxs = Vec::with_capacity(k);
+        let mut download_txs = Vec::with_capacity(k);
+        let mut ports: Vec<Box<dyn WorkerPort>> = Vec::with_capacity(k);
+        for w in 0..k {
+            let (utx, urx) = mpsc::channel::<Upload>();
+            let (dtx, drx) = mpsc::channel::<Arc<Vec<f32>>>();
+            upload_rxs.push(urx);
+            download_txs.push(dtx);
+            ports.push(Box::new(DeterministicWorkerPort { worker: w, utx, drx }));
+        }
+        let server = DeterministicServerPort {
+            upload_rxs,
+            download_txs,
+            next: 0,
+            remaining: k * rounds,
+            published: Arc::new(init_center.to_vec()),
+            published_version: 0,
+        };
+        DeterministicTransport { ports, server: Some(Box::new(server)) }
+    }
+}
+
+impl Transport for DeterministicTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Deterministic
+    }
+
+    fn take_worker_ports(&mut self) -> Vec<Box<dyn WorkerPort>> {
+        std::mem::take(&mut self.ports)
+    }
+
+    fn take_server_port(&mut self) -> Box<dyn ServerPort> {
+        self.server.take().expect("server port already taken")
+    }
+}
+
+struct DeterministicWorkerPort {
+    worker: usize,
+    utx: mpsc::Sender<Upload>,
+    drx: mpsc::Receiver<Arc<Vec<f32>>>,
+}
+
+impl WorkerPort for DeterministicWorkerPort {
+    fn exchange(&mut self, theta: &[f32], center: &mut CenterView) {
+        self.utx
+            .send(Upload { worker: self.worker, credits: 1, theta: theta.to_vec() })
+            .expect("server hung up");
+        *center = CenterView::Shared(self.drx.recv().expect("server reply lost"));
+    }
+}
+
+struct DeterministicServerPort {
+    upload_rxs: Vec<mpsc::Receiver<Upload>>,
+    download_txs: Vec<mpsc::Sender<Arc<Vec<f32>>>>,
+    next: usize,
+    remaining: usize,
+    /// Reply snapshot cache: rebuilt only when the center stepped since
+    /// the last ack, so consecutive replies share one allocation.
+    published: Arc<Vec<f32>>,
+    published_version: u64,
+}
+
+impl ServerPort for DeterministicServerPort {
+    fn recv(&mut self, out: &mut Vec<Upload>) -> bool {
+        if self.remaining == 0 {
+            return false;
+        }
+        let up = self.upload_rxs[self.next].recv().expect("worker hung up early");
+        self.next = (self.next + 1) % self.upload_rxs.len();
+        self.remaining -= 1;
+        out.push(up);
+        true
+    }
+
+    fn publish(&mut self, _shard: usize, _center: &[f32], _version: u64) {}
+
+    fn ack(&mut self, worker: usize, center: &[f32], version: u64) {
+        if version != self.published_version {
+            self.published = Arc::new(center.to_vec());
+            self.published_version = version;
+        }
+        self.download_txs[worker]
+            .send(self.published.clone())
+            .expect("worker download lane closed");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lock-free (seqlock + mailbox) transport
+// ---------------------------------------------------------------------
+
+struct LockFreeShared {
+    /// Center publication, one seqlock buffer per shard. Writer: server.
+    center: Vec<SeqBuf>,
+    /// One full-dim mailbox per worker. Writer: that worker.
+    mailboxes: Vec<SeqBuf>,
+    layout: ShardLayout,
+    /// Workers that have dropped their port (finished all exchanges).
+    done: AtomicUsize,
+}
+
+/// The asynchronous fabric: workers deposit θ into their own mailbox and
+/// read the freshest published center shards; the server sweeps mailboxes
+/// and credits skipped versions. Nobody ever blocks on anybody.
+pub struct LockFreeTransport {
+    ports: Vec<Box<dyn WorkerPort>>,
+    server: Option<Box<dyn ServerPort>>,
+}
+
+impl LockFreeTransport {
+    pub fn new(k: usize, layout: ShardLayout, init_center: &[f32]) -> LockFreeTransport {
+        assert_eq!(layout.dim(), init_center.len());
+        let center = (0..layout.shards())
+            .map(|j| SeqBuf::new(&init_center[layout.range(j)]))
+            .collect();
+        let zeros = vec![0.0f32; init_center.len()];
+        let mailboxes = (0..k).map(|_| SeqBuf::new(&zeros)).collect();
+        let shared = Arc::new(LockFreeShared {
+            center,
+            mailboxes,
+            layout,
+            done: AtomicUsize::new(0),
+        });
+        let ports = (0..k)
+            .map(|w| {
+                Box::new(LockFreeWorkerPort { worker: w, shared: shared.clone() })
+                    as Box<dyn WorkerPort>
+            })
+            .collect();
+        let server = LockFreeServerPort { last_seen: vec![0; k], shared };
+        LockFreeTransport { ports, server: Some(Box::new(server)) }
+    }
+}
+
+impl Transport for LockFreeTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::LockFree
+    }
+
+    fn take_worker_ports(&mut self) -> Vec<Box<dyn WorkerPort>> {
+        std::mem::take(&mut self.ports)
+    }
+
+    fn take_server_port(&mut self) -> Box<dyn ServerPort> {
+        self.server.take().expect("server port already taken")
+    }
+}
+
+struct LockFreeWorkerPort {
+    worker: usize,
+    shared: Arc<LockFreeShared>,
+}
+
+impl WorkerPort for LockFreeWorkerPort {
+    fn exchange(&mut self, theta: &[f32], center: &mut CenterView) {
+        let sh = &*self.shared;
+        sh.mailboxes[self.worker].publish(theta);
+        let buf = center.make_owned();
+        for j in 0..sh.layout.shards() {
+            // Shards refresh independently: a reader may see shard j at a
+            // newer center step than shard j+1. That torn-across-shards
+            // view is the asynchronous regime the scheme tolerates by
+            // construction (each shard is internally consistent).
+            sh.center[j].read_into(&mut buf[sh.layout.range(j)]);
+        }
+    }
+}
+
+impl Drop for LockFreeWorkerPort {
+    fn drop(&mut self) {
+        // Release pairs with the server's Acquire load: the worker's last
+        // mailbox publish happens-before the done increment is observed.
+        self.shared.done.fetch_add(1, Ordering::Release);
+    }
+}
+
+struct LockFreeServerPort {
+    last_seen: Vec<u64>,
+    shared: Arc<LockFreeShared>,
+}
+
+impl LockFreeServerPort {
+    fn sweep(&mut self, out: &mut Vec<Upload>) {
+        let dim = self.shared.layout.dim();
+        for w in 0..self.last_seen.len() {
+            let mbox = &self.shared.mailboxes[w];
+            if mbox.version() > self.last_seen[w] {
+                let mut theta = vec![0.0f32; dim];
+                let v = mbox.read_into(&mut theta);
+                out.push(Upload { worker: w, credits: v - self.last_seen[w], theta });
+                self.last_seen[w] = v;
+            }
+        }
+    }
+}
+
+impl ServerPort for LockFreeServerPort {
+    fn recv(&mut self, out: &mut Vec<Upload>) -> bool {
+        loop {
+            self.sweep(out);
+            if !out.is_empty() {
+                return true;
+            }
+            if self.shared.done.load(Ordering::Acquire) == self.last_seen.len() {
+                // All workers finished; one catch-up sweep for publishes
+                // that raced the done counter, then we are drained.
+                self.sweep(out);
+                return !out.is_empty();
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    fn publish(&mut self, shard: usize, center: &[f32], _version: u64) {
+        self.shared.center[shard].publish(&center[self.shared.layout.range(shard)]);
+    }
+
+    fn ack(&mut self, _worker: usize, _center: &[f32], _version: u64) {}
+}
+
+/// Build the fabric named by `kind` for K workers.
+pub fn build_transport(
+    kind: TransportKind,
+    k: usize,
+    rounds: usize,
+    layout: &ShardLayout,
+    init_center: &[f32],
+) -> Box<dyn Transport> {
+    match kind {
+        TransportKind::Deterministic => {
+            Box::new(DeterministicTransport::new(k, rounds, init_center))
+        }
+        TransportKind::LockFree => {
+            Box::new(LockFreeTransport::new(k, layout.clone(), init_center))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_names_roundtrip() {
+        for kind in [TransportKind::Deterministic, TransportKind::LockFree] {
+            assert_eq!(TransportKind::from_str(kind.name()), Some(kind));
+        }
+        assert_eq!(TransportKind::from_str("carrier-pigeon"), None);
+    }
+
+    #[test]
+    fn seqbuf_roundtrips_and_counts_versions() {
+        let buf = SeqBuf::new(&[1.0, 2.0, 3.0]);
+        assert_eq!(buf.version(), 0);
+        let mut out = vec![0.0; 3];
+        assert_eq!(buf.read_into(&mut out), 0);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        buf.publish(&[4.0, 5.0, 6.0]);
+        buf.publish(&[7.0, 8.0, 9.0]);
+        assert_eq!(buf.version(), 2);
+        assert_eq!(buf.read_into(&mut out), 2);
+        assert_eq!(out, vec![7.0, 8.0, 9.0]);
+        assert_eq!(buf.len(), 3);
+    }
+
+    #[test]
+    fn seqbuf_concurrent_reads_never_tear() {
+        // Writer publishes constant-valued vectors; readers must never
+        // observe a mix of two publishes.
+        let buf = Arc::new(SeqBuf::new(&[0.0; 64]));
+        let w = {
+            let buf = buf.clone();
+            std::thread::spawn(move || {
+                for i in 1..=2_000u32 {
+                    buf.publish(&[i as f32; 64]);
+                }
+            })
+        };
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                let buf = buf.clone();
+                std::thread::spawn(move || {
+                    let mut dst = vec![0.0f32; 64];
+                    for _ in 0..2_000 {
+                        buf.read_into(&mut dst);
+                        let first = dst[0];
+                        assert!(dst.iter().all(|&x| x == first), "torn read: {dst:?}");
+                    }
+                })
+            })
+            .collect();
+        w.join().unwrap();
+        for r in readers {
+            r.join().unwrap();
+        }
+        let mut dst = vec![0.0f32; 64];
+        assert_eq!(buf.read_into(&mut dst), 2_000);
+        assert_eq!(dst[0], 2_000.0);
+    }
+
+    #[test]
+    fn lockfree_mailboxes_credit_skipped_versions() {
+        let layout = ShardLayout::contiguous(2, 1);
+        let mut t = LockFreeTransport::new(2, layout, &[0.0, 0.0]);
+        let mut ports = t.take_worker_ports();
+        let mut server = t.take_server_port();
+        let mut center = CenterView::Owned(vec![0.0f32; 2]);
+        // Worker 0 exchanges three times before the server looks.
+        ports[0].exchange(&[1.0, 1.0], &mut center);
+        ports[0].exchange(&[2.0, 2.0], &mut center);
+        ports[0].exchange(&[3.0, 3.0], &mut center);
+        ports[1].exchange(&[9.0, 9.0], &mut center);
+        let mut out = Vec::new();
+        assert!(server.recv(&mut out));
+        out.sort_by_key(|u| u.worker);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].credits, 3); // two overwritten + one live
+        assert_eq!(out[0].theta, vec![3.0, 3.0]);
+        assert_eq!(out[1].credits, 1);
+        // Server publication reaches the next worker read.
+        server.publish(0, &[5.0, 6.0], 1);
+        ports[1].exchange(&[4.0, 4.0], &mut center);
+        assert_eq!(center.as_slice(), &[5.0, 6.0]);
+        // After all ports drop, recv drains the tail and reports done.
+        drop(ports);
+        let mut out = Vec::new();
+        assert!(server.recv(&mut out)); // worker 1's last upload
+        assert_eq!(out[0].worker, 1);
+        let mut out = Vec::new();
+        assert!(!server.recv(&mut out));
+    }
+
+    #[test]
+    fn deterministic_round_trip_shares_acked_center() {
+        let mut t = DeterministicTransport::new(1, 1, &[0.0, 0.0]);
+        let mut ports = t.take_worker_ports();
+        let mut server = t.take_server_port();
+        let h = std::thread::spawn(move || {
+            let mut center = CenterView::Owned(vec![0.0f32; 2]);
+            ports[0].exchange(&[1.0, 2.0], &mut center);
+            // The reply is the server's shared snapshot, not a copy.
+            assert!(matches!(center, CenterView::Shared(_)));
+            center.as_slice().to_vec()
+        });
+        let mut out = Vec::new();
+        assert!(server.recv(&mut out));
+        assert_eq!(out[0].theta, vec![1.0, 2.0]);
+        assert_eq!(out[0].credits, 1);
+        server.ack(0, &[7.0, 8.0], 1);
+        assert_eq!(h.join().unwrap(), vec![7.0, 8.0]);
+        assert!(!server.recv(&mut Vec::new()));
+    }
+
+    #[test]
+    fn center_view_make_owned_preserves_contents() {
+        let mut v = CenterView::Shared(Arc::new(vec![1.0, 2.0]));
+        v.make_owned()[1] = 5.0;
+        assert_eq!(v.as_slice(), &[1.0, 5.0]);
+        assert!(matches!(v, CenterView::Owned(_)));
+    }
+}

@@ -254,6 +254,7 @@ pub fn run_scheme(
                 steps: cfg.steps,
                 delay: cfg.delay,
                 opts,
+                ..Default::default()
             };
             let r = run_ec(&ec_cfg, params, engines, seed);
             // Evaluate worker 0 (any worker is a valid chain; the paper

@@ -97,6 +97,7 @@ pub fn run(scale: Scale, seed: u64) -> StalenessResult {
             steps: cfg.steps,
             delay: cfg.delay,
             opts: opts.clone(),
+            ..Default::default()
         };
         let r = run_ec(&ec_cfg, params, engines, run_seed);
         let series = nll_series("ec", pot.as_ref(), &r.chains[0].samples, cfg.eval_points);

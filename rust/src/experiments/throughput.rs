@@ -1,22 +1,33 @@
-//! PERF — step-throughput microbenchmarks: native vs XLA backends and
-//! worker scaling. Feeds EXPERIMENTS.md §Perf.
+//! PERF — step-throughput microbenchmarks: native vs XLA backends,
+//! worker scaling, and exchange-fabric comparison. Feeds EXPERIMENTS.md
+//! §Perf and `cargo bench --bench bench_coupling`.
 
 use super::{Scale, Series};
 use crate::coordinator::ec::run_ec;
 use crate::coordinator::engine::{NativeEngine, StepKind, WorkerEngine};
-use crate::coordinator::{EcConfig, RunOptions};
+use crate::coordinator::{EcConfig, RunOptions, TransportKind};
 use crate::experiments::fig2::mnist_potential;
+use crate::potentials::gaussian::GaussianPotential;
 use crate::potentials::Potential;
 use crate::samplers::SghmcParams;
 use std::sync::Arc;
 
+fn throughput_opts() -> RunOptions {
+    RunOptions { record_samples: false, log_every: usize::MAX / 2, ..Default::default() }
+}
+
 /// Worker-scaling curve: aggregate steps/sec for K ∈ 1..=max_k on the
-/// MNIST MLP workload.
-pub fn worker_scaling(scale: Scale, max_k: usize, seed: u64) -> Series {
+/// MNIST MLP workload, over the given exchange fabric.
+pub fn worker_scaling_with(
+    scale: Scale,
+    max_k: usize,
+    seed: u64,
+    transport: TransportKind,
+) -> Series {
     let pot: Arc<dyn Potential> = mnist_potential(scale);
     let params = SghmcParams { eps: 1e-4, ..Default::default() };
     let steps = scale.pick(60, 400);
-    let mut series = Series::new("EC steps/sec");
+    let mut series = Series::new(format!("EC steps/sec ({})", transport.name()));
     for k in 1..=max_k {
         let engines: Vec<Box<dyn WorkerEngine>> = (0..k)
             .map(|_| {
@@ -29,17 +40,20 @@ pub fn worker_scaling(scale: Scale, max_k: usize, seed: u64) -> Series {
             alpha: 1.0,
             sync_every: 2,
             steps,
-            opts: RunOptions {
-                record_samples: false,
-                log_every: usize::MAX / 2,
-                ..Default::default()
-            },
+            transport,
+            opts: throughput_opts(),
             ..Default::default()
         };
         let r = run_ec(&cfg, params, engines, seed);
         series.push(k as f64, r.metrics.steps_per_sec);
     }
     series
+}
+
+/// Worker-scaling curve over the deterministic fabric (the historical
+/// default measurement).
+pub fn worker_scaling(scale: Scale, max_k: usize, seed: u64) -> Series {
+    worker_scaling_with(scale, max_k, seed, TransportKind::Deterministic)
 }
 
 /// Parallel efficiency at K workers: throughput(K) / (K · throughput(1)).
@@ -54,6 +68,67 @@ pub fn parallel_efficiency(series: &Series) -> Vec<f64> {
         .zip(&series.ys)
         .map(|(k, t)| t / (k * t1))
         .collect()
+}
+
+/// Exchange-fabric measurement on the Fig. 1 Gaussian at `sync_every = 1`
+/// (every worker step is an exchange — the worst case for a blocking
+/// fabric, and the acceptance workload for the lock-free one).
+#[derive(Debug, Clone, Copy)]
+pub struct ExchangeThroughput {
+    pub transport: TransportKind,
+    pub workers: usize,
+    pub exchanges: u64,
+    pub elapsed: f64,
+    pub exchanges_per_sec: f64,
+    pub steps_per_sec: f64,
+}
+
+pub fn exchange_throughput(
+    transport: TransportKind,
+    k: usize,
+    steps: usize,
+    seed: u64,
+) -> ExchangeThroughput {
+    let pot: Arc<dyn Potential> = Arc::new(GaussianPotential::fig1());
+    let params = SghmcParams { eps: 0.05, ..Default::default() };
+    let engines: Vec<Box<dyn WorkerEngine>> = (0..k)
+        .map(|_| {
+            Box::new(NativeEngine::new(pot.clone(), params, StepKind::Sghmc))
+                as Box<dyn WorkerEngine>
+        })
+        .collect();
+    let cfg = EcConfig {
+        workers: k,
+        alpha: 1.0,
+        sync_every: 1,
+        steps,
+        transport,
+        opts: throughput_opts(),
+        ..Default::default()
+    };
+    let r = run_ec(&cfg, params, engines, seed);
+    ExchangeThroughput {
+        transport,
+        workers: k,
+        exchanges: r.metrics.exchanges,
+        elapsed: r.elapsed,
+        exchanges_per_sec: r.metrics.exchanges as f64 / r.elapsed.max(1e-12),
+        steps_per_sec: r.metrics.steps_per_sec,
+    }
+}
+
+/// Deterministic-vs-lockfree comparison at K workers on the Fig. 1
+/// Gaussian (the bench_coupling acceptance workload). Returns
+/// (deterministic, lockfree).
+pub fn transport_comparison(
+    scale: Scale,
+    k: usize,
+    seed: u64,
+) -> (ExchangeThroughput, ExchangeThroughput) {
+    let steps = scale.pick(2_000, 20_000);
+    let det = exchange_throughput(TransportKind::Deterministic, k, steps, seed);
+    let lf = exchange_throughput(TransportKind::LockFree, k, steps, seed);
+    (det, lf)
 }
 
 #[cfg(test)]
@@ -73,5 +148,18 @@ mod tests {
         let eff = parallel_efficiency(&s);
         assert!(eff[0] > 0.99 && eff[0] < 1.01);
         assert!(eff.iter().all(|&e| e > 0.05), "{eff:?}");
+    }
+
+    #[test]
+    fn transport_comparison_measures_both_fabrics() {
+        let (det, lf) = transport_comparison(Scale::Fast, 4, 3);
+        // Same workload, same exchange count on both fabrics.
+        assert_eq!(det.exchanges, lf.exchanges);
+        assert!(det.exchanges_per_sec > 0.0);
+        assert!(lf.exchanges_per_sec > 0.0);
+        assert!(det.steps_per_sec > 0.0 && lf.steps_per_sec > 0.0);
+        // The ≥2x lock-free speedup claim is asserted by bench_coupling
+        // at full scale, not here: CI boxes time-slice too coarsely for a
+        // reliable smoke-scale ratio.
     }
 }

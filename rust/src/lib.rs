@@ -50,6 +50,10 @@ pub mod runtime;
 pub mod samplers;
 pub mod testing;
 pub mod util;
+/// Offline stub for the PJRT bindings; the `xla-runtime` feature swaps in
+/// the real `xla` crate (see Cargo.toml).
+#[cfg(not(feature = "xla-runtime"))]
+pub mod xla;
 
 /// Crate version, re-exported for the CLI banner.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -12,6 +12,12 @@
 
 pub mod manifest;
 
+// Default build: the in-crate PJRT stub (graceful "runtime unavailable"
+// errors). With `xla-runtime` this import compiles out and the bare
+// `xla::` paths below resolve to the real extern crate instead.
+#[cfg(not(feature = "xla-runtime"))]
+use crate::xla;
+
 use anyhow::{anyhow, bail, Context, Result};
 use manifest::{ArtifactSpec, DType, Manifest};
 use std::collections::HashMap;

@@ -115,18 +115,40 @@ impl CenterStepper {
 
     pub fn step(&mut self, state: &mut ChainState, theta_mean: &[f32], rng: &mut Pcg64) {
         let n = state.theta.len();
+        self.step_range(state, theta_mean, 0..n, rng);
+    }
+
+    /// Advance only the coordinates in `range` (a contiguous θ shard).
+    ///
+    /// Sharded center stepping for NN-sized parameters: the server can
+    /// step and publish each shard independently, each shard drawing from
+    /// its own RNG stream. `step_range(0..dim)` is bit-identical to
+    /// [`step`](Self::step), which keeps the single-shard deterministic
+    /// configuration byte-compatible with the pre-sharding coordinator.
+    pub fn step_range(
+        &mut self,
+        state: &mut ChainState,
+        theta_mean: &[f32],
+        range: std::ops::Range<usize>,
+        rng: &mut Pcg64,
+    ) {
+        let n = state.theta.len();
         debug_assert_eq!(theta_mean.len(), n);
+        debug_assert!(range.end <= n);
         let eps = self.params.eps as f32;
         let minv = self.params.mass_inv as f32;
         let cfric = self.params.center_friction as f32;
         let alpha = self.alpha as f32;
         let nscale = self.params.center_noise_scale() as f32;
 
-        rng.fill_normal(&mut self.noise[..self.live_dim]);
-        if self.live_dim < n {
-            self.noise[self.live_dim..].fill(0.0);
+        // Noise only on the live slice of this range; padding stays zero.
+        let live_hi = range.end.min(self.live_dim);
+        let live_lo = range.start.min(live_hi);
+        rng.fill_normal(&mut self.noise[live_lo..live_hi]);
+        if live_hi < range.end {
+            self.noise[live_hi..range.end].fill(0.0);
         }
-        for i in 0..n {
+        for i in range {
             let c = state.theta[i];
             let r = state.p[i];
             state.theta[i] = c + eps * minv * r;
@@ -243,6 +265,49 @@ mod tests {
         let avg = acc / count as f64;
         assert!((avg - 2.0).abs() < 0.25, "avg c={avg}");
         let _ = state;
+    }
+
+    #[test]
+    fn center_step_range_shards_compose_deterministically() {
+        // Stepping shard ranges with per-shard streams is deterministic,
+        // covers every live coordinate, and never touches padding.
+        let prm = SghmcParams { eps: 0.05, ..params() };
+        // Worker snapshots are zero-padded, so the mean is too.
+        let mut mean = vec![1.0f32; 8];
+        mean[6..].fill(0.0);
+        let run = || {
+            let mut cs = CenterStepper::new(prm, 2.0, 8).with_live_dim(6);
+            let mut st = ChainState::zeros(8);
+            let mut rngs = [Pcg64::new(9, 1), Pcg64::new(9, 2)];
+            for _ in 0..50 {
+                cs.step_range(&mut st, &mean, 0..4, &mut rngs[0]);
+                cs.step_range(&mut st, &mean, 4..8, &mut rngs[1]);
+            }
+            st
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert!(vecops::norm_sq(&a.theta[..6]) > 0.0);
+        assert_eq!(&a.theta[6..], &[0.0, 0.0]);
+        assert_eq!(&a.p[6..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn center_step_range_full_range_equals_step() {
+        let prm = SghmcParams { eps: 0.05, ..params() };
+        let mean = vec![0.5f32; 4];
+        let mut a = CenterStepper::new(prm, 1.5, 4).with_live_dim(3);
+        let mut b = CenterStepper::new(prm, 1.5, 4).with_live_dim(3);
+        let mut sa = ChainState { theta: vec![1.0, -1.0, 0.5, 0.0], p: vec![0.0; 4] };
+        let mut sb = sa.clone();
+        let mut ra = Pcg64::seeded(21);
+        let mut rb = Pcg64::seeded(21);
+        for _ in 0..25 {
+            a.step(&mut sa, &mean, &mut ra);
+            b.step_range(&mut sb, &mean, 0..4, &mut rb);
+        }
+        assert_eq!(sa, sb);
     }
 
     /// Stationary check: sampling a 1-D standard normal via exact gradients.

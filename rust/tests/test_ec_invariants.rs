@@ -11,7 +11,7 @@
 use ecsgmcmc::coordinator::ec::run_ec;
 use ecsgmcmc::coordinator::engine::{NativeEngine, StepKind, WorkerEngine};
 use ecsgmcmc::coordinator::{
-    EcConfig, EcCoordinator, NaiveConfig, NaiveCoordinator, RunOptions,
+    EcConfig, EcCoordinator, NaiveConfig, NaiveCoordinator, RunOptions, TransportKind,
 };
 use ecsgmcmc::diagnostics::rhat;
 use ecsgmcmc::math::rng::Pcg64;
@@ -241,6 +241,64 @@ fn ec_chains_mix_rhat_near_one() {
         .collect();
     let rh = rhat::max_rhat(&per_chain);
     assert!(rh < 1.1, "R-hat = {rh}");
+}
+
+/// Prop. 3.1 under the lock-free fabric: worker trajectories are racy
+/// (center reads are whatever was freshest), but the stationary
+/// distribution of every worker is still the posterior — pooled samples
+/// must match the analytic Gaussian moments at the same tolerance as the
+/// deterministic `ec_sampler_preserves_target_moments`.
+#[test]
+fn lockfree_ec_preserves_target_moments() {
+    let cfg = EcConfig {
+        workers: 4,
+        alpha: 1.0,
+        sync_every: 2,
+        steps: 30_000,
+        transport: TransportKind::LockFree,
+        opts: RunOptions {
+            thin: 10,
+            burn_in: 3_000,
+            log_every: 5_000,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: 0.05, ..Default::default() };
+    let r = EcCoordinator::new(cfg, params, pot()).run(17);
+    // Center time keeps pace with worker time even when the mailboxes
+    // overwrite uploads: every exchange is credited.
+    assert_eq!(r.metrics.exchanges, 4 * 15_000);
+    assert!(r.metrics.center_steps > 0);
+    let samples = ecsgmcmc::diagnostics::to_f64_samples(&r.thetas(), 2);
+    let m = ecsgmcmc::diagnostics::moments(&samples);
+    assert!(m.mean_error(&[0.0, 0.0]) < 0.15, "mean={:?}", m.mean);
+    assert!(m.cov_error(&[1.0, 0.6, 0.6, 0.8]) < 0.3, "cov={:?}", m.cov);
+}
+
+/// Sharded lock-free EC: the center partitioned into contiguous ranges
+/// steps/publishes per shard; stationarity must be unaffected.
+#[test]
+fn lockfree_sharded_center_stays_correct() {
+    let cfg = EcConfig {
+        workers: 4,
+        alpha: 1.0,
+        sync_every: 2,
+        steps: 20_000,
+        transport: TransportKind::LockFree,
+        shards: 2,
+        opts: RunOptions { thin: 10, burn_in: 2_000, log_every: 5_000, ..Default::default() },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: 0.05, ..Default::default() };
+    let r = EcCoordinator::new(cfg, params, pot()).run(29);
+    for (_, c) in &r.center_trace {
+        assert!(c.iter().all(|x| x.is_finite()));
+    }
+    let samples = ecsgmcmc::diagnostics::to_f64_samples(&r.thetas(), 2);
+    let m = ecsgmcmc::diagnostics::moments(&samples);
+    assert!(m.mean_error(&[0.0, 0.0]) < 0.15, "mean={:?}", m.mean);
+    assert!(m.cov_error(&[1.0, 0.6, 0.6, 0.8]) < 0.35, "cov={:?}", m.cov);
 }
 
 #[test]
