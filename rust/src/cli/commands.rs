@@ -2,7 +2,7 @@
 
 use super::args::Parsed;
 use crate::bench::print_series_table;
-use crate::config::{Backend, RunConfig, Scheme, Target};
+use crate::config::{Backend, RunConfig, Scheme, SinkKind, Target};
 use crate::coordinator::ec::run_ec;
 use crate::coordinator::engine::{NativeEngine, StepKind, WorkerEngine, XlaEngine};
 use crate::coordinator::single::run_single;
@@ -24,7 +24,8 @@ use crate::{log_info, log_warn};
 use anyhow::{anyhow, Context, Result};
 use std::sync::Arc;
 
-/// `ecsgmcmc sample --config <file> [--seed n] [--transport t] [--shards n]`.
+/// `ecsgmcmc sample --config <file> [--seed n] [--transport t] [--shards n]
+/// [--sink kind] [--sink-path file]`.
 pub fn cmd_sample(p: &Parsed) -> Result<i32> {
     let path = p.opt("config").ok_or_else(|| anyhow!("--config is required"))?;
     let mut cfg = RunConfig::from_file(path)?;
@@ -38,7 +39,32 @@ pub fn cmd_sample(p: &Parsed) -> Result<i32> {
     if let Some(s) = p.opt("shards") {
         cfg.shards = s.parse().context("--shards")?;
     }
+    if let Some(s) = p.opt("sink") {
+        cfg.sink = SinkKind::from_str(s).context("--sink")?;
+    }
+    if let Some(s) = p.opt("sink-path") {
+        cfg.sink_path = Some(s.to_string());
+    }
     cfg.validate()?;
+    // Probe stream-path writability now: the scheme drivers treat sink
+    // init as infallible, so an unwritable path must fail here with a
+    // clean error before any sampling starts. Open in append mode — the
+    // previous run's artifact must survive until the new run actually
+    // begins (the driver's own hub truncates it then).
+    let spec = cfg.sink_spec();
+    if let Some(stream) = spec.jsonl_path() {
+        if let Some(parent) = stream.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating stream dir {parent:?}"))?;
+            }
+        }
+        std::fs::OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(stream)
+            .with_context(|| format!("opening stream {stream:?}"))?;
+    }
     let result = run_configured(&cfg)?;
     report_run(&cfg, &result);
     Ok(0)
@@ -99,6 +125,7 @@ fn run_options(cfg: &RunConfig) -> RunOptions {
         thin: cfg.thin,
         burn_in: cfg.burn_in,
         init_sigma: 0.5,
+        sink: cfg.sink_spec(),
         ..Default::default()
     }
 }
@@ -224,17 +251,104 @@ fn report_run(cfg: &RunConfig, r: &RunResult) {
     if r.metrics.center_steps > 0 {
         println!("center steps: {}", r.metrics.center_steps);
     }
+    if r.metrics.samples_dropped > 0 {
+        println!(
+            "samples dropped (past max_samples, no stream attached): {}",
+            r.metrics.samples_dropped
+        );
+    }
+    let spec = cfg.sink_spec();
+    if let Some(stream) = spec.jsonl_path() {
+        println!("stream: {}", stream.display());
+    }
+    if let Some(d) = &r.online_diag {
+        println!(
+            "online diag: n={} chains={} coords={} max R-hat={:.4} min ESS={:.1}{}",
+            d.n,
+            d.chains,
+            d.tracked,
+            d.max_rhat,
+            d.min_ess,
+            if d.batch > 1 { format!(" (batch means, b={})", d.batch) } else { String::new() }
+        );
+    }
     // For low-dimensional analytic targets, print sample moments.
     if matches!(cfg.target, Target::Gaussian | Target::Mixture | Target::Banana)
         && !r.samples.is_empty()
     {
-        let samples = crate::diagnostics::to_f64_samples(&r.thetas(), 2);
+        let samples = crate::diagnostics::to_f64_samples(r.thetas(), 2);
         let m = crate::diagnostics::moments(&samples);
         println!("sample mean: [{:.4}, {:.4}]", m.mean[0], m.mean[1]);
         println!(
             "sample cov:  [[{:.4}, {:.4}], [{:.4}, {:.4}]]",
             m.cov[0], m.cov[1], m.cov[2], m.cov[3]
         );
+    }
+}
+
+/// `ecsgmcmc replay --file <run.jsonl> [--diag] [--dim d]`.
+///
+/// Reconstructs a run from its JSONL stream and reports it like a live
+/// run; with `--diag`, streams the file through the online-diagnostics
+/// accumulator instead (bounded memory, no reconstruction).
+pub fn cmd_replay(p: &Parsed) -> Result<i32> {
+    let path = p.opt("file").ok_or_else(|| anyhow!("--file is required"))?;
+    let path = std::path::Path::new(path);
+    if p.has_flag("diag") {
+        let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+        let (d, metrics) = crate::sink::replay::stream_diag(file)?;
+        println!(
+            "stream diag: n={} chains={} coords={} max R-hat={:.4} min ESS={:.1}{}",
+            d.n,
+            d.chains,
+            d.tracked,
+            d.max_rhat,
+            d.min_ess,
+            if d.batch > 1 { format!(" (batch means, b={})", d.batch) } else { String::new() }
+        );
+        if !d.mean.is_empty() {
+            print_moments(&d.mean, &d.cov, d.tracked.min(2));
+        }
+        if let Some(m) = metrics {
+            println!("recorded metrics: {} steps, {} exchanges", m.total_steps, m.exchanges);
+        }
+        return Ok(0);
+    }
+    let r = crate::sink::replay::replay_file(path)?;
+    println!(
+        "replayed: {} chains, {} samples, {} center points, elapsed {:.2}s",
+        r.chains.len(),
+        r.samples.len(),
+        r.center_trace.len(),
+        r.elapsed
+    );
+    if r.metrics.exchanges > 0 {
+        println!("exchanges: {}", r.metrics.exchanges);
+    }
+    if r.metrics.samples_dropped > 0 {
+        println!("samples dropped at record time: {}", r.metrics.samples_dropped);
+    }
+    let dim = r.samples.first().map(|(_, theta)| theta.len()).unwrap_or(0);
+    if dim > 0 {
+        let d = (p.opt_u64("dim", dim.min(2) as u64)? as usize).clamp(1, dim);
+        let samples = crate::diagnostics::to_f64_samples(r.thetas(), d);
+        let m = crate::diagnostics::moments(&samples);
+        print_moments(&m.mean, &m.cov, d);
+    }
+    Ok(0)
+}
+
+fn print_moments(mean: &[f64], cov: &[f64], d: usize) {
+    // cov is row-major over mean.len() coordinates; print the leading
+    // d×d block.
+    let full = mean.len();
+    let fmt_row = |row: &[f64]| {
+        row.iter().map(|x| format!("{x:.4}")).collect::<Vec<_>>().join(", ")
+    };
+    println!("sample mean: [{}]", fmt_row(&mean[..d]));
+    for a in 0..d {
+        let row: Vec<f64> = (0..d).map(|b| cov[a * full + b]).collect();
+        println!("sample cov[{a}]: [{}]", fmt_row(&row));
     }
 }
 

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!
 //! * `sample --config <file.toml>` — run one configured sampling job;
+//! * `replay --file <run.jsonl>` — reconstruct or re-diagnose a streamed
+//!   run from its JSONL artifact (DESIGN.md §7);
 //! * `experiment --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF>` — run
 //!   a paper experiment and print its table (plus CSVs under `--out`);
 //! * `artifacts [--dir <dir>]` — inspect the AOT artifact manifest;
@@ -18,6 +20,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
     let parsed = args::Parsed::parse(argv)?;
     match parsed.command.as_str() {
         "sample" => commands::cmd_sample(&parsed),
+        "replay" => commands::cmd_replay(&parsed),
         "experiment" => commands::cmd_experiment(&parsed),
         "artifacts" => commands::cmd_artifacts(&parsed),
         "version" => {
@@ -49,6 +52,12 @@ COMMANDS:
                   --seed <n>             override the config seed
                   --transport <t>        EC fabric: deterministic|lockfree
                   --shards <n>           EC center shards (default 1)
+                  --sink <s>             memory|jsonl|diag|tee (default memory)
+                  --sink-path <file>     JSONL stream file (default <out_dir>/run.jsonl)
+    replay      Reconstruct a streamed run from its JSONL artifact
+                  --file <run.jsonl>     stream produced by --sink jsonl|tee
+                  --diag                 stream diagnostics only (bounded memory)
+                  --dim <d>              moment dimensions to report (default 2)
     experiment  Regenerate a paper experiment
                   --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF>
                   --fast                 smoke-scale run

@@ -11,8 +11,9 @@ pub mod toml;
 
 use crate::coordinator::TransportKind;
 use crate::samplers::SghmcParams;
+use crate::sink::SinkSpec;
 use anyhow::{bail, Context, Result};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 pub use toml::{Toml, Value};
 
 /// Which parallelization scheme to run (paper Sec. 2–3).
@@ -92,6 +93,41 @@ impl Backend {
     }
 }
 
+/// Sample-sink selection (DESIGN.md §7): where recorded samples go.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SinkKind {
+    /// In-memory, capped at `max_samples` (the default).
+    #[default]
+    Memory,
+    /// Stream every event to a JSONL file; nothing retained in memory.
+    Jsonl,
+    /// Online convergence diagnostics only; θ is never retained.
+    Diag,
+    /// memory + jsonl + diag together.
+    Tee,
+}
+
+impl SinkKind {
+    pub fn from_str(s: &str) -> Result<SinkKind> {
+        Ok(match s {
+            "memory" => SinkKind::Memory,
+            "jsonl" => SinkKind::Jsonl,
+            "diag" => SinkKind::Diag,
+            "tee" => SinkKind::Tee,
+            other => bail!("unknown sink '{other}' (memory|jsonl|diag|tee)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SinkKind::Memory => "memory",
+            SinkKind::Jsonl => "jsonl",
+            SinkKind::Diag => "diag",
+            SinkKind::Tee => "tee",
+        }
+    }
+}
+
 /// Fully-resolved run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -126,6 +162,11 @@ pub struct RunConfig {
     pub artifacts_dir: String,
     /// Output directory for traces/results.
     pub out_dir: String,
+    /// Sample-sink selection (`[sink] kind`, `--sink`).
+    pub sink: SinkKind,
+    /// JSONL stream file for `jsonl`/`tee` sinks (`[sink] path`,
+    /// `--sink-path`); defaults to `<out_dir>/run.jsonl`.
+    pub sink_path: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -148,6 +189,8 @@ impl Default for RunConfig {
             batch_size: 100,
             artifacts_dir: "artifacts".into(),
             out_dir: "out".into(),
+            sink: SinkKind::Memory,
+            sink_path: None,
         }
     }
 }
@@ -213,8 +256,36 @@ impl RunConfig {
             cfg.out_dir = s.to_string();
         }
 
+        if let Some(s) = t.get_str("sink", "kind") {
+            cfg.sink = SinkKind::from_str(s)?;
+        }
+        if let Some(s) = t.get_str("sink", "path") {
+            cfg.sink_path = Some(s.to_string());
+        }
+
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Resolve the configured sink into the runtime [`SinkSpec`],
+    /// defaulting the stream file to `<out_dir>/run.jsonl`.
+    pub fn sink_spec(&self) -> SinkSpec {
+        let path = || {
+            self.sink_path
+                .clone()
+                .map(PathBuf::from)
+                .unwrap_or_else(|| Path::new(&self.out_dir).join("run.jsonl"))
+        };
+        match self.sink {
+            SinkKind::Memory => SinkSpec::Memory,
+            SinkKind::Jsonl => SinkSpec::Jsonl { path: path() },
+            SinkKind::Diag => SinkSpec::OnlineDiag,
+            SinkKind::Tee => SinkSpec::Tee(vec![
+                SinkSpec::Memory,
+                SinkSpec::Jsonl { path: path() },
+                SinkSpec::OnlineDiag,
+            ]),
+        }
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -316,6 +387,40 @@ alpha = 0.5
         let cfg = RunConfig::from_toml_str("[run]\nscheme = \"ec\"\n").unwrap();
         assert_eq!(cfg.transport, TransportKind::Deterministic);
         assert_eq!(cfg.shards, 1);
+    }
+
+    #[test]
+    fn parses_sink_section() {
+        let cfg = RunConfig::from_toml_str(
+            "[sink]\nkind = \"jsonl\"\npath = \"out/run-a.jsonl\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.sink, SinkKind::Jsonl);
+        assert_eq!(cfg.sink_path.as_deref(), Some("out/run-a.jsonl"));
+        assert_eq!(
+            cfg.sink_spec(),
+            SinkSpec::Jsonl { path: PathBuf::from("out/run-a.jsonl") }
+        );
+        // Default: in-memory, path resolved from out_dir when needed.
+        let cfg = RunConfig::from_toml_str("[run]\nscheme = \"ec\"\n").unwrap();
+        assert_eq!(cfg.sink, SinkKind::Memory);
+        assert_eq!(cfg.sink_spec(), SinkSpec::Memory);
+        let cfg =
+            RunConfig::from_toml_str("[sink]\nkind = \"tee\"\n[run]\nout_dir = \"o\"\n").unwrap();
+        match cfg.sink_spec() {
+            SinkSpec::Tee(parts) => {
+                assert!(parts.contains(&SinkSpec::Jsonl { path: PathBuf::from("o/run.jsonl") }));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(RunConfig::from_toml_str("[sink]\nkind = \"telepathy\"\n").is_err());
+    }
+
+    #[test]
+    fn sink_kind_names_roundtrip() {
+        for k in [SinkKind::Memory, SinkKind::Jsonl, SinkKind::Diag, SinkKind::Tee] {
+            assert_eq!(SinkKind::from_str(k.name()).unwrap(), k);
+        }
     }
 
     #[test]

@@ -38,6 +38,7 @@ use crate::math::vecops;
 use crate::potentials::Potential;
 use crate::samplers::sghmc::CenterStepper;
 use crate::samplers::{ChainState, SghmcParams};
+use crate::sink::{Frame, SampleSink, SinkHub};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -128,7 +129,8 @@ impl ExchangePolicy for EcPolicy {
 
 /// Center-server loop, generic over the fabric's [`ServerPort`]: consume
 /// uploads, advance the center dynamics by `sync_every / K` steps per
-/// upload credit, publish/ack through the port.
+/// upload credit, publish/ack through the port. The center trajectory is
+/// recorded through its own [`Frame::Center`] sink.
 #[allow(clippy::too_many_arguments)]
 fn run_center_server(
     mut port: Box<dyn ServerPort>,
@@ -142,6 +144,7 @@ fn run_center_server(
     live: usize,
     init_center: Vec<f32>,
     seed: u64,
+    mut center_sink: Box<dyn SampleSink>,
 ) -> (Vec<(f64, Vec<f32>)>, Metrics) {
     let dim = init_center.len();
     let mut center = ChainState::from_theta(init_center.clone());
@@ -156,7 +159,6 @@ fn run_center_server(
     let mut theta_mean = vec![0.0f32; dim];
     let mut budget = 0.0f64;
     let mut metrics = Metrics::default();
-    let mut center_trace: Vec<(f64, Vec<f32>)> = Vec::new();
     let mut center_steps = 0u64;
     let t0 = Instant::now();
     let mut uploads: Vec<Upload> = Vec::new();
@@ -183,10 +185,8 @@ fn run_center_server(
                 for j in 0..layout.shards() {
                     port.publish(j, &center.theta, center_steps);
                 }
-                if center_steps as usize % opts.log_every == 0
-                    && center_trace.len() < opts.max_samples
-                {
-                    center_trace.push((t0.elapsed().as_secs_f64(), center.theta.clone()));
+                if center_steps as usize % opts.log_every == 0 {
+                    center_sink.record(t0.elapsed().as_secs_f64(), &center.theta);
                 }
             }
             delay.exchange_sleep();
@@ -194,6 +194,10 @@ fn run_center_server(
         }
     }
     metrics.center_steps = center_steps;
+    // Overflow past the in-memory cap is accounted, not silently lost.
+    metrics.samples_dropped = center_sink.dropped();
+    let center_trace = center_sink.take_samples();
+    center_sink.flush();
     (center_trace, metrics)
 }
 
@@ -226,11 +230,15 @@ pub fn run_ec(
     let ports = transport.take_worker_ports();
     let server_port = transport.take_server_port();
 
+    let hub = SinkHub::new(&cfg.opts.sink).expect("sink init failed");
+    hub.write_meta("ec", k, seed);
+
     // ---- Server thread: owns (c, r), snapshots, center dynamics. ----
     let server = {
         let layout = topo.layout().clone();
         let (alpha, delay, opts) = (cfg.alpha, cfg.delay, cfg.opts.clone());
         let center_init = init0.theta.clone();
+        let center_sink = hub.frame_sink(Frame::Center, cfg.opts.max_samples);
         std::thread::Builder::new()
             .name("ec-server".into())
             .spawn(move || {
@@ -246,6 +254,7 @@ pub fn run_ec(
                     live,
                     center_init,
                     seed,
+                    center_sink,
                 )
             })
             .expect("spawn ec-server")
@@ -275,6 +284,7 @@ pub fn run_ec(
                 cfg.delay,
                 seed,
                 start,
+                hub.frame_sink(Frame::Chain(w), cfg.opts.max_samples),
             )
         })
         .collect();
@@ -292,6 +302,7 @@ pub fn run_ec(
     result.metrics.total_steps = worker_steps;
     result.metrics.steps_per_sec = worker_steps as f64 / result.elapsed.max(1e-12);
     result.merge_samples();
+    hub.finish(&mut result);
     result
 }
 
@@ -396,7 +407,7 @@ mod tests {
             Arc::new(GaussianPotential::fig1()),
         )
         .run(17);
-        let samples = crate::diagnostics::to_f64_samples(&r.thetas(), 2);
+        let samples = crate::diagnostics::to_f64_samples(r.thetas(), 2);
         let m = crate::diagnostics::moments(&samples);
         assert!(m.mean_error(&[0.0, 0.0]) < 0.15, "mean={:?}", m.mean);
         assert!(m.cov_error(&[1.0, 0.6, 0.6, 0.8]) < 0.3, "cov={:?}", m.cov);

@@ -13,6 +13,7 @@
 use super::engine::WorkerEngine;
 use super::topology::{init_state, spawn_worker, DecoupledPolicy, Topology};
 use super::{DelayModel, RunOptions, RunResult};
+use crate::sink::{Frame, SinkHub};
 use std::time::Instant;
 
 pub struct IndependentCoordinator {
@@ -29,11 +30,14 @@ impl IndependentCoordinator {
     pub fn run(&self, engines: Vec<Box<dyn WorkerEngine>>, seed: u64) -> RunResult {
         let start = Instant::now();
         let topo = Topology::decoupled(engines.len());
+        let hub = SinkHub::new(&self.opts.sink).expect("sink init failed");
+        hub.write_meta("independent", topo.workers, seed);
         let handles: Vec<_> = engines
             .into_iter()
             .enumerate()
             .map(|(w, engine)| {
                 let init = init_state(engine.dim(), engine.live_dim(), &self.opts, seed, w);
+                let sink = hub.frame_sink(Frame::Chain(w), self.opts.max_samples);
                 spawn_worker(
                     format!("chain-{w}"),
                     w,
@@ -44,6 +48,7 @@ impl IndependentCoordinator {
                     DelayModel::none(),
                     seed,
                     start,
+                    sink,
                 )
             })
             .collect();
@@ -58,6 +63,7 @@ impl IndependentCoordinator {
         result.metrics.steps_per_sec =
             result.metrics.total_steps as f64 / result.elapsed.max(1e-12);
         result.merge_samples();
+        hub.finish(&mut result);
         result
     }
 }
@@ -124,7 +130,7 @@ mod tests {
         };
         let coord = IndependentCoordinator::new(40_000, opts);
         let r = coord.run(engines(4), 12);
-        let samples = crate::diagnostics::to_f64_samples(&r.thetas(), 2);
+        let samples = crate::diagnostics::to_f64_samples(r.thetas(), 2);
         let m = crate::diagnostics::moments(&samples);
         assert!(m.mean_error(&[0.0, 0.0]) < 0.12, "mean={:?}", m.mean);
         assert!(m.cov_error(&[1.0, 0.6, 0.6, 0.8]) < 0.25, "cov={:?}", m.cov);

@@ -22,6 +22,10 @@ pub struct Metrics {
     pub staleness_hist: Vec<u64>,
     /// Steps per wall-clock second (filled at run end).
     pub steps_per_sec: f64,
+    /// Recorded samples retained by *no* sink (e.g. past the in-memory
+    /// `max_samples` cap with no stream attached) — the explicit
+    /// accounting that replaces silent truncation (DESIGN.md §7).
+    pub samples_dropped: u64,
 }
 
 impl Default for Metrics {
@@ -33,6 +37,7 @@ impl Default for Metrics {
             grads_computed: 0,
             staleness_hist: vec![0; STALENESS_BUCKETS],
             steps_per_sec: 0.0,
+            samples_dropped: 0,
         }
     }
 }
@@ -73,9 +78,26 @@ impl Metrics {
             ("exchanges", Json::Num(self.exchanges as f64)),
             ("grads_computed", Json::Num(self.grads_computed as f64)),
             ("steps_per_sec", Json::Num(self.steps_per_sec)),
+            ("samples_dropped", Json::Num(self.samples_dropped as f64)),
             ("mean_staleness", Json::Num(self.mean_staleness())),
             ("max_staleness", Json::Num(self.max_staleness() as f64)),
         ])
+    }
+
+    /// Rebuild counters from a stream's metrics event (`sink/replay`).
+    /// The staleness histogram is not serialized; only its summary
+    /// statistics travel, so the rebuilt histogram is empty.
+    pub fn from_json(v: &Json) -> Metrics {
+        let num = |key: &str| v.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+        Metrics {
+            total_steps: num("total_steps") as u64,
+            center_steps: num("center_steps") as u64,
+            exchanges: num("exchanges") as u64,
+            grads_computed: num("grads_computed") as u64,
+            staleness_hist: vec![0; STALENESS_BUCKETS],
+            steps_per_sec: num("steps_per_sec"),
+            samples_dropped: num("samples_dropped") as u64,
+        }
     }
 }
 
@@ -109,6 +131,27 @@ mod tests {
         let j = Metrics::default().to_json();
         assert!(j.get("total_steps").is_some());
         assert!(j.get("center_steps").is_some());
+        assert!(j.get("samples_dropped").is_some());
         assert!(j.get("mean_staleness").is_some());
+    }
+
+    #[test]
+    fn from_json_round_trips_counters() {
+        let m = Metrics {
+            total_steps: 1000,
+            center_steps: 125,
+            exchanges: 500,
+            grads_computed: 7,
+            steps_per_sec: 123.5,
+            samples_dropped: 42,
+            ..Default::default()
+        };
+        let back = Metrics::from_json(&m.to_json());
+        assert_eq!(back.total_steps, 1000);
+        assert_eq!(back.center_steps, 125);
+        assert_eq!(back.exchanges, 500);
+        assert_eq!(back.grads_computed, 7);
+        assert_eq!(back.steps_per_sec, 123.5);
+        assert_eq!(back.samples_dropped, 42);
     }
 }

@@ -61,9 +61,14 @@ pub struct ChainTrace {
     pub worker: usize,
     /// (step, wall-time, Ũ) every `log_every` steps.
     pub u_trace: Vec<TracePoint>,
-    /// (wall-time, θ) every `thin` steps after burn-in, capped at
-    /// `max_samples`.
+    /// (wall-time, θ) every `thin` steps after burn-in — whatever the
+    /// chain's [`crate::sink::SampleSink`] retained in memory (empty for
+    /// purely streaming sinks).
     pub samples: Vec<(f64, Vec<f32>)>,
+    /// Samples this chain offered that no sink retained anywhere (e.g.
+    /// past the `max_samples` cap with no stream attached). Surfaced in
+    /// `Metrics::samples_dropped` instead of silently truncating.
+    pub dropped: u64,
 }
 
 /// Result of a coordinated run.
@@ -77,24 +82,89 @@ pub struct RunResult {
     pub elapsed: f64,
     /// All samples across chains, merged (convenience view).
     pub samples: Vec<(f64, Vec<f32>)>,
+    /// Streaming convergence diagnostics, when the run's sink stack
+    /// included an [`crate::sink::OnlineDiagSink`].
+    pub online_diag: Option<crate::sink::OnlineDiagSummary>,
 }
 
 impl RunResult {
+    /// Rebuild the merged view as a k-way merge of the per-chain traces.
+    ///
+    /// Chains record time monotonically, so each trace arrives already
+    /// sorted and the merge is O(n log k) — no re-sort of sorted data. A
+    /// chain that somehow is not (NaN timestamps from a poisoned clock)
+    /// gets a sorted copy first so the merge invariant holds; ordering is
+    /// `total_cmp` throughout, so NaNs never panic the merge and order
+    /// after every finite time.
     pub(crate) fn merge_samples(&mut self) {
-        self.samples = self
-            .chains
-            .iter()
-            .flat_map(|c| c.samples.iter().cloned())
-            .collect();
-        // total_cmp: a NaN timestamp (e.g. from a poisoned clock or a
-        // diverged downstream consumer writing back) must never panic the
-        // merge; NaNs order after every finite time.
-        self.samples.sort_by(|a, b| a.0.total_cmp(&b.0));
+        use std::borrow::Cow;
+        use std::cmp::{Ordering, Reverse};
+        use std::collections::BinaryHeap;
+
+        /// Heap key (timestamp, chain index): the index tie-break keeps
+        /// equal timestamps in chain order, like the old stable sort.
+        struct Key(f64, usize);
+        impl PartialEq for Key {
+            fn eq(&self, other: &Self) -> bool {
+                self.cmp(other) == Ordering::Equal
+            }
+        }
+        impl Eq for Key {}
+        impl PartialOrd for Key {
+            fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+                Some(self.cmp(other))
+            }
+        }
+        impl Ord for Key {
+            fn cmp(&self, other: &Self) -> Ordering {
+                self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+            }
+        }
+
+        let total: usize = self.chains.iter().map(|c| c.samples.len()).sum();
+        let merged = {
+            let runs: Vec<Cow<'_, [(f64, Vec<f32>)]>> = self
+                .chains
+                .iter()
+                .map(|c| {
+                    let sorted = c
+                        .samples
+                        .windows(2)
+                        .all(|w| w[0].0.total_cmp(&w[1].0) != Ordering::Greater);
+                    if sorted {
+                        Cow::Borrowed(c.samples.as_slice())
+                    } else {
+                        let mut copy = c.samples.clone();
+                        copy.sort_by(|a, b| a.0.total_cmp(&b.0));
+                        Cow::Owned(copy)
+                    }
+                })
+                .collect();
+            let mut next = vec![0usize; runs.len()];
+            let mut heap: BinaryHeap<Reverse<Key>> = runs
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| !r.is_empty())
+                .map(|(i, r)| Reverse(Key(r[0].0, i)))
+                .collect();
+            let mut out = Vec::with_capacity(total);
+            while let Some(Reverse(Key(_, i))) = heap.pop() {
+                let at = next[i];
+                out.push(runs[i][at].clone());
+                next[i] = at + 1;
+                if next[i] < runs[i].len() {
+                    heap.push(Reverse(Key(runs[i][next[i]].0, i)));
+                }
+            }
+            out
+        };
+        self.samples = merged;
     }
 
-    /// θ samples only (drop timestamps).
-    pub fn thetas(&self) -> Vec<Vec<f32>> {
-        self.samples.iter().map(|(_, t)| t.clone()).collect()
+    /// θ samples only (drop timestamps), borrowed — no deep clone of the
+    /// sample set.
+    pub fn thetas(&self) -> impl Iterator<Item = &[f32]> + '_ {
+        self.samples.iter().map(|(_, theta)| theta.as_slice())
     }
 }
 
@@ -115,6 +185,9 @@ pub struct RunOptions {
     pub init_sigma: f32,
     /// Start every chain from the same draw (the paper's Fig. 1 setup).
     pub same_init: bool,
+    /// Where recorded samples go (DESIGN.md §7): in-memory (default),
+    /// a JSONL stream, online diagnostics, or a tee of several.
+    pub sink: crate::sink::SinkSpec,
 }
 
 impl Default for RunOptions {
@@ -127,6 +200,7 @@ impl Default for RunOptions {
             record_samples: true,
             init_sigma: 1.0,
             same_init: true,
+            sink: crate::sink::SinkSpec::Memory,
         }
     }
 }
@@ -141,15 +215,57 @@ mod tests {
         r.chains = vec![
             ChainTrace {
                 worker: 0,
-                u_trace: vec![],
                 samples: vec![(2.0, vec![1.0]), (0.5, vec![2.0])],
+                ..Default::default()
             },
-            ChainTrace { worker: 1, u_trace: vec![], samples: vec![(1.0, vec![3.0])] },
+            ChainTrace { worker: 1, samples: vec![(1.0, vec![3.0])], ..Default::default() },
         ];
         r.merge_samples();
         let times: Vec<f64> = r.samples.iter().map(|s| s.0).collect();
         assert_eq!(times, vec![0.5, 1.0, 2.0]);
-        assert_eq!(r.thetas().len(), 3);
+        assert_eq!(r.thetas().count(), 3);
+    }
+
+    #[test]
+    fn merge_is_kway_over_sorted_chains() {
+        let mut r = RunResult::default();
+        r.chains = vec![
+            ChainTrace {
+                worker: 0,
+                samples: vec![(0.0, vec![0.0]), (2.0, vec![2.0]), (4.0, vec![4.0])],
+                ..Default::default()
+            },
+            ChainTrace {
+                worker: 1,
+                samples: vec![(1.0, vec![1.0]), (3.0, vec![3.0]), (5.0, vec![5.0])],
+                ..Default::default()
+            },
+            ChainTrace { worker: 2, samples: vec![], ..Default::default() },
+        ];
+        r.merge_samples();
+        let times: Vec<f64> = r.samples.iter().map(|s| s.0).collect();
+        assert_eq!(times, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        for (t, theta) in &r.samples {
+            assert_eq!(*t, theta[0] as f64); // values follow their timestamps
+        }
+    }
+
+    #[test]
+    fn merge_ties_keep_chain_order() {
+        let mut r = RunResult::default();
+        r.chains = vec![
+            ChainTrace {
+                worker: 0,
+                samples: vec![(1.0, vec![10.0]), (1.0, vec![11.0])],
+                ..Default::default()
+            },
+            ChainTrace { worker: 1, samples: vec![(1.0, vec![20.0])], ..Default::default() },
+        ];
+        r.merge_samples();
+        // Same ordering the old concat + stable sort produced: all of
+        // chain 0's equal-time samples (in chain order) before chain 1's.
+        let vals: Vec<f32> = r.samples.iter().map(|s| s.1[0]).collect();
+        assert_eq!(vals, vec![10.0, 11.0, 20.0]);
     }
 
     #[test]
@@ -157,8 +273,8 @@ mod tests {
         let mut r = RunResult::default();
         r.chains = vec![ChainTrace {
             worker: 0,
-            u_trace: vec![],
             samples: vec![(f64::NAN, vec![1.0]), (0.5, vec![2.0]), (1.5, vec![3.0])],
+            ..Default::default()
         }];
         r.merge_samples(); // must not panic
         assert_eq!(r.samples.len(), 3);

@@ -9,6 +9,7 @@
 use super::engine::WorkerEngine;
 use super::topology::{init_state, run_worker_loop, DecoupledPolicy};
 use super::{DelayModel, RunOptions, RunResult};
+use crate::sink::{Frame, SinkHub};
 use std::time::Instant;
 
 /// Run one chain for `steps` steps.
@@ -21,7 +22,10 @@ pub fn run_single(
     let start = Instant::now();
     let dim = engine.dim();
     let live = engine.live_dim();
+    let hub = SinkHub::new(&opts.sink).expect("sink init failed");
+    hub.write_meta("single", 1, seed);
     let init = init_state(dim, live, &opts, seed, 0);
+    let sink = hub.frame_sink(Frame::Chain(0), opts.max_samples);
     let trace = run_worker_loop(
         0,
         steps,
@@ -31,12 +35,14 @@ pub fn run_single(
         DelayModel::none(),
         seed,
         start,
+        sink,
     );
     let elapsed = start.elapsed().as_secs_f64();
     let mut result = RunResult { chains: vec![trace], elapsed, ..Default::default() };
     result.metrics.total_steps = steps as u64;
     result.metrics.steps_per_sec = steps as f64 / elapsed.max(1e-12);
     result.merge_samples();
+    hub.finish(&mut result);
     result
 }
 
@@ -69,10 +75,13 @@ mod tests {
     }
 
     #[test]
-    fn max_samples_caps_memory() {
+    fn max_samples_caps_memory_and_reports_dropped() {
         let opts = RunOptions { thin: 1, max_samples: 5, ..Default::default() };
         let r = run_single(engine(), 100, opts, 7);
         assert_eq!(r.chains[0].samples.len(), 5);
+        // No silent truncation: the 95 overflow samples are accounted.
+        assert_eq!(r.chains[0].dropped, 95);
+        assert_eq!(r.metrics.samples_dropped, 95);
     }
 
     #[test]
@@ -107,7 +116,7 @@ mod tests {
             ..Default::default()
         };
         let r = run_single(engine(), 120_000, opts, 11);
-        let samples = crate::diagnostics::to_f64_samples(&r.thetas(), 2);
+        let samples = crate::diagnostics::to_f64_samples(r.thetas(), 2);
         let m = crate::diagnostics::moments(&samples);
         assert!(m.mean_error(&[0.0, 0.0]) < 0.12, "mean={:?}", m.mean);
         assert!(m.cov_error(&[1.0, 0.6, 0.6, 0.8]) < 0.2, "cov={:?}", m.cov);

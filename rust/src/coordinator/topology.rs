@@ -18,6 +18,7 @@
 use super::{ChainTrace, DelayModel, RunOptions, TracePoint};
 use crate::math::rng::Pcg64;
 use crate::samplers::ChainState;
+use crate::sink::SampleSink;
 use std::ops::Range;
 use std::time::Instant;
 
@@ -90,36 +91,49 @@ impl Topology {
     }
 }
 
-/// Recorder shared by all worker loops: Ũ trace + thinned samples.
+/// Recorder shared by all worker loops: the Ũ trace stays in memory
+/// (one point per `log_every` steps — always small), while thinned θ
+/// samples go to the frame's [`SampleSink`] (DESIGN.md §7) — retained,
+/// streamed, or folded into diagnostics per the run's `SinkSpec`.
 pub(crate) struct Recorder {
     pub trace: ChainTrace,
+    sink: Box<dyn SampleSink>,
     opts: RunOptions,
     start: Instant,
 }
 
 impl Recorder {
-    pub fn new(worker: usize, opts: RunOptions, start: Instant) -> Recorder {
-        Recorder { trace: ChainTrace { worker, ..Default::default() }, opts, start }
+    pub fn new(
+        worker: usize,
+        opts: RunOptions,
+        start: Instant,
+        sink: Box<dyn SampleSink>,
+    ) -> Recorder {
+        Recorder { trace: ChainTrace { worker, ..Default::default() }, sink, opts, start }
     }
 
     #[inline]
     pub fn observe(&mut self, step: usize, u: f64, theta: &[f32]) {
         if step % self.opts.log_every == 0 {
-            self.trace.u_trace.push(TracePoint {
-                step,
-                t: self.start.elapsed().as_secs_f64(),
-                u,
-            });
+            let t = self.start.elapsed().as_secs_f64();
+            self.trace.u_trace.push(TracePoint { step, t, u });
+            self.sink.record_u(step, t, u);
         }
         if self.opts.record_samples
             && step >= self.opts.burn_in
             && (step - self.opts.burn_in) % self.opts.thin == 0
-            && self.trace.samples.len() < self.opts.max_samples
         {
-            self.trace
-                .samples
-                .push((self.start.elapsed().as_secs_f64(), theta.to_vec()));
+            self.sink.record(self.start.elapsed().as_secs_f64(), theta);
         }
+    }
+
+    /// Close the frame: drain whatever the sink retained (plus its
+    /// dropped count) back into the trace, flush streaming output.
+    pub fn finish(mut self) -> ChainTrace {
+        self.trace.samples = self.sink.take_samples();
+        self.trace.dropped = self.sink.dropped();
+        self.sink.flush();
+        self.trace
     }
 }
 
@@ -193,19 +207,20 @@ pub(crate) fn run_worker_loop(
     delay: DelayModel,
     seed: u64,
     start: Instant,
+    sink: Box<dyn SampleSink>,
 ) -> ChainTrace {
     let mut state = init;
     let mut rng = Pcg64::new(seed, 1000 + worker as u64);
     let mut jitter_rng = Pcg64::new(seed ^ 0x9e37, 2000 + worker as u64);
     let factor = delay.worker_factor(worker, seed);
-    let mut rec = Recorder::new(worker, opts, start);
+    let mut rec = Recorder::new(worker, opts, start, sink);
     for t in 0..steps {
         let Some(u) = policy.step(t, &mut state, &mut rng) else { break };
         rec.observe(t, u, &state.theta);
         delay.step_sleep(factor, &mut jitter_rng);
         policy.after_step(t, &state);
     }
-    rec.trace
+    rec.finish()
 }
 
 /// Spawn [`run_worker_loop`] on its own OS thread.
@@ -220,10 +235,13 @@ pub(crate) fn spawn_worker(
     delay: DelayModel,
     seed: u64,
     start: Instant,
+    sink: Box<dyn SampleSink>,
 ) -> std::thread::JoinHandle<ChainTrace> {
     std::thread::Builder::new()
         .name(name)
-        .spawn(move || run_worker_loop(worker, steps, init, policy, opts, delay, seed, start))
+        .spawn(move || {
+            run_worker_loop(worker, steps, init, policy, opts, delay, seed, start, sink)
+        })
         .expect("spawn worker thread")
 }
 
@@ -284,6 +302,7 @@ mod tests {
         ));
         let opts = RunOptions { log_every: 10, thin: 5, burn_in: 20, ..Default::default() };
         let init = init_state(2, 2, &opts, 7, 0);
+        let cap = opts.max_samples;
         let trace = run_worker_loop(
             0,
             100,
@@ -293,9 +312,11 @@ mod tests {
             DelayModel::none(),
             7,
             Instant::now(),
+            Box::new(crate::sink::MemorySink::new(cap)),
         );
         assert_eq!(trace.u_trace.len(), 10);
         assert_eq!(trace.samples.len(), 16); // steps 20, 25, ..., 95
+        assert_eq!(trace.dropped, 0);
     }
 
     #[test]
@@ -307,6 +328,7 @@ mod tests {
             }
         }
         let opts = RunOptions { thin: 1, ..Default::default() };
+        let cap = opts.max_samples;
         let trace = run_worker_loop(
             0,
             usize::MAX,
@@ -316,6 +338,7 @@ mod tests {
             DelayModel::none(),
             1,
             Instant::now(),
+            Box::new(crate::sink::MemorySink::new(cap)),
         );
         assert_eq!(trace.samples.len(), 7);
     }

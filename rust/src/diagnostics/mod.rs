@@ -55,10 +55,17 @@ impl Moments {
 }
 
 /// Convert f32 sample vectors (possibly padded) to f64 truncated to `d`.
-pub fn to_f64_samples(samples: &[Vec<f32>], d: usize) -> Vec<Vec<f64>> {
+/// Accepts owned collections (`&[Vec<f32>]`, `&Vec<Vec<f32>>`) and
+/// borrowing iterators like [`crate::coordinator::RunResult::thetas`] —
+/// no intermediate deep clone of the sample set.
+pub fn to_f64_samples<I>(samples: I, d: usize) -> Vec<Vec<f64>>
+where
+    I: IntoIterator,
+    I::Item: AsRef<[f32]>,
+{
     samples
-        .iter()
-        .map(|s| s[..d].iter().map(|&x| x as f64).collect())
+        .into_iter()
+        .map(|s| s.as_ref()[..d].iter().map(|&x| x as f64).collect())
         .collect()
 }
 

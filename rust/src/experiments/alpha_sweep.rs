@@ -65,7 +65,7 @@ pub fn run(scale: Scale, seed: u64) -> AlphaSweepResult {
             ..Default::default()
         };
         let r = EcCoordinator::new(cfg, params, pot.clone()).run(seed + i as u64);
-        let samples = to_f64_samples(&r.thetas(), 2);
+        let samples = to_f64_samples(r.thetas(), 2);
         let m = moments(&samples);
         result.cov_error.push(m.cov_error(&target_cov));
 

@@ -64,7 +64,7 @@ pub fn run(steps: usize, seed: u64) -> Fig1Result {
     for run_idx in 0..2u64 {
         let engine = Box::new(NativeEngine::new(pot.clone(), params, StepKind::Sghmc));
         let r = run_single(engine, steps, opts.clone(), seed.wrapping_add(run_idx * 7919));
-        sghmc_traces.push(r.thetas());
+        sghmc_traces.push(r.thetas().map(<[f32]>::to_vec).collect());
     }
 
     // EC-SGHMC with K = 4, s = 1 (the figure couples tightly).

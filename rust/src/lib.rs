@@ -48,6 +48,7 @@ pub mod optimizers;
 pub mod potentials;
 pub mod runtime;
 pub mod samplers;
+pub mod sink;
 pub mod testing;
 pub mod util;
 /// Offline stub for the PJRT bindings; the `xla-runtime` feature swaps in

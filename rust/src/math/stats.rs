@@ -58,6 +58,67 @@ impl Welford {
     }
 }
 
+/// Streaming mean + covariance over fixed-dimension vectors — the
+/// multivariate Welford update. Matches the two-pass [`covariance`]
+/// (n − 1 denominator) up to floating-point rounding, with O(d²) state
+/// and no retained samples; this is what makes the online-diagnostics
+/// sink's moment tracking bounded-memory (DESIGN.md §7).
+#[derive(Debug, Clone)]
+pub struct CovWelford {
+    n: u64,
+    mean: Vec<f64>,
+    /// Row-major d×d co-moment matrix Σ (x−μ)(x−μ)ᵀ.
+    m2: Vec<f64>,
+    /// Scratch for the pre-update deviation (avoids per-push allocation).
+    delta: Vec<f64>,
+}
+
+impl CovWelford {
+    pub fn new(d: usize) -> CovWelford {
+        CovWelford { n: 0, mean: vec![0.0; d], m2: vec![0.0; d * d], delta: vec![0.0; d] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn push(&mut self, x: &[f64]) {
+        let d = self.mean.len();
+        assert_eq!(x.len(), d);
+        self.n += 1;
+        let inv = 1.0 / self.n as f64;
+        for j in 0..d {
+            self.delta[j] = x[j] - self.mean[j];
+            self.mean[j] += self.delta[j] * inv;
+        }
+        // delta uses the pre-update mean, the residual the post-update
+        // mean: their outer product is the exact rank-1 co-moment step.
+        for a in 0..d {
+            let da = self.delta[a];
+            for b in 0..d {
+                self.m2[a * d + b] += da * (x[b] - self.mean[b]);
+            }
+        }
+    }
+
+    pub fn mean(&self) -> &[f64] {
+        &self.mean
+    }
+
+    /// Row-major sample covariance (n − 1); zeros below 2 samples.
+    pub fn cov(&self) -> Vec<f64> {
+        if self.n < 2 {
+            return vec![0.0; self.m2.len()];
+        }
+        let denom = (self.n - 1) as f64;
+        self.m2.iter().map(|m| m / denom).collect()
+    }
+}
+
 /// Mean of a slice.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -179,6 +240,40 @@ mod tests {
         assert!((a.mean() - all.mean()).abs() < 1e-12);
         assert!((a.var() - all.var()).abs() < 1e-12);
         assert_eq!(a.count(), all.count());
+    }
+
+    #[test]
+    fn cov_welford_matches_two_pass_covariance() {
+        let mut rng = crate::math::rng::Pcg64::seeded(31);
+        let samples: Vec<Vec<f64>> = (0..500)
+            .map(|_| {
+                let x = rng.next_normal();
+                vec![x, 0.6 * x + rng.next_normal(), rng.next_normal() - 2.0]
+            })
+            .collect();
+        let mut w = CovWelford::new(3);
+        for s in &samples {
+            w.push(s);
+        }
+        assert_eq!(w.count(), 500);
+        assert_eq!(w.dim(), 3);
+        let two_pass = covariance(&samples);
+        for (j, m) in w.mean().iter().enumerate() {
+            let batch = samples.iter().map(|s| s[j]).sum::<f64>() / samples.len() as f64;
+            assert!((m - batch).abs() < 1e-12, "mean[{j}]");
+        }
+        for (i, (a, b)) in w.cov().iter().zip(&two_pass).enumerate() {
+            assert!((a - b).abs() < 1e-10, "cov[{i}]: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cov_welford_degenerate_counts() {
+        let mut w = CovWelford::new(2);
+        assert_eq!(w.cov(), vec![0.0; 4]);
+        w.push(&[1.0, 2.0]);
+        assert_eq!(w.cov(), vec![0.0; 4]); // n < 2
+        assert_eq!(w.mean(), &[1.0, 2.0]);
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Online convergence diagnostics as a sink: running moments, split-R̂
+//! and ESS computed *while sampling*, without retaining θ.
+//!
+//! The paper's headline claim — elastic coupling "significantly speeds
+//! up exploration" — is a convergence-rate statement, so waiting for the
+//! run to finish (and for the full trace to fit in RAM) to check it is
+//! backwards. This sink folds every offered sample into bounded state:
+//!
+//! * pooled mean/covariance over the first [`MAX_TRACK`] coordinates via
+//!   the multivariate Welford accumulator (`math::stats::CovWelford`) —
+//!   O(track²) memory, matches the post-hoc `diagnostics::moments` up to
+//!   floating-point rounding;
+//! * per-(chain, coordinate) scalar chains with batch-means compression:
+//!   draws are stored exactly until [`BATCH_CAP`], then adjacent pairs
+//!   collapse into batch means and the batch size doubles — memory stays
+//!   O(BATCH_CAP) per scalar chain for any run length. While the batch
+//!   size is still 1 (runs up to `BATCH_CAP · thin` steps per chain),
+//!   the end-of-run split-R̂ and ESS are *identical* to the post-hoc
+//!   `diagnostics::{rhat, ess}` over the whole trace; past it they
+//!   degrade gracefully into standard batch-means estimates.
+//!
+//! Frames push under a shared mutex; per-chain order is preserved (each
+//! chain is single-threaded), pooled moments accumulate in arrival
+//! order, so their last few floating-point digits can vary across
+//! thread schedules — the estimators themselves are order-exact.
+
+use super::{Frame, SampleSink};
+use crate::diagnostics::{ess, rhat};
+use crate::math::stats::CovWelford;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Coordinates tracked for scalar-chain diagnostics (and pooled cov).
+/// NN-sized θ gets its leading coordinates tracked, not all of them.
+pub const MAX_TRACK: usize = 8;
+
+/// Stored values per (chain, coordinate) before batch-means collapse.
+/// Even: pairs collapse exactly.
+pub const BATCH_CAP: usize = 8192;
+
+/// Scalar chain with bounded storage (exact draws, then doubling batch
+/// means).
+#[derive(Debug, Clone, Default)]
+struct ScalarChain {
+    /// Current batch size; 1 until the first collapse.
+    batch: usize,
+    /// Completed batch means (raw draws while `batch == 1`).
+    values: Vec<f64>,
+    acc: f64,
+    acc_n: usize,
+    n: u64,
+}
+
+impl ScalarChain {
+    fn push(&mut self, x: f64) {
+        if self.batch == 0 {
+            self.batch = 1;
+        }
+        self.n += 1;
+        self.acc += x;
+        self.acc_n += 1;
+        if self.acc_n == self.batch {
+            self.values.push(self.acc / self.batch as f64);
+            self.acc = 0.0;
+            self.acc_n = 0;
+            if self.values.len() == BATCH_CAP {
+                let collapsed: Vec<f64> =
+                    self.values.chunks(2).map(|p| (p[0] + p[1]) / 2.0).collect();
+                self.values = collapsed;
+                self.batch *= 2;
+            }
+        }
+    }
+}
+
+/// Shared accumulator every frame of a run pushes into.
+#[derive(Debug, Default)]
+pub struct OnlineDiag {
+    /// Tracked coordinates, fixed by the first sample: min(dim, MAX_TRACK).
+    track: usize,
+    /// Chain id → per-coordinate scalar chains.
+    chains: BTreeMap<usize, Vec<ScalarChain>>,
+    pooled: Option<CovWelford>,
+    n: u64,
+}
+
+impl OnlineDiag {
+    pub fn push(&mut self, chain: usize, theta: &[f32]) {
+        if self.pooled.is_none() {
+            self.track = theta.len().min(MAX_TRACK);
+            self.pooled = Some(CovWelford::new(self.track));
+        }
+        if theta.len() < self.track {
+            // A sample narrower than the run's established dimension can
+            // only come from a corrupt/hand-edited stream (`replay
+            // --diag`); skip it rather than panic or poison the stats.
+            return;
+        }
+        let track = self.track;
+        let scalars =
+            self.chains.entry(chain).or_insert_with(|| vec![ScalarChain::default(); track]);
+        let mut buf = [0.0f64; MAX_TRACK];
+        for j in 0..track {
+            buf[j] = theta[j] as f64;
+            scalars[j].push(buf[j]);
+        }
+        self.pooled.as_mut().expect("pooled initialized above").push(&buf[..track]);
+        self.n += 1;
+    }
+
+    /// Snapshot of the diagnostics; callable mid-run or at the end.
+    pub fn summary(&self) -> OnlineDiagSummary {
+        let mut max_rhat = f64::NAN;
+        let mut min_ess = f64::NAN;
+        let mut batch = 0usize;
+        for j in 0..self.track {
+            let per_chain: Vec<Vec<f64>> =
+                self.chains.values().map(|c| c[j].values.clone()).collect();
+            // Split-R̂ over completed batch means (exact draws while the
+            // batch size is 1). Degenerate coordinates (zero within-chain
+            // variance — e.g. untouched padding) return NaN and are
+            // skipped, like the post-hoc max_rhat fold.
+            let r = rhat::rhat(&per_chain);
+            if r.is_finite() {
+                max_rhat = if max_rhat.is_nan() { r } else { max_rhat.max(r) };
+            }
+            // ESS: Geyer per chain over batch means, rescaled by the
+            // batch size (exact while it is 1), summed over chains.
+            let mut ess_sum = 0.0;
+            for scalars in self.chains.values() {
+                let c = &scalars[j];
+                let b = c.batch.max(1);
+                batch = batch.max(b);
+                ess_sum += (ess::ess(&c.values) * b as f64).min(c.n as f64);
+            }
+            min_ess = if min_ess.is_nan() { ess_sum } else { min_ess.min(ess_sum) };
+        }
+        let (mean, cov) = match &self.pooled {
+            Some(p) => (p.mean().to_vec(), p.cov()),
+            None => (Vec::new(), Vec::new()),
+        };
+        OnlineDiagSummary {
+            n: self.n,
+            chains: self.chains.len(),
+            tracked: self.track,
+            batch: batch.max(1),
+            mean,
+            cov,
+            max_rhat,
+            min_ess,
+        }
+    }
+}
+
+/// End-of-run (or mid-run) diagnostics snapshot, attached to
+/// `RunResult::online_diag`.
+#[derive(Debug, Clone)]
+pub struct OnlineDiagSummary {
+    /// Pooled samples folded in.
+    pub n: u64,
+    pub chains: usize,
+    /// Leading θ coordinates the scalar diagnostics cover.
+    pub tracked: usize,
+    /// Largest batch size any scalar chain collapsed to; 1 means every
+    /// estimate equals its exact whole-trace counterpart.
+    pub batch: usize,
+    /// Pooled mean over the tracked coordinates.
+    pub mean: Vec<f64>,
+    /// Row-major tracked×tracked pooled sample covariance.
+    pub cov: Vec<f64>,
+    /// Split-R̂ maximized over tracked coordinates (NaN if undefined).
+    pub max_rhat: f64,
+    /// Min over tracked coordinates of the per-chain-summed ESS.
+    pub min_ess: f64,
+}
+
+/// The per-frame sink handle: forwards chain samples into the shared
+/// accumulator; the center trajectory is not a sampling chain and is
+/// ignored.
+pub struct OnlineDiagSink {
+    shared: Arc<Mutex<OnlineDiag>>,
+    frame: Frame,
+}
+
+impl OnlineDiagSink {
+    pub fn new(shared: Arc<Mutex<OnlineDiag>>, frame: Frame) -> OnlineDiagSink {
+        OnlineDiagSink { shared, frame }
+    }
+}
+
+impl SampleSink for OnlineDiagSink {
+    fn record(&mut self, _t: f64, theta: &[f32]) {
+        if let Frame::Chain(w) = self.frame {
+            self.shared.lock().unwrap().push(w, theta);
+        }
+    }
+
+    /// θ is folded into the accumulator and discarded by design — this
+    /// sink never counts as retention for fan-out loss accounting.
+    fn retains_samples(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagnostics::{moments, to_f64_samples};
+    use crate::math::rng::Pcg64;
+
+    fn synth_chains(k: usize, n: usize, shift: f64, seed: u64) -> Vec<Vec<Vec<f32>>> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..k)
+            .map(|c| {
+                (0..n)
+                    .map(|_| {
+                        vec![
+                            (rng.next_normal() + shift * c as f64) as f32,
+                            rng.next_normal() as f32,
+                        ]
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_posthoc_diagnostics_below_batch_cap() {
+        let chains = synth_chains(4, 1500, 0.0, 5);
+        let mut diag = OnlineDiag::default();
+        for (c, chain) in chains.iter().enumerate() {
+            for theta in chain {
+                diag.push(c, theta);
+            }
+        }
+        let s = diag.summary();
+        assert_eq!(s.batch, 1);
+        assert_eq!(s.chains, 4);
+        assert_eq!(s.tracked, 2);
+        assert_eq!(s.n, 4 * 1500);
+
+        let per_chain_f64: Vec<Vec<Vec<f64>>> =
+            chains.iter().map(|c| to_f64_samples(c, 2)).collect();
+        let posthoc_rhat = rhat::max_rhat(&per_chain_f64);
+        assert!((s.max_rhat - posthoc_rhat).abs() < 1e-12, "{} vs {posthoc_rhat}", s.max_rhat);
+
+        let posthoc_min_ess = (0..2)
+            .map(|j| {
+                per_chain_f64
+                    .iter()
+                    .map(|c| ess::ess(&c.iter().map(|x| x[j]).collect::<Vec<_>>()))
+                    .sum::<f64>()
+            })
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            (s.min_ess - posthoc_min_ess).abs() < 1e-9,
+            "{} vs {posthoc_min_ess}",
+            s.min_ess
+        );
+
+        let pooled: Vec<Vec<f64>> = per_chain_f64.iter().flatten().cloned().collect();
+        let m = moments(&pooled);
+        for j in 0..2 {
+            assert!((s.mean[j] - m.mean[j]).abs() < 1e-9);
+        }
+        for i in 0..4 {
+            assert!((s.cov[i] - m.cov[i]).abs() < 1e-9, "cov[{i}]");
+        }
+    }
+
+    #[test]
+    fn detects_shifted_chains() {
+        let chains = synth_chains(4, 1000, 3.0, 6);
+        let mut diag = OnlineDiag::default();
+        for (c, chain) in chains.iter().enumerate() {
+            for theta in chain {
+                diag.push(c, theta);
+            }
+        }
+        assert!(diag.summary().max_rhat > 1.5);
+    }
+
+    #[test]
+    fn batch_collapse_bounds_memory_for_long_chains() {
+        let mut chain = ScalarChain::default();
+        let mut rng = Pcg64::seeded(7);
+        let n = 3 * BATCH_CAP;
+        let mut running_sum = 0.0;
+        for _ in 0..n {
+            let x = rng.next_normal();
+            running_sum += x;
+            chain.push(x);
+        }
+        assert!(chain.values.len() < BATCH_CAP, "not collapsed: {}", chain.values.len());
+        assert!(chain.batch >= 2);
+        assert_eq!(chain.n, n as u64);
+        // Batch means preserve the overall mean exactly (complete batches).
+        let complete = chain.values.len() * chain.batch;
+        let stored_mean: f64 = chain.values.iter().sum::<f64>() / chain.values.len() as f64;
+        let true_mean = (running_sum - chain.acc) / complete as f64;
+        assert!((stored_mean - true_mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn center_frame_is_ignored() {
+        let shared = Arc::new(Mutex::new(OnlineDiag::default()));
+        let mut center = OnlineDiagSink::new(shared.clone(), Frame::Center);
+        center.record(0.0, &[1.0, 2.0]);
+        let mut chain = OnlineDiagSink::new(shared.clone(), Frame::Chain(0));
+        chain.record(0.0, &[1.0, 2.0]);
+        assert_eq!(shared.lock().unwrap().n, 1);
+    }
+
+    #[test]
+    fn short_theta_is_skipped_not_panicking() {
+        let mut diag = OnlineDiag::default();
+        diag.push(0, &[1.0, 2.0]);
+        diag.push(0, &[3.0]); // corrupt stream line: narrower than track
+        diag.push(0, &[5.0, 6.0]);
+        assert_eq!(diag.summary().n, 2);
+    }
+
+    #[test]
+    fn empty_summary_is_well_defined() {
+        let s = OnlineDiag::default().summary();
+        assert_eq!(s.n, 0);
+        assert_eq!(s.chains, 0);
+        assert!(s.max_rhat.is_nan());
+        assert!(s.min_ess.is_nan());
+        assert!(s.mean.is_empty());
+    }
+}

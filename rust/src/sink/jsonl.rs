@@ -1,0 +1,270 @@
+//! Streaming JSONL sink: one self-describing event per line.
+//!
+//! Event schema (stream version 1; see DESIGN.md §7 for the full table):
+//!
+//! ```text
+//! {"ev":"meta","version":1,"scheme":"ec","workers":4,"seed":42}
+//! {"ev":"sample","chain":0,"t":0.0123,"theta":[0.5,-1.25]}
+//! {"ev":"u","chain":0,"step":100,"t":0.0119,"u":1.875}
+//! {"ev":"center","t":0.0125,"theta":[0.1,-0.9]}
+//! {"ev":"metrics","total_steps":4000,...,"elapsed":0.42}
+//! ```
+//!
+//! Framing: every event line carries its own frame tag (`chain` id, or
+//! the `center` event kind), and [`JsonlWriter`] locks per *line* — so K
+//! worker threads plus the center server stream concurrently with no
+//! interleaving corruption and no cross-thread ordering requirement; the
+//! reader re-groups by frame. Numbers go through the shared shortest
+//! round-trip formatting in `util/json`, so replayed θ is bit-identical.
+
+use super::{Frame, SampleSink};
+use crate::coordinator::Metrics;
+use crate::util::json::Emitter;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Stream format version, bumped on schema changes.
+pub const STREAM_VERSION: u64 = 1;
+
+/// Line-atomic writer shared by every frame's [`JsonlSink`].
+///
+/// I/O failure policy: the first write error logs once and latches the
+/// writer off — samplers must never die because a disk filled mid-run.
+pub struct JsonlWriter {
+    out: Mutex<BufWriter<File>>,
+    failed: AtomicBool,
+}
+
+impl JsonlWriter {
+    pub fn create(path: &Path) -> io::Result<JsonlWriter> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        Ok(JsonlWriter {
+            out: Mutex::new(BufWriter::new(File::create(path)?)),
+            failed: AtomicBool::new(false),
+        })
+    }
+
+    /// Append one complete event line (the emitter escapes embedded
+    /// newlines, so `text` never spans lines). Returns `false` when the
+    /// event was discarded because the writer latched off on an earlier
+    /// I/O error — callers count those toward their `dropped` totals so
+    /// a mid-run disk failure is never silent.
+    pub fn line(&self, text: &str) -> bool {
+        if self.failed.load(Ordering::Relaxed) {
+            return false;
+        }
+        let mut out = self.out.lock().unwrap();
+        let wrote = out.write_all(text.as_bytes()).and_then(|_| out.write_all(b"\n"));
+        if wrote.is_err() {
+            if !self.failed.swap(true, Ordering::Relaxed) {
+                crate::log_warn!("jsonl sink: write failed; dropping further stream events");
+            }
+            return false;
+        }
+        true
+    }
+
+    /// Run-header event. The seed travels as a string: our JSON numbers
+    /// are f64, which would silently corrupt u64 seeds ≥ 2^53.
+    pub fn meta(&self, scheme: &str, workers: usize, seed: u64) {
+        let mut e = Emitter::new();
+        e.begin_obj();
+        e.key("ev").str_val("meta");
+        e.key("version").num(STREAM_VERSION as f64);
+        e.key("scheme").str_val(scheme);
+        e.key("workers").num(workers as f64);
+        e.key("seed").str_val(&seed.to_string());
+        e.end_obj();
+        self.line(e.as_str());
+    }
+
+    /// End-of-run metrics event.
+    pub fn metrics(&self, m: &Metrics, elapsed: f64) {
+        let mut e = Emitter::new();
+        e.begin_obj();
+        e.key("ev").str_val("metrics");
+        e.key("total_steps").num(m.total_steps as f64);
+        e.key("center_steps").num(m.center_steps as f64);
+        e.key("exchanges").num(m.exchanges as f64);
+        e.key("grads_computed").num(m.grads_computed as f64);
+        e.key("steps_per_sec").num(m.steps_per_sec);
+        e.key("samples_dropped").num(m.samples_dropped as f64);
+        e.key("mean_staleness").num(m.mean_staleness());
+        e.key("elapsed").num(elapsed);
+        e.end_obj();
+        self.line(e.as_str());
+    }
+
+    pub fn flush(&self) {
+        if let Ok(mut out) = self.out.lock() {
+            let _ = out.flush();
+        }
+    }
+
+    #[cfg(test)]
+    pub(crate) fn latch_failed_for_tests(&self) {
+        self.failed.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Per-frame streaming sink. Peak resident sample memory is one event
+/// line (the reused emitter buffer) — O(1) in run length, which is the
+/// whole point: runs larger than RAM stream to disk without truncation.
+pub struct JsonlSink {
+    writer: Arc<JsonlWriter>,
+    frame: Frame,
+    emit: Emitter,
+    /// Samples this frame offered after the writer latched off.
+    dropped: u64,
+}
+
+impl JsonlSink {
+    pub fn new(writer: Arc<JsonlWriter>, frame: Frame) -> JsonlSink {
+        JsonlSink { writer, frame, emit: Emitter::new(), dropped: 0 }
+    }
+}
+
+impl SampleSink for JsonlSink {
+    fn record(&mut self, t: f64, theta: &[f32]) {
+        self.emit.clear();
+        self.emit.begin_obj();
+        match self.frame {
+            Frame::Chain(w) => {
+                self.emit.key("ev").str_val("sample");
+                self.emit.key("chain").num(w as f64);
+            }
+            Frame::Center => {
+                self.emit.key("ev").str_val("center");
+            }
+        }
+        self.emit.key("t").num(t);
+        self.emit.key("theta").f32_arr(theta);
+        self.emit.end_obj();
+        if !self.writer.line(self.emit.as_str()) {
+            self.dropped += 1;
+        }
+    }
+
+    fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    fn record_u(&mut self, step: usize, t: f64, u: f64) {
+        let Frame::Chain(w) = self.frame else {
+            return; // the center trajectory has no Ũ trace
+        };
+        self.emit.clear();
+        self.emit.begin_obj();
+        self.emit.key("ev").str_val("u");
+        self.emit.key("chain").num(w as f64);
+        self.emit.key("step").num(step as f64);
+        self.emit.key("t").num(t);
+        self.emit.key("u").num(u);
+        self.emit.end_obj();
+        self.writer.line(self.emit.as_str());
+    }
+
+    fn flush(&mut self) {
+        self.writer.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ecsgmcmc-jsonl-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn events_parse_back_line_by_line() {
+        let path = tmp("events");
+        let writer = Arc::new(JsonlWriter::create(&path).unwrap());
+        writer.meta("ec", 4, 42);
+        let mut sink = JsonlSink::new(writer.clone(), Frame::Chain(2));
+        sink.record(0.5, &[1.5, -2.25]);
+        sink.record_u(10, 0.4, 3.0);
+        let mut center = JsonlSink::new(writer.clone(), Frame::Center);
+        center.record(0.6, &[0.25]);
+        center.record_u(5, 0.6, 1.0); // muted for the center frame
+        writer.metrics(&Metrics::default(), 1.25);
+        writer.flush();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        let v0 = Json::parse(lines[0]).unwrap();
+        assert_eq!(v0.get("ev").unwrap().as_str(), Some("meta"));
+        assert_eq!(v0.get("workers").unwrap().as_usize(), Some(4));
+        let v1 = Json::parse(lines[1]).unwrap();
+        assert_eq!(v1.get("ev").unwrap().as_str(), Some("sample"));
+        assert_eq!(v1.get("chain").unwrap().as_usize(), Some(2));
+        assert_eq!(v1.get("theta").unwrap().as_arr().unwrap().len(), 2);
+        let v2 = Json::parse(lines[2]).unwrap();
+        assert_eq!(v2.get("ev").unwrap().as_str(), Some("u"));
+        assert_eq!(v2.get("step").unwrap().as_usize(), Some(10));
+        let v3 = Json::parse(lines[3]).unwrap();
+        assert_eq!(v3.get("ev").unwrap().as_str(), Some("center"));
+        let v4 = Json::parse(lines[4]).unwrap();
+        assert_eq!(v4.get("ev").unwrap().as_str(), Some("metrics"));
+        assert_eq!(v4.get("elapsed").unwrap().as_f64(), Some(1.25));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn latched_writer_counts_discarded_samples_as_dropped() {
+        let path = tmp("latched");
+        let writer = Arc::new(JsonlWriter::create(&path).unwrap());
+        let mut sink = JsonlSink::new(writer.clone(), Frame::Chain(0));
+        sink.record(0.0, &[1.0]);
+        assert_eq!(sink.dropped(), 0);
+        // Simulate a mid-run I/O failure: everything after the latch is
+        // discarded and must be accounted, not silently lost.
+        writer.latch_failed_for_tests();
+        sink.record(1.0, &[2.0]);
+        sink.record(2.0, &[3.0]);
+        assert_eq!(sink.dropped(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn concurrent_writers_never_interleave_within_a_line() {
+        let path = tmp("concurrent");
+        let writer = Arc::new(JsonlWriter::create(&path).unwrap());
+        let threads: Vec<_> = (0..4)
+            .map(|w| {
+                let writer = writer.clone();
+                std::thread::spawn(move || {
+                    let mut sink = JsonlSink::new(writer, Frame::Chain(w));
+                    for i in 0..200 {
+                        sink.record(i as f64, &[w as f32, i as f32]);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        writer.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut counts = [0usize; 4];
+        for line in text.lines() {
+            let v = Json::parse(line).unwrap_or_else(|e| panic!("corrupt line: {e}: {line}"));
+            let chain = v.get("chain").unwrap().as_usize().unwrap();
+            let theta = v.get("theta").unwrap().as_arr().unwrap();
+            assert_eq!(theta[0].as_f64().unwrap() as usize, chain);
+            counts[chain] += 1;
+        }
+        assert_eq!(counts, [200; 4]);
+        std::fs::remove_file(&path).ok();
+    }
+}

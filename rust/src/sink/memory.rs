@@ -1,0 +1,67 @@
+//! In-memory sink: the pre-streaming recorder behavior, bit-compatible.
+
+use super::SampleSink;
+
+/// Retains samples in memory up to `cap`, counting — instead of silently
+/// swallowing — everything offered beyond it. With this sink installed
+/// (the default), every scheme produces byte-identical samples to the
+/// pre-sink recorder: same thinning, same burn-in (both applied upstream
+/// by the `Recorder`), same cap.
+#[derive(Debug)]
+pub struct MemorySink {
+    cap: usize,
+    samples: Vec<(f64, Vec<f32>)>,
+    dropped: u64,
+}
+
+impl MemorySink {
+    pub fn new(cap: usize) -> MemorySink {
+        MemorySink { cap, samples: Vec::new(), dropped: 0 }
+    }
+}
+
+impl SampleSink for MemorySink {
+    fn record(&mut self, t: f64, theta: &[f32]) {
+        if self.samples.len() < self.cap {
+            self.samples.push((t, theta.to_vec()));
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    fn take_samples(&mut self) -> Vec<(f64, Vec<f32>)> {
+        std::mem::take(&mut self.samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caps_and_counts_overflow() {
+        let mut s = MemorySink::new(3);
+        for i in 0..10 {
+            s.record(i as f64, &[i as f32]);
+        }
+        assert_eq!(s.dropped(), 7);
+        let kept = s.take_samples();
+        assert_eq!(kept.len(), 3);
+        assert_eq!(kept[2].1, vec![2.0]);
+        // Drained; a second take is empty but dropped stays reported.
+        assert!(s.take_samples().is_empty());
+        assert_eq!(s.dropped(), 7);
+    }
+
+    #[test]
+    fn zero_cap_drops_everything() {
+        let mut s = MemorySink::new(0);
+        s.record(0.0, &[1.0]);
+        assert_eq!(s.dropped(), 1);
+        assert!(s.take_samples().is_empty());
+    }
+}

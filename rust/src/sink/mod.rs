@@ -1,0 +1,261 @@
+//! Streaming sample sinks (DESIGN.md §7): where a run's recorded output
+//! goes, with memory bounded by policy instead of by run length.
+//!
+//! Before this subsystem every chain eagerly buffered `(wall-time, θ)`
+//! pairs into `Vec`s silently capped at `max_samples`, and diagnostics
+//! only ran post-hoc over the full in-memory trace. A [`SampleSink`] is
+//! the push-side contract the shared worker loop
+//! (`coordinator/topology.rs`) and the EC center server write into
+//! instead; what happens to each sample is a run-configuration choice
+//! ([`SinkSpec`] on `RunOptions`):
+//!
+//! * [`MemorySink`] — today's behavior, made honest: retain up to
+//!   `max_samples`, *count* (instead of silently swallowing) overflow;
+//! * [`JsonlSink`] — stream every event to a JSONL file through the
+//!   incremental emitter; peak resident sample memory is one record;
+//! * [`OnlineDiagSink`] — fold samples into running moments and
+//!   convergence diagnostics (Welford mean/cov, split-R̂, ESS) without
+//!   retaining θ;
+//! * [`TeeSink`] — fan one frame's events out to several of the above.
+//!
+//! The pull side lives in [`replay`]: a bounded-memory scan over a
+//! stream file that reconstructs a `RunResult` or re-computes
+//! diagnostics, making every streamed run a replayable artifact.
+
+pub mod diag;
+pub mod jsonl;
+pub mod memory;
+pub mod replay;
+pub mod tee;
+
+pub use diag::{OnlineDiag, OnlineDiagSink, OnlineDiagSummary};
+pub use jsonl::{JsonlSink, JsonlWriter};
+pub use memory::MemorySink;
+pub use tee::TeeSink;
+
+use crate::coordinator::RunResult;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Which stream of a run an event belongs to: one of the K worker
+/// chains, or the EC center trajectory. Every JSONL event line carries
+/// its frame, so concurrent writers need no cross-thread ordering — the
+/// reader re-groups by frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Frame {
+    Chain(usize),
+    Center,
+}
+
+/// Consumer of one frame's recorded output. Implementations are `Send`
+/// (each lives on its frame's thread) and share cross-frame resources —
+/// the JSONL writer, the diagnostics accumulator — internally.
+pub trait SampleSink: Send {
+    /// Offer one post-burn-in, post-thinning (wall-time, θ) sample.
+    fn record(&mut self, t: f64, theta: &[f32]);
+
+    /// Offer one Ũ trace point (every `log_every` steps).
+    fn record_u(&mut self, step: usize, t: f64, u: f64) {
+        let _ = (step, t, u);
+    }
+
+    /// Samples offered to this sink that ended up retained *nowhere*
+    /// (e.g. past the in-memory cap with no stream attached). Surfaced
+    /// in `Metrics::samples_dropped` instead of silently vanishing.
+    fn dropped(&self) -> u64 {
+        0
+    }
+
+    /// Whether this sink retains offered θ at all (in memory or on a
+    /// stream). Diagnostics-only and muted sinks return `false`; fan-out
+    /// loss accounting ignores them, so "dropped" always means "a θ the
+    /// run tried to record is gone", never "a sink that by design keeps
+    /// no θ kept no θ".
+    fn retains_samples(&self) -> bool {
+        true
+    }
+
+    /// Drain whatever the sink retained in memory; streaming sinks
+    /// return empty.
+    fn take_samples(&mut self) -> Vec<(f64, Vec<f32>)> {
+        Vec::new()
+    }
+
+    /// Flush buffered output at end of frame.
+    fn flush(&mut self) {}
+}
+
+/// A sink that swallows everything — for frames whose recording is muted
+/// (the naive scheme's gradient-oracle workers).
+pub struct NullSink;
+
+impl SampleSink for NullSink {
+    fn record(&mut self, _t: f64, _theta: &[f32]) {}
+
+    fn retains_samples(&self) -> bool {
+        false
+    }
+}
+
+/// Declarative sink selection, carried by `RunOptions` so every scheme
+/// driver builds the same pipeline from config/CLI without new plumbing.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum SinkSpec {
+    /// Retain samples in `ChainTrace::samples` (the pre-sink default).
+    #[default]
+    Memory,
+    /// Stream events to a JSONL file.
+    Jsonl { path: PathBuf },
+    /// Online convergence diagnostics only; θ is never retained.
+    OnlineDiag,
+    /// Fan out to several sinks.
+    Tee(Vec<SinkSpec>),
+}
+
+impl SinkSpec {
+    /// First JSONL stream path in this spec tree, if any — what run
+    /// summaries should point the user at.
+    pub fn jsonl_path(&self) -> Option<&Path> {
+        match self {
+            SinkSpec::Jsonl { path } => Some(path),
+            SinkSpec::Tee(parts) => parts.iter().find_map(|p| p.jsonl_path()),
+            SinkSpec::Memory | SinkSpec::OnlineDiag => None,
+        }
+    }
+}
+
+/// A [`SinkSpec`] with its shared resources resolved: files opened once,
+/// accumulators allocated once, `Arc`s handed to every frame sink.
+enum Built {
+    Memory,
+    Jsonl(Arc<JsonlWriter>),
+    OnlineDiag(Arc<Mutex<OnlineDiag>>),
+    Tee(Vec<Built>),
+}
+
+/// Per-run sink factory: resolves the spec once, hands out per-frame
+/// [`SampleSink`]s sharing those resources, and finalizes the run
+/// (dropped-count aggregation, metrics event, diagnostics summary).
+pub struct SinkHub {
+    built: Built,
+    writers: Vec<Arc<JsonlWriter>>,
+    diags: Vec<Arc<Mutex<OnlineDiag>>>,
+}
+
+impl SinkHub {
+    pub fn new(spec: &SinkSpec) -> io::Result<SinkHub> {
+        let mut writers = Vec::new();
+        let mut diags = Vec::new();
+        let built = build(spec, &mut writers, &mut diags)?;
+        Ok(SinkHub { built, writers, diags })
+    }
+
+    /// Plain in-memory recording, for callers that bypass `RunOptions`.
+    pub fn memory() -> SinkHub {
+        SinkHub::new(&SinkSpec::Memory).expect("memory sink is infallible")
+    }
+
+    /// Build the sink for one frame. `max_samples` is the in-memory
+    /// retention cap (streaming sinks ignore it).
+    pub fn frame_sink(&self, frame: Frame, max_samples: usize) -> Box<dyn SampleSink> {
+        make(&self.built, frame, max_samples)
+    }
+
+    /// Write the run-header event to any attached stream.
+    pub fn write_meta(&self, scheme: &str, workers: usize, seed: u64) {
+        for w in &self.writers {
+            w.meta(scheme, workers, seed);
+        }
+    }
+
+    /// Finalize: fold per-chain dropped counts into the metrics, attach
+    /// the online-diagnostics summary, append the metrics event and
+    /// flush any stream. Call once, after the driver filled `result`.
+    pub fn finish(&self, result: &mut RunResult) {
+        result.metrics.samples_dropped +=
+            result.chains.iter().map(|c| c.dropped).sum::<u64>();
+        if let Some(diag) = self.diags.last() {
+            result.online_diag = Some(diag.lock().unwrap().summary());
+        }
+        for w in &self.writers {
+            w.metrics(&result.metrics, result.elapsed);
+            w.flush();
+        }
+    }
+}
+
+fn build(
+    spec: &SinkSpec,
+    writers: &mut Vec<Arc<JsonlWriter>>,
+    diags: &mut Vec<Arc<Mutex<OnlineDiag>>>,
+) -> io::Result<Built> {
+    Ok(match spec {
+        SinkSpec::Memory => Built::Memory,
+        SinkSpec::Jsonl { path } => {
+            let writer = Arc::new(JsonlWriter::create(path)?);
+            writers.push(writer.clone());
+            Built::Jsonl(writer)
+        }
+        SinkSpec::OnlineDiag => {
+            let diag = Arc::new(Mutex::new(OnlineDiag::default()));
+            diags.push(diag.clone());
+            Built::OnlineDiag(diag)
+        }
+        SinkSpec::Tee(parts) => Built::Tee(
+            parts.iter().map(|p| build(p, writers, diags)).collect::<io::Result<_>>()?,
+        ),
+    })
+}
+
+fn make(built: &Built, frame: Frame, max_samples: usize) -> Box<dyn SampleSink> {
+    match built {
+        Built::Memory => Box::new(MemorySink::new(max_samples)),
+        Built::Jsonl(writer) => Box::new(JsonlSink::new(writer.clone(), frame)),
+        Built::OnlineDiag(diag) => Box::new(OnlineDiagSink::new(diag.clone(), frame)),
+        Built::Tee(parts) => {
+            Box::new(TeeSink::new(parts.iter().map(|p| make(p, frame, max_samples)).collect()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_path_finds_the_stream_file() {
+        let p = PathBuf::from("x.jsonl");
+        assert_eq!(SinkSpec::Memory.jsonl_path(), None);
+        assert_eq!(SinkSpec::OnlineDiag.jsonl_path(), None);
+        assert_eq!(SinkSpec::Jsonl { path: p.clone() }.jsonl_path(), Some(p.as_path()));
+        let tee = SinkSpec::Tee(vec![
+            SinkSpec::Memory,
+            SinkSpec::Jsonl { path: p.clone() },
+            SinkSpec::OnlineDiag,
+        ]);
+        assert_eq!(tee.jsonl_path(), Some(p.as_path()));
+    }
+
+    #[test]
+    fn null_sink_retains_nothing() {
+        let mut s = NullSink;
+        s.record(0.1, &[1.0]);
+        s.record_u(0, 0.1, 2.0);
+        assert_eq!(s.dropped(), 0);
+        assert!(s.take_samples().is_empty());
+    }
+
+    #[test]
+    fn memory_hub_round_trip() {
+        let hub = SinkHub::memory();
+        let mut sink = hub.frame_sink(Frame::Chain(0), 2);
+        sink.record(0.0, &[1.0]);
+        sink.record(1.0, &[2.0]);
+        sink.record(2.0, &[3.0]);
+        assert_eq!(sink.dropped(), 1);
+        let kept = sink.take_samples();
+        assert_eq!(kept.len(), 2);
+        assert_eq!(kept[1].1, vec![2.0]);
+    }
+}

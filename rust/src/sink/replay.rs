@@ -1,0 +1,263 @@
+//! The read side of the stream pipeline: scan a JSONL run stream with
+//! bounded memory and either reconstruct a `RunResult` (runs become
+//! replayable artifacts) or re-compute diagnostics without ever holding
+//! the full sample set.
+
+use super::diag::{OnlineDiag, OnlineDiagSummary};
+use super::jsonl::STREAM_VERSION;
+use crate::coordinator::{ChainTrace, Metrics, RunResult, TracePoint};
+use crate::util::json::{Json, StreamReader};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+/// One parsed stream event (schema in `sink/jsonl.rs` / DESIGN.md §7).
+#[derive(Debug, Clone)]
+pub enum RunEvent {
+    Meta { version: u64, scheme: String, workers: usize, seed: u64 },
+    Sample { chain: usize, t: f64, theta: Vec<f32> },
+    U { chain: usize, step: usize, t: f64, u: f64 },
+    Center { t: f64, theta: Vec<f32> },
+    Metrics { metrics: Metrics, elapsed: f64 },
+}
+
+impl RunEvent {
+    pub fn from_json(v: &Json) -> Result<RunEvent> {
+        let ev = v.get("ev").and_then(Json::as_str).context("event missing 'ev'")?;
+        Ok(match ev {
+            "meta" => {
+                let version = v.get("version").and_then(Json::as_f64).unwrap_or(1.0) as u64;
+                if version > STREAM_VERSION {
+                    bail!(
+                        "unsupported stream version {version} \
+                         (this reader supports <= {STREAM_VERSION})"
+                    );
+                }
+                RunEvent::Meta {
+                    version,
+                    scheme: v.get("scheme").and_then(Json::as_str).unwrap_or("?").to_string(),
+                    workers: v.get("workers").and_then(Json::as_usize).unwrap_or(0),
+                    // Emitted as a string (u64 seeds don't fit f64);
+                    // tolerate numeric seeds from hand-written streams.
+                    seed: match v.get("seed") {
+                        Some(Json::Str(s)) => s.parse().unwrap_or(0),
+                        Some(j) => j.as_f64().unwrap_or(0.0) as u64,
+                        None => 0,
+                    },
+                }
+            }
+            "sample" => RunEvent::Sample {
+                chain: v.get("chain").and_then(Json::as_usize).context("sample: chain")?,
+                t: num_or_nan(v, "t").context("sample: t")?,
+                theta: theta_arr(v.get("theta").context("sample: theta")?)?,
+            },
+            "u" => RunEvent::U {
+                chain: v.get("chain").and_then(Json::as_usize).context("u: chain")?,
+                step: v.get("step").and_then(Json::as_usize).context("u: step")?,
+                t: num_or_nan(v, "t").context("u: t")?,
+                u: num_or_nan(v, "u").context("u: u")?,
+            },
+            "center" => RunEvent::Center {
+                t: num_or_nan(v, "t").context("center: t")?,
+                theta: theta_arr(v.get("theta").context("center: theta")?)?,
+            },
+            "metrics" => RunEvent::Metrics {
+                metrics: Metrics::from_json(v),
+                elapsed: num_or_nan(v, "elapsed").unwrap_or(0.0),
+            },
+            other => bail!("unknown event kind '{other}'"),
+        })
+    }
+}
+
+/// Numeric field that may legitimately be null (the emitter writes
+/// non-finite values as null); absent keys are an error.
+fn num_or_nan(v: &Json, key: &str) -> Option<f64> {
+    let field = v.get(key)?;
+    Some(field.as_f64().unwrap_or(f64::NAN))
+}
+
+/// θ must be an array; `null` elements (non-finite at emit time) become
+/// NaN, but a non-array θ is a malformed stream, not an empty sample.
+fn theta_arr(v: &Json) -> Result<Vec<f32>> {
+    match v.as_arr() {
+        Some(arr) => {
+            Ok(arr.iter().map(|x| x.as_f64().map(|f| f as f32).unwrap_or(f32::NAN)).collect())
+        }
+        None => bail!("theta must be an array"),
+    }
+}
+
+/// Incrementally parse a JSONL run stream, invoking `on_event` per
+/// event. Memory is bounded by one line regardless of stream length.
+pub fn scan_stream<R: Read>(
+    mut src: R,
+    mut on_event: impl FnMut(RunEvent) -> Result<()>,
+) -> Result<()> {
+    let mut reader = StreamReader::new();
+    let mut chunk = [0u8; 64 * 1024];
+    loop {
+        let n = src.read(&mut chunk).context("reading stream")?;
+        if n == 0 {
+            break;
+        }
+        reader.feed(&chunk[..n]);
+        while let Some(value) = reader.next_value() {
+            on_event(RunEvent::from_json(&value?)?)?;
+        }
+    }
+    if let Some(value) = reader.finish() {
+        on_event(RunEvent::from_json(&value?)?)?;
+    }
+    Ok(())
+}
+
+/// Reconstruct a `RunResult` from a stream file: per-chain samples and
+/// Ũ traces, the center trajectory, and the recorded metrics. The
+/// result's merged sample view is rebuilt exactly as a live run would.
+pub fn replay_file(path: &Path) -> Result<RunResult> {
+    let file = File::open(path).with_context(|| format!("opening stream {path:?}"))?;
+    replay_reader(file)
+}
+
+pub fn replay_reader<R: Read>(src: R) -> Result<RunResult> {
+    let mut chains: BTreeMap<usize, ChainTrace> = BTreeMap::new();
+    let mut result = RunResult::default();
+    scan_stream(src, |event| {
+        match event {
+            RunEvent::Meta { .. } => {}
+            RunEvent::Sample { chain, t, theta } => {
+                chain_entry(&mut chains, chain).samples.push((t, theta));
+            }
+            RunEvent::U { chain, step, t, u } => {
+                chain_entry(&mut chains, chain).u_trace.push(TracePoint { step, t, u });
+            }
+            RunEvent::Center { t, theta } => result.center_trace.push((t, theta)),
+            RunEvent::Metrics { metrics, elapsed } => {
+                result.metrics = metrics;
+                result.elapsed = elapsed;
+            }
+        }
+        Ok(())
+    })?;
+    result.chains = chains.into_values().collect();
+    result.merge_samples();
+    Ok(result)
+}
+
+fn chain_entry(chains: &mut BTreeMap<usize, ChainTrace>, chain: usize) -> &mut ChainTrace {
+    chains.entry(chain).or_insert_with(|| ChainTrace { worker: chain, ..Default::default() })
+}
+
+/// Re-compute convergence diagnostics from a stream *without*
+/// reconstructing it: every sample event folds straight into the
+/// bounded-memory online accumulator. Returns the summary plus the
+/// stream's recorded metrics (if a metrics event was present).
+pub fn stream_diag<R: Read>(src: R) -> Result<(OnlineDiagSummary, Option<Metrics>)> {
+    let mut diag = OnlineDiag::default();
+    let mut metrics = None;
+    scan_stream(src, |event| {
+        match event {
+            RunEvent::Sample { chain, theta, .. } => diag.push(chain, &theta),
+            RunEvent::Metrics { metrics: m, .. } => metrics = Some(m),
+            _ => {}
+        }
+        Ok(())
+    })?;
+    Ok((diag.summary(), metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const STREAM: &str = concat!(
+        "{\"ev\":\"meta\",\"version\":1,\"scheme\":\"ec\",\"workers\":2,\"seed\":9}\n",
+        "{\"ev\":\"u\",\"chain\":0,\"step\":0,\"t\":0.01,\"u\":2.5}\n",
+        "{\"ev\":\"sample\",\"chain\":0,\"t\":0.02,\"theta\":[1.5,-0.25]}\n",
+        "{\"ev\":\"sample\",\"chain\":1,\"t\":0.015,\"theta\":[0.5,0.75]}\n",
+        "{\"ev\":\"center\",\"t\":0.03,\"theta\":[1,0.25]}\n",
+        "{\"ev\":\"sample\",\"chain\":0,\"t\":0.04,\"theta\":[null,2]}\n",
+        "{\"ev\":\"metrics\",\"total_steps\":200,\"exchanges\":50,\"center_steps\":25,",
+        "\"grads_computed\":0,\"steps_per_sec\":1000,\"samples_dropped\":3,",
+        "\"mean_staleness\":0,\"elapsed\":0.2}\n",
+    );
+
+    #[test]
+    fn replay_reconstructs_chains_center_and_metrics() {
+        let r = replay_reader(STREAM.as_bytes()).unwrap();
+        assert_eq!(r.chains.len(), 2);
+        assert_eq!(r.chains[0].worker, 0);
+        assert_eq!(r.chains[0].samples.len(), 2);
+        assert_eq!(r.chains[0].u_trace.len(), 1);
+        assert_eq!(r.chains[1].samples, vec![(0.015, vec![0.5, 0.75])]);
+        assert_eq!(r.center_trace, vec![(0.03, vec![1.0, 0.25])]);
+        assert_eq!(r.metrics.total_steps, 200);
+        assert_eq!(r.metrics.exchanges, 50);
+        assert_eq!(r.metrics.center_steps, 25);
+        assert_eq!(r.metrics.samples_dropped, 3);
+        assert_eq!(r.elapsed, 0.2);
+        // Merged view is time-sorted across chains.
+        let times: Vec<f64> = r.samples.iter().map(|s| s.0).collect();
+        assert_eq!(times, vec![0.015, 0.02, 0.04]);
+        // A null θ entry (non-finite at emit time) replays as NaN.
+        assert!(r.chains[0].samples[1].1[0].is_nan());
+    }
+
+    #[test]
+    fn stream_diag_folds_samples_without_reconstruction() {
+        let (summary, metrics) = stream_diag(STREAM.as_bytes()).unwrap();
+        assert_eq!(summary.chains, 2);
+        assert_eq!(summary.n, 3);
+        assert_eq!(summary.tracked, 2);
+        assert_eq!(metrics.unwrap().total_steps, 200);
+    }
+
+    #[test]
+    fn unknown_event_kinds_are_rejected() {
+        let err = replay_reader("{\"ev\":\"vibes\"}\n".as_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("vibes"));
+    }
+
+    #[test]
+    fn malformed_lines_surface_their_line_number() {
+        let bad = "{\"ev\":\"meta\"}\n{not json\n";
+        let err = replay_reader(bad.as_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+    }
+
+    #[test]
+    fn events_missing_required_fields_error() {
+        assert!(replay_reader("{\"ev\":\"sample\",\"t\":1}\n".as_bytes()).is_err());
+        assert!(replay_reader("{\"t\":1}\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn future_stream_versions_are_rejected() {
+        let v2 = "{\"ev\":\"meta\",\"version\":2,\"scheme\":\"ec\",\"workers\":1,\"seed\":\"1\"}\n";
+        let err = replay_reader(v2.as_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("version 2"), "{err:#}");
+    }
+
+    #[test]
+    fn large_seeds_round_trip_through_the_meta_event() {
+        let seed = u64::MAX - 12345; // would corrupt through f64
+        let line = format!(
+            "{{\"ev\":\"meta\",\"version\":1,\"scheme\":\"ec\",\"workers\":2,\"seed\":\"{seed}\"}}\n"
+        );
+        let v = crate::util::json::Json::parse(line.trim()).unwrap();
+        match RunEvent::from_json(&v).unwrap() {
+            RunEvent::Meta { seed: parsed, .. } => assert_eq!(parsed, seed),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn non_array_theta_is_rejected_not_emptied() {
+        let bad = "{\"ev\":\"sample\",\"chain\":0,\"t\":1,\"theta\":5}\n";
+        let err = replay_reader(bad.as_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("theta"), "{err:#}");
+    }
+}

@@ -1,0 +1,109 @@
+//! Fan-out sink: deliver every event to several sinks.
+
+use super::SampleSink;
+
+/// Delivers each event to all parts in order. The common stack is
+/// memory + jsonl + diag: keep a capped in-memory view for immediate
+/// reporting, the full stream on disk, and running diagnostics.
+pub struct TeeSink {
+    parts: Vec<Box<dyn SampleSink>>,
+}
+
+impl TeeSink {
+    pub fn new(parts: Vec<Box<dyn SampleSink>>) -> TeeSink {
+        TeeSink { parts }
+    }
+}
+
+impl SampleSink for TeeSink {
+    fn record(&mut self, t: f64, theta: &[f32]) {
+        for p in &mut self.parts {
+            p.record(t, theta);
+        }
+    }
+
+    fn record_u(&mut self, step: usize, t: f64, u: f64) {
+        for p in &mut self.parts {
+            p.record_u(step, t, u);
+        }
+    }
+
+    /// A sample counts as dropped only if *every* θ-retaining part
+    /// dropped it — a memory part past its cap loses nothing while a
+    /// stream part keeps recording, so the tee's loss is the minimum
+    /// over retaining parts. Diagnostics-only parts keep no θ by design
+    /// and must not mask real loss (their `dropped()` is always 0).
+    fn dropped(&self) -> u64 {
+        self.parts
+            .iter()
+            .filter(|p| p.retains_samples())
+            .map(|p| p.dropped())
+            .min()
+            .unwrap_or(0)
+    }
+
+    fn retains_samples(&self) -> bool {
+        self.parts.iter().any(|p| p.retains_samples())
+    }
+
+    /// The retained in-memory view comes from the first part that has
+    /// one (the memory part, in the standard stack).
+    fn take_samples(&mut self) -> Vec<(f64, Vec<f32>)> {
+        for p in &mut self.parts {
+            let samples = p.take_samples();
+            if !samples.is_empty() {
+                return samples;
+            }
+        }
+        Vec::new()
+    }
+
+    fn flush(&mut self) {
+        for p in &mut self.parts {
+            p.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sink::MemorySink;
+
+    #[test]
+    fn fans_out_and_takes_from_first_retaining_part() {
+        let mut tee =
+            TeeSink::new(vec![Box::new(MemorySink::new(1)), Box::new(MemorySink::new(10))]);
+        tee.record(0.0, &[1.0]);
+        tee.record(1.0, &[2.0]);
+        // Part 0 dropped one, part 1 dropped none: nothing is lost.
+        assert_eq!(tee.dropped(), 0);
+        let kept = tee.take_samples();
+        assert_eq!(kept.len(), 1); // the first (capped) part's view
+        // Second take falls through to the larger part's retained view.
+        assert_eq!(tee.take_samples().len(), 2);
+    }
+
+    #[test]
+    fn dropped_is_min_over_parts() {
+        let mut tee =
+            TeeSink::new(vec![Box::new(MemorySink::new(0)), Box::new(MemorySink::new(0))]);
+        tee.record(0.0, &[1.0]);
+        assert_eq!(tee.dropped(), 1); // every part dropped it: lost
+    }
+
+    #[test]
+    fn diag_only_parts_do_not_mask_loss() {
+        use crate::sink::{Frame, OnlineDiag, OnlineDiagSink};
+        use std::sync::{Arc, Mutex};
+        let diag = Arc::new(Mutex::new(OnlineDiag::default()));
+        let mut tee = TeeSink::new(vec![
+            Box::new(MemorySink::new(0)),
+            Box::new(OnlineDiagSink::new(diag, Frame::Chain(0))),
+        ]);
+        tee.record(0.0, &[1.0]);
+        // θ is gone (memory full, diag keeps no θ): must count as lost.
+        assert_eq!(tee.dropped(), 1);
+        assert!(tee.retains_samples());
+    }
+}

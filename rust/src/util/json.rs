@@ -1,9 +1,20 @@
-//! Minimal JSON parser + emitter.
+//! Minimal JSON parser + emitter, plus the streaming layer the sink
+//! subsystem is built on (DESIGN.md §7).
 //!
 //! Built from scratch because no serde facade is available offline. Scope:
 //! the full JSON grammar minus `\u` surrogate pairs (accepted, mapped to
 //! the replacement char when invalid). Used for the artifact manifest
 //! (`artifacts/manifest.json`), bench reports, and experiment result dumps.
+//!
+//! Two entry points exist per direction:
+//!
+//! * tree — [`Json::parse`] / [`Json::emit`]: whole document in memory;
+//! * streaming — [`Emitter`] (token-at-a-time writer, no intermediate
+//!   tree) and [`StreamReader`] (feed bytes in arbitrary chunks, pull
+//!   complete line-framed values). Both keep memory bounded by the
+//!   largest single record, never by the stream length, and share the
+//!   number formatting of the tree emitter so values round-trip
+//!   identically through either path.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -106,18 +117,7 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.is_finite() {
-                    if *n == n.trunc() && n.abs() < 1e15 {
-                        out.push_str(&format!("{}", *n as i64));
-                    } else {
-                        out.push_str(&format!("{n}"));
-                    }
-                } else {
-                    // JSON has no Inf/NaN; emit null like most serializers.
-                    out.push_str("null");
-                }
-            }
+            Json::Num(n) => fmt_f64(out, *n),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(items) => {
                 out.push('[');
@@ -179,6 +179,275 @@ fn write_escaped(out: &mut String, s: &str) {
         }
     }
     out.push('"');
+}
+
+/// Shared f64 formatting: integers without a decimal point, non-finite as
+/// `null` (JSON has no NaN/Inf). Both the tree emitter and [`Emitter`] go
+/// through here so the two paths byte-agree.
+fn fmt_f64(out: &mut String, n: f64) {
+    use std::fmt::Write as _;
+    if n.is_finite() {
+        if n == n.trunc() && n.abs() < 1e15 {
+            let _ = write!(out, "{}", n as i64);
+        } else {
+            let _ = write!(out, "{n}");
+        }
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// f32 formatting via the *f32* `Display` impl: Rust prints the shortest
+/// decimal that parses back to the same f32, so a reader that parses the
+/// text as f64 and narrows recovers the original bits — θ samples survive
+/// the JSONL round trip exactly.
+fn fmt_f32(out: &mut String, n: f32) {
+    use std::fmt::Write as _;
+    if n.is_finite() {
+        if n == n.trunc() && n.abs() < 1e15 {
+            let _ = write!(out, "{}", n as i64);
+        } else {
+            let _ = write!(out, "{n}");
+        }
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// Incremental JSON emitter: tokens are appended straight to an internal
+/// `String` with automatic comma/colon placement — no [`Json`] tree is
+/// built, so emitting a record costs one reusable buffer of the record's
+/// own size. The sink layer formats one JSONL event per [`clear`]d buffer.
+///
+/// Misuse (a value where only a key is legal, unbalanced `end_*`) is a
+/// logic error; the emitter keeps best-effort state rather than
+/// validating the full grammar — callers are the crate's own fixed event
+/// shapes, checked by the round-trip tests.
+///
+/// [`clear`]: Emitter::clear
+#[derive(Debug, Default)]
+pub struct Emitter {
+    out: String,
+    /// Per nesting level: has a value already been emitted here?
+    stack: Vec<bool>,
+    /// The next value completes a `key:`; suppress its comma.
+    after_key: bool,
+}
+
+impl Emitter {
+    pub fn new() -> Emitter {
+        Emitter::default()
+    }
+
+    /// Reset for the next record, keeping the allocation.
+    pub fn clear(&mut self) {
+        self.out.clear();
+        self.stack.clear();
+        self.after_key = false;
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.out
+    }
+
+    pub fn into_string(self) -> String {
+        self.out
+    }
+
+    fn pre_value(&mut self) {
+        if self.after_key {
+            self.after_key = false;
+            return;
+        }
+        if let Some(seen) = self.stack.last_mut() {
+            if *seen {
+                self.out.push(',');
+            }
+            *seen = true;
+        }
+    }
+
+    pub fn begin_obj(&mut self) -> &mut Self {
+        self.pre_value();
+        self.out.push('{');
+        self.stack.push(false);
+        self
+    }
+
+    pub fn end_obj(&mut self) -> &mut Self {
+        let popped = self.stack.pop();
+        debug_assert!(popped.is_some(), "end_obj with no open container");
+        self.out.push('}');
+        self
+    }
+
+    pub fn begin_arr(&mut self) -> &mut Self {
+        self.pre_value();
+        self.out.push('[');
+        self.stack.push(false);
+        self
+    }
+
+    pub fn end_arr(&mut self) -> &mut Self {
+        let popped = self.stack.pop();
+        debug_assert!(popped.is_some(), "end_arr with no open container");
+        self.out.push(']');
+        self
+    }
+
+    /// Object key; the next emitted value attaches to it.
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        if let Some(seen) = self.stack.last_mut() {
+            if *seen {
+                self.out.push(',');
+            }
+            *seen = true;
+        }
+        write_escaped(&mut self.out, k);
+        self.out.push(':');
+        self.after_key = true;
+        self
+    }
+
+    pub fn num(&mut self, n: f64) -> &mut Self {
+        self.pre_value();
+        fmt_f64(&mut self.out, n);
+        self
+    }
+
+    pub fn num_f32(&mut self, n: f32) -> &mut Self {
+        self.pre_value();
+        fmt_f32(&mut self.out, n);
+        self
+    }
+
+    pub fn str_val(&mut self, s: &str) -> &mut Self {
+        self.pre_value();
+        write_escaped(&mut self.out, s);
+        self
+    }
+
+    pub fn bool_val(&mut self, b: bool) -> &mut Self {
+        self.pre_value();
+        self.out.push_str(if b { "true" } else { "false" });
+        self
+    }
+
+    pub fn null(&mut self) -> &mut Self {
+        self.pre_value();
+        self.out.push_str("null");
+        self
+    }
+
+    /// Whole f32 array in one call — the θ-sample hot path.
+    pub fn f32_arr(&mut self, xs: &[f32]) -> &mut Self {
+        self.begin_arr();
+        for &x in xs {
+            self.num_f32(x);
+        }
+        self.end_arr()
+    }
+}
+
+/// Pull-based streaming reader for line-framed JSON (JSONL): feed bytes
+/// in whatever chunks arrive, pull complete top-level values as newlines
+/// complete them. Only the current (possibly incomplete) line is ever
+/// buffered, so memory is bounded by the largest single record no matter
+/// how long the stream runs. Values split across arbitrary chunk
+/// boundaries parse once their closing newline arrives; blank lines are
+/// skipped; a final unterminated line is recovered by [`finish`].
+///
+/// [`finish`]: StreamReader::finish
+#[derive(Debug, Default)]
+pub struct StreamReader {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf`; compacted once per [`feed`], not per
+    /// line, so pulling n lines from a chunk is O(chunk), not O(n·chunk).
+    ///
+    /// [`feed`]: StreamReader::feed
+    pos: usize,
+    /// Lines consumed so far (1-based in error messages).
+    line: usize,
+}
+
+impl StreamReader {
+    pub fn new() -> StreamReader {
+        StreamReader::default()
+    }
+
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes held for the incomplete tail line (the memory bound).
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Next complete value, if a full line has been fed.
+    pub fn next_value(&mut self) -> Option<Result<Json, JsonError>> {
+        loop {
+            let rel = self.buf[self.pos..].iter().position(|&b| b == b'\n')?;
+            let nl = self.pos + rel;
+            self.line += 1;
+            let parsed = {
+                let text = trim_ascii_ws(&self.buf[self.pos..nl]);
+                if text.is_empty() {
+                    None
+                } else {
+                    Some(parse_line(text, self.line))
+                }
+            };
+            self.pos = nl + 1;
+            if let Some(result) = parsed {
+                return Some(result);
+            }
+        }
+    }
+
+    /// End-of-stream flush: parse a final line missing its newline.
+    pub fn finish(&mut self) -> Option<Result<Json, JsonError>> {
+        let buf = std::mem::take(&mut self.buf);
+        let pos = std::mem::take(&mut self.pos);
+        let text = trim_ascii_ws(&buf[pos..]);
+        if text.is_empty() {
+            return None;
+        }
+        self.line += 1;
+        Some(parse_line(text, self.line))
+    }
+}
+
+// Equivalent to `<[u8]>::trim_ascii` (std, stable since 1.80); kept
+// hand-rolled because this crate avoids assuming a recent MSRV beyond
+// what the rest of the code already requires.
+fn trim_ascii_ws(mut bytes: &[u8]) -> &[u8] {
+    while let [first, rest @ ..] = bytes {
+        if first.is_ascii_whitespace() {
+            bytes = rest;
+        } else {
+            break;
+        }
+    }
+    while let [rest @ .., last] = bytes {
+        if last.is_ascii_whitespace() {
+            bytes = rest;
+        } else {
+            break;
+        }
+    }
+    bytes
+}
+
+fn parse_line(text: &[u8], line: usize) -> Result<Json, JsonError> {
+    let s = std::str::from_utf8(text)
+        .map_err(|_| JsonError { msg: format!("line {line}: invalid utf-8"), offset: 0 })?;
+    Json::parse(s)
+        .map_err(|e| JsonError { msg: format!("line {line}: {}", e.msg), offset: e.offset })
 }
 
 /// Parse error with byte offset.
@@ -449,6 +718,212 @@ mod tests {
     fn integers_emit_without_decimal_point() {
         assert_eq!(Json::Num(5.0).emit(), "5");
         assert_eq!(Json::Num(5.25).emit(), "5.25");
+    }
+
+    /// Deterministic pseudo-random JSON tree for the round-trip property.
+    fn random_json(rng: &mut crate::math::rng::Pcg64, depth: usize) -> Json {
+        let pick = rng.next_u64() % if depth == 0 { 4 } else { 6 };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_u64() % 2 == 0),
+            2 => {
+                // Mix integral and fractional magnitudes.
+                let raw = rng.next_normal() * 10f64.powi((rng.next_u64() % 7) as i32 - 3);
+                Json::Num(if rng.next_u64() % 3 == 0 { raw.trunc() } else { raw })
+            }
+            3 => {
+                let n = rng.next_u64() % 8;
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            ['a', 'β', '"', '\\', '\n', '\t', ' ', 'z']
+                                [(rng.next_u64() % 8) as usize]
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.next_u64() % 4).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.next_u64() % 4)
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn roundtrip_property_emit_parse_emit_identical() {
+        let mut rng = crate::math::rng::Pcg64::seeded(1612);
+        for _ in 0..200 {
+            let v = random_json(&mut rng, 3);
+            let emitted = v.emit();
+            let parsed = Json::parse(&emitted).unwrap_or_else(|e| panic!("{e}: {emitted}"));
+            assert_eq!(parsed, v, "parse round trip: {emitted}");
+            assert_eq!(parsed.emit(), emitted, "emit round trip");
+        }
+    }
+
+    #[test]
+    fn parser_rejects_bare_nan_and_inf() {
+        for bad in ["NaN", "nan", "Infinity", "-Infinity", "inf", "-inf", "[1,NaN]"] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parser_rejects_truncation_and_trailing_garbage() {
+        for bad in [
+            "{\"a\":",
+            "{\"a\":1",
+            "[1,2",
+            "\"open",
+            "{\"a\":1} x",
+            "[1] [2]",
+            "123abc",
+            "tru",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn nonfinite_numbers_emit_as_null() {
+        assert_eq!(Json::Num(f64::NAN).emit(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).emit(), "null");
+        let mut e = Emitter::new();
+        e.begin_arr().num_f32(f32::NAN).num(f64::NEG_INFINITY).end_arr();
+        assert_eq!(e.as_str(), "[null,null]");
+    }
+
+    #[test]
+    fn emitter_matches_tree_emitter() {
+        // Same document, keys in BTreeMap (alphabetical) order.
+        let tree = Json::from_pairs(vec![
+            ("arr", Json::Arr(vec![Json::Num(1.0), Json::Num(2.5), Json::Str("s\n".into())])),
+            ("b", Json::Bool(true)),
+            ("n", Json::Null),
+            ("obj", Json::from_pairs(vec![("x", Json::Num(-3.0))])),
+        ]);
+        let mut e = Emitter::new();
+        e.begin_obj();
+        e.key("arr").begin_arr().num(1.0).num(2.5).str_val("s\n").end_arr();
+        e.key("b").bool_val(true);
+        e.key("n").null();
+        e.key("obj").begin_obj();
+        e.key("x").num(-3.0);
+        e.end_obj();
+        e.end_obj();
+        assert_eq!(e.as_str(), tree.emit());
+    }
+
+    #[test]
+    fn emitter_comma_after_nested_container() {
+        // A container in non-final position must be followed by a comma
+        // (regression: the level pop must happen in release builds too).
+        let mut e = Emitter::new();
+        e.begin_obj();
+        e.key("a").begin_obj();
+        e.end_obj();
+        e.key("b").num(1.0);
+        e.key("c").begin_arr().num(2.0).end_arr();
+        e.key("d").bool_val(false);
+        e.end_obj();
+        assert_eq!(e.as_str(), "{\"a\":{},\"b\":1,\"c\":[2],\"d\":false}");
+        assert!(Json::parse(e.as_str()).is_ok());
+    }
+
+    #[test]
+    fn emitter_clear_reuses_buffer() {
+        let mut e = Emitter::new();
+        e.begin_obj();
+        e.key("a").num(1.0);
+        e.end_obj();
+        assert_eq!(e.as_str(), "{\"a\":1}");
+        e.clear();
+        e.begin_arr().num(2.0).end_arr();
+        assert_eq!(e.as_str(), "[2]");
+    }
+
+    #[test]
+    fn f32_values_roundtrip_exactly_through_text() {
+        let mut rng = crate::math::rng::Pcg64::seeded(99);
+        let mut values: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            0.1,
+            -1.5e-8,
+            1e-45,           // smallest subnormal
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            16_777_216.0,    // 2^24, the integer-precision edge
+            core::f32::consts::PI,
+        ];
+        for _ in 0..500 {
+            let x = f32::from_bits(rng.next_u64() as u32);
+            if x.is_finite() {
+                values.push(x);
+            }
+        }
+        let mut e = Emitter::new();
+        e.f32_arr(&values);
+        let parsed = Json::parse(e.as_str()).unwrap();
+        let back: Vec<f32> = parsed
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        for (a, b) in values.iter().zip(&back) {
+            assert_eq!(a, b, "f32 {a:?} -> {b:?}");
+        }
+    }
+
+    #[test]
+    fn stream_reader_resumes_across_arbitrary_chunk_boundaries() {
+        let doc = "{\"a\":1}\n\n  [1,2,3]\r\n\"x\\n\"\n{\"nested\":{\"b\":[true]}}\n";
+        let expect = vec![
+            Json::parse("{\"a\":1}").unwrap(),
+            Json::parse("[1,2,3]").unwrap(),
+            Json::parse("\"x\\n\"").unwrap(),
+            Json::parse("{\"nested\":{\"b\":[true]}}").unwrap(),
+        ];
+        for chunk in [1usize, 2, 3, 7, 64, doc.len()] {
+            let mut r = StreamReader::new();
+            let mut got = Vec::new();
+            for c in doc.as_bytes().chunks(chunk) {
+                r.feed(c);
+                while let Some(v) = r.next_value() {
+                    got.push(v.unwrap());
+                }
+            }
+            assert!(r.finish().is_none(), "chunk={chunk}: trailing data");
+            assert_eq!(got, expect, "chunk={chunk}");
+            assert_eq!(r.buffered(), 0);
+        }
+    }
+
+    #[test]
+    fn stream_reader_finish_recovers_unterminated_tail() {
+        let mut r = StreamReader::new();
+        r.feed(b"{\"a\":1}\n{\"b\":");
+        assert_eq!(r.next_value().unwrap().unwrap(), Json::parse("{\"a\":1}").unwrap());
+        assert!(r.next_value().is_none());
+        r.feed(b"2}");
+        assert!(r.next_value().is_none()); // still no newline
+        assert_eq!(r.finish().unwrap().unwrap(), Json::parse("{\"b\":2}").unwrap());
+        assert!(r.finish().is_none());
+    }
+
+    #[test]
+    fn stream_reader_reports_malformed_lines_with_line_numbers() {
+        let mut r = StreamReader::new();
+        r.feed(b"{\"ok\":1}\nnot json\n");
+        assert!(r.next_value().unwrap().is_ok());
+        let err = r.next_value().unwrap().unwrap_err();
+        assert!(err.msg.contains("line 2"), "{err}");
+        // The reader keeps going after an error line.
+        r.feed(b"[4]\n");
+        assert_eq!(r.next_value().unwrap().unwrap(), Json::parse("[4]").unwrap());
     }
 
     #[test]

@@ -270,7 +270,7 @@ fn lockfree_ec_preserves_target_moments() {
     // overwrite uploads: every exchange is credited.
     assert_eq!(r.metrics.exchanges, 4 * 15_000);
     assert!(r.metrics.center_steps > 0);
-    let samples = ecsgmcmc::diagnostics::to_f64_samples(&r.thetas(), 2);
+    let samples = ecsgmcmc::diagnostics::to_f64_samples(r.thetas(), 2);
     let m = ecsgmcmc::diagnostics::moments(&samples);
     assert!(m.mean_error(&[0.0, 0.0]) < 0.15, "mean={:?}", m.mean);
     assert!(m.cov_error(&[1.0, 0.6, 0.6, 0.8]) < 0.3, "cov={:?}", m.cov);
@@ -295,7 +295,7 @@ fn lockfree_sharded_center_stays_correct() {
     for (_, c) in &r.center_trace {
         assert!(c.iter().all(|x| x.is_finite()));
     }
-    let samples = ecsgmcmc::diagnostics::to_f64_samples(&r.thetas(), 2);
+    let samples = ecsgmcmc::diagnostics::to_f64_samples(r.thetas(), 2);
     let m = ecsgmcmc::diagnostics::moments(&samples);
     assert!(m.mean_error(&[0.0, 0.0]) < 0.15, "mean={:?}", m.mean);
     assert!(m.cov_error(&[1.0, 0.6, 0.6, 0.8]) < 0.35, "cov={:?}", m.cov);

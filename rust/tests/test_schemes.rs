@@ -30,7 +30,12 @@ fn params() -> SghmcParams {
     SghmcParams { eps: 0.05, ..Default::default() }
 }
 
-fn check_moments(label: &str, thetas: &[Vec<f32>], tol_mean: f64, tol_cov: f64) {
+fn check_moments<'a, I: IntoIterator<Item = &'a [f32]>>(
+    label: &str,
+    thetas: I,
+    tol_mean: f64,
+    tol_cov: f64,
+) {
     let samples = to_f64_samples(thetas, 2);
     let m = moments(&samples);
     assert!(
@@ -54,7 +59,7 @@ fn all_schemes_sample_the_same_gaussian() {
     // 1. Sequential SGHMC.
     let engine = Box::new(NativeEngine::new(gauss(), params(), StepKind::Sghmc));
     let r = run_single(engine, 60_000, sample_opts(3_000), 1);
-    check_moments("sghmc", &r.thetas(), 0.12, 0.25);
+    check_moments("sghmc", r.thetas(), 0.12, 0.25);
 
     // 2. Independent chains.
     let engines: Vec<Box<dyn WorkerEngine>> = (0..4)
@@ -64,7 +69,7 @@ fn all_schemes_sample_the_same_gaussian() {
         })
         .collect();
     let r = IndependentCoordinator::new(25_000, sample_opts(3_000)).run(engines, 2);
-    check_moments("independent", &r.thetas(), 0.12, 0.25);
+    check_moments("independent", r.thetas(), 0.12, 0.25);
 
     // 3. Synchronous parallel (s=1, O=K).
     let r = NaiveCoordinator::new(
@@ -73,7 +78,7 @@ fn all_schemes_sample_the_same_gaussian() {
         gauss(),
     )
     .run(3);
-    check_moments("synchronous", &r.thetas(), 0.12, 0.25);
+    check_moments("synchronous", r.thetas(), 0.12, 0.25);
 
     // 4. Naive async with mild staleness. Stale gradients act as a
     // feedback delay, so the step size must be well inside the stable
@@ -94,7 +99,7 @@ fn all_schemes_sample_the_same_gaussian() {
         gauss(),
     )
     .run(4);
-    check_moments("naive_async(s=2)", &r.thetas(), 0.15, 0.35);
+    check_moments("naive_async(s=2)", r.thetas(), 0.15, 0.35);
 
     // 5. EC-SGHMC.
     let r = EcCoordinator::new(
@@ -110,7 +115,7 @@ fn all_schemes_sample_the_same_gaussian() {
         gauss(),
     )
     .run(5);
-    check_moments("ec_sghmc", &r.thetas(), 0.15, 0.3);
+    check_moments("ec_sghmc", r.thetas(), 0.15, 0.3);
 }
 
 #[test]
@@ -128,7 +133,7 @@ fn ec_marginals_pass_ks_against_analytic_normal() {
         gauss(),
     )
     .run(7);
-    let samples = to_f64_samples(&r.thetas(), 2);
+    let samples = to_f64_samples(r.thetas(), 2);
     // Marginal 0 is N(0, 1); use ESS-deflated n for the p-value.
     let xs: Vec<f64> = samples.iter().map(|s| s[0]).collect();
     let d = ks::ks_statistic(&xs, 0.0, 1.0);
@@ -174,7 +179,7 @@ fn ec_agrees_with_exact_hmc_on_banana() {
         banana.clone() as Arc<dyn Potential>,
     )
     .run(9);
-    let ec_m = moments(&to_f64_samples(&r.thetas(), 2));
+    let ec_m = moments(&to_f64_samples(r.thetas(), 2));
     // SGHMC at finite eps carries discretization bias and mixes slowly
     // along the curved valley, so agreement is approximate: means within a
     // few tenths, variance scale within 2x (the y marginal is chi^2-like
@@ -218,7 +223,7 @@ fn mixture_modes_both_visited_by_ec() {
         mix as Arc<dyn Potential>,
     )
     .run(11);
-    let samples = to_f64_samples(&r.thetas(), 2);
+    let samples = to_f64_samples(r.thetas(), 2);
     let left = samples.iter().filter(|s| s[0] < 0.0).count();
     let frac = left as f64 / samples.len() as f64;
     assert!(

@@ -1,0 +1,195 @@
+//! End-to-end stream integrity: run → JSONL → replay must preserve the
+//! samples (bit-exactly) and the moments; online diagnostics computed
+//! while sampling must match the post-hoc whole-trace estimators; the
+//! memory cap must report, not silently truncate.
+
+use ecsgmcmc::coordinator::{EcConfig, EcCoordinator, RunOptions, RunResult};
+use ecsgmcmc::diagnostics::{ess, moments, rhat, to_f64_samples};
+use ecsgmcmc::potentials::gaussian::GaussianPotential;
+use ecsgmcmc::samplers::SghmcParams;
+use ecsgmcmc::sink::{replay, SinkSpec};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ecsgmcmc-stream-{name}-{}.jsonl", std::process::id()))
+}
+
+fn ec_run(sink: SinkSpec, opts_base: RunOptions, steps: usize, seed: u64) -> RunResult {
+    let cfg = EcConfig {
+        workers: 4,
+        alpha: 1.0,
+        sync_every: 2,
+        steps,
+        opts: RunOptions { sink, ..opts_base },
+        ..Default::default()
+    };
+    EcCoordinator::new(
+        cfg,
+        SghmcParams { eps: 0.05, ..Default::default() },
+        Arc::new(GaussianPotential::fig1()),
+    )
+    .run(seed)
+}
+
+#[test]
+fn jsonl_stream_replays_bit_identical_samples() {
+    let path = tmp("roundtrip");
+    let tee = SinkSpec::Tee(vec![SinkSpec::Memory, SinkSpec::Jsonl { path: path.clone() }]);
+    let opts = RunOptions { thin: 2, burn_in: 100, log_every: 50, ..Default::default() };
+    let live = ec_run(tee, opts, 1_000, 7);
+    let replayed = replay::replay_file(&path).unwrap();
+
+    assert_eq!(replayed.chains.len(), live.chains.len());
+    for (a, b) in live.chains.iter().zip(&replayed.chains) {
+        assert_eq!(a.worker, b.worker);
+        assert_eq!(a.samples.len(), b.samples.len(), "chain {}", a.worker);
+        for ((ta, va), (tb, vb)) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(ta, tb, "timestamp round trip");
+            assert_eq!(va, vb, "theta round trip");
+        }
+        assert_eq!(a.u_trace.len(), b.u_trace.len());
+        for (ua, ub) in a.u_trace.iter().zip(&b.u_trace) {
+            assert_eq!(ua.step, ub.step);
+            assert_eq!(ua.u, ub.u);
+        }
+    }
+    assert_eq!(live.center_trace, replayed.center_trace);
+    assert_eq!(live.samples.len(), replayed.samples.len());
+    assert_eq!(replayed.metrics.exchanges, live.metrics.exchanges);
+    assert_eq!(replayed.metrics.total_steps, live.metrics.total_steps);
+    assert_eq!(replayed.metrics.center_steps, live.metrics.center_steps);
+
+    // The acceptance criterion: replayed moments within 1e-6 (they are
+    // in fact bit-identical, since every number round-trips exactly).
+    let live_m = moments(&to_f64_samples(live.thetas(), 2));
+    let rep_m = moments(&to_f64_samples(replayed.thetas(), 2));
+    for (a, b) in live_m.mean.iter().zip(&rep_m.mean) {
+        assert!((a - b).abs() < 1e-6, "mean {a} vs {b}");
+    }
+    for (a, b) in live_m.cov.iter().zip(&rep_m.cov) {
+        assert!((a - b).abs() < 1e-6, "cov {a} vs {b}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn pure_jsonl_streams_past_max_samples_without_truncation() {
+    let path = tmp("unbounded");
+    // A tiny in-memory cap that the run's output far exceeds: the old
+    // recorder would silently truncate at 50 samples per chain; the
+    // stream keeps everything and memory holds no samples at all.
+    let opts = RunOptions { thin: 1, burn_in: 0, max_samples: 50, ..Default::default() };
+    let steps = 400;
+    let live = ec_run(SinkSpec::Jsonl { path: path.clone() }, opts, steps, 11);
+    assert!(live.chains.iter().all(|c| c.samples.is_empty()));
+    assert!(live.samples.is_empty());
+    assert_eq!(live.metrics.samples_dropped, 0, "streamed, so nothing is lost");
+
+    let replayed = replay::replay_file(&path).unwrap();
+    assert_eq!(replayed.samples.len(), 4 * steps, "every sample is on disk");
+    for c in &replayed.chains {
+        assert_eq!(c.samples.len(), steps);
+        assert!(c.samples.iter().all(|(_, th)| th.iter().all(|x| x.is_finite())));
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn memory_cap_reports_dropped_instead_of_silent_truncation() {
+    let opts = RunOptions { thin: 1, burn_in: 0, max_samples: 50, ..Default::default() };
+    let r = ec_run(SinkSpec::Memory, opts, 400, 11);
+    for c in &r.chains {
+        assert_eq!(c.samples.len(), 50);
+        assert_eq!(c.dropped, 350);
+    }
+    assert_eq!(r.metrics.samples_dropped, 4 * 350);
+}
+
+#[test]
+fn online_diag_matches_posthoc_diagnostics() {
+    // The Fig. 1 Gaussian config: pooled moments, split-R̂ and ESS from
+    // the online sink must equal the post-hoc diagnostics over the
+    // retained traces (exactly, while no batch collapse happened).
+    let opts = RunOptions { thin: 2, burn_in: 400, log_every: 1_000, ..Default::default() };
+    let r = ec_run(SinkSpec::Tee(vec![SinkSpec::Memory, SinkSpec::OnlineDiag]), opts, 4_000, 17);
+    let d = r.online_diag.as_ref().expect("online diag attached");
+    assert_eq!(d.batch, 1, "no batch collapse at this run length");
+    assert_eq!(d.chains, 4);
+    assert_eq!(d.tracked, 2);
+    let n_per_chain = r.chains[0].samples.len();
+    assert_eq!(d.n as usize, 4 * n_per_chain);
+
+    let per_chain: Vec<Vec<Vec<f64>>> = r
+        .chains
+        .iter()
+        .map(|c| to_f64_samples(c.samples.iter().map(|(_, th)| th.as_slice()), 2))
+        .collect();
+
+    let posthoc_rhat = rhat::max_rhat(&per_chain);
+    assert!(
+        (d.max_rhat - posthoc_rhat).abs() < 1e-6,
+        "online R-hat {} vs post-hoc {posthoc_rhat}",
+        d.max_rhat
+    );
+
+    let posthoc_min_ess = (0..2)
+        .map(|j| {
+            per_chain
+                .iter()
+                .map(|c| ess::ess(&c.iter().map(|s| s[j]).collect::<Vec<_>>()))
+                .sum::<f64>()
+        })
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        (d.min_ess - posthoc_min_ess).abs() < 1e-6,
+        "online ESS {} vs post-hoc {posthoc_min_ess}",
+        d.min_ess
+    );
+
+    let m = moments(&to_f64_samples(r.thetas(), 2));
+    for j in 0..2 {
+        assert!((d.mean[j] - m.mean[j]).abs() < 1e-6, "mean[{j}]");
+    }
+    for i in 0..4 {
+        assert!((d.cov[i] - m.cov[i]).abs() < 1e-6, "cov[{i}]");
+    }
+    // Sanity: the Fig. 1 chains actually converged by these measures.
+    assert!(d.max_rhat < 1.2, "R-hat {}", d.max_rhat);
+    assert!(d.min_ess > 50.0, "ESS {}", d.min_ess);
+}
+
+#[test]
+fn memory_sink_is_bit_compatible_with_default_path() {
+    // SinkSpec::Memory (explicit) and the default RunOptions must give
+    // identical trajectories — the sink layer adds no observable change.
+    let opts = RunOptions { thin: 1, ..Default::default() };
+    let a = ec_run(SinkSpec::Memory, opts.clone(), 300, 23);
+    let b = ec_run(SinkSpec::Memory, opts, 300, 23);
+    for (ca, cb) in a.chains.iter().zip(&b.chains) {
+        assert_eq!(ca.samples, cb.samples);
+    }
+}
+
+#[test]
+fn stream_diag_agrees_with_replay_then_posthoc() {
+    let path = tmp("streamdiag");
+    let opts = RunOptions { thin: 2, burn_in: 200, log_every: 500, ..Default::default() };
+    ec_run(SinkSpec::Jsonl { path: path.clone() }, opts, 2_000, 29);
+
+    // Bounded-memory path: fold the stream straight into diagnostics.
+    let file = std::fs::File::open(&path).unwrap();
+    let (d, metrics) = replay::stream_diag(file).unwrap();
+    assert!(metrics.is_some());
+
+    // Reconstruction path: replay, then post-hoc diagnostics.
+    let replayed = replay::replay_file(&path).unwrap();
+    let per_chain: Vec<Vec<Vec<f64>>> = replayed
+        .chains
+        .iter()
+        .map(|c| to_f64_samples(c.samples.iter().map(|(_, th)| th.as_slice()), 2))
+        .collect();
+    let posthoc = rhat::max_rhat(&per_chain);
+    assert!((d.max_rhat - posthoc).abs() < 1e-6, "{} vs {posthoc}", d.max_rhat);
+    std::fs::remove_file(&path).ok();
+}
