@@ -101,4 +101,72 @@ fn main() {
             &[("steps/sec", &s.ys), ("efficiency", &eff)],
         );
     }
+
+    // ---- Checkpoint overhead (DESIGN.md §8: target < 3%). ----
+    bench_checkpoint_overhead(scale);
+}
+
+/// Measure the steps/sec cost of checkpointing: the same EC Gaussian run
+/// with and without snapshot cuts, reported to `out/bench/
+/// BENCH_checkpoint.json` (the CI `resume-determinism` job records it).
+fn bench_checkpoint_overhead(scale: Scale) {
+    use ecsgmcmc::checkpoint::CheckpointPolicy;
+    use ecsgmcmc::coordinator::{EcCheckpoint, EcConfig, EcCoordinator, RunOptions};
+    use ecsgmcmc::potentials::gaussian::GaussianPotential;
+    use ecsgmcmc::util::json::Json;
+    use std::sync::Arc;
+
+    let steps = scale.pick(4_000, 40_000);
+    let dir = std::env::temp_dir()
+        .join(format!("ecsgmcmc-bench-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let base = EcConfig {
+        workers: 4,
+        alpha: 1.0,
+        sync_every: 2,
+        steps,
+        opts: RunOptions {
+            thin: 50,
+            log_every: (steps / 10).max(1),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: 0.05, ..Default::default() };
+    let pot = Arc::new(GaussianPotential::fig1());
+    let run = |cfg: EcConfig| EcCoordinator::new(cfg, params, pot.clone()).run(3);
+
+    // Warm once, then measure each variant.
+    let _ = run(base.clone());
+    let plain = run(base.clone());
+    let ckpt = run(EcConfig {
+        checkpoint: Some(EcCheckpoint {
+            dir: dir.clone(),
+            policy: CheckpointPolicy { every_rounds: 250, every_secs: None, keep: 2 },
+        }),
+        ..base
+    });
+    let overhead_pct = 100.0
+        * (plain.metrics.steps_per_sec - ckpt.metrics.steps_per_sec)
+        / plain.metrics.steps_per_sec.max(1e-12);
+    println!(
+        "\n== checkpoint overhead (EC Gaussian, K=4, cut every 250 rounds) ==\n\
+         baseline {:.0} steps/s, checkpointed {:.0} steps/s -> {overhead_pct:.2}% overhead \
+         (target < 3%)",
+        plain.metrics.steps_per_sec, ckpt.metrics.steps_per_sec
+    );
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("checkpoint_overhead".into())),
+        ("steps", Json::Num(steps as f64)),
+        ("baseline_steps_per_sec", Json::Num(plain.metrics.steps_per_sec)),
+        ("checkpoint_steps_per_sec", Json::Num(ckpt.metrics.steps_per_sec)),
+        ("overhead_pct", Json::Num(overhead_pct)),
+        ("target_pct", Json::Num(3.0)),
+    ]);
+    if std::fs::create_dir_all("out/bench").is_ok() {
+        let path = std::path::Path::new("out/bench/BENCH_checkpoint.json");
+        let _ = std::fs::write(path, doc.emit_pretty());
+        println!("-> wrote {}", path.display());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,286 @@
+//! Durable snapshots & deterministic resume for long-running EC fleets
+//! (DESIGN.md §8).
+//!
+//! A production fleet outlives any single process: machines get
+//! preempted, runs get migrated, experiments get stopped and picked back
+//! up. This subsystem makes an EC run a *resumable artifact*:
+//!
+//! * [`snapshot::Snapshot`] — the complete resumable state of a run at a
+//!   consistent cut, encoded as self-describing JSONL through the same
+//!   bit-exact emitter the run stream uses;
+//! * [`CheckpointStore`] — atomic persistence (write to a temp file,
+//!   fsync, rename into place) with retention of the last K snapshots;
+//! * [`CheckpointPolicy`] — when to cut: every N exchange rounds, gated
+//!   by an optional minimum wall-clock spacing.
+//!
+//! The EC coordinator (`coordinator/ec.rs`) takes cuts at *round
+//! boundaries* — points where every live worker has completed the same
+//! number of exchanges and the server has consumed every upload. At such
+//! a cut the whole run state is a finite set of values (θ, momenta, RNG
+//! positions, budgets, counters, stream offsets), and under the
+//! deterministic transport, resuming from the cut replays the exact
+//! computation an uninterrupted run would have performed — the
+//! kill-and-resume integration test asserts bit-identical trajectories.
+//! Under the lock-free transport the resumed run is a fresh draw of the
+//! same racy regime (statistically valid, not bitwise).
+
+pub mod snapshot;
+
+pub use snapshot::{
+    CenterSnap, Fingerprint, RngSnap, Snapshot, WorkerSnap, CHECKPOINT_VERSION,
+};
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// When to cut a snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointPolicy {
+    /// Exchange rounds (per-worker exchanges) between candidate cuts.
+    pub every_rounds: u64,
+    /// Optional wall-clock gate: skip a candidate cut until this many
+    /// seconds have passed since the last written snapshot.
+    pub every_secs: Option<f64>,
+    /// How many snapshots to retain (older ones are pruned).
+    pub keep: usize,
+}
+
+impl Default for CheckpointPolicy {
+    fn default() -> Self {
+        Self { every_rounds: 50, every_secs: None, keep: 3 }
+    }
+}
+
+impl CheckpointPolicy {
+    /// Steps between candidate cuts (rounds × sync_every).
+    pub fn cut_steps(&self, sync_every: usize) -> usize {
+        (self.every_rounds.max(1) as usize).saturating_mul(sync_every.max(1))
+    }
+
+    /// Should a candidate cut actually be written?
+    pub fn should_write(&self, secs_since_last: f64) -> bool {
+        match self.every_secs {
+            Some(gate) => secs_since_last >= gate,
+            None => true,
+        }
+    }
+}
+
+/// A directory of snapshots: `ckpt-<boundary>.jsonl`, newest = largest
+/// boundary. Writes are atomic (tmp + rename) so a kill mid-write never
+/// corrupts the latest good snapshot; retention prunes all but the
+/// newest `keep`.
+#[derive(Debug, Clone)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: impl Into<PathBuf>, keep: usize) -> CheckpointStore {
+        CheckpointStore { dir: dir.into(), keep: keep.max(1) }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn file_name(boundary: usize) -> String {
+        format!("ckpt-{boundary:012}.jsonl")
+    }
+
+    /// Boundary encoded in a snapshot file name, if it is one.
+    fn boundary_of(name: &str) -> Option<usize> {
+        name.strip_prefix("ckpt-")?.strip_suffix(".jsonl")?.parse().ok()
+    }
+
+    /// Persist a snapshot atomically and prune old ones. Returns the
+    /// final path.
+    pub fn save(&self, snap: &Snapshot) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating checkpoint dir {:?}", self.dir))?;
+        let final_path = self.dir.join(Self::file_name(snap.boundary));
+        let tmp_path = self.dir.join(format!(".tmp-{}", Self::file_name(snap.boundary)));
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&tmp_path)
+                .with_context(|| format!("creating {tmp_path:?}"))?;
+            f.write_all(snap.serialize().as_bytes())
+                .with_context(|| format!("writing {tmp_path:?}"))?;
+            // Durability before visibility: the rename must never expose
+            // a partially-flushed file, so a failed sync is a failed save
+            // (disk full at sync time is precisely the case that would
+            // otherwise surface as a corrupt "newest" snapshot).
+            f.sync_all().with_context(|| format!("syncing {tmp_path:?}"))?;
+        }
+        std::fs::rename(&tmp_path, &final_path)
+            .with_context(|| format!("renaming {tmp_path:?} -> {final_path:?}"))?;
+        self.prune();
+        Ok(final_path)
+    }
+
+    /// Every snapshot file in the directory, oldest first. Missing
+    /// directory = no snapshots.
+    fn scan(&self) -> Vec<(usize, PathBuf)> {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return Vec::new() };
+        let mut found: Vec<(usize, PathBuf)> = Vec::new();
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(boundary) = Self::boundary_of(name) {
+                found.push((boundary, entry.path()));
+            }
+        }
+        found.sort();
+        found
+    }
+
+    /// Newest snapshot file in the directory, if any.
+    pub fn latest(&self) -> Result<Option<PathBuf>> {
+        Ok(self.scan().pop().map(|(_, p)| p))
+    }
+
+    /// Load and validate a snapshot file.
+    pub fn load(path: &Path) -> Result<Snapshot> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {path:?}"))?;
+        Snapshot::parse(&text).with_context(|| format!("parsing checkpoint {path:?}"))
+    }
+
+    /// Load the newest *readable* snapshot: if the newest file is
+    /// corrupt (a crash can outrun any durability protocol on some
+    /// filesystems), fall back to the older retained snapshots — that
+    /// is what retention is for. Errors when none exists or none loads.
+    pub fn load_latest(&self) -> Result<(PathBuf, Snapshot)> {
+        let found = self.scan();
+        if found.is_empty() {
+            bail!("no checkpoints found under {:?}", self.dir);
+        }
+        let mut first_err = None;
+        for (_, path) in found.into_iter().rev() {
+            match Self::load(&path) {
+                Ok(snap) => {
+                    if first_err.is_some() {
+                        crate::log_warn!(
+                            "newest checkpoint is unreadable; resuming from older \
+                             snapshot {path:?}"
+                        );
+                    }
+                    return Ok((path, snap));
+                }
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        Err(first_err.expect("non-empty scan with no loadable snapshot"))
+    }
+
+    /// Delete everything but the newest `keep` snapshots (best effort).
+    fn prune(&self) {
+        let mut found = self.scan();
+        while found.len() > self.keep {
+            let (_, path) = found.remove(0);
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ecsgmcmc-ckpt-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn snap_at(boundary: usize) -> Snapshot {
+        let mut s = snapshot::tests::sample_snapshot(boundary as u64);
+        s.boundary = boundary;
+        s
+    }
+
+    #[test]
+    fn save_load_round_trip_and_latest() {
+        let dir = tmp_dir("roundtrip");
+        let store = CheckpointStore::new(&dir, 3);
+        assert!(store.latest().unwrap().is_none());
+        assert!(store.load_latest().is_err());
+        let p1 = store.save(&snap_at(100)).unwrap();
+        let p2 = store.save(&snap_at(200)).unwrap();
+        assert_ne!(p1, p2);
+        let (latest, snap) = store.load_latest().unwrap();
+        assert_eq!(latest, p2);
+        assert_eq!(snap.boundary, 200);
+        assert_eq!(CheckpointStore::load(&p1).unwrap().boundary, 100);
+        // No temp residue after atomic writes.
+        let residue = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".tmp-"))
+            .count();
+        assert_eq!(residue, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retention_prunes_oldest() {
+        let dir = tmp_dir("prune");
+        let store = CheckpointStore::new(&dir, 2);
+        for b in [10, 20, 30, 40] {
+            store.save(&snap_at(b)).unwrap();
+        }
+        let mut kept: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        kept.sort();
+        assert_eq!(kept, vec!["ckpt-000000000030.jsonl", "ckpt-000000000040.jsonl"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_latest_falls_back_to_older_snapshot_when_newest_is_corrupt() {
+        let dir = tmp_dir("fallback");
+        let store = CheckpointStore::new(&dir, 3);
+        store.save(&snap_at(100)).unwrap();
+        // A corrupt "newer" snapshot (e.g. filesystem lost the tail).
+        std::fs::write(dir.join("ckpt-000000000200.jsonl"), b"{\"ev\":\"ckpt\"").unwrap();
+        let (path, snap) = store.load_latest().unwrap();
+        assert_eq!(snap.boundary, 100);
+        assert!(path.to_string_lossy().contains("000000000100"));
+        // With *only* corrupt snapshots, the newest file's error surfaces.
+        let dir2 = tmp_dir("fallback2");
+        std::fs::create_dir_all(&dir2).unwrap();
+        std::fs::write(dir2.join("ckpt-000000000050.jsonl"), b"garbage\n").unwrap();
+        assert!(CheckpointStore::new(&dir2, 3).load_latest().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
+    }
+
+    #[test]
+    fn corrupt_files_fail_to_load_with_context() {
+        let dir = tmp_dir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt-000000000001.jsonl");
+        std::fs::write(&path, b"{garbage\n").unwrap();
+        let err = CheckpointStore::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("parsing checkpoint"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn policy_cut_steps_and_time_gate() {
+        let p = CheckpointPolicy { every_rounds: 25, every_secs: None, keep: 3 };
+        assert_eq!(p.cut_steps(4), 100);
+        assert!(p.should_write(0.0));
+        let p = CheckpointPolicy { every_secs: Some(5.0), ..p };
+        assert!(!p.should_write(4.9));
+        assert!(p.should_write(5.0));
+        // Degenerate values clamp instead of dividing the run by zero.
+        let p = CheckpointPolicy { every_rounds: 0, every_secs: None, keep: 0 };
+        assert_eq!(p.cut_steps(0), 1);
+    }
+}

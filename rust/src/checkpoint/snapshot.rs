@@ -1,0 +1,759 @@
+//! The checkpoint data model and its self-describing JSONL encoding
+//! (DESIGN.md §8).
+//!
+//! A [`Snapshot`] captures the *complete* resumable state of an EC run
+//! at a consistent cut: per-worker (θ, momentum, local center copy,
+//! PCG stream positions, step index, membership flags), the center
+//! server's state (c, r, per-shard streams, worker-θ views, active set,
+//! fractional step budget), the full [`Metrics`] (staleness histogram
+//! included), and the byte offsets of every attached JSONL run stream.
+//!
+//! Encoding invariants:
+//!
+//! * every line goes through the shared [`Emitter`] with the crate's
+//!   shortest-round-trip float formatting, so `parse(serialize(s))`
+//!   re-serializes **byte-identically** — the property test in
+//!   `tests/test_checkpoint_resume.rs` holds the format to that;
+//! * every `u64`/`u128` travels as a *string* (JSON numbers are f64 and
+//!   would silently corrupt values ≥ 2^53 — the same hazard the run
+//!   stream's meta event guards against, `sink/jsonl.rs`);
+//! * the final `ckpt_end` line carries the line count, so a truncated
+//!   file (the expected artifact of a SIGKILL mid-write, which the
+//!   tmp+rename protocol in [`super::CheckpointStore`] already makes
+//!   near-impossible) is rejected with a clear error.
+
+use crate::coordinator::{Metrics, TracePoint};
+use crate::math::rng::Pcg64;
+use crate::util::json::{Emitter, Json};
+use anyhow::{bail, Context, Result};
+
+/// Checkpoint format version, bumped on incompatible layout changes.
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+/// A serializable PCG64 position: `(state, inc)` split into u64 halves
+/// plus the Box–Muller cache.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RngSnap {
+    pub state: u128,
+    pub inc: u128,
+    pub cached: Option<f64>,
+}
+
+impl RngSnap {
+    pub fn of(rng: &Pcg64) -> RngSnap {
+        let (state, inc, cached) = rng.snapshot();
+        RngSnap { state, inc, cached }
+    }
+
+    pub fn restore(&self) -> Pcg64 {
+        Pcg64::restore(self.state, self.inc, self.cached)
+    }
+}
+
+/// One worker's resumable state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSnap {
+    pub id: usize,
+    /// Next global step this worker will execute.
+    pub next_step: usize,
+    /// Has the worker come alive yet? (false = joiner still gated)
+    pub started: bool,
+    /// Has the worker departed (leave/fail)?
+    pub departed: bool,
+    /// Newest center version the worker had observed at the cut.
+    pub seen: u64,
+    /// Samples this worker offered that no sink retained, so far.
+    pub dropped: u64,
+    pub rng: RngSnap,
+    pub jitter: RngSnap,
+    pub theta: Vec<f32>,
+    pub p: Vec<f32>,
+    /// The worker's local (possibly stale) center copy c̃.
+    pub center: Vec<f32>,
+    /// Ũ trace so far (small: one point per `log_every` steps).
+    pub u_trace: Vec<TracePoint>,
+}
+
+/// The center server's resumable state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CenterSnap {
+    pub theta: Vec<f32>,
+    pub p: Vec<f32>,
+    /// Fractional center-step budget (credits · s / K accumulation).
+    pub budget: f64,
+    pub center_steps: u64,
+    /// Center samples offered past the in-memory cap, so far.
+    pub dropped: u64,
+    /// Per-shard RNG stream positions.
+    pub rngs: Vec<RngSnap>,
+    /// Which workers currently contribute to the snapshot mean.
+    pub active: Vec<bool>,
+    /// The server's current view of each worker's θ.
+    pub views: Vec<Vec<f32>>,
+}
+
+/// Everything about the run's shape that must match on resume; a
+/// mismatch means the checkpoint belongs to a different experiment.
+/// The churn fractions and staleness bound are included because the
+/// membership plan and admission decisions derive from them — resuming
+/// under different values would silently diverge from the plan the
+/// snapshot was taken under.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fingerprint {
+    pub founders: usize,
+    pub total_workers: usize,
+    pub alpha: f64,
+    pub sync_every: usize,
+    pub steps: usize,
+    pub shards: usize,
+    pub transport: String,
+    pub dim: usize,
+    pub live: usize,
+    pub churn_leave: f64,
+    pub churn_fail: f64,
+    pub churn_join: f64,
+    /// Admission-gate bound; absent key = gate disabled. Travels as a
+    /// string like every other u64 in this format.
+    pub staleness_bound: Option<u64>,
+}
+
+/// One durable cut of a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub seed: u64,
+    /// Global step index of the cut (every live worker is exactly here).
+    pub boundary: usize,
+    /// Cumulative wall-clock seconds before the cut (summed across
+    /// resumes).
+    pub elapsed: f64,
+    /// Worker-side fleet exchange counter (gates late joins).
+    pub exchanges_gate: u64,
+    pub fingerprint: Fingerprint,
+    pub workers: Vec<WorkerSnap>,
+    pub center: CenterSnap,
+    pub metrics: Metrics,
+    /// (stream path, byte offset) for every JSONL writer attached to the
+    /// run; resume truncates each file to its offset and appends.
+    pub sink_offsets: Vec<(String, u64)>,
+}
+
+// ---------------------------------------------------------------------
+// Encoding helpers
+// ---------------------------------------------------------------------
+
+fn u64_str(e: &mut Emitter, key: &str, v: u64) {
+    e.key(key).str_val(&v.to_string());
+}
+
+/// The s0/s1/i0/i1/cached body shared by every serialized RNG position
+/// (worker dynamics, worker jitter, center shards).
+fn rng_fields(e: &mut Emitter, r: &RngSnap) {
+    u64_str(e, "s0", (r.state >> 64) as u64);
+    u64_str(e, "s1", r.state as u64);
+    u64_str(e, "i0", (r.inc >> 64) as u64);
+    u64_str(e, "i1", r.inc as u64);
+    if let Some(c) = r.cached {
+        e.key("cached").num(c);
+    }
+}
+
+fn rng_obj(e: &mut Emitter, key: &str, r: &RngSnap) {
+    e.key(key).begin_obj();
+    rng_fields(e, r);
+    e.end_obj();
+}
+
+fn f32_arr(e: &mut Emitter, key: &str, xs: &[f32]) {
+    e.key(key).f32_arr(xs);
+}
+
+/// Parse a u64 that traveled as a string (tolerating plain numbers from
+/// hand-written files — same policy as the run stream's seed field).
+fn get_u64(v: &Json, key: &str) -> Result<u64> {
+    match v.get(key) {
+        Some(Json::Str(s)) => {
+            s.parse().with_context(|| format!("field '{key}': bad u64 '{s}'"))
+        }
+        Some(j) => j
+            .as_f64()
+            .map(|f| f as u64)
+            .with_context(|| format!("field '{key}': expected u64")),
+        None => bail!("missing field '{key}'"),
+    }
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize> {
+    Ok(get_u64(v, key)? as usize)
+}
+
+fn get_f64(v: &Json, key: &str) -> Result<f64> {
+    // `null` is the emitter's encoding of a non-finite value.
+    match v.get(key) {
+        Some(Json::Null) => Ok(f64::NAN),
+        Some(j) => j.as_f64().with_context(|| format!("field '{key}': expected number")),
+        None => bail!("missing field '{key}'"),
+    }
+}
+
+fn get_bool(v: &Json, key: &str) -> Result<bool> {
+    match v.get(key) {
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => bail!("missing or non-bool field '{key}'"),
+    }
+}
+
+fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key).and_then(Json::as_str).with_context(|| format!("missing field '{key}'"))
+}
+
+fn get_f32s(v: &Json, key: &str) -> Result<Vec<f32>> {
+    let arr = v
+        .get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("missing array field '{key}'"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, x)| match x {
+            // `null` is the emitter's encoding of a non-finite value.
+            Json::Null => Ok(f32::NAN),
+            other => other
+                .as_f64()
+                .map(|f| f as f32)
+                .with_context(|| format!("field '{key}'[{i}]: expected number")),
+        })
+        .collect()
+}
+
+fn rng_from_obj(o: &Json) -> Result<RngSnap> {
+    let state = ((get_u64(o, "s0")? as u128) << 64) | get_u64(o, "s1")? as u128;
+    let inc = ((get_u64(o, "i0")? as u128) << 64) | get_u64(o, "i1")? as u128;
+    let cached = o.get("cached").and_then(Json::as_f64);
+    Ok(RngSnap { state, inc, cached })
+}
+
+fn get_rng(v: &Json, key: &str) -> Result<RngSnap> {
+    rng_from_obj(v.get(key).with_context(|| format!("missing rng field '{key}'"))?)
+}
+
+// ---------------------------------------------------------------------
+// Serialize
+// ---------------------------------------------------------------------
+
+impl Snapshot {
+    /// Encode as deterministic JSONL. Re-serializing a parsed snapshot
+    /// reproduces the bytes exactly (the round-trip property test).
+    pub fn serialize(&self) -> String {
+        let mut out = String::new();
+        let mut e = Emitter::new();
+        let mut lines = 0usize;
+        let mut push = |out: &mut String, e: &mut Emitter, lines: &mut usize| {
+            out.push_str(e.as_str());
+            out.push('\n');
+            e.clear();
+            *lines += 1;
+        };
+
+        // Header.
+        e.begin_obj();
+        e.key("ev").str_val("ckpt");
+        e.key("version").num(CHECKPOINT_VERSION as f64);
+        e.key("scheme").str_val("ec");
+        u64_str(&mut e, "seed", self.seed);
+        e.key("boundary").num(self.boundary as f64);
+        e.key("elapsed").num(self.elapsed);
+        u64_str(&mut e, "exchanges", self.exchanges_gate);
+        let fp = &self.fingerprint;
+        e.key("fingerprint").begin_obj();
+        e.key("founders").num(fp.founders as f64);
+        e.key("total_workers").num(fp.total_workers as f64);
+        e.key("alpha").num(fp.alpha);
+        e.key("sync_every").num(fp.sync_every as f64);
+        e.key("steps").num(fp.steps as f64);
+        e.key("shards").num(fp.shards as f64);
+        e.key("transport").str_val(&fp.transport);
+        e.key("dim").num(fp.dim as f64);
+        e.key("live").num(fp.live as f64);
+        e.key("churn_leave").num(fp.churn_leave);
+        e.key("churn_fail").num(fp.churn_fail);
+        e.key("churn_join").num(fp.churn_join);
+        if let Some(b) = fp.staleness_bound {
+            u64_str(&mut e, "staleness_bound", b);
+        }
+        e.end_obj();
+        e.end_obj();
+        push(&mut out, &mut e, &mut lines);
+
+        // Metrics (full histogram — summaries are not enough to resume).
+        let m = &self.metrics;
+        e.begin_obj();
+        e.key("ev").str_val("metrics");
+        u64_str(&mut e, "total_steps", m.total_steps);
+        u64_str(&mut e, "center_steps", m.center_steps);
+        u64_str(&mut e, "exchanges", m.exchanges);
+        u64_str(&mut e, "grads_computed", m.grads_computed);
+        e.key("steps_per_sec").num(m.steps_per_sec);
+        u64_str(&mut e, "samples_dropped", m.samples_dropped);
+        u64_str(&mut e, "stale_rejects", m.stale_rejects);
+        u64_str(&mut e, "worker_joins", m.worker_joins);
+        u64_str(&mut e, "worker_leaves", m.worker_leaves);
+        e.key("staleness_hist").begin_arr();
+        for &c in &m.staleness_hist {
+            e.num(c as f64);
+        }
+        e.end_arr();
+        e.end_obj();
+        push(&mut out, &mut e, &mut lines);
+
+        // Center server state.
+        let c = &self.center;
+        e.begin_obj();
+        e.key("ev").str_val("center");
+        e.key("budget").num(c.budget);
+        u64_str(&mut e, "center_steps", c.center_steps);
+        u64_str(&mut e, "dropped", c.dropped);
+        e.key("active").begin_arr();
+        for &a in &c.active {
+            e.bool_val(a);
+        }
+        e.end_arr();
+        e.key("rngs").begin_arr();
+        for r in &c.rngs {
+            e.begin_obj();
+            rng_fields(&mut e, r);
+            e.end_obj();
+        }
+        e.end_arr();
+        f32_arr(&mut e, "theta", &c.theta);
+        f32_arr(&mut e, "p", &c.p);
+        e.end_obj();
+        push(&mut out, &mut e, &mut lines);
+
+        // Server-held worker θ views.
+        for (w, view) in c.views.iter().enumerate() {
+            e.begin_obj();
+            e.key("ev").str_val("view");
+            e.key("worker").num(w as f64);
+            f32_arr(&mut e, "theta", view);
+            e.end_obj();
+            push(&mut out, &mut e, &mut lines);
+        }
+
+        // Workers.
+        for w in &self.workers {
+            e.begin_obj();
+            e.key("ev").str_val("worker");
+            e.key("id").num(w.id as f64);
+            e.key("next_step").num(w.next_step as f64);
+            e.key("started").bool_val(w.started);
+            e.key("departed").bool_val(w.departed);
+            u64_str(&mut e, "seen", w.seen);
+            u64_str(&mut e, "dropped", w.dropped);
+            rng_obj(&mut e, "rng", &w.rng);
+            rng_obj(&mut e, "jitter", &w.jitter);
+            f32_arr(&mut e, "theta", &w.theta);
+            f32_arr(&mut e, "p", &w.p);
+            f32_arr(&mut e, "center", &w.center);
+            e.key("u_trace").begin_arr();
+            for pt in &w.u_trace {
+                e.begin_arr();
+                e.num(pt.step as f64);
+                e.num(pt.t);
+                e.num(pt.u);
+                e.end_arr();
+            }
+            e.end_arr();
+            e.end_obj();
+            push(&mut out, &mut e, &mut lines);
+        }
+
+        // Sink byte offsets.
+        for (path, bytes) in &self.sink_offsets {
+            e.begin_obj();
+            e.key("ev").str_val("sink");
+            e.key("path").str_val(path);
+            u64_str(&mut e, "bytes", *bytes);
+            e.end_obj();
+            push(&mut out, &mut e, &mut lines);
+        }
+
+        // Footer: line count proves the file is complete.
+        e.begin_obj();
+        e.key("ev").str_val("ckpt_end");
+        e.key("lines").num(lines as f64);
+        e.end_obj();
+        out.push_str(e.as_str());
+        out.push('\n');
+        out
+    }
+
+    /// Decode a checkpoint file's text. Rejects truncation (missing or
+    /// miscounted `ckpt_end`), unknown versions, and malformed lines
+    /// with errors that name the offending line.
+    pub fn parse(text: &str) -> Result<Snapshot> {
+        let mut values = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            values.push((
+                i + 1,
+                Json::parse(line)
+                    .map_err(|e| anyhow::anyhow!("checkpoint line {}: {e}", i + 1))?,
+            ));
+        }
+        let Some((_, header)) = values.first() else {
+            bail!("empty checkpoint file");
+        };
+        if get_str(header, "ev")? != "ckpt" {
+            bail!("not a checkpoint file (first event is not 'ckpt')");
+        }
+        let version = get_u64(header, "version")?;
+        if version > CHECKPOINT_VERSION {
+            bail!(
+                "unsupported checkpoint version {version} \
+                 (this reader supports <= {CHECKPOINT_VERSION})"
+            );
+        }
+        let (_, footer) = values.last().expect("non-empty");
+        if get_str(footer, "ev").map(|ev| ev != "ckpt_end").unwrap_or(true) {
+            bail!(
+                "truncated checkpoint: missing 'ckpt_end' footer \
+                 ({} lines present)",
+                values.len()
+            );
+        }
+        let declared = get_usize(footer, "lines")?;
+        if declared != values.len() - 1 {
+            bail!(
+                "truncated checkpoint: footer declares {declared} lines, \
+                 found {}",
+                values.len() - 1
+            );
+        }
+
+        let fp_obj = header.get("fingerprint").context("header missing fingerprint")?;
+        let fingerprint = Fingerprint {
+            founders: get_usize(fp_obj, "founders")?,
+            total_workers: get_usize(fp_obj, "total_workers")?,
+            alpha: get_f64(fp_obj, "alpha")?,
+            sync_every: get_usize(fp_obj, "sync_every")?,
+            steps: get_usize(fp_obj, "steps")?,
+            shards: get_usize(fp_obj, "shards")?,
+            transport: get_str(fp_obj, "transport")?.to_string(),
+            dim: get_usize(fp_obj, "dim")?,
+            live: get_usize(fp_obj, "live")?,
+            churn_leave: get_f64(fp_obj, "churn_leave")?,
+            churn_fail: get_f64(fp_obj, "churn_fail")?,
+            churn_join: get_f64(fp_obj, "churn_join")?,
+            staleness_bound: match fp_obj.get("staleness_bound") {
+                Some(_) => Some(get_u64(fp_obj, "staleness_bound")?),
+                None => None,
+            },
+        };
+
+        let mut metrics: Option<Metrics> = None;
+        let mut center: Option<CenterSnap> = None;
+        let mut views: Vec<(usize, Vec<f32>)> = Vec::new();
+        let mut workers: Vec<WorkerSnap> = Vec::new();
+        let mut sink_offsets: Vec<(String, u64)> = Vec::new();
+
+        for (lineno, v) in &values[1..values.len() - 1] {
+            let ev = get_str(v, "ev").with_context(|| format!("line {lineno}"))?;
+            match ev {
+                "metrics" => {
+                    let hist = v
+                        .get("staleness_hist")
+                        .and_then(Json::as_arr)
+                        .context("metrics missing staleness_hist")?
+                        .iter()
+                        .map(|x| x.as_f64().unwrap_or(0.0) as u64)
+                        .collect();
+                    metrics = Some(Metrics {
+                        total_steps: get_u64(v, "total_steps")?,
+                        center_steps: get_u64(v, "center_steps")?,
+                        exchanges: get_u64(v, "exchanges")?,
+                        grads_computed: get_u64(v, "grads_computed")?,
+                        staleness_hist: hist,
+                        steps_per_sec: get_f64(v, "steps_per_sec")?,
+                        samples_dropped: get_u64(v, "samples_dropped")?,
+                        stale_rejects: get_u64(v, "stale_rejects")?,
+                        worker_joins: get_u64(v, "worker_joins")?,
+                        worker_leaves: get_u64(v, "worker_leaves")?,
+                    });
+                }
+                "center" => {
+                    let rngs = v
+                        .get("rngs")
+                        .and_then(Json::as_arr)
+                        .context("center missing rngs")?
+                        .iter()
+                        .map(rng_from_obj)
+                        .collect::<Result<Vec<_>>>()?;
+                    let active = v
+                        .get("active")
+                        .and_then(Json::as_arr)
+                        .context("center missing active")?
+                        .iter()
+                        .map(|x| matches!(x, Json::Bool(true)))
+                        .collect();
+                    center = Some(CenterSnap {
+                        theta: get_f32s(v, "theta")?,
+                        p: get_f32s(v, "p")?,
+                        budget: get_f64(v, "budget")?,
+                        center_steps: get_u64(v, "center_steps")?,
+                        dropped: get_u64(v, "dropped")?,
+                        rngs,
+                        active,
+                        views: Vec::new(), // filled from the view lines
+                    });
+                }
+                "view" => {
+                    views.push((get_usize(v, "worker")?, get_f32s(v, "theta")?));
+                }
+                "worker" => {
+                    let u_trace = v
+                        .get("u_trace")
+                        .and_then(Json::as_arr)
+                        .context("worker missing u_trace")?
+                        .iter()
+                        .map(|triple| {
+                            let t = triple.as_arr().context("u_trace entry not a triple")?;
+                            if t.len() != 3 {
+                                bail!("u_trace entry has {} fields, expected 3", t.len());
+                            }
+                            Ok(TracePoint {
+                                step: t[0].as_f64().unwrap_or(0.0) as usize,
+                                t: t[1].as_f64().unwrap_or(f64::NAN),
+                                u: t[2].as_f64().unwrap_or(f64::NAN),
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()
+                        .with_context(|| format!("line {lineno}"))?;
+                    workers.push(WorkerSnap {
+                        id: get_usize(v, "id")?,
+                        next_step: get_usize(v, "next_step")?,
+                        started: get_bool(v, "started")?,
+                        departed: get_bool(v, "departed")?,
+                        seen: get_u64(v, "seen")?,
+                        dropped: get_u64(v, "dropped")?,
+                        rng: get_rng(v, "rng")?,
+                        jitter: get_rng(v, "jitter")?,
+                        theta: get_f32s(v, "theta")?,
+                        p: get_f32s(v, "p")?,
+                        center: get_f32s(v, "center")?,
+                        u_trace,
+                    });
+                }
+                "sink" => {
+                    sink_offsets
+                        .push((get_str(v, "path")?.to_string(), get_u64(v, "bytes")?));
+                }
+                other => bail!("line {lineno}: unknown checkpoint event '{other}'"),
+            }
+        }
+
+        let mut center = center.context("checkpoint missing 'center' line")?;
+        views.sort_by_key(|(w, _)| *w);
+        for (i, (w, _)) in views.iter().enumerate() {
+            if *w != i {
+                bail!("checkpoint 'view' lines are not contiguous from worker 0");
+            }
+        }
+        center.views = views.into_iter().map(|(_, t)| t).collect();
+        let snapshot = Snapshot {
+            seed: get_u64(header, "seed")?,
+            boundary: get_usize(header, "boundary")?,
+            elapsed: get_f64(header, "elapsed")?,
+            exchanges_gate: get_u64(header, "exchanges")?,
+            fingerprint,
+            workers,
+            center,
+            metrics: metrics.context("checkpoint missing 'metrics' line")?,
+            sink_offsets,
+        };
+        if snapshot.workers.len() != snapshot.fingerprint.total_workers {
+            bail!(
+                "checkpoint holds {} worker lines but fingerprint declares {}",
+                snapshot.workers.len(),
+                snapshot.fingerprint.total_workers
+            );
+        }
+        Ok(snapshot)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) fn sample_snapshot(seed: u64) -> Snapshot {
+        let mut rng = Pcg64::new(seed, 9);
+        let mut drifted = Pcg64::new(seed, 1000);
+        for _ in 0..(seed % 23 + 3) {
+            drifted.next_normal();
+        }
+        let dim = 3;
+        let mk_theta = |rng: &mut Pcg64| -> Vec<f32> {
+            (0..dim).map(|_| rng.next_normal() as f32 * 1.7e-3).collect()
+        };
+        let workers = (0..2)
+            .map(|id| WorkerSnap {
+                id,
+                next_step: 40,
+                started: true,
+                departed: id == 1,
+                seen: u64::MAX - seed, // exercises the ≥ 2^53 string path
+                dropped: seed % 5,
+                rng: RngSnap::of(&drifted),
+                jitter: RngSnap::of(&Pcg64::new(seed ^ 0x9e37, 2000 + id as u64)),
+                theta: mk_theta(&mut rng),
+                p: mk_theta(&mut rng),
+                center: mk_theta(&mut rng),
+                u_trace: vec![
+                    TracePoint { step: 0, t: 0.001234, u: 2.5 },
+                    TracePoint { step: 10, t: 0.0250001, u: 1.875 },
+                ],
+            })
+            .collect::<Vec<_>>();
+        Snapshot {
+            seed: u64::MAX - 12345,
+            boundary: 40,
+            elapsed: 1.25 + seed as f64 * 1e-9,
+            exchanges_gate: 80,
+            fingerprint: Fingerprint {
+                founders: 2,
+                total_workers: 2,
+                alpha: 0.75,
+                sync_every: 2,
+                steps: 100,
+                shards: 2,
+                transport: "deterministic".into(),
+                dim,
+                live: dim,
+                churn_leave: 0.5,
+                churn_fail: 0.25,
+                churn_join: 0.5,
+                staleness_bound: if seed % 2 == 0 { Some(u64::MAX - 7) } else { None },
+            },
+            workers,
+            center: CenterSnap {
+                theta: mk_theta(&mut rng),
+                p: mk_theta(&mut rng),
+                budget: 0.5000000000000004,
+                center_steps: 20,
+                dropped: 0,
+                rngs: vec![RngSnap::of(&Pcg64::new(seed, 1)), RngSnap::of(&drifted)],
+                active: vec![true, false],
+                views: vec![mk_theta(&mut rng), mk_theta(&mut rng)],
+            },
+            metrics: Metrics { exchanges: 80, stale_rejects: 3, ..Default::default() },
+            sink_offsets: vec![("out/run.jsonl".into(), 123456789)],
+        }
+    }
+
+    #[test]
+    fn serialize_parse_serialize_is_byte_identical() {
+        for seed in [0u64, 1, 42, 7777, u64::MAX / 3] {
+            let snap = sample_snapshot(seed);
+            let text = snap.serialize();
+            let parsed = Snapshot::parse(&text).unwrap();
+            assert_eq!(parsed, snap, "value round trip (seed {seed})");
+            assert_eq!(parsed.serialize(), text, "byte round trip (seed {seed})");
+        }
+    }
+
+    #[test]
+    fn truncated_checkpoints_are_rejected_with_clear_errors() {
+        let text = sample_snapshot(3).serialize();
+        // Drop the footer line.
+        let without_footer: String =
+            text.lines().take(text.lines().count() - 1).map(|l| format!("{l}\n")).collect();
+        let err = Snapshot::parse(&without_footer).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        // Drop a middle line: the footer count no longer matches.
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines.remove(2);
+        let missing_mid: String = lines.iter().map(|l| format!("{l}\n")).collect();
+        let err = Snapshot::parse(&missing_mid).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        // Chop mid-line: a parse error naming the line.
+        let chopped = &text[..text.len() - 30];
+        assert!(Snapshot::parse(chopped).is_err());
+    }
+
+    #[test]
+    fn garbage_and_foreign_files_are_rejected() {
+        let err = Snapshot::parse("not json at all\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"), "{err:#}");
+        let err = Snapshot::parse("{\"ev\":\"meta\",\"version\":1}\n").unwrap_err();
+        assert!(format!("{err:#}").contains("not a checkpoint"), "{err:#}");
+        assert!(Snapshot::parse("").is_err());
+        // Future versions refuse loudly instead of mis-reading.
+        let future = sample_snapshot(1)
+            .serialize()
+            .replacen("\"version\":1", "\"version\":99", 1);
+        let err = Snapshot::parse(&future).unwrap_err();
+        assert!(format!("{err:#}").contains("version 99"), "{err:#}");
+    }
+
+    #[test]
+    fn malformed_theta_entries_are_rejected_but_null_stays_nan() {
+        let text = sample_snapshot(2).serialize();
+        // A non-numeric θ entry is corruption, not a NaN: reject loudly.
+        let worker_line = text.lines().find(|l| l.contains("\"ev\":\"worker\"")).unwrap();
+        let theta_start = worker_line.find("\"theta\":[").unwrap() + "\"theta\":[".len();
+        let corrupted_line = format!(
+            "{}\"x\",{}",
+            &worker_line[..theta_start],
+            &worker_line[theta_start..]
+        );
+        // Splicing changes the line count? No — same line, edited in place.
+        let corrupted = text.replace(worker_line, &corrupted_line);
+        let err = Snapshot::parse(&corrupted).unwrap_err();
+        assert!(format!("{err:#}").contains("theta"), "{err:#}");
+        // `null` is the legitimate non-finite encoding and must round
+        // trip as NaN, not be rejected.
+        let first_num_end =
+            worker_line[theta_start..].find(|c| c == ',' || c == ']').unwrap();
+        let nulled_line = format!(
+            "{}null{}",
+            &worker_line[..theta_start],
+            &worker_line[theta_start + first_num_end..]
+        );
+        let with_null = text.replace(worker_line, &nulled_line);
+        let parsed = Snapshot::parse(&with_null).unwrap();
+        assert!(parsed.workers[0].theta[0].is_nan());
+    }
+
+    #[test]
+    fn fingerprint_carries_churn_and_gate_parameters() {
+        let snap = sample_snapshot(4); // even seed → Some(bound)
+        let parsed = Snapshot::parse(&snap.serialize()).unwrap();
+        assert_eq!(parsed.fingerprint, snap.fingerprint);
+        assert_eq!(parsed.fingerprint.staleness_bound, Some(u64::MAX - 7));
+        let no_gate = sample_snapshot(5); // odd seed → None
+        let parsed = Snapshot::parse(&no_gate.serialize()).unwrap();
+        assert_eq!(parsed.fingerprint.staleness_bound, None);
+        // A differing churn fraction breaks fingerprint equality — the
+        // resume-validation property the runtime relies on.
+        let mut other = no_gate.fingerprint.clone();
+        other.churn_join += 0.25;
+        assert_ne!(other, no_gate.fingerprint);
+    }
+
+    #[test]
+    fn u64_and_u128_fields_survive_beyond_f64_precision() {
+        let snap = sample_snapshot(5);
+        let parsed = Snapshot::parse(&snap.serialize()).unwrap();
+        assert_eq!(parsed.seed, u64::MAX - 12345);
+        assert_eq!(parsed.workers[0].seen, snap.workers[0].seen);
+        // The PCG state is 128-bit: both halves must survive exactly.
+        assert_eq!(parsed.workers[0].rng, snap.workers[0].rng);
+        let mut original = snap.workers[0].rng.restore();
+        let mut restored = parsed.workers[0].rng.restore();
+        for _ in 0..32 {
+            assert_eq!(original.next_u64(), restored.next_u64());
+        }
+    }
+}

@@ -24,11 +24,8 @@ use crate::{log_info, log_warn};
 use anyhow::{anyhow, Context, Result};
 use std::sync::Arc;
 
-/// `ecsgmcmc sample --config <file> [--seed n] [--transport t] [--shards n]
-/// [--sink kind] [--sink-path file]`.
-pub fn cmd_sample(p: &Parsed) -> Result<i32> {
-    let path = p.opt("config").ok_or_else(|| anyhow!("--config is required"))?;
-    let mut cfg = RunConfig::from_file(path)?;
+/// Apply the CLI overrides shared by `sample` and `resume`.
+fn apply_overrides(cfg: &mut RunConfig, p: &Parsed) -> Result<()> {
     if let Some(seed) = p.opt("seed") {
         cfg.seed = seed.parse().context("--seed")?;
     }
@@ -45,6 +42,29 @@ pub fn cmd_sample(p: &Parsed) -> Result<i32> {
     if let Some(s) = p.opt("sink-path") {
         cfg.sink_path = Some(s.to_string());
     }
+    if let Some(d) = p.opt("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(d.to_string());
+    }
+    if let Some(n) = p.opt("checkpoint-every") {
+        cfg.checkpoint_every = n.parse().context("--checkpoint-every")?;
+    }
+    if let Some(r) = p.opt("churn") {
+        let rate: f64 = r.parse().context("--churn")?;
+        cfg.churn = crate::coordinator::ChurnModel::with_rate(rate);
+    }
+    if let Some(b) = p.opt("staleness-bound") {
+        cfg.staleness_bound = Some(b.parse().context("--staleness-bound")?);
+    }
+    Ok(())
+}
+
+/// `ecsgmcmc sample --config <file> [--seed n] [--transport t] [--shards n]
+/// [--sink kind] [--sink-path file] [--checkpoint-dir d]
+/// [--checkpoint-every r] [--churn rate] [--staleness-bound b]`.
+pub fn cmd_sample(p: &Parsed) -> Result<i32> {
+    let path = p.opt("config").ok_or_else(|| anyhow!("--config is required"))?;
+    let mut cfg = RunConfig::from_file(path)?;
+    apply_overrides(&mut cfg, p)?;
     cfg.validate()?;
     // Probe stream-path writability now: the scheme drivers treat sink
     // init as infallible, so an unwritable path must fail here with a
@@ -65,7 +85,101 @@ pub fn cmd_sample(p: &Parsed) -> Result<i32> {
             .open(stream)
             .with_context(|| format!("opening stream {stream:?}"))?;
     }
+    probe_checkpoint_dir(&cfg)?;
     let result = run_configured(&cfg)?;
+    report_run(&cfg, &result);
+    Ok(0)
+}
+
+/// Fail fast on an unwritable checkpoint directory: a long run whose
+/// whole point is durability must not discover at its first cut (via a
+/// per-cut warning) that it can never persist a snapshot.
+fn probe_checkpoint_dir(cfg: &RunConfig) -> Result<()> {
+    let Some(dir) = &cfg.checkpoint_dir else { return Ok(()) };
+    let dir = std::path::Path::new(dir);
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+    let probe = dir.join(".probe");
+    std::fs::write(&probe, b"")
+        .with_context(|| format!("checkpoint dir {dir:?} is not writable"))?;
+    std::fs::remove_file(&probe).ok();
+    Ok(())
+}
+
+/// `ecsgmcmc resume --config <file> [--checkpoint-dir d | --file ckpt]`.
+///
+/// Loads the newest snapshot (or `--file`), validates it against the
+/// config, and continues the run to its horizon. Under the deterministic
+/// transport the merged result is bit-identical to an uninterrupted run
+/// (DESIGN.md §8); attached JSONL streams are truncated to the
+/// snapshot's byte offsets and appended to, so the final stream artifact
+/// replays exactly like an uninterrupted one.
+pub fn cmd_resume(p: &Parsed) -> Result<i32> {
+    use crate::checkpoint::CheckpointStore;
+    let path = p.opt("config").ok_or_else(|| anyhow!("--config is required"))?;
+    let mut cfg = RunConfig::from_file(path)?;
+    apply_overrides(&mut cfg, p)?;
+    cfg.validate()?;
+    if !matches!(cfg.scheme, Scheme::ElasticCoupling | Scheme::EcSgld) {
+        return Err(anyhow!("resume supports the EC schemes (got {})", cfg.scheme.name()));
+    }
+    let (ckpt_path, snapshot) = match p.opt("file") {
+        Some(f) => {
+            let f = std::path::PathBuf::from(f);
+            let snap = CheckpointStore::load(&f)?;
+            (f, snap)
+        }
+        None => {
+            let dir = cfg
+                .checkpoint_dir
+                .clone()
+                .ok_or_else(|| anyhow!("--checkpoint-dir (or [checkpoint] dir) is required"))?;
+            CheckpointStore::new(dir, cfg.checkpoint_keep).load_latest()?
+        }
+    };
+    if snapshot.seed != cfg.seed {
+        return Err(anyhow!(
+            "checkpoint was taken under seed {} but the config resolves to {} — \
+             pass --seed {} (the membership plan and RNG streams depend on it)",
+            snapshot.seed,
+            cfg.seed,
+            snapshot.seed
+        ));
+    }
+    log_info!(
+        "resuming from {:?}: boundary step {} of {} ({} workers, {:.2}s elapsed so far)",
+        ckpt_path,
+        snapshot.boundary,
+        cfg.steps,
+        snapshot.fingerprint.total_workers,
+        snapshot.elapsed
+    );
+    if cfg.sink == SinkKind::Memory {
+        log_warn!(
+            "resuming with the in-memory sink: samples recorded before the \
+             checkpoint live only in a JSONL stream (use --sink jsonl|tee \
+             for a replayable artifact)"
+        );
+    }
+    if matches!(cfg.sink, SinkKind::Diag | SinkKind::Tee) {
+        log_warn!(
+            "online diagnostics restart at the resume point: the run \
+             summary's R-hat/ESS/moments cover post-resume samples only — \
+             use `replay --diag` on the stream for full-run diagnostics"
+        );
+    }
+    probe_checkpoint_dir(&cfg)?;
+    let potential = build_potential(&cfg)?;
+    let opts = run_options(&cfg);
+    let delay = DelayModel::with_exchange_ms(cfg.delay_ms);
+    let kind = match cfg.scheme {
+        Scheme::Sgld | Scheme::EcSgld => StepKind::Sgld,
+        _ => StepKind::Sghmc,
+    };
+    let ec_cfg = ec_config(&cfg, opts, delay);
+    let fleet = crate::coordinator::ec::planned_spans(&ec_cfg, cfg.seed).len();
+    let engines = build_engines(&cfg, &potential, kind, fleet)?;
+    let result = crate::coordinator::ec::resume_ec(&ec_cfg, cfg.sampler, engines, snapshot)?;
     report_run(&cfg, &result);
     Ok(0)
 }
@@ -131,11 +245,14 @@ fn run_options(cfg: &RunConfig) -> RunOptions {
 }
 
 /// Build fused-XLA engines when the config asks for the XLA backend with
-/// an NN target; otherwise native engines.
+/// an NN target; otherwise native engines. `count` is the fleet size —
+/// `cfg.workers` for fixed fleets, the planned-span count for churn runs
+/// (founders + joiners).
 fn build_engines(
     cfg: &RunConfig,
     potential: &Arc<dyn Potential>,
     kind: StepKind,
+    count: usize,
 ) -> Result<Vec<Box<dyn WorkerEngine>>> {
     let tag = match &cfg.target {
         Target::Mlp { backend: Backend::Xla } => Some("mlp"),
@@ -155,19 +272,36 @@ fn build_engines(
         } else {
             synth_cifar::generate(n_total, 0.2, cfg.seed ^ 0xC1FA)
         };
-        (0..cfg.workers)
+        (0..count)
             .map(|_| {
                 let sampler = XlaFusedSampler::new(&engine, tag, gen.clone(), cfg.sampler)?;
                 Ok(Box::new(XlaEngine::new(sampler)) as Box<dyn WorkerEngine>)
             })
             .collect()
     } else {
-        Ok((0..cfg.workers)
+        Ok((0..count)
             .map(|_| {
                 Box::new(NativeEngine::new(potential.clone(), cfg.sampler, kind))
                     as Box<dyn WorkerEngine>
             })
             .collect())
+    }
+}
+
+/// Translate the run config into the EC coordinator's configuration.
+fn ec_config(cfg: &RunConfig, opts: RunOptions, delay: DelayModel) -> EcConfig {
+    EcConfig {
+        workers: cfg.workers,
+        alpha: cfg.alpha,
+        sync_every: cfg.sync_every,
+        steps: cfg.steps,
+        transport: cfg.transport,
+        shards: cfg.shards,
+        delay,
+        churn: cfg.churn,
+        staleness_bound: cfg.staleness_bound,
+        checkpoint: cfg.checkpoint(),
+        opts,
     }
 }
 
@@ -193,25 +327,17 @@ pub fn run_configured(cfg: &RunConfig) -> Result<RunResult> {
     };
     Ok(match cfg.scheme {
         Scheme::Sghmc | Scheme::Sgld => {
-            let mut engines = build_engines(cfg, &potential, kind)?;
+            let mut engines = build_engines(cfg, &potential, kind, 1)?;
             run_single(engines.remove(0), cfg.steps, opts, cfg.seed)
         }
         Scheme::Independent => {
-            let engines = build_engines(cfg, &potential, kind)?;
+            let engines = build_engines(cfg, &potential, kind, cfg.workers)?;
             IndependentCoordinator::new(cfg.steps, opts).run(engines, cfg.seed)
         }
         Scheme::ElasticCoupling | Scheme::EcSgld => {
-            let engines = build_engines(cfg, &potential, kind)?;
-            let ec_cfg = EcConfig {
-                workers: cfg.workers,
-                alpha: cfg.alpha,
-                sync_every: cfg.sync_every,
-                steps: cfg.steps,
-                transport: cfg.transport,
-                shards: cfg.shards,
-                delay,
-                opts,
-            };
+            let ec_cfg = ec_config(cfg, opts, delay);
+            let fleet = crate::coordinator::ec::planned_spans(&ec_cfg, cfg.seed).len();
+            let engines = build_engines(cfg, &potential, kind, fleet)?;
             run_ec(&ec_cfg, cfg.sampler, engines, cfg.seed)
         }
         Scheme::NaiveAsync => {
@@ -223,6 +349,7 @@ pub fn run_configured(cfg: &RunConfig) -> Result<RunResult> {
                 synchronous: false,
                 delay,
                 opts,
+                ..Default::default()
             };
             NaiveCoordinator::new(naive, cfg.sampler, potential.clone()).run(cfg.seed)
         }
@@ -256,6 +383,15 @@ fn report_run(cfg: &RunConfig, r: &RunResult) {
             "samples dropped (past max_samples, no stream attached): {}",
             r.metrics.samples_dropped
         );
+    }
+    if r.metrics.worker_joins > 0 || r.metrics.worker_leaves > 0 {
+        println!(
+            "membership: {} joins, {} leaves/fails",
+            r.metrics.worker_joins, r.metrics.worker_leaves
+        );
+    }
+    if r.metrics.stale_rejects > 0 {
+        println!("stale uploads rejected (bounded-staleness gate): {}", r.metrics.stale_rejects);
     }
     let spec = cfg.sink_spec();
     if let Some(stream) = spec.jsonl_path() {
@@ -415,6 +551,28 @@ pub fn cmd_experiment(p: &Parsed) -> Result<i32> {
             let refs: Vec<(&str, &[f64])> =
                 series.iter().map(|s| (s.label.as_str(), s.ys.as_slice())).collect();
             print_series_table("ABL-α: coupling-strength ablation", "alpha", &r.alphas, &refs);
+        }
+        "CHURN" => {
+            let r = experiments::churn_sweep::run(scale, seed);
+            let (ec, naive) = r.to_series();
+            let rhats: Vec<f64> = r.ec_rhat.clone();
+            print_series_table(
+                "CHURN: posterior quality vs worker churn rate (Fig. 1 Gaussian)",
+                "rate",
+                &r.rates,
+                &[
+                    (&ec.label, &ec.ys),
+                    (&naive.label, &naive.ys),
+                    ("ec max R-hat", &rhats),
+                ],
+            );
+            for (i, &rate) in r.rates.iter().enumerate() {
+                println!(
+                    "  rate {rate:.2}: {} joins, {} leaves/fails",
+                    r.ec_joins[i], r.ec_leaves[i]
+                );
+            }
+            experiments::series_to_csv(&format!("{out}/churn.csv"), "rate", &[&ec, &naive])?;
         }
         "PERF" => {
             let max_k = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);

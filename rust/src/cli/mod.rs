@@ -3,10 +3,14 @@
 //! Subcommands:
 //!
 //! * `sample --config <file.toml>` — run one configured sampling job;
+//! * `resume --config <file.toml>` — continue a checkpointed EC run from
+//!   its newest snapshot (bit-identical under the deterministic
+//!   transport, DESIGN.md §8);
 //! * `replay --file <run.jsonl>` — reconstruct or re-diagnose a streamed
 //!   run from its JSONL artifact (DESIGN.md §7);
-//! * `experiment --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF>` — run
-//!   a paper experiment and print its table (plus CSVs under `--out`);
+//! * `experiment --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF|CHURN>`
+//!   — run a paper experiment and print its table (plus CSVs under
+//!   `--out`);
 //! * `artifacts [--dir <dir>]` — inspect the AOT artifact manifest;
 //! * `version` / `help`.
 
@@ -20,6 +24,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
     let parsed = args::Parsed::parse(argv)?;
     match parsed.command.as_str() {
         "sample" => commands::cmd_sample(&parsed),
+        "resume" => commands::cmd_resume(&parsed),
         "replay" => commands::cmd_replay(&parsed),
         "experiment" => commands::cmd_experiment(&parsed),
         "artifacts" => commands::cmd_artifacts(&parsed),
@@ -54,12 +59,20 @@ COMMANDS:
                   --shards <n>           EC center shards (default 1)
                   --sink <s>             memory|jsonl|diag|tee (default memory)
                   --sink-path <file>     JSONL stream file (default <out_dir>/run.jsonl)
+                  --checkpoint-dir <d>   EC snapshot dir (enables checkpointing)
+                  --checkpoint-every <r> exchange rounds between snapshots (default 50)
+                  --churn <rate>         EC worker churn (lockfree transport only)
+                  --staleness-bound <b>  reject uploads staler than b center steps
+    resume      Continue a checkpointed EC run from its newest snapshot
+                  --config <file.toml>   the run's original config
+                  --checkpoint-dir <d>   snapshot dir (or [checkpoint] dir)
+                  --file <ckpt.jsonl>    resume a specific snapshot instead
     replay      Reconstruct a streamed run from its JSONL artifact
                   --file <run.jsonl>     stream produced by --sink jsonl|tee
                   --diag                 stream diagnostics only (bounded memory)
                   --dim <d>              moment dimensions to report (default 2)
     experiment  Regenerate a paper experiment
-                  --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF>
+                  --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF|CHURN>
                   --fast                 smoke-scale run
                   --seed <n>             (default 42)
                   --out <dir>            CSV output dir (default out/)

@@ -9,7 +9,7 @@
 
 pub mod toml;
 
-use crate::coordinator::TransportKind;
+use crate::coordinator::{ChurnModel, TransportKind};
 use crate::samplers::SghmcParams;
 use crate::sink::SinkSpec;
 use anyhow::{bail, Context, Result};
@@ -167,6 +167,23 @@ pub struct RunConfig {
     /// JSONL stream file for `jsonl`/`tee` sinks (`[sink] path`,
     /// `--sink-path`); defaults to `<out_dir>/run.jsonl`.
     pub sink_path: Option<String>,
+    /// Snapshot directory (`[checkpoint] dir`, `--checkpoint-dir`);
+    /// `None` disables checkpointing. EC schemes only (DESIGN.md §8).
+    pub checkpoint_dir: Option<String>,
+    /// Exchange rounds between snapshot cuts (`[checkpoint] every`,
+    /// `--checkpoint-every`).
+    pub checkpoint_every: u64,
+    /// Optional minimum seconds between written snapshots
+    /// (`[checkpoint] secs`).
+    pub checkpoint_secs: Option<f64>,
+    /// Snapshots retained (`[checkpoint] keep`).
+    pub checkpoint_keep: usize,
+    /// Simulated worker churn (`[churn]` table, `--churn <rate>`); EC +
+    /// lock-free transport only.
+    pub churn: ChurnModel,
+    /// Bounded-staleness admission gate (`[churn] staleness_bound`,
+    /// `--staleness-bound`); `None` disables it.
+    pub staleness_bound: Option<u64>,
 }
 
 impl Default for RunConfig {
@@ -191,6 +208,12 @@ impl Default for RunConfig {
             out_dir: "out".into(),
             sink: SinkKind::Memory,
             sink_path: None,
+            checkpoint_dir: None,
+            checkpoint_every: 50,
+            checkpoint_secs: None,
+            checkpoint_keep: 3,
+            churn: ChurnModel::none(),
+            staleness_bound: None,
         }
     }
 }
@@ -263,6 +286,27 @@ impl RunConfig {
             cfg.sink_path = Some(s.to_string());
         }
 
+        if let Some(s) = t.get_str("checkpoint", "dir") {
+            cfg.checkpoint_dir = Some(s.to_string());
+        }
+        cfg.checkpoint_every =
+            t.get_usize("checkpoint", "every").unwrap_or(cfg.checkpoint_every as usize) as u64;
+        if let Some(v) = t.get_f64("checkpoint", "secs") {
+            cfg.checkpoint_secs = Some(v);
+        }
+        cfg.checkpoint_keep =
+            t.get_usize("checkpoint", "keep").unwrap_or(cfg.checkpoint_keep);
+
+        if let Some(rate) = t.get_f64("churn", "rate") {
+            cfg.churn = ChurnModel::with_rate(rate);
+        }
+        cfg.churn.leave_frac = t.get_f64("churn", "leave_frac").unwrap_or(cfg.churn.leave_frac);
+        cfg.churn.join_frac = t.get_f64("churn", "join_frac").unwrap_or(cfg.churn.join_frac);
+        cfg.churn.fail_frac = t.get_f64("churn", "fail_frac").unwrap_or(cfg.churn.fail_frac);
+        if let Some(b) = t.get_usize("churn", "staleness_bound") {
+            cfg.staleness_bound = Some(b as u64);
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -313,7 +357,54 @@ impl RunConfig {
         if self.burn_in >= self.steps {
             bail!("burn_in ({}) must be < steps ({})", self.burn_in, self.steps);
         }
+        let is_ec = matches!(self.scheme, Scheme::ElasticCoupling | Scheme::EcSgld);
+        if self.churn.is_active() {
+            if !is_ec {
+                bail!("[churn] only applies to the EC schemes (got {})", self.scheme.name());
+            }
+            if self.transport != TransportKind::LockFree {
+                bail!(
+                    "[churn] requires transport = \"lockfree\" (the deterministic \
+                     round-robin fabric assumes a fixed fleet)"
+                );
+            }
+            for (name, v) in [
+                ("leave_frac", self.churn.leave_frac),
+                ("join_frac", self.churn.join_frac),
+                ("fail_frac", self.churn.fail_frac),
+            ] {
+                if !(0.0..=1.0).contains(&v) {
+                    bail!("[churn] {name} must be in [0, 1] (got {v})");
+                }
+            }
+        }
+        if self.checkpoint_dir.is_some() {
+            if !is_ec {
+                bail!(
+                    "[checkpoint] only applies to the EC schemes (got {})",
+                    self.scheme.name()
+                );
+            }
+            if self.checkpoint_every == 0 {
+                bail!("[checkpoint] every must be >= 1 exchange round");
+            }
+            if self.checkpoint_keep == 0 {
+                bail!("[checkpoint] keep must be >= 1");
+            }
+        }
         Ok(())
+    }
+
+    /// The configured checkpoint setup, if any (EC schemes).
+    pub fn checkpoint(&self) -> Option<crate::coordinator::ec::EcCheckpoint> {
+        self.checkpoint_dir.as_ref().map(|dir| crate::coordinator::ec::EcCheckpoint {
+            dir: PathBuf::from(dir),
+            policy: crate::checkpoint::CheckpointPolicy {
+                every_rounds: self.checkpoint_every,
+                every_secs: self.checkpoint_secs,
+                keep: self.checkpoint_keep,
+            },
+        })
     }
 }
 
@@ -421,6 +512,65 @@ alpha = 0.5
         for k in [SinkKind::Memory, SinkKind::Jsonl, SinkKind::Diag, SinkKind::Tee] {
             assert_eq!(SinkKind::from_str(k.name()).unwrap(), k);
         }
+    }
+
+    #[test]
+    fn parses_checkpoint_and_churn_tables() {
+        let cfg = RunConfig::from_toml_str(
+            "[run]\nscheme = \"ec\"\n\
+             [coordinator]\ntransport = \"lockfree\"\n\
+             [checkpoint]\ndir = \"out/ckpt\"\nevery = 25\nkeep = 5\nsecs = 2.5\n\
+             [churn]\nrate = 0.5\nfail_frac = 0.1\nstaleness_bound = 64\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_dir.as_deref(), Some("out/ckpt"));
+        assert_eq!(cfg.checkpoint_every, 25);
+        assert_eq!(cfg.checkpoint_keep, 5);
+        assert_eq!(cfg.checkpoint_secs, Some(2.5));
+        assert!((cfg.churn.leave_frac - 0.5).abs() < 1e-12);
+        assert!((cfg.churn.join_frac - 0.5).abs() < 1e-12);
+        assert!((cfg.churn.fail_frac - 0.1).abs() < 1e-12);
+        assert_eq!(cfg.staleness_bound, Some(64));
+        let ck = cfg.checkpoint().unwrap();
+        assert_eq!(ck.policy.every_rounds, 25);
+        assert_eq!(ck.policy.keep, 5);
+        assert_eq!(ck.policy.every_secs, Some(2.5));
+        // Defaults: no checkpointing, no churn, no gate.
+        let plain = RunConfig::from_toml_str("[run]\nscheme = \"ec\"\n").unwrap();
+        assert!(plain.checkpoint().is_none());
+        assert!(!plain.churn.is_active());
+        assert_eq!(plain.staleness_bound, None);
+    }
+
+    #[test]
+    fn churn_and_checkpoint_constraints_are_enforced() {
+        // Churn without the lock-free transport is rejected.
+        assert!(RunConfig::from_toml_str(
+            "[run]\nscheme = \"ec\"\n[churn]\nrate = 0.5\n"
+        )
+        .is_err());
+        // Churn on a non-EC scheme is rejected.
+        assert!(RunConfig::from_toml_str(
+            "[run]\nscheme = \"sghmc\"\n\
+             [coordinator]\ntransport = \"lockfree\"\n[churn]\nrate = 0.5\n"
+        )
+        .is_err());
+        // Checkpointing a non-EC scheme is rejected.
+        assert!(RunConfig::from_toml_str(
+            "[run]\nscheme = \"independent\"\n[checkpoint]\ndir = \"out/ckpt\"\n"
+        )
+        .is_err());
+        // Degenerate checkpoint knobs are rejected.
+        assert!(RunConfig::from_toml_str(
+            "[run]\nscheme = \"ec\"\n[checkpoint]\ndir = \"d\"\nevery = 0\n"
+        )
+        .is_err());
+        // Out-of-range churn fractions are rejected.
+        assert!(RunConfig::from_toml_str(
+            "[run]\nscheme = \"ec\"\n\
+             [coordinator]\ntransport = \"lockfree\"\n[churn]\nrate = 0.5\nfail_frac = 1.5\n"
+        )
+        .is_err());
     }
 
     #[test]

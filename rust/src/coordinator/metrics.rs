@@ -5,7 +5,7 @@ use crate::util::json::Json;
 const STALENESS_BUCKETS: usize = 65;
 
 /// Counters filled by the coordinators.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Metrics {
     /// Sampler steps summed over workers (server steps for naive-async).
     pub total_steps: u64,
@@ -26,6 +26,16 @@ pub struct Metrics {
     /// `max_samples` cap with no stream attached) — the explicit
     /// accounting that replaces silent truncation (DESIGN.md §7).
     pub samples_dropped: u64,
+    /// Uploads rejected by the bounded-staleness admission gate
+    /// (center_steps − seen_version exceeded the configured bound); the
+    /// exchange is still credited toward center time, but the stale θ is
+    /// not incorporated (DESIGN.md §8).
+    pub stale_rejects: u64,
+    /// Workers that joined the fleet after run start (elastic membership).
+    pub worker_joins: u64,
+    /// Workers that left the fleet before run end — clean leaves *and*
+    /// simulated failures both count (DESIGN.md §8).
+    pub worker_leaves: u64,
 }
 
 impl Default for Metrics {
@@ -38,6 +48,9 @@ impl Default for Metrics {
             staleness_hist: vec![0; STALENESS_BUCKETS],
             steps_per_sec: 0.0,
             samples_dropped: 0,
+            stale_rejects: 0,
+            worker_joins: 0,
+            worker_leaves: 0,
         }
     }
 }
@@ -79,6 +92,9 @@ impl Metrics {
             ("grads_computed", Json::Num(self.grads_computed as f64)),
             ("steps_per_sec", Json::Num(self.steps_per_sec)),
             ("samples_dropped", Json::Num(self.samples_dropped as f64)),
+            ("stale_rejects", Json::Num(self.stale_rejects as f64)),
+            ("worker_joins", Json::Num(self.worker_joins as f64)),
+            ("worker_leaves", Json::Num(self.worker_leaves as f64)),
             ("mean_staleness", Json::Num(self.mean_staleness())),
             ("max_staleness", Json::Num(self.max_staleness() as f64)),
         ])
@@ -97,6 +113,9 @@ impl Metrics {
             staleness_hist: vec![0; STALENESS_BUCKETS],
             steps_per_sec: num("steps_per_sec"),
             samples_dropped: num("samples_dropped") as u64,
+            stale_rejects: num("stale_rejects") as u64,
+            worker_joins: num("worker_joins") as u64,
+            worker_leaves: num("worker_leaves") as u64,
         }
     }
 }
@@ -144,6 +163,9 @@ mod tests {
             grads_computed: 7,
             steps_per_sec: 123.5,
             samples_dropped: 42,
+            stale_rejects: 9,
+            worker_joins: 2,
+            worker_leaves: 3,
             ..Default::default()
         };
         let back = Metrics::from_json(&m.to_json());
@@ -153,5 +175,8 @@ mod tests {
         assert_eq!(back.grads_computed, 7);
         assert_eq!(back.steps_per_sec, 123.5);
         assert_eq!(back.samples_dropped, 42);
+        assert_eq!(back.stale_rejects, 9);
+        assert_eq!(back.worker_joins, 2);
+        assert_eq!(back.worker_leaves, 3);
     }
 }

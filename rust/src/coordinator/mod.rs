@@ -17,13 +17,17 @@
 //! model ([`staleness`]) standing in for the network of a distributed
 //! deployment (DESIGN.md §2).
 //!
-//! All four schemes share one worker loop ([`topology`]): engine step →
-//! recorder → delay model → per-scheme [`topology::ExchangePolicy`]. The
-//! EC exchange fabric is swappable ([`transport`], DESIGN.md §6): the
-//! deterministic channel round-robin kept for the reproducibility tests,
-//! or the lock-free seqlock/mailbox fabric where workers never block on
-//! the server — scaling (sharding, more workers, bigger θ) is a transport
-//! choice, not a rewrite of each scheme.
+//! All schemes share one iteration shape ([`topology`]): engine step →
+//! recorder → delay model → exchange. Single/independent/naive run it
+//! through [`topology::run_worker_loop`] with a per-scheme
+//! [`topology::ExchangePolicy`]; EC runs the same ordering through its
+//! *segmented* driver (`ec.rs`), which additionally supports durable
+//! checkpoints, deterministic resume and elastic membership
+//! (DESIGN.md §8). The EC exchange fabric is swappable ([`transport`],
+//! DESIGN.md §6): the deterministic channel round-robin kept for the
+//! reproducibility tests, or the lock-free seqlock/mailbox fabric where
+//! workers never block on the server — scaling (sharding, more workers,
+//! bigger θ, churn) is a transport choice, not a rewrite of each scheme.
 
 pub mod ec;
 pub mod engine;
@@ -35,13 +39,15 @@ pub mod staleness;
 pub mod topology;
 pub mod transport;
 
-pub use ec::{EcConfig, EcCoordinator};
+pub use ec::{resume_ec, EcCheckpoint, EcConfig, EcCoordinator};
 pub use engine::{NativeEngine, StepKind, WorkerEngine};
 pub use independent::IndependentCoordinator;
 pub use metrics::Metrics;
 pub use naive::{NaiveConfig, NaiveCoordinator};
-pub use staleness::DelayModel;
-pub use topology::{ExchangePolicy, ShardLayout, Topology};
+pub use staleness::{ChurnModel, DelayModel};
+pub use topology::{
+    Departure, ExchangePolicy, MemberEvent, Membership, ShardLayout, Topology, WorkerSpan,
+};
 pub use transport::TransportKind;
 
 /// One logged scalar observation along a chain.

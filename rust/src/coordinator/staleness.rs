@@ -1,4 +1,4 @@
-//! Communication-delay / heterogeneity model.
+//! Communication-delay / heterogeneity / churn models.
 //!
 //! The paper's motivation for s > 1 is that real clusters have
 //! "heterogeneous machines and communication delays". Running in-process,
@@ -9,7 +9,14 @@
 //! * `jitter` — optional per-step compute jitter with worker-dependent
 //!   mean (heterogeneous machines: worker k is slowed by a factor drawn
 //!   once from its stream).
+//!
+//! [`ChurnModel`] is the [`DelayModel`]'s sibling for *membership*
+//! messiness: preemptible fleets lose workers mid-run and gain late
+//! joiners. Like the delay model it is seeded and pure — the same
+//! (config, seed) always produces the same join/leave/fail schedule
+//! (DESIGN.md §8) — so churn experiments are reproducible.
 
+use super::topology::{Departure, WorkerSpan};
 use crate::math::rng::Pcg64;
 use std::time::Duration;
 
@@ -62,6 +69,110 @@ impl DelayModel {
     }
 }
 
+/// Seeded worker-churn model: which fraction of founders depart (and
+/// how), and how many late joiners arrive.
+///
+/// The model is a *schedule generator*, not a runtime dice-roller:
+/// [`ChurnModel::schedule`] expands it into a deterministic
+/// [`WorkerSpan`] list as a pure function of (workers, steps,
+/// sync_every, seed), which is what lets a resumed run re-derive the
+/// exact membership plan its checkpoint was taken under.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnModel {
+    /// Expected fraction of founders that depart before the horizon.
+    pub leave_frac: f64,
+    /// Of those departures, the fraction that *fail* (no drain) instead
+    /// of leaving cleanly.
+    pub fail_frac: f64,
+    /// Late joiners as a fraction of the founder count.
+    pub join_frac: f64,
+}
+
+impl Default for ChurnModel {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl ChurnModel {
+    /// No churn: the fixed fleet every pre-churn run assumes.
+    pub fn none() -> ChurnModel {
+        ChurnModel { leave_frac: 0.0, fail_frac: 0.0, join_frac: 0.0 }
+    }
+
+    /// The one-knob form the CLI exposes (`--churn <rate>`): `rate` of
+    /// the founders leave, `rate` joiners arrive, a quarter of the
+    /// departures are crashes.
+    pub fn with_rate(rate: f64) -> ChurnModel {
+        let rate = rate.clamp(0.0, 1.0);
+        ChurnModel { leave_frac: rate, fail_frac: 0.25, join_frac: rate }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.leave_frac > 0.0 || self.join_frac > 0.0
+    }
+
+    /// Expand the model into the run's membership plan. Departure and
+    /// join points are aligned to exchange boundaries (multiples of
+    /// `sync_every`) so a clean leave coincides with a drained upload;
+    /// at least one founder always survives to the horizon. Runs too
+    /// short to express churn (fewer than four exchanges) come back as a
+    /// fixed fleet.
+    pub fn schedule(
+        &self,
+        workers: usize,
+        steps: usize,
+        sync_every: usize,
+        seed: u64,
+    ) -> Vec<WorkerSpan> {
+        let s = sync_every.max(1);
+        let mut spans: Vec<WorkerSpan> =
+            (0..workers).map(|w| WorkerSpan::full(w, steps)).collect();
+        if !self.is_active() || steps / s < 4 || workers == 0 {
+            return spans;
+        }
+        let align = |step: usize| -> usize {
+            let a = (step / s).max(1) * s;
+            a.min(steps)
+        };
+        let mut rng = Pcg64::new(seed ^ 0x4348_5552, 4242); // "CHUR"
+        // Founder departures: uniform in the middle half of the run.
+        for span in spans.iter_mut() {
+            if rng.next_f64() < self.leave_frac {
+                let at = steps / 4 + (rng.next_f64() * (steps / 2) as f64) as usize;
+                span.stop_step = align(at);
+                span.departure = Some(if rng.next_f64() < self.fail_frac {
+                    Departure::Fail
+                } else {
+                    Departure::Leave
+                });
+            }
+        }
+        // Keep the fleet alive: at least one founder runs to the end.
+        if spans.iter().all(|sp| sp.departure.is_some()) {
+            let last = spans.last_mut().expect("workers >= 1");
+            last.departure = None;
+            last.stop_step = steps;
+        }
+        // Joiners: arrive in the first half, gated on fleet progress
+        // (total exchanges ≈ what a full founder fleet would have done
+        // by their nominal start step).
+        let joiners = (self.join_frac * workers as f64).round() as usize;
+        for j in 0..joiners {
+            let at = align(steps / 8 + (rng.next_f64() * (steps / 4) as f64) as usize);
+            let gate = (workers * at / s) as u64;
+            spans.push(WorkerSpan {
+                id: workers + j,
+                start_step: at,
+                stop_step: steps,
+                departure: None,
+                join_gate: Some(gate),
+            });
+        }
+        spans
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +219,49 @@ mod tests {
             (0..6).map(|w| d.worker_factor(w, seed)).collect()
         };
         assert_ne!(fingerprint(1), fingerprint(2), "seeds share a cluster draw");
+    }
+
+    #[test]
+    fn churn_schedule_is_deterministic_and_well_formed() {
+        let m = ChurnModel::with_rate(0.5);
+        let a = m.schedule(4, 1000, 2, 77);
+        let b = m.schedule(4, 1000, 2, 77);
+        assert_eq!(a, b, "schedule must be a pure function of (cfg, seed)");
+        assert_ne!(a, m.schedule(4, 1000, 2, 78), "seeds re-draw the schedule");
+        // Ids contiguous from 0, founders first.
+        for (i, sp) in a.iter().enumerate() {
+            assert_eq!(sp.id, i);
+            if sp.is_founder() {
+                assert_eq!(sp.start_step, 0);
+            } else {
+                assert!(sp.start_step > 0 && sp.start_step % 2 == 0);
+                assert!(sp.join_gate.is_some());
+            }
+            assert!(sp.stop_step <= 1000);
+            assert!(sp.stop_step % 2 == 0, "stops align to exchange boundaries");
+        }
+        // At least one founder survives to the horizon.
+        assert!(a[..4].iter().any(|sp| sp.departure.is_none() && sp.stop_step == 1000));
+    }
+
+    #[test]
+    fn churn_none_and_short_runs_stay_fixed() {
+        assert!(!ChurnModel::none().is_active());
+        let fixed = ChurnModel::none().schedule(3, 100, 2, 1);
+        assert_eq!(fixed.len(), 3);
+        assert!(fixed.iter().all(|sp| sp.departure.is_none() && sp.is_founder()));
+        // Too short to express churn: fixed fleet even at rate 1.
+        let short = ChurnModel::with_rate(1.0).schedule(3, 6, 2, 1);
+        assert!(short.iter().all(|sp| sp.departure.is_none() && sp.is_founder()));
+    }
+
+    #[test]
+    fn full_rate_churn_leaves_a_survivor_and_adds_joiners() {
+        let m = ChurnModel { leave_frac: 1.0, fail_frac: 1.0, join_frac: 1.0 };
+        let spans = m.schedule(3, 600, 3, 9);
+        assert_eq!(spans.len(), 6, "3 founders + 3 joiners");
+        assert!(spans[..3].iter().any(|sp| sp.departure.is_none()));
+        assert!(spans[3..].iter().all(|sp| !sp.is_founder()));
     }
 
     #[test]

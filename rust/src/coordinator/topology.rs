@@ -65,25 +65,139 @@ impl ShardLayout {
     }
 }
 
-/// The coordination graph of a scheme: how many workers, and — when a
-/// center variable exists — how its parameter vector is sharded.
+/// How a worker exits the fleet (elastic membership, DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Departure {
+    /// Clean leave: the worker drains any un-uploaded θ into the center
+    /// before dropping its fabric endpoint.
+    Leave,
+    /// Simulated crash: the worker vanishes without draining; whatever
+    /// its mailbox held is whatever the server already swept.
+    Fail,
+}
+
+impl Departure {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Departure::Leave => "leave",
+            Departure::Fail => "fail",
+        }
+    }
+}
+
+/// Membership transition observed by the center server through the
+/// exchange fabric (lock-free status slots; the deterministic fabric has
+/// a fixed fleet and never emits these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemberEvent {
+    pub worker: usize,
+    pub departure: Departure,
+}
+
+/// One worker's planned lifetime in global step-index space.
+///
+/// Founders start at step 0; joiners carry a `join_gate` — the total
+/// fleet exchange count that must elapse before they come alive (a
+/// progress-based clock, so a slow fleet delays its joiners instead of
+/// racing wall time). `stop_step` is the run horizon unless the worker
+/// departs early.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerSpan {
+    pub id: usize,
+    /// First global step this worker executes.
+    pub start_step: usize,
+    /// First global step this worker does *not* execute.
+    pub stop_step: usize,
+    /// How the worker exits, when it exits before the horizon.
+    pub departure: Option<Departure>,
+    /// Fleet exchange count gating a late join; `None` for founders.
+    pub join_gate: Option<u64>,
+}
+
+impl WorkerSpan {
+    /// A worker that lives for the whole run.
+    pub fn full(id: usize, steps: usize) -> WorkerSpan {
+        WorkerSpan { id, start_step: 0, stop_step: steps, departure: None, join_gate: None }
+    }
+
+    pub fn is_founder(&self) -> bool {
+        self.join_gate.is_none()
+    }
+}
+
+/// The planned membership of a run: one [`WorkerSpan`] per worker that
+/// ever participates (founders first, then joiners, ids contiguous).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Membership {
+    pub spans: Vec<WorkerSpan>,
+}
+
+impl Membership {
+    /// The classic fixed fleet: K founders, no transitions.
+    pub fn fixed(workers: usize, steps: usize) -> Membership {
+        Membership { spans: (0..workers).map(|w| WorkerSpan::full(w, steps)).collect() }
+    }
+
+    /// An elastic fleet from an explicit span list (ids must be
+    /// contiguous from 0 — the transports index mailboxes by id).
+    pub fn elastic(spans: Vec<WorkerSpan>) -> Membership {
+        for (i, s) in spans.iter().enumerate() {
+            assert_eq!(s.id, i, "worker span ids must be contiguous from 0");
+        }
+        Membership { spans }
+    }
+
+    /// Every worker that ever participates (founders + joiners).
+    pub fn total(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn founders(&self) -> usize {
+        self.spans.iter().filter(|s| s.is_founder()).count()
+    }
+
+    /// Any join/leave/fail transition at all?
+    pub fn has_churn(&self) -> bool {
+        self.spans.iter().any(|s| !s.is_founder() || s.departure.is_some())
+    }
+}
+
+/// The coordination graph of a scheme: which workers participate (and
+/// when — [`Membership`]), and — when a center variable exists — how its
+/// parameter vector is sharded.
 #[derive(Debug, Clone)]
 pub struct Topology {
     pub workers: usize,
     /// Center shard layout; `None` for center-free schemes.
     pub center: Option<ShardLayout>,
+    /// Planned join/leave/fail transitions (fixed fleet by default).
+    pub membership: Membership,
 }
 
 impl Topology {
     /// K workers, no center (single / independent chains).
     pub fn decoupled(workers: usize) -> Topology {
-        Topology { workers, center: None }
+        Topology { workers, center: None, membership: Membership::fixed(workers, usize::MAX) }
     }
 
     /// K workers elastically coupled to a sharded center (EC), or served
     /// by a parameter server (naive).
     pub fn centered(workers: usize, dim: usize, shards: usize) -> Topology {
-        Topology { workers, center: Some(ShardLayout::contiguous(dim, shards)) }
+        Topology {
+            workers,
+            center: Some(ShardLayout::contiguous(dim, shards)),
+            membership: Membership::fixed(workers, usize::MAX),
+        }
+    }
+
+    /// An elastic centered fleet: workers join/leave/fail per the
+    /// membership plan (EC under churn, DESIGN.md §8).
+    pub fn centered_elastic(membership: Membership, dim: usize, shards: usize) -> Topology {
+        Topology {
+            workers: membership.total(),
+            center: Some(ShardLayout::contiguous(dim, shards)),
+            membership,
+        }
     }
 
     pub fn layout(&self) -> &ShardLayout {
@@ -128,12 +242,30 @@ impl Recorder {
     }
 
     /// Close the frame: drain whatever the sink retained (plus its
-    /// dropped count) back into the trace, flush streaming output.
+    /// dropped count) back into the trace, flush streaming output. A
+    /// dropped count restored from a checkpoint ([`Recorder::restore`])
+    /// is preserved additively.
     pub fn finish(mut self) -> ChainTrace {
         self.trace.samples = self.sink.take_samples();
-        self.trace.dropped = self.sink.dropped();
+        self.trace.dropped += self.sink.dropped();
         self.sink.flush();
         self.trace
+    }
+
+    /// Re-seat checkpointed trace state into a fresh recorder (resume
+    /// path, DESIGN.md §8): the Ũ trace travels through the snapshot
+    /// (it is small — one point per `log_every` steps); θ samples do
+    /// not (they live in the run's JSONL stream, truncated to the
+    /// snapshot's byte offset and appended to on resume).
+    pub fn restore(&mut self, u_trace: Vec<TracePoint>, dropped: u64) {
+        self.trace.u_trace = u_trace;
+        self.trace.dropped = dropped;
+    }
+
+    /// Samples this frame has lost so far (restored base + live sink),
+    /// read at a checkpoint cut.
+    pub fn dropped_so_far(&self) -> u64 {
+        self.trace.dropped + self.sink.dropped()
     }
 }
 
@@ -288,9 +420,41 @@ mod tests {
         let t = Topology::decoupled(4);
         assert_eq!(t.workers, 4);
         assert!(t.center.is_none());
+        assert!(!t.membership.has_churn());
         let t = Topology::centered(8, 100, 4);
         assert_eq!(t.layout().shards(), 4);
         assert_eq!(t.layout().dim(), 100);
+        assert_eq!(t.membership.total(), 8);
+    }
+
+    #[test]
+    fn elastic_membership_counts_founders_and_churn() {
+        let spans = vec![
+            WorkerSpan::full(0, 100),
+            WorkerSpan {
+                id: 1,
+                start_step: 0,
+                stop_step: 60,
+                departure: Some(Departure::Leave),
+                join_gate: None,
+            },
+            WorkerSpan {
+                id: 2,
+                start_step: 40,
+                stop_step: 100,
+                departure: None,
+                join_gate: Some(20),
+            },
+        ];
+        let m = Membership::elastic(spans);
+        assert_eq!(m.total(), 3);
+        assert_eq!(m.founders(), 2);
+        assert!(m.has_churn());
+        let t = Topology::centered_elastic(m, 10, 2);
+        assert_eq!(t.workers, 3);
+        assert!(!Membership::fixed(4, 100).has_churn());
+        assert_eq!(Departure::Leave.name(), "leave");
+        assert_eq!(Departure::Fail.name(), "fail");
     }
 
     #[test]

@@ -25,11 +25,11 @@
 //! copy. `epoch / 2` doubles as the publish count, which is what lets the
 //! server detect skipped mailbox versions.
 
-use std::sync::atomic::{fence, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{fence, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use super::topology::ShardLayout;
+use super::topology::{Departure, MemberEvent, ShardLayout};
 
 /// Which exchange fabric an EC run uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -67,6 +67,11 @@ pub struct Upload {
     /// last seeing v₀ carries v − v₀ credits (the overwritten uploads
     /// still count toward center time, Eq. 6 budgeting).
     pub credits: u64,
+    /// Newest center version (global center-step count) the uploading
+    /// worker had observed when it produced this θ. The server's
+    /// bounded-staleness admission gate compares this against its current
+    /// `center_steps` (DESIGN.md §8); 0 = never saw a published center.
+    pub seen_version: u64,
     pub theta: Vec<f32>,
 }
 
@@ -110,6 +115,29 @@ pub trait WorkerPort: Send {
     /// copied). Lock-free: deposits into this worker's mailbox and reads
     /// the latest published shards — never blocks.
     fn exchange(&mut self, theta: &[f32], center: &mut CenterView);
+
+    /// Refresh `center` *without* uploading anything — the late-joiner
+    /// bootstrap (a joiner clones the center as its initial position,
+    /// DESIGN.md §8). Lock-free: reads the published shards. The
+    /// deterministic fabric has no out-of-band read (its fleet is fixed,
+    /// joiners never exist there), so the default keeps the local view.
+    fn fetch(&mut self, center: &mut CenterView) {
+        let _ = center;
+    }
+
+    /// Announce this worker's exit. `Leave` with `final_theta` drains a
+    /// last θ into the fabric first; `Fail` is a simulated crash — no
+    /// drain, the server finds out from the status slot. Lock-free only
+    /// (the deterministic fleet is fixed); the default is a no-op.
+    fn depart(&mut self, final_theta: Option<&[f32]>, kind: Departure) {
+        let _ = (final_theta, kind);
+    }
+
+    /// Newest center version this worker has observed — read back at a
+    /// checkpoint cut so staleness accounting survives a resume.
+    fn seen_version(&self) -> u64 {
+        0
+    }
 }
 
 /// Server-side endpoint of the fabric. Moved into the server thread.
@@ -131,6 +159,15 @@ pub trait ServerPort: Send {
     /// snapshot is cached per `version`, so replies between center steps
     /// share one allocation). Lock-free: no-op.
     fn ack(&mut self, worker: usize, center: &[f32], version: u64);
+
+    /// Drain membership transitions (leave/fail) observed through the
+    /// fabric since the last call. A departure is only reported once its
+    /// drain upload (if any) has been consumed by [`ServerPort::recv`],
+    /// so the server never retires a snapshot it has not incorporated.
+    /// Default: none (fixed-fleet fabrics).
+    fn member_events(&mut self, out: &mut Vec<MemberEvent>) {
+        let _ = out;
+    }
 }
 
 /// A fabric instance wired for K workers. `take_*` hand out each endpoint
@@ -230,27 +267,43 @@ pub struct DeterministicTransport {
 }
 
 impl DeterministicTransport {
-    /// `rounds` is the number of exchanges each worker will perform
-    /// (⌊steps / sync_every⌋); the server stops after `k · rounds`
-    /// uploads. `init_center` seeds the cached reply snapshot.
-    pub fn new(k: usize, rounds: usize, init_center: &[f32]) -> DeterministicTransport {
+    /// `total_uploads` is the exact number of uploads the server will
+    /// serve before reporting done (K · rounds for a full fixed-fleet
+    /// run; a resumed run passes the remaining count). `init_center`
+    /// seeds the cached reply snapshot at `base_version` (the center
+    /// step count the snapshot corresponds to — 0 for fresh runs), and
+    /// `init_seen[w]` restores each worker's last-observed center
+    /// version so staleness accounting survives a resume bit-exactly.
+    pub fn new(
+        k: usize,
+        total_uploads: usize,
+        init_center: &[f32],
+        base_version: u64,
+        init_seen: &[u64],
+    ) -> DeterministicTransport {
+        assert_eq!(init_seen.len(), k);
         let mut upload_rxs = Vec::with_capacity(k);
         let mut download_txs = Vec::with_capacity(k);
         let mut ports: Vec<Box<dyn WorkerPort>> = Vec::with_capacity(k);
         for w in 0..k {
             let (utx, urx) = mpsc::channel::<Upload>();
-            let (dtx, drx) = mpsc::channel::<Arc<Vec<f32>>>();
+            let (dtx, drx) = mpsc::channel::<(Arc<Vec<f32>>, u64)>();
             upload_rxs.push(urx);
             download_txs.push(dtx);
-            ports.push(Box::new(DeterministicWorkerPort { worker: w, utx, drx }));
+            ports.push(Box::new(DeterministicWorkerPort {
+                worker: w,
+                utx,
+                drx,
+                seen: init_seen[w],
+            }));
         }
         let server = DeterministicServerPort {
             upload_rxs,
             download_txs,
             next: 0,
-            remaining: k * rounds,
+            remaining: total_uploads,
             published: Arc::new(init_center.to_vec()),
-            published_version: 0,
+            published_version: base_version,
         };
         DeterministicTransport { ports, server: Some(Box::new(server)) }
     }
@@ -273,21 +326,34 @@ impl Transport for DeterministicTransport {
 struct DeterministicWorkerPort {
     worker: usize,
     utx: mpsc::Sender<Upload>,
-    drx: mpsc::Receiver<Arc<Vec<f32>>>,
+    drx: mpsc::Receiver<(Arc<Vec<f32>>, u64)>,
+    /// Center version of the last ack received (staleness accounting).
+    seen: u64,
 }
 
 impl WorkerPort for DeterministicWorkerPort {
     fn exchange(&mut self, theta: &[f32], center: &mut CenterView) {
         self.utx
-            .send(Upload { worker: self.worker, credits: 1, theta: theta.to_vec() })
+            .send(Upload {
+                worker: self.worker,
+                credits: 1,
+                seen_version: self.seen,
+                theta: theta.to_vec(),
+            })
             .expect("server hung up");
-        *center = CenterView::Shared(self.drx.recv().expect("server reply lost"));
+        let (snapshot, version) = self.drx.recv().expect("server reply lost");
+        self.seen = version;
+        *center = CenterView::Shared(snapshot);
+    }
+
+    fn seen_version(&self) -> u64 {
+        self.seen
     }
 }
 
 struct DeterministicServerPort {
     upload_rxs: Vec<mpsc::Receiver<Upload>>,
-    download_txs: Vec<mpsc::Sender<Arc<Vec<f32>>>>,
+    download_txs: Vec<mpsc::Sender<(Arc<Vec<f32>>, u64)>>,
     next: usize,
     remaining: usize,
     /// Reply snapshot cache: rebuilt only when the center stepped since
@@ -316,7 +382,7 @@ impl ServerPort for DeterministicServerPort {
             self.published_version = version;
         }
         self.download_txs[worker]
-            .send(self.published.clone())
+            .send((self.published.clone(), self.published_version))
             .expect("worker download lane closed");
     }
 }
@@ -324,6 +390,11 @@ impl ServerPort for DeterministicServerPort {
 // ---------------------------------------------------------------------
 // Lock-free (seqlock + mailbox) transport
 // ---------------------------------------------------------------------
+
+/// Worker membership status slot values (single writer: that worker).
+const STATUS_RUNNING: u8 = 0;
+const STATUS_LEFT: u8 = 1;
+const STATUS_FAILED: u8 = 2;
 
 struct LockFreeShared {
     /// Center publication, one seqlock buffer per shard. Writer: server.
@@ -333,6 +404,13 @@ struct LockFreeShared {
     layout: ShardLayout,
     /// Workers that have dropped their port (finished all exchanges).
     done: AtomicUsize,
+    /// Global center-step count the seqlock epochs are relative to (a
+    /// resumed run restarts epochs at 0 but center time keeps counting).
+    base_version: u64,
+    /// Newest center version each worker has observed (writer: worker).
+    seen: Vec<AtomicU64>,
+    /// Membership status per worker (writer: worker; reader: server).
+    status: Vec<AtomicU8>,
 }
 
 /// The asynchronous fabric: workers deposit θ into their own mailbox and
@@ -344,8 +422,17 @@ pub struct LockFreeTransport {
 }
 
 impl LockFreeTransport {
-    pub fn new(k: usize, layout: ShardLayout, init_center: &[f32]) -> LockFreeTransport {
+    /// `base_version`/`init_seen`: see [`DeterministicTransport::new`] —
+    /// 0s for a fresh run, checkpointed values on resume.
+    pub fn new(
+        k: usize,
+        layout: ShardLayout,
+        init_center: &[f32],
+        base_version: u64,
+        init_seen: &[u64],
+    ) -> LockFreeTransport {
         assert_eq!(layout.dim(), init_center.len());
+        assert_eq!(init_seen.len(), k);
         let center = (0..layout.shards())
             .map(|j| SeqBuf::new(&init_center[layout.range(j)]))
             .collect();
@@ -356,6 +443,9 @@ impl LockFreeTransport {
             mailboxes,
             layout,
             done: AtomicUsize::new(0),
+            base_version,
+            seen: init_seen.iter().map(|&v| AtomicU64::new(v)).collect(),
+            status: (0..k).map(|_| AtomicU8::new(STATUS_RUNNING)).collect(),
         });
         let ports = (0..k)
             .map(|w| {
@@ -363,7 +453,11 @@ impl LockFreeTransport {
                     as Box<dyn WorkerPort>
             })
             .collect();
-        let server = LockFreeServerPort { last_seen: vec![0; k], shared };
+        let server = LockFreeServerPort {
+            last_seen: vec![0; k],
+            reported: vec![false; k],
+            shared,
+        };
         LockFreeTransport { ports, server: Some(Box::new(server)) }
     }
 }
@@ -387,18 +481,56 @@ struct LockFreeWorkerPort {
     shared: Arc<LockFreeShared>,
 }
 
-impl WorkerPort for LockFreeWorkerPort {
-    fn exchange(&mut self, theta: &[f32], center: &mut CenterView) {
+impl LockFreeWorkerPort {
+    /// Read every center shard into `center`, returning the *oldest*
+    /// shard version observed (the conservative staleness bound for a
+    /// torn-across-shards view), offset by the fabric's base version.
+    fn read_center(&self, center: &mut CenterView) -> u64 {
         let sh = &*self.shared;
-        sh.mailboxes[self.worker].publish(theta);
         let buf = center.make_owned();
+        let mut min_v = u64::MAX;
         for j in 0..sh.layout.shards() {
             // Shards refresh independently: a reader may see shard j at a
             // newer center step than shard j+1. That torn-across-shards
             // view is the asynchronous regime the scheme tolerates by
             // construction (each shard is internally consistent).
-            sh.center[j].read_into(&mut buf[sh.layout.range(j)]);
+            let v = sh.center[j].read_into(&mut buf[sh.layout.range(j)]);
+            min_v = min_v.min(v);
         }
+        sh.base_version + if min_v == u64::MAX { 0 } else { min_v }
+    }
+}
+
+impl WorkerPort for LockFreeWorkerPort {
+    fn exchange(&mut self, theta: &[f32], center: &mut CenterView) {
+        let sh = &*self.shared;
+        sh.mailboxes[self.worker].publish(theta);
+        let seen = self.read_center(center);
+        // Monotone store: center versions only grow, and this worker is
+        // the slot's single writer.
+        sh.seen[self.worker].store(seen, Ordering::Release);
+    }
+
+    fn fetch(&mut self, center: &mut CenterView) {
+        let seen = self.read_center(center);
+        self.shared.seen[self.worker].store(seen, Ordering::Release);
+    }
+
+    fn depart(&mut self, final_theta: Option<&[f32]>, kind: Departure) {
+        if let Some(theta) = final_theta {
+            self.shared.mailboxes[self.worker].publish(theta);
+        }
+        let status = match kind {
+            Departure::Leave => STATUS_LEFT,
+            Departure::Fail => STATUS_FAILED,
+        };
+        // Release pairs with the server's Acquire status read: the drain
+        // publish above happens-before the status transition is seen.
+        self.shared.status[self.worker].store(status, Ordering::Release);
+    }
+
+    fn seen_version(&self) -> u64 {
+        self.shared.seen[self.worker].load(Ordering::Acquire)
     }
 }
 
@@ -412,6 +544,8 @@ impl Drop for LockFreeWorkerPort {
 
 struct LockFreeServerPort {
     last_seen: Vec<u64>,
+    /// Departures already surfaced through `member_events`.
+    reported: Vec<bool>,
     shared: Arc<LockFreeShared>,
 }
 
@@ -423,7 +557,12 @@ impl LockFreeServerPort {
             if mbox.version() > self.last_seen[w] {
                 let mut theta = vec![0.0f32; dim];
                 let v = mbox.read_into(&mut theta);
-                out.push(Upload { worker: w, credits: v - self.last_seen[w], theta });
+                out.push(Upload {
+                    worker: w,
+                    credits: v - self.last_seen[w],
+                    seen_version: self.shared.seen[w].load(Ordering::Acquire),
+                    theta,
+                });
                 self.last_seen[w] = v;
             }
         }
@@ -452,23 +591,60 @@ impl ServerPort for LockFreeServerPort {
     }
 
     fn ack(&mut self, _worker: usize, _center: &[f32], _version: u64) {}
+
+    fn member_events(&mut self, out: &mut Vec<MemberEvent>) {
+        for w in 0..self.reported.len() {
+            if self.reported[w] {
+                continue;
+            }
+            let status = self.shared.status[w].load(Ordering::Acquire);
+            if status == STATUS_RUNNING {
+                continue;
+            }
+            // Only report once the drain upload (if any) has been swept:
+            // the status store happens-after the final publish, so once
+            // the status is visible, version() is the final version.
+            if self.shared.mailboxes[w].version() > self.last_seen[w] {
+                continue; // recv will sweep it first
+            }
+            self.reported[w] = true;
+            let departure =
+                if status == STATUS_LEFT { Departure::Leave } else { Departure::Fail };
+            out.push(MemberEvent { worker: w, departure });
+        }
+    }
 }
 
 /// Build the fabric named by `kind` for K workers.
+///
+/// `total_uploads` is how many uploads the deterministic server will
+/// serve before reporting done (ignored by the lock-free fabric, whose
+/// lifetime is port drops). `base_version`/`init_seen` are 0s for fresh
+/// runs and checkpointed values on resume.
 pub fn build_transport(
     kind: TransportKind,
     k: usize,
-    rounds: usize,
+    total_uploads: usize,
     layout: &ShardLayout,
     init_center: &[f32],
+    base_version: u64,
+    init_seen: &[u64],
 ) -> Box<dyn Transport> {
     match kind {
-        TransportKind::Deterministic => {
-            Box::new(DeterministicTransport::new(k, rounds, init_center))
-        }
-        TransportKind::LockFree => {
-            Box::new(LockFreeTransport::new(k, layout.clone(), init_center))
-        }
+        TransportKind::Deterministic => Box::new(DeterministicTransport::new(
+            k,
+            total_uploads,
+            init_center,
+            base_version,
+            init_seen,
+        )),
+        TransportKind::LockFree => Box::new(LockFreeTransport::new(
+            k,
+            layout.clone(),
+            init_center,
+            base_version,
+            init_seen,
+        )),
     }
 }
 
@@ -537,7 +713,7 @@ mod tests {
     #[test]
     fn lockfree_mailboxes_credit_skipped_versions() {
         let layout = ShardLayout::contiguous(2, 1);
-        let mut t = LockFreeTransport::new(2, layout, &[0.0, 0.0]);
+        let mut t = LockFreeTransport::new(2, layout, &[0.0, 0.0], 0, &[0, 0]);
         let mut ports = t.take_worker_ports();
         let mut server = t.take_server_port();
         let mut center = CenterView::Owned(vec![0.0f32; 2]);
@@ -568,7 +744,7 @@ mod tests {
 
     #[test]
     fn deterministic_round_trip_shares_acked_center() {
-        let mut t = DeterministicTransport::new(1, 1, &[0.0, 0.0]);
+        let mut t = DeterministicTransport::new(1, 1, &[0.0, 0.0], 0, &[0]);
         let mut ports = t.take_worker_ports();
         let mut server = t.take_server_port();
         let h = std::thread::spawn(move || {
@@ -593,5 +769,74 @@ mod tests {
         v.make_owned()[1] = 5.0;
         assert_eq!(v.as_slice(), &[1.0, 5.0]);
         assert!(matches!(v, CenterView::Owned(_)));
+    }
+
+    #[test]
+    fn lockfree_depart_drains_then_reports_once() {
+        let layout = ShardLayout::contiguous(2, 1);
+        let mut t = LockFreeTransport::new(2, layout, &[0.0, 0.0], 0, &[0, 0]);
+        let mut ports = t.take_worker_ports();
+        let mut server = t.take_server_port();
+        let mut center = CenterView::Owned(vec![0.0f32; 2]);
+        ports[1].exchange(&[9.0, 9.0], &mut center);
+        // Worker 0 leaves with a drain θ; the departure must not surface
+        // before its final upload is swept.
+        ports[0].depart(Some(&[7.0, 7.0]), Departure::Leave);
+        let mut events = Vec::new();
+        server.member_events(&mut events);
+        assert!(events.is_empty(), "drain upload not yet swept");
+        let mut out = Vec::new();
+        assert!(server.recv(&mut out));
+        out.sort_by_key(|u| u.worker);
+        assert_eq!(out[0].theta, vec![7.0, 7.0]);
+        server.member_events(&mut events);
+        assert_eq!(events, vec![MemberEvent { worker: 0, departure: Departure::Leave }]);
+        // Reported exactly once.
+        events.clear();
+        server.member_events(&mut events);
+        assert!(events.is_empty());
+        // A failure reports without a drain.
+        ports[1].depart(None, Departure::Fail);
+        server.member_events(&mut events);
+        assert_eq!(events, vec![MemberEvent { worker: 1, departure: Departure::Fail }]);
+    }
+
+    #[test]
+    fn lockfree_uploads_carry_observed_center_version() {
+        let layout = ShardLayout::contiguous(2, 1);
+        let mut t = LockFreeTransport::new(1, layout, &[0.0, 0.0], 10, &[10]);
+        let mut ports = t.take_worker_ports();
+        let mut server = t.take_server_port();
+        let mut center = CenterView::Owned(vec![0.0f32; 2]);
+        // fetch alone updates the worker's seen version (joiner path).
+        ports[0].fetch(&mut center);
+        server.publish(0, &[1.0, 2.0], 11);
+        ports[0].exchange(&[3.0, 3.0], &mut center);
+        assert_eq!(center.as_slice(), &[1.0, 2.0]);
+        let mut out = Vec::new();
+        assert!(server.recv(&mut out));
+        // One publish since the base → seen = base + 1 = 11.
+        assert_eq!(out[0].seen_version, 11);
+    }
+
+    #[test]
+    fn deterministic_acks_update_worker_seen_version() {
+        let mut t = DeterministicTransport::new(1, 2, &[0.0], 5, &[5]);
+        let mut ports = t.take_worker_ports();
+        let mut server = t.take_server_port();
+        let h = std::thread::spawn(move || {
+            let mut center = CenterView::Owned(vec![0.0f32]);
+            ports[0].exchange(&[1.0], &mut center);
+            ports[0].exchange(&[2.0], &mut center);
+        });
+        let mut out = Vec::new();
+        assert!(server.recv(&mut out));
+        assert_eq!(out[0].seen_version, 5, "initial seen restores the base");
+        server.ack(0, &[0.5], 6);
+        out.clear();
+        assert!(server.recv(&mut out));
+        assert_eq!(out[0].seen_version, 6, "second upload carries the acked version");
+        server.ack(0, &[0.5], 6);
+        h.join().unwrap();
     }
 }

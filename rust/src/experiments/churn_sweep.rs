@@ -1,0 +1,200 @@
+//! CHURN experiment (DESIGN.md §8): posterior quality under worker
+//! churn — the scenario the paper's abstract predicts elastic coupling
+//! should win.
+//!
+//! As the churn rate rises (founders leaving/failing mid-run, late
+//! joiners arriving), the naive parameter server degrades: surviving
+//! oracles' gradients grow staler and the server chain single-tracks.
+//! EC's center variable absorbs departures (the drained θ folds into
+//! the mean, departed snapshots retire from it) and bootstraps joiners
+//! from the center, so pooled posterior quality should hold. Both
+//! schemes run the same seeded [`ChurnModel`] schedule on the Fig. 1
+//! Gaussian; quality is the max entry-wise covariance error against the
+//! analytic posterior, plus split-R̂ across EC chains.
+
+use super::{Scale, Series};
+use crate::coordinator::{
+    ChurnModel, EcConfig, EcCoordinator, NaiveConfig, NaiveCoordinator, RunOptions, RunResult,
+    TransportKind,
+};
+use crate::diagnostics::{self, rhat};
+use crate::potentials::gaussian::GaussianPotential;
+use crate::samplers::SghmcParams;
+use std::sync::Arc;
+
+/// One sweep over churn rates; parallel vectors, one entry per rate.
+#[derive(Debug, Clone)]
+pub struct ChurnSweepResult {
+    pub rates: Vec<f64>,
+    /// Max |Σ̂ − Σ| entry for pooled EC worker samples.
+    pub ec_cov_err: Vec<f64>,
+    /// Same, for the naive parameter-server chain.
+    pub naive_cov_err: Vec<f64>,
+    /// Split-R̂ across EC chains (NaN when fewer than 2 usable chains).
+    pub ec_rhat: Vec<f64>,
+    pub ec_joins: Vec<u64>,
+    pub ec_leaves: Vec<u64>,
+}
+
+impl ChurnSweepResult {
+    pub fn to_series(&self) -> (Series, Series) {
+        let mut ec = Series::new("ec cov err");
+        let mut naive = Series::new("naive cov err");
+        for (i, &r) in self.rates.iter().enumerate() {
+            ec.push(r, self.ec_cov_err[i]);
+            naive.push(r, self.naive_cov_err[i]);
+        }
+        (ec, naive)
+    }
+}
+
+/// Pooled-sample covariance error against the analytic Fig. 1 target.
+pub fn cov_err(r: &RunResult) -> f64 {
+    if r.samples.is_empty() {
+        return f64::NAN;
+    }
+    let samples = diagnostics::to_f64_samples(r.thetas(), 2);
+    diagnostics::moments(&samples).cov_error(&[1.0, 0.6, 0.6, 0.8])
+}
+
+/// Max split-R̂ over the leading 2 coordinates across a run's chains.
+///
+/// Churned chains have unequal lengths (departures truncate, joins start
+/// late), so every chain is trimmed to the common tail before the
+/// split — the statistic R̂ was defined for.
+pub fn max_rhat_of(r: &RunResult) -> f64 {
+    let usable: Vec<&Vec<(f64, Vec<f32>)>> = r
+        .chains
+        .iter()
+        .map(|c| &c.samples)
+        .filter(|s| s.len() >= 8)
+        .collect();
+    if usable.len() < 2 {
+        return f64::NAN;
+    }
+    let n = usable.iter().map(|s| s.len()).min().expect("non-empty");
+    let per_chain: Vec<Vec<Vec<f64>>> = usable
+        .iter()
+        .map(|s| {
+            s[s.len() - n..]
+                .iter()
+                .map(|(_, t)| t[..2].iter().map(|&x| x as f64).collect())
+                .collect()
+        })
+        .collect();
+    rhat::max_rhat(&per_chain)
+}
+
+fn ec_run(steps: usize, rate: f64, seed: u64) -> RunResult {
+    let cfg = EcConfig {
+        workers: 4,
+        alpha: 1.0,
+        sync_every: 2,
+        steps,
+        transport: TransportKind::LockFree,
+        churn: if rate > 0.0 { ChurnModel::with_rate(rate) } else { ChurnModel::none() },
+        opts: RunOptions {
+            thin: 2,
+            burn_in: steps / 5,
+            log_every: (steps / 10).max(1),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    EcCoordinator::new(
+        cfg,
+        SghmcParams { eps: 0.05, ..Default::default() },
+        Arc::new(GaussianPotential::fig1()),
+    )
+    .run(seed)
+}
+
+fn naive_run(steps: usize, rate: f64, seed: u64) -> RunResult {
+    // The naive server steps once per collected gradient round; give it
+    // the same total step budget the EC *fleet* gets so wall-quality is
+    // comparable, with the same churn schedule applied to its oracles.
+    let cfg = NaiveConfig {
+        workers: 4,
+        collect: 1,
+        sync_every: 8,
+        steps: steps * 4,
+        churn: if rate > 0.0 { ChurnModel::with_rate(rate) } else { ChurnModel::none() },
+        opts: RunOptions {
+            thin: 2,
+            burn_in: steps * 4 / 5,
+            log_every: (steps / 10).max(1),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    NaiveCoordinator::new(
+        cfg,
+        SghmcParams { eps: 0.05, ..Default::default() },
+        Arc::new(GaussianPotential::fig1()),
+    )
+    .run(seed)
+}
+
+/// Sweep churn rates on both schemes.
+pub fn run(scale: Scale, seed: u64) -> ChurnSweepResult {
+    let steps = scale.pick(2_000, 24_000);
+    let rates = match scale {
+        Scale::Fast => vec![0.0, 0.5],
+        Scale::Full => vec![0.0, 0.25, 0.5, 0.75],
+    };
+    let mut out = ChurnSweepResult {
+        rates: rates.clone(),
+        ec_cov_err: Vec::new(),
+        naive_cov_err: Vec::new(),
+        ec_rhat: Vec::new(),
+        ec_joins: Vec::new(),
+        ec_leaves: Vec::new(),
+    };
+    for &rate in &rates {
+        let ec = ec_run(steps, rate, seed);
+        let naive = naive_run(steps, rate, seed);
+        out.ec_cov_err.push(cov_err(&ec));
+        out.naive_cov_err.push(cov_err(&naive));
+        out.ec_rhat.push(max_rhat_of(&ec));
+        out.ec_joins.push(ec.metrics.worker_joins);
+        out.ec_leaves.push(ec.metrics.worker_leaves);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_sweep_produces_finite_quality_numbers() {
+        let r = run(Scale::Fast, 7);
+        assert_eq!(r.rates.len(), 2);
+        assert!(r.ec_cov_err.iter().all(|x| x.is_finite()), "{r:?}");
+        assert!(r.naive_cov_err.iter().all(|x| x.is_finite()), "{r:?}");
+        // The churned EC run actually churned.
+        assert!(r.ec_leaves[1] + r.ec_joins[1] > 0, "{r:?}");
+        let (ec, naive) = r.to_series();
+        assert_eq!(ec.xs, vec![0.0, 0.5]);
+        assert_eq!(naive.xs.len(), 2);
+    }
+
+    #[test]
+    fn rhat_helper_trims_unequal_chains() {
+        use crate::coordinator::ChainTrace;
+        let mk = |len: usize, offset: f32| ChainTrace {
+            samples: (0..len)
+                .map(|i| (i as f64, vec![offset + (i % 7) as f32, -(i as f32 % 5.0)]))
+                .collect(),
+            ..Default::default()
+        };
+        let mut r = RunResult::default();
+        r.chains = vec![mk(40, 0.0), mk(25, 0.1), mk(4, 9.0)]; // 3rd too short
+        let rh = max_rhat_of(&r);
+        assert!(rh.is_finite() && rh > 0.0, "rhat={rh}");
+        // One usable chain only → undefined.
+        let mut r = RunResult::default();
+        r.chains = vec![mk(40, 0.0), mk(4, 0.0)];
+        assert!(max_rhat_of(&r).is_nan());
+    }
+}

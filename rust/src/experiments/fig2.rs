@@ -286,6 +286,7 @@ pub fn run_scheme(
                 synchronous: false,
                 delay: cfg.delay,
                 opts,
+                ..Default::default()
             };
             let r = NaiveCoordinator::new(naive_cfg, params, potential.clone()).run(seed);
             nll_series_steps(

@@ -15,8 +15,10 @@
 //! | SEC5   | EAMSGD vs Eq. 9         | [`easgd_cmp`]         |
 //! | ABL-α  | coupling ablation       | [`alpha_sweep`]       |
 //! | PERF   | throughput microbench   | [`throughput`]        |
+//! | CHURN  | elastic membership      | [`churn_sweep`]       |
 
 pub mod alpha_sweep;
+pub mod churn_sweep;
 pub mod easgd_cmp;
 pub mod fig1;
 pub mod fig2;

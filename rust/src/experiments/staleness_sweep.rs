@@ -74,6 +74,7 @@ pub fn run(scale: Scale, seed: u64) -> StalenessResult {
             synchronous: false,
             delay: cfg.delay,
             opts: opts.clone(),
+            ..Default::default()
         };
         let r = NaiveCoordinator::new(naive_cfg, params, pot.clone()).run(run_seed);
         let series =

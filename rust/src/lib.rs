@@ -37,6 +37,7 @@
 //! the harnesses that regenerate every figure in the paper.
 
 pub mod bench;
+pub mod checkpoint;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -1,14 +1,20 @@
 //! Streaming JSONL sink: one self-describing event per line.
 //!
-//! Event schema (stream version 1; see DESIGN.md §7 for the full table):
+//! Event schema (stream version 2; see DESIGN.md §7 for the full table):
 //!
 //! ```text
-//! {"ev":"meta","version":1,"scheme":"ec","workers":4,"seed":42}
+//! {"ev":"meta","version":2,"scheme":"ec","workers":4,"seed":"42"}
 //! {"ev":"sample","chain":0,"t":0.0123,"theta":[0.5,-1.25]}
 //! {"ev":"u","chain":0,"step":100,"t":0.0119,"u":1.875}
 //! {"ev":"center","t":0.0125,"theta":[0.1,-0.9]}
+//! {"ev":"member","worker":5,"kind":"join","t":0.2}
+//! {"ev":"checkpoint","step":400,"file":"out/ckpt/ckpt-000000000400.jsonl"}
 //! {"ev":"metrics","total_steps":4000,...,"elapsed":0.42}
 //! ```
+//!
+//! Version history: v2 added the `member`/`checkpoint` events and the
+//! `stale_rejects`/`worker_joins`/`worker_leaves` metrics keys
+//! (elastic membership + checkpoint runtime, DESIGN.md §8).
 //!
 //! Framing: every event line carries its own frame tag (`chain` id, or
 //! the `center` event kind), and [`JsonlWriter`] locks per *line* — so K
@@ -23,11 +29,11 @@ use crate::util::json::Emitter;
 use std::fs::File;
 use std::io::{self, BufWriter, Write};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Stream format version, bumped on schema changes.
-pub const STREAM_VERSION: u64 = 1;
+pub const STREAM_VERSION: u64 = 2;
 
 /// Line-atomic writer shared by every frame's [`JsonlSink`].
 ///
@@ -36,6 +42,11 @@ pub const STREAM_VERSION: u64 = 1;
 pub struct JsonlWriter {
     out: Mutex<BufWriter<File>>,
     failed: AtomicBool,
+    /// The stream file, kept for checkpoint offset bookkeeping.
+    path: std::path::PathBuf,
+    /// Logical bytes appended so far (checkpoints record this so resume
+    /// can truncate post-cut events, DESIGN.md §8).
+    written: AtomicU64,
 }
 
 impl JsonlWriter {
@@ -48,7 +59,44 @@ impl JsonlWriter {
         Ok(JsonlWriter {
             out: Mutex::new(BufWriter::new(File::create(path)?)),
             failed: AtomicBool::new(false),
+            path: path.to_path_buf(),
+            written: AtomicU64::new(0),
         })
+    }
+
+    /// Reopen an existing stream for a resumed run: truncate to the
+    /// checkpointed byte offset (discarding any post-cut events the
+    /// killed process wrote, including partial lines), then append.
+    pub fn resume(path: &Path, offset: u64) -> io::Result<JsonlWriter> {
+        let f = std::fs::OpenOptions::new().write(true).open(path)?;
+        let len = f.metadata()?.len();
+        if len < offset {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "stream {path:?} is {len} bytes but the checkpoint \
+                     recorded {offset} — wrong or rewritten stream file"
+                ),
+            ));
+        }
+        f.set_len(offset)?;
+        drop(f);
+        let f = std::fs::OpenOptions::new().append(true).open(path)?;
+        Ok(JsonlWriter {
+            out: Mutex::new(BufWriter::new(f)),
+            failed: AtomicBool::new(false),
+            path: path.to_path_buf(),
+            written: AtomicU64::new(offset),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Logical bytes appended so far (what a checkpoint records).
+    pub fn position(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
     }
 
     /// Append one complete event line (the emitter escapes embedded
@@ -68,6 +116,7 @@ impl JsonlWriter {
             }
             return false;
         }
+        self.written.fetch_add(text.len() as u64 + 1, Ordering::Relaxed);
         true
     }
 
@@ -96,8 +145,38 @@ impl JsonlWriter {
         e.key("grads_computed").num(m.grads_computed as f64);
         e.key("steps_per_sec").num(m.steps_per_sec);
         e.key("samples_dropped").num(m.samples_dropped as f64);
+        e.key("stale_rejects").num(m.stale_rejects as f64);
+        e.key("worker_joins").num(m.worker_joins as f64);
+        e.key("worker_leaves").num(m.worker_leaves as f64);
         e.key("mean_staleness").num(m.mean_staleness());
         e.key("elapsed").num(elapsed);
+        e.end_obj();
+        self.line(e.as_str());
+    }
+
+    /// Membership transition event (elastic fleets, DESIGN.md §8).
+    /// `kind` is `"join"`, `"leave"` or `"fail"`.
+    pub fn member(&self, t: f64, worker: usize, kind: &str) {
+        let mut e = Emitter::new();
+        e.begin_obj();
+        e.key("ev").str_val("member");
+        e.key("worker").num(worker as f64);
+        e.key("kind").str_val(kind);
+        e.key("t").num(t);
+        e.end_obj();
+        self.line(e.as_str());
+    }
+
+    /// Checkpoint marker: records that a snapshot covering everything
+    /// up to `step` was persisted at `file`. Written *after* the offset
+    /// a resume would truncate to, so a resumed stream simply lacks the
+    /// marker of the cut it resumed from.
+    pub fn checkpoint(&self, step: usize, file: &str) {
+        let mut e = Emitter::new();
+        e.begin_obj();
+        e.key("ev").str_val("checkpoint");
+        e.key("step").num(step as f64);
+        e.key("file").str_val(file);
         e.end_obj();
         self.line(e.as_str());
     }
@@ -171,6 +250,10 @@ impl SampleSink for JsonlSink {
         self.writer.line(self.emit.as_str());
     }
 
+    fn record_member(&mut self, t: f64, worker: usize, kind: &str) {
+        self.writer.member(t, worker, kind);
+    }
+
     fn flush(&mut self) {
         self.writer.flush();
     }
@@ -233,6 +316,91 @@ mod tests {
         sink.record(1.0, &[2.0]);
         sink.record(2.0, &[3.0]);
         assert_eq!(sink.dropped(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn position_tracks_bytes_and_resume_truncates_post_cut_events() {
+        let path = tmp("resume");
+        let writer = Arc::new(JsonlWriter::create(&path).unwrap());
+        writer.meta("ec", 2, 42);
+        let mut sink = JsonlSink::new(writer.clone(), Frame::Chain(0));
+        sink.record(0.5, &[1.0, 2.0]);
+        writer.flush();
+        let cut = writer.position();
+        assert_eq!(cut, std::fs::metadata(&path).unwrap().len(), "position = file bytes");
+        // Post-cut writes: a marker, a sample, and a torn partial line
+        // (what a SIGKILL mid-write leaves behind).
+        writer.checkpoint(40, "out/ckpt/c.jsonl");
+        sink.record(0.6, &[3.0, 4.0]);
+        writer.flush();
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"ev\":\"sample\",\"chain\":0,\"t\":0.7,\"the").unwrap();
+        drop(f);
+        drop(sink);
+        drop(writer);
+        // Resume at the cut: the tail (marker + sample + torn line) is gone.
+        let resumed = Arc::new(JsonlWriter::resume(&path, cut).unwrap());
+        assert_eq!(resumed.position(), cut);
+        let mut sink = JsonlSink::new(resumed.clone(), Frame::Chain(0));
+        sink.record(0.6, &[3.0, 4.0]);
+        sink.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "meta + pre-cut sample + resumed sample:\n{text}");
+        for line in &lines {
+            Json::parse(line).unwrap();
+        }
+        // Resuming past EOF is the wrong-file error, not silent corruption.
+        let err = JsonlWriter::resume(&path, 1 << 40).unwrap_err();
+        assert!(err.to_string().contains("checkpoint recorded"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn member_and_checkpoint_events_are_well_formed() {
+        let path = tmp("member");
+        let writer = Arc::new(JsonlWriter::create(&path).unwrap());
+        writer.member(0.25, 3, "join");
+        writer.member(0.5, 1, "fail");
+        writer.checkpoint(400, "out/ckpt/ckpt-000000000400.jsonl");
+        let mut sink = JsonlSink::new(writer.clone(), Frame::Center);
+        sink.record_member(0.75, 0, "leave");
+        writer.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].get("ev").unwrap().as_str(), Some("member"));
+        assert_eq!(lines[0].get("kind").unwrap().as_str(), Some("join"));
+        assert_eq!(lines[0].get("worker").unwrap().as_usize(), Some(3));
+        assert_eq!(lines[2].get("ev").unwrap().as_str(), Some("checkpoint"));
+        assert_eq!(lines[2].get("step").unwrap().as_usize(), Some(400));
+        assert_eq!(lines[3].get("kind").unwrap().as_str(), Some("leave"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn u64_seed_round_trips_writer_to_replay_without_f64_corruption() {
+        // The satellite fix for the hazard flagged here: seeds ≥ 2^53
+        // must survive the meta event exactly, which is why they travel
+        // as strings. This drives the real writer → real reader path.
+        let path = tmp("bigseed");
+        let seed = u64::MAX - 12345; // corrupts if it ever touches f64
+        assert_ne!(seed, (seed as f64) as u64, "seed must be outside f64 range");
+        let writer = Arc::new(JsonlWriter::create(&path).unwrap());
+        writer.meta("ec", 4, seed);
+        writer.flush();
+        let file = std::fs::File::open(&path).unwrap();
+        let mut got = None;
+        crate::sink::replay::scan_stream(file, |ev| {
+            if let crate::sink::replay::RunEvent::Meta { seed, .. } = ev {
+                got = Some(seed);
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, Some(seed));
         std::fs::remove_file(&path).ok();
     }
 

@@ -60,6 +60,13 @@ pub trait SampleSink: Send {
         let _ = (step, t, u);
     }
 
+    /// Offer one membership transition (elastic fleets, DESIGN.md §8):
+    /// `kind` is `"join"`, `"leave"` or `"fail"`. Only streaming sinks
+    /// record these; the default discards them.
+    fn record_member(&mut self, t: f64, worker: usize, kind: &str) {
+        let _ = (t, worker, kind);
+    }
+
     /// Samples offered to this sink that ended up retained *nowhere*
     /// (e.g. past the in-memory cap with no stream attached). Surfaced
     /// in `Metrics::samples_dropped` instead of silently vanishing.
@@ -147,8 +154,42 @@ impl SinkHub {
     pub fn new(spec: &SinkSpec) -> io::Result<SinkHub> {
         let mut writers = Vec::new();
         let mut diags = Vec::new();
-        let built = build(spec, &mut writers, &mut diags)?;
+        let built = build(spec, &mut writers, &mut diags, None)?;
         Ok(SinkHub { built, writers, diags })
+    }
+
+    /// Rebuild the hub for a *resumed* run (DESIGN.md §8): every JSONL
+    /// stream is truncated to the byte offset its checkpoint recorded
+    /// (discarding post-cut events from the killed process) and reopened
+    /// for append. `offsets` maps stream paths (as recorded by
+    /// [`SinkHub::stream_positions`]) to byte offsets; a stream in the
+    /// spec with no recorded offset is an error — resuming into the
+    /// wrong sink configuration silently corrupting a run artifact is
+    /// exactly what this subsystem exists to prevent.
+    pub fn resume(spec: &SinkSpec, offsets: &[(String, u64)]) -> io::Result<SinkHub> {
+        let mut writers = Vec::new();
+        let mut diags = Vec::new();
+        let built = build(spec, &mut writers, &mut diags, Some(offsets))?;
+        Ok(SinkHub { built, writers, diags })
+    }
+
+    /// Current (path, logical byte offset) of every attached stream,
+    /// flushed first so the offsets are durable on disk.
+    pub fn stream_positions(&self) -> Vec<(String, u64)> {
+        self.writers
+            .iter()
+            .map(|w| {
+                w.flush();
+                (w.path().display().to_string(), w.position())
+            })
+            .collect()
+    }
+
+    /// Append a checkpoint marker to every attached stream.
+    pub fn write_checkpoint_marker(&self, step: usize, file: &str) {
+        for w in &self.writers {
+            w.checkpoint(step, file);
+        }
     }
 
     /// Plain in-memory recording, for callers that bypass `RunOptions`.
@@ -189,11 +230,32 @@ fn build(
     spec: &SinkSpec,
     writers: &mut Vec<Arc<JsonlWriter>>,
     diags: &mut Vec<Arc<Mutex<OnlineDiag>>>,
+    resume_offsets: Option<&[(String, u64)]>,
 ) -> io::Result<Built> {
     Ok(match spec {
         SinkSpec::Memory => Built::Memory,
         SinkSpec::Jsonl { path } => {
-            let writer = Arc::new(JsonlWriter::create(path)?);
+            let writer = match resume_offsets {
+                None => Arc::new(JsonlWriter::create(path)?),
+                Some(offsets) => {
+                    let key = path.display().to_string();
+                    let offset = offsets
+                        .iter()
+                        .find(|(p, _)| *p == key)
+                        .map(|(_, o)| *o)
+                        .ok_or_else(|| {
+                            io::Error::new(
+                                io::ErrorKind::InvalidInput,
+                                format!(
+                                    "checkpoint recorded no byte offset for stream \
+                                     {key:?} — resume with the sink configuration \
+                                     the run was started with"
+                                ),
+                            )
+                        })?;
+                    Arc::new(JsonlWriter::resume(path, offset)?)
+                }
+            };
             writers.push(writer.clone());
             Built::Jsonl(writer)
         }
@@ -203,7 +265,10 @@ fn build(
             Built::OnlineDiag(diag)
         }
         SinkSpec::Tee(parts) => Built::Tee(
-            parts.iter().map(|p| build(p, writers, diags)).collect::<io::Result<_>>()?,
+            parts
+                .iter()
+                .map(|p| build(p, writers, diags, resume_offsets))
+                .collect::<io::Result<_>>()?,
         ),
     })
 }

@@ -20,6 +20,11 @@ pub enum RunEvent {
     Sample { chain: usize, t: f64, theta: Vec<f32> },
     U { chain: usize, step: usize, t: f64, u: f64 },
     Center { t: f64, theta: Vec<f32> },
+    /// Membership transition (stream v2): `kind` ∈ join|leave|fail.
+    Member { worker: usize, kind: String, t: f64 },
+    /// Checkpoint marker (stream v2): a snapshot covering everything up
+    /// to `step` was persisted at `file`.
+    Checkpoint { step: usize, file: String },
     Metrics { metrics: Metrics, elapsed: f64 },
 }
 
@@ -62,6 +67,15 @@ impl RunEvent {
             "center" => RunEvent::Center {
                 t: num_or_nan(v, "t").context("center: t")?,
                 theta: theta_arr(v.get("theta").context("center: theta")?)?,
+            },
+            "member" => RunEvent::Member {
+                worker: v.get("worker").and_then(Json::as_usize).context("member: worker")?,
+                kind: v.get("kind").and_then(Json::as_str).unwrap_or("?").to_string(),
+                t: num_or_nan(v, "t").unwrap_or(f64::NAN),
+            },
+            "checkpoint" => RunEvent::Checkpoint {
+                step: v.get("step").and_then(Json::as_usize).context("checkpoint: step")?,
+                file: v.get("file").and_then(Json::as_str).unwrap_or("").to_string(),
             },
             "metrics" => RunEvent::Metrics {
                 metrics: Metrics::from_json(v),
@@ -135,6 +149,10 @@ pub fn replay_reader<R: Read>(src: R) -> Result<RunResult> {
                 chain_entry(&mut chains, chain).u_trace.push(TracePoint { step, t, u });
             }
             RunEvent::Center { t, theta } => result.center_trace.push((t, theta)),
+            // Membership transitions and checkpoint markers are run
+            // *annotations*: the counters they summarize travel in the
+            // metrics event, so reconstruction skips them.
+            RunEvent::Member { .. } | RunEvent::Checkpoint { .. } => {}
             RunEvent::Metrics { metrics, elapsed } => {
                 result.metrics = metrics;
                 result.elapsed = elapsed;
@@ -236,9 +254,36 @@ mod tests {
 
     #[test]
     fn future_stream_versions_are_rejected() {
-        let v2 = "{\"ev\":\"meta\",\"version\":2,\"scheme\":\"ec\",\"workers\":1,\"seed\":\"1\"}\n";
-        let err = replay_reader(v2.as_bytes()).unwrap_err();
-        assert!(format!("{err:#}").contains("version 2"), "{err:#}");
+        let v9 = "{\"ev\":\"meta\",\"version\":9,\"scheme\":\"ec\",\"workers\":1,\"seed\":\"1\"}\n";
+        let err = replay_reader(v9.as_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("version 9"), "{err:#}");
+    }
+
+    #[test]
+    fn member_and_checkpoint_events_annotate_without_breaking_replay() {
+        let stream = concat!(
+            "{\"ev\":\"meta\",\"version\":2,\"scheme\":\"ec\",\"workers\":2,\"seed\":\"9\"}\n",
+            "{\"ev\":\"sample\",\"chain\":0,\"t\":0.1,\"theta\":[1,2]}\n",
+            "{\"ev\":\"member\",\"worker\":1,\"kind\":\"join\",\"t\":0.15}\n",
+            "{\"ev\":\"checkpoint\",\"step\":40,\"file\":\"out/ckpt/c.jsonl\"}\n",
+            "{\"ev\":\"member\",\"worker\":0,\"kind\":\"fail\",\"t\":0.2}\n",
+        );
+        let r = replay_reader(stream.as_bytes()).unwrap();
+        assert_eq!(r.samples.len(), 1);
+        // And the raw events are visible to scan_stream consumers.
+        let mut kinds = Vec::new();
+        let mut ckpt_steps = Vec::new();
+        scan_stream(stream.as_bytes(), |ev| {
+            match ev {
+                RunEvent::Member { kind, worker, .. } => kinds.push((worker, kind)),
+                RunEvent::Checkpoint { step, .. } => ckpt_steps.push(step),
+                _ => {}
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(kinds, vec![(1, "join".to_string()), (0, "fail".to_string())]);
+        assert_eq!(ckpt_steps, vec![40]);
     }
 
     #[test]

@@ -28,6 +28,12 @@ impl SampleSink for TeeSink {
         }
     }
 
+    fn record_member(&mut self, t: f64, worker: usize, kind: &str) {
+        for p in &mut self.parts {
+            p.record_member(t, worker, kind);
+        }
+    }
+
     /// A sample counts as dropped only if *every* θ-retaining part
     /// dropped it — a memory part past its cap loses nothing while a
     /// stream part keeps recording, so the tee's loss is the minimum

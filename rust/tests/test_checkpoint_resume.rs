@@ -1,0 +1,233 @@
+//! Integration tests for the checkpoint & elastic-membership runtime
+//! (DESIGN.md §8):
+//!
+//! * kill-and-resume under the deterministic transport produces a run
+//!   whose JSONL stream replays **bit-identically** to the uninterrupted
+//!   run's (θ samples, Ũ values, center trajectory, metrics counters —
+//!   wall-clock timestamps are the one legitimately nondeterministic
+//!   field);
+//! * snapshot files round-trip byte-identically through parse/serialize
+//!   and reject truncation/garbage with clear errors (the unit-level
+//!   property tests live in `src/checkpoint/`);
+//! * a churn-enabled EC run with real join/leave events keeps split-R̂
+//!   within 10% of the churn-free run on the Fig. 1 Gaussian — the
+//!   acceptance scenario from the paper's abstract.
+
+use ecsgmcmc::checkpoint::{CheckpointPolicy, CheckpointStore, Snapshot};
+use ecsgmcmc::config::RunConfig;
+use ecsgmcmc::coordinator::ec::{planned_spans, resume_ec, run_ec, EcCheckpoint};
+use ecsgmcmc::coordinator::engine::{NativeEngine, StepKind, WorkerEngine};
+use ecsgmcmc::coordinator::{ChurnModel, EcConfig, RunOptions, RunResult, TransportKind};
+use ecsgmcmc::experiments::churn_sweep;
+use ecsgmcmc::potentials::gaussian::GaussianPotential;
+use ecsgmcmc::samplers::SghmcParams;
+use ecsgmcmc::sink::replay::replay_file;
+use ecsgmcmc::sink::SinkSpec;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ecsgmcmc-it-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn engines(n: usize, params: SghmcParams) -> Vec<Box<dyn WorkerEngine>> {
+    (0..n)
+        .map(|_| {
+            Box::new(NativeEngine::new(
+                Arc::new(GaussianPotential::fig1()),
+                params,
+                StepKind::Sghmc,
+            )) as Box<dyn WorkerEngine>
+        })
+        .collect()
+}
+
+/// The deterministic content of a replayed run: θ streams per chain, Ũ
+/// values, center θ trajectory, and the hard counters — everything
+/// except wall-clock timestamps.
+type RunView = (Vec<Vec<Vec<f32>>>, Vec<Vec<(usize, f64)>>, Vec<Vec<f32>>, [u64; 4]);
+
+fn deterministic_view(r: &RunResult) -> RunView {
+    (
+        r.chains.iter().map(|c| c.samples.iter().map(|(_, t)| t.clone()).collect()).collect(),
+        r.chains
+            .iter()
+            .map(|c| c.u_trace.iter().map(|p| (p.step, p.u)).collect())
+            .collect(),
+        r.center_trace.iter().map(|(_, c)| c.clone()).collect(),
+        [
+            r.metrics.total_steps,
+            r.metrics.center_steps,
+            r.metrics.exchanges,
+            r.metrics.samples_dropped,
+        ],
+    )
+}
+
+#[test]
+fn kill_and_resume_stream_replays_bit_identical_to_uninterrupted() {
+    let dir = tmp("kill-resume");
+    let stream = dir.join("run.jsonl");
+    let ckpt_dir = dir.join("ckpt");
+    let cfg = EcConfig {
+        workers: 3,
+        alpha: 1.0,
+        sync_every: 2,
+        steps: 240,
+        transport: TransportKind::Deterministic,
+        checkpoint: Some(EcCheckpoint {
+            dir: ckpt_dir.clone(),
+            policy: CheckpointPolicy { every_rounds: 30, every_secs: None, keep: 100 },
+        }),
+        opts: RunOptions {
+            thin: 1,
+            log_every: 20,
+            sink: SinkSpec::Jsonl { path: stream.clone() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: 0.05, ..Default::default() };
+
+    // Uninterrupted run: its stream is the reference artifact.
+    run_ec(&cfg, params, engines(3, params), 99);
+    let reference = replay_file(&stream).unwrap();
+    let ref_view = deterministic_view(&reference);
+
+    // "Kill": pick an interior snapshot, then corrupt the stream tail the
+    // way a SIGKILL mid-write would — a complete post-cut event plus a
+    // torn partial line. Resume must truncate both away and regenerate
+    // the exact tail.
+    let mut snaps: Vec<PathBuf> = std::fs::read_dir(&ckpt_dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .collect();
+    snaps.sort();
+    assert!(snaps.len() >= 2, "expected interior cuts: {snaps:?}");
+    let snap = CheckpointStore::load(&snaps[0]).unwrap();
+    assert!(snap.boundary > 0 && snap.boundary < cfg.steps);
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&stream).unwrap();
+        f.write_all(b"{\"ev\":\"sample\",\"chain\":0,\"t\":9.9,\"theta\":[0,0]}\n").unwrap();
+        f.write_all(b"{\"ev\":\"sample\",\"chain\":1,\"t\":9.95,\"the").unwrap();
+    }
+
+    let resumed = resume_ec(&cfg, params, engines(3, params), snap).unwrap();
+    assert!(resumed.metrics.total_steps == reference.metrics.total_steps);
+    let replayed = replay_file(&stream).unwrap();
+    let got_view = deterministic_view(&replayed);
+    assert_eq!(ref_view.0, got_view.0, "θ streams diverged");
+    assert_eq!(ref_view.1, got_view.1, "Ũ traces diverged");
+    assert_eq!(ref_view.2, got_view.2, "center trajectory diverged");
+    assert_eq!(ref_view.3, got_view.3, "metrics counters diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn snapshot_files_reserialize_byte_identically_and_reject_corruption() {
+    let dir = tmp("snapshot-bytes");
+    let cfg = EcConfig {
+        workers: 2,
+        sync_every: 2,
+        steps: 80,
+        checkpoint: Some(EcCheckpoint {
+            dir: dir.join("ckpt"),
+            policy: CheckpointPolicy { every_rounds: 10, every_secs: None, keep: 100 },
+        }),
+        opts: RunOptions { thin: 1, log_every: 10, ..Default::default() },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: 0.04, ..Default::default() };
+    run_ec(&cfg, params, engines(2, params), 7);
+
+    let mut snaps: Vec<PathBuf> = std::fs::read_dir(dir.join("ckpt"))
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .collect();
+    snaps.sort();
+    assert!(!snaps.is_empty());
+    for path in &snaps {
+        // serialize(parse(bytes)) == bytes — real files, not synthetic.
+        let text = std::fs::read_to_string(path).unwrap();
+        let snap = Snapshot::parse(&text).unwrap();
+        assert_eq!(snap.serialize(), text, "{path:?} not byte-stable");
+    }
+
+    // Truncation: drop the footer — rejected with a clear error.
+    let text = std::fs::read_to_string(&snaps[0]).unwrap();
+    let cut = text.rfind("{\"ev\":\"ckpt_end\"").unwrap();
+    let truncated_path = dir.join("truncated.jsonl");
+    std::fs::write(&truncated_path, &text[..cut]).unwrap();
+    let err = CheckpointStore::load(&truncated_path).unwrap_err();
+    assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+
+    // Garbage: not JSON at all — rejected naming the line.
+    let garbage_path = dir.join("garbage.jsonl");
+    std::fs::write(&garbage_path, b"\x00\x01not json\n").unwrap();
+    assert!(CheckpointStore::load(&garbage_path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The acceptance scenario: churn-enabled EC (join + leave + fail events
+/// on the lock-free fabric, which churn requires) stays within 10% of
+/// the churn-free run's split-R̂ on the `fig1_gaussian.toml` problem.
+#[test]
+fn churned_ec_rhat_stays_within_ten_percent_of_churn_free() {
+    // The shipped Fig. 1 config supplies the problem (target, ε, K, α);
+    // churn needs the lock-free fabric and enough steps for a stable R̂.
+    let fig1 = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs/fig1_gaussian.toml");
+    let file_cfg = RunConfig::from_file(&fig1).unwrap();
+    let steps = 12_000;
+    let mk = |churn: ChurnModel| EcConfig {
+        workers: file_cfg.workers,
+        alpha: file_cfg.alpha,
+        sync_every: file_cfg.sync_every,
+        steps,
+        transport: TransportKind::LockFree,
+        churn,
+        opts: RunOptions {
+            thin: 2,
+            burn_in: steps / 5,
+            log_every: steps / 10,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: file_cfg.sampler.eps, ..Default::default() };
+    let run = |cfg: EcConfig, seed: u64| {
+        let n = planned_spans(&cfg, seed).len();
+        run_ec(&cfg, params, engines(n, params), seed)
+    };
+
+    let free = run(mk(ChurnModel::none()), 42);
+    let churn_model = ChurnModel { leave_frac: 0.5, fail_frac: 0.5, join_frac: 0.5 };
+    // Pick a seed whose schedule really has joins *and* leaves.
+    let seed = (42..200)
+        .find(|&sd| {
+            let spans = churn_model.schedule(file_cfg.workers, steps, file_cfg.sync_every, sd);
+            spans.iter().any(|sp| sp.departure.is_some())
+                && spans.iter().any(|sp| !sp.is_founder())
+        })
+        .expect("some seed churns");
+    let churned = run(mk(churn_model), seed);
+    assert!(churned.metrics.worker_leaves > 0, "no leave events fired");
+    assert!(churned.metrics.worker_joins > 0, "no join events fired");
+
+    let r_free = churn_sweep::max_rhat_of(&free);
+    let r_churn = churn_sweep::max_rhat_of(&churned);
+    assert!(r_free.is_finite() && r_churn.is_finite(), "free={r_free} churn={r_churn}");
+    assert!(
+        (r_churn - r_free).abs() <= 0.10 * r_free,
+        "churned R-hat {r_churn:.4} deviates more than 10% from churn-free {r_free:.4}"
+    );
+    // Posterior moments stay sane under churn, too.
+    let err = churn_sweep::cov_err(&churned);
+    assert!(err < 0.5, "pooled covariance error too large under churn: {err}");
+}

@@ -26,6 +26,39 @@ fn experiment_requires_id() {
 }
 
 #[test]
+fn resume_requires_config_and_a_checkpoint_source() {
+    assert!(ecsgmcmc::cli::run(argv("resume")).is_err());
+    // A valid EC config but no [checkpoint] dir and no --checkpoint-dir:
+    // the error names the missing knob rather than sampling from scratch.
+    let dir = std::env::temp_dir().join("ecsgmcmc-test-resume-cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("ec.toml");
+    std::fs::write(
+        &cfg_path,
+        "[run]\nscheme = \"ec\"\ntarget = \"gaussian\"\nsteps = 100\n[sampler]\neps = 0.05\n",
+    )
+    .unwrap();
+    let args = vec![
+        "resume".to_string(),
+        "--config".to_string(),
+        cfg_path.to_string_lossy().to_string(),
+    ];
+    let err = ecsgmcmc::cli::run(args).unwrap_err();
+    assert!(format!("{err:#}").contains("checkpoint-dir"), "{err:#}");
+    // Pointing at an empty checkpoint dir is also a clean error.
+    let args = vec![
+        "resume".to_string(),
+        "--config".to_string(),
+        cfg_path.to_string_lossy().to_string(),
+        "--checkpoint-dir".to_string(),
+        dir.join("empty-ckpts").to_string_lossy().to_string(),
+    ];
+    let err = ecsgmcmc::cli::run(args).unwrap_err();
+    assert!(format!("{err:#}").contains("no checkpoints"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn fig1_experiment_runs_end_to_end() {
     let out = std::env::temp_dir().join("ecsgmcmc-test-fig1");
     let args = vec![
