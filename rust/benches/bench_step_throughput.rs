@@ -102,8 +102,125 @@ fn main() {
         );
     }
 
+    // ---- Batched multi-chain gradient engine B-sweep (DESIGN.md §9). ----
+    bench_grad_batch(scale);
+
     // ---- Checkpoint overhead (DESIGN.md §8: target < 3%). ----
     bench_checkpoint_overhead(scale);
+}
+
+/// B-sweep of the batched multi-chain gradient engine: fig2 MLP, K = 16
+/// chains, `chains_per_worker` B ∈ {1, 4, 16}, for the independent and
+/// EC schemes, plus the single-chain single-thread baseline. B = 16
+/// packs the whole fleet onto ONE thread, so its aggregate steps/sec
+/// against the B = 1 single-thread rate is the per-thread speedup of the
+/// grouped-GEMM path (acceptance target ≥ 3x; the CI `grad-bench` job
+/// gates at ≥ 2x to absorb runner noise). Emits out/bench/BENCH_grad.json.
+fn bench_grad_batch(scale: Scale) {
+    use ecsgmcmc::coordinator::ec::run_ec;
+    use ecsgmcmc::coordinator::single::run_single;
+    use ecsgmcmc::coordinator::{EcConfig, IndependentCoordinator, RunOptions};
+    use ecsgmcmc::potentials::Potential;
+    use ecsgmcmc::util::json::Json;
+    use std::sync::Arc;
+
+    let pot = fig2::mnist_potential(scale);
+    let grad_params = SghmcParams { eps: 1e-4, ..Default::default() };
+    let k = 16usize;
+    let steps = scale.pick(60, 300);
+    let opts = |b: usize| RunOptions {
+        record_samples: false,
+        log_every: usize::MAX / 2,
+        chains_per_worker: b,
+        ..Default::default()
+    };
+    let engines = |n: usize| -> Vec<Box<dyn WorkerEngine>> {
+        (0..n)
+            .map(|_| {
+                Box::new(NativeEngine::new(
+                    pot.clone() as Arc<dyn Potential>,
+                    grad_params,
+                    StepKind::Sghmc,
+                )) as Box<dyn WorkerEngine>
+            })
+            .collect()
+    };
+
+    // The two rates the CI gate compares are each best-of-3: a single
+    // wall-clock sample on a shared runner is too noisy to hard-fail on.
+    let reps = 3;
+
+    // Baseline: one chain, one thread, unbatched (first run warms).
+    let _ = run_single(engines(1).remove(0), steps, opts(1), 3);
+    let mut single_rate = 0.0f64;
+    for _ in 0..reps {
+        let r = run_single(engines(1).remove(0), steps, opts(1), 3);
+        single_rate = single_rate.max(r.metrics.steps_per_sec);
+    }
+
+    let bs = [1usize, 4, 16];
+    let mut indep_rates = Vec::new();
+    let mut ec_rates = Vec::new();
+    for &b in &bs {
+        let gated = b == 16;
+        let mut best = 0.0f64;
+        for _ in 0..if gated { reps } else { 1 } {
+            let r = IndependentCoordinator::new(steps, opts(b)).run(engines(k), 3);
+            best = best.max(r.metrics.steps_per_sec);
+        }
+        indep_rates.push(best);
+        let cfg = EcConfig {
+            workers: k,
+            alpha: 1.0,
+            sync_every: 4,
+            steps,
+            opts: opts(b),
+            ..Default::default()
+        };
+        let r = run_ec(&cfg, grad_params, engines(k), 3);
+        ec_rates.push(r.metrics.steps_per_sec);
+    }
+    let xs: Vec<f64> = bs.iter().map(|&b| b as f64).collect();
+    print_series_table(
+        &format!("GRAD: batched engine B-sweep (fig2 MLP, K={k}, aggregate steps/sec)"),
+        "B",
+        &xs,
+        &[("independent", &indep_rates), ("ec (deterministic)", &ec_rates)],
+    );
+    // Per-thread speedup: K=16, B=16 runs on ONE thread; compare its
+    // aggregate rate against the B=1 single-thread (K=1) rate.
+    let speedup = indep_rates[2] / single_rate.max(1e-12);
+    let gate_pass = speedup >= 2.0;
+    println!(
+        "\nsingle-thread B=1 rate {single_rate:.0} steps/s; K=16 B=16 on one thread \
+         {:.0} steps/s -> {speedup:.2}x (target 3x, CI gate 2x: {})",
+        indep_rates[2],
+        if gate_pass { "PASS" } else { "FAIL" }
+    );
+    let per_b = |rates: &[f64]| {
+        Json::from_pairs(vec![
+            ("b1", Json::Num(rates[0])),
+            ("b4", Json::Num(rates[1])),
+            ("b16", Json::Num(rates[2])),
+        ])
+    };
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("grad_batch".into())),
+        ("workload", Json::Str("fig2_mlp".into())),
+        ("k", Json::Num(k as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("single_thread_b1_steps_per_sec", Json::Num(single_rate)),
+        ("independent", per_b(&indep_rates)),
+        ("ec", per_b(&ec_rates)),
+        ("speedup_b16_vs_single_thread", Json::Num(speedup)),
+        ("target_speedup", Json::Num(3.0)),
+        ("gate_2x_pass", Json::Bool(gate_pass)),
+    ]);
+    if std::fs::create_dir_all("out/bench").is_ok() {
+        let path = std::path::Path::new("out/bench/BENCH_grad.json");
+        let _ = std::fs::write(path, doc.emit_pretty());
+        println!("-> wrote {}", path.display());
+    }
 }
 
 /// Measure the steps/sec cost of checkpointing: the same EC Gaussian run

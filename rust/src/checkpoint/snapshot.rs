@@ -106,6 +106,12 @@ pub struct Fingerprint {
     pub sync_every: usize,
     pub steps: usize,
     pub shards: usize,
+    /// Chains per OS thread, B (DESIGN.md §9). Pinned because potentials
+    /// with a batched gradient override change float summation order at
+    /// B > 1 — resuming under a different B would silently break the
+    /// deterministic-resume guarantee. Absent in pre-batching snapshots
+    /// (parsed as 1, the layout those runs used).
+    pub chains_per_worker: usize,
     pub transport: String,
     pub dim: usize,
     pub live: usize,
@@ -270,6 +276,7 @@ impl Snapshot {
         e.key("sync_every").num(fp.sync_every as f64);
         e.key("steps").num(fp.steps as f64);
         e.key("shards").num(fp.shards as f64);
+        e.key("chains_per_worker").num(fp.chains_per_worker as f64);
         e.key("transport").str_val(&fp.transport);
         e.key("dim").num(fp.dim as f64);
         e.key("live").num(fp.live as f64);
@@ -440,6 +447,10 @@ impl Snapshot {
             sync_every: get_usize(fp_obj, "sync_every")?,
             steps: get_usize(fp_obj, "steps")?,
             shards: get_usize(fp_obj, "shards")?,
+            chains_per_worker: match fp_obj.get("chains_per_worker") {
+                Some(_) => get_usize(fp_obj, "chains_per_worker")?,
+                None => 1, // pre-batching snapshot: one chain per thread
+            },
             transport: get_str(fp_obj, "transport")?.to_string(),
             dim: get_usize(fp_obj, "dim")?,
             live: get_usize(fp_obj, "live")?,
@@ -628,6 +639,7 @@ pub(crate) mod tests {
                 sync_every: 2,
                 steps: 100,
                 shards: 2,
+                chains_per_worker: if seed % 2 == 0 { 1 } else { 4 },
                 transport: "deterministic".into(),
                 dim,
                 live: dim,

@@ -36,6 +36,9 @@ fn apply_overrides(cfg: &mut RunConfig, p: &Parsed) -> Result<()> {
     if let Some(s) = p.opt("shards") {
         cfg.shards = s.parse().context("--shards")?;
     }
+    if let Some(bsz) = p.opt("chains-per-worker") {
+        cfg.chains_per_worker = bsz.parse().context("--chains-per-worker")?;
+    }
     if let Some(s) = p.opt("sink") {
         cfg.sink = SinkKind::from_str(s).context("--sink")?;
     }
@@ -239,6 +242,7 @@ fn run_options(cfg: &RunConfig) -> RunOptions {
         thin: cfg.thin,
         burn_in: cfg.burn_in,
         init_sigma: 0.5,
+        chains_per_worker: cfg.chains_per_worker,
         sink: cfg.sink_spec(),
         ..Default::default()
     }
@@ -311,9 +315,11 @@ pub fn run_configured(cfg: &RunConfig) -> Result<RunResult> {
     let opts = run_options(cfg);
     let delay = DelayModel::with_exchange_ms(cfg.delay_ms);
     log_info!(
-        "sampling: scheme={} workers={} s={} alpha={} steps={} dim={} transport={} shards={}",
+        "sampling: scheme={} workers={} b={} s={} alpha={} steps={} dim={} transport={} \
+         shards={}",
         cfg.scheme.name(),
         cfg.workers,
+        cfg.chains_per_worker,
         cfg.sync_every,
         cfg.alpha,
         cfg.steps,

@@ -57,6 +57,8 @@ COMMANDS:
                   --seed <n>             override the config seed
                   --transport <t>        EC fabric: deterministic|lockfree
                   --shards <n>           EC center shards (default 1)
+                  --chains-per-worker <b> chains per OS thread (batched
+                                         gradient engine, default 1)
                   --sink <s>             memory|jsonl|diag|tee (default memory)
                   --sink-path <file>     JSONL stream file (default <out_dir>/run.jsonl)
                   --checkpoint-dir <d>   EC snapshot dir (enables checkpointing)

@@ -136,6 +136,11 @@ pub struct RunConfig {
     pub sampler: SghmcParams,
     /// Number of parallel workers K.
     pub workers: usize,
+    /// Chains per OS thread, B (`[coordinator] chains_per_worker`,
+    /// `--chains-per-worker`): the batched multi-chain engine packs B
+    /// chains onto one thread and evaluates their gradients in one
+    /// grouped-GEMM call (DESIGN.md §9). 1 = classic layout.
+    pub chains_per_worker: usize,
     /// Communication period s (worker<->server exchange every s steps).
     pub sync_every: usize,
     /// Gradients to collect per server step O (naive async only).
@@ -193,6 +198,7 @@ impl Default for RunConfig {
             target: Target::Gaussian,
             sampler: SghmcParams::default(),
             workers: 4,
+            chains_per_worker: 1,
             sync_every: 2,
             collect: 1,
             transport: TransportKind::Deterministic,
@@ -257,6 +263,9 @@ impl RunConfig {
             t.get_f64("sampler", "center_friction").unwrap_or(cfg.sampler.center_friction);
 
         cfg.workers = t.get_usize("coordinator", "workers").unwrap_or(cfg.workers);
+        cfg.chains_per_worker = t
+            .get_usize("coordinator", "chains_per_worker")
+            .unwrap_or(cfg.chains_per_worker);
         cfg.sync_every = t.get_usize("coordinator", "sync_every").unwrap_or(cfg.sync_every);
         cfg.collect = t.get_usize("coordinator", "collect").unwrap_or(cfg.collect);
         if let Some(s) = t.get_str("coordinator", "transport") {
@@ -338,6 +347,9 @@ impl RunConfig {
         }
         if self.sync_every == 0 {
             bail!("sync_every must be >= 1");
+        }
+        if self.chains_per_worker == 0 {
+            bail!("chains_per_worker must be >= 1");
         }
         if self.collect == 0 || self.collect > self.workers {
             bail!("collect must be in 1..=workers (got {} of {})", self.collect, self.workers);
@@ -463,6 +475,22 @@ alpha = 0.5
         assert!(RunConfig::from_toml_str("[coordinator]\nshards = 0\n").is_err());
         assert!(
             RunConfig::from_toml_str("[coordinator]\ntransport = \"smoke-signal\"\n").is_err()
+        );
+    }
+
+    #[test]
+    fn parses_chains_per_worker() {
+        let cfg = RunConfig::from_toml_str(
+            "[coordinator]\nworkers = 16\nchains_per_worker = 8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.chains_per_worker, 8);
+        // Default: the classic one-chain-per-thread layout.
+        let cfg = RunConfig::from_toml_str("[run]\nscheme = \"ec\"\n").unwrap();
+        assert_eq!(cfg.chains_per_worker, 1);
+        // Degenerate B is rejected.
+        assert!(
+            RunConfig::from_toml_str("[coordinator]\nchains_per_worker = 0\n").is_err()
         );
     }
 

@@ -326,6 +326,177 @@ fn run_ec_worker_segment(
     (cell, engine)
 }
 
+/// Run a *block* of B workers on one OS thread to the segment boundary
+/// (`chains_per_worker` > 1, DESIGN.md §9).
+///
+/// Each loop iteration advances every live chain one step through one
+/// batched engine step (one `stoch_grad_batch` call), then records,
+/// jitters and exchanges per chain in ascending id order — which is
+/// exactly the deterministic server's round-robin order restricted to
+/// this block, so blocking round-trips compose without deadlock. Each
+/// chain keeps its own RNG streams and its own (possibly stale) center
+/// view; a pending joiner is polled non-blockingly each iteration so the
+/// block's founders keep the fleet's exchange clock advancing meanwhile.
+#[allow(clippy::too_many_arguments)]
+fn run_ec_block_segment(
+    mut cells: Vec<WorkerCell>,
+    mut engine: Box<dyn WorkerEngine>,
+    mut ports: Vec<Box<dyn WorkerPort>>,
+    alpha: f64,
+    sync_every: usize,
+    until: usize,
+    delay: DelayModel,
+    factors: Vec<f64>,
+    gate: Option<Arc<Gate>>,
+) -> (Vec<WorkerCell>, Box<dyn WorkerEngine>) {
+    use super::engine::ChainSlot;
+    let n = cells.len();
+    debug_assert_eq!(ports.len(), n);
+    debug_assert_eq!(factors.len(), n);
+    let mut counted: Vec<bool> = cells.iter().map(|c| c.started).collect();
+    // Per-chain center views, taken out of the cells for the segment.
+    let mut views: Vec<CenterView> = cells
+        .iter_mut()
+        .map(|c| CenterView::Owned(std::mem::take(&mut c.center)))
+        .collect();
+    let mut us = vec![0.0f64; n];
+    let mut slot_ids: Vec<usize> = Vec::with_capacity(n);
+    let mut spins = 0u32;
+    loop {
+        // Activate joiners whose gate has been reached (non-blocking).
+        for i in 0..n {
+            let c = &mut cells[i];
+            if c.started || c.departed {
+                continue;
+            }
+            let g = gate.as_ref().expect("joiners only exist on churn runs, which have a gate");
+            if g.exchanges.load(Ordering::Acquire) >= c.span.join_gate.unwrap_or(0) {
+                g.steppers.fetch_add(1, Ordering::AcqRel);
+                counted[i] = true;
+                // Adopt the center: clone c as position (zero momentum)
+                // and as the local center copy.
+                ports[i].fetch(&mut views[i]);
+                c.state.theta.copy_from_slice(views[i].as_slice());
+                c.state.p.fill(0.0);
+                c.started = true;
+                c.next_step = c.span.start_step;
+            }
+        }
+        // Departure sweep: chains that reached their stop step (possibly
+        // with zero steps left in this segment) exit exactly once.
+        for i in 0..n {
+            let c = &mut cells[i];
+            if c.started && !c.departed && c.next_step >= c.span.stop_step {
+                if let Some(dep) = c.span.departure {
+                    let undrained = c.next_step % sync_every != 0;
+                    let final_theta = (dep == Departure::Leave && undrained)
+                        .then_some(c.state.theta.as_slice());
+                    ports[i].depart(final_theta, dep);
+                    c.departed = true;
+                    if counted[i] {
+                        if let Some(g) = &gate {
+                            g.steppers.fetch_sub(1, Ordering::AcqRel);
+                        }
+                        counted[i] = false;
+                    }
+                }
+            }
+        }
+        // Collect the live chains for one batched step.
+        slot_ids.clear();
+        let mut slots: Vec<ChainSlot> = Vec::with_capacity(n);
+        for ((i, cell), view) in cells.iter_mut().enumerate().zip(views.iter()) {
+            let stop = cell.span.stop_step.min(until);
+            if cell.started && !cell.departed && cell.next_step < stop {
+                slot_ids.push(i);
+                slots.push(ChainSlot {
+                    state: &mut cell.state,
+                    center: Some(view.as_slice()),
+                    rng: &mut cell.rng,
+                });
+            }
+        }
+        if slots.is_empty() {
+            drop(slots);
+            let pending = cells.iter().any(|c| !c.started && !c.departed);
+            if pending {
+                // A gated joiner is all that is left of this block: wait
+                // for the rest of the fleet (same polite-yield backoff as
+                // the unbatched path), unless the fleet is idle — then
+                // the segment is over, or this joiner *is* the fleet.
+                let g = gate.as_ref().expect("pending joiners imply churn");
+                if g.steppers.load(Ordering::Acquire) == 0 {
+                    // One final gate re-check before giving up: the last
+                    // stepper may have retired right after pushing the
+                    // exchange count past a pending gate (the unbatched
+                    // path re-checks the same way after its spin).
+                    let reached = cells.iter().any(|c| {
+                        !c.started
+                            && !c.departed
+                            && g.exchanges.load(Ordering::Acquire)
+                                >= c.span.join_gate.unwrap_or(0)
+                    });
+                    if reached {
+                        continue; // the top-of-loop poll activates it
+                    }
+                    break;
+                }
+                spins += 1;
+                if spins < 64 {
+                    std::thread::yield_now();
+                } else {
+                    std::thread::sleep(std::time::Duration::from_micros(100));
+                }
+                continue;
+            }
+            break;
+        }
+        spins = 0;
+        let nb = slots.len();
+        engine.step_batch(&mut slots, alpha, &mut us[..nb]);
+        drop(slots);
+        // Record → jitter → exchange per chain, in ascending id order
+        // (the per-chain ordering of the unbatched worker segment).
+        for (s, &i) in slot_ids.iter().enumerate() {
+            let cell = &mut cells[i];
+            let t = cell.next_step;
+            cell.rec.observe(t, us[s], &cell.state.theta);
+            delay.step_sleep(factors[i], &mut cell.jitter);
+            if (t + 1) % sync_every == 0 {
+                ports[i].exchange(&cell.state.theta, &mut views[i]);
+                if let Some(g) = &gate {
+                    g.exchanges.fetch_add(1, Ordering::AcqRel);
+                }
+            }
+            cell.next_step = t + 1;
+            // A chain that just took its last step of this segment stops
+            // counting toward the fleet-progress clock — otherwise a
+            // block idling on a gated joiner would see its own finished
+            // founders as "stepping" and never observe an idle fleet.
+            if cell.next_step >= cell.span.stop_step.min(until) && counted[i] {
+                if let Some(g) = &gate {
+                    g.steppers.fetch_sub(1, Ordering::AcqRel);
+                }
+                counted[i] = false;
+            }
+        }
+    }
+    // Fold segment state back into the cells.
+    for (i, cell) in cells.iter_mut().enumerate() {
+        cell.seen = ports[i].seen_version();
+        cell.center = match std::mem::replace(&mut views[i], CenterView::Owned(Vec::new())) {
+            CenterView::Owned(v) => v,
+            CenterView::Shared(a) => a.as_ref().clone(),
+        };
+        if counted[i] {
+            if let Some(g) = &gate {
+                g.steppers.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+    }
+    (cells, engine)
+}
+
 // ---------------------------------------------------------------------
 // Center-server segment
 // ---------------------------------------------------------------------
@@ -495,10 +666,12 @@ fn run_ec_inner(
     );
     let start = Instant::now();
     let s = cfg.sync_every;
+    let b = cfg.opts.chains_per_worker.max(1);
     let dim = engines[0].dim();
     let live = engines[0].live_dim();
     let churn_active = cfg.churn.is_active();
-    let topo = Topology::centered_elastic(Membership::elastic(spans.clone()), dim, cfg.shards);
+    let topo = Topology::centered_elastic(Membership::elastic(spans.clone()), dim, cfg.shards)
+        .with_chains_per_worker(b);
     let layout = topo.layout().clone();
 
     let fingerprint = Fingerprint {
@@ -508,6 +681,7 @@ fn run_ec_inner(
         sync_every: s,
         steps: cfg.steps,
         shards: layout.shards(),
+        chains_per_worker: b,
         transport: cfg.transport.name().to_string(),
         dim,
         live,
@@ -673,8 +847,8 @@ fn run_ec_inner(
             }
             participants.push(id);
             if cell.started {
-                let b = cell.span.stop_step.min(until);
-                seg_uploads += b / s - cell.next_step / s;
+                let bound = cell.span.stop_step.min(until);
+                seg_uploads += bound / s - cell.next_step / s;
             }
         }
         if participants.is_empty() {
@@ -724,36 +898,90 @@ fn run_ec_inner(
 
         let mut seg_ports: Vec<Option<Box<dyn WorkerPort>>> =
             seg_ports.into_iter().map(Some).collect();
-        let mut handles = Vec::with_capacity(participants.len());
-        for id in 0..total {
-            let port = seg_ports[id].take().expect("one port per worker");
-            if !participants.contains(&id) {
-                // Departed or finished: free the fabric slot immediately
-                // so the lock-free server's done-count can complete.
-                drop(port);
-                continue;
+        if b <= 1 {
+            let mut handles = Vec::with_capacity(participants.len());
+            for id in 0..total {
+                let port = seg_ports[id].take().expect("one port per worker");
+                if !participants.contains(&id) {
+                    // Departed or finished: free the fabric slot
+                    // immediately so the lock-free server's done-count
+                    // can complete.
+                    drop(port);
+                    continue;
+                }
+                let cell = cells[id].take().expect("cell in place");
+                let engine = engine_bank[id].take().expect("engine in place");
+                let gate_opt = churn_active.then(|| gate.clone());
+                let (alpha, delay) = (cfg.alpha, cfg.delay);
+                let factor = delay.worker_factor(id, seed);
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("ec-worker-{id}"))
+                        .spawn(move || {
+                            run_ec_worker_segment(
+                                cell, engine, port, alpha, s, until, delay, factor, gate_opt,
+                            )
+                        })
+                        .expect("spawn ec-worker"),
+                );
             }
-            let cell = cells[id].take().expect("cell in place");
-            let engine = engine_bank[id].take().expect("engine in place");
-            let gate_opt = churn_active.then(|| gate.clone());
-            let (alpha, delay) = (cfg.alpha, cfg.delay);
-            let factor = delay.worker_factor(id, seed);
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("ec-worker-{id}"))
-                    .spawn(move || {
-                        run_ec_worker_segment(
-                            cell, engine, port, alpha, s, until, delay, factor, gate_opt,
-                        )
-                    })
-                    .expect("spawn ec-worker"),
-            );
-        }
-        for h in handles {
-            let (cell, engine) = h.join().expect("ec worker panicked");
-            let id = cell.span.id;
-            engine_bank[id] = Some(engine);
-            cells[id] = Some(cell);
+            for h in handles {
+                let (cell, engine) = h.join().expect("ec worker panicked");
+                let id = cell.span.id;
+                engine_bank[id] = Some(engine);
+                cells[id] = Some(cell);
+            }
+        } else {
+            // Block scheduling (DESIGN.md §9): B chains per OS thread,
+            // advanced by batched engine steps. Free non-participants'
+            // fabric slots first so the lock-free done-count completes.
+            for id in 0..total {
+                if !participants.contains(&id) {
+                    drop(seg_ports[id].take());
+                }
+            }
+            let mut handles = Vec::new();
+            for block in topo.blocks() {
+                let ids: Vec<usize> =
+                    block.filter(|id| participants.contains(id)).collect();
+                if ids.is_empty() {
+                    continue;
+                }
+                let block_cells: Vec<WorkerCell> =
+                    ids.iter().map(|&id| cells[id].take().expect("cell in place")).collect();
+                let block_ports: Vec<Box<dyn WorkerPort>> = ids
+                    .iter()
+                    .map(|&id| seg_ports[id].take().expect("one port per worker"))
+                    .collect();
+                // One engine drives the whole block's batched steps
+                // (engines hold only scratch — trajectory state lives in
+                // the cells); the block's other engines stay banked.
+                let engine = engine_bank[ids[0]].take().expect("engine in place");
+                let gate_opt = churn_active.then(|| gate.clone());
+                let (alpha, delay) = (cfg.alpha, cfg.delay);
+                let factors: Vec<f64> =
+                    ids.iter().map(|&id| delay.worker_factor(id, seed)).collect();
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("ec-block-{}", ids[0]))
+                        .spawn(move || {
+                            run_ec_block_segment(
+                                block_cells, engine, block_ports, alpha, s, until, delay,
+                                factors, gate_opt,
+                            )
+                        })
+                        .expect("spawn ec-block"),
+                );
+            }
+            for h in handles {
+                let (ret_cells, engine) = h.join().expect("ec block panicked");
+                let first = ret_cells[0].span.id;
+                engine_bank[first] = Some(engine);
+                for cell in ret_cells {
+                    let id = cell.span.id;
+                    cells[id] = Some(cell);
+                }
+            }
         }
         center = server.join().expect("ec server panicked");
         at = until;
@@ -1049,6 +1277,74 @@ mod tests {
         let b = run(mk(2));
         for (ca, cb) in a.chains.iter().zip(&b.chains) {
             assert_eq!(ca.samples.last().unwrap().1, cb.samples.last().unwrap().1);
+        }
+    }
+
+    #[test]
+    fn chain_blocks_match_unblocked_trajectories_bitwise() {
+        // Gaussian (no batched gradient override) + deterministic
+        // transport: packing 4 workers 2-per-thread cannot change a
+        // single bit — per-chain streams and the server's round-robin
+        // upload order are packing-invariant.
+        let base = coord(4, 1.0, 2, 200).run(3);
+        let blocked = EcCoordinator::new(
+            EcConfig {
+                workers: 4,
+                alpha: 1.0,
+                sync_every: 2,
+                steps: 200,
+                opts: RunOptions {
+                    log_every: 10,
+                    chains_per_worker: 2,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            SghmcParams { eps: 0.05, ..Default::default() },
+            Arc::new(GaussianPotential::fig1()),
+        )
+        .run(3);
+        assert_eq!(base.chains.len(), blocked.chains.len());
+        for (a, c) in base.chains.iter().zip(&blocked.chains) {
+            assert_eq!(a.samples.len(), c.samples.len());
+            for (i, (sa, sc)) in a.samples.iter().zip(&c.samples).enumerate() {
+                assert_eq!(sa.1, sc.1, "worker {} sample {i} diverged", a.worker);
+            }
+        }
+        assert_eq!(base.metrics.exchanges, blocked.metrics.exchanges);
+        assert_eq!(base.metrics.center_steps, blocked.metrics.center_steps);
+        assert_eq!(base.metrics.total_steps, blocked.metrics.total_steps);
+        let ca: Vec<&Vec<f32>> = base.center_trace.iter().map(|(_, c)| c).collect();
+        let cb: Vec<&Vec<f32>> = blocked.center_trace.iter().map(|(_, c)| c).collect();
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn one_thread_hosts_a_whole_fleet() {
+        // chains ≫ cores: K = 16 workers on a single block thread (plus
+        // the server), lock-free fabric — the scaling configuration the
+        // batched engine exists for.
+        let cfg = EcConfig {
+            workers: 16,
+            alpha: 1.0,
+            sync_every: 4,
+            steps: 120,
+            transport: TransportKind::LockFree,
+            opts: RunOptions { log_every: 20, chains_per_worker: 16, ..Default::default() },
+            ..Default::default()
+        };
+        let r = EcCoordinator::new(
+            cfg,
+            SghmcParams { eps: 0.05, ..Default::default() },
+            Arc::new(GaussianPotential::fig1()),
+        )
+        .run(19);
+        assert_eq!(r.chains.len(), 16);
+        assert_eq!(r.metrics.total_steps, 16 * 120);
+        assert_eq!(r.metrics.exchanges as usize, 16 * (120 / 4));
+        for c in &r.chains {
+            assert_eq!(c.samples.len(), 120);
+            assert!(c.samples.iter().all(|(_, t)| t.iter().all(|x| x.is_finite())));
         }
     }
 

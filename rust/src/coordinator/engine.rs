@@ -25,6 +25,18 @@ pub enum StepKind {
     Sgld,
 }
 
+/// One chain's slice of a batched step (DESIGN.md §9): its state, its
+/// own (possibly stale) center view for the elastic force, and its own
+/// RNG stream. Chains in one batch are independent — each draws its
+/// minibatch and noise from its own stream, so trajectories never depend
+/// on how chains are packed into batches.
+pub struct ChainSlot<'a> {
+    pub state: &'a mut ChainState,
+    /// `Some(view)` applies the Eq. (6) elastic force against this view.
+    pub center: Option<&'a [f32]>,
+    pub rng: &'a mut Pcg64,
+}
+
 /// One worker's stepping backend. `Send` (moved into the worker thread),
 /// not `Sync` (owns scratch buffers).
 pub trait WorkerEngine: Send {
@@ -40,6 +52,22 @@ pub trait WorkerEngine: Send {
         coupling: Option<(&[f32], f64)>,
         rng: &mut Pcg64,
     ) -> f64;
+
+    /// Advance B chains one step each on the calling thread, writing each
+    /// chain's Ũ into `us[..slots.len()]` (DESIGN.md §9). Either every
+    /// slot carries a center view (coupled step at strength `alpha`) or
+    /// none does.
+    ///
+    /// Default: loop over [`WorkerEngine::step`] — bit-identical to
+    /// unbatched stepping for any backend. [`NativeEngine`] overrides it
+    /// with one [`Potential::stoch_grad_batch`] evaluation feeding the
+    /// batched stepper.
+    fn step_batch(&mut self, slots: &mut [ChainSlot<'_>], alpha: f64, us: &mut [f64]) {
+        debug_assert!(us.len() >= slots.len());
+        for (slot, u) in slots.iter_mut().zip(us.iter_mut()) {
+            *u = self.step(slot.state, slot.center.map(|c| (c, alpha)), slot.rng);
+        }
+    }
 }
 
 /// Native backend: potential gradient + Rust stepper.
@@ -49,6 +77,9 @@ pub struct NativeEngine {
     sghmc: SghmcStepper,
     sgld: SgldStepper,
     grad: Vec<f32>,
+    /// Stacked B×dim gradient workspace for [`WorkerEngine::step_batch`];
+    /// grown lazily to the largest batch seen.
+    grad_batch: Vec<f32>,
 }
 
 impl NativeEngine {
@@ -61,6 +92,7 @@ impl NativeEngine {
             sghmc: SghmcStepper::new(params, dim).with_live_dim(live),
             sgld: SgldStepper::new(params, dim).with_live_dim(live),
             grad: vec![0.0; dim],
+            grad_batch: Vec::new(),
         }
     }
 }
@@ -86,6 +118,61 @@ impl WorkerEngine for NativeEngine {
             StepKind::Sgld => self.sgld.step(state, &self.grad, coupling, rng),
         }
         u
+    }
+
+    fn step_batch(&mut self, slots: &mut [ChainSlot<'_>], alpha: f64, us: &mut [f64]) {
+        let b = slots.len();
+        debug_assert!(us.len() >= b);
+        if b == 1 {
+            // Single chain: the scalar path, bit-identical to `step`.
+            let slot = &mut slots[0];
+            us[0] = self.step(slot.state, slot.center.map(|c| (c, alpha)), slot.rng);
+            return;
+        }
+        let dim = self.potential.padded_dim();
+        if self.grad_batch.len() < b * dim {
+            self.grad_batch.resize(b * dim, 0.0);
+        }
+        // One batched gradient evaluation over all chains' θ.
+        {
+            let mut thetas: Vec<&[f32]> = Vec::with_capacity(b);
+            let mut rngs: Vec<&mut Pcg64> = Vec::with_capacity(b);
+            for slot in slots.iter_mut() {
+                thetas.push(slot.state.theta.as_slice());
+                rngs.push(&mut *slot.rng);
+            }
+            self.potential.stoch_grad_batch(
+                &thetas,
+                &mut self.grad_batch[..b * dim],
+                &mut rngs,
+                &mut us[..b],
+            );
+        }
+        // One batched stepper pass: per-chain noise streams and views.
+        let mut states: Vec<&mut ChainState> = Vec::with_capacity(b);
+        let mut rngs: Vec<&mut Pcg64> = Vec::with_capacity(b);
+        let mut centers: Vec<&[f32]> = Vec::with_capacity(b);
+        for slot in slots.iter_mut() {
+            if let Some(c) = slot.center {
+                centers.push(c);
+            }
+            states.push(&mut *slot.state);
+            rngs.push(&mut *slot.rng);
+        }
+        // Hard contract (also release builds): silently stepping coupled
+        // chains without their elastic force would sample the wrong
+        // dynamics — reject mixed batches loudly instead.
+        assert!(
+            centers.is_empty() || centers.len() == b,
+            "mixed coupled/uncoupled chains in one batch"
+        );
+        let coupling: Option<(&[&[f32]], f64)> =
+            if centers.len() == b { Some((centers.as_slice(), alpha)) } else { None };
+        let grads = &self.grad_batch[..b * dim];
+        match self.kind {
+            StepKind::Sghmc => self.sghmc.step_batch(&mut states, grads, coupling, &mut rngs),
+            StepKind::Sgld => self.sgld.step_batch(&mut states, grads, coupling, &mut rngs),
+        }
     }
 }
 
@@ -154,5 +241,45 @@ mod tests {
         let mut rng = Pcg64::seeded(2);
         eng.step(&mut state, None, &mut rng);
         assert_eq!(state.p, vec![0.0, 0.0]); // SGLD never touches p
+    }
+
+    #[test]
+    fn step_batch_is_bitwise_unbatched_on_loop_potentials() {
+        // The Gaussian has no batched gradient override, so a B = 2
+        // batched step must reproduce two independent engines' steps
+        // bit-for-bit (same streams, same draws, same packing-invariant
+        // trajectories).
+        let pot = Arc::new(GaussianPotential::fig1());
+        let params = SghmcParams { eps: 0.05, ..Default::default() };
+        let mut e1 = NativeEngine::new(pot.clone(), params, StepKind::Sghmc);
+        let mut e2 = NativeEngine::new(pot.clone(), params, StepKind::Sghmc);
+        let mut s1 = ChainState::from_theta(vec![1.0, 1.0]);
+        let mut s2 = ChainState::from_theta(vec![-0.5, 2.0]);
+        let mut b1 = s1.clone();
+        let mut b2 = s2.clone();
+        let mut r1 = Pcg64::new(7, 1000);
+        let mut r2 = Pcg64::new(7, 1001);
+        let mut rb1 = r1.clone();
+        let mut rb2 = r2.clone();
+        let center = [0.25f32, -0.75];
+        let mut u_ref = [0.0f64; 2];
+        for _ in 0..5 {
+            u_ref[0] = e1.step(&mut s1, Some((&center, 0.8)), &mut r1);
+            u_ref[1] = e2.step(&mut s2, Some((&center, 0.8)), &mut r2);
+        }
+        let mut eb = NativeEngine::new(pot, params, StepKind::Sghmc);
+        let mut us = [0.0f64; 2];
+        for _ in 0..5 {
+            let mut slots = vec![
+                ChainSlot { state: &mut b1, center: Some(&center), rng: &mut rb1 },
+                ChainSlot { state: &mut b2, center: Some(&center), rng: &mut rb2 },
+            ];
+            eb.step_batch(&mut slots, 0.8, &mut us);
+        }
+        assert_eq!(s1, b1);
+        assert_eq!(s2, b2);
+        assert_eq!(u_ref, us);
+        assert_eq!(r1.snapshot(), rb1.snapshot());
+        assert_eq!(r2.snapshot(), rb2.snapshot());
     }
 }

@@ -11,7 +11,7 @@
 //! equivalence is testable stream-for-stream.
 
 use super::engine::WorkerEngine;
-use super::topology::{init_state, spawn_worker, DecoupledPolicy, Topology};
+use super::topology::{init_state, spawn_block, spawn_worker, DecoupledPolicy, Topology};
 use super::{DelayModel, RunOptions, RunResult};
 use crate::sink::{Frame, SinkHub};
 use std::time::Instant;
@@ -26,36 +26,78 @@ impl IndependentCoordinator {
         Self { steps, opts }
     }
 
-    /// Run each engine as its own OS thread; chains never interact.
+    /// Run the K chains; chains never interact. With
+    /// `chains_per_worker = 1` (the default) each engine gets its own OS
+    /// thread — the classic layout, unchanged bit-for-bit. With B > 1,
+    /// consecutive chains are packed B per thread and advanced through
+    /// one batched engine step per iteration (DESIGN.md §9), so K can
+    /// exceed the core count by orders of magnitude.
     pub fn run(&self, engines: Vec<Box<dyn WorkerEngine>>, seed: u64) -> RunResult {
         let start = Instant::now();
-        let topo = Topology::decoupled(engines.len());
+        let b = self.opts.chains_per_worker.max(1);
+        let topo = Topology::decoupled(engines.len()).with_chains_per_worker(b);
         let hub = SinkHub::new(&self.opts.sink).expect("sink init failed");
         hub.write_meta("independent", topo.workers, seed);
-        let handles: Vec<_> = engines
-            .into_iter()
-            .enumerate()
-            .map(|(w, engine)| {
-                let init = init_state(engine.dim(), engine.live_dim(), &self.opts, seed, w);
-                let sink = hub.frame_sink(Frame::Chain(w), self.opts.max_samples);
-                spawn_worker(
-                    format!("chain-{w}"),
-                    w,
+        let mut result = RunResult::default();
+        if b <= 1 {
+            let handles: Vec<_> = engines
+                .into_iter()
+                .enumerate()
+                .map(|(w, engine)| {
+                    let init = init_state(engine.dim(), engine.live_dim(), &self.opts, seed, w);
+                    let sink = hub.frame_sink(Frame::Chain(w), self.opts.max_samples);
+                    spawn_worker(
+                        format!("chain-{w}"),
+                        w,
+                        self.steps,
+                        init,
+                        Box::new(DecoupledPolicy::new(engine)),
+                        self.opts.clone(),
+                        DelayModel::none(),
+                        seed,
+                        start,
+                        sink,
+                    )
+                })
+                .collect();
+            for h in handles {
+                result.chains.push(h.join().expect("chain thread panicked"));
+            }
+        } else {
+            let mut engines = engines.into_iter();
+            let mut handles = Vec::new();
+            for block in topo.blocks() {
+                let chains: Vec<usize> = block.clone().collect();
+                // One engine drives the whole block's batched steps; the
+                // block's remaining engines (scratch only — trajectory
+                // state lives in the ChainStates) are dropped.
+                let mut block_engines: Vec<_> =
+                    block.clone().map(|_| engines.next().expect("engine per chain")).collect();
+                let engine = block_engines.swap_remove(0);
+                let inits: Vec<_> = chains
+                    .iter()
+                    .map(|&c| init_state(engine.dim(), engine.live_dim(), &self.opts, seed, c))
+                    .collect();
+                let sinks: Vec<_> = chains
+                    .iter()
+                    .map(|&c| hub.frame_sink(Frame::Chain(c), self.opts.max_samples))
+                    .collect();
+                handles.push(spawn_block(
+                    format!("chains-{}-{}", block.start, block.end - 1),
+                    chains,
                     self.steps,
-                    init,
-                    Box::new(DecoupledPolicy::new(engine)),
+                    inits,
+                    engine,
                     self.opts.clone(),
                     DelayModel::none(),
                     seed,
                     start,
-                    sink,
-                )
-            })
-            .collect();
-
-        let mut result = RunResult::default();
-        for h in handles {
-            result.chains.push(h.join().expect("chain thread panicked"));
+                    sinks,
+                ));
+            }
+            for h in handles {
+                result.chains.extend(h.join().expect("block thread panicked"));
+            }
         }
         result.chains.sort_by_key(|c| c.worker);
         result.elapsed = start.elapsed().as_secs_f64();
@@ -118,6 +160,25 @@ mod tests {
         for (c1, c2) in r1.chains.iter().zip(&r2.chains) {
             assert_eq!(c1.samples.last().unwrap().1, c2.samples.last().unwrap().1);
         }
+    }
+
+    #[test]
+    fn chain_blocks_do_not_change_trajectories() {
+        // The Gaussian has no batched gradient override, so packing the
+        // 6 chains 4-per-thread must reproduce the one-chain-per-thread
+        // run bit-for-bit (per-chain streams are packing-invariant).
+        let base = IndependentCoordinator::new(120, RunOptions::default()).run(engines(6), 21);
+        let opts = RunOptions { chains_per_worker: 4, ..Default::default() };
+        let blocked = IndependentCoordinator::new(120, opts).run(engines(6), 21);
+        assert_eq!(base.chains.len(), blocked.chains.len());
+        for (a, b) in base.chains.iter().zip(&blocked.chains) {
+            assert_eq!(a.worker, b.worker);
+            assert_eq!(a.samples.len(), b.samples.len());
+            for (sa, sb) in a.samples.iter().zip(&b.samples) {
+                assert_eq!(sa.1, sb.1, "worker {} diverged", a.worker);
+            }
+        }
+        assert_eq!(base.metrics.total_steps, blocked.metrics.total_steps);
     }
 
     #[test]

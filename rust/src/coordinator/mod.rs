@@ -40,7 +40,7 @@ pub mod topology;
 pub mod transport;
 
 pub use ec::{resume_ec, EcCheckpoint, EcConfig, EcCoordinator};
-pub use engine::{NativeEngine, StepKind, WorkerEngine};
+pub use engine::{ChainSlot, NativeEngine, StepKind, WorkerEngine};
 pub use independent::IndependentCoordinator;
 pub use metrics::Metrics;
 pub use naive::{NaiveConfig, NaiveCoordinator};
@@ -191,6 +191,13 @@ pub struct RunOptions {
     pub init_sigma: f32,
     /// Start every chain from the same draw (the paper's Fig. 1 setup).
     pub same_init: bool,
+    /// Chains per OS thread, B (DESIGN.md §9): the batched multi-chain
+    /// engine packs B chains onto one worker thread and evaluates their
+    /// gradients in one `stoch_grad_batch` call, so fleets far larger
+    /// than the core count stay efficient (K = 256 chains on 8 cores).
+    /// 1 (the default) is the classic one-chain-per-thread layout and
+    /// runs the exact pre-batching code path bit-for-bit.
+    pub chains_per_worker: usize,
     /// Where recorded samples go (DESIGN.md §7): in-memory (default),
     /// a JSONL stream, online diagnostics, or a tee of several.
     pub sink: crate::sink::SinkSpec,
@@ -206,6 +213,7 @@ impl Default for RunOptions {
             record_samples: true,
             init_sigma: 1.0,
             same_init: true,
+            chains_per_worker: 1,
             sink: crate::sink::SinkSpec::Memory,
         }
     }

@@ -13,6 +13,12 @@ use crate::sink::{Frame, SinkHub};
 use std::time::Instant;
 
 /// Run one chain for `steps` steps.
+///
+/// `opts.chains_per_worker` is accepted for config uniformity but a
+/// single chain is always its own block: B > 1 changes nothing here
+/// (the batched engine collapses to the scalar path at B = 1, see
+/// DESIGN.md §9), so the single-chain baseline stays bit-identical
+/// across every `--chains-per-worker` setting.
 pub fn run_single(
     engine: Box<dyn WorkerEngine>,
     steps: usize,

@@ -163,8 +163,9 @@ impl Membership {
 }
 
 /// The coordination graph of a scheme: which workers participate (and
-/// when — [`Membership`]), and — when a center variable exists — how its
-/// parameter vector is sharded.
+/// when — [`Membership`]), — when a center variable exists — how its
+/// parameter vector is sharded, and how chains are packed onto OS
+/// threads ([`Topology::chains_per_worker`], DESIGN.md §9).
 #[derive(Debug, Clone)]
 pub struct Topology {
     pub workers: usize,
@@ -172,12 +173,21 @@ pub struct Topology {
     pub center: Option<ShardLayout>,
     /// Planned join/leave/fail transitions (fixed fleet by default).
     pub membership: Membership,
+    /// Chains per OS thread, B (≥ 1): consecutive chain ids are grouped
+    /// into blocks of B, each block advanced by one batched engine step
+    /// per iteration. B = 1 is the classic one-chain-per-thread layout.
+    pub chains_per_worker: usize,
 }
 
 impl Topology {
     /// K workers, no center (single / independent chains).
     pub fn decoupled(workers: usize) -> Topology {
-        Topology { workers, center: None, membership: Membership::fixed(workers, usize::MAX) }
+        Topology {
+            workers,
+            center: None,
+            membership: Membership::fixed(workers, usize::MAX),
+            chains_per_worker: 1,
+        }
     }
 
     /// K workers elastically coupled to a sharded center (EC), or served
@@ -187,6 +197,7 @@ impl Topology {
             workers,
             center: Some(ShardLayout::contiguous(dim, shards)),
             membership: Membership::fixed(workers, usize::MAX),
+            chains_per_worker: 1,
         }
     }
 
@@ -197,7 +208,28 @@ impl Topology {
             workers: membership.total(),
             center: Some(ShardLayout::contiguous(dim, shards)),
             membership,
+            chains_per_worker: 1,
         }
+    }
+
+    /// Pack B chains per OS thread (clamped to ≥ 1).
+    pub fn with_chains_per_worker(mut self, b: usize) -> Topology {
+        self.chains_per_worker = b.max(1);
+        self
+    }
+
+    /// Contiguous chain-id blocks, one per OS thread: `workers` ids
+    /// chunked by `chains_per_worker` (the last block may be short).
+    pub fn blocks(&self) -> Vec<std::ops::Range<usize>> {
+        let b = self.chains_per_worker.max(1);
+        let mut out = Vec::with_capacity(self.workers.div_ceil(b));
+        let mut at = 0;
+        while at < self.workers {
+            let end = (at + b).min(self.workers);
+            out.push(at..end);
+            at = end;
+        }
+        out
     }
 
     pub fn layout(&self) -> &ShardLayout {
@@ -355,6 +387,82 @@ pub(crate) fn run_worker_loop(
     rec.finish()
 }
 
+/// The block worker loop (DESIGN.md §9): B decoupled chains advanced in
+/// lock-step on one OS thread, one batched engine step per iteration.
+///
+/// Per-chain stream layout is identical to [`run_worker_loop`]'s —
+/// dynamics stream `1000 + chain`, jitter stream `2000 + chain`, and the
+/// same step → record → delay ordering — so a chain's trajectory does
+/// not depend on how chains are packed into blocks (bit-identical for
+/// potentials without a batched override; identical up to GEMM summation
+/// order otherwise).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_block_loop(
+    chains: Vec<usize>,
+    steps: usize,
+    inits: Vec<ChainState>,
+    mut engine: Box<dyn super::engine::WorkerEngine>,
+    opts: RunOptions,
+    delay: DelayModel,
+    seed: u64,
+    start: Instant,
+    sinks: Vec<Box<dyn SampleSink>>,
+) -> Vec<ChainTrace> {
+    use super::engine::ChainSlot;
+    let b = chains.len();
+    debug_assert_eq!(inits.len(), b);
+    debug_assert_eq!(sinks.len(), b);
+    let mut states = inits;
+    let mut rngs: Vec<Pcg64> =
+        chains.iter().map(|&c| Pcg64::new(seed, 1000 + c as u64)).collect();
+    let mut jitters: Vec<Pcg64> =
+        chains.iter().map(|&c| Pcg64::new(seed ^ 0x9e37, 2000 + c as u64)).collect();
+    let factors: Vec<f64> = chains.iter().map(|&c| delay.worker_factor(c, seed)).collect();
+    let mut recs: Vec<Recorder> = chains
+        .iter()
+        .zip(sinks)
+        .map(|(&c, sink)| Recorder::new(c, opts.clone(), start, sink))
+        .collect();
+    let mut us = vec![0.0f64; b];
+    for t in 0..steps {
+        {
+            let mut slots: Vec<ChainSlot> = states
+                .iter_mut()
+                .zip(rngs.iter_mut())
+                .map(|(state, rng)| ChainSlot { state, center: None, rng })
+                .collect();
+            engine.step_batch(&mut slots, 0.0, &mut us);
+        }
+        for i in 0..b {
+            recs[i].observe(t, us[i], &states[i].theta);
+            delay.step_sleep(factors[i], &mut jitters[i]);
+        }
+    }
+    recs.into_iter().map(Recorder::finish).collect()
+}
+
+/// Spawn [`run_block_loop`] on its own OS thread.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn spawn_block(
+    name: String,
+    chains: Vec<usize>,
+    steps: usize,
+    inits: Vec<ChainState>,
+    engine: Box<dyn super::engine::WorkerEngine>,
+    opts: RunOptions,
+    delay: DelayModel,
+    seed: u64,
+    start: Instant,
+    sinks: Vec<Box<dyn SampleSink>>,
+) -> std::thread::JoinHandle<Vec<ChainTrace>> {
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            run_block_loop(chains, steps, inits, engine, opts, delay, seed, start, sinks)
+        })
+        .expect("spawn block thread")
+}
+
 /// Spawn [`run_worker_loop`] on its own OS thread.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn spawn_worker(
@@ -481,6 +589,65 @@ mod tests {
         assert_eq!(trace.u_trace.len(), 10);
         assert_eq!(trace.samples.len(), 16); // steps 20, 25, ..., 95
         assert_eq!(trace.dropped, 0);
+    }
+
+    #[test]
+    fn blocks_chunk_chains_contiguously() {
+        let t = Topology::decoupled(10).with_chains_per_worker(4);
+        assert_eq!(t.chains_per_worker, 4);
+        assert_eq!(t.blocks(), vec![0..4, 4..8, 8..10]);
+        let t1 = Topology::decoupled(3);
+        assert_eq!(t1.blocks(), vec![0..1, 1..2, 2..3]);
+        // Degenerate B clamps to 1.
+        let t0 = Topology::decoupled(2).with_chains_per_worker(0);
+        assert_eq!(t0.chains_per_worker, 1);
+        assert_eq!(t0.blocks().len(), 2);
+    }
+
+    #[test]
+    fn block_loop_of_one_matches_worker_loop_bitwise() {
+        // A block of one chain runs the batched machinery at B = 1,
+        // which must reproduce the classic worker loop bit-for-bit.
+        let mk_engine = || {
+            Box::new(NativeEngine::new(
+                Arc::new(GaussianPotential::fig1()),
+                SghmcParams { eps: 0.05, ..Default::default() },
+                StepKind::Sghmc,
+            ))
+        };
+        let opts = RunOptions { log_every: 10, thin: 5, burn_in: 20, ..Default::default() };
+        let cap = opts.max_samples;
+        let reference = run_worker_loop(
+            0,
+            100,
+            init_state(2, 2, &opts, 7, 0),
+            Box::new(DecoupledPolicy::new(mk_engine())),
+            opts.clone(),
+            DelayModel::none(),
+            7,
+            Instant::now(),
+            Box::new(crate::sink::MemorySink::new(cap)),
+        );
+        let mut blocked = run_block_loop(
+            vec![0],
+            100,
+            vec![init_state(2, 2, &opts, 7, 0)],
+            mk_engine(),
+            opts,
+            DelayModel::none(),
+            7,
+            Instant::now(),
+            vec![Box::new(crate::sink::MemorySink::new(cap))],
+        );
+        assert_eq!(blocked.len(), 1);
+        let blocked = blocked.remove(0);
+        assert_eq!(reference.samples.len(), blocked.samples.len());
+        for (a, b) in reference.samples.iter().zip(&blocked.samples) {
+            assert_eq!(a.1, b.1);
+        }
+        let ua: Vec<(usize, f64)> = reference.u_trace.iter().map(|p| (p.step, p.u)).collect();
+        let ub: Vec<(usize, f64)> = blocked.u_trace.iter().map(|p| (p.step, p.u)).collect();
+        assert_eq!(ua, ub);
     }
 
     #[test]

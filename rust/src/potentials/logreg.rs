@@ -110,6 +110,79 @@ impl Potential for LogRegPotential {
         u
     }
 
+    /// Batched path (DESIGN.md §9): stack B chains' minibatches along the
+    /// m-dimension and run the softmax forward as one grouped GEMM; the
+    /// dW reductions stay per chain (independent sums) on the tiled
+    /// kernel. B = 1 dispatches to the scalar path bit-exactly.
+    fn stoch_grad_batch(
+        &self,
+        thetas: &[&[f32]],
+        grads: &mut [f32],
+        rngs: &mut [&mut Pcg64],
+        us: &mut [f64],
+    ) {
+        let bsz = thetas.len();
+        debug_assert_eq!(grads.len(), bsz * self.n);
+        if bsz <= 1 {
+            if bsz == 1 {
+                us[0] = self.stoch_grad(thetas[0], grads, rngs[0]);
+            }
+            return;
+        }
+        let d = self.train.d;
+        let c = self.train.classes;
+        let m = self.batch;
+        let big = bsz * m;
+        let scale = self.train.n as f64 / m as f64;
+
+        // Each chain draws its own minibatch from its own stream.
+        let mut x = vec![0.0f32; big * d];
+        let mut y = vec![0i32; big];
+        for (b, rng) in rngs.iter_mut().enumerate() {
+            self.train.sample_batch(
+                m,
+                rng,
+                &mut x[b * m * d..(b + 1) * m * d],
+                &mut y[b * m..(b + 1) * m],
+            );
+        }
+
+        // Forward: one grouped GEMM, m = B·batch.
+        let ws: Vec<&[f32]> = thetas.iter().map(|t| &t[..d * c]).collect();
+        let mut logits = vec![0.0f32; big * c];
+        ops::gemm_nn_grouped(&x, &ws, m, d, c, &mut logits);
+        for (b, t) in thetas.iter().enumerate() {
+            ops::add_bias(&mut logits[b * m * c..(b + 1) * m * c], &t[d * c..d * c + c], m, c);
+        }
+
+        // Loss + dlogits per chain (NLL must stay per chain).
+        let mut dz = vec![0.0f32; big * c];
+        for b in 0..bsz {
+            let nll = ops::softmax_xent(
+                &logits[b * m * c..(b + 1) * m * c],
+                &y[b * m..(b + 1) * m],
+                m,
+                c,
+                &mut dz[b * m * c..(b + 1) * m * c],
+            );
+            us[b] = scale * nll;
+        }
+        let s = scale as f32;
+        for v in dz.iter_mut() {
+            *v *= s;
+        }
+
+        // Backward: per-chain dW/db reductions, then the prior.
+        grads.fill(0.0);
+        for (b, g) in grads.chunks_mut(self.n).enumerate() {
+            let x_b = &x[b * m * d..(b + 1) * m * d];
+            let dz_b = &dz[b * m * c..(b + 1) * m * c];
+            ops::gemm_tn_tiled(x_b, dz_b, m, d, c, &mut g[..d * c]);
+            ops::bias_grad(dz_b, m, c, &mut g[d * c..d * c + c]);
+            us[b] += self.add_prior(thetas[b], g);
+        }
+    }
+
     fn eval_nll_acc(&self, theta: &[f32]) -> Option<(f64, f64)> {
         let m = self.test.n;
         let logits = self.logits(theta, &self.test.x, m);

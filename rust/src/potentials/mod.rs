@@ -41,6 +41,38 @@ pub trait Potential: Send + Sync {
     /// own independent data stream.
     fn stoch_grad(&self, theta: &[f32], grad: &mut [f32], rng: &mut Pcg64) -> f64;
 
+    /// Batched stochastic gradients for B chains on one thread
+    /// (DESIGN.md §9): evaluate ∇Ũ(θ_b) for every chain in one call.
+    ///
+    /// * `thetas[b]` — chain b's parameter buffer (`padded_dim` long);
+    /// * `grads` — B stacked `padded_dim` slices, overwritten;
+    /// * `rngs[b]` — chain b's own stream: each chain draws exactly the
+    ///   minibatch it would have drawn unbatched, so per-chain data
+    ///   streams do not depend on the batch packing;
+    /// * `us[b]` — receives chain b's Ũ.
+    ///
+    /// The default loops over [`Potential::stoch_grad`] and is therefore
+    /// bit-identical to unbatched evaluation for every B. Data-backed
+    /// potentials (`logreg`, `nn::mlp`, `nn::resnet`) override it with
+    /// grouped-GEMM implementations that are bit-identical at B = 1
+    /// (single-group dispatch) and agree to rounding at B > 1.
+    fn stoch_grad_batch(
+        &self,
+        thetas: &[&[f32]],
+        grads: &mut [f32],
+        rngs: &mut [&mut Pcg64],
+        us: &mut [f64],
+    ) {
+        let b = thetas.len();
+        debug_assert_eq!(rngs.len(), b);
+        debug_assert_eq!(us.len(), b);
+        debug_assert_eq!(grads.len(), b * self.padded_dim());
+        let dim = self.padded_dim();
+        for (i, (&theta, rng)) in thetas.iter().zip(rngs.iter_mut()).enumerate() {
+            us[i] = self.stoch_grad(theta, &mut grads[i * dim..(i + 1) * dim], rng);
+        }
+    }
+
     /// Exact full-data gradient ∇U(θ); returns U. Used by HMC and by
     /// evaluation code.
     fn full_grad(&self, theta: &[f32], grad: &mut [f32]) -> f64;
@@ -72,5 +104,37 @@ mod tests {
         let mut grad = [0.0f32; 2];
         let u = p.full_grad(&theta, &mut grad);
         assert!((p.full_potential(&theta) - u).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_stoch_grad_batch_is_bitwise_the_unbatched_loop() {
+        let p = GaussianPotential::fig1();
+        let thetas_data = [vec![1.0f32, 0.5], vec![-0.3, 2.0], vec![0.0, 0.0]];
+        let mut rngs_owned: Vec<Pcg64> =
+            (0..3).map(|w| Pcg64::new(9, 1000 + w as u64)).collect();
+        let mut rngs_ref = rngs_owned.clone();
+
+        // Reference: the unbatched loop on cloned streams.
+        let mut g_ref = vec![0.0f32; 6];
+        let mut u_ref = [0.0f64; 3];
+        for i in 0..3 {
+            u_ref[i] =
+                p.stoch_grad(&thetas_data[i], &mut g_ref[i * 2..(i + 1) * 2], &mut rngs_ref[i]);
+        }
+
+        let thetas: Vec<&[f32]> = thetas_data.iter().map(|t| t.as_slice()).collect();
+        let mut rngs: Vec<&mut Pcg64> = rngs_owned.iter_mut().collect();
+        let mut grads = vec![0.0f32; 6];
+        let mut us = [0.0f64; 3];
+        p.stoch_grad_batch(&thetas, &mut grads, &mut rngs, &mut us);
+        assert_eq!(
+            g_ref.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            grads.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(u_ref.map(f64::to_bits), us.map(f64::to_bits));
+        // The streams advanced identically.
+        for (a, b) in rngs_owned.iter().zip(&rngs_ref) {
+            assert_eq!(a.snapshot(), b.snapshot());
+        }
     }
 }

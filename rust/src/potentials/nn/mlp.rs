@@ -217,6 +217,107 @@ impl Potential for NativeMlp {
         u
     }
 
+    /// Batched path (DESIGN.md §9): B chains' minibatches are stacked
+    /// along the m-dimension (m = B·batch), the forward and dH backward
+    /// run as grouped GEMMs over per-chain weight slices, and the dW/db
+    /// reductions stay per chain. B = 1 dispatches to the scalar path
+    /// bit-exactly; each chain draws its minibatch from its own stream
+    /// either way.
+    fn stoch_grad_batch(
+        &self,
+        thetas: &[&[f32]],
+        grads: &mut [f32],
+        rngs: &mut [&mut Pcg64],
+        us: &mut [f64],
+    ) {
+        let bsz = thetas.len();
+        debug_assert_eq!(grads.len(), bsz * self.padded);
+        if bsz <= 1 {
+            if bsz == 1 {
+                us[0] = self.stoch_grad(thetas[0], grads, rngs[0]);
+            }
+            return;
+        }
+        let layers = self.shapes.len();
+        let classes = *self.dims.last().unwrap();
+        let m = self.batch;
+        let big = bsz * m;
+        let d = self.train.d;
+        let scale = self.n_total as f64 / m as f64;
+
+        let mut x = vec![0.0f32; big * d];
+        let mut y = vec![0i32; big];
+        for (b, rng) in rngs.iter_mut().enumerate() {
+            self.train.sample_batch(
+                m,
+                rng,
+                &mut x[b * m * d..(b + 1) * m * d],
+                &mut y[b * m..(b + 1) * m],
+            );
+        }
+
+        // Forward with stacked activations: acts[l] is (B·m, dims[l+1]).
+        let mut acts: Vec<Vec<f32>> = vec![Vec::new(); layers];
+        for l in 0..layers {
+            let (in_d, out_d) = (self.dims[l], self.dims[l + 1]);
+            let ws: Vec<&[f32]> = thetas.iter().map(|t| self.layer(t, l).0).collect();
+            let (prev, rest) = acts.split_at_mut(l);
+            let input: &[f32] = if l == 0 { &x } else { &prev[l - 1] };
+            let cur = &mut rest[0];
+            cur.resize(big * out_d, 0.0);
+            ops::gemm_nn_grouped(input, &ws, m, in_d, out_d, cur);
+            for (b, t) in thetas.iter().enumerate() {
+                let bias = self.layer(t, l).1;
+                ops::add_bias(&mut cur[b * m * out_d..(b + 1) * m * out_d], bias, m, out_d);
+            }
+            if l + 1 < layers {
+                ops::relu(cur);
+            }
+        }
+
+        // Loss + dlogits per chain (Ũ must stay per chain).
+        let mut dz_cur = vec![0.0f32; big * classes];
+        for b in 0..bsz {
+            let nll = ops::softmax_xent(
+                &acts[layers - 1][b * m * classes..(b + 1) * m * classes],
+                &y[b * m..(b + 1) * m],
+                m,
+                classes,
+                &mut dz_cur[b * m * classes..(b + 1) * m * classes],
+            );
+            us[b] = scale * nll;
+        }
+        let s = scale as f32;
+        for v in dz_cur.iter_mut() {
+            *v *= s;
+        }
+
+        // Backward through the chain; dW/db per chain, dH grouped.
+        grads.fill(0.0);
+        for l in (0..layers).rev() {
+            let (in_d, out_d) = (self.dims[l], self.dims[l + 1]);
+            let (w_off, b_off) = self.offsets[l];
+            let input: &[f32] = if l == 0 { &x } else { &acts[l - 1] };
+            for (b, g) in grads.chunks_mut(self.padded).enumerate() {
+                let in_b = &input[b * m * in_d..(b + 1) * m * in_d];
+                let dz_b = &dz_cur[b * m * out_d..(b + 1) * m * out_d];
+                let dw = &mut g[w_off..w_off + in_d * out_d];
+                ops::gemm_tn_tiled(in_b, dz_b, m, in_d, out_d, dw);
+                ops::bias_grad(dz_b, m, out_d, &mut g[b_off..b_off + out_d]);
+            }
+            if l > 0 {
+                let ws: Vec<&[f32]> = thetas.iter().map(|t| self.layer(t, l).0).collect();
+                let mut dh = vec![0.0f32; big * in_d];
+                ops::gemm_nt_grouped(&dz_cur, &ws, m, out_d, in_d, &mut dh);
+                ops::relu_backward(&mut dh, &acts[l - 1]);
+                dz_cur = dh;
+            }
+        }
+        for (b, g) in grads.chunks_mut(self.padded).enumerate() {
+            us[b] += self.add_prior(thetas[b], g);
+        }
+    }
+
     fn full_grad(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
         grad.fill(0.0);
         let chunk = 256.min(self.train.n);

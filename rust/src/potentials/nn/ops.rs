@@ -9,6 +9,27 @@
 //!
 //! Loop orders are chosen for unit-stride inner loops so LLVM
 //! auto-vectorizes; see EXPERIMENTS.md §Perf for measured throughput.
+//!
+//! The `*_grouped` / `*_tiled` variants below serve the batched
+//! multi-chain gradient engine (DESIGN.md §9): B chains' activations are
+//! stacked along the m-dimension (m grows from `batch` to `B·batch`) and
+//! one call covers every chain, each row-block multiplying against its
+//! own chain's weight slice — a strided-batched GEMM. The tiled kernels
+//! hold an MR×NR accumulator block in registers, so they are
+//! substantially faster than the axpy-style loops above but sum in a
+//! different order; group count 1 therefore delegates to the scalar
+//! kernels, which is what makes the batched gradient path bit-identical
+//! to the unbatched one at B = 1.
+
+/// True when every element is finite — the precondition for the sparse
+/// zero-skip fast path in [`gemm_nn`]/[`gemm_tn`]. Skipping a zero `a`
+/// element is only sound when the skipped B row is all-finite: IEEE 754
+/// says `0.0 × ±inf` and `0.0 × NaN` are NaN, so the skip would silently
+/// launder a gradient blow-up into a finite result.
+#[inline]
+fn all_finite(xs: &[f32]) -> bool {
+    xs.iter().all(|x| x.is_finite())
+}
 
 /// C(m,n) = A(m,k) · B(k,n); C is overwritten.
 pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
@@ -16,12 +37,16 @@ pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
     c.fill(0.0);
+    // ReLU activations are ~50% zero, so skipping zero `a` elements pays —
+    // but only gate it on an all-finite B operand (O(k·n) check against
+    // O(m·k·n) work): a non-finite weight must poison C, not vanish.
+    let may_skip = all_finite(b);
     for i in 0..m {
         let a_row = &a[i * k..(i + 1) * k];
         let c_row = &mut c[i * n..(i + 1) * n];
         for (l, &a_il) in a_row.iter().enumerate() {
-            if a_il == 0.0 {
-                continue; // ReLU activations are ~50% zero; skip the row.
+            if a_il == 0.0 && may_skip {
+                continue;
             }
             let b_row = &b[l * n..(l + 1) * n];
             for j in 0..n {
@@ -37,11 +62,13 @@ pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(c.len(), k * n);
     c.fill(0.0);
+    // Same zero-skip gating as `gemm_nn`: see `all_finite`.
+    let may_skip = all_finite(b);
     for i in 0..m {
         let a_row = &a[i * k..(i + 1) * k];
         let b_row = &b[i * n..(i + 1) * n];
         for (l, &a_il) in a_row.iter().enumerate() {
-            if a_il == 0.0 {
+            if a_il == 0.0 && may_skip {
                 continue;
             }
             let c_row = &mut c[l * n..(l + 1) * n];
@@ -68,6 +95,199 @@ pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]
             }
             c_row[l] = acc;
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Register-tiled kernels (the batched multi-chain path, DESIGN.md §9)
+// ---------------------------------------------------------------------
+
+/// Micro-tile rows held in registers by the tiled kernels.
+const MR: usize = 4;
+/// Micro-tile columns held in registers by the tiled kernels (two
+/// 8-lane vectors per row on AVX2).
+const NR: usize = 16;
+
+/// Tiled C(m,n) = A(m,k) · B(k,n); C is overwritten.
+///
+/// An MR×NR accumulator block lives in registers across the whole k
+/// reduction, so C traffic is one store per output element instead of
+/// one load+store per (element, k) pair — the throughput kernel behind
+/// [`gemm_nn_grouped`]. Summation order differs from [`gemm_nn`]
+/// (per-tile k-major instead of row-major axpy), so results agree to
+/// rounding, not bitwise.
+pub fn gemm_nn_tiled(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let mut i0 = 0;
+    while i0 < m {
+        let mr = MR.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            let mut acc = [[0.0f32; NR]; MR];
+            if mr == MR && nr == NR {
+                // Full tile: constant bounds so the accumulator block
+                // stays in registers and the jj loop vectorizes.
+                for l in 0..k {
+                    let b_row = &b[l * n + j0..l * n + j0 + NR];
+                    for (ii, acc_row) in acc.iter_mut().enumerate() {
+                        let av = a[(i0 + ii) * k + l];
+                        for jj in 0..NR {
+                            acc_row[jj] += av * b_row[jj];
+                        }
+                    }
+                }
+            } else {
+                // Edge tile: same order, runtime bounds.
+                for l in 0..k {
+                    let b_row = &b[l * n + j0..l * n + j0 + nr];
+                    for (ii, acc_row) in acc.iter_mut().enumerate().take(mr) {
+                        let av = a[(i0 + ii) * k + l];
+                        for jj in 0..nr {
+                            acc_row[jj] += av * b_row[jj];
+                        }
+                    }
+                }
+            }
+            for ii in 0..mr {
+                let at = (i0 + ii) * n + j0;
+                c[at..at + nr].copy_from_slice(&acc[ii][..nr]);
+            }
+            j0 += nr;
+        }
+        i0 += mr;
+    }
+}
+
+/// Tiled C(k,n) = A(m,k)ᵀ · B(m,n); C is overwritten. (dW = hᵀ · dZ)
+///
+/// Same register-tile structure as [`gemm_nn_tiled`] with the reduction
+/// running over m; used per chain for the weight gradients of the
+/// batched path (each chain's dW is an independent reduction, so chains
+/// cannot share this call's m-dimension).
+pub fn gemm_tn_tiled(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    let mut l0 = 0;
+    while l0 < k {
+        let lr = MR.min(k - l0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            let mut acc = [[0.0f32; NR]; MR];
+            if lr == MR && nr == NR {
+                for i in 0..m {
+                    let b_row = &b[i * n + j0..i * n + j0 + NR];
+                    for (ll, acc_row) in acc.iter_mut().enumerate() {
+                        let av = a[i * k + l0 + ll];
+                        for jj in 0..NR {
+                            acc_row[jj] += av * b_row[jj];
+                        }
+                    }
+                }
+            } else {
+                for i in 0..m {
+                    let b_row = &b[i * n + j0..i * n + j0 + nr];
+                    for (ll, acc_row) in acc.iter_mut().enumerate().take(lr) {
+                        let av = a[i * k + l0 + ll];
+                        for jj in 0..nr {
+                            acc_row[jj] += av * b_row[jj];
+                        }
+                    }
+                }
+            }
+            for ll in 0..lr {
+                let at = (l0 + ll) * n + j0;
+                c[at..at + nr].copy_from_slice(&acc[ll][..nr]);
+            }
+            j0 += nr;
+        }
+        l0 += lr;
+    }
+}
+
+/// Lane width of the [`gemm_nt_tiled`] dot-product accumulators.
+const LANES: usize = 8;
+
+/// Tiled C(m,k) = A(m,n) · B(k,n)ᵀ; C is overwritten. (dH = dZ · Wᵀ)
+///
+/// Each output element is a length-n dot product; eight partial sums per
+/// dot let LLVM vectorize the reduction the scalar [`gemm_nt`] cannot
+/// (f32 addition is not reassociable without explicit lanes).
+pub fn gemm_nt_tiled(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    let chunks = n / LANES;
+    for i in 0..m {
+        let a_row = &a[i * n..(i + 1) * n];
+        let c_row = &mut c[i * k..(i + 1) * k];
+        for l in 0..k {
+            let b_row = &b[l * n..(l + 1) * n];
+            let mut lanes = [0.0f32; LANES];
+            for ch in 0..chunks {
+                let at = ch * LANES;
+                for (q, lane) in lanes.iter_mut().enumerate() {
+                    *lane += a_row[at + q] * b_row[at + q];
+                }
+            }
+            let mut acc = 0.0f32;
+            for lane in lanes {
+                acc += lane;
+            }
+            for j in chunks * LANES..n {
+                acc += a_row[j] * b_row[j];
+            }
+            c_row[l] = acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Grouped (strided-batched) kernels — one call per layer for B chains
+// ---------------------------------------------------------------------
+
+/// Grouped C_g = A_g · B_g over `bs.len()` independent problems sharing
+/// one stacked m-dimension: `a` is (G·m, k) row-major with group g
+/// occupying rows [g·m, (g+1)·m), `bs[g]` is that group's (k, n) weight
+/// slice, and `c` is (G·m, n). This is the forward-pass shape of the
+/// batched multi-chain gradient engine (DESIGN.md §9): the m-dimension
+/// grows from `batch` to `B·batch` while each row-block multiplies its
+/// own chain's weights. A single group delegates to [`gemm_nn`]
+/// bit-exactly; multiple groups run [`gemm_nn_tiled`] per group.
+pub fn gemm_nn_grouped(a: &[f32], bs: &[&[f32]], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    let groups = bs.len();
+    debug_assert_eq!(a.len(), groups * m * k);
+    debug_assert_eq!(c.len(), groups * m * n);
+    if groups == 1 {
+        gemm_nn(a, bs[0], m, k, n, c);
+        return;
+    }
+    for (g, &b) in bs.iter().enumerate() {
+        let a_g = &a[g * m * k..(g + 1) * m * k];
+        let c_g = &mut c[g * m * n..(g + 1) * m * n];
+        gemm_nn_tiled(a_g, b, m, k, n, c_g);
+    }
+}
+
+/// Grouped C_g = A_g · B_gᵀ over stacked rows (the dH backward shape):
+/// `a` is (G·m, n) stacked, `bs[g]` is (k, n), `c` is (G·m, k). One
+/// group delegates to [`gemm_nt`] bit-exactly.
+pub fn gemm_nt_grouped(a: &[f32], bs: &[&[f32]], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    let groups = bs.len();
+    debug_assert_eq!(a.len(), groups * m * n);
+    debug_assert_eq!(c.len(), groups * m * k);
+    if groups == 1 {
+        gemm_nt(a, bs[0], m, n, k, c);
+        return;
+    }
+    for (g, &b) in bs.iter().enumerate() {
+        let a_g = &a[g * m * n..(g + 1) * m * n];
+        let c_g = &mut c[g * m * k..(g + 1) * m * k];
+        gemm_nt_tiled(a_g, b, m, n, k, c_g);
     }
 }
 
@@ -242,6 +462,164 @@ mod tests {
         for (x, y) in c_nn.iter().zip(&c_nt) {
             assert!((x - y).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn zero_skip_propagates_nonfinite_b_operand() {
+        // Regression for the zero-skip hazard: a zero activation times a
+        // NaN/Inf weight is NaN, and the old unconditional skip silently
+        // dropped it, masking gradient blow-ups. With the gated skip the
+        // non-finite contribution must reach C.
+        let a = [0.0f32, 1.0, 0.0, 2.0]; // (2,2) with zeros in column 0
+        let b = [f32::NAN, 1.0, 3.0, 4.0];
+        let mut c = [0.0f32; 4];
+        gemm_nn(&a, &b, 2, 2, 2, &mut c);
+        // Row 0: 0*NaN + 1*3 → NaN in column 0; row 1 likewise.
+        assert!(c[0].is_nan(), "c={c:?}");
+        assert!(c[2].is_nan(), "c={c:?}");
+        let b_inf = [f32::INFINITY, 1.0, 3.0, 4.0];
+        let mut c2 = [0.0f32; 4];
+        gemm_nn(&a, &b_inf, 2, 2, 2, &mut c2);
+        assert!(c2[0].is_nan(), "0*inf must be NaN: {c2:?}");
+
+        let mut ct = [0.0f32; 4];
+        gemm_tn(&a, &b, 2, 2, 2, &mut ct);
+        // Aᵀ row 0 = [0, 0]: both products hit the NaN row of B.
+        assert!(ct[0].is_nan() && ct[1].is_nan(), "ct={ct:?}");
+
+        // Finite operands keep the exact pre-fix results (skip taken).
+        let bf = [5.0f32, 6.0, 7.0, 8.0];
+        let mut cf = [0.0f32; 4];
+        gemm_nn(&a, &bf, 2, 2, 2, &mut cf);
+        assert_eq!(cf, [7.0, 8.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn tiled_kernels_match_scalar_kernels() {
+        // Every tiled kernel agrees with its scalar twin to rounding on
+        // shapes that exercise full tiles and ragged edges.
+        let mut rng = crate::math::rng::Pcg64::seeded(21);
+        let shapes = [(1usize, 1usize, 1usize), (3, 5, 7), (8, 16, 32), (13, 9, 17), (32, 33, 10)];
+        for &(m, k, n) in &shapes {
+            let mut a = vec![0.0f32; m * k];
+            let mut b = vec![0.0f32; k * n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut b);
+            let mut c_ref = vec![0.0f32; m * n];
+            gemm_nn(&a, &b, m, k, n, &mut c_ref);
+            let mut c_tiled = vec![0.0f32; m * n];
+            gemm_nn_tiled(&a, &b, m, k, n, &mut c_tiled);
+            for (x, y) in c_ref.iter().zip(&c_tiled) {
+                assert!((x - y).abs() < 1e-4, "nn ({m},{k},{n}): {x} vs {y}");
+            }
+
+            // tn: A is (m2, k2) with reduction over m2.
+            let (m2, k2, n2) = (n, m, k);
+            let mut a2 = vec![0.0f32; m2 * k2];
+            let mut b2 = vec![0.0f32; m2 * n2];
+            rng.fill_normal(&mut a2);
+            rng.fill_normal(&mut b2);
+            let mut c_ref = vec![0.0f32; k2 * n2];
+            gemm_tn(&a2, &b2, m2, k2, n2, &mut c_ref);
+            let mut c_tiled = vec![0.0f32; k2 * n2];
+            gemm_tn_tiled(&a2, &b2, m2, k2, n2, &mut c_tiled);
+            for (x, y) in c_ref.iter().zip(&c_tiled) {
+                assert!((x - y).abs() < 1e-4, "tn ({m2},{k2},{n2}): {x} vs {y}");
+            }
+
+            // nt: C (m, k3) = A (m, n) · B (k3, n)ᵀ.
+            let k3 = k;
+            let mut b3 = vec![0.0f32; k3 * n];
+            rng.fill_normal(&mut b3);
+            let mut a3 = vec![0.0f32; m * n];
+            rng.fill_normal(&mut a3);
+            let mut c_ref = vec![0.0f32; m * k3];
+            gemm_nt(&a3, &b3, m, n, k3, &mut c_ref);
+            let mut c_tiled = vec![0.0f32; m * k3];
+            gemm_nt_tiled(&a3, &b3, m, n, k3, &mut c_tiled);
+            for (x, y) in c_ref.iter().zip(&c_tiled) {
+                assert!((x - y).abs() < 1e-4, "nt ({m},{n},{k3}): {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_kernels_match_per_group_scalar_calls() {
+        let mut rng = crate::math::rng::Pcg64::seeded(22);
+        let (groups, m, k, n) = (3usize, 6usize, 9usize, 11usize);
+        let mut a = vec![0.0f32; groups * m * k];
+        rng.fill_normal(&mut a);
+        let bs_data: Vec<Vec<f32>> = (0..groups)
+            .map(|_| {
+                let mut b = vec![0.0f32; k * n];
+                rng.fill_normal(&mut b);
+                b
+            })
+            .collect();
+        let bs: Vec<&[f32]> = bs_data.iter().map(|b| b.as_slice()).collect();
+        let mut c = vec![0.0f32; groups * m * n];
+        gemm_nn_grouped(&a, &bs, m, k, n, &mut c);
+        for g in 0..groups {
+            let mut want = vec![0.0f32; m * n];
+            gemm_nn(&a[g * m * k..(g + 1) * m * k], bs[g], m, k, n, &mut want);
+            for (x, y) in c[g * m * n..(g + 1) * m * n].iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "group {g}: {x} vs {y}");
+            }
+        }
+
+        // nt orientation: stacked A (groups·m, n), per-group B (k, n).
+        let mut a2 = vec![0.0f32; groups * m * n];
+        rng.fill_normal(&mut a2);
+        let mut c2 = vec![0.0f32; groups * m * k];
+        let bs2_data: Vec<Vec<f32>> = (0..groups)
+            .map(|_| {
+                let mut b = vec![0.0f32; k * n];
+                rng.fill_normal(&mut b);
+                b
+            })
+            .collect();
+        let bs2: Vec<&[f32]> = bs2_data.iter().map(|b| b.as_slice()).collect();
+        gemm_nt_grouped(&a2, &bs2, m, n, k, &mut c2);
+        for g in 0..groups {
+            let mut want = vec![0.0f32; m * k];
+            gemm_nt(&a2[g * m * n..(g + 1) * m * n], bs2[g], m, n, k, &mut want);
+            for (x, y) in c2[g * m * k..(g + 1) * m * k].iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "nt group {g}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_single_group_is_bit_identical_to_scalar() {
+        // The B = 1 dispatch rule: one group runs the scalar kernel, so
+        // the batched gradient path at B = 1 is bit-identical.
+        let mut rng = crate::math::rng::Pcg64::seeded(23);
+        let (m, k, n) = (7usize, 10usize, 5usize);
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+        a[3] = 0.0; // exercise the zero-skip path too
+        let mut c_scalar = vec![0.0f32; m * n];
+        gemm_nn(&a, &b, m, k, n, &mut c_scalar);
+        let mut c_grouped = vec![0.0f32; m * n];
+        gemm_nn_grouped(&a, &[&b], m, k, n, &mut c_grouped);
+        assert_eq!(
+            c_scalar.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            c_grouped.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        let mut c_scalar = vec![0.0f32; m * k];
+        let mut a2 = vec![0.0f32; m * n];
+        rng.fill_normal(&mut a2);
+        let mut b2 = vec![0.0f32; k * n];
+        rng.fill_normal(&mut b2);
+        gemm_nt(&a2, &b2, m, n, k, &mut c_scalar);
+        let mut c_grouped = vec![0.0f32; m * k];
+        gemm_nt_grouped(&a2, &[&b2], m, n, k, &mut c_grouped);
+        assert_eq!(
+            c_scalar.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            c_grouped.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

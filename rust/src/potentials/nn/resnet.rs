@@ -299,6 +299,169 @@ impl Potential for NativeResNet {
         u
     }
 
+    /// Batched path (DESIGN.md §9): identical structure to the scalar
+    /// backprop with every (B·m, ·) activation stacked along the
+    /// m-dimension — forward and dH/da/dprev backward run as grouped
+    /// GEMMs over per-chain weight slices, dW/db reductions stay per
+    /// chain. B = 1 dispatches to the scalar path bit-exactly.
+    fn stoch_grad_batch(
+        &self,
+        thetas: &[&[f32]],
+        grads: &mut [f32],
+        rngs: &mut [&mut Pcg64],
+        us: &mut [f64],
+    ) {
+        let bsz = thetas.len();
+        debug_assert_eq!(grads.len(), bsz * self.padded);
+        if bsz <= 1 {
+            if bsz == 1 {
+                us[0] = self.stoch_grad(thetas[0], grads, rngs[0]);
+            }
+            return;
+        }
+        let w = self.width;
+        let m = self.batch;
+        let big = bsz * m;
+        let d = self.in_dim;
+        let classes = self.classes;
+        let scale = self.n_total as f64 / m as f64;
+
+        let mut x = vec![0.0f32; big * d];
+        let mut y = vec![0i32; big];
+        for (b, rng) in rngs.iter_mut().enumerate() {
+            self.train.sample_batch(
+                m,
+                rng,
+                &mut x[b * m * d..(b + 1) * m * d],
+                &mut y[b * m..(b + 1) * m],
+            );
+        }
+
+        // Forward: h[0] = post-proj, per block k: a_in[k] = inner ReLU,
+        // h[k+1] = block output — all (B·m, width) stacked.
+        let wps: Vec<&[f32]> = thetas.iter().map(|t| self.layer(t, 0).0).collect();
+        let mut h: Vec<Vec<f32>> = Vec::with_capacity(self.blocks + 1);
+        let mut a_in: Vec<Vec<f32>> = Vec::with_capacity(self.blocks);
+        let mut h0 = vec![0.0f32; big * w];
+        ops::gemm_nn_grouped(&x, &wps, m, d, w, &mut h0);
+        for (b, t) in thetas.iter().enumerate() {
+            ops::add_bias(&mut h0[b * m * w..(b + 1) * m * w], self.layer(t, 0).1, m, w);
+        }
+        ops::relu(&mut h0);
+        h.push(h0);
+        for k in 0..self.blocks {
+            let (w1_l, w2_l) = (1 + 2 * k, 2 + 2 * k);
+            let w1s: Vec<&[f32]> = thetas.iter().map(|t| self.layer(t, w1_l).0).collect();
+            let w2s: Vec<&[f32]> = thetas.iter().map(|t| self.layer(t, w2_l).0).collect();
+            let mut inner = vec![0.0f32; big * w];
+            let mut out = vec![0.0f32; big * w];
+            {
+                let prev = h.last().unwrap();
+                ops::gemm_nn_grouped(prev, &w1s, m, w, w, &mut inner);
+                for (b, t) in thetas.iter().enumerate() {
+                    let bias = self.layer(t, w1_l).1;
+                    ops::add_bias(&mut inner[b * m * w..(b + 1) * m * w], bias, m, w);
+                }
+                ops::relu(&mut inner);
+                ops::gemm_nn_grouped(&inner, &w2s, m, w, w, &mut out);
+                for (b, t) in thetas.iter().enumerate() {
+                    let bias = self.layer(t, w2_l).1;
+                    ops::add_bias(&mut out[b * m * w..(b + 1) * m * w], bias, m, w);
+                }
+                for i in 0..big * w {
+                    out[i] += prev[i]; // identity skip
+                }
+            }
+            a_in.push(inner);
+            h.push(out);
+        }
+        let head_l = 1 + 2 * self.blocks;
+        let whs: Vec<&[f32]> = thetas.iter().map(|t| self.layer(t, head_l).0).collect();
+        let mut logits = vec![0.0f32; big * classes];
+        ops::gemm_nn_grouped(h.last().unwrap(), &whs, m, w, classes, &mut logits);
+        for (b, t) in thetas.iter().enumerate() {
+            let bias = self.layer(t, head_l).1;
+            ops::add_bias(&mut logits[b * m * classes..(b + 1) * m * classes], bias, m, classes);
+        }
+
+        // Loss + dlogits per chain.
+        let mut dlogits = vec![0.0f32; big * classes];
+        for b in 0..bsz {
+            let nll = ops::softmax_xent(
+                &logits[b * m * classes..(b + 1) * m * classes],
+                &y[b * m..(b + 1) * m],
+                m,
+                classes,
+                &mut dlogits[b * m * classes..(b + 1) * m * classes],
+            );
+            us[b] = scale * nll;
+        }
+        let s = scale as f32;
+        for v in dlogits.iter_mut() {
+            *v *= s;
+        }
+
+        // Head backward.
+        grads.fill(0.0);
+        let (wh_off, bh_off) = self.offsets[head_l];
+        for (b, g) in grads.chunks_mut(self.padded).enumerate() {
+            let h_b = &h[self.blocks][b * m * w..(b + 1) * m * w];
+            let dl_b = &dlogits[b * m * classes..(b + 1) * m * classes];
+            let dw = &mut g[wh_off..wh_off + w * classes];
+            ops::gemm_tn_tiled(h_b, dl_b, m, w, classes, dw);
+            ops::bias_grad(dl_b, m, classes, &mut g[bh_off..bh_off + classes]);
+        }
+        let mut dh = vec![0.0f32; big * w];
+        ops::gemm_nt_grouped(&dlogits, &whs, m, classes, w, &mut dh);
+
+        // Blocks backward (reverse order).
+        for k in (0..self.blocks).rev() {
+            let (w1_l, w2_l) = (1 + 2 * k, 2 + 2 * k);
+            let inner = &a_in[k];
+            let prev = &h[k];
+            let (w2_off, b2_off) = self.offsets[w2_l];
+            for (b, g) in grads.chunks_mut(self.padded).enumerate() {
+                let inner_b = &inner[b * m * w..(b + 1) * m * w];
+                let dh_b = &dh[b * m * w..(b + 1) * m * w];
+                let dw2 = &mut g[w2_off..w2_off + w * w];
+                ops::gemm_tn_tiled(inner_b, dh_b, m, w, w, dw2);
+                ops::bias_grad(dh_b, m, w, &mut g[b2_off..b2_off + w]);
+            }
+            let w2s: Vec<&[f32]> = thetas.iter().map(|t| self.layer(t, w2_l).0).collect();
+            let mut da = vec![0.0f32; big * w];
+            ops::gemm_nt_grouped(&dh, &w2s, m, w, w, &mut da);
+            ops::relu_backward(&mut da, inner);
+            let (w1_off, b1_off) = self.offsets[w1_l];
+            for (b, g) in grads.chunks_mut(self.padded).enumerate() {
+                let prev_b = &prev[b * m * w..(b + 1) * m * w];
+                let da_b = &da[b * m * w..(b + 1) * m * w];
+                let dw1 = &mut g[w1_off..w1_off + w * w];
+                ops::gemm_tn_tiled(prev_b, da_b, m, w, w, dw1);
+                ops::bias_grad(da_b, m, w, &mut g[b1_off..b1_off + w]);
+            }
+            let w1s: Vec<&[f32]> = thetas.iter().map(|t| self.layer(t, w1_l).0).collect();
+            let mut dprev = vec![0.0f32; big * w];
+            ops::gemm_nt_grouped(&da, &w1s, m, w, w, &mut dprev);
+            for i in 0..big * w {
+                dh[i] += dprev[i]; // skip-connection chain rule
+            }
+        }
+
+        // Projection backward.
+        ops::relu_backward(&mut dh, &h[0]);
+        let (wp_off, bp_off) = self.offsets[0];
+        for (b, g) in grads.chunks_mut(self.padded).enumerate() {
+            let x_b = &x[b * m * d..(b + 1) * m * d];
+            let dh_b = &dh[b * m * w..(b + 1) * m * w];
+            let dwp = &mut g[wp_off..wp_off + d * w];
+            ops::gemm_tn_tiled(x_b, dh_b, m, d, w, dwp);
+            ops::bias_grad(dh_b, m, w, &mut g[bp_off..bp_off + w]);
+        }
+        for (b, g) in grads.chunks_mut(self.padded).enumerate() {
+            us[b] += self.add_prior(thetas[b], g);
+        }
+    }
+
     fn eval_nll_acc(&self, theta: &[f32]) -> Option<(f64, f64)> {
         Some(self.eval_on(theta, &self.test))
     }

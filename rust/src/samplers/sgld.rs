@@ -62,6 +62,27 @@ impl SgldStepper {
             }
         }
     }
+
+    /// Batched sibling of [`SgldStepper::step`] — see
+    /// [`SghmcStepper::step_batch`](super::sghmc::SghmcStepper::step_batch)
+    /// for the contract (stacked grads, per-chain streams and views).
+    pub fn step_batch(
+        &mut self,
+        states: &mut [&mut ChainState],
+        grads: &[f32],
+        couplings: Option<(&[&[f32]], f64)>,
+        rngs: &mut [&mut Pcg64],
+    ) {
+        let b = states.len();
+        let dim = self.noise.len();
+        debug_assert_eq!(grads.len(), b * dim);
+        debug_assert_eq!(rngs.len(), b);
+        for i in 0..b {
+            let grad = &grads[i * dim..(i + 1) * dim];
+            let coupling = couplings.map(|(centers, alpha)| (centers[i], alpha));
+            self.step(states[i], grad, coupling, rngs[i]);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,287 @@
+//! Batch-consistency suite (DESIGN.md §9):
+//!
+//! * `stoch_grad_batch` at B = 1 is **bit-identical** to `stoch_grad`
+//!   for every potential (the single-group dispatch rule);
+//! * at B > 1 the grouped-GEMM implementations draw exactly the same
+//!   minibatches (stream positions match the unbatched loop bit-exactly)
+//!   and agree with it to f32 rounding;
+//! * full `run_ec` / `run_independent` jobs at `chains_per_worker = 1`
+//!   run the pre-batching code path, and packing chains into blocks on
+//!   the Fig. 1 Gaussian (no batched override) reproduces those runs —
+//!   and their posterior moments — bit-for-bit.
+
+use ecsgmcmc::config::RunConfig;
+use ecsgmcmc::coordinator::ec::run_ec;
+use ecsgmcmc::coordinator::engine::{NativeEngine, StepKind, WorkerEngine};
+use ecsgmcmc::coordinator::{EcConfig, IndependentCoordinator, RunOptions};
+use ecsgmcmc::data::{synth_cifar, synth_mnist};
+use ecsgmcmc::diagnostics::{moments, to_f64_samples};
+use ecsgmcmc::math::rng::Pcg64;
+use ecsgmcmc::potentials::banana::BananaPotential;
+use ecsgmcmc::potentials::gaussian::GaussianPotential;
+use ecsgmcmc::potentials::logreg::LogRegPotential;
+use ecsgmcmc::potentials::mixture::MixturePotential;
+use ecsgmcmc::potentials::nn::mlp::NativeMlp;
+use ecsgmcmc::potentials::nn::resnet::NativeResNet;
+use ecsgmcmc::potentials::Potential;
+use ecsgmcmc::samplers::SghmcParams;
+use ecsgmcmc::testing::Prop;
+use std::sync::Arc;
+
+fn tiny_logreg() -> LogRegPotential {
+    let data = synth_mnist::generate_sized(120, 5, 3, 0.1, 17);
+    let (train, test) = data.split(90);
+    LogRegPotential::new(train, test, 15)
+}
+
+fn tiny_mlp() -> NativeMlp {
+    let data = synth_mnist::generate_sized(80, 6, 4, 0.1, 11);
+    let (train, test) = data.split(60);
+    NativeMlp::new(train, test, 8, 2, 10)
+}
+
+fn tiny_resnet() -> NativeResNet {
+    let data = synth_cifar::generate(80, 0.2, 13);
+    let (train, test) = data.split(60);
+    NativeResNet::new(train, test, 8, 2, 10)
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// B = 1 through the batch API must be bit-identical to `stoch_grad`:
+/// same Ũ, same gradient bits, same stream position afterwards.
+fn assert_batch_of_one_bitwise(p: &dyn Potential, rng: &mut Pcg64) {
+    let dim = p.dim();
+    let padded = p.padded_dim();
+    let mut theta = vec![0.0f32; padded];
+    rng.fill_normal(&mut theta[..dim]);
+    for t in theta[..dim].iter_mut() {
+        *t *= 0.2;
+    }
+    let mut r_scalar = Pcg64::new(rng.next_u64(), 1000);
+    let mut r_batch = r_scalar.clone();
+    let mut g_scalar = vec![0.0f32; padded];
+    let u_scalar = p.stoch_grad(&theta, &mut g_scalar, &mut r_scalar);
+    let mut g_batch = vec![0.0f32; padded];
+    let mut us = [0.0f64];
+    p.stoch_grad_batch(&[&theta], &mut g_batch, &mut [&mut r_batch], &mut us);
+    assert_eq!(bits(&g_scalar), bits(&g_batch), "{} grads diverged at B=1", p.name());
+    assert_eq!(u_scalar.to_bits(), us[0].to_bits(), "{} U diverged at B=1", p.name());
+    assert_eq!(r_scalar.snapshot(), r_batch.snapshot(), "{} stream diverged", p.name());
+}
+
+#[test]
+fn batch_of_one_is_bitwise_for_every_potential() {
+    let logreg = tiny_logreg();
+    let mlp = tiny_mlp();
+    let resnet = tiny_resnet();
+    let gaussian = GaussianPotential::fig1();
+    let mixture = MixturePotential::bimodal(4.0, 1.0);
+    let banana = BananaPotential::standard();
+    let pots: [&dyn Potential; 6] = [&gaussian, &mixture, &banana, &logreg, &mlp, &resnet];
+    Prop::new("batch of one is bitwise").cases(10).run(|rng| {
+        for p in pots {
+            assert_batch_of_one_bitwise(p, rng);
+        }
+    });
+}
+
+/// B > 1: the grouped kernels must consume identical minibatch draws
+/// (bit-exact stream positions) and agree with the unbatched loop to
+/// f32 rounding on every gradient coordinate and Ũ.
+fn assert_batched_matches_scalar(p: &dyn Potential, bsz: usize, tol: f64, rng: &mut Pcg64) {
+    let dim = p.dim();
+    let padded = p.padded_dim();
+    let thetas_data: Vec<Vec<f32>> = (0..bsz)
+        .map(|_| {
+            let mut t = vec![0.0f32; padded];
+            rng.fill_normal(&mut t[..dim]);
+            for v in t[..dim].iter_mut() {
+                *v *= 0.2;
+            }
+            t
+        })
+        .collect();
+    let seed = rng.next_u64();
+    let mut rngs_scalar: Vec<Pcg64> =
+        (0..bsz).map(|w| Pcg64::new(seed, 1000 + w as u64)).collect();
+    let mut rngs_batch = rngs_scalar.clone();
+
+    let mut g_ref = vec![0.0f32; bsz * padded];
+    let mut u_ref = vec![0.0f64; bsz];
+    for i in 0..bsz {
+        u_ref[i] = p.stoch_grad(
+            &thetas_data[i],
+            &mut g_ref[i * padded..(i + 1) * padded],
+            &mut rngs_scalar[i],
+        );
+    }
+
+    let thetas: Vec<&[f32]> = thetas_data.iter().map(|t| t.as_slice()).collect();
+    let mut rng_refs: Vec<&mut Pcg64> = rngs_batch.iter_mut().collect();
+    let mut grads = vec![0.0f32; bsz * padded];
+    let mut us = vec![0.0f64; bsz];
+    p.stoch_grad_batch(&thetas, &mut grads, &mut rng_refs, &mut us);
+
+    for (a, b) in rngs_scalar.iter().zip(&rngs_batch) {
+        assert_eq!(a.snapshot(), b.snapshot(), "{}: minibatch draws diverged", p.name());
+    }
+    for i in 0..bsz {
+        let du = (u_ref[i] - us[i]).abs();
+        assert!(
+            du <= tol * (1.0 + u_ref[i].abs()),
+            "{}: chain {i} U {} vs {}",
+            p.name(),
+            u_ref[i],
+            us[i]
+        );
+    }
+    for (i, (&x, &y)) in g_ref.iter().zip(&grads).enumerate() {
+        let (x, y) = (x as f64, y as f64);
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{}: grad[{i}] {x} vs {y}",
+            p.name()
+        );
+    }
+}
+
+#[test]
+fn grouped_gradients_match_unbatched_to_rounding() {
+    let logreg = tiny_logreg();
+    let mlp = tiny_mlp();
+    let resnet = tiny_resnet();
+    Prop::new("grouped grads match").cases(6).run(|rng| {
+        assert_batched_matches_scalar(&logreg, 3, 1e-3, rng);
+        assert_batched_matches_scalar(&mlp, 4, 1e-3, rng);
+        assert_batched_matches_scalar(&resnet, 3, 1e-3, rng);
+    });
+}
+
+fn gaussian_engines(k: usize, params: SghmcParams) -> Vec<Box<dyn WorkerEngine>> {
+    (0..k)
+        .map(|_| {
+            Box::new(NativeEngine::new(
+                Arc::new(GaussianPotential::fig1()),
+                params,
+                StepKind::Sghmc,
+            )) as Box<dyn WorkerEngine>
+        })
+        .collect()
+}
+
+/// Golden run on the shipped `fig1_gaussian.toml`: `chains_per_worker=1`
+/// executes the pre-batching code path; packing the same fleet into
+/// blocks of 2 must reproduce every trajectory — and hence the recorded
+/// posterior moments — bit-for-bit (the Gaussian has no batched
+/// override, so even the gradients are bitwise).
+#[test]
+fn fig1_ec_golden_moments_are_block_invariant() {
+    let fig1 = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs/fig1_gaussian.toml");
+    let file_cfg = RunConfig::from_file(&fig1).unwrap();
+    let params = SghmcParams { eps: file_cfg.sampler.eps, ..Default::default() };
+    let mk = |b: usize| EcConfig {
+        workers: file_cfg.workers,
+        alpha: file_cfg.alpha,
+        sync_every: file_cfg.sync_every,
+        steps: file_cfg.steps,
+        opts: RunOptions {
+            thin: 1,
+            burn_in: file_cfg.steps / 4,
+            log_every: (file_cfg.steps / 10).max(1),
+            chains_per_worker: b,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let run = |cfg: EcConfig| {
+        let engines = gaussian_engines(file_cfg.workers, params);
+        run_ec(&cfg, params, engines, file_cfg.seed)
+    };
+    let base = run(mk(1));
+    let blocked = run(mk(2));
+    assert_eq!(base.chains.len(), blocked.chains.len());
+    for (a, c) in base.chains.iter().zip(&blocked.chains) {
+        assert_eq!(a.samples.len(), c.samples.len(), "worker {}", a.worker);
+        for (i, (sa, sc)) in a.samples.iter().zip(&c.samples).enumerate() {
+            assert_eq!(sa.1, sc.1, "worker {} sample {i} diverged", a.worker);
+        }
+    }
+    let m_base = moments(&to_f64_samples(base.thetas(), 2));
+    let m_blocked = moments(&to_f64_samples(blocked.thetas(), 2));
+    assert_eq!(m_base.mean, m_blocked.mean, "pooled means diverged");
+    assert_eq!(m_base.cov, m_blocked.cov, "pooled covariances diverged");
+    // Golden sanity: the Fig. 1 posterior is the analytic Gaussian.
+    assert!(m_base.mean_error(&[0.0, 0.0]) < 0.25, "mean={:?}", m_base.mean);
+    assert!(m_base.cov_error(&[1.0, 0.6, 0.6, 0.8]) < 0.5, "cov={:?}", m_base.cov);
+}
+
+/// Same invariance for the independent scheme on the fig1 problem, with
+/// a block size that does not divide K (ragged last block).
+#[test]
+fn fig1_independent_golden_moments_are_block_invariant() {
+    let fig1 = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs/fig1_gaussian.toml");
+    let file_cfg = RunConfig::from_file(&fig1).unwrap();
+    let params = SghmcParams { eps: file_cfg.sampler.eps, ..Default::default() };
+    let mk = |b: usize| RunOptions {
+        thin: 1,
+        burn_in: file_cfg.steps / 4,
+        log_every: (file_cfg.steps / 10).max(1),
+        chains_per_worker: b,
+        ..Default::default()
+    };
+    let base = IndependentCoordinator::new(file_cfg.steps, mk(1))
+        .run(gaussian_engines(file_cfg.workers, params), file_cfg.seed);
+    let blocked = IndependentCoordinator::new(file_cfg.steps, mk(3))
+        .run(gaussian_engines(file_cfg.workers, params), file_cfg.seed);
+    for (a, c) in base.chains.iter().zip(&blocked.chains) {
+        assert_eq!(a.samples.len(), c.samples.len(), "worker {}", a.worker);
+        for (i, (sa, sc)) in a.samples.iter().zip(&c.samples).enumerate() {
+            assert_eq!(sa.1, sc.1, "worker {} sample {i} diverged", a.worker);
+        }
+    }
+    let m_base = moments(&to_f64_samples(base.thetas(), 2));
+    let m_blocked = moments(&to_f64_samples(blocked.thetas(), 2));
+    assert_eq!(m_base.mean, m_blocked.mean);
+    assert_eq!(m_base.cov, m_blocked.cov);
+}
+
+/// A blocked fleet on a potential WITH a batched override (the tiny MLP)
+/// still draws per-chain minibatches from the right streams: the run
+/// completes, every sample is finite, and per-chain sample counts match
+/// the unblocked layout.
+#[test]
+fn mlp_blocked_fleet_is_structurally_identical() {
+    let params = SghmcParams { eps: 1e-4, ..Default::default() };
+    let pot = Arc::new(tiny_mlp());
+    let engines = |k: usize| -> Vec<Box<dyn WorkerEngine>> {
+        (0..k)
+            .map(|_| {
+                Box::new(NativeEngine::new(
+                    pot.clone() as Arc<dyn Potential>,
+                    params,
+                    StepKind::Sghmc,
+                )) as Box<dyn WorkerEngine>
+            })
+            .collect()
+    };
+    let mk = |b: usize| RunOptions {
+        thin: 5,
+        log_every: 50,
+        chains_per_worker: b,
+        ..Default::default()
+    };
+    let base = IndependentCoordinator::new(100, mk(1)).run(engines(6), 31);
+    let blocked = IndependentCoordinator::new(100, mk(6)).run(engines(6), 31);
+    assert_eq!(base.chains.len(), blocked.chains.len());
+    for (a, c) in base.chains.iter().zip(&blocked.chains) {
+        assert_eq!(a.worker, c.worker);
+        assert_eq!(a.samples.len(), c.samples.len());
+        assert!(c.samples.iter().all(|(_, t)| t.iter().all(|x| x.is_finite())));
+    }
+    assert_eq!(base.metrics.total_steps, blocked.metrics.total_steps);
+}

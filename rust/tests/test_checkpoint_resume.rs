@@ -174,6 +174,75 @@ fn snapshot_files_reserialize_byte_identically_and_reject_corruption() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Batched-stepper churn matrix (DESIGN.md §9): a leave/join mid-run
+/// with `chains_per_worker` > 1 must drain and re-seed whole chain
+/// blocks without disturbing surviving chains' streams. With α = 0 the
+/// elastic force vanishes, so every founder's trajectory is a pure
+/// function of its own RNG streams — bit-comparable across packings
+/// even on the racy lock-free fabric (only joiners, who adopt the racy
+/// center θ, are excluded from the bitwise check).
+#[test]
+fn churned_blocks_drain_and_reseed_without_touching_survivors() {
+    let churn = ChurnModel { leave_frac: 0.5, fail_frac: 0.5, join_frac: 0.5 };
+    let (workers, steps, s) = (4usize, 400usize, 2usize);
+    // Pick a seed whose schedule has both departures and joiners.
+    let seed = (1..300)
+        .find(|&sd| {
+            let spans = churn.schedule(workers, steps, s, sd);
+            spans.iter().any(|sp| sp.departure.is_some())
+                && spans.iter().any(|sp| !sp.is_founder())
+        })
+        .expect("some seed churns");
+    let mk = |b: usize| EcConfig {
+        workers,
+        alpha: 0.0,
+        sync_every: s,
+        steps,
+        transport: TransportKind::LockFree,
+        churn,
+        opts: RunOptions {
+            thin: 1,
+            log_every: 100,
+            chains_per_worker: b,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: 0.05, ..Default::default() };
+    let run = |b: usize| {
+        let cfg = mk(b);
+        let n = planned_spans(&cfg, seed).len();
+        run_ec(&cfg, params, engines(n, params), seed)
+    };
+    let spans = planned_spans(&mk(1), seed);
+    let base = run(1);
+    // B = 3 gives ragged blocks that mix founders and joiners.
+    let blocked = run(3);
+
+    // Membership accounting is packing-invariant.
+    let planned_departures = spans.iter().filter(|sp| sp.departure.is_some()).count();
+    assert_eq!(base.metrics.worker_leaves as usize, planned_departures);
+    assert_eq!(blocked.metrics.worker_leaves as usize, planned_departures);
+    assert_eq!(base.metrics.worker_joins, blocked.metrics.worker_joins);
+    assert_eq!(base.metrics.total_steps, blocked.metrics.total_steps);
+
+    for (a, c) in base.chains.iter().zip(&blocked.chains) {
+        let sp = spans[a.worker];
+        assert_eq!(a.samples.len(), c.samples.len(), "worker {}", a.worker);
+        if sp.is_founder() {
+            // Founders (survivors AND leavers/failers) are bit-identical
+            // across packings: block churn never touches their streams.
+            for (i, (sa, sc)) in a.samples.iter().zip(&c.samples).enumerate() {
+                assert_eq!(sa.1, sc.1, "founder {} sample {i} diverged", a.worker);
+            }
+        } else {
+            // Joiners clone the racy center θ; counts match, contents
+            // stay finite.
+            assert!(c.samples.iter().all(|(_, t)| t.iter().all(|x| x.is_finite())));
+        }
+    }
+}
+
 /// The acceptance scenario: churn-enabled EC (join + leave + fail events
 /// on the lock-free fabric, which churn requires) stays within 10% of
 /// the churn-free run's split-R̂ on the `fig1_gaussian.toml` problem.

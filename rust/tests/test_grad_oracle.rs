@@ -1,0 +1,110 @@
+//! Finite-difference gradient oracle (DESIGN.md §9 satellite): every
+//! `Potential`'s `full_grad` is checked against central differences at
+//! seeded random θ through the `testing::Prop` harness, so a failure
+//! reports a replayable case seed. Tolerances are scaled per potential:
+//! the analytic toys evaluate in f64 (tight), the data-backed models
+//! accumulate in f32 over whole datasets (loose, matching the unit-level
+//! spot checks).
+
+use ecsgmcmc::data::{synth_cifar, synth_mnist};
+use ecsgmcmc::math::rng::Pcg64;
+use ecsgmcmc::potentials::banana::BananaPotential;
+use ecsgmcmc::potentials::gaussian::GaussianPotential;
+use ecsgmcmc::potentials::logreg::LogRegPotential;
+use ecsgmcmc::potentials::mixture::MixturePotential;
+use ecsgmcmc::potentials::nn::mlp::NativeMlp;
+use ecsgmcmc::potentials::nn::resnet::NativeResNet;
+use ecsgmcmc::potentials::Potential;
+use ecsgmcmc::testing::{gens, Prop};
+
+/// Probe `probes` random coordinates of ∇U at a random θ drawn from the
+/// case's stream. The divisor uses the *realized* f32 perturbation
+/// (`tp[i] − tm[i]`), so θ-magnitude quantization cannot bias the check.
+fn check_full_grad(
+    p: &dyn Potential,
+    theta_scale: f32,
+    h: f32,
+    tol: f64,
+    probes: usize,
+    rng: &mut Pcg64,
+) {
+    let dim = p.dim();
+    let padded = p.padded_dim();
+    let mut theta = vec![0.0f32; padded];
+    rng.fill_normal(&mut theta[..dim]);
+    for t in theta[..dim].iter_mut() {
+        *t *= theta_scale;
+    }
+    let mut grad = vec![0.0f32; padded];
+    p.full_grad(&theta, &mut grad);
+    for _ in 0..probes {
+        let i = gens::usize_range(rng, 0, dim - 1);
+        let mut tp = theta.clone();
+        tp[i] += h;
+        let mut tm = theta.clone();
+        tm[i] -= h;
+        let dh = (tp[i] - tm[i]) as f64;
+        let fd = (p.full_potential(&tp) - p.full_potential(&tm)) / dh;
+        let rel = (grad[i] as f64 - fd).abs() / (1.0 + fd.abs());
+        assert!(
+            rel < tol,
+            "{}: coord {i} grad={} fd={fd} rel={rel}",
+            p.name(),
+            grad[i]
+        );
+    }
+}
+
+#[test]
+fn gaussian_full_grad_matches_central_differences() {
+    let p = GaussianPotential::fig1();
+    Prop::new("gaussian fd oracle").cases(25).run(|rng| {
+        check_full_grad(&p, 1.0, 1e-2, 1e-3, 2, rng);
+    });
+}
+
+#[test]
+fn mixture_full_grad_matches_central_differences() {
+    let p = MixturePotential::bimodal(4.0, 1.0);
+    Prop::new("mixture fd oracle").cases(25).run(|rng| {
+        check_full_grad(&p, 1.0, 1e-3, 5e-3, 2, rng);
+    });
+}
+
+#[test]
+fn banana_full_grad_matches_central_differences() {
+    let p = BananaPotential::standard();
+    Prop::new("banana fd oracle").cases(25).run(|rng| {
+        check_full_grad(&p, 0.5, 1e-3, 5e-3, 2, rng);
+    });
+}
+
+#[test]
+fn logreg_full_grad_matches_central_differences() {
+    let data = synth_mnist::generate_sized(120, 5, 3, 0.1, 17);
+    let (train, test) = data.split(90);
+    let p = LogRegPotential::new(train, test, 15);
+    Prop::new("logreg fd oracle").cases(10).run(|rng| {
+        check_full_grad(&p, 0.1, 1e-2, 3e-2, 4, rng);
+    });
+}
+
+#[test]
+fn mlp_full_grad_matches_central_differences() {
+    let data = synth_mnist::generate_sized(80, 6, 4, 0.1, 11);
+    let (train, test) = data.split(60);
+    let p = NativeMlp::new(train, test, 8, 2, 10);
+    Prop::new("mlp fd oracle").cases(8).run(|rng| {
+        check_full_grad(&p, 0.3, 1e-2, 5e-2, 4, rng);
+    });
+}
+
+#[test]
+fn resnet_full_grad_matches_central_differences() {
+    let data = synth_cifar::generate(80, 0.2, 13);
+    let (train, test) = data.split(60);
+    let p = NativeResNet::new(train, test, 8, 2, 10);
+    Prop::new("resnet fd oracle").cases(8).run(|rng| {
+        check_full_grad(&p, 0.25, 1e-2, 5e-2, 4, rng);
+    });
+}
