@@ -114,8 +114,11 @@ fn main() {
 /// EC schemes, plus the single-chain single-thread baseline. B = 16
 /// packs the whole fleet onto ONE thread, so its aggregate steps/sec
 /// against the B = 1 single-thread rate is the per-thread speedup of the
-/// grouped-GEMM path (acceptance target ≥ 3x; the CI `grad-bench` job
-/// gates at ≥ 2x to absorb runner noise). Emits out/bench/BENCH_grad.json.
+/// grouped-GEMM + SIMD path. The baseline is pinned to the scalar
+/// reference kernels (the historical single-chain engine) while the
+/// sweep runs under auto dispatch, so the ratio measures batching and
+/// the packed SIMD kernels together — the CI `grad-bench` job gates at
+/// ≥ 3x (DESIGN.md §10). Emits out/bench/BENCH_grad.json.
 fn bench_grad_batch(scale: Scale) {
     use ecsgmcmc::coordinator::ec::run_ec;
     use ecsgmcmc::coordinator::single::run_single;
@@ -150,13 +153,19 @@ fn bench_grad_batch(scale: Scale) {
     // wall-clock sample on a shared runner is too noisy to hard-fail on.
     let reps = 3;
 
-    // Baseline: one chain, one thread, unbatched (first run warms).
+    // Baseline: one chain, one thread, unbatched, forced onto the scalar
+    // reference kernels (first run warms). Without the pin, auto dispatch
+    // would SIMD-accelerate the denominator too and the gate would stop
+    // measuring the kernel work.
+    use ecsgmcmc::math::simd::{force_kernel, set_dispatch, DispatchChoice, KernelKind};
+    force_kernel(KernelKind::Scalar);
     let _ = run_single(engines(1).remove(0), steps, opts(1), 3);
     let mut single_rate = 0.0f64;
     for _ in 0..reps {
         let r = run_single(engines(1).remove(0), steps, opts(1), 3);
         single_rate = single_rate.max(r.metrics.steps_per_sec);
     }
+    let sweep_kind = set_dispatch(DispatchChoice::Auto).expect("auto dispatch");
 
     let bs = [1usize, 4, 16];
     let mut indep_rates = Vec::new();
@@ -190,10 +199,11 @@ fn bench_grad_batch(scale: Scale) {
     // Per-thread speedup: K=16, B=16 runs on ONE thread; compare its
     // aggregate rate against the B=1 single-thread (K=1) rate.
     let speedup = indep_rates[2] / single_rate.max(1e-12);
-    let gate_pass = speedup >= 2.0;
+    let gate_pass = speedup >= 3.0;
     println!(
-        "\nsingle-thread B=1 rate {single_rate:.0} steps/s; K=16 B=16 on one thread \
-         {:.0} steps/s -> {speedup:.2}x (target 3x, CI gate 2x: {})",
+        "\nsingle-thread B=1 scalar rate {single_rate:.0} steps/s; K=16 B=16 on one \
+         thread ({} kernels) {:.0} steps/s -> {speedup:.2}x (CI gate 3x: {})",
+        sweep_kind.name(),
         indep_rates[2],
         if gate_pass { "PASS" } else { "FAIL" }
     );
@@ -214,7 +224,10 @@ fn bench_grad_batch(scale: Scale) {
         ("ec", per_b(&ec_rates)),
         ("speedup_b16_vs_single_thread", Json::Num(speedup)),
         ("target_speedup", Json::Num(3.0)),
-        ("gate_2x_pass", Json::Bool(gate_pass)),
+        ("baseline_dispatch", Json::Str("scalar".into())),
+        ("sweep_dispatch", Json::Str(sweep_kind.name().into())),
+        ("cpu", Json::Str(ecsgmcmc::math::simd::cpu_features())),
+        ("gate_3x_pass", Json::Bool(gate_pass)),
     ]);
     if std::fs::create_dir_all("out/bench").is_ok() {
         let path = std::path::Path::new("out/bench/BENCH_grad.json");

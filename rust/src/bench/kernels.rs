@@ -1,0 +1,285 @@
+//! `ecsgmcmc bench --suite kernels`: sweep the three GEMM kernel variants
+//! (scalar zero-skip reference, cache-tiled, packed SIMD) over the exact
+//! (m, k, n) shapes the Fig. 2 experiments push through the batched
+//! gradient engine at B = 16 chains, and emit `BENCH_kernels.json` plus a
+//! markdown table (DESIGN.md §10).
+//!
+//! The acceptance gate lives here too: on the Fig. 2 MLP forward shapes
+//! the packed SIMD kernel must beat the tiled scalar kernel by ≥ 2x
+//! (geometric mean) — `gate_simd_2x_pass` in the JSON.
+
+use super::Bench;
+use crate::math::simd;
+use crate::potentials::nn::ops;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One benched (orientation, shape, variant) cell.
+struct Cell {
+    name: String,
+    orient: &'static str,
+    shape_tag: &'static str,
+    variant: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    mean_ns: f64,
+    gflops: f64,
+}
+
+/// GEMM orientation under test. `m`/`k`/`n` are the *logical* GEMM dims:
+/// C(m,n) += A_eff(m,k)·B_eff(k,n) (tn/nt read their operands transposed,
+/// exactly like the backprop call sites).
+#[derive(Clone, Copy)]
+struct Case {
+    orient: &'static str,
+    tag: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+/// Fig. 2 shapes at B = 16 chains (DESIGN.md §9 stacking):
+/// MLP full-scale is batch 100, d = 784, hidden 64, so the grouped forward
+/// GEMMs see (16·100, 784, 64) → (1600, 64, 64) → (1600, 64, 10);
+/// the resnet (width 48, blocks 15, batch 64, d = 192) sees
+/// (1024, 192, 48) → (1024, 48, 48) → (1024, 48, 10). The tn cases are the
+/// per-chain dW reductions (m = one chain's minibatch), the nt case is the
+/// widest dH backprop GEMM.
+const CASES: &[Case] = &[
+    Case { orient: "nn", tag: "mlp_l1", m: 1600, k: 784, n: 64 },
+    Case { orient: "nn", tag: "mlp_l2", m: 1600, k: 64, n: 64 },
+    Case { orient: "nn", tag: "mlp_head", m: 1600, k: 64, n: 10 },
+    Case { orient: "nn", tag: "resnet_proj", m: 1024, k: 192, n: 48 },
+    Case { orient: "nn", tag: "resnet_block", m: 1024, k: 48, n: 48 },
+    Case { orient: "nn", tag: "resnet_head", m: 1024, k: 48, n: 10 },
+    Case { orient: "tn", tag: "mlp_dw1", m: 100, k: 784, n: 64 },
+    Case { orient: "tn", tag: "mlp_dw2", m: 100, k: 64, n: 64 },
+    Case { orient: "tn", tag: "resnet_dw", m: 64, k: 48, n: 48 },
+    Case { orient: "nt", tag: "mlp_dh", m: 1600, k: 10, n: 64 },
+];
+
+const VARIANTS: &[&str] = &["scalar", "tiled", "packed"];
+
+fn fill_deterministic(buf: &mut [f32], seed: u32) {
+    // Cheap LCG — bench inputs just need to be dense and non-degenerate.
+    let mut state = seed.wrapping_mul(2654435761).wrapping_add(1);
+    for v in buf.iter_mut() {
+        state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+        *v = ((state >> 8) as f32 / (1u32 << 24) as f32) - 0.5;
+    }
+}
+
+fn run_variant(case: &Case, variant: &str, a: &[f32], b: &[f32], c: &mut [f32]) {
+    let (m, k, n) = (case.m, case.k, case.n);
+    match (case.orient, variant) {
+        ("nn", "scalar") => ops::gemm_nn_scalar(a, b, m, k, n, c),
+        ("nn", "tiled") => ops::gemm_nn_tiled(a, b, m, k, n, c),
+        ("nn", "packed") => ops::gemm_nn_packed(a, b, m, k, n, c),
+        // tn: A is stored (m, k)-transposed, i.e. the call site passes the
+        // (rows=m) activation and reduces over it; signature (a, b, m, k, n)
+        // computes C(k, n) from A(m, k), B(m, n).
+        ("tn", "scalar") => ops::gemm_tn_scalar(a, b, m, k, n, c),
+        ("tn", "tiled") => ops::gemm_tn_tiled(a, b, m, k, n, c),
+        ("tn", "packed") => ops::gemm_tn_packed(a, b, m, k, n, c),
+        // nt: C(m, n) from A(m, k), B(n, k) — signature (a, b, m, n_inner, k).
+        ("nt", "scalar") => ops::gemm_nt_scalar(a, b, m, k, n, c),
+        ("nt", "tiled") => ops::gemm_nt_tiled(a, b, m, k, n, c),
+        ("nt", "packed") => ops::gemm_nt_packed(a, b, m, k, n, c),
+        other => unreachable!("{other:?}"),
+    }
+}
+
+/// Buffer sizes for a case: (a_len, b_len, c_len, flops).
+fn case_dims(case: &Case) -> (usize, usize, usize, f64) {
+    let (m, k, n) = (case.m, case.k, case.n);
+    match case.orient {
+        // A(m,k) · B(k,n) -> C(m,n)
+        "nn" => (m * k, k * n, m * n, 2.0 * m as f64 * k as f64 * n as f64),
+        // Aᵀ: A(m,k), B(m,n) -> C(k,n)
+        "tn" => (m * k, m * n, k * n, 2.0 * m as f64 * k as f64 * n as f64),
+        // Bᵀ: A(m,k), B(n,k) -> C(m,n); signature maps (m, n=k_inner, k=n_out)
+        "nt" => (m * k, n * k, m * n, 2.0 * m as f64 * k as f64 * n as f64),
+        other => unreachable!("{other}"),
+    }
+}
+
+/// Run the sweep; writes `<out_dir>/BENCH_kernels.json` and
+/// `<out_dir>/KERNELS.md`, returns the JSON path.
+pub fn run(out_dir: &Path) -> Result<PathBuf> {
+    let simd_ok = simd::simd_supported();
+    let cpu = simd::cpu_features();
+    println!("kernel sweep: cpu = {cpu}, simd_supported = {simd_ok}");
+    if !simd_ok {
+        println!("note: packed variant falls back to tiled on this CPU");
+    }
+
+    let mut bench = Bench::new("kernels");
+    let mut cells: Vec<Cell> = Vec::new();
+    for case in CASES {
+        let (a_len, b_len, c_len, flops) = case_dims(case);
+        let mut a = vec![0.0f32; a_len];
+        let mut b = vec![0.0f32; b_len];
+        let mut c = vec![0.0f32; c_len];
+        fill_deterministic(&mut a, 0x5EED ^ (case.m as u32));
+        fill_deterministic(&mut b, 0xB00C ^ (case.n as u32));
+        for &variant in VARIANTS {
+            let name = format!("{}/{}/{}", case.orient, case.tag, variant);
+            let m = bench.bench(&name, || run_variant(case, variant, &a, &b, &mut c));
+            cells.push(Cell {
+                name: name.clone(),
+                orient: case.orient,
+                shape_tag: case.tag,
+                variant,
+                m: case.m,
+                k: case.k,
+                n: case.n,
+                mean_ns: m.mean_ns,
+                gflops: flops / m.mean_secs() / 1e9,
+            });
+        }
+    }
+
+    // Gate: packed ≥ 2x tiled (geomean) on the Fig. 2 MLP nn shapes.
+    let mut log_sum = 0.0f64;
+    let mut gate_n = 0usize;
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    for tag in ["mlp_l1", "mlp_l2", "mlp_head"] {
+        let tiled = cells
+            .iter()
+            .find(|c| c.shape_tag == tag && c.orient == "nn" && c.variant == "tiled");
+        let packed = cells
+            .iter()
+            .find(|c| c.shape_tag == tag && c.orient == "nn" && c.variant == "packed");
+        if let (Some(t), Some(p)) = (tiled, packed) {
+            let s = t.mean_ns / p.mean_ns;
+            speedups.push((tag.to_string(), s));
+            log_sum += s.ln();
+            gate_n += 1;
+        }
+    }
+    let geomean = if gate_n > 0 { (log_sum / gate_n as f64).exp() } else { 0.0 };
+    // The gate only means something where the packed path actually is SIMD.
+    let gate_pass = simd_ok && geomean >= 2.0;
+    println!(
+        "simd-vs-tiled on fig2 MLP shapes: geomean {:.2}x (gate >= 2.0x: {})",
+        geomean,
+        if gate_pass { "PASS" } else { "FAIL" }
+    );
+    for (tag, s) in &speedups {
+        println!("  {tag:<10} {s:.2}x");
+    }
+
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating bench dir {out_dir:?}"))?;
+
+    let results = Json::Arr(
+        cells
+            .iter()
+            .map(|c| {
+                Json::from_pairs(vec![
+                    ("name", Json::Str(c.name.clone())),
+                    ("orient", Json::Str(c.orient.to_string())),
+                    ("shape", Json::Str(c.shape_tag.to_string())),
+                    ("variant", Json::Str(c.variant.to_string())),
+                    ("m", Json::Num(c.m as f64)),
+                    ("k", Json::Num(c.k as f64)),
+                    ("n", Json::Num(c.n as f64)),
+                    ("mean_ns", Json::Num(c.mean_ns)),
+                    ("gflops", Json::Num(c.gflops)),
+                ])
+            })
+            .collect(),
+    );
+    let doc = Json::from_pairs(vec![
+        ("suite", Json::Str("kernels".to_string())),
+        ("cpu", Json::Str(cpu.clone())),
+        ("simd_supported", Json::Bool(simd_ok)),
+        ("mlp_geomean_speedup_simd_vs_tiled", Json::Num(geomean)),
+        ("gate_simd_2x_pass", Json::Bool(gate_pass)),
+        ("results", results),
+    ]);
+    let json_path = out_dir.join("BENCH_kernels.json");
+    std::fs::write(&json_path, doc.emit_pretty())
+        .with_context(|| format!("writing {json_path:?}"))?;
+
+    let md_path = out_dir.join("KERNELS.md");
+    std::fs::write(&md_path, markdown_table(&cpu, &cells, &speedups, geomean))
+        .with_context(|| format!("writing {md_path:?}"))?;
+    println!("-> wrote {}", json_path.display());
+    println!("-> wrote {}", md_path.display());
+    Ok(json_path)
+}
+
+fn markdown_table(cpu: &str, cells: &[Cell], speedups: &[(String, f64)], geomean: f64) -> String {
+    let mut out = String::new();
+    out.push_str("# Kernel sweep (`ecsgmcmc bench --suite kernels`)\n\n");
+    out.push_str(&format!("CPU: `{cpu}`\n\n"));
+    out.push_str("GFLOP/s per (orientation, Fig. 2 shape, kernel variant); shapes are\n");
+    out.push_str("the B = 16 stacked GEMMs of the Fig. 2 MLP and resnet targets.\n\n");
+    out.push_str("| orient | shape | m | k | n | scalar | tiled | packed |\n");
+    out.push_str("|--------|-------|--:|--:|--:|-------:|------:|-------:|\n");
+    let mut i = 0;
+    while i + 2 < cells.len() {
+        let (s, t, p) = (&cells[i], &cells[i + 1], &cells[i + 2]);
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {:.2} | {:.2} | {:.2} |\n",
+            s.orient, s.shape_tag, s.m, s.k, s.n, s.gflops, t.gflops, p.gflops
+        ));
+        i += 3;
+    }
+    out.push_str("\nPacked-SIMD vs tiled speedup on the Fig. 2 MLP shapes (gate ≥ 2x):\n\n");
+    for (tag, s) in speedups {
+        out.push_str(&format!("- `{tag}`: {s:.2}x\n"));
+    }
+    out.push_str(&format!("- geometric mean: **{geomean:.2}x**\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_dims_cover_call_signatures() {
+        for case in CASES {
+            let (a_len, b_len, c_len, flops) = case_dims(case);
+            assert!(a_len > 0 && b_len > 0 && c_len > 0);
+            assert!(flops > 0.0);
+            // Smoke: one call per variant on tiny clones of the shape to
+            // catch any signature mismatch without paying bench time.
+            let tiny = Case { m: 3, k: 4, n: 5, ..*case };
+            let (al, bl, cl, _) = case_dims(&tiny);
+            let a = vec![0.5f32; al];
+            let b = vec![0.25f32; bl];
+            let mut c = vec![0.0f32; cl];
+            for &v in VARIANTS {
+                run_variant(&tiny, v, &a, &b, &mut c);
+            }
+        }
+    }
+
+    #[test]
+    fn markdown_table_has_a_row_per_shape() {
+        let cells: Vec<Cell> = CASES
+            .iter()
+            .flat_map(|case| {
+                VARIANTS.iter().map(move |&v| Cell {
+                    name: format!("{}/{}/{}", case.orient, case.tag, v),
+                    orient: case.orient,
+                    shape_tag: case.tag,
+                    variant: v,
+                    m: case.m,
+                    k: case.k,
+                    n: case.n,
+                    mean_ns: 1000.0,
+                    gflops: 1.0,
+                })
+            })
+            .collect();
+        let md = markdown_table("test-cpu", &cells, &[("mlp_l1".into(), 2.5)], 2.5);
+        assert_eq!(md.matches("| nn |").count(), 6);
+        assert!(md.contains("2.50x"));
+    }
+}

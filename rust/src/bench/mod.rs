@@ -6,6 +6,8 @@
 //! EXPERIMENTS.md numbers are regenerable. It also hosts the *figure
 //! harness* helpers that print paper-style series tables.
 
+pub mod kernels;
+
 use crate::util::json::Json;
 use std::time::{Duration, Instant};
 

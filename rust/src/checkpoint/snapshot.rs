@@ -121,6 +121,12 @@ pub struct Fingerprint {
     /// Admission-gate bound; absent key = gate disabled. Travels as a
     /// string like every other u64 in this format.
     pub staleness_bound: Option<u64>,
+    /// Resolved kernel dispatch ("scalar" | "simd", DESIGN.md §10). Pinned
+    /// because SIMD packed GEMMs change float reduction order, so resuming
+    /// a scalar run under SIMD (or vice versa) would break the
+    /// deterministic-resume guarantee. Absent in pre-SIMD snapshots
+    /// (parsed as "scalar", the only kernel those runs had).
+    pub kernel_dispatch: String,
 }
 
 /// One durable cut of a run.
@@ -286,6 +292,7 @@ impl Snapshot {
         if let Some(b) = fp.staleness_bound {
             u64_str(&mut e, "staleness_bound", b);
         }
+        e.key("kernel_dispatch").str_val(&fp.kernel_dispatch);
         e.end_obj();
         e.end_obj();
         push(&mut out, &mut e, &mut lines);
@@ -460,6 +467,10 @@ impl Snapshot {
             staleness_bound: match fp_obj.get("staleness_bound") {
                 Some(_) => Some(get_u64(fp_obj, "staleness_bound")?),
                 None => None,
+            },
+            kernel_dispatch: match fp_obj.get("kernel_dispatch") {
+                Some(_) => get_str(fp_obj, "kernel_dispatch")?.to_string(),
+                None => "scalar".to_string(), // pre-SIMD snapshot
             },
         };
 
@@ -647,6 +658,7 @@ pub(crate) mod tests {
                 churn_fail: 0.25,
                 churn_join: 0.5,
                 staleness_bound: if seed % 2 == 0 { Some(u64::MAX - 7) } else { None },
+                kernel_dispatch: if seed % 2 == 0 { "scalar".into() } else { "simd".into() },
             },
             workers,
             center: CenterSnap {

@@ -58,6 +58,9 @@ fn apply_overrides(cfg: &mut RunConfig, p: &Parsed) -> Result<()> {
     if let Some(b) = p.opt("staleness-bound") {
         cfg.staleness_bound = Some(b.parse().context("--staleness-bound")?);
     }
+    if let Some(d) = p.opt("dispatch") {
+        cfg.dispatch = crate::math::simd::DispatchChoice::from_str(d).context("--dispatch")?;
+    }
     Ok(())
 }
 
@@ -69,6 +72,7 @@ pub fn cmd_sample(p: &Parsed) -> Result<i32> {
     let mut cfg = RunConfig::from_file(path)?;
     apply_overrides(&mut cfg, p)?;
     cfg.validate()?;
+    apply_dispatch(&cfg)?;
     // Probe stream-path writability now: the scheme drivers treat sink
     // init as infallible, so an unwritable path must fail here with a
     // clean error before any sampling starts. Open in append mode — the
@@ -92,6 +96,21 @@ pub fn cmd_sample(p: &Parsed) -> Result<i32> {
     let result = run_configured(&cfg)?;
     report_run(&cfg, &result);
     Ok(0)
+}
+
+/// Resolve the configured kernel dispatch before any gradient work and
+/// log the resolution once (DESIGN.md §10). `simd` on unsupported
+/// hardware already failed in `validate()`; this is the process-global
+/// commit point.
+fn apply_dispatch(cfg: &RunConfig) -> Result<()> {
+    let kind = crate::math::simd::set_dispatch(cfg.dispatch)?;
+    log_info!(
+        "kernels: dispatch={} -> {} ({})",
+        cfg.dispatch.name(),
+        kind.name(),
+        crate::math::simd::cpu_features()
+    );
+    Ok(())
 }
 
 /// Fail fast on an unwritable checkpoint directory: a long run whose
@@ -123,6 +142,7 @@ pub fn cmd_resume(p: &Parsed) -> Result<i32> {
     let mut cfg = RunConfig::from_file(path)?;
     apply_overrides(&mut cfg, p)?;
     cfg.validate()?;
+    apply_dispatch(&cfg)?;
     if !matches!(cfg.scheme, Scheme::ElasticCoupling | Scheme::EcSgld) {
         return Err(anyhow!("resume supports the EC schemes (got {})", cfg.scheme.name()));
     }
@@ -374,6 +394,11 @@ fn report_run(cfg: &RunConfig, r: &RunResult) {
         r.metrics.steps_per_sec,
         r.elapsed
     );
+    println!(
+        "kernels: dispatch={} ({})",
+        crate::math::simd::kernel_kind().name(),
+        crate::math::simd::cpu_features()
+    );
     if r.metrics.exchanges > 0 {
         println!(
             "exchanges: {}  mean staleness: {:.2}",
@@ -624,6 +649,23 @@ fn print_fig2(series: &[Series], title: &str, out: &str, stem: &str) -> Result<(
     let refs: Vec<&Series> = series.iter().collect();
     experiments::series_to_csv(&format!("{out}/{stem}.csv"), "t", &refs)?;
     Ok(())
+}
+
+/// `ecsgmcmc bench [--suite kernels] [--out dir]`.
+///
+/// Runs a micro-benchmark suite outside the experiment harness. The only
+/// suite today is `kernels`: the GEMM kernel-variant sweep over the Fig. 2
+/// shapes, emitting `BENCH_kernels.json` + `KERNELS.md` (DESIGN.md §10).
+pub fn cmd_bench(p: &Parsed) -> Result<i32> {
+    let suite = p.opt("suite").unwrap_or("kernels");
+    let out = p.opt("out").unwrap_or("out/bench");
+    match suite {
+        "kernels" => {
+            crate::bench::kernels::run(std::path::Path::new(out))?;
+            Ok(0)
+        }
+        other => Err(anyhow!("unknown bench suite '{other}' (available: kernels)")),
+    }
 }
 
 /// `ecsgmcmc artifacts [--dir d]`.

@@ -11,6 +11,8 @@
 //! * `experiment --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF|CHURN>`
 //!   — run a paper experiment and print its table (plus CSVs under
 //!   `--out`);
+//! * `bench --suite kernels` — GEMM kernel-variant sweep over the Fig. 2
+//!   shapes, emitting `BENCH_kernels.json` + `KERNELS.md` (DESIGN.md §10);
 //! * `artifacts [--dir <dir>]` — inspect the AOT artifact manifest;
 //! * `version` / `help`.
 
@@ -27,6 +29,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
         "resume" => commands::cmd_resume(&parsed),
         "replay" => commands::cmd_replay(&parsed),
         "experiment" => commands::cmd_experiment(&parsed),
+        "bench" => commands::cmd_bench(&parsed),
         "artifacts" => commands::cmd_artifacts(&parsed),
         "version" => {
             println!("ecsgmcmc {}", crate::VERSION);
@@ -65,6 +68,8 @@ COMMANDS:
                   --checkpoint-every <r> exchange rounds between snapshots (default 50)
                   --churn <rate>         EC worker churn (lockfree transport only)
                   --staleness-bound <b>  reject uploads staler than b center steps
+                  --dispatch <d>         kernel dispatch: auto|scalar|simd
+                                         (scalar = bitwise-reproducible reference)
     resume      Continue a checkpointed EC run from its newest snapshot
                   --config <file.toml>   the run's original config
                   --checkpoint-dir <d>   snapshot dir (or [checkpoint] dir)
@@ -78,6 +83,9 @@ COMMANDS:
                   --fast                 smoke-scale run
                   --seed <n>             (default 42)
                   --out <dir>            CSV output dir (default out/)
+    bench       Run a micro-benchmark suite
+                  --suite <s>            kernels (default kernels)
+                  --out <dir>            output dir (default out/bench)
     artifacts   Inspect the AOT artifact manifest
                   --dir <dir>            (default artifacts/)
     version     Print the version
@@ -86,7 +94,8 @@ COMMANDS:
 ENVIRONMENT:
     ECSGMCMC_LOG         error|warn|info|debug|trace (default info)
     ECSGMCMC_ARTIFACTS   artifacts directory override
-    ECSGMCMC_BENCH_FAST  1 = shrink all bench/experiment budgets",
+    ECSGMCMC_BENCH_FAST  1 = shrink all bench/experiment budgets
+    ECSGMCMC_DISPATCH    scalar|simd kernel-dispatch override (config/CLI win)",
         crate::VERSION
     );
 }

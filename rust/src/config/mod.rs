@@ -10,6 +10,7 @@
 pub mod toml;
 
 use crate::coordinator::{ChurnModel, TransportKind};
+use crate::math::simd::DispatchChoice;
 use crate::samplers::SghmcParams;
 use crate::sink::SinkSpec;
 use anyhow::{bail, Context, Result};
@@ -189,6 +190,11 @@ pub struct RunConfig {
     /// Bounded-staleness admission gate (`[churn] staleness_bound`,
     /// `--staleness-bound`); `None` disables it.
     pub staleness_bound: Option<u64>,
+    /// Kernel dispatch (`[kernels] dispatch`, `--dispatch`): `auto` picks
+    /// the SIMD packed kernels when the CPU supports them, `scalar` forces
+    /// the bitwise-reproducible reference kernels, `simd` forces the
+    /// packed kernels and errors on unsupported hardware (DESIGN.md §10).
+    pub dispatch: DispatchChoice,
 }
 
 impl Default for RunConfig {
@@ -220,6 +226,7 @@ impl Default for RunConfig {
             checkpoint_keep: 3,
             churn: ChurnModel::none(),
             staleness_bound: None,
+            dispatch: DispatchChoice::Auto,
         }
     }
 }
@@ -316,6 +323,10 @@ impl RunConfig {
             cfg.staleness_bound = Some(b as u64);
         }
 
+        if let Some(s) = t.get_str("kernels", "dispatch") {
+            cfg.dispatch = DispatchChoice::from_str(s)?;
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -403,6 +414,13 @@ impl RunConfig {
             if self.checkpoint_keep == 0 {
                 bail!("[checkpoint] keep must be >= 1");
             }
+        }
+        if self.dispatch == DispatchChoice::Simd && !crate::math::simd::simd_supported() {
+            bail!(
+                "[kernels] dispatch = \"simd\" but this CPU lacks the required \
+                 features ({}); use \"auto\" or \"scalar\"",
+                crate::math::simd::cpu_features()
+            );
         }
         Ok(())
     }
@@ -599,6 +617,25 @@ alpha = 0.5
              [coordinator]\ntransport = \"lockfree\"\n[churn]\nrate = 0.5\nfail_frac = 1.5\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_kernel_dispatch() {
+        let cfg = RunConfig::from_toml_str("[kernels]\ndispatch = \"scalar\"\n").unwrap();
+        assert_eq!(cfg.dispatch, DispatchChoice::Scalar);
+        // Default: auto-detection.
+        let cfg = RunConfig::from_toml_str("[run]\nscheme = \"ec\"\n").unwrap();
+        assert_eq!(cfg.dispatch, DispatchChoice::Auto);
+        // Unknown modes are rejected at parse time.
+        assert!(RunConfig::from_toml_str("[kernels]\ndispatch = \"quantum\"\n").is_err());
+        // "simd" round-trips only on capable hardware; elsewhere validate()
+        // rejects it (fail fast instead of silently degrading).
+        let forced = RunConfig::from_toml_str("[kernels]\ndispatch = \"simd\"\n");
+        if crate::math::simd::simd_supported() {
+            assert_eq!(forced.unwrap().dispatch, DispatchChoice::Simd);
+        } else {
+            assert!(forced.is_err());
+        }
     }
 
     #[test]

@@ -689,6 +689,7 @@ fn run_ec_inner(
         churn_fail: cfg.churn.fail_frac,
         churn_join: cfg.churn.join_frac,
         staleness_bound: cfg.staleness_bound,
+        kernel_dispatch: crate::math::simd::kernel_kind().name().to_string(),
     };
 
     let hub = match &resume {

@@ -7,5 +7,6 @@
 
 pub mod linalg;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod vecops;

@@ -1,0 +1,247 @@
+//! Runtime CPU-feature detection and kernel dispatch.
+//!
+//! One process-wide mode selects between the scalar tiled kernels (the
+//! bit-exactness reference — identical output to the pre-SIMD engine) and
+//! the packed SIMD kernels (AVX2/FMA on x86_64, NEON on aarch64). The mode
+//! is resolved at most once per process, in priority order:
+//!
+//!   1. an explicit [`set_dispatch`] call (config `[kernels] dispatch` or
+//!      the `--dispatch` CLI flag),
+//!   2. the `ECSGMCMC_DISPATCH` environment variable (`scalar` / `simd`),
+//!   3. auto-detection: SIMD when the CPU supports it, scalar otherwise.
+//!
+//! Contract (DESIGN.md §10): elementwise/vertical SIMD ops are bitwise
+//! identical to scalar (same per-element operation order, no FMA fusion);
+//! only *reductions* (GEMM accumulation, `dot`, `norm_sq`) change float
+//! summation order and are therefore tolerance-compared, never
+//! bit-compared. `dispatch = scalar` reproduces historical runs exactly.
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// What the user asked for (config / CLI / env).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchChoice {
+    /// Pick SIMD when supported, scalar otherwise (the default).
+    Auto,
+    /// Force the scalar reference kernels (bitwise-reproducible).
+    Scalar,
+    /// Force SIMD; an error on hardware without the required features.
+    Simd,
+}
+
+impl DispatchChoice {
+    pub fn from_str(s: &str) -> Result<DispatchChoice> {
+        Ok(match s {
+            "auto" => DispatchChoice::Auto,
+            "scalar" => DispatchChoice::Scalar,
+            "simd" => DispatchChoice::Simd,
+            other => bail!("unknown kernel dispatch '{other}' (want auto|scalar|simd)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchChoice::Auto => "auto",
+            DispatchChoice::Scalar => "scalar",
+            DispatchChoice::Simd => "simd",
+        }
+    }
+}
+
+/// What the process actually runs with after resolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    Scalar,
+    Simd,
+}
+
+impl KernelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Simd => "simd",
+        }
+    }
+}
+
+const MODE_UNSET: u8 = 0;
+const MODE_SCALAR: u8 = 1;
+const MODE_SIMD: u8 = 2;
+
+/// Process-wide resolved mode. Benign race on lazy init: every racer
+/// resolves to the same value (env + hardware are process-constant until
+/// an explicit `set_dispatch`/`force_kernel`, which callers serialize).
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Does this CPU support the SIMD kernels we ship?
+pub fn simd_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        true // NEON is baseline on aarch64.
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
+
+/// Human-readable feature summary for logs and the `meta` stream event.
+pub fn cpu_features() -> String {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let mut feats = vec!["x86_64"];
+        if std::arch::is_x86_feature_detected!("avx2") {
+            feats.push("avx2");
+        }
+        if std::arch::is_x86_feature_detected!("fma") {
+            feats.push("fma");
+        }
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            feats.push("avx512f");
+        }
+        feats.join(" ")
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        "aarch64 neon".to_string()
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        "generic".to_string()
+    }
+}
+
+fn resolve_auto() -> u8 {
+    match std::env::var("ECSGMCMC_DISPATCH").ok().as_deref() {
+        Some("scalar") => MODE_SCALAR,
+        Some("simd") => {
+            if simd_supported() {
+                MODE_SIMD
+            } else {
+                crate::log_warn!(
+                    "ECSGMCMC_DISPATCH=simd but CPU lacks required features; using scalar"
+                );
+                MODE_SCALAR
+            }
+        }
+        Some(other) if !other.is_empty() => {
+            crate::log_warn!("ignoring unknown ECSGMCMC_DISPATCH='{other}'");
+            if simd_supported() {
+                MODE_SIMD
+            } else {
+                MODE_SCALAR
+            }
+        }
+        _ => {
+            if simd_supported() {
+                MODE_SIMD
+            } else {
+                MODE_SCALAR
+            }
+        }
+    }
+}
+
+/// The resolved kernel kind for this process (lazy auto-resolution).
+pub fn kernel_kind() -> KernelKind {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_SCALAR => KernelKind::Scalar,
+        MODE_SIMD => KernelKind::Simd,
+        _ => {
+            let resolved = resolve_auto();
+            MODE.store(resolved, Ordering::Relaxed);
+            if resolved == MODE_SIMD {
+                KernelKind::Simd
+            } else {
+                KernelKind::Scalar
+            }
+        }
+    }
+}
+
+/// Apply an explicit dispatch choice (config / CLI). Returns the resolved
+/// kind. `Simd` on unsupported hardware is a hard error so configured runs
+/// fail fast instead of silently degrading reproducibility expectations.
+pub fn set_dispatch(choice: DispatchChoice) -> Result<KernelKind> {
+    let kind = match choice {
+        DispatchChoice::Scalar => KernelKind::Scalar,
+        DispatchChoice::Simd => {
+            if !simd_supported() {
+                bail!(
+                    "dispatch = simd requested but CPU lacks required features ({})",
+                    cpu_features()
+                );
+            }
+            KernelKind::Simd
+        }
+        DispatchChoice::Auto => {
+            MODE.store(MODE_UNSET, Ordering::Relaxed);
+            return Ok(kernel_kind());
+        }
+    };
+    MODE.store(
+        match kind {
+            KernelKind::Scalar => MODE_SCALAR,
+            KernelKind::Simd => MODE_SIMD,
+        },
+        Ordering::Relaxed,
+    );
+    Ok(kind)
+}
+
+/// Force a kernel kind directly (benches and parity tests). Falls back to
+/// scalar when SIMD is unsupported rather than erroring.
+pub fn force_kernel(kind: KernelKind) -> KernelKind {
+    let actual = match kind {
+        KernelKind::Simd if !simd_supported() => KernelKind::Scalar,
+        k => k,
+    };
+    MODE.store(
+        match actual {
+            KernelKind::Scalar => MODE_SCALAR,
+            KernelKind::Simd => MODE_SIMD,
+        },
+        Ordering::Relaxed,
+    );
+    actual
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_roundtrips_names() {
+        for c in [DispatchChoice::Auto, DispatchChoice::Scalar, DispatchChoice::Simd] {
+            assert_eq!(DispatchChoice::from_str(c.name()).unwrap(), c);
+        }
+        assert!(DispatchChoice::from_str("fast").is_err());
+    }
+
+    #[test]
+    fn forced_scalar_reports_scalar() {
+        // NB: mutates process-global mode; fine inside the unit-test binary
+        // because nothing else here depends on the resolved mode.
+        assert_eq!(force_kernel(KernelKind::Scalar), KernelKind::Scalar);
+        assert_eq!(kernel_kind(), KernelKind::Scalar);
+        let k = force_kernel(KernelKind::Simd);
+        assert_eq!(kernel_kind(), k);
+        if simd_supported() {
+            assert_eq!(k, KernelKind::Simd);
+        } else {
+            assert_eq!(k, KernelKind::Scalar);
+        }
+    }
+
+    #[test]
+    fn features_string_names_arch() {
+        let f = cpu_features();
+        assert!(!f.is_empty());
+    }
+}

@@ -1,14 +1,38 @@
-//! Allocation-free f32 vector kernels for the sampler hot loop.
+//! Allocation-free f32 vector kernels for the sampler hot loop, behind
+//! the same runtime dispatch as the GEMM layer ([`crate::math::simd`]).
 //!
-//! Plain indexed loops over `&[f32]` — LLVM auto-vectorizes these to AVX on
-//! the target CPUs; the shapes are small enough (1e4–1e6 elements) that a
-//! hand-tiled version buys nothing (checked in the §Perf pass, see
-//! EXPERIMENTS.md).
+//! Bit-exactness contract (DESIGN.md §10): the vertical ops (`axpy`,
+//! `axpby`, `scale`, `add`, `sub`, `mean_of`) use separate multiply and
+//! add in their SIMD forms — no FMA fusion — and keep the scalar
+//! per-element order, so they are bit-identical to the scalar loops in
+//! every dispatch mode. Only the reductions (`dot`, `norm_sq`) change
+//! summation order under SIMD (4-lane f64 accumulators) and are
+//! tolerance-compared, never bit-compared; `dispatch = scalar` keeps the
+//! historical sequential f64 sum.
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use crate::math::simd::{kernel_kind, KernelKind};
+
+#[inline]
+fn use_simd() -> bool {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        kernel_kind() == KernelKind::Simd
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
 
 /// `y += a * x`
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
+    if use_simd() {
+        simd_impl::axpy(a, x, y);
+        return;
+    }
     for i in 0..y.len() {
         y[i] += a * x[i];
     }
@@ -18,6 +42,10 @@ pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
 #[inline]
 pub fn axpby(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
+    if use_simd() {
+        simd_impl::axpby(a, x, b, y);
+        return;
+    }
     for i in 0..y.len() {
         y[i] = a * x[i] + b * y[i];
     }
@@ -26,8 +54,25 @@ pub fn axpby(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
 /// `x *= a`
 #[inline]
 pub fn scale(a: f32, x: &mut [f32]) {
+    if use_simd() {
+        simd_impl::scale(a, x);
+        return;
+    }
     for v in x.iter_mut() {
         *v *= a;
+    }
+}
+
+/// `y += x` (the accumulate step every potential's gradient loop needs).
+#[inline]
+pub fn add(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    if use_simd() {
+        simd_impl::add(x, y);
+        return;
+    }
+    for i in 0..y.len() {
+        y[i] += x[i];
     }
 }
 
@@ -36,15 +81,29 @@ pub fn scale(a: f32, x: &mut [f32]) {
 pub fn sub(x: &[f32], y: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(x.len(), out.len());
+    if use_simd() {
+        simd_impl::sub(x, y, out);
+        return;
+    }
     for i in 0..out.len() {
         out[i] = x[i] - y[i];
     }
 }
 
-/// Dot product in f64 accumulation.
+/// Dot product in f64 accumulation. SIMD dispatch sums in 4-lane f64
+/// accumulators (different order, same ~1 ulp-per-lane quality); scalar
+/// dispatch keeps the sequential sum.
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
+    if use_simd() {
+        return simd_impl::dot(x, y);
+    }
+    dot_scalar(x, y)
+}
+
+#[inline]
+fn dot_scalar(x: &[f32], y: &[f32]) -> f64 {
     let mut acc = 0f64;
     for i in 0..x.len() {
         acc += x[i] as f64 * y[i] as f64;
@@ -58,7 +117,8 @@ pub fn norm_sq(x: &[f32]) -> f64 {
     dot(x, x)
 }
 
-/// Euclidean distance between two vectors.
+/// Euclidean distance between two vectors (diagnostics path — stays
+/// scalar; not hot).
 #[inline]
 pub fn l2_dist(x: &[f32], y: &[f32]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
@@ -71,6 +131,9 @@ pub fn l2_dist(x: &[f32], y: &[f32]) -> f64 {
 }
 
 /// Elementwise mean of several equal-length vectors into `out`.
+/// Built on [`add`]/[`scale`], so it inherits their bit-exactness: the
+/// accumulation order (vector by vector, element by element) matches the
+/// historical loop in every dispatch mode.
 pub fn mean_of(vectors: &[&[f32]], out: &mut [f32]) {
     assert!(!vectors.is_empty());
     let n = out.len();
@@ -80,9 +143,7 @@ pub fn mean_of(vectors: &[&[f32]], out: &mut [f32]) {
     let inv = 1.0 / vectors.len() as f32;
     out.fill(0.0);
     for v in vectors {
-        for i in 0..n {
-            out[i] += v[i];
-        }
+        add(v, out);
     }
     scale(inv, out);
 }
@@ -91,6 +152,306 @@ pub fn mean_of(vectors: &[&[f32]], out: &mut [f32]) {
 #[inline]
 pub fn copy(src: &[f32], dst: &mut [f32]) {
     dst.copy_from_slice(src);
+}
+
+/// AVX2 forms of the vertical ops (separate mul+add — bit-identical to
+/// scalar) and the f64-lane reductions.
+#[cfg(target_arch = "x86_64")]
+mod simd_impl {
+    use std::arch::x86_64::*;
+
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        unsafe { axpy_avx(a, x, y) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_avx(a: f32, x: &[f32], y: &mut [f32]) {
+        let av = _mm256_set1_ps(a);
+        let n = y.len();
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let prod = _mm256_mul_ps(av, _mm256_loadu_ps(xp.add(i)));
+            let yv = _mm256_loadu_ps(yp.add(i));
+            _mm256_storeu_ps(yp.add(i), _mm256_add_ps(yv, prod));
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) += a * *xp.add(i);
+            i += 1;
+        }
+    }
+
+    pub fn axpby(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
+        unsafe { axpby_avx(a, x, b, y) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpby_avx(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
+        let av = _mm256_set1_ps(a);
+        let bv = _mm256_set1_ps(b);
+        let n = y.len();
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let ax = _mm256_mul_ps(av, _mm256_loadu_ps(xp.add(i)));
+            let by = _mm256_mul_ps(bv, _mm256_loadu_ps(yp.add(i)));
+            _mm256_storeu_ps(yp.add(i), _mm256_add_ps(ax, by));
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) = a * *xp.add(i) + b * *yp.add(i);
+            i += 1;
+        }
+    }
+
+    pub fn scale(a: f32, x: &mut [f32]) {
+        unsafe { scale_avx(a, x) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn scale_avx(a: f32, x: &mut [f32]) {
+        let av = _mm256_set1_ps(a);
+        let n = x.len();
+        let xp = x.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(xp.add(i));
+            _mm256_storeu_ps(xp.add(i), _mm256_mul_ps(v, av));
+            i += 8;
+        }
+        while i < n {
+            *xp.add(i) *= a;
+            i += 1;
+        }
+    }
+
+    pub fn add(x: &[f32], y: &mut [f32]) {
+        unsafe { add_avx(x, y) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_avx(x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let s = _mm256_add_ps(_mm256_loadu_ps(yp.add(i)), _mm256_loadu_ps(xp.add(i)));
+            _mm256_storeu_ps(yp.add(i), s);
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) += *xp.add(i);
+            i += 1;
+        }
+    }
+
+    pub fn sub(x: &[f32], y: &[f32], out: &mut [f32]) {
+        unsafe { sub_avx(x, y, out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn sub_avx(x: &[f32], y: &[f32], out: &mut [f32]) {
+        let n = out.len();
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+            _mm256_storeu_ps(op.add(i), d);
+            i += 8;
+        }
+        while i < n {
+            *op.add(i) = *xp.add(i) - *yp.add(i);
+            i += 1;
+        }
+    }
+
+    pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+        unsafe { dot_avx(x, y) }
+    }
+
+    /// f64-widened dot: each 8-float chunk converts to two 4-lane f64
+    /// vectors, multiplies, and adds into two accumulators (no FMA
+    /// needed for precision — products are exact in f64 for f32 inputs).
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_avx(x: &[f32], y: &[f32]) -> f64 {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(xp.add(i));
+            let yv = _mm256_loadu_ps(yp.add(i));
+            let xlo = _mm256_cvtps_pd(_mm256_castps256_ps128(xv));
+            let xhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(xv));
+            let ylo = _mm256_cvtps_pd(_mm256_castps256_ps128(yv));
+            let yhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(yv));
+            acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(xlo, ylo));
+            acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(xhi, yhi));
+            i += 8;
+        }
+        let acc = _mm256_add_pd(acc0, acc1);
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        while i < n {
+            s += *xp.add(i) as f64 * *yp.add(i) as f64;
+            i += 1;
+        }
+        s
+    }
+}
+
+/// NEON forms of the vertical ops (separate mul+add — bit-identical to
+/// scalar). The f64-widening reductions stay scalar on aarch64: with
+/// 128-bit vectors the convert-multiply-accumulate chain has no width
+/// advantage over the sequential f64 sum.
+#[cfg(target_arch = "aarch64")]
+mod simd_impl {
+    use std::arch::aarch64::*;
+
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        unsafe { axpy_neon(a, x, y) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_neon(a: f32, x: &[f32], y: &mut [f32]) {
+        let av = vdupq_n_f32(a);
+        let n = y.len();
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let prod = vmulq_f32(av, vld1q_f32(xp.add(i)));
+            vst1q_f32(yp.add(i), vaddq_f32(vld1q_f32(yp.add(i)), prod));
+            i += 4;
+        }
+        while i < n {
+            *yp.add(i) += a * *xp.add(i);
+            i += 1;
+        }
+    }
+
+    pub fn axpby(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
+        unsafe { axpby_neon(a, x, b, y) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpby_neon(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
+        let av = vdupq_n_f32(a);
+        let bv = vdupq_n_f32(b);
+        let n = y.len();
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let ax = vmulq_f32(av, vld1q_f32(xp.add(i)));
+            let by = vmulq_f32(bv, vld1q_f32(yp.add(i)));
+            vst1q_f32(yp.add(i), vaddq_f32(ax, by));
+            i += 4;
+        }
+        while i < n {
+            *yp.add(i) = a * *xp.add(i) + b * *yp.add(i);
+            i += 1;
+        }
+    }
+
+    pub fn scale(a: f32, x: &mut [f32]) {
+        unsafe { scale_neon(a, x) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn scale_neon(a: f32, x: &mut [f32]) {
+        let av = vdupq_n_f32(a);
+        let n = x.len();
+        let xp = x.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(xp.add(i), vmulq_f32(vld1q_f32(xp.add(i)), av));
+            i += 4;
+        }
+        while i < n {
+            *xp.add(i) *= a;
+            i += 1;
+        }
+    }
+
+    pub fn add(x: &[f32], y: &mut [f32]) {
+        unsafe { add_neon(x, y) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn add_neon(x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(yp.add(i), vaddq_f32(vld1q_f32(yp.add(i)), vld1q_f32(xp.add(i))));
+            i += 4;
+        }
+        while i < n {
+            *yp.add(i) += *xp.add(i);
+            i += 1;
+        }
+    }
+
+    pub fn sub(x: &[f32], y: &[f32], out: &mut [f32]) {
+        unsafe { sub_neon(x, y, out) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn sub_neon(x: &[f32], y: &[f32], out: &mut [f32]) {
+        let n = out.len();
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(op.add(i), vsubq_f32(vld1q_f32(xp.add(i)), vld1q_f32(yp.add(i))));
+            i += 4;
+        }
+        while i < n {
+            *op.add(i) = *xp.add(i) - *yp.add(i);
+            i += 1;
+        }
+    }
+
+    pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+        super::dot_scalar(x, y)
+    }
+}
+
+/// Stub for targets without SIMD kernels — `use_simd()` is constant-false
+/// there, so none of these are ever reached (they exist so the dispatch
+/// call sites compile unconditionally).
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod simd_impl {
+    pub fn axpy(_: f32, _: &[f32], _: &mut [f32]) {
+        unreachable!()
+    }
+    pub fn axpby(_: f32, _: &[f32], _: f32, _: &mut [f32]) {
+        unreachable!()
+    }
+    pub fn scale(_: f32, _: &mut [f32]) {
+        unreachable!()
+    }
+    pub fn add(_: &[f32], _: &mut [f32]) {
+        unreachable!()
+    }
+    pub fn sub(_: &[f32], _: &[f32], _: &mut [f32]) {
+        unreachable!()
+    }
+    pub fn dot(_: &[f32], _: &[f32]) -> f64 {
+        unreachable!()
+    }
 }
 
 #[cfg(test)]
@@ -111,6 +472,14 @@ mod tests {
         let mut y = [2.0, 4.0];
         axpby(3.0, &x, 0.5, &mut y);
         assert_eq!(y, [4.0, 5.0]);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [1.0f32, 1.0, 1.0];
+        add(&x, &mut y);
+        assert_eq!(y, [2.0, 3.0, 4.0]);
     }
 
     #[test]

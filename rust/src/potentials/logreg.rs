@@ -7,10 +7,11 @@
 //! is real, not injected).
 
 use super::nn::ops;
-use super::nn::WEIGHT_DECAY;
+use super::nn::gaussian_prior;
 use super::Potential;
 use crate::data::Dataset;
 use crate::math::rng::Pcg64;
+use crate::math::vecops;
 
 pub struct LogRegPotential {
     train: Dataset,
@@ -57,25 +58,15 @@ impl LogRegPotential {
         }
         let mut dw = vec![0.0f32; d * c];
         ops::gemm_tn(x, &dz, m, d, c, &mut dw);
-        for (g, v) in grad[..d * c].iter_mut().zip(&dw) {
-            *g += v;
-        }
+        vecops::add(&dw, &mut grad[..d * c]);
         let mut db = vec![0.0f32; c];
         ops::bias_grad(&dz, m, c, &mut db);
-        for (g, v) in grad[d * c..d * c + c].iter_mut().zip(&db) {
-            *g += v;
-        }
+        vecops::add(&db, &mut grad[d * c..d * c + c]);
         scale * nll
     }
 
     fn add_prior(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
-        let mut sq = 0.0f64;
-        let wd = WEIGHT_DECAY as f32;
-        for i in 0..self.n {
-            sq += (theta[i] as f64) * (theta[i] as f64);
-            grad[i] += 2.0 * wd * theta[i];
-        }
-        WEIGHT_DECAY * sq
+        gaussian_prior(&theta[..self.n], &mut grad[..self.n])
     }
 }
 
@@ -177,7 +168,7 @@ impl Potential for LogRegPotential {
         for (b, g) in grads.chunks_mut(self.n).enumerate() {
             let x_b = &x[b * m * d..(b + 1) * m * d];
             let dz_b = &dz[b * m * c..(b + 1) * m * c];
-            ops::gemm_tn_tiled(x_b, dz_b, m, d, c, &mut g[..d * c]);
+            ops::gemm_tn_batch(x_b, dz_b, m, d, c, &mut g[..d * c]);
             ops::bias_grad(dz_b, m, c, &mut g[d * c..d * c + c]);
             us[b] += self.add_prior(thetas[b], g);
         }

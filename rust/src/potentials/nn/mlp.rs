@@ -7,9 +7,10 @@
 //! XLA artifacts (cross-checked in `rust/tests/test_xla_roundtrip.rs`).
 
 use super::ops;
-use super::{layer_sizes, n_params, param_offsets, WEIGHT_DECAY};
+use super::{gaussian_prior, layer_sizes, n_params, param_offsets};
 use crate::data::Dataset;
 use crate::math::rng::Pcg64;
+use crate::math::vecops;
 use crate::potentials::Potential;
 use crate::util::round_up;
 
@@ -65,9 +66,7 @@ impl NativeMlp {
     pub fn init_theta(&self, scale: f32, rng: &mut Pcg64) -> Vec<f32> {
         let mut theta = vec![0.0f32; self.padded];
         rng.fill_normal(&mut theta[..self.n]);
-        for t in theta[..self.n].iter_mut() {
-            *t *= scale;
-        }
+        vecops::scale(scale, &mut theta[..self.n]);
         theta
     }
 
@@ -140,16 +139,10 @@ impl NativeMlp {
             {
                 let mut dw = vec![0.0f32; in_d * out_d];
                 ops::gemm_tn(input, &dz_cur, m, in_d, out_d, &mut dw);
-                let gslice = &mut grad[w_off..w_off + in_d * out_d];
-                for (g, d) in gslice.iter_mut().zip(&dw) {
-                    *g += d;
-                }
+                vecops::add(&dw, &mut grad[w_off..w_off + in_d * out_d]);
                 let mut db = vec![0.0f32; out_d];
                 ops::bias_grad(&dz_cur, m, out_d, &mut db);
-                let bslice = &mut grad[b_off..b_off + out_d];
-                for (g, d) in bslice.iter_mut().zip(&db) {
-                    *g += d;
-                }
+                vecops::add(&db, &mut grad[b_off..b_off + out_d]);
             }
             if l > 0 {
                 // dH = dz Wᵀ, masked by ReLU of the previous activation.
@@ -163,15 +156,10 @@ impl NativeMlp {
         scale * nll
     }
 
-    /// Add the Gaussian-prior term to U and grad.
+    /// Add the Gaussian-prior term to U and grad (shared dispatched
+    /// helper, restricted to the live coordinates).
     fn add_prior(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
-        let mut sq = 0.0f64;
-        let wd = WEIGHT_DECAY as f32;
-        for i in 0..self.n {
-            sq += (theta[i] as f64) * (theta[i] as f64);
-            grad[i] += 2.0 * wd * theta[i];
-        }
-        WEIGHT_DECAY * sq
+        gaussian_prior(&theta[..self.n], &mut grad[..self.n])
     }
 
     /// Batched evaluation over a dataset: (nll per example, accuracy).
@@ -302,7 +290,7 @@ impl Potential for NativeMlp {
                 let in_b = &input[b * m * in_d..(b + 1) * m * in_d];
                 let dz_b = &dz_cur[b * m * out_d..(b + 1) * m * out_d];
                 let dw = &mut g[w_off..w_off + in_d * out_d];
-                ops::gemm_tn_tiled(in_b, dz_b, m, in_d, out_d, dw);
+                ops::gemm_tn_batch(in_b, dz_b, m, in_d, out_d, dw);
                 ops::bias_grad(dz_b, m, out_d, &mut g[b_off..b_off + out_d]);
             }
             if l > 0 {

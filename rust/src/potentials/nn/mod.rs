@@ -18,6 +18,19 @@ pub mod resnet;
 /// Gaussian-prior weight decay λ (matches `model.WEIGHT_DECAY`).
 pub const WEIGHT_DECAY: f64 = 1e-5;
 
+/// Shared Gaussian-prior term: returns λ‖θ‖² and accumulates
+/// `grad += 2λθ`, both over the live (unpadded) coordinates the caller
+/// slices to. Routed through [`crate::math::vecops`] so the kernel
+/// dispatch covers it; `2.0 * λ` as f32 is exact (a power-of-two scale
+/// of λ), and `norm_sq`/`axpy` keep the historical accumulation order in
+/// scalar dispatch, so this is bit-identical to the per-potential loops
+/// it replaced.
+pub fn gaussian_prior(theta: &[f32], grad: &mut [f32]) -> f64 {
+    let sq = crate::math::vecops::norm_sq(theta);
+    crate::math::vecops::axpy(2.0 * WEIGHT_DECAY as f32, theta, grad);
+    WEIGHT_DECAY * sq
+}
+
 /// Shapes of one dense chain through `dims` (mirrors model.layer_sizes).
 pub fn layer_sizes(dims: &[usize]) -> Vec<((usize, usize), usize)> {
     dims.windows(2).map(|w| ((w[0], w[1]), w[1])).collect()

@@ -1,38 +1,109 @@
-//! Dense NN primitives: blocked GEMM variants, bias/ReLU, softmax
-//! cross-entropy. All f32, row-major, allocation-free (caller owns
-//! buffers).
+//! Dense NN primitives behind the runtime kernel dispatch: GEMM in three
+//! orientations, bias/ReLU elementwise ops, softmax cross-entropy. All
+//! f32, row-major, caller-owned output buffers.
 //!
 //! The three GEMM orientations cover forward and backward passes:
 //!   * `gemm_nn`: C = A·B          (forward:   h · W)
 //!   * `gemm_tn`: C = Aᵀ·B         (backward:  hᵀ · dZ → dW)
 //!   * `gemm_nt`: C = A·Bᵀ         (backward:  dZ · Wᵀ → dH)
 //!
-//! Loop orders are chosen for unit-stride inner loops so LLVM
-//! auto-vectorizes; see EXPERIMENTS.md §Perf for measured throughput.
+//! Each exists in three kernel variants (DESIGN.md §10):
+//!   * `*_scalar` — axpy-style loops with the gated zero-skip; the
+//!     bit-exactness reference (`dispatch = scalar` reproduces the
+//!     pre-SIMD engine bit for bit).
+//!   * `*_tiled` — MR×NR register-tiled, LLVM-autovectorized; the
+//!     grouped batched path's historical kernel and the packed kernels'
+//!     fallback on CPUs without the required features.
+//!   * `*_packed` — cache-blocked (MC×KC×NC, see `pack.rs`) with A/B
+//!     packed into contiguous micro-panels and an explicit AVX2/FMA
+//!     (x86_64) or NEON (aarch64) microkernel.
 //!
-//! The `*_grouped` / `*_tiled` variants below serve the batched
-//! multi-chain gradient engine (DESIGN.md §9): B chains' activations are
-//! stacked along the m-dimension (m grows from `batch` to `B·batch`) and
-//! one call covers every chain, each row-block multiplying against its
-//! own chain's weight slice — a strided-batched GEMM. The tiled kernels
-//! hold an MR×NR accumulator block in registers, so they are
-//! substantially faster than the axpy-style loops above but sum in a
-//! different order; group count 1 therefore delegates to the scalar
-//! kernels, which is what makes the batched gradient path bit-identical
-//! to the unbatched one at B = 1.
+//! The public `gemm_*` entry points consult
+//! [`crate::math::simd::kernel_kind`] and route to the scalar or packed
+//! variant. The `*_grouped` variants serve the batched multi-chain
+//! gradient engine (DESIGN.md §9): B chains' activations are stacked
+//! along the m-dimension and each row-block multiplies its own chain's
+//! weight slice — a strided-batched GEMM. Group count 1 delegates to the
+//! plain dispatched kernel, which keeps the batched gradient path
+//! bit-identical to the unbatched one at B = 1 *within* a dispatch mode.
+//!
+//! Elementwise ops (`add_bias`, `relu`, `relu_backward`, `bias_grad`)
+//! dispatch too, but their SIMD forms are bit-identical to scalar (same
+//! per-element operation order, no FMA fusion, scalar NaN/−0.0
+//! semantics) — only GEMM reductions change summation order.
+
+use crate::math::simd::{kernel_kind, KernelKind};
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+mod pack;
+#[cfg(target_arch = "aarch64")]
+mod simd_neon;
+#[cfg(target_arch = "x86_64")]
+mod simd_x86;
+
+#[cfg(target_arch = "aarch64")]
+use simd_neon as simd_arch;
+#[cfg(target_arch = "x86_64")]
+use simd_x86 as simd_arch;
 
 /// True when every element is finite — the precondition for the sparse
-/// zero-skip fast path in [`gemm_nn`]/[`gemm_tn`]. Skipping a zero `a`
-/// element is only sound when the skipped B row is all-finite: IEEE 754
-/// says `0.0 × ±inf` and `0.0 × NaN` are NaN, so the skip would silently
-/// launder a gradient blow-up into a finite result.
+/// zero-skip fast path in [`gemm_nn_scalar`]/[`gemm_tn_scalar`]. Skipping
+/// a zero `a` element is only sound when the skipped B row is all-finite:
+/// IEEE 754 says `0.0 × ±inf` and `0.0 × NaN` are NaN, so the skip would
+/// silently launder a gradient blow-up into a finite result. (The packed
+/// kernels have no skip at all, so they propagate non-finite values
+/// naturally.)
 #[inline]
 fn all_finite(xs: &[f32]) -> bool {
     xs.iter().all(|x| x.is_finite())
 }
 
-/// C(m,n) = A(m,k) · B(k,n); C is overwritten.
+// ---------------------------------------------------------------------
+// Dispatched entry points
+// ---------------------------------------------------------------------
+
+/// C(m,n) = A(m,k) · B(k,n); C is overwritten. Routes to the scalar or
+/// packed-SIMD kernel per the process dispatch mode.
 pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    match kernel_kind() {
+        KernelKind::Scalar => gemm_nn_scalar(a, b, m, k, n, c),
+        KernelKind::Simd => gemm_nn_packed(a, b, m, k, n, c),
+    }
+}
+
+/// C(k,n) = A(m,k)ᵀ · B(m,n); C is overwritten. (dW = hᵀ · dZ)
+pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    match kernel_kind() {
+        KernelKind::Scalar => gemm_tn_scalar(a, b, m, k, n, c),
+        KernelKind::Simd => gemm_tn_packed(a, b, m, k, n, c),
+    }
+}
+
+/// C(m,k) = A(m,n) · B(k,n)ᵀ; C is overwritten. (dH = dZ · Wᵀ)
+pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    match kernel_kind() {
+        KernelKind::Scalar => gemm_nt_scalar(a, b, m, n, k, c),
+        KernelKind::Simd => gemm_nt_packed(a, b, m, n, k, c),
+    }
+}
+
+/// Per-chain dW reduction of the batched path: C(k,n) = Aᵀ·B. Scalar
+/// dispatch keeps the register-tiled kernel (the batched engine's
+/// historical reference, so `dispatch = scalar` stays bitwise-stable);
+/// SIMD dispatch runs the packed kernel.
+pub fn gemm_tn_batch(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    match kernel_kind() {
+        KernelKind::Scalar => gemm_tn_tiled(a, b, m, k, n, c),
+        KernelKind::Simd => gemm_tn_packed(a, b, m, k, n, c),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference kernels (the bit-exactness baseline)
+// ---------------------------------------------------------------------
+
+/// Scalar reference C(m,n) = A(m,k) · B(k,n); C is overwritten.
+pub fn gemm_nn_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
@@ -56,13 +127,13 @@ pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]
     }
 }
 
-/// C(k,n) = A(m,k)ᵀ · B(m,n); C is overwritten. (dW = hᵀ · dZ)
-pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+/// Scalar reference C(k,n) = A(m,k)ᵀ · B(m,n); C is overwritten.
+pub fn gemm_tn_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(c.len(), k * n);
     c.fill(0.0);
-    // Same zero-skip gating as `gemm_nn`: see `all_finite`.
+    // Same zero-skip gating as `gemm_nn_scalar`: see `all_finite`.
     let may_skip = all_finite(b);
     for i in 0..m {
         let a_row = &a[i * k..(i + 1) * k];
@@ -79,8 +150,8 @@ pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]
     }
 }
 
-/// C(m,k) = A(m,n) · B(k,n)ᵀ; C is overwritten. (dH = dZ · Wᵀ)
-pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+/// Scalar reference C(m,k) = A(m,n) · B(k,n)ᵀ; C is overwritten.
+pub fn gemm_nt_scalar(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * k);
@@ -247,6 +318,60 @@ pub fn gemm_nt_tiled(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut
 }
 
 // ---------------------------------------------------------------------
+// Packed SIMD kernels (cache-blocked, explicit microkernel)
+// ---------------------------------------------------------------------
+
+/// Packed, cache-blocked C(m,n) = A(m,k)·B(k,n) with the SIMD
+/// microkernel. Falls back to the tiled kernel on CPUs without the
+/// required features, so it is safe to call unconditionally (benches and
+/// parity tests do).
+pub fn gemm_nn_packed(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        if crate::math::simd::simd_supported() {
+            simd_arch::gemm_packed(a, k, 1, b, n, 1, m, k, n, c);
+            return;
+        }
+    }
+    gemm_nn_tiled(a, b, m, k, n, c);
+}
+
+/// Packed, cache-blocked C(k,n) = A(m,k)ᵀ·B(m,n); same fallback rule as
+/// [`gemm_nn_packed`].
+pub fn gemm_tn_packed(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        if crate::math::simd::simd_supported() {
+            simd_arch::gemm_packed(a, 1, k, b, n, 1, k, m, n, c);
+            return;
+        }
+    }
+    gemm_tn_tiled(a, b, m, k, n, c);
+}
+
+/// Packed, cache-blocked C(m,k) = A(m,n)·B(k,n)ᵀ; same fallback rule as
+/// [`gemm_nn_packed`].
+pub fn gemm_nt_packed(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        if crate::math::simd::simd_supported() {
+            simd_arch::gemm_packed(a, n, 1, b, 1, n, m, n, k, c);
+            return;
+        }
+    }
+    gemm_nt_tiled(a, b, m, n, k, c);
+}
+
+// ---------------------------------------------------------------------
 // Grouped (strided-batched) kernels — one call per layer for B chains
 // ---------------------------------------------------------------------
 
@@ -256,8 +381,10 @@ pub fn gemm_nt_tiled(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut
 /// slice, and `c` is (G·m, n). This is the forward-pass shape of the
 /// batched multi-chain gradient engine (DESIGN.md §9): the m-dimension
 /// grows from `batch` to `B·batch` while each row-block multiplies its
-/// own chain's weights. A single group delegates to [`gemm_nn`]
-/// bit-exactly; multiple groups run [`gemm_nn_tiled`] per group.
+/// own chain's weights. A single group delegates to the dispatched
+/// [`gemm_nn`] — bit-identical to the unbatched path in either dispatch
+/// mode; multiple groups run the tiled (scalar mode) or packed (SIMD
+/// mode) kernel per group.
 pub fn gemm_nn_grouped(a: &[f32], bs: &[&[f32]], m: usize, k: usize, n: usize, c: &mut [f32]) {
     let groups = bs.len();
     debug_assert_eq!(a.len(), groups * m * k);
@@ -266,16 +393,21 @@ pub fn gemm_nn_grouped(a: &[f32], bs: &[&[f32]], m: usize, k: usize, n: usize, c
         gemm_nn(a, bs[0], m, k, n, c);
         return;
     }
+    let kind = kernel_kind();
     for (g, &b) in bs.iter().enumerate() {
         let a_g = &a[g * m * k..(g + 1) * m * k];
         let c_g = &mut c[g * m * n..(g + 1) * m * n];
-        gemm_nn_tiled(a_g, b, m, k, n, c_g);
+        match kind {
+            KernelKind::Scalar => gemm_nn_tiled(a_g, b, m, k, n, c_g),
+            KernelKind::Simd => gemm_nn_packed(a_g, b, m, k, n, c_g),
+        }
     }
 }
 
 /// Grouped C_g = A_g · B_gᵀ over stacked rows (the dH backward shape):
 /// `a` is (G·m, n) stacked, `bs[g]` is (k, n), `c` is (G·m, k). One
-/// group delegates to [`gemm_nt`] bit-exactly.
+/// group delegates to the dispatched [`gemm_nt`] (bit-identical to the
+/// unbatched path within a dispatch mode).
 pub fn gemm_nt_grouped(a: &[f32], bs: &[&[f32]], m: usize, n: usize, k: usize, c: &mut [f32]) {
     let groups = bs.len();
     debug_assert_eq!(a.len(), groups * m * n);
@@ -284,17 +416,34 @@ pub fn gemm_nt_grouped(a: &[f32], bs: &[&[f32]], m: usize, n: usize, k: usize, c
         gemm_nt(a, bs[0], m, n, k, c);
         return;
     }
+    let kind = kernel_kind();
     for (g, &b) in bs.iter().enumerate() {
         let a_g = &a[g * m * n..(g + 1) * m * n];
         let c_g = &mut c[g * m * k..(g + 1) * m * k];
-        gemm_nt_tiled(a_g, b, m, n, k, c_g);
+        match kind {
+            KernelKind::Scalar => gemm_nt_tiled(a_g, b, m, n, k, c_g),
+            KernelKind::Simd => gemm_nt_packed(a_g, b, m, n, k, c_g),
+        }
     }
 }
 
-/// z += broadcast bias (z is (m, n), bias is (n,)).
+/// z += broadcast bias (z is (m, n), bias is (n,)). The SIMD form is
+/// bit-identical to scalar (pure adds, same order).
 pub fn add_bias(z: &mut [f32], bias: &[f32], m: usize, n: usize) {
     debug_assert_eq!(z.len(), m * n);
     debug_assert_eq!(bias.len(), n);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        if kernel_kind() == KernelKind::Simd {
+            simd_arch::add_bias(z, bias, m, n);
+            return;
+        }
+    }
+    add_bias_scalar(z, bias, m, n);
+}
+
+/// Scalar reference for [`add_bias`].
+pub fn add_bias_scalar(z: &mut [f32], bias: &[f32], m: usize, n: usize) {
     for i in 0..m {
         let row = &mut z[i * n..(i + 1) * n];
         for j in 0..n {
@@ -303,8 +452,21 @@ pub fn add_bias(z: &mut [f32], bias: &[f32], m: usize, n: usize) {
     }
 }
 
-/// In-place ReLU.
+/// In-place ReLU. The SIMD form is bit-identical to scalar, including
+/// NaN (kept) and −0.0 (kept) handling.
 pub fn relu(z: &mut [f32]) {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        if kernel_kind() == KernelKind::Simd {
+            simd_arch::relu(z);
+            return;
+        }
+    }
+    relu_scalar(z);
+}
+
+/// Scalar reference for [`relu`].
+pub fn relu_scalar(z: &mut [f32]) {
     for v in z.iter_mut() {
         if *v < 0.0 {
             *v = 0.0;
@@ -313,9 +475,23 @@ pub fn relu(z: &mut [f32]) {
 }
 
 /// Backward ReLU: dz *= (activation > 0). `act` is the *post*-ReLU value
-/// (mask is identical to pre-activation > 0).
+/// (mask is identical to pre-activation > 0). The SIMD form keeps the
+/// scalar semantics bitwise: `act = NaN` compares false against `<= 0`,
+/// so dz passes through.
 pub fn relu_backward(dz: &mut [f32], act: &[f32]) {
     debug_assert_eq!(dz.len(), act.len());
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        if kernel_kind() == KernelKind::Simd {
+            simd_arch::relu_backward(dz, act);
+            return;
+        }
+    }
+    relu_backward_scalar(dz, act);
+}
+
+/// Scalar reference for [`relu_backward`].
+pub fn relu_backward_scalar(dz: &mut [f32], act: &[f32]) {
     for i in 0..dz.len() {
         if act[i] <= 0.0 {
             dz[i] = 0.0;
@@ -323,10 +499,24 @@ pub fn relu_backward(dz: &mut [f32], act: &[f32]) {
     }
 }
 
-/// db(n) = column sum of dz(m,n).
+/// db(n) = column sum of dz(m,n). The SIMD form vectorizes across
+/// columns (lanes are independent sums in the same row order), so it is
+/// bit-identical to scalar despite being a reduction.
 pub fn bias_grad(dz: &[f32], m: usize, n: usize, db: &mut [f32]) {
     debug_assert_eq!(dz.len(), m * n);
     debug_assert_eq!(db.len(), n);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        if kernel_kind() == KernelKind::Simd {
+            simd_arch::bias_grad(dz, m, n, db);
+            return;
+        }
+    }
+    bias_grad_scalar(dz, m, n, db);
+}
+
+/// Scalar reference for [`bias_grad`].
+pub fn bias_grad_scalar(dz: &[f32], m: usize, n: usize, db: &mut [f32]) {
     db.fill(0.0);
     for i in 0..m {
         let row = &dz[i * n..(i + 1) * n];
@@ -473,31 +663,38 @@ mod tests {
         let a = [0.0f32, 1.0, 0.0, 2.0]; // (2,2) with zeros in column 0
         let b = [f32::NAN, 1.0, 3.0, 4.0];
         let mut c = [0.0f32; 4];
-        gemm_nn(&a, &b, 2, 2, 2, &mut c);
+        gemm_nn_scalar(&a, &b, 2, 2, 2, &mut c);
         // Row 0: 0*NaN + 1*3 → NaN in column 0; row 1 likewise.
         assert!(c[0].is_nan(), "c={c:?}");
         assert!(c[2].is_nan(), "c={c:?}");
         let b_inf = [f32::INFINITY, 1.0, 3.0, 4.0];
         let mut c2 = [0.0f32; 4];
-        gemm_nn(&a, &b_inf, 2, 2, 2, &mut c2);
+        gemm_nn_scalar(&a, &b_inf, 2, 2, 2, &mut c2);
         assert!(c2[0].is_nan(), "0*inf must be NaN: {c2:?}");
 
         let mut ct = [0.0f32; 4];
-        gemm_tn(&a, &b, 2, 2, 2, &mut ct);
+        gemm_tn_scalar(&a, &b, 2, 2, 2, &mut ct);
         // Aᵀ row 0 = [0, 0]: both products hit the NaN row of B.
         assert!(ct[0].is_nan() && ct[1].is_nan(), "ct={ct:?}");
+
+        // The packed kernels have no skip: non-finite values propagate
+        // through the zero-padded panels the same way.
+        let mut cp = [0.0f32; 4];
+        gemm_nn_packed(&a, &b, 2, 2, 2, &mut cp);
+        assert!(cp[0].is_nan() && cp[2].is_nan(), "cp={cp:?}");
 
         // Finite operands keep the exact pre-fix results (skip taken).
         let bf = [5.0f32, 6.0, 7.0, 8.0];
         let mut cf = [0.0f32; 4];
-        gemm_nn(&a, &bf, 2, 2, 2, &mut cf);
+        gemm_nn_scalar(&a, &bf, 2, 2, 2, &mut cf);
         assert_eq!(cf, [7.0, 8.0, 14.0, 16.0]);
     }
 
     #[test]
-    fn tiled_kernels_match_scalar_kernels() {
-        // Every tiled kernel agrees with its scalar twin to rounding on
-        // shapes that exercise full tiles and ragged edges.
+    fn tiled_and_packed_kernels_match_scalar_kernels() {
+        // Every tiled and packed kernel agrees with its scalar twin to
+        // rounding on shapes that exercise full tiles and ragged edges.
+        // (The exhaustive odd-shape sweep lives in tests/test_kernels.rs.)
         let mut rng = crate::math::rng::Pcg64::seeded(21);
         let shapes = [(1usize, 1usize, 1usize), (3, 5, 7), (8, 16, 32), (13, 9, 17), (32, 33, 10)];
         for &(m, k, n) in &shapes {
@@ -506,11 +703,16 @@ mod tests {
             rng.fill_normal(&mut a);
             rng.fill_normal(&mut b);
             let mut c_ref = vec![0.0f32; m * n];
-            gemm_nn(&a, &b, m, k, n, &mut c_ref);
+            gemm_nn_scalar(&a, &b, m, k, n, &mut c_ref);
             let mut c_tiled = vec![0.0f32; m * n];
             gemm_nn_tiled(&a, &b, m, k, n, &mut c_tiled);
             for (x, y) in c_ref.iter().zip(&c_tiled) {
-                assert!((x - y).abs() < 1e-4, "nn ({m},{k},{n}): {x} vs {y}");
+                assert!((x - y).abs() < 1e-4, "nn tiled ({m},{k},{n}): {x} vs {y}");
+            }
+            let mut c_packed = vec![7.0f32; m * n]; // dirty: packed must overwrite
+            gemm_nn_packed(&a, &b, m, k, n, &mut c_packed);
+            for (x, y) in c_ref.iter().zip(&c_packed) {
+                assert!((x - y).abs() < 1e-4, "nn packed ({m},{k},{n}): {x} vs {y}");
             }
 
             // tn: A is (m2, k2) with reduction over m2.
@@ -520,11 +722,16 @@ mod tests {
             rng.fill_normal(&mut a2);
             rng.fill_normal(&mut b2);
             let mut c_ref = vec![0.0f32; k2 * n2];
-            gemm_tn(&a2, &b2, m2, k2, n2, &mut c_ref);
+            gemm_tn_scalar(&a2, &b2, m2, k2, n2, &mut c_ref);
             let mut c_tiled = vec![0.0f32; k2 * n2];
             gemm_tn_tiled(&a2, &b2, m2, k2, n2, &mut c_tiled);
             for (x, y) in c_ref.iter().zip(&c_tiled) {
-                assert!((x - y).abs() < 1e-4, "tn ({m2},{k2},{n2}): {x} vs {y}");
+                assert!((x - y).abs() < 1e-4, "tn tiled ({m2},{k2},{n2}): {x} vs {y}");
+            }
+            let mut c_packed = vec![7.0f32; k2 * n2];
+            gemm_tn_packed(&a2, &b2, m2, k2, n2, &mut c_packed);
+            for (x, y) in c_ref.iter().zip(&c_packed) {
+                assert!((x - y).abs() < 1e-4, "tn packed ({m2},{k2},{n2}): {x} vs {y}");
             }
 
             // nt: C (m, k3) = A (m, n) · B (k3, n)ᵀ.
@@ -534,11 +741,16 @@ mod tests {
             let mut a3 = vec![0.0f32; m * n];
             rng.fill_normal(&mut a3);
             let mut c_ref = vec![0.0f32; m * k3];
-            gemm_nt(&a3, &b3, m, n, k3, &mut c_ref);
+            gemm_nt_scalar(&a3, &b3, m, n, k3, &mut c_ref);
             let mut c_tiled = vec![0.0f32; m * k3];
             gemm_nt_tiled(&a3, &b3, m, n, k3, &mut c_tiled);
             for (x, y) in c_ref.iter().zip(&c_tiled) {
-                assert!((x - y).abs() < 1e-4, "nt ({m},{n},{k3}): {x} vs {y}");
+                assert!((x - y).abs() < 1e-4, "nt tiled ({m},{n},{k3}): {x} vs {y}");
+            }
+            let mut c_packed = vec![7.0f32; m * k3];
+            gemm_nt_packed(&a3, &b3, m, n, k3, &mut c_packed);
+            for (x, y) in c_ref.iter().zip(&c_packed) {
+                assert!((x - y).abs() < 1e-4, "nt packed ({m},{n},{k3}): {x} vs {y}");
             }
         }
     }

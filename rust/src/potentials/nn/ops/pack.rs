@@ -1,0 +1,92 @@
+//! Cache-blocked A/B packing for the SIMD GEMM kernels (DESIGN.md §10).
+//!
+//! BLIS-style blocking: the driver walks C in NC-column × KC-depth × MC-row
+//! blocks, packing the current A block into MR-row micro-panels and the
+//! current B block into NR-column micro-panels. Edge panels are
+//! zero-padded so the microkernel always runs a full MR×NR tile; padded
+//! lanes multiply into positions the driver never reads back.
+//!
+//! Element access goes through a generic (row-stride, col-stride) pair, so
+//! one packed core serves all three orientations without materializing a
+//! transpose:
+//!
+//!   * nn  C(m,n) = A(m,k)·B(k,n):   A strides (k, 1), B strides (n, 1)
+//!   * tn  C(k,n) = A(m,k)ᵀ·B(m,n):  A strides (1, k), B strides (n, 1)
+//!   * nt  C(m,k) = A(m,n)·B(k,n)ᵀ:  A strides (n, 1), B strides (1, n)
+//!
+//! The index math (packing layout, blocking loop, first-panel
+//! store-vs-accumulate, edge-tile merge) is property-tested against the
+//! naive reference in `tests/test_kernels.rs`.
+
+/// Microkernel rows (matches the tiled kernels' MR).
+pub(super) const MR: usize = 4;
+/// Microkernel columns: two 8-lane AVX2 vectors / four 4-lane NEON vectors.
+pub(super) const NR: usize = 16;
+/// A-block rows kept resident per packed panel (L2 sizing).
+pub(super) const MC: usize = 96;
+/// Reduction depth per packed panel.
+pub(super) const KC: usize = 256;
+/// B-block columns kept resident per packed panel.
+pub(super) const NC: usize = 256;
+
+/// Pack the mc×kc block of A starting at (i0, p0) — element (i, p) lives
+/// at `a[(i0+i)*rs + (p0+p)*cs]` — into MR-row micro-panels:
+/// `out[ib·kc·MR + l·MR + ii] = A[i0 + ib·MR + ii, p0 + l]`, rows past mc
+/// zero-padded.
+#[inline]
+pub(super) fn pack_a(
+    a: &[f32],
+    rs: usize,
+    cs: usize,
+    i0: usize,
+    mc: usize,
+    p0: usize,
+    kc: usize,
+    out: &mut [f32],
+) {
+    let nblocks = (mc + MR - 1) / MR;
+    for ib in 0..nblocks {
+        let base = ib * kc * MR;
+        for l in 0..kc {
+            for ii in 0..MR {
+                let row = ib * MR + ii;
+                out[base + l * MR + ii] = if row < mc {
+                    a[(i0 + row) * rs + (p0 + l) * cs]
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+/// Pack the kc×nc block of B starting at (p0, j0) — element (p, j) lives
+/// at `b[(p0+p)*rs + (j0+j)*cs]` — into NR-column micro-panels:
+/// `out[jb·kc·NR + l·NR + jj] = B[p0 + l, j0 + jb·NR + jj]`, columns past
+/// nc zero-padded.
+#[inline]
+pub(super) fn pack_b(
+    b: &[f32],
+    rs: usize,
+    cs: usize,
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+    out: &mut [f32],
+) {
+    let nblocks = (nc + NR - 1) / NR;
+    for jb in 0..nblocks {
+        let base = jb * kc * NR;
+        for l in 0..kc {
+            for jj in 0..NR {
+                let col = jb * NR + jj;
+                out[base + l * NR + jj] = if col < nc {
+                    b[(p0 + l) * rs + (j0 + col) * cs]
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}

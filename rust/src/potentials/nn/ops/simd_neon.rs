@@ -1,0 +1,274 @@
+//! NEON kernels for aarch64 — structural mirror of `simd_x86.rs` with
+//! 4-lane `float32x4_t` vectors (four per NR=16 micro-tile row).
+//!
+//! Same contracts as the x86 module: the GEMM microkernel uses fused
+//! multiply-add (tolerance-compared), the elementwise ops avoid fusion
+//! and keep scalar semantics bit for bit. ReLU uses compare+select
+//! instead of `vmaxq_f32` because AArch64 `fmax(−0.0, +0.0)` returns
+//! +0.0, which would flip the sign bit the scalar kernel preserves.
+
+use super::pack::{self, KC, MC, MR, NC, NR};
+use std::arch::aarch64::*;
+
+/// Packed, cache-blocked C(m,n) = A_eff(m,k)·B_eff(k,n); see
+/// `simd_x86::gemm_packed` for the stride convention.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn gemm_packed(
+    a: &[f32],
+    rs_a: usize,
+    cs_a: usize,
+    b: &[f32],
+    rs_b: usize,
+    cs_b: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+) {
+    assert!(crate::math::simd::simd_supported());
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    debug_assert!(a.len() > (m - 1) * rs_a + (k - 1) * cs_a);
+    debug_assert!(b.len() > (k - 1) * rs_b + (n - 1) * cs_b);
+    let mut apack = vec![0.0f32; MC * KC];
+    let mut bpack = vec![0.0f32; KC * NC];
+    unsafe {
+        driver(a, rs_a, cs_a, b, rs_b, cs_b, m, k, n, c, &mut apack, &mut bpack);
+    }
+}
+
+/// Blocked driver; identical loop nest to the x86 version.
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64). Bounds as in `simd_x86::driver`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn driver(
+    a: &[f32],
+    rs_a: usize,
+    cs_a: usize,
+    b: &[f32],
+    rs_b: usize,
+    cs_b: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    apack: &mut [f32],
+    bpack: &mut [f32],
+) {
+    let mut tmp = [0.0f32; MR * NR];
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack::pack_b(b, rs_b, cs_b, pc, kc, jc, nc, bpack);
+            let first = pc == 0;
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                pack::pack_a(a, rs_a, cs_a, ic, mc, pc, kc, apack);
+                let mut jr = 0;
+                while jr < nc {
+                    let nr = NR.min(nc - jr);
+                    let boff = (jr / NR) * kc * NR;
+                    let mut ir = 0;
+                    while ir < mc {
+                        let mr = MR.min(mc - ir);
+                        let aoff = (ir / MR) * kc * MR;
+                        if mr == MR && nr == NR {
+                            mkernel(
+                                kc,
+                                apack.as_ptr().add(aoff),
+                                bpack.as_ptr().add(boff),
+                                c.as_mut_ptr().add((ic + ir) * n + (jc + jr)),
+                                n,
+                                !first,
+                            );
+                        } else {
+                            mkernel(
+                                kc,
+                                apack.as_ptr().add(aoff),
+                                bpack.as_ptr().add(boff),
+                                tmp.as_mut_ptr(),
+                                NR,
+                                false,
+                            );
+                            for ii in 0..mr {
+                                for jj in 0..nr {
+                                    let at = (ic + ir + ii) * n + (jc + jr + jj);
+                                    if first {
+                                        c[at] = tmp[ii * NR + jj];
+                                    } else {
+                                        c[at] += tmp[ii * NR + jj];
+                                    }
+                                }
+                            }
+                        }
+                        ir += MR;
+                    }
+                    jr += NR;
+                }
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+/// MR×NR FMA microkernel: sixteen q-register accumulators (4 rows × 4
+/// quarter-rows) across the kc reduction.
+///
+/// # Safety
+/// As in `simd_x86::mkernel`.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn mkernel(kc: usize, ap: *const f32, bp: *const f32, c: *mut f32, ldc: usize, accumulate: bool) {
+    let mut acc = [vdupq_n_f32(0.0); 4 * MR];
+    let mut ap = ap;
+    let mut bp = bp;
+    for _ in 0..kc {
+        let b0 = vld1q_f32(bp);
+        let b1 = vld1q_f32(bp.add(4));
+        let b2 = vld1q_f32(bp.add(8));
+        let b3 = vld1q_f32(bp.add(12));
+        for ii in 0..MR {
+            let av = vdupq_n_f32(*ap.add(ii));
+            acc[4 * ii] = vfmaq_f32(acc[4 * ii], av, b0);
+            acc[4 * ii + 1] = vfmaq_f32(acc[4 * ii + 1], av, b1);
+            acc[4 * ii + 2] = vfmaq_f32(acc[4 * ii + 2], av, b2);
+            acc[4 * ii + 3] = vfmaq_f32(acc[4 * ii + 3], av, b3);
+        }
+        ap = ap.add(MR);
+        bp = bp.add(NR);
+    }
+    for ii in 0..MR {
+        let crow = c.add(ii * ldc);
+        for q in 0..4 {
+            let dst = crow.add(4 * q);
+            let v = if accumulate {
+                vaddq_f32(vld1q_f32(dst), acc[4 * ii + q])
+            } else {
+                acc[4 * ii + q]
+            };
+            vst1q_f32(dst, v);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Elementwise ops — bit-identical to the scalar twins (no fusion).
+// ---------------------------------------------------------------------
+
+pub(super) fn add_bias(z: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    assert!(crate::math::simd::simd_supported());
+    unsafe { add_bias_neon(z, bias, m, n) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn add_bias_neon(z: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    let bp = bias.as_ptr();
+    for i in 0..m {
+        let row = z.as_mut_ptr().add(i * n);
+        let mut j = 0;
+        while j + 4 <= n {
+            let v = vld1q_f32(row.add(j));
+            let bv = vld1q_f32(bp.add(j));
+            vst1q_f32(row.add(j), vaddq_f32(v, bv));
+            j += 4;
+        }
+        while j < n {
+            *row.add(j) += *bp.add(j);
+            j += 1;
+        }
+    }
+}
+
+/// In-place ReLU via compare+select (preserves NaN and −0.0 like scalar).
+pub(super) fn relu(z: &mut [f32]) {
+    assert!(crate::math::simd::simd_supported());
+    unsafe { relu_neon(z) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn relu_neon(z: &mut [f32]) {
+    let zero = vdupq_n_f32(0.0);
+    let p = z.as_mut_ptr();
+    let n = z.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = vld1q_f32(p.add(i));
+        let neg = vcltq_f32(v, zero); // false for NaN and ±0.0
+        vst1q_f32(p.add(i), vbslq_f32(neg, zero, v));
+        i += 4;
+    }
+    while i < n {
+        if *p.add(i) < 0.0 {
+            *p.add(i) = 0.0;
+        }
+        i += 1;
+    }
+}
+
+/// Backward ReLU: zero dz where act ≤ 0 (compare is false for NaN act).
+pub(super) fn relu_backward(dz: &mut [f32], act: &[f32]) {
+    assert!(crate::math::simd::simd_supported());
+    unsafe { relu_backward_neon(dz, act) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn relu_backward_neon(dz: &mut [f32], act: &[f32]) {
+    let zero = vdupq_n_f32(0.0);
+    let dp = dz.as_mut_ptr();
+    let ap = act.as_ptr();
+    let n = dz.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let a = vld1q_f32(ap.add(i));
+        let d = vld1q_f32(dp.add(i));
+        let mask = vcleq_f32(a, zero);
+        let kept = vbicq_u32(vreinterpretq_u32_f32(d), mask);
+        vst1q_f32(dp.add(i), vreinterpretq_f32_u32(kept));
+        i += 4;
+    }
+    while i < n {
+        if *ap.add(i) <= 0.0 {
+            *dp.add(i) = 0.0;
+        }
+        i += 1;
+    }
+}
+
+pub(super) fn bias_grad(dz: &[f32], m: usize, n: usize, db: &mut [f32]) {
+    assert!(crate::math::simd::simd_supported());
+    unsafe { bias_grad_neon(dz, m, n, db) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn bias_grad_neon(dz: &[f32], m: usize, n: usize, db: &mut [f32]) {
+    db.fill(0.0);
+    let dbp = db.as_mut_ptr();
+    for i in 0..m {
+        let row = dz.as_ptr().add(i * n);
+        let mut j = 0;
+        while j + 4 <= n {
+            let acc = vld1q_f32(dbp.add(j));
+            let v = vld1q_f32(row.add(j));
+            vst1q_f32(dbp.add(j), vaddq_f32(acc, v));
+            j += 4;
+        }
+        while j < n {
+            *dbp.add(j) += *row.add(j);
+            j += 1;
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! AVX2/FMA kernels for x86_64 (DESIGN.md §10).
+//!
+//! Safety model: every public function checks
+//! [`crate::math::simd::simd_supported`] (the dispatcher already gates on
+//! it; the assert makes direct calls safe too), then enters one
+//! `#[target_feature(enable = "avx2,fma")]` function that contains the
+//! whole blocked driver — so the packing loops and edge merges compile
+//! under the same feature set as the microkernel.
+//!
+//! Bit-exactness contract: the GEMM microkernel uses FMA, so it is a
+//! different summation (order *and* rounding) from the scalar kernels —
+//! tolerance-compared only. The elementwise ops below deliberately avoid
+//! FMA and keep the scalar per-element operation order, so they are
+//! bit-identical to their scalar twins (including NaN and −0.0 handling;
+//! see the parity tests in `tests/test_kernels.rs`).
+
+use super::pack::{self, KC, MC, MR, NC, NR};
+use std::arch::x86_64::*;
+
+/// Packed, cache-blocked C(m,n) = A_eff(m,k)·B_eff(k,n) where A_eff/B_eff
+/// are addressed through (row-stride, col-stride) pairs (see `pack.rs` for
+/// the per-orientation strides). C is row-major with leading dimension n
+/// and is overwritten.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn gemm_packed(
+    a: &[f32],
+    rs_a: usize,
+    cs_a: usize,
+    b: &[f32],
+    rs_b: usize,
+    cs_b: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+) {
+    assert!(crate::math::simd::simd_supported());
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    debug_assert!(a.len() > (m - 1) * rs_a + (k - 1) * cs_a);
+    debug_assert!(b.len() > (k - 1) * rs_b + (n - 1) * cs_b);
+    // Scratch panels sized for the largest block (MC and NC are multiples
+    // of MR and NR, so no extra rounding is needed).
+    let mut apack = vec![0.0f32; MC * KC];
+    let mut bpack = vec![0.0f32; KC * NC];
+    unsafe {
+        driver(a, rs_a, cs_a, b, rs_b, cs_b, m, k, n, c, &mut apack, &mut bpack);
+    }
+}
+
+/// The blocked driver. Loop nest (outer→inner): jc over NC columns of C,
+/// pc over KC of the reduction (B packed once per (jc, pc)), ic over MC
+/// rows (A packed once per (jc, pc, ic)), then jr×ir micro-tiles. The
+/// first pc-panel stores into C, later panels accumulate — C is never
+/// pre-zeroed, so dirty input buffers cannot leak through.
+///
+/// # Safety
+/// Requires avx2+fma. Slice lengths are checked by the caller; the raw
+/// stores in the full-tile path stay in bounds because `mr == MR` and
+/// `nr == NR` there.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn driver(
+    a: &[f32],
+    rs_a: usize,
+    cs_a: usize,
+    b: &[f32],
+    rs_b: usize,
+    cs_b: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    apack: &mut [f32],
+    bpack: &mut [f32],
+) {
+    let mut tmp = [0.0f32; MR * NR];
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack::pack_b(b, rs_b, cs_b, pc, kc, jc, nc, bpack);
+            let first = pc == 0;
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                pack::pack_a(a, rs_a, cs_a, ic, mc, pc, kc, apack);
+                let mut jr = 0;
+                while jr < nc {
+                    let nr = NR.min(nc - jr);
+                    let boff = (jr / NR) * kc * NR;
+                    let mut ir = 0;
+                    while ir < mc {
+                        let mr = MR.min(mc - ir);
+                        let aoff = (ir / MR) * kc * MR;
+                        if mr == MR && nr == NR {
+                            mkernel(
+                                kc,
+                                apack.as_ptr().add(aoff),
+                                bpack.as_ptr().add(boff),
+                                c.as_mut_ptr().add((ic + ir) * n + (jc + jr)),
+                                n,
+                                !first,
+                            );
+                        } else {
+                            // Edge tile: run the full microkernel into a
+                            // local buffer, merge only the valid region.
+                            mkernel(
+                                kc,
+                                apack.as_ptr().add(aoff),
+                                bpack.as_ptr().add(boff),
+                                tmp.as_mut_ptr(),
+                                NR,
+                                false,
+                            );
+                            for ii in 0..mr {
+                                for jj in 0..nr {
+                                    let at = (ic + ir + ii) * n + (jc + jr + jj);
+                                    if first {
+                                        c[at] = tmp[ii * NR + jj];
+                                    } else {
+                                        c[at] += tmp[ii * NR + jj];
+                                    }
+                                }
+                            }
+                        }
+                        ir += MR;
+                    }
+                    jr += NR;
+                }
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+/// MR×NR FMA microkernel over one packed A/B micro-panel pair: eight ymm
+/// accumulators (4 rows × 2 half-rows) live across the whole kc reduction.
+///
+/// # Safety
+/// Requires avx2+fma; `ap`/`bp` must cover kc·MR / kc·NR floats and `c`
+/// must cover an MR×NR tile with leading dimension `ldc`.
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn mkernel(kc: usize, ap: *const f32, bp: *const f32, c: *mut f32, ldc: usize, accumulate: bool) {
+    let mut acc = [_mm256_setzero_ps(); 2 * MR];
+    let mut ap = ap;
+    let mut bp = bp;
+    for _ in 0..kc {
+        let b0 = _mm256_loadu_ps(bp);
+        let b1 = _mm256_loadu_ps(bp.add(8));
+        for ii in 0..MR {
+            let av = _mm256_set1_ps(*ap.add(ii));
+            acc[2 * ii] = _mm256_fmadd_ps(av, b0, acc[2 * ii]);
+            acc[2 * ii + 1] = _mm256_fmadd_ps(av, b1, acc[2 * ii + 1]);
+        }
+        ap = ap.add(MR);
+        bp = bp.add(NR);
+    }
+    for ii in 0..MR {
+        let crow = c.add(ii * ldc);
+        if accumulate {
+            let c0 = _mm256_loadu_ps(crow);
+            let c1 = _mm256_loadu_ps(crow.add(8));
+            _mm256_storeu_ps(crow, _mm256_add_ps(c0, acc[2 * ii]));
+            _mm256_storeu_ps(crow.add(8), _mm256_add_ps(c1, acc[2 * ii + 1]));
+        } else {
+            _mm256_storeu_ps(crow, acc[2 * ii]);
+            _mm256_storeu_ps(crow.add(8), acc[2 * ii + 1]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Elementwise ops — bit-identical to the scalar twins (no FMA).
+// ---------------------------------------------------------------------
+
+/// z += broadcast bias, vectorized over columns. Pure adds in scalar
+/// order → bit-identical to `add_bias_scalar`.
+pub(super) fn add_bias(z: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    assert!(crate::math::simd::simd_supported());
+    unsafe { add_bias_avx(z, bias, m, n) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn add_bias_avx(z: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    let bp = bias.as_ptr();
+    for i in 0..m {
+        let row = z.as_mut_ptr().add(i * n);
+        let mut j = 0;
+        while j + 8 <= n {
+            let v = _mm256_loadu_ps(row.add(j));
+            let bv = _mm256_loadu_ps(bp.add(j));
+            _mm256_storeu_ps(row.add(j), _mm256_add_ps(v, bv));
+            j += 8;
+        }
+        while j < n {
+            *row.add(j) += *bp.add(j);
+            j += 1;
+        }
+    }
+}
+
+/// In-place ReLU. `max(+0.0, v)` matches the scalar `if v < 0 { v = 0 }`
+/// bit for bit: maxps returns the second operand on NaN (NaN kept) and on
+/// ±0.0 ties (−0.0 kept), and +0.0 where v < 0 — exactly the scalar write.
+pub(super) fn relu(z: &mut [f32]) {
+    assert!(crate::math::simd::simd_supported());
+    unsafe { relu_avx(z) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn relu_avx(z: &mut [f32]) {
+    let zero = _mm256_setzero_ps();
+    let p = z.as_mut_ptr();
+    let n = z.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(p.add(i));
+        _mm256_storeu_ps(p.add(i), _mm256_max_ps(zero, v));
+        i += 8;
+    }
+    while i < n {
+        if *p.add(i) < 0.0 {
+            *p.add(i) = 0.0;
+        }
+        i += 1;
+    }
+}
+
+/// Backward ReLU: zero dz where act ≤ 0. The ordered-quiet `LE` compare
+/// is false for NaN act, so dz passes through there — matching the scalar
+/// `if act[i] <= 0.0` exactly.
+pub(super) fn relu_backward(dz: &mut [f32], act: &[f32]) {
+    assert!(crate::math::simd::simd_supported());
+    unsafe { relu_backward_avx(dz, act) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn relu_backward_avx(dz: &mut [f32], act: &[f32]) {
+    let zero = _mm256_setzero_ps();
+    let dp = dz.as_mut_ptr();
+    let ap = act.as_ptr();
+    let n = dz.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let a = _mm256_loadu_ps(ap.add(i));
+        let d = _mm256_loadu_ps(dp.add(i));
+        let mask = _mm256_cmp_ps::<_CMP_LE_OQ>(a, zero);
+        _mm256_storeu_ps(dp.add(i), _mm256_andnot_ps(mask, d));
+        i += 8;
+    }
+    while i < n {
+        if *ap.add(i) <= 0.0 {
+            *dp.add(i) = 0.0;
+        }
+        i += 1;
+    }
+}
+
+/// db = column sums of dz(m,n), vectorized over columns. Each column
+/// accumulates in the same row order as the scalar loop (lanes are
+/// independent columns) → bit-identical to `bias_grad_scalar`.
+pub(super) fn bias_grad(dz: &[f32], m: usize, n: usize, db: &mut [f32]) {
+    assert!(crate::math::simd::simd_supported());
+    unsafe { bias_grad_avx(dz, m, n, db) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn bias_grad_avx(dz: &[f32], m: usize, n: usize, db: &mut [f32]) {
+    db.fill(0.0);
+    let dbp = db.as_mut_ptr();
+    for i in 0..m {
+        let row = dz.as_ptr().add(i * n);
+        let mut j = 0;
+        while j + 8 <= n {
+            let acc = _mm256_loadu_ps(dbp.add(j));
+            let v = _mm256_loadu_ps(row.add(j));
+            _mm256_storeu_ps(dbp.add(j), _mm256_add_ps(acc, v));
+            j += 8;
+        }
+        while j < n {
+            *dbp.add(j) += *row.add(j);
+            j += 1;
+        }
+    }
+}

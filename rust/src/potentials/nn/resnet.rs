@@ -6,9 +6,10 @@
 //! XLA artifacts.
 
 use super::ops;
-use super::{layer_sizes, n_params, param_offsets, WEIGHT_DECAY};
+use super::{gaussian_prior, layer_sizes, n_params, param_offsets};
 use crate::data::Dataset;
 use crate::math::rng::Pcg64;
+use crate::math::vecops;
 use crate::potentials::nn::mlp::PAD_BLOCK;
 use crate::potentials::Potential;
 use crate::util::round_up;
@@ -70,9 +71,7 @@ impl NativeResNet {
     pub fn init_theta(&self, scale: f32, rng: &mut Pcg64) -> Vec<f32> {
         let mut theta = vec![0.0f32; self.padded];
         rng.fill_normal(&mut theta[..self.n]);
-        for t in theta[..self.n].iter_mut() {
-            *t *= scale;
-        }
+        vecops::scale(scale, &mut theta[..self.n]);
         theta
     }
 
@@ -115,9 +114,7 @@ impl NativeResNet {
             let mut out = vec![0.0f32; m * w];
             ops::gemm_nn(&inner, w2, m, w, w, &mut out);
             ops::add_bias(&mut out, b2, m, w);
-            for i in 0..m * w {
-                out[i] += prev[i]; // identity skip
-            }
+            vecops::add(&prev, &mut out); // identity skip
             a.push(inner);
             h.push(out);
         }
@@ -162,14 +159,10 @@ impl NativeResNet {
         {
             let mut dw = vec![0.0f32; w * self.classes];
             ops::gemm_tn(h.last().unwrap(), &dlogits, m, w, self.classes, &mut dw);
-            for (g, d) in grad[w_off..w_off + w * self.classes].iter_mut().zip(&dw) {
-                *g += d;
-            }
+            vecops::add(&dw, &mut grad[w_off..w_off + w * self.classes]);
             let mut db = vec![0.0f32; self.classes];
             ops::bias_grad(&dlogits, m, self.classes, &mut db);
-            for (g, d) in grad[b_off..b_off + self.classes].iter_mut().zip(&db) {
-                *g += d;
-            }
+            vecops::add(&db, &mut grad[b_off..b_off + self.classes]);
         }
         let (wh, _) = self.layer(theta, head_l);
         let mut dh = vec![0.0f32; m * w];
@@ -185,13 +178,9 @@ impl NativeResNet {
             // out = prev + inner · W2 + b2 ; d(out) = dh.
             let (w2_off, b2_off) = self.offsets[w2_l];
             ops::gemm_tn(inner, &dh, m, w, w, &mut dw_buf);
-            for (g, d) in grad[w2_off..w2_off + w * w].iter_mut().zip(&dw_buf) {
-                *g += d;
-            }
+            vecops::add(&dw_buf, &mut grad[w2_off..w2_off + w * w]);
             ops::bias_grad(&dh, m, w, &mut db_buf);
-            for (g, d) in grad[b2_off..b2_off + w].iter_mut().zip(&db_buf) {
-                *g += d;
-            }
+            vecops::add(&db_buf, &mut grad[b2_off..b2_off + w]);
             let (w2, _) = self.layer(theta, w2_l);
             let mut da = vec![0.0f32; m * w];
             ops::gemm_nt(&dh, w2, m, w, w, &mut da);
@@ -199,20 +188,14 @@ impl NativeResNet {
             // inner = relu(prev · W1 + b1).
             let (w1_off, b1_off) = self.offsets[w1_l];
             ops::gemm_tn(prev, &da, m, w, w, &mut dw_buf);
-            for (g, d) in grad[w1_off..w1_off + w * w].iter_mut().zip(&dw_buf) {
-                *g += d;
-            }
+            vecops::add(&dw_buf, &mut grad[w1_off..w1_off + w * w]);
             ops::bias_grad(&da, m, w, &mut db_buf);
-            for (g, d) in grad[b1_off..b1_off + w].iter_mut().zip(&db_buf) {
-                *g += d;
-            }
+            vecops::add(&db_buf, &mut grad[b1_off..b1_off + w]);
             // d(prev) = dh (skip) + da · W1ᵀ.
             let (w1, _) = self.layer(theta, w1_l);
             let mut dprev = vec![0.0f32; m * w];
             ops::gemm_nt(&da, w1, m, w, w, &mut dprev);
-            for i in 0..m * w {
-                dh[i] += dprev[i];
-            }
+            vecops::add(&dprev, &mut dh);
         }
 
         // Projection backward: h[0] = relu(x · Wp + bp).
@@ -221,25 +204,15 @@ impl NativeResNet {
         {
             let mut dw = vec![0.0f32; self.in_dim * w];
             ops::gemm_tn(x, &dh, m, self.in_dim, w, &mut dw);
-            for (g, d) in grad[wp_off..wp_off + self.in_dim * w].iter_mut().zip(&dw) {
-                *g += d;
-            }
+            vecops::add(&dw, &mut grad[wp_off..wp_off + self.in_dim * w]);
             ops::bias_grad(&dh, m, w, &mut db_buf);
-            for (g, d) in grad[bp_off..bp_off + w].iter_mut().zip(&db_buf) {
-                *g += d;
-            }
+            vecops::add(&db_buf, &mut grad[bp_off..bp_off + w]);
         }
         scale * nll
     }
 
     fn add_prior(&self, theta: &[f32], grad: &mut [f32]) -> f64 {
-        let mut sq = 0.0f64;
-        let wd = WEIGHT_DECAY as f32;
-        for i in 0..self.n {
-            sq += (theta[i] as f64) * (theta[i] as f64);
-            grad[i] += 2.0 * wd * theta[i];
-        }
-        WEIGHT_DECAY * sq
+        gaussian_prior(&theta[..self.n], &mut grad[..self.n])
     }
 
     fn eval_on(&self, theta: &[f32], data: &Dataset) -> (f64, f64) {
@@ -368,9 +341,7 @@ impl Potential for NativeResNet {
                     let bias = self.layer(t, w2_l).1;
                     ops::add_bias(&mut out[b * m * w..(b + 1) * m * w], bias, m, w);
                 }
-                for i in 0..big * w {
-                    out[i] += prev[i]; // identity skip
-                }
+                vecops::add(prev, &mut out); // identity skip
             }
             a_in.push(inner);
             h.push(out);
@@ -408,7 +379,7 @@ impl Potential for NativeResNet {
             let h_b = &h[self.blocks][b * m * w..(b + 1) * m * w];
             let dl_b = &dlogits[b * m * classes..(b + 1) * m * classes];
             let dw = &mut g[wh_off..wh_off + w * classes];
-            ops::gemm_tn_tiled(h_b, dl_b, m, w, classes, dw);
+            ops::gemm_tn_batch(h_b, dl_b, m, w, classes, dw);
             ops::bias_grad(dl_b, m, classes, &mut g[bh_off..bh_off + classes]);
         }
         let mut dh = vec![0.0f32; big * w];
@@ -424,7 +395,7 @@ impl Potential for NativeResNet {
                 let inner_b = &inner[b * m * w..(b + 1) * m * w];
                 let dh_b = &dh[b * m * w..(b + 1) * m * w];
                 let dw2 = &mut g[w2_off..w2_off + w * w];
-                ops::gemm_tn_tiled(inner_b, dh_b, m, w, w, dw2);
+                ops::gemm_tn_batch(inner_b, dh_b, m, w, w, dw2);
                 ops::bias_grad(dh_b, m, w, &mut g[b2_off..b2_off + w]);
             }
             let w2s: Vec<&[f32]> = thetas.iter().map(|t| self.layer(t, w2_l).0).collect();
@@ -436,15 +407,13 @@ impl Potential for NativeResNet {
                 let prev_b = &prev[b * m * w..(b + 1) * m * w];
                 let da_b = &da[b * m * w..(b + 1) * m * w];
                 let dw1 = &mut g[w1_off..w1_off + w * w];
-                ops::gemm_tn_tiled(prev_b, da_b, m, w, w, dw1);
+                ops::gemm_tn_batch(prev_b, da_b, m, w, w, dw1);
                 ops::bias_grad(da_b, m, w, &mut g[b1_off..b1_off + w]);
             }
             let w1s: Vec<&[f32]> = thetas.iter().map(|t| self.layer(t, w1_l).0).collect();
             let mut dprev = vec![0.0f32; big * w];
             ops::gemm_nt_grouped(&da, &w1s, m, w, w, &mut dprev);
-            for i in 0..big * w {
-                dh[i] += dprev[i]; // skip-connection chain rule
-            }
+            vecops::add(&dprev, &mut dh); // skip-connection chain rule
         }
 
         // Projection backward.
@@ -454,7 +423,7 @@ impl Potential for NativeResNet {
             let x_b = &x[b * m * d..(b + 1) * m * d];
             let dh_b = &dh[b * m * w..(b + 1) * m * w];
             let dwp = &mut g[wp_off..wp_off + d * w];
-            ops::gemm_tn_tiled(x_b, dh_b, m, d, w, dwp);
+            ops::gemm_tn_batch(x_b, dh_b, m, d, w, dwp);
             ops::bias_grad(dh_b, m, w, &mut g[bp_off..bp_off + w]);
         }
         for (b, g) in grads.chunks_mut(self.padded).enumerate() {

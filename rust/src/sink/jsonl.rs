@@ -3,7 +3,8 @@
 //! Event schema (stream version 2; see DESIGN.md §7 for the full table):
 //!
 //! ```text
-//! {"ev":"meta","version":2,"scheme":"ec","workers":4,"seed":"42"}
+//! {"ev":"meta","version":2,"scheme":"ec","workers":4,"seed":"42",
+//!  "dispatch":"simd","cpu":"x86_64 avx2 fma"}
 //! {"ev":"sample","chain":0,"t":0.0123,"theta":[0.5,-1.25]}
 //! {"ev":"u","chain":0,"step":100,"t":0.0119,"u":1.875}
 //! {"ev":"center","t":0.0125,"theta":[0.1,-0.9]}
@@ -14,7 +15,9 @@
 //!
 //! Version history: v2 added the `member`/`checkpoint` events and the
 //! `stale_rejects`/`worker_joins`/`worker_leaves` metrics keys
-//! (elastic membership + checkpoint runtime, DESIGN.md §8).
+//! (elastic membership + checkpoint runtime, DESIGN.md §8). The
+//! `dispatch`/`cpu` meta keys are schema-additive within v2 (kernel
+//! dispatch, DESIGN.md §10) — replay ignores unknown keys.
 //!
 //! Framing: every event line carries its own frame tag (`chain` id, or
 //! the `center` event kind), and [`JsonlWriter`] locks per *line* — so K
@@ -122,6 +125,10 @@ impl JsonlWriter {
 
     /// Run-header event. The seed travels as a string: our JSON numbers
     /// are f64, which would silently corrupt u64 seeds ≥ 2^53.
+    /// `dispatch`/`cpu` are schema-additive (replay tolerates their
+    /// absence in old streams): they record the kernel dispatch the run
+    /// resolved to, so a stream can be audited for bit-reproducibility
+    /// (DESIGN.md §10).
     pub fn meta(&self, scheme: &str, workers: usize, seed: u64) {
         let mut e = Emitter::new();
         e.begin_obj();
@@ -130,6 +137,8 @@ impl JsonlWriter {
         e.key("scheme").str_val(scheme);
         e.key("workers").num(workers as f64);
         e.key("seed").str_val(&seed.to_string());
+        e.key("dispatch").str_val(crate::math::simd::kernel_kind().name());
+        e.key("cpu").str_val(&crate::math::simd::cpu_features());
         e.end_obj();
         self.line(e.as_str());
     }
@@ -288,6 +297,9 @@ mod tests {
         let v0 = Json::parse(lines[0]).unwrap();
         assert_eq!(v0.get("ev").unwrap().as_str(), Some("meta"));
         assert_eq!(v0.get("workers").unwrap().as_usize(), Some(4));
+        let dispatch = v0.get("dispatch").unwrap().as_str().unwrap();
+        assert!(dispatch == "scalar" || dispatch == "simd", "{dispatch}");
+        assert!(!v0.get("cpu").unwrap().as_str().unwrap().is_empty());
         let v1 = Json::parse(lines[1]).unwrap();
         assert_eq!(v1.get("ev").unwrap().as_str(), Some("sample"));
         assert_eq!(v1.get("chain").unwrap().as_usize(), Some(2));
