@@ -107,6 +107,9 @@ fn main() {
 
     // ---- Checkpoint overhead (DESIGN.md §8: target < 3%). ----
     bench_checkpoint_overhead(scale);
+
+    // ---- Telemetry overhead (DESIGN.md §11: target < 3%). ----
+    bench_telemetry_overhead(scale);
 }
 
 /// B-sweep of the batched multi-chain gradient engine: fig2 MLP, K = 16
@@ -299,4 +302,83 @@ fn bench_checkpoint_overhead(scale: Scale) {
         println!("-> wrote {}", path.display());
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Measure the steps/sec cost of span tracing: the same EC Gaussian run
+/// with telemetry off and on (frames every 50 center steps into a JSONL
+/// stream — the production shape). The contract (DESIGN.md §11) is
+/// < 3% overhead; the CI `telemetry-overhead` job gates on it via
+/// `out/bench/BENCH_telemetry.json`. Each variant is best-of-3: a single
+/// wall-clock sample on a shared runner is too noisy to hard-fail on.
+fn bench_telemetry_overhead(scale: Scale) {
+    use ecsgmcmc::coordinator::{EcConfig, EcCoordinator, RunOptions};
+    use ecsgmcmc::potentials::gaussian::GaussianPotential;
+    use ecsgmcmc::sink::SinkSpec;
+    use ecsgmcmc::util::json::Json;
+    use std::sync::Arc;
+
+    let steps = scale.pick(4_000, 40_000);
+    let stream = std::env::temp_dir()
+        .join(format!("ecsgmcmc-bench-telemetry-{}.jsonl", std::process::id()));
+    let base = EcConfig {
+        workers: 4,
+        alpha: 1.0,
+        sync_every: 2,
+        steps,
+        opts: RunOptions {
+            thin: 50,
+            log_every: (steps / 10).max(1),
+            sink: SinkSpec::Jsonl { path: stream.clone() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: 0.05, ..Default::default() };
+    let pot = Arc::new(GaussianPotential::fig1());
+    let reps = 3;
+    let best = |on: bool| {
+        ecsgmcmc::telemetry::configure(on, 50, 4096);
+        let mut rate = 0.0f64;
+        for _ in 0..reps {
+            let r = EcCoordinator::new(base.clone(), params, pot.clone()).run(3);
+            rate = rate.max(r.metrics.steps_per_sec);
+        }
+        rate
+    };
+
+    // Warm once, then measure each variant under its own switch.
+    ecsgmcmc::telemetry::set_enabled(false);
+    let _ = EcCoordinator::new(base.clone(), params, pot.clone()).run(3);
+    let off_rate = best(false);
+    let on_rate = best(true);
+    ecsgmcmc::telemetry::set_enabled(false);
+
+    let overhead_pct = 100.0 * (off_rate - on_rate) / off_rate.max(1e-12);
+    let gate_pass = overhead_pct < 3.0;
+    println!(
+        "\n== telemetry overhead (EC Gaussian, K=4, frame every 50 center steps) ==\n\
+         off {off_rate:.0} steps/s, on {on_rate:.0} steps/s -> {overhead_pct:.2}% overhead \
+         (CI gate < 3%: {})",
+        if gate_pass { "PASS" } else { "FAIL" }
+    );
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("telemetry_overhead".into())),
+        ("workload", Json::Str("fig1_gaussian_ec".into())),
+        ("steps", Json::Num(steps as f64)),
+        ("telemetry_every", Json::Num(50.0)),
+        ("ring_capacity", Json::Num(4096.0)),
+        ("off_steps_per_sec", Json::Num(off_rate)),
+        ("on_steps_per_sec", Json::Num(on_rate)),
+        ("overhead_pct", Json::Num(overhead_pct)),
+        ("target_pct", Json::Num(3.0)),
+        ("dispatch", Json::Str(ecsgmcmc::math::simd::kernel_kind().name().into())),
+        ("cpu", Json::Str(ecsgmcmc::math::simd::cpu_features())),
+        ("gate_overhead_pass", Json::Bool(gate_pass)),
+    ]);
+    if std::fs::create_dir_all("out/bench").is_ok() {
+        let path = std::path::Path::new("out/bench/BENCH_telemetry.json");
+        let _ = std::fs::write(path, doc.emit_pretty());
+        println!("-> wrote {}", path.display());
+    }
+    let _ = std::fs::remove_file(&stream);
 }

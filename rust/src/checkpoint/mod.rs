@@ -97,6 +97,7 @@ impl CheckpointStore {
     /// Persist a snapshot atomically and prune old ones. Returns the
     /// final path.
     pub fn save(&self, snap: &Snapshot) -> Result<PathBuf> {
+        let _span = crate::telemetry::span(crate::telemetry::Stage::CheckpointWrite);
         std::fs::create_dir_all(&self.dir)
             .with_context(|| format!("creating checkpoint dir {:?}", self.dir))?;
         let final_path = self.dir.join(Self::file_name(snap.boundary));

@@ -502,6 +502,9 @@ impl Snapshot {
                         stale_rejects: get_u64(v, "stale_rejects")?,
                         worker_joins: get_u64(v, "worker_joins")?,
                         worker_leaves: get_u64(v, "worker_leaves")?,
+                        // Stage totals are finalized only at run end, so
+                        // mid-run snapshots never carry them.
+                        stage_totals: Vec::new(),
                     });
                 }
                 "center" => {

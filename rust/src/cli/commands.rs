@@ -61,7 +61,26 @@ fn apply_overrides(cfg: &mut RunConfig, p: &Parsed) -> Result<()> {
     if let Some(d) = p.opt("dispatch") {
         cfg.dispatch = crate::math::simd::DispatchChoice::from_str(d).context("--dispatch")?;
     }
+    if p.has_flag("telemetry") {
+        cfg.telemetry = true;
+    }
+    if let Some(n) = p.opt("telemetry-every") {
+        cfg.telemetry_every = n.parse().context("--telemetry-every")?;
+    }
     Ok(())
+}
+
+/// Commit the configured telemetry switches to the process-global runtime
+/// before any worker thread spawns (DESIGN.md §11).
+fn apply_telemetry(cfg: &RunConfig) {
+    crate::telemetry::configure(cfg.telemetry, cfg.telemetry_every, cfg.telemetry_ring);
+    if cfg.telemetry {
+        log_info!(
+            "telemetry: on (frame every {} center steps, ring capacity {})",
+            cfg.telemetry_every,
+            cfg.telemetry_ring
+        );
+    }
 }
 
 /// `ecsgmcmc sample --config <file> [--seed n] [--transport t] [--shards n]
@@ -73,6 +92,7 @@ pub fn cmd_sample(p: &Parsed) -> Result<i32> {
     apply_overrides(&mut cfg, p)?;
     cfg.validate()?;
     apply_dispatch(&cfg)?;
+    apply_telemetry(&cfg);
     // Probe stream-path writability now: the scheme drivers treat sink
     // init as infallible, so an unwritable path must fail here with a
     // clean error before any sampling starts. Open in append mode — the
@@ -143,6 +163,7 @@ pub fn cmd_resume(p: &Parsed) -> Result<i32> {
     apply_overrides(&mut cfg, p)?;
     cfg.validate()?;
     apply_dispatch(&cfg)?;
+    apply_telemetry(&cfg);
     if !matches!(cfg.scheme, Scheme::ElasticCoupling | Scheme::EcSgld) {
         return Err(anyhow!("resume supports the EC schemes (got {})", cfg.scheme.name()));
     }
@@ -516,6 +537,50 @@ fn print_moments(mean: &[f64], cov: &[f64], d: usize) {
     for a in 0..d {
         let row: Vec<f64> = (0..d).map(|b| cov[a * full + b]).collect();
         println!("sample cov[{a}]: [{}]", fmt_row(&row));
+    }
+}
+
+/// `ecsgmcmc trace --file <run.jsonl> [--out trace.json]`.
+///
+/// Converts the `telemetry` events of a JSONL run stream into a Chrome
+/// trace-event file loadable in `chrome://tracing` / Perfetto.
+pub fn cmd_trace(p: &Parsed) -> Result<i32> {
+    let stream = p.opt("file").ok_or_else(|| anyhow!("--file is required"))?;
+    let out = p.opt("out").unwrap_or("trace.json");
+    let stats = crate::telemetry::chrome::write_trace(
+        std::path::Path::new(stream),
+        std::path::Path::new(out),
+    )?;
+    println!(
+        "trace: {} spans over {} threads from {} telemetry frames -> {out}",
+        stats.spans, stats.threads, stats.telemetry_events
+    );
+    Ok(0)
+}
+
+/// `ecsgmcmc top --file <run.jsonl> [--follow] [--interval-ms n]`.
+///
+/// Renders per-stage latency quantiles, counters, and gauges from a run
+/// stream's `telemetry` events; with `--follow`, tails the stream live
+/// and redraws every interval (the run keeps appending while we read).
+pub fn cmd_top(p: &Parsed) -> Result<i32> {
+    use crate::telemetry::top::{StreamTail, TopState};
+    let path = p.opt("file").ok_or_else(|| anyhow!("--file is required"))?;
+    let path = std::path::Path::new(path);
+    if !p.has_flag("follow") {
+        print!("{}", crate::telemetry::top::top_once(path)?);
+        return Ok(0);
+    }
+    let interval = std::time::Duration::from_millis(p.opt_u64("interval-ms", 1000)?.max(50));
+    let mut state = TopState::default();
+    let mut tail = StreamTail::default();
+    loop {
+        tail.poll(path, &mut state)?;
+        // Clear + home, then the freshly rendered table.
+        print!("\x1b[2J\x1b[H{}", state.render());
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        std::thread::sleep(interval);
     }
 }
 

@@ -8,6 +8,10 @@
 //!   transport, DESIGN.md §8);
 //! * `replay --file <run.jsonl>` — reconstruct or re-diagnose a streamed
 //!   run from its JSONL artifact (DESIGN.md §7);
+//! * `trace --file <run.jsonl>` — export the stream's telemetry frames
+//!   as a Chrome trace-event file (DESIGN.md §11);
+//! * `top --file <run.jsonl>` — live per-stage latency/counter view of a
+//!   running (or finished) streamed run;
 //! * `experiment --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF|CHURN>`
 //!   — run a paper experiment and print its table (plus CSVs under
 //!   `--out`);
@@ -24,10 +28,18 @@ use anyhow::Result;
 /// Entry point used by `main.rs`.
 pub fn run(argv: Vec<String>) -> Result<i32> {
     let parsed = args::Parsed::parse(argv)?;
+    if let Some(s) = parsed.opt("log-level") {
+        match crate::util::logging::Level::from_str(s) {
+            Some(l) => crate::util::logging::set_level(l),
+            None => anyhow::bail!("--log-level expects error|warn|info|debug|trace, got '{s}'"),
+        }
+    }
     match parsed.command.as_str() {
         "sample" => commands::cmd_sample(&parsed),
         "resume" => commands::cmd_resume(&parsed),
         "replay" => commands::cmd_replay(&parsed),
+        "trace" => commands::cmd_trace(&parsed),
+        "top" => commands::cmd_top(&parsed),
         "experiment" => commands::cmd_experiment(&parsed),
         "bench" => commands::cmd_bench(&parsed),
         "artifacts" => commands::cmd_artifacts(&parsed),
@@ -70,6 +82,9 @@ COMMANDS:
                   --staleness-bound <b>  reject uploads staler than b center steps
                   --dispatch <d>         kernel dispatch: auto|scalar|simd
                                          (scalar = bitwise-reproducible reference)
+                  --telemetry            enable span tracing + metrics frames
+                  --telemetry-every <n>  center steps between telemetry frames
+                                         (default 50)
     resume      Continue a checkpointed EC run from its newest snapshot
                   --config <file.toml>   the run's original config
                   --checkpoint-dir <d>   snapshot dir (or [checkpoint] dir)
@@ -78,6 +93,13 @@ COMMANDS:
                   --file <run.jsonl>     stream produced by --sink jsonl|tee
                   --diag                 stream diagnostics only (bounded memory)
                   --dim <d>              moment dimensions to report (default 2)
+    trace       Export a stream's telemetry frames as a Chrome trace
+                  --file <run.jsonl>     stream recorded with --telemetry
+                  --out <trace.json>     output file (default trace.json)
+    top         Per-stage latency/counter view of a streamed run
+                  --file <run.jsonl>     stream recorded with --telemetry
+                  --follow               tail the stream and redraw live
+                  --interval-ms <n>      redraw period with --follow (default 1000)
     experiment  Regenerate a paper experiment
                   --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF|CHURN>
                   --fast                 smoke-scale run
@@ -90,6 +112,9 @@ COMMANDS:
                   --dir <dir>            (default artifacts/)
     version     Print the version
     help        This message
+
+GLOBAL OPTIONS:
+    --log-level <l>      error|warn|info|debug|trace (overrides ECSGMCMC_LOG)
 
 ENVIRONMENT:
     ECSGMCMC_LOG         error|warn|info|debug|trace (default info)

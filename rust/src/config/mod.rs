@@ -195,6 +195,16 @@ pub struct RunConfig {
     /// the bitwise-reproducible reference kernels, `simd` forces the
     /// packed kernels and errors on unsupported hardware (DESIGN.md §10).
     pub dispatch: DispatchChoice,
+    /// Span tracing + metrics registry (`[telemetry] enabled`,
+    /// `--telemetry`): off by default; when off the instrumentation is a
+    /// single relaxed atomic load per site (DESIGN.md §11).
+    pub telemetry: bool,
+    /// Center steps between periodic `telemetry` stream events
+    /// (`[telemetry] every`, `--telemetry-every`).
+    pub telemetry_every: u64,
+    /// Per-thread span ring capacity, rounded up to a power of two
+    /// (`[telemetry] ring_capacity`).
+    pub telemetry_ring: usize,
 }
 
 impl Default for RunConfig {
@@ -227,6 +237,9 @@ impl Default for RunConfig {
             churn: ChurnModel::none(),
             staleness_bound: None,
             dispatch: DispatchChoice::Auto,
+            telemetry: false,
+            telemetry_every: 50,
+            telemetry_ring: 4096,
         }
     }
 }
@@ -327,6 +340,12 @@ impl RunConfig {
             cfg.dispatch = DispatchChoice::from_str(s)?;
         }
 
+        cfg.telemetry = t.get_bool("telemetry", "enabled").unwrap_or(cfg.telemetry);
+        cfg.telemetry_every =
+            t.get_usize("telemetry", "every").unwrap_or(cfg.telemetry_every as usize) as u64;
+        cfg.telemetry_ring =
+            t.get_usize("telemetry", "ring_capacity").unwrap_or(cfg.telemetry_ring);
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -414,6 +433,12 @@ impl RunConfig {
             if self.checkpoint_keep == 0 {
                 bail!("[checkpoint] keep must be >= 1");
             }
+        }
+        if self.telemetry_every == 0 {
+            bail!("[telemetry] every must be >= 1 center step");
+        }
+        if self.telemetry_ring < 2 {
+            bail!("[telemetry] ring_capacity must be >= 2 (got {})", self.telemetry_ring);
         }
         if self.dispatch == DispatchChoice::Simd && !crate::math::simd::simd_supported() {
             bail!(
@@ -636,6 +661,25 @@ alpha = 0.5
         } else {
             assert!(forced.is_err());
         }
+    }
+
+    #[test]
+    fn parses_telemetry_table() {
+        let cfg = RunConfig::from_toml_str(
+            "[telemetry]\nenabled = true\nevery = 10\nring_capacity = 512\n",
+        )
+        .unwrap();
+        assert!(cfg.telemetry);
+        assert_eq!(cfg.telemetry_every, 10);
+        assert_eq!(cfg.telemetry_ring, 512);
+        // Defaults: off, sparse frames, 4k spans per thread.
+        let plain = RunConfig::from_toml_str("[run]\nscheme = \"ec\"\n").unwrap();
+        assert!(!plain.telemetry);
+        assert_eq!(plain.telemetry_every, 50);
+        assert_eq!(plain.telemetry_ring, 4096);
+        // Degenerate knobs are rejected.
+        assert!(RunConfig::from_toml_str("[telemetry]\nevery = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("[telemetry]\nring_capacity = 1\n").is_err());
     }
 
     #[test]

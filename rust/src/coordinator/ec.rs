@@ -218,6 +218,48 @@ struct CenterCell {
     sink: Box<dyn SampleSink>,
     /// Center samples lost before this process (restored on resume).
     dropped_base: u64,
+    /// Telemetry drain state (`Some` iff `--telemetry` is on): the
+    /// center server doubles as the span-ring consumer (DESIGN.md §11).
+    telem: Option<TelemetryState>,
+}
+
+/// The coordinator-side half of the telemetry pipeline: the cumulative
+/// [`crate::telemetry::Aggregate`] every ring drains into, plus the
+/// stream the periodic `telemetry` events go to (`None` when the run has
+/// no JSONL sink — rings still drain so memory stays bounded).
+struct TelemetryState {
+    agg: crate::telemetry::Aggregate,
+    writer: Option<Arc<crate::sink::JsonlWriter>>,
+}
+
+impl TelemetryState {
+    /// Drain every ring and emit one `telemetry` stream event.
+    fn emit(&mut self, t: f64, center_steps: u64, staleness_hist: &[u64]) {
+        crate::telemetry::drain_into(&mut self.agg);
+        let (spans, elided) = self.agg.take_recent();
+        if let Some(w) = &self.writer {
+            let frame = crate::telemetry::event::TelemetryFrame {
+                t,
+                center_steps,
+                agg: &self.agg,
+                staleness_hist,
+                spans: &spans,
+                spans_elided: elided,
+            };
+            w.telemetry(&frame);
+        }
+    }
+
+    /// Cumulative `(stage, count, total_ns)` rows for the run summary.
+    fn stage_totals(&self) -> Vec<(String, u64, u64)> {
+        crate::telemetry::Stage::ALL
+            .iter()
+            .filter_map(|s| {
+                let h = &self.agg.stages[*s as usize];
+                (h.count() > 0).then(|| (s.name().to_string(), h.count(), h.sum()))
+            })
+            .collect()
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -294,7 +336,10 @@ fn run_ec_worker_segment(
         cell.rec.observe(t, u, &cell.state.theta);
         delay.step_sleep(factor, &mut cell.jitter);
         if (t + 1) % sync_every == 0 {
-            port.exchange(&cell.state.theta, &mut center);
+            {
+                let _span = crate::telemetry::span(crate::telemetry::Stage::Exchange);
+                port.exchange(&cell.state.theta, &mut center);
+            }
             if let Some(g) = &gate {
                 g.exchanges.fetch_add(1, Ordering::AcqRel);
             }
@@ -463,7 +508,10 @@ fn run_ec_block_segment(
             cell.rec.observe(t, us[s], &cell.state.theta);
             delay.step_sleep(factors[i], &mut cell.jitter);
             if (t + 1) % sync_every == 0 {
-                ports[i].exchange(&cell.state.theta, &mut views[i]);
+                {
+                    let _span = crate::telemetry::span(crate::telemetry::Stage::Exchange);
+                    ports[i].exchange(&cell.state.theta, &mut views[i]);
+                }
                 if let Some(g) = &gate {
                     g.exchanges.fetch_add(1, Ordering::AcqRel);
                 }
@@ -528,6 +576,13 @@ fn run_center_segment(
     loop {
         uploads.clear();
         let more = port.recv(&mut uploads);
+        if let Some(tel) = cc.telem.as_mut() {
+            // Each recv batch size is one queue-depth observation: how
+            // far behind the fleet the server was when it looked.
+            if !uploads.is_empty() {
+                tel.agg.observe_queue_depth(uploads.len() as u64);
+            }
+        }
         for up in uploads.drain(..) {
             let worker = up.worker;
             let stale = cc.center_steps.saturating_sub(up.seen_version);
@@ -576,6 +631,15 @@ fn run_center_segment(
                 }
                 if cc.center_steps as usize % opts.log_every == 0 {
                     cc.sink.record(t0.elapsed().as_secs_f64(), &cc.state.theta);
+                }
+                if cc.center_steps % crate::telemetry::every() == 0 {
+                    if let Some(tel) = cc.telem.as_mut() {
+                        tel.emit(
+                            t0.elapsed().as_secs_f64(),
+                            cc.center_steps,
+                            &cc.metrics.staleness_hist,
+                        );
+                    }
                 }
             }
             delay.exchange_sleep();
@@ -698,6 +762,20 @@ fn run_ec_inner(
             .context("reopening run streams for resume")?,
     };
 
+    // Telemetry: flush any spans left over from an earlier run in this
+    // process, then hand the center server the drain state. Disabled
+    // runs pay nothing past this one check.
+    let telem_on = crate::telemetry::enabled();
+    if telem_on {
+        crate::telemetry::discard_pending();
+    }
+    let make_telem = || {
+        telem_on.then(|| TelemetryState {
+            agg: crate::telemetry::Aggregate::default(),
+            writer: hub.primary_writer(),
+        })
+    };
+
     let gate = Arc::new(Gate { exchanges: AtomicU64::new(0), steppers: AtomicUsize::new(0) });
     let make_recorder = |w: usize| {
         Recorder::new(
@@ -752,6 +830,7 @@ fn run_ec_inner(
                 metrics: Metrics::default(),
                 sink: hub.frame_sink(Frame::Center, cfg.opts.max_samples),
                 dropped_base: 0,
+                telem: make_telem(),
             };
             (cells, center, 0.0, 0)
         }
@@ -814,6 +893,7 @@ fn run_ec_inner(
                 metrics: snap.metrics.clone(),
                 sink: hub.frame_sink(Frame::Center, cfg.opts.max_samples),
                 dropped_base: c.dropped,
+                telem: make_telem(),
             };
             (cells, center, snap.elapsed, snap.boundary)
         }
@@ -1034,6 +1114,17 @@ fn run_ec_inner(
     result.chains.sort_by_key(|c| c.worker);
     let mut cc = center;
     cc.metrics.center_steps = cc.center_steps;
+    // Final telemetry drain: every worker thread has joined, so the rings
+    // are quiescent — whatever they still hold becomes the last event,
+    // and the cumulative stage totals fold into the run summary.
+    if let Some(tel) = cc.telem.as_mut() {
+        tel.emit(
+            elapsed_before + start.elapsed().as_secs_f64(),
+            cc.center_steps,
+            &cc.metrics.staleness_hist,
+        );
+        cc.metrics.stage_totals = tel.stage_totals();
+    }
     // Overflow past the in-memory cap is accounted, not silently lost.
     cc.metrics.samples_dropped = cc.dropped_base + cc.sink.dropped();
     result.center_trace = cc.sink.take_samples();

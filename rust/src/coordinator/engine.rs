@@ -112,7 +112,10 @@ impl WorkerEngine for NativeEngine {
         coupling: Option<(&[f32], f64)>,
         rng: &mut Pcg64,
     ) -> f64 {
-        let u = self.potential.stoch_grad(&state.theta, &mut self.grad, rng);
+        let u = {
+            let _span = crate::telemetry::span(crate::telemetry::Stage::StochGrad);
+            self.potential.stoch_grad(&state.theta, &mut self.grad, rng)
+        };
         match self.kind {
             StepKind::Sghmc => self.sghmc.step(state, &self.grad, coupling, rng),
             StepKind::Sgld => self.sgld.step(state, &self.grad, coupling, rng),
@@ -141,6 +144,8 @@ impl WorkerEngine for NativeEngine {
                 thetas.push(slot.state.theta.as_slice());
                 rngs.push(&mut *slot.rng);
             }
+            let _span =
+                crate::telemetry::span_arg(crate::telemetry::Stage::StochGrad, b as u64);
             self.potential.stoch_grad_batch(
                 &thetas,
                 &mut self.grad_batch[..b * dim],

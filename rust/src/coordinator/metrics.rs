@@ -36,6 +36,12 @@ pub struct Metrics {
     /// Workers that left the fleet before run end — clean leaves *and*
     /// simulated failures both count (DESIGN.md §8).
     pub worker_leaves: u64,
+    /// Telemetry-derived per-stage totals `(stage, span_count, total_ns)`
+    /// folded in at run end when `--telemetry` is on; empty otherwise.
+    /// Serialized as schema-additive flat `stage_<name>_count` /
+    /// `stage_<name>_ns` keys (stream v3, DESIGN.md §7/§11), so v2
+    /// streams and pre-telemetry checkpoints replay unchanged.
+    pub stage_totals: Vec<(String, u64, u64)>,
 }
 
 impl Default for Metrics {
@@ -51,6 +57,7 @@ impl Default for Metrics {
             stale_rejects: 0,
             worker_joins: 0,
             worker_leaves: 0,
+            stage_totals: Vec::new(),
         }
     }
 }
@@ -85,7 +92,7 @@ impl Metrics {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::from_pairs(vec![
+        let mut j = Json::from_pairs(vec![
             ("total_steps", Json::Num(self.total_steps as f64)),
             ("center_steps", Json::Num(self.center_steps as f64)),
             ("exchanges", Json::Num(self.exchanges as f64)),
@@ -97,7 +104,14 @@ impl Metrics {
             ("worker_leaves", Json::Num(self.worker_leaves as f64)),
             ("mean_staleness", Json::Num(self.mean_staleness())),
             ("max_staleness", Json::Num(self.max_staleness() as f64)),
-        ])
+        ]);
+        if let Json::Obj(map) = &mut j {
+            for (stage, count, ns) in &self.stage_totals {
+                map.insert(format!("stage_{stage}_count"), Json::Num(*count as f64));
+                map.insert(format!("stage_{stage}_ns"), Json::Num(*ns as f64));
+            }
+        }
+        j
     }
 
     /// Rebuild counters from a stream's metrics event (`sink/replay`).
@@ -105,6 +119,16 @@ impl Metrics {
     /// statistics travel, so the rebuilt histogram is empty.
     pub fn from_json(v: &Json) -> Metrics {
         let num = |key: &str| v.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+        // Stage totals are keyed by the compile-time stage names (stream
+        // v3; absent on v2 streams → empty, matching pre-telemetry runs).
+        let mut stage_totals = Vec::new();
+        for stage in crate::telemetry::Stage::ALL {
+            let count_key = format!("stage_{}_count", stage.name());
+            if let Some(count) = v.get(&count_key).and_then(Json::as_f64) {
+                let ns = num(&format!("stage_{}_ns", stage.name()));
+                stage_totals.push((stage.name().to_string(), count as u64, ns as u64));
+            }
+        }
         Metrics {
             total_steps: num("total_steps") as u64,
             center_steps: num("center_steps") as u64,
@@ -116,6 +140,7 @@ impl Metrics {
             stale_rejects: num("stale_rejects") as u64,
             worker_joins: num("worker_joins") as u64,
             worker_leaves: num("worker_leaves") as u64,
+            stage_totals,
         }
     }
 }
@@ -152,6 +177,24 @@ mod tests {
         assert!(j.get("center_steps").is_some());
         assert!(j.get("samples_dropped").is_some());
         assert!(j.get("mean_staleness").is_some());
+    }
+
+    #[test]
+    fn stage_totals_round_trip_as_schema_additive_keys() {
+        let mut m = Metrics::default();
+        m.stage_totals = vec![
+            ("stoch_grad".to_string(), 4000, 1_250_000),
+            ("exchange".to_string(), 2000, 800_000),
+        ];
+        let j = m.to_json();
+        assert_eq!(j.get("stage_stoch_grad_count").and_then(Json::as_f64), Some(4000.0));
+        assert_eq!(j.get("stage_exchange_ns").and_then(Json::as_f64), Some(800_000.0));
+        let back = Metrics::from_json(&j);
+        assert_eq!(back.stage_totals, m.stage_totals);
+        // v2 streams (no stage keys) rebuild to the pre-telemetry default.
+        let v2 = Metrics::default().to_json();
+        assert!(v2.get("stage_stoch_grad_count").is_none());
+        assert!(Metrics::from_json(&v2).stage_totals.is_empty());
     }
 
     #[test]

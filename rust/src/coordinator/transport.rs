@@ -457,6 +457,10 @@ impl LockFreeTransport {
             last_seen: vec![0; k],
             reported: vec![false; k],
             shared,
+            // Resolved once here so the hot sweep loop never touches the
+            // registry lock — updating the gauge is one relaxed store.
+            depth_gauge: crate::telemetry::enabled()
+                .then(|| crate::telemetry::gauge("transport.pending_uploads")),
         };
         LockFreeTransport { ports, server: Some(Box::new(server)) }
     }
@@ -547,14 +551,19 @@ struct LockFreeServerPort {
     /// Departures already surfaced through `member_events`.
     reported: Vec<bool>,
     shared: Arc<LockFreeShared>,
+    /// `Some` iff telemetry was on at construction: mailboxes with fresh
+    /// uploads as of the latest sweep (`transport.pending_uploads`).
+    depth_gauge: Option<std::sync::Arc<crate::telemetry::Gauge>>,
 }
 
 impl LockFreeServerPort {
     fn sweep(&mut self, out: &mut Vec<Upload>) {
         let dim = self.shared.layout.dim();
+        let mut fresh = 0i64;
         for w in 0..self.last_seen.len() {
             let mbox = &self.shared.mailboxes[w];
             if mbox.version() > self.last_seen[w] {
+                fresh += 1;
                 let mut theta = vec![0.0f32; dim];
                 let v = mbox.read_into(&mut theta);
                 out.push(Upload {
@@ -564,6 +573,11 @@ impl LockFreeServerPort {
                     theta,
                 });
                 self.last_seen[w] = v;
+            }
+        }
+        if let Some(g) = &self.depth_gauge {
+            if fresh > 0 {
+                g.set(fresh);
             }
         }
     }

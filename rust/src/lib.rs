@@ -50,6 +50,7 @@ pub mod potentials;
 pub mod runtime;
 pub mod samplers;
 pub mod sink;
+pub mod telemetry;
 pub mod testing;
 pub mod util;
 /// Offline stub for the PJRT bindings; the `xla-runtime` feature swaps in

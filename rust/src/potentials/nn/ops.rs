@@ -65,6 +65,7 @@ fn all_finite(xs: &[f32]) -> bool {
 /// C(m,n) = A(m,k) · B(k,n); C is overwritten. Routes to the scalar or
 /// packed-SIMD kernel per the process dispatch mode.
 pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    let _span = gemm_span(m, k, n);
     match kernel_kind() {
         KernelKind::Scalar => gemm_nn_scalar(a, b, m, k, n, c),
         KernelKind::Simd => gemm_nn_packed(a, b, m, k, n, c),
@@ -73,6 +74,7 @@ pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]
 
 /// C(k,n) = A(m,k)ᵀ · B(m,n); C is overwritten. (dW = hᵀ · dZ)
 pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    let _span = gemm_span(m, k, n);
     match kernel_kind() {
         KernelKind::Scalar => gemm_tn_scalar(a, b, m, k, n, c),
         KernelKind::Simd => gemm_tn_packed(a, b, m, k, n, c),
@@ -81,6 +83,7 @@ pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]
 
 /// C(m,k) = A(m,n) · B(k,n)ᵀ; C is overwritten. (dH = dZ · Wᵀ)
 pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    let _span = gemm_span(m, n, k);
     match kernel_kind() {
         KernelKind::Scalar => gemm_nt_scalar(a, b, m, n, k, c),
         KernelKind::Simd => gemm_nt_packed(a, b, m, n, k, c),
@@ -92,10 +95,19 @@ pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]
 /// historical reference, so `dispatch = scalar` stays bitwise-stable);
 /// SIMD dispatch runs the packed kernel.
 pub fn gemm_tn_batch(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    let _span = gemm_span(m, k, n);
     match kernel_kind() {
         KernelKind::Scalar => gemm_tn_tiled(a, b, m, k, n, c),
         KernelKind::Simd => gemm_tn_packed(a, b, m, k, n, c),
     }
+}
+
+/// Span guard for the dispatched GEMM family (`arg` = 2·m·k·n flops).
+/// Inert — one relaxed atomic load, no clock read — when telemetry is
+/// off, so the kernel benchmarks in `bench/kernels.rs` are untouched.
+#[inline(always)]
+fn gemm_span(m: usize, k: usize, n: usize) -> crate::telemetry::SpanGuard {
+    crate::telemetry::span_arg(crate::telemetry::Stage::Gemm, 2 * (m * k * n) as u64)
 }
 
 // ---------------------------------------------------------------------

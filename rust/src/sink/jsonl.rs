@@ -1,15 +1,16 @@
 //! Streaming JSONL sink: one self-describing event per line.
 //!
-//! Event schema (stream version 2; see DESIGN.md §7 for the full table):
+//! Event schema (stream version 3; see DESIGN.md §7 for the full table):
 //!
 //! ```text
-//! {"ev":"meta","version":2,"scheme":"ec","workers":4,"seed":"42",
+//! {"ev":"meta","version":3,"scheme":"ec","workers":4,"seed":"42",
 //!  "dispatch":"simd","cpu":"x86_64 avx2 fma"}
 //! {"ev":"sample","chain":0,"t":0.0123,"theta":[0.5,-1.25]}
 //! {"ev":"u","chain":0,"step":100,"t":0.0119,"u":1.875}
 //! {"ev":"center","t":0.0125,"theta":[0.1,-0.9]}
 //! {"ev":"member","worker":5,"kind":"join","t":0.2}
 //! {"ev":"checkpoint","step":400,"file":"out/ckpt/ckpt-000000000400.jsonl"}
+//! {"ev":"telemetry","t":0.3,"center_steps":400,"stages":{...},...}
 //! {"ev":"metrics","total_steps":4000,...,"elapsed":0.42}
 //! ```
 //!
@@ -17,7 +18,10 @@
 //! `stale_rejects`/`worker_joins`/`worker_leaves` metrics keys
 //! (elastic membership + checkpoint runtime, DESIGN.md §8). The
 //! `dispatch`/`cpu` meta keys are schema-additive within v2 (kernel
-//! dispatch, DESIGN.md §10) — replay ignores unknown keys.
+//! dispatch, DESIGN.md §10) — replay ignores unknown keys. v3 added the
+//! periodic `telemetry` event (full schema in `telemetry/event.rs` /
+//! DESIGN.md §11) and the schema-additive `stage_*_count`/`stage_*_ns`
+//! metrics keys; v2 streams parse unchanged.
 //!
 //! Framing: every event line carries its own frame tag (`chain` id, or
 //! the `center` event kind), and [`JsonlWriter`] locks per *line* — so K
@@ -36,7 +40,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Stream format version, bumped on schema changes.
-pub const STREAM_VERSION: u64 = 2;
+pub const STREAM_VERSION: u64 = 3;
 
 /// Line-atomic writer shared by every frame's [`JsonlSink`].
 ///
@@ -158,6 +162,12 @@ impl JsonlWriter {
         e.key("worker_joins").num(m.worker_joins as f64);
         e.key("worker_leaves").num(m.worker_leaves as f64);
         e.key("mean_staleness").num(m.mean_staleness());
+        // Schema-additive stage totals (stream v3): absent unless the run
+        // had telemetry on, so v2-era replays see byte-identical events.
+        for (stage, count, ns) in &m.stage_totals {
+            e.key(&format!("stage_{stage}_count")).num(*count as f64);
+            e.key(&format!("stage_{stage}_ns")).num(*ns as f64);
+        }
         e.key("elapsed").num(elapsed);
         e.end_obj();
         self.line(e.as_str());
@@ -190,7 +200,18 @@ impl JsonlWriter {
         self.line(e.as_str());
     }
 
+    /// Periodic telemetry frame (DESIGN.md §11): cumulative stage
+    /// histograms, staleness/queue-depth quantiles, and the recent span
+    /// window. Schema-additive — replay annotates it without touching
+    /// the sample path.
+    pub fn telemetry(&self, frame: &crate::telemetry::event::TelemetryFrame) {
+        let mut e = Emitter::new();
+        frame.emit(&mut e);
+        self.line(e.as_str());
+    }
+
     pub fn flush(&self) {
+        let _span = crate::telemetry::span(crate::telemetry::Stage::SinkFlush);
         if let Ok(mut out) = self.out.lock() {
             let _ = out.flush();
         }

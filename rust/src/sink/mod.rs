@@ -185,6 +185,13 @@ impl SinkHub {
             .collect()
     }
 
+    /// The first attached JSONL writer, if any — where periodic
+    /// telemetry frames go (telemetry is run-global, not per-stream, so
+    /// mirroring it to every tee'd stream would only duplicate bytes).
+    pub fn primary_writer(&self) -> Option<Arc<JsonlWriter>> {
+        self.writers.first().cloned()
+    }
+
     /// Append a checkpoint marker to every attached stream.
     pub fn write_checkpoint_marker(&self, step: usize, file: &str) {
         for w in &self.writers {

@@ -25,6 +25,12 @@ pub enum RunEvent {
     /// Checkpoint marker (stream v2): a snapshot covering everything up
     /// to `step` was persisted at `file`.
     Checkpoint { step: usize, file: String },
+    /// Periodic telemetry frame (stream v3, DESIGN.md §11): per-stage
+    /// latency histograms, staleness/queue-depth quantiles and a compact
+    /// span window. The full parsed object rides along so consumers
+    /// (`ecsgmcmc trace`/`top`) read the schema-additive payload without
+    /// this enum chasing every key.
+    Telemetry { t: f64, json: Json },
     Metrics { metrics: Metrics, elapsed: f64 },
 }
 
@@ -76,6 +82,10 @@ impl RunEvent {
             "checkpoint" => RunEvent::Checkpoint {
                 step: v.get("step").and_then(Json::as_usize).context("checkpoint: step")?,
                 file: v.get("file").and_then(Json::as_str).unwrap_or("").to_string(),
+            },
+            "telemetry" => RunEvent::Telemetry {
+                t: num_or_nan(v, "t").unwrap_or(f64::NAN),
+                json: v.clone(),
             },
             "metrics" => RunEvent::Metrics {
                 metrics: Metrics::from_json(v),
@@ -149,10 +159,11 @@ pub fn replay_reader<R: Read>(src: R) -> Result<RunResult> {
                 chain_entry(&mut chains, chain).u_trace.push(TracePoint { step, t, u });
             }
             RunEvent::Center { t, theta } => result.center_trace.push((t, theta)),
-            // Membership transitions and checkpoint markers are run
-            // *annotations*: the counters they summarize travel in the
-            // metrics event, so reconstruction skips them.
-            RunEvent::Member { .. } | RunEvent::Checkpoint { .. } => {}
+            // Membership transitions, checkpoint markers and telemetry
+            // frames are run *annotations*: the counters they summarize
+            // travel in the metrics event, so reconstruction skips them.
+            RunEvent::Member { .. } | RunEvent::Checkpoint { .. } | RunEvent::Telemetry { .. } => {
+            }
             RunEvent::Metrics { metrics, elapsed } => {
                 result.metrics = metrics;
                 result.elapsed = elapsed;

@@ -1,0 +1,156 @@
+//! Chrome `chrome://tracing` / Perfetto trace-event exporter
+//! (`ecsgmcmc trace --file run.jsonl --out trace.json`).
+//!
+//! Converts the compact span arrays embedded in a stream's `telemetry`
+//! events into the Trace Event JSON format: one `"ph":"X"` (complete)
+//! event per span, `ts`/`dur` in microseconds, plus `"M"` metadata
+//! events naming each thread row. The conversion is offline and
+//! bounded-memory on the input side (one stream line at a time via
+//! `scan_stream`); the output trace is buffered per event.
+
+use crate::sink::replay::{scan_stream, RunEvent};
+use crate::util::json::{Emitter, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+/// Statistics of one conversion, for the CLI summary line.
+pub struct TraceStats {
+    pub telemetry_events: usize,
+    pub spans: usize,
+    pub threads: usize,
+}
+
+/// Convert `stream` into a Chrome trace file at `out`.
+pub fn write_trace(stream: &Path, out: &Path) -> Result<TraceStats> {
+    let file = File::open(stream).with_context(|| format!("opening stream {stream:?}"))?;
+    let mut labels: BTreeMap<u64, String> = BTreeMap::new();
+    let mut spans: Vec<[f64; 4]> = Vec::new(); // [tid, stage, ts_us, dur_us]
+    let mut telemetry_events = 0usize;
+    scan_stream(file, |ev| {
+        let RunEvent::Telemetry { json, .. } = ev else { return Ok(()) };
+        telemetry_events += 1;
+        if let Some(threads) = json.get("threads").and_then(Json::as_arr) {
+            for row in threads {
+                let Some(pair) = row.as_arr().and_then(|r| r.get(0..2)) else { continue };
+                if let (Some(tid), Some(label)) = (pair[0].as_f64(), pair[1].as_str()) {
+                    labels.insert(tid as u64, label.to_string());
+                }
+            }
+        }
+        if let Some(rows) = json.get("spans").and_then(Json::as_arr) {
+            for row in rows {
+                let Some(r) = row.as_arr() else { continue };
+                if r.len() < 4 {
+                    continue;
+                }
+                let vals: Vec<f64> = r.iter().filter_map(Json::as_f64).collect();
+                if vals.len() == 4 {
+                    spans.push([vals[0], vals[1], vals[2], vals[3]]);
+                }
+            }
+        }
+        Ok(())
+    })?;
+    if telemetry_events == 0 {
+        bail!(
+            "stream {stream:?} has no telemetry events — was the run started \
+             with --telemetry (or [telemetry] enabled = true)?"
+        );
+    }
+
+    let mut e = Emitter::new();
+    e.begin_obj();
+    e.key("traceEvents").begin_arr();
+    for (tid, label) in &labels {
+        e.begin_obj();
+        e.key("ph").str_val("M");
+        e.key("pid").num(1.0);
+        e.key("tid").num(*tid as f64);
+        e.key("name").str_val("thread_name");
+        e.key("args").begin_obj();
+        e.key("name").str_val(label);
+        e.end_obj();
+        e.end_obj();
+    }
+    for [tid, stage, ts, dur] in &spans {
+        let name = super::Stage::from_idx(*stage as u8).map(|s| s.name()).unwrap_or("stage?");
+        e.begin_obj();
+        e.key("ph").str_val("X");
+        e.key("pid").num(1.0);
+        e.key("tid").num(*tid);
+        e.key("ts").num(*ts);
+        e.key("dur").num(*dur);
+        e.key("name").str_val(name);
+        e.key("cat").str_val("stage");
+        e.end_obj();
+    }
+    e.end_arr();
+    e.key("displayTimeUnit").str_val("ms");
+    e.end_obj();
+
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating trace dir {parent:?}"))?;
+        }
+    }
+    let mut f = File::create(out).with_context(|| format!("creating trace {out:?}"))?;
+    f.write_all(e.as_str().as_bytes()).with_context(|| format!("writing trace {out:?}"))?;
+    Ok(TraceStats { telemetry_events, spans: spans.len(), threads: labels.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converts_telemetry_spans_into_complete_events() {
+        let dir = std::env::temp_dir().join("ecsgmcmc-chrome-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let stream = dir.join("in.jsonl");
+        let out = dir.join("trace.json");
+        std::fs::write(
+            &stream,
+            concat!(
+                "{\"ev\":\"meta\",\"version\":3,\"scheme\":\"ec\",\"workers\":1,\"seed\":\"1\"}\n",
+                "{\"ev\":\"telemetry\",\"t\":0.1,\"center_steps\":10,\"spans_dropped\":0,",
+                "\"threads\":[[0,\"worker-0\"],[1,\"center\"]],",
+                "\"spans\":[[0,0,100.5,20.25],[1,2,150,3]]}\n",
+            ),
+        )
+        .unwrap();
+        let stats = write_trace(&stream, &out).unwrap();
+        assert_eq!(stats.telemetry_events, 1);
+        assert_eq!(stats.spans, 2);
+        assert_eq!(stats.threads, 2);
+        let v = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let evs = v.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 2 metadata + 2 complete events.
+        assert_eq!(evs.len(), 4);
+        let x: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        assert_eq!(x.len(), 2);
+        assert_eq!(x[0].get("name").and_then(Json::as_str), Some("stoch_grad"));
+        assert_eq!(x[0].get("ts").and_then(Json::as_f64), Some(100.5));
+        assert_eq!(x[1].get("name").and_then(Json::as_str), Some("exchange"));
+    }
+
+    #[test]
+    fn stream_without_telemetry_events_is_an_error() {
+        let dir = std::env::temp_dir().join("ecsgmcmc-chrome-test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let stream = dir.join("in.jsonl");
+        std::fs::write(
+            &stream,
+            "{\"ev\":\"meta\",\"version\":3,\"scheme\":\"ec\",\"workers\":1,\"seed\":\"1\"}\n",
+        )
+        .unwrap();
+        let err = write_trace(&stream, &dir.join("t.json")).unwrap_err();
+        assert!(format!("{err:#}").contains("telemetry"), "{err:#}");
+    }
+}

@@ -1,0 +1,180 @@
+//! The `telemetry` stream event (stream v3, DESIGN.md §11): the bridge
+//! between the in-process [`super::Aggregate`] and the JSONL stream.
+//!
+//! Schema (schema-additive on stream v2; all keys self-describing):
+//!
+//! ```json
+//! {"ev":"telemetry","t":1.25,"center_steps":400,"spans_dropped":0,
+//!  "spans_elided":0,
+//!  "stages":{"stoch_grad":{"count":N,"total_ns":S,"p50_ns":..,
+//!            "p95_ns":..,"p99_ns":..,"max_ns":..}, ...},
+//!  "queue_depth":{"count":..,"p50":..,"p95":..,"p99":..,"max":..},
+//!  "staleness":{"mean":..,"p50":..,"p95":..,"p99":..,"max":..},
+//!  "counters":{"name":n,...},"gauges":{"name":n,...},
+//!  "threads":[[tid,"worker-0"],...],
+//!  "spans":[[tid,stage_idx,start_us,dur_us],...]}
+//! ```
+//!
+//! `stages` histograms are cumulative over the run; `spans` is the raw
+//! window drained since the previous event (capped at
+//! [`super::RECENT_CAP`], overflow counted in `spans_elided`), in
+//! microseconds since the emitting process's telemetry epoch. The
+//! `staleness` quantiles are computed from the run's *existing*
+//! `Metrics::staleness_hist` — the event quotes it rather than keeping a
+//! second histogram.
+
+use super::hist::linear_hist_quantile;
+use super::{registry_snapshot, thread_labels, Aggregate, SpanEvent, Stage};
+use crate::util::json::Emitter;
+
+/// Everything one telemetry event needs, borrowed from the run.
+pub struct TelemetryFrame<'a> {
+    /// Wall-clock seconds since run start (the stream's `t` convention).
+    pub t: f64,
+    pub center_steps: u64,
+    pub agg: &'a Aggregate,
+    /// The run's linear staleness histogram (`Metrics::staleness_hist`).
+    pub staleness_hist: &'a [u64],
+    /// Raw spans for this event's window (from [`Aggregate::take_recent`]).
+    pub spans: &'a [SpanEvent],
+    /// Spans that missed the window (histograms still counted them).
+    pub spans_elided: u64,
+}
+
+impl TelemetryFrame<'_> {
+    /// Emit the event as one JSON object (no trailing newline).
+    pub fn emit(&self, e: &mut Emitter) {
+        e.begin_obj();
+        e.key("ev").str_val("telemetry");
+        e.key("t").num(self.t);
+        e.key("center_steps").num(self.center_steps as f64);
+        e.key("spans_dropped").num(self.agg.spans_dropped as f64);
+        e.key("spans_elided").num(self.spans_elided as f64);
+
+        e.key("stages").begin_obj();
+        for stage in Stage::ALL {
+            let h = &self.agg.stages[stage as usize];
+            if h.count() == 0 {
+                continue;
+            }
+            e.key(stage.name()).begin_obj();
+            e.key("count").num(h.count() as f64);
+            e.key("total_ns").num(h.sum() as f64);
+            e.key("p50_ns").num(h.quantile(0.50) as f64);
+            e.key("p95_ns").num(h.quantile(0.95) as f64);
+            e.key("p99_ns").num(h.quantile(0.99) as f64);
+            e.key("max_ns").num(h.max() as f64);
+            e.end_obj();
+        }
+        e.end_obj();
+
+        let qd = &self.agg.queue_depth;
+        e.key("queue_depth").begin_obj();
+        e.key("count").num(qd.count() as f64);
+        e.key("p50").num(qd.quantile(0.50) as f64);
+        e.key("p95").num(qd.quantile(0.95) as f64);
+        e.key("p99").num(qd.quantile(0.99) as f64);
+        e.key("max").num(qd.max() as f64);
+        e.end_obj();
+
+        let total: u64 = self.staleness_hist.iter().sum();
+        let weighted: u64 = self
+            .staleness_hist
+            .iter()
+            .enumerate()
+            .map(|(idx, &c)| idx as u64 * c)
+            .sum();
+        e.key("staleness").begin_obj();
+        e.key("count").num(total as f64);
+        e.key("mean").num(if total == 0 { 0.0 } else { weighted as f64 / total as f64 });
+        e.key("p50").num(linear_hist_quantile(self.staleness_hist, 0.50) as f64);
+        e.key("p95").num(linear_hist_quantile(self.staleness_hist, 0.95) as f64);
+        e.key("p99").num(linear_hist_quantile(self.staleness_hist, 0.99) as f64);
+        let max = self
+            .staleness_hist
+            .iter()
+            .rposition(|&c| c > 0)
+            .unwrap_or(0);
+        e.key("max").num(max as f64);
+        e.end_obj();
+
+        let (counters, gauges) = registry_snapshot();
+        e.key("counters").begin_obj();
+        for (name, v) in &counters {
+            e.key(name).num(*v as f64);
+        }
+        e.end_obj();
+        e.key("gauges").begin_obj();
+        for (name, v) in &gauges {
+            e.key(name).num(*v as f64);
+        }
+        e.end_obj();
+
+        e.key("threads").begin_arr();
+        for (tid, label) in thread_labels() {
+            e.begin_arr();
+            e.num(tid as f64);
+            e.str_val(&label);
+            e.end_arr();
+        }
+        e.end_arr();
+
+        e.key("spans").begin_arr();
+        for s in self.spans {
+            e.begin_arr();
+            e.num(s.tid as f64);
+            e.num(s.stage as f64);
+            e.num(s.t_start_ns as f64 / 1_000.0);
+            e.num(s.dur_ns as f64 / 1_000.0);
+            e.end_arr();
+        }
+        e.end_arr();
+
+        e.end_obj();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn frame_emits_parseable_self_describing_json() {
+        let mut agg = Aggregate::default();
+        agg.stages[Stage::StochGrad as usize].record(1_000);
+        agg.stages[Stage::StochGrad as usize].record(2_000);
+        agg.observe_queue_depth(3);
+        let mut staleness = vec![0u64; 65];
+        staleness[1] = 10;
+        staleness[4] = 2;
+        let spans =
+            [SpanEvent { tid: 1, stage: 0, t_start_ns: 5_000, dur_ns: 1_000, arg: 0 }];
+        let frame = TelemetryFrame {
+            t: 0.5,
+            center_steps: 40,
+            agg: &agg,
+            staleness_hist: &staleness,
+            spans: &spans,
+            spans_elided: 0,
+        };
+        let mut e = Emitter::new();
+        frame.emit(&mut e);
+        let v = Json::parse(e.as_str()).unwrap();
+        assert_eq!(v.get("ev").and_then(Json::as_str), Some("telemetry"));
+        assert_eq!(v.path(&["stages", "stoch_grad", "count"]).and_then(Json::as_f64), Some(2.0));
+        let p50 = v.path(&["stages", "stoch_grad", "p50_ns"]).and_then(Json::as_f64);
+        assert!(p50.unwrap() >= 1_000.0);
+        // Empty stages are elided (schema-additive, not padded).
+        assert!(v.path(&["stages", "gemm"]).is_none());
+        assert_eq!(v.path(&["staleness", "count"]).and_then(Json::as_f64), Some(12.0));
+        assert_eq!(v.path(&["staleness", "p50"]).and_then(Json::as_f64), Some(1.0));
+        assert_eq!(v.path(&["staleness", "max"]).and_then(Json::as_f64), Some(4.0));
+        assert_eq!(v.path(&["queue_depth", "max"]).and_then(Json::as_f64), Some(3.0));
+        let spans = v.get("spans").and_then(Json::as_arr).unwrap();
+        assert_eq!(spans.len(), 1);
+        let row = spans[0].as_arr().unwrap();
+        assert_eq!(row[0].as_f64(), Some(1.0));
+        assert_eq!(row[2].as_f64(), Some(5.0)); // 5000 ns = 5 µs
+    }
+}

@@ -1,0 +1,237 @@
+//! Log-scale histograms and the atomic counter/gauge primitives of the
+//! metrics registry.
+//!
+//! [`LogHist`] is an HdrHistogram-style octave histogram over `u64`
+//! values (nanoseconds, queue depths): each power-of-two octave is split
+//! into `1 << SUB_BITS` linear sub-buckets, so relative resolution is
+//! bounded by `1 / 2^SUB_BITS` (12.5% with the default 3 sub-bits)
+//! while the whole `u64` range fits in a few hundred buckets. Quantiles
+//! walk the bucket counts and report the bucket's upper bound, so a
+//! reported p99 is always ≥ the exact p99 and within one bucket width
+//! of it.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+/// Linear sub-buckets per octave (3 → 8 sub-buckets, ≤12.5% error).
+const SUB_BITS: u32 = 3;
+const SUB: u64 = 1 << SUB_BITS;
+/// Octaves above the linear range (values < SUB are exact).
+const OCTAVES: u32 = 64 - SUB_BITS;
+pub const BUCKETS: usize = (SUB + OCTAVES as u64 * SUB) as usize;
+
+/// Bucket index for a value: exact below `SUB`, then
+/// `(octave, sub-bucket)` pairs.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // >= SUB_BITS
+    let octave = msb - SUB_BITS + 1;
+    let sub = (v >> (msb - SUB_BITS)) & (SUB - 1);
+    (octave as u64 * SUB + sub) as usize
+}
+
+/// Inclusive upper bound of a bucket — what quantiles report.
+fn bucket_upper(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < SUB {
+        return idx;
+    }
+    let octave = (idx / SUB) as u32; // >= 1
+    let sub = idx % SUB;
+    let base = 1u64 << (octave - 1 + SUB_BITS);
+    let width = base >> SUB_BITS;
+    base + (sub + 1) * width - 1
+}
+
+/// Plain (single-thread) log-scale histogram: the drain-time fold.
+#[derive(Clone)]
+pub struct LogHist {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for LogHist {
+    fn default() -> Self {
+        LogHist { counts: vec![0; BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl LogHist {
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Value at quantile `q` in `[0, 1]`: the upper bound of the first
+    /// bucket whose cumulative count reaches `ceil(q · n)`. 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper(idx).min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// Monotone atomic counter (events, bytes, drops).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins atomic gauge (queue depth, live fleet size).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Quantiles over the run's *linear* staleness histogram
+/// (`Metrics::staleness_hist`, 65 clamped buckets): the telemetry event
+/// quotes the existing histogram instead of keeping a duplicate.
+pub fn linear_hist_quantile(counts: &[u64], q: f64) -> u64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+    let mut seen = 0u64;
+    for (idx, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            return idx as u64;
+        }
+    }
+    counts.len() as u64 - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LogHist::default();
+        for v in 0..SUB {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(1.0), SUB - 1);
+        assert_eq!(h.count(), SUB);
+    }
+
+    #[test]
+    fn bucket_bounds_cover_u64_monotonically() {
+        let mut prev = 0;
+        for idx in 1..BUCKETS {
+            let hi = bucket_upper(idx);
+            assert!(hi > prev, "bucket {idx}: {hi} <= {prev}");
+            prev = hi;
+        }
+        // Every value lands in a bucket whose upper bound is >= it and
+        // within the 12.5% relative-resolution contract.
+        for v in [1u64, 7, 8, 9, 100, 1_000, 123_456, u32::MAX as u64, u64::MAX / 3] {
+            let hi = bucket_upper(bucket_of(v));
+            assert!(hi >= v);
+            assert!((hi - v) as f64 <= v as f64 / SUB as f64 + 1.0, "v={v} hi={hi}");
+        }
+    }
+
+    #[test]
+    fn quantiles_match_exact_reference_within_resolution() {
+        // Uniform 1..=10_000: exact pXX is XX% of 10_000.
+        let mut h = LogHist::default();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        for (q, exact) in [(0.50, 5_000u64), (0.95, 9_500), (0.99, 9_900)] {
+            let got = h.quantile(q);
+            assert!(got >= exact, "q={q}: {got} < exact {exact}");
+            let rel = (got - exact) as f64 / exact as f64;
+            assert!(rel <= 1.0 / SUB as f64 + 1e-9, "q={q}: rel error {rel}");
+        }
+        assert_eq!(h.quantile(1.0), 10_000);
+        assert_eq!(h.max(), 10_000);
+        assert!((h.mean() - 5_000.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_hist_is_all_zeros() {
+        let h = LogHist::default();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::default();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.get(), 7);
+        let g = Gauge::default();
+        g.set(42);
+        g.set(-1);
+        assert_eq!(g.get(), -1);
+    }
+
+    #[test]
+    fn linear_quantile_walks_the_staleness_buckets() {
+        let mut counts = vec![0u64; 65];
+        counts[0] = 50;
+        counts[2] = 40;
+        counts[10] = 10;
+        assert_eq!(linear_hist_quantile(&counts, 0.5), 0);
+        assert_eq!(linear_hist_quantile(&counts, 0.9), 2);
+        assert_eq!(linear_hist_quantile(&counts, 0.99), 10);
+        assert_eq!(linear_hist_quantile(&[0u64; 65], 0.5), 0);
+    }
+}

@@ -1,0 +1,454 @@
+//! Telemetry subsystem (DESIGN.md §11): lock-free span tracing, a
+//! metrics registry, and the export surfaces behind `ecsgmcmc trace` /
+//! `ecsgmcmc top`.
+//!
+//! Recording is built around per-thread SPSC rings ([`ring::Ring`]):
+//! an instrumented stage opens a [`SpanGuard`] (`span(Stage::StochGrad)`)
+//! and the guard's drop pushes one fixed-size [`ring::SpanEvent`] into
+//! the calling thread's ring — no allocation, no lock, no syscall on the
+//! hot path. The coordinator periodically drains every ring into an
+//! [`Aggregate`] (per-stage log-scale histograms + a capped raw-span
+//! window) and emits one schema-additive `telemetry` stream event.
+//!
+//! **Overhead contract.** Telemetry is *disabled* by default and the
+//! disabled path of every instrumented site is exactly one relaxed
+//! atomic load and one predictable branch — no clock read, no ring
+//! write. That is what "compiled out of the step loop" means here: the
+//! check itself stays (a runtime toggle, like the kernel-dispatch mode),
+//! but nothing observable happens behind it, so bit-exactness contracts
+//! and the PR 5 kernel benchmarks are untouched. Enabled-mode overhead
+//! is gated <3% on step throughput (`bench/BENCH_telemetry.json`).
+//!
+//! Sampling dynamics never observe telemetry state: spans read the
+//! monotonic clock only, never the RNG streams, so an enabled run's
+//! samples are bit-identical to a disabled run's (asserted in
+//! `tests/test_telemetry.rs`).
+
+pub mod chrome;
+pub mod event;
+pub mod hist;
+pub mod ring;
+pub mod top;
+
+pub use hist::{Counter, Gauge, LogHist};
+pub use ring::{Ring, SpanEvent};
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Instrumented pipeline stages — compile-time-known names, one byte on
+/// the wire. Extend by appending (indices are stable in streams).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Stochastic-gradient evaluation (single or batched).
+    StochGrad = 0,
+    /// A dispatched GEMM kernel call (the Fig. 2 NN layer family).
+    Gemm = 1,
+    /// Worker↔center exchange round trip.
+    Exchange = 2,
+    /// Durable snapshot write (tmp + fsync + rename).
+    CheckpointWrite = 3,
+    /// JSONL stream flush.
+    SinkFlush = 4,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 5] = [
+        Stage::StochGrad,
+        Stage::Gemm,
+        Stage::Exchange,
+        Stage::CheckpointWrite,
+        Stage::SinkFlush,
+    ];
+    pub const COUNT: usize = Self::ALL.len();
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::StochGrad => "stoch_grad",
+            Stage::Gemm => "gemm",
+            Stage::Exchange => "exchange",
+            Stage::CheckpointWrite => "checkpoint_write",
+            Stage::SinkFlush => "sink_flush",
+        }
+    }
+
+    pub fn from_idx(idx: u8) -> Option<Stage> {
+        Stage::ALL.get(idx as usize).copied()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Process-global switches (the `math/simd.rs` MODE pattern: settable
+// mid-process so one bench process can measure off-then-on).
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EVERY: AtomicU64 = AtomicU64::new(50);
+static RING_CAP: AtomicUsize = AtomicUsize::new(4096);
+
+/// Is span recording on? The *entire* disabled-path cost of an
+/// instrumented site: one relaxed load + branch.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Center steps between periodic telemetry events.
+pub fn every() -> u64 {
+    EVERY.load(Ordering::Relaxed).max(1)
+}
+
+/// Per-thread ring capacity (rounded up to a power of two at ring
+/// creation); applies to threads instrumented *after* the call.
+pub fn ring_capacity() -> usize {
+    RING_CAP.load(Ordering::Relaxed)
+}
+
+/// One-shot configuration from config/CLI (`[telemetry]`,
+/// `--telemetry`/`--telemetry-every`).
+pub fn configure(enabled: bool, every: u64, ring_capacity: usize) {
+    EVERY.store(every.max(1), Ordering::Relaxed);
+    RING_CAP.store(ring_capacity.max(2), Ordering::Relaxed);
+    ENABLED.store(enabled, Ordering::Relaxed);
+}
+
+/// Process-start epoch for span timestamps: monotonic, shared by every
+/// thread so cross-thread spans are directly comparable.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process telemetry epoch.
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+// ---------------------------------------------------------------------
+// Per-thread recorders
+// ---------------------------------------------------------------------
+
+struct ThreadEntry {
+    tid: u16,
+    ring: Arc<Ring>,
+}
+
+/// All registered rings plus human labels. Locked only at thread
+/// registration, label updates and drains — never on the span path.
+struct Registry {
+    threads: Mutex<Vec<ThreadEntry>>,
+    labels: Mutex<BTreeMap<u16, String>>,
+}
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry {
+        threads: Mutex::new(Vec::new()),
+        labels: Mutex::new(BTreeMap::new()),
+    })
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<(u16, Arc<Ring>)>> = const { RefCell::new(None) };
+}
+
+/// This thread's (tid, ring), registering it on first use.
+fn local_ring() -> (u16, Arc<Ring>) {
+    LOCAL.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if let Some((tid, ring)) = slot.as_ref() {
+            return (*tid, ring.clone());
+        }
+        let reg = registry();
+        let mut threads = reg.threads.lock().unwrap();
+        let tid = threads.len().min(u16::MAX as usize) as u16;
+        let ring = Arc::new(Ring::new(ring_capacity()));
+        threads.push(ThreadEntry { tid, ring: ring.clone() });
+        drop(threads);
+        let name = std::thread::current().name().map(str::to_string);
+        let label = name.unwrap_or_else(|| format!("thread-{tid}"));
+        reg.labels.lock().unwrap().insert(tid, label);
+        *slot = Some((tid, ring.clone()));
+        (tid, ring)
+    })
+}
+
+/// Attach a human label ("worker-3", "center") to the calling thread for
+/// trace/`top` rendering. No-op while telemetry is disabled.
+pub fn set_thread_label(label: &str) {
+    if !enabled() {
+        return;
+    }
+    let (tid, _) = local_ring();
+    registry().labels.lock().unwrap().insert(tid, label.to_string());
+}
+
+/// Snapshot of `(tid, label)` pairs for every registered thread.
+pub fn thread_labels() -> Vec<(u16, String)> {
+    registry().labels.lock().unwrap().iter().map(|(t, l)| (*t, l.clone())).collect()
+}
+
+// ---------------------------------------------------------------------
+// Span guards
+// ---------------------------------------------------------------------
+
+/// RAII span: records `{thread, stage, t_start_ns, dur_ns, arg}` into
+/// the thread's ring when dropped. Inert (no clock read, no ring access)
+/// when telemetry is disabled at open time.
+pub struct SpanGuard {
+    start_ns: u64,
+    stage: Stage,
+    arg: u64,
+    active: bool,
+}
+
+/// Open a span over `stage`.
+#[inline]
+pub fn span(stage: Stage) -> SpanGuard {
+    span_arg(stage, 0)
+}
+
+/// Open a span carrying a stage-specific argument (batch size, bytes).
+#[inline]
+pub fn span_arg(stage: Stage, arg: u64) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { start_ns: 0, stage, arg: 0, active: false };
+    }
+    SpanGuard { start_ns: now_ns(), stage, arg, active: true }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end = now_ns();
+        let (tid, ring) = local_ring();
+        ring.push(SpanEvent {
+            tid,
+            stage: self.stage as u8,
+            t_start_ns: self.start_ns,
+            dur_ns: end.saturating_sub(self.start_ns),
+            arg: self.arg,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Metrics registry: named atomic counters/gauges
+// ---------------------------------------------------------------------
+
+struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+}
+
+fn metrics_registry() -> &'static MetricsRegistry {
+    static METRICS: OnceLock<MetricsRegistry> = OnceLock::new();
+    METRICS.get_or_init(|| MetricsRegistry {
+        counters: Mutex::new(BTreeMap::new()),
+        gauges: Mutex::new(BTreeMap::new()),
+    })
+}
+
+/// Get-or-create the named counter. Callers cache the `Arc` (the lookup
+/// locks); `Counter::add` itself is a relaxed atomic.
+pub fn counter(name: &str) -> Arc<Counter> {
+    let reg = metrics_registry();
+    let mut counters = reg.counters.lock().unwrap();
+    counters.entry(name.to_string()).or_default().clone()
+}
+
+/// Get-or-create the named gauge.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let reg = metrics_registry();
+    let mut gauges = reg.gauges.lock().unwrap();
+    gauges.entry(name.to_string()).or_default().clone()
+}
+
+/// Snapshot every registered counter and gauge for the telemetry event.
+pub fn registry_snapshot() -> (Vec<(String, u64)>, Vec<(String, i64)>) {
+    let reg = metrics_registry();
+    let counters =
+        reg.counters.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.get())).collect();
+    let gauges = reg.gauges.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.get())).collect();
+    (counters, gauges)
+}
+
+// ---------------------------------------------------------------------
+// Draining and aggregation
+// ---------------------------------------------------------------------
+
+/// Raw spans retained per drain window for the stream's compact span
+/// list (and thence the Chrome trace). Overflow is counted, not lost —
+/// histograms always see every span.
+pub const RECENT_CAP: usize = 2048;
+
+/// Fold target for drained spans: cumulative per-stage latency
+/// histograms, the queue-depth distribution, and a bounded window of
+/// raw spans for the next telemetry event.
+pub struct Aggregate {
+    /// One log-scale duration histogram per [`Stage`] (cumulative).
+    pub stages: Vec<LogHist>,
+    /// Center recv batch sizes / transport queue depths (cumulative).
+    pub queue_depth: LogHist,
+    /// Ring-full drops across all threads (cumulative snapshot).
+    pub spans_dropped: u64,
+    /// Raw spans since the last [`Aggregate::take_recent`], capped at
+    /// [`RECENT_CAP`].
+    pub recent: Vec<SpanEvent>,
+    /// Spans that missed the `recent` window this interval (histograms
+    /// still counted them).
+    pub recent_overflow: u64,
+}
+
+impl Default for Aggregate {
+    fn default() -> Self {
+        Aggregate {
+            stages: vec![LogHist::default(); Stage::COUNT],
+            queue_depth: LogHist::default(),
+            spans_dropped: 0,
+            recent: Vec::new(),
+            recent_overflow: 0,
+        }
+    }
+}
+
+impl Aggregate {
+    fn fold(&mut self, ev: SpanEvent) {
+        if let Some(h) = self.stages.get_mut(ev.stage as usize) {
+            h.record(ev.dur_ns);
+        }
+        if self.recent.len() < RECENT_CAP {
+            self.recent.push(ev);
+        } else {
+            self.recent_overflow += 1;
+        }
+    }
+
+    /// Record one observed transport queue depth (recv batch size).
+    pub fn observe_queue_depth(&mut self, depth: u64) {
+        self.queue_depth.record(depth);
+    }
+
+    /// Drain the raw-span window for one telemetry event.
+    pub fn take_recent(&mut self) -> (Vec<SpanEvent>, u64) {
+        let overflow = self.recent_overflow;
+        self.recent_overflow = 0;
+        (std::mem::take(&mut self.recent), overflow)
+    }
+
+    /// Total recorded spans across all stages.
+    pub fn total_spans(&self) -> u64 {
+        self.stages.iter().map(LogHist::count).sum()
+    }
+}
+
+/// Drain every registered ring into `agg`. Serialized by an internal
+/// lock: the SPSC rings tolerate exactly one consumer at a time (the
+/// center server during segments, the driver after it joins).
+pub fn drain_into(agg: &mut Aggregate) {
+    static DRAIN: Mutex<()> = Mutex::new(());
+    let _guard = DRAIN.lock().unwrap();
+    let rings: Vec<Arc<Ring>> =
+        registry().threads.lock().unwrap().iter().map(|e| e.ring.clone()).collect();
+    let mut dropped = 0;
+    for ring in &rings {
+        while let Some(ev) = ring.pop() {
+            agg.fold(ev);
+        }
+        dropped += ring.dropped();
+    }
+    agg.spans_dropped = dropped;
+}
+
+/// Drain and discard everything recorded so far — called at run start so
+/// a run's first telemetry event never carries a previous run's spans.
+pub fn discard_pending() {
+    let mut scratch = Aggregate::default();
+    drain_into(&mut scratch);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Global-state tests share the process-wide toggle; serialize them.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _l = LOCK.lock().unwrap();
+        set_enabled(false);
+        discard_pending();
+        {
+            let _s = span(Stage::StochGrad);
+        }
+        let mut agg = Aggregate::default();
+        drain_into(&mut agg);
+        assert_eq!(agg.total_spans(), 0);
+    }
+
+    #[test]
+    fn enabled_spans_fold_into_their_stage() {
+        let _l = LOCK.lock().unwrap();
+        set_enabled(true);
+        discard_pending();
+        {
+            let _s = span_arg(Stage::Exchange, 7);
+        }
+        {
+            let _s = span(Stage::StochGrad);
+        }
+        set_enabled(false);
+        let mut agg = Aggregate::default();
+        drain_into(&mut agg);
+        assert_eq!(agg.stages[Stage::Exchange as usize].count(), 1);
+        assert_eq!(agg.stages[Stage::StochGrad as usize].count(), 1);
+        let (recent, overflow) = agg.take_recent();
+        assert_eq!(overflow, 0);
+        assert!(recent.iter().any(|e| e.stage == Stage::Exchange as u8 && e.arg == 7));
+    }
+
+    #[test]
+    fn stage_names_round_trip_indices() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(*s as usize, i);
+            assert_eq!(Stage::from_idx(i as u8), Some(*s));
+        }
+        assert_eq!(Stage::from_idx(200), None);
+    }
+
+    #[test]
+    fn counters_and_gauges_are_shared_by_name() {
+        let a = counter("test.uploads");
+        let b = counter("test.uploads");
+        a.add(2);
+        b.add(3);
+        assert_eq!(counter("test.uploads").get(), 5);
+        gauge("test.depth").set(9);
+        let (cs, gs) = registry_snapshot();
+        assert!(cs.iter().any(|(k, v)| k == "test.uploads" && *v == 5));
+        assert!(gs.iter().any(|(k, v)| k == "test.depth" && *v == 9));
+    }
+
+    #[test]
+    fn configure_round_trips() {
+        let _l = LOCK.lock().unwrap();
+        configure(false, 25, 100);
+        assert!(!enabled());
+        assert_eq!(every(), 25);
+        assert_eq!(ring_capacity(), 100);
+        configure(false, 0, 0);
+        assert_eq!(every(), 1); // degenerate values clamp
+        assert_eq!(ring_capacity(), 2);
+        configure(false, 50, 4096);
+    }
+}

@@ -1,0 +1,177 @@
+//! Fixed-capacity single-producer/single-consumer span ring.
+//!
+//! One ring per instrumented thread (the producer); the coordinator
+//! drains them all (the consumer). The hot path — [`Ring::push`] — does
+//! no allocation and takes no lock: one relaxed head load, one acquire
+//! tail load, one slot write, one release head store. When the ring is
+//! full the *newest* span is dropped and counted ([`Ring::dropped`]),
+//! never silently lost: the drain folds the counter into the telemetry
+//! event so a saturated ring is visible in the stream.
+//!
+//! Reader hand-off: during a run the center server drains; after the
+//! server thread joins, the driver takes over for the final drain. The
+//! thread join orders those two readers, so the tail needs no stronger
+//! ordering than release/acquire.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One recorded span: `{thread, span, t_start_ns, dur_ns, args}` packed
+/// into five words. `stage` indexes [`super::Stage`]; `arg` is a
+/// stage-specific payload (batch size for gradient spans, bytes for
+/// checkpoint writes, 0 otherwise).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SpanEvent {
+    pub tid: u16,
+    pub stage: u8,
+    pub t_start_ns: u64,
+    pub dur_ns: u64,
+    pub arg: u64,
+}
+
+/// SPSC ring of [`SpanEvent`]s. Capacity is rounded up to a power of two
+/// so the index mask is one AND.
+pub struct Ring {
+    mask: u64,
+    /// Next write position; owned by the producer, release-published.
+    head: AtomicU64,
+    /// Next read position; owned by the (current) consumer.
+    tail: AtomicU64,
+    /// Spans rejected because the ring was full.
+    dropped: AtomicU64,
+    slots: Box<[UnsafeCell<SpanEvent>]>,
+}
+
+// Slots are plain-old-data guarded by the head/tail protocol: the
+// producer only writes slots in `[tail+cap, head]`-free space it
+// published last, the consumer only reads slots below the acquired head.
+unsafe impl Sync for Ring {}
+unsafe impl Send for Ring {}
+
+impl Ring {
+    pub fn new(capacity: usize) -> Ring {
+        let cap = capacity.max(2).next_power_of_two() as u64;
+        let slots = (0..cap).map(|_| UnsafeCell::new(SpanEvent::default())).collect();
+        Ring {
+            mask: cap - 1,
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            slots,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Producer side: record one span, or count it dropped if the
+    /// consumer has fallen a full ring behind.
+    #[inline]
+    pub fn push(&self, ev: SpanEvent) -> bool {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head - tail >= self.slots.len() as u64 {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        unsafe { *self.slots[(head & self.mask) as usize].get() = ev };
+        self.head.store(head + 1, Ordering::Release);
+        true
+    }
+
+    /// Consumer side: take the oldest recorded span, if any.
+    pub fn pop(&self) -> Option<SpanEvent> {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail == head {
+            return None;
+        }
+        let ev = unsafe { *self.slots[(tail & self.mask) as usize].get() };
+        self.tail.store(tail + 1, Ordering::Release);
+        Some(ev)
+    }
+
+    /// Spans rejected so far because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(stage: u8, start: u64) -> SpanEvent {
+        SpanEvent { tid: 1, stage, t_start_ns: start, dur_ns: 10, arg: 0 }
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        assert_eq!(Ring::new(1).capacity(), 2);
+        assert_eq!(Ring::new(5).capacity(), 8);
+        assert_eq!(Ring::new(64).capacity(), 64);
+    }
+
+    #[test]
+    fn fifo_round_trip() {
+        let r = Ring::new(4);
+        for i in 0..3 {
+            assert!(r.push(ev(0, i)));
+        }
+        for i in 0..3 {
+            assert_eq!(r.pop().unwrap().t_start_ns, i);
+        }
+        assert!(r.pop().is_none());
+    }
+
+    #[test]
+    fn wraparound_drops_are_counted_never_silent() {
+        let r = Ring::new(8); // capacity 8
+        for i in 0..20 {
+            r.push(ev(0, i));
+        }
+        // The first 8 spans survive (drop-newest), the other 12 are
+        // counted — total offered always equals kept + dropped.
+        let mut kept = Vec::new();
+        while let Some(e) = r.pop() {
+            kept.push(e.t_start_ns);
+        }
+        assert_eq!(kept, (0..8).collect::<Vec<u64>>());
+        assert_eq!(r.dropped(), 12);
+        assert_eq!(kept.len() as u64 + r.dropped(), 20);
+    }
+
+    #[test]
+    fn drain_reopens_space() {
+        let r = Ring::new(2);
+        assert!(r.push(ev(0, 0)));
+        assert!(r.push(ev(0, 1)));
+        assert!(!r.push(ev(0, 2)));
+        assert_eq!(r.pop().unwrap().t_start_ns, 0);
+        assert!(r.push(ev(0, 3)));
+        assert_eq!(r.pop().unwrap().t_start_ns, 1);
+        assert_eq!(r.pop().unwrap().t_start_ns, 3);
+        assert_eq!(r.dropped(), 1);
+    }
+
+    #[test]
+    fn cross_thread_hand_off() {
+        use std::sync::Arc;
+        let r = Arc::new(Ring::new(1024));
+        let w = r.clone();
+        std::thread::spawn(move || {
+            for i in 0..100 {
+                w.push(ev(2, i));
+            }
+        })
+        .join()
+        .unwrap();
+        let mut n = 0;
+        while let Some(e) = r.pop() {
+            assert_eq!(e.t_start_ns, n);
+            n += 1;
+        }
+        assert_eq!(n, 100);
+    }
+}

@@ -1,0 +1,275 @@
+//! `ecsgmcmc top --file <stream>`: live run introspection from a JSONL
+//! stream.
+//!
+//! Tails the stream with bounded memory (`StreamReader` over appended
+//! bytes only), folding events into a [`TopState`]: per-worker step
+//! rates from `u` events, the stage time breakdown / staleness /
+//! queue-depth quantiles from the newest `telemetry` event (whose
+//! histograms are cumulative), and R̂/ESS by pushing every `sample`
+//! event through the same `OnlineDiag` accumulator live runs use.
+
+use crate::sink::diag::OnlineDiag;
+use crate::sink::replay::RunEvent;
+use crate::util::json::{Json, StreamReader};
+use crate::util::timer::human_duration;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+
+#[derive(Default)]
+struct ChainStat {
+    steps: usize,
+    last_t: f64,
+    samples: u64,
+}
+
+/// Bounded-memory fold of a run stream for the `top` display.
+#[derive(Default)]
+pub struct TopState {
+    scheme: String,
+    workers: usize,
+    chains: BTreeMap<usize, ChainStat>,
+    diag: OnlineDiag,
+    last_telemetry: Option<Json>,
+    /// Set once the stream's end-of-run metrics event arrives.
+    pub finished: bool,
+    events: u64,
+}
+
+impl TopState {
+    pub fn fold(&mut self, ev: &RunEvent, raw: &Json) {
+        self.events += 1;
+        match ev {
+            RunEvent::Meta { scheme, workers, .. } => {
+                self.scheme = scheme.clone();
+                self.workers = *workers;
+            }
+            RunEvent::U { chain, step, t, .. } => {
+                let c = self.chains.entry(*chain).or_default();
+                c.steps = c.steps.max(*step + 1);
+                c.last_t = c.last_t.max(*t);
+            }
+            RunEvent::Sample { chain, theta, t } => {
+                let c = self.chains.entry(*chain).or_default();
+                c.samples += 1;
+                c.last_t = c.last_t.max(*t);
+                self.diag.push(*chain, theta);
+            }
+            RunEvent::Telemetry { .. } => self.last_telemetry = Some(raw.clone()),
+            RunEvent::Metrics { .. } => self.finished = true,
+            _ => {}
+        }
+    }
+
+    /// Render the current state as the `top` screen.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let push = |out: &mut String, s: String| {
+            out.push_str(&s);
+            out.push('\n');
+        };
+        push(
+            &mut out,
+            format!(
+                "ecsgmcmc top — scheme {}, {} workers, {} events{}",
+                if self.scheme.is_empty() { "?" } else { &self.scheme },
+                self.workers,
+                self.events,
+                if self.finished { " (run finished)" } else { "" }
+            ),
+        );
+
+        push(&mut out, format!("{:<7} {:>9} {:>10} {:>9}", "chain", "steps", "steps/s", "samples"));
+        for (id, c) in &self.chains {
+            let rate = if c.last_t > 0.0 { c.steps as f64 / c.last_t } else { 0.0 };
+            push(&mut out, format!("{id:<7} {:>9} {rate:>10.1} {:>9}", c.steps, c.samples));
+        }
+
+        if let Some(t) = &self.last_telemetry {
+            if let Some(stages) = t.get("stages").and_then(Json::as_obj) {
+                push(
+                    &mut out,
+                    format!(
+                        "{:<17} {:>9} {:>9} {:>9} {:>9} {:>10}",
+                        "stage", "count", "p50", "p95", "p99", "total"
+                    ),
+                );
+                for (name, s) in stages {
+                    let num = |k| s.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                    push(
+                        &mut out,
+                        format!(
+                            "{name:<17} {:>9} {:>9} {:>9} {:>9} {:>10}",
+                            num("count") as u64,
+                            human_duration(num("p50_ns") / 1e9),
+                            human_duration(num("p95_ns") / 1e9),
+                            human_duration(num("p99_ns") / 1e9),
+                            human_duration(num("total_ns") / 1e9),
+                        ),
+                    );
+                }
+            }
+            if let Some(st) = t.get("staleness") {
+                let num = |k| st.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                push(
+                    &mut out,
+                    format!(
+                        "staleness: mean {:.2}  p50 {}  p95 {}  p99 {}  max {}",
+                        num("mean"),
+                        num("p50") as u64,
+                        num("p95") as u64,
+                        num("p99") as u64,
+                        num("max") as u64
+                    ),
+                );
+            }
+            if let Some(qd) = t.get("queue_depth") {
+                let num = |k| qd.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                push(
+                    &mut out,
+                    format!(
+                        "queue depth: p50 {}  p95 {}  p99 {}  max {}",
+                        num("p50") as u64,
+                        num("p95") as u64,
+                        num("p99") as u64,
+                        num("max") as u64
+                    ),
+                );
+            }
+            let dropped = t.get("spans_dropped").and_then(Json::as_f64).unwrap_or(0.0);
+            if dropped > 0.0 {
+                push(&mut out, format!("spans dropped (ring full): {}", dropped as u64));
+            }
+        } else {
+            push(&mut out, "no telemetry events yet (run started with --telemetry?)".into());
+        }
+
+        let d = self.diag.summary();
+        if d.n > 0 {
+            push(
+                &mut out,
+                format!(
+                    "diag: n={} chains={} max R-hat={:.4} min ESS={:.1}",
+                    d.n, d.chains, d.max_rhat, d.min_ess
+                ),
+            );
+        }
+        out
+    }
+}
+
+/// Incremental tail over a stream file: remembers the byte offset and
+/// line-framing state across polls, so each call folds only appended
+/// bytes.
+pub struct StreamTail {
+    offset: u64,
+    reader: StreamReader,
+}
+
+impl Default for StreamTail {
+    fn default() -> Self {
+        StreamTail { offset: 0, reader: StreamReader::new() }
+    }
+}
+
+impl StreamTail {
+    /// Read everything appended since the last poll into `state`.
+    /// Returns the number of events folded.
+    pub fn poll(&mut self, path: &Path, state: &mut TopState) -> Result<usize> {
+        let mut file = File::open(path).with_context(|| format!("opening stream {path:?}"))?;
+        file.seek(SeekFrom::Start(self.offset)).context("seeking stream")?;
+        let mut chunk = [0u8; 64 * 1024];
+        let mut folded = 0;
+        loop {
+            let n = file.read(&mut chunk).context("reading stream")?;
+            if n == 0 {
+                break;
+            }
+            self.offset += n as u64;
+            self.reader.feed(&chunk[..n]);
+            while let Some(value) = self.reader.next_value() {
+                let raw = value?;
+                let ev = RunEvent::from_json(&raw)?;
+                state.fold(&ev, &raw);
+                folded += 1;
+            }
+        }
+        Ok(folded)
+    }
+}
+
+/// One-shot `top`: fold the whole stream as it stands and return the
+/// rendered screen (the CLI's non-follow mode; also what tests drive).
+pub fn top_once(path: &Path) -> Result<String> {
+    let mut state = TopState::default();
+    let mut tail = StreamTail::default();
+    tail.poll(path, &mut state)?;
+    Ok(state.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_stream(name: &str, body: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ecsgmcmc-top-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, body).unwrap();
+        p
+    }
+
+    const STREAM: &str = concat!(
+        "{\"ev\":\"meta\",\"version\":3,\"scheme\":\"ec_sghmc\",\"workers\":2,\"seed\":\"9\"}\n",
+        "{\"ev\":\"u\",\"chain\":0,\"step\":99,\"t\":0.5,\"u\":2.5}\n",
+        "{\"ev\":\"sample\",\"chain\":0,\"t\":0.6,\"theta\":[1.5,-0.25]}\n",
+        "{\"ev\":\"sample\",\"chain\":1,\"t\":0.55,\"theta\":[0.5,0.75]}\n",
+        "{\"ev\":\"telemetry\",\"t\":0.7,\"center_steps\":50,\"spans_dropped\":0,",
+        "\"stages\":{\"exchange\":{\"count\":25,\"total_ns\":50000,\"p50_ns\":1500,",
+        "\"p95_ns\":4000,\"p99_ns\":9000,\"max_ns\":9500}},",
+        "\"staleness\":{\"count\":25,\"mean\":0.4,\"p50\":0,\"p95\":2,\"p99\":3,\"max\":3},",
+        "\"queue_depth\":{\"count\":25,\"p50\":1,\"p95\":2,\"p99\":2,\"max\":2}}\n",
+    );
+
+    #[test]
+    fn top_renders_rates_stages_and_staleness() {
+        let p = write_stream("a.jsonl", STREAM);
+        let screen = top_once(&p).unwrap();
+        assert!(screen.contains("scheme ec_sghmc"), "{screen}");
+        assert!(screen.contains("exchange"), "{screen}");
+        assert!(screen.contains("staleness: mean 0.40  p50 0  p95 2  p99 3  max 3"), "{screen}");
+        assert!(screen.contains("queue depth: p50 1"), "{screen}");
+        // chain 0 rate: 100 steps / 0.6s ≈ 166.7
+        assert!(screen.contains("166.7"), "{screen}");
+        assert!(screen.contains("diag: n=2 chains=2"), "{screen}");
+    }
+
+    #[test]
+    fn tail_folds_only_appended_bytes() {
+        let meta =
+            "{\"ev\":\"meta\",\"version\":3,\"scheme\":\"ec\",\"workers\":1,\"seed\":\"1\"}\n";
+        let p = write_stream("b.jsonl", meta);
+        let mut state = TopState::default();
+        let mut tail = StreamTail::default();
+        assert_eq!(tail.poll(&p, &mut state).unwrap(), 1);
+        assert_eq!(tail.poll(&p, &mut state).unwrap(), 0);
+        let mut f = std::fs::OpenOptions::new().append(true).open(&p).unwrap();
+        use std::io::Write;
+        writeln!(f, "{{\"ev\":\"u\",\"chain\":0,\"step\":9,\"t\":0.1,\"u\":1.0}}").unwrap();
+        drop(f);
+        assert_eq!(tail.poll(&p, &mut state).unwrap(), 1);
+        assert!(state.render().contains("10"), "{}", state.render());
+    }
+
+    #[test]
+    fn stream_without_telemetry_says_so() {
+        let p = write_stream(
+            "c.jsonl",
+            "{\"ev\":\"meta\",\"version\":3,\"scheme\":\"ec\",\"workers\":1,\"seed\":\"1\"}\n",
+        );
+        let screen = top_once(&p).unwrap();
+        assert!(screen.contains("no telemetry events yet"), "{screen}");
+    }
+}

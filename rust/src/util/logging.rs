@@ -45,16 +45,7 @@ impl Level {
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
 static START: OnceLock<Instant> = OnceLock::new();
 
-fn current_level() -> Level {
-    let raw = LEVEL.load(Ordering::Relaxed);
-    if raw == u8::MAX {
-        let lvl = std::env::var("ECSGMCMC_LOG")
-            .ok()
-            .and_then(|s| Level::from_str(&s))
-            .unwrap_or(Level::Info);
-        LEVEL.store(lvl as u8, Ordering::Relaxed);
-        return lvl;
-    }
+fn decode(raw: u8) -> Level {
     match raw {
         0 => Level::Error,
         1 => Level::Warn,
@@ -62,6 +53,40 @@ fn current_level() -> Level {
         3 => Level::Debug,
         _ => Level::Trace,
     }
+}
+
+fn current_level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let (lvl, bad) = match std::env::var("ECSGMCMC_LOG") {
+            Ok(s) => match Level::from_str(&s) {
+                Some(l) => (l, None),
+                None => (Level::Info, Some(s)),
+            },
+            Err(_) => (Level::Info, None),
+        };
+        // Only the thread that wins initialization warns, so a bad
+        // ECSGMCMC_LOG produces exactly one line, not one per thread.
+        if LEVEL
+            .compare_exchange(u8::MAX, lvl as u8, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            if let Some(s) = bad {
+                // Safe to log here: LEVEL is committed, so this re-enters
+                // current_level() on the fast path.
+                log(
+                    Level::Warn,
+                    format_args!(
+                        "ECSGMCMC_LOG={s:?} is not a log level \
+                         (error|warn|info|debug|trace); defaulting to info"
+                    ),
+                );
+            }
+            return lvl;
+        }
+        return decode(LEVEL.load(Ordering::Relaxed));
+    }
+    decode(raw)
 }
 
 /// Override the log level programmatically (CLI `--log-level`).

@@ -28,7 +28,7 @@ impl Stopwatch {
     }
 }
 
-/// Format a duration like `1.23ms`, `4.5s`, `2m03s`.
+/// Format a duration like `1.23ms`, `4.5s`, `2m03s`, `3h25m07s`.
 pub fn human_duration(d: Duration) -> String {
     let s = d.as_secs_f64();
     if s < 1e-3 {
@@ -37,9 +37,14 @@ pub fn human_duration(d: Duration) -> String {
         format!("{:.2}ms", s * 1e3)
     } else if s < 120.0 {
         format!("{s:.2}s")
-    } else {
+    } else if s < 7200.0 {
         let mins = (s / 60.0).floor() as u64;
         format!("{mins}m{:02.0}s", s - 60.0 * mins as f64)
+    } else {
+        // Long-running fleets: past 120 minutes, whole seconds suffice.
+        let total = s.floor() as u64;
+        let (h, m, sec) = (total / 3600, (total % 3600) / 60, total % 60);
+        format!("{h}h{m:02}m{sec:02}s")
     }
 }
 
@@ -53,6 +58,16 @@ mod tests {
         assert_eq!(human_duration(Duration::from_millis(42)), "42.00ms");
         assert_eq!(human_duration(Duration::from_secs(3)), "3.00s");
         assert_eq!(human_duration(Duration::from_secs(185)), "3m05s");
+    }
+
+    #[test]
+    fn hours_branch_boundaries() {
+        // The minutes form covers up to (not including) 120 minutes.
+        assert_eq!(human_duration(Duration::from_secs(7199)), "119m59s");
+        assert_eq!(human_duration(Duration::from_secs(7200)), "2h00m00s");
+        assert_eq!(human_duration(Duration::from_secs(7265)), "2h01m05s");
+        assert_eq!(human_duration(Duration::from_secs(36000)), "10h00m00s");
+        assert_eq!(human_duration(Duration::from_secs(90061)), "25h01m01s");
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Telemetry end-to-end: enabling span tracing must not perturb the
+//! sampled trajectories (the disabled/enabled paths never touch sampler
+//! state), streamed telemetry frames must stay schema-additive for
+//! replay, and the export surfaces (Chrome trace, `top`) must reflect
+//! the run.
+
+use ecsgmcmc::coordinator::{EcConfig, EcCoordinator, RunOptions, RunResult};
+use ecsgmcmc::potentials::gaussian::GaussianPotential;
+use ecsgmcmc::samplers::SghmcParams;
+use ecsgmcmc::sink::{replay, SinkSpec};
+use ecsgmcmc::telemetry;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// The telemetry switches are process-global; every test that flips
+/// them runs under this lock and restores "off" on exit.
+static LOCK: Mutex<()> = Mutex::new(());
+
+struct TelemetryOff;
+impl Drop for TelemetryOff {
+    fn drop(&mut self) {
+        telemetry::set_enabled(false);
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ecsgmcmc-telemetry-{name}-{}.jsonl", std::process::id()))
+}
+
+fn ec_run(sink: SinkSpec, steps: usize, seed: u64) -> RunResult {
+    let cfg = EcConfig {
+        workers: 4,
+        alpha: 1.0,
+        sync_every: 2,
+        steps,
+        opts: RunOptions {
+            thin: 2,
+            burn_in: 50,
+            log_every: 100,
+            sink,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    EcCoordinator::new(
+        cfg,
+        SghmcParams { eps: 0.05, ..Default::default() },
+        Arc::new(GaussianPotential::fig1()),
+    )
+    .run(seed)
+}
+
+fn assert_same_trajectories(a: &RunResult, b: &RunResult) {
+    assert_eq!(a.chains.len(), b.chains.len());
+    for (ca, cb) in a.chains.iter().zip(&b.chains) {
+        assert_eq!(ca.worker, cb.worker);
+        assert_eq!(ca.samples, cb.samples, "chain {} samples", ca.worker);
+        assert_eq!(ca.u_trace.len(), cb.u_trace.len(), "chain {} u trace", ca.worker);
+        for (ua, ub) in ca.u_trace.iter().zip(&cb.u_trace) {
+            assert_eq!(ua.step, ub.step);
+            assert_eq!(ua.u, ub.u);
+        }
+    }
+    assert_eq!(a.center_trace, b.center_trace);
+    assert_eq!(a.metrics.exchanges, b.metrics.exchanges);
+    assert_eq!(a.metrics.total_steps, b.metrics.total_steps);
+}
+
+#[test]
+fn fig1_run_is_bit_identical_with_telemetry_on() {
+    let _guard = LOCK.lock().unwrap();
+    let _restore = TelemetryOff;
+    telemetry::set_enabled(false);
+    let off = ec_run(SinkSpec::Memory, 600, 7);
+    assert!(off.metrics.stage_totals.is_empty(), "no totals when disabled");
+
+    telemetry::configure(true, 5, 1024);
+    let on = ec_run(SinkSpec::Memory, 600, 7);
+    telemetry::set_enabled(false);
+
+    assert_same_trajectories(&off, &on);
+    // The enabled run folded real span totals into its run summary.
+    let grad = on
+        .metrics
+        .stage_totals
+        .iter()
+        .find(|(s, _, _)| s == "stoch_grad")
+        .expect("stoch_grad stage total");
+    assert!(grad.1 > 0 && grad.2 > 0, "count/ns populated: {grad:?}");
+    assert!(on.metrics.stage_totals.iter().any(|(s, _, _)| s == "exchange"));
+}
+
+#[test]
+fn stream_with_telemetry_frames_replays_identically_and_additively() {
+    let _guard = LOCK.lock().unwrap();
+    let _restore = TelemetryOff;
+    telemetry::set_enabled(false);
+    let path_off = tmp("off");
+    let path_on = tmp("on");
+
+    ec_run(SinkSpec::Jsonl { path: path_off.clone() }, 400, 11);
+    telemetry::configure(true, 3, 1024);
+    ec_run(SinkSpec::Jsonl { path: path_on.clone() }, 400, 11);
+    telemetry::set_enabled(false);
+
+    // Replay must ignore the telemetry annotations: both streams
+    // reconstruct the same run.
+    let off = replay::replay_file(&path_off).unwrap();
+    let on = replay::replay_file(&path_on).unwrap();
+    assert_same_trajectories(&off, &on);
+
+    // The enabled stream actually carries frames, with per-stage
+    // quantiles and thread labels, and its metrics event round-trips
+    // the stage totals (stream v3, schema-additive).
+    let mut frames = 0usize;
+    let mut saw_worker_label = false;
+    let file = std::fs::File::open(&path_on).unwrap();
+    replay::scan_stream(file, |ev| {
+        if let replay::RunEvent::Telemetry { json, .. } = ev {
+            frames += 1;
+            let stages = json.get("stages").expect("stages object");
+            if let Some(grad) = stages.get("stoch_grad") {
+                assert!(grad.get("p50_ns").is_some(), "quantiles present");
+            }
+            let threads = format!("{json:?}");
+            saw_worker_label |= threads.contains("ec-worker");
+        }
+        Ok(())
+    })
+    .unwrap();
+    assert!(frames > 0, "enabled stream carries telemetry frames");
+    assert!(saw_worker_label, "thread labels name the EC workers");
+    assert!(!on.metrics.stage_totals.is_empty(), "metrics event carries stage totals");
+    assert!(off.metrics.stage_totals.is_empty());
+
+    std::fs::remove_file(&path_off).ok();
+    std::fs::remove_file(&path_on).ok();
+}
+
+#[test]
+fn trace_export_and_top_render_from_a_real_stream() {
+    let _guard = LOCK.lock().unwrap();
+    let _restore = TelemetryOff;
+    let stream = tmp("export");
+    let trace = std::env::temp_dir()
+        .join(format!("ecsgmcmc-telemetry-trace-{}.json", std::process::id()));
+
+    telemetry::configure(true, 2, 2048);
+    ec_run(SinkSpec::Jsonl { path: stream.clone() }, 400, 13);
+    telemetry::set_enabled(false);
+
+    let stats = telemetry::chrome::write_trace(&stream, &trace).unwrap();
+    assert!(stats.telemetry_events > 0);
+    assert!(stats.spans > 0, "trace carries span slices");
+    assert!(stats.threads > 0, "trace names at least one thread");
+    let text = std::fs::read_to_string(&trace).unwrap();
+    assert!(text.contains("\"traceEvents\""), "Chrome trace envelope");
+    assert!(text.contains("stoch_grad"));
+
+    let rendered = telemetry::top::top_once(&stream).unwrap();
+    assert!(rendered.contains("stoch_grad"), "top lists the gradient stage:\n{rendered}");
+    assert!(rendered.contains("p95"), "top shows quantile columns:\n{rendered}");
+
+    std::fs::remove_file(&stream).ok();
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
+fn spans_nest_within_and_across_threads() {
+    let _guard = LOCK.lock().unwrap();
+    let _restore = TelemetryOff;
+    telemetry::configure(true, 1, 256);
+    telemetry::discard_pending();
+
+    // Worker thread: an Exchange span enclosing a Gemm span.
+    std::thread::Builder::new()
+        .name("tel-worker".into())
+        .spawn(|| {
+            let _outer = telemetry::span(telemetry::Stage::Exchange);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            let _inner = telemetry::span(telemetry::Stage::Gemm);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        })
+        .unwrap()
+        .join()
+        .unwrap();
+    // Coordinator (this) thread: an unrelated span.
+    {
+        let _s = telemetry::span(telemetry::Stage::SinkFlush);
+    }
+    telemetry::set_enabled(false);
+
+    let mut agg = telemetry::Aggregate::default();
+    telemetry::drain_into(&mut agg);
+    let (spans, _) = agg.take_recent();
+    let find = |stage: telemetry::Stage| {
+        spans
+            .iter()
+            .find(|s| s.stage == stage as u8)
+            .unwrap_or_else(|| panic!("missing {stage:?} span"))
+    };
+    let outer = find(telemetry::Stage::Exchange);
+    let inner = find(telemetry::Stage::Gemm);
+    let flush = find(telemetry::Stage::SinkFlush);
+
+    assert_eq!(outer.tid, inner.tid, "nested spans share a thread");
+    assert_ne!(outer.tid, flush.tid, "other thread gets its own id");
+    assert!(inner.t_start_ns >= outer.t_start_ns, "inner starts inside outer");
+    assert!(
+        inner.t_start_ns + inner.dur_ns <= outer.t_start_ns + outer.dur_ns,
+        "inner ends before outer"
+    );
+    assert!(outer.dur_ns >= 3_000_000, "outer covers both sleeps");
+
+    let labels = telemetry::thread_labels();
+    assert!(
+        labels.iter().any(|(tid, name)| *tid == outer.tid && name == "tel-worker"),
+        "thread label registered: {labels:?}"
+    );
+}
+
+#[test]
+fn disabled_runtime_records_nothing() {
+    let _guard = LOCK.lock().unwrap();
+    let _restore = TelemetryOff;
+    telemetry::set_enabled(false);
+    telemetry::discard_pending();
+    {
+        let _s = telemetry::span(telemetry::Stage::StochGrad);
+        let _t = telemetry::span_arg(telemetry::Stage::Gemm, 123);
+    }
+    let mut agg = telemetry::Aggregate::default();
+    telemetry::drain_into(&mut agg);
+    assert_eq!(agg.total_spans(), 0, "disabled spans are inert");
+}
