@@ -74,11 +74,43 @@ impl CheckpointPolicy {
 pub struct CheckpointStore {
     dir: PathBuf,
     keep: usize,
+    /// Orphaned `.tmp-*` files removed when the store was opened.
+    orphans_swept: u64,
 }
 
+/// Bounded retry for transient save failures (flaky disk, ENOSPC that a
+/// concurrent prune may clear): 4 attempts, 10 ms exponential backoff.
+pub const SAVE_ATTEMPTS: u64 = 4;
+
 impl CheckpointStore {
+    /// Open a store. Orphaned `.tmp-*` files — torn writes left behind
+    /// by a killed process — are removed and counted here, so retention
+    /// never strands them (they match no `ckpt-*.jsonl` and would
+    /// otherwise accumulate forever).
     pub fn new(dir: impl Into<PathBuf>, keep: usize) -> CheckpointStore {
-        CheckpointStore { dir: dir.into(), keep: keep.max(1) }
+        let dir = dir.into();
+        let mut orphans_swept = 0u64;
+        if let Ok(entries) = std::fs::read_dir(&dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let Some(name) = name.to_str() else { continue };
+                if name.starts_with(".tmp-ckpt-") && std::fs::remove_file(entry.path()).is_ok() {
+                    orphans_swept += 1;
+                }
+            }
+        }
+        if orphans_swept > 0 {
+            crate::log_warn!(
+                "checkpoint store {dir:?}: swept {orphans_swept} orphaned tmp file(s) \
+                 left by a previous crash"
+            );
+        }
+        CheckpointStore { dir, keep: keep.max(1), orphans_swept }
+    }
+
+    /// Torn tmp files cleaned up when this store was opened.
+    pub fn orphans_swept(&self) -> u64 {
+        self.orphans_swept
     }
 
     pub fn dir(&self) -> &Path {
@@ -95,26 +127,77 @@ impl CheckpointStore {
     }
 
     /// Persist a snapshot atomically and prune old ones. Returns the
-    /// final path.
+    /// final path. Transient failures are retried (see
+    /// [`save_with_retries`](Self::save_with_retries)).
     pub fn save(&self, snap: &Snapshot) -> Result<PathBuf> {
+        self.save_with_retries(snap).map(|(path, _)| path)
+    }
+
+    /// Persist a snapshot with bounded retry: up to [`SAVE_ATTEMPTS`]
+    /// attempts with exponential backoff (10 ms doubling), removing the
+    /// torn tmp file between attempts so a flaky disk never strands
+    /// partial writes. Returns the final path and how many retries it
+    /// took (folded into `Metrics::ckpt_retries` by the EC driver).
+    pub fn save_with_retries(&self, snap: &Snapshot) -> Result<(PathBuf, u64)> {
         let _span = crate::telemetry::span(crate::telemetry::Stage::CheckpointWrite);
+        let tmp_path = self.dir.join(format!(".tmp-{}", Self::file_name(snap.boundary)));
+        let mut backoff = std::time::Duration::from_millis(10);
+        let mut retries = 0u64;
+        loop {
+            match self.save_once(snap, &tmp_path) {
+                Ok(path) => return Ok((path, retries)),
+                Err(e) => {
+                    // Clean up the torn tmp regardless of whether we
+                    // retry: a failed save must leave no residue.
+                    let _ = std::fs::remove_file(&tmp_path);
+                    retries += 1;
+                    if retries >= SAVE_ATTEMPTS {
+                        return Err(e);
+                    }
+                    crate::log_warn!(
+                        "checkpoint save attempt {retries}/{SAVE_ATTEMPTS} failed \
+                         (retrying in {backoff:?}): {e:#}"
+                    );
+                    std::thread::sleep(backoff);
+                    backoff *= 2;
+                }
+            }
+        }
+    }
+
+    /// One save attempt: tmp write, fsync, rename. Each I/O operation
+    /// is a named fault point (`crate::faults`).
+    fn save_once(&self, snap: &Snapshot, tmp_path: &Path) -> Result<PathBuf> {
+        let inject = |op: &str| -> std::io::Result<()> {
+            match crate::faults::checkpoint_fault(op) {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        };
         std::fs::create_dir_all(&self.dir)
             .with_context(|| format!("creating checkpoint dir {:?}", self.dir))?;
         let final_path = self.dir.join(Self::file_name(snap.boundary));
-        let tmp_path = self.dir.join(format!(".tmp-{}", Self::file_name(snap.boundary)));
         {
             use std::io::Write as _;
-            let mut f = std::fs::File::create(&tmp_path)
-                .with_context(|| format!("creating {tmp_path:?}"))?;
-            f.write_all(snap.serialize().as_bytes())
-                .with_context(|| format!("writing {tmp_path:?}"))?;
-            // Durability before visibility: the rename must never expose
-            // a partially-flushed file, so a failed sync is a failed save
-            // (disk full at sync time is precisely the case that would
-            // otherwise surface as a corrupt "newest" snapshot).
-            f.sync_all().with_context(|| format!("syncing {tmp_path:?}"))?;
+            inject("create")
+                .and_then(|()| std::fs::File::create(tmp_path))
+                .with_context(|| format!("creating {tmp_path:?}"))
+                .and_then(|mut f| {
+                    inject("write")
+                        .and_then(|()| f.write_all(snap.serialize().as_bytes()))
+                        .with_context(|| format!("writing {tmp_path:?}"))?;
+                    // Durability before visibility: the rename must never
+                    // expose a partially-flushed file, so a failed sync is
+                    // a failed save (disk full at sync time is precisely
+                    // the case that would otherwise surface as a corrupt
+                    // "newest" snapshot).
+                    inject("sync")
+                        .and_then(|()| f.sync_all())
+                        .with_context(|| format!("syncing {tmp_path:?}"))
+                })?;
         }
-        std::fs::rename(&tmp_path, &final_path)
+        inject("rename")
+            .and_then(|()| std::fs::rename(tmp_path, &final_path))
             .with_context(|| format!("renaming {tmp_path:?} -> {final_path:?}"))?;
         self.prune();
         Ok(final_path)
@@ -222,6 +305,32 @@ mod tests {
             .filter(|e| e.file_name().to_string_lossy().starts_with(".tmp-"))
             .count();
         assert_eq!(residue, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn opening_a_store_sweeps_orphaned_tmp_files() {
+        let dir = tmp_dir("orphans");
+        std::fs::create_dir_all(&dir).unwrap();
+        // A torn write left by a killed process, plus a real snapshot and
+        // an unrelated file that must both survive the sweep.
+        std::fs::write(dir.join(".tmp-ckpt-000000000300.jsonl"), b"{\"ev\":\"ckpt\"").unwrap();
+        std::fs::write(dir.join("unrelated.txt"), b"keep me").unwrap();
+        CheckpointStore { dir: dir.clone(), keep: 3, orphans_swept: 0 }
+            .save(&snap_at(100))
+            .unwrap();
+        let store = CheckpointStore::new(&dir, 3);
+        assert_eq!(store.orphans_swept(), 1);
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert!(!names.iter().any(|n| n.starts_with(".tmp-")), "{names:?}");
+        assert!(names.iter().any(|n| n == "unrelated.txt"), "{names:?}");
+        assert_eq!(store.load_latest().unwrap().1.boundary, 100);
+        // A second open finds nothing left to sweep.
+        assert_eq!(CheckpointStore::new(&dir, 3).orphans_swept(), 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

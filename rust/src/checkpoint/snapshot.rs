@@ -198,6 +198,15 @@ fn get_usize(v: &Json, key: &str) -> Result<usize> {
     Ok(get_u64(v, key)? as usize)
 }
 
+/// Schema-additive u64 field: absent means zero (the emitter omits zero
+/// robustness counters so older artifacts round-trip byte-exactly).
+fn get_u64_or_zero(v: &Json, key: &str) -> Result<u64> {
+    match v.get(key) {
+        Some(_) => get_u64(v, key),
+        None => Ok(0),
+    }
+}
+
 fn get_f64(v: &Json, key: &str) -> Result<f64> {
     // `null` is the emitter's encoding of a non-finite value.
     match v.get(key) {
@@ -310,6 +319,19 @@ impl Snapshot {
         u64_str(&mut e, "stale_rejects", m.stale_rejects);
         u64_str(&mut e, "worker_joins", m.worker_joins);
         u64_str(&mut e, "worker_leaves", m.worker_leaves);
+        // Robustness counters (DESIGN.md §12): schema-additive — emitted
+        // only when nonzero so fault-free checkpoints stay byte-identical
+        // to pre-fault-subsystem ones (and round-trip byte-exactly).
+        for (key, value) in [
+            ("faults_injected", m.faults_injected),
+            ("ckpt_retries", m.ckpt_retries),
+            ("sink_degraded", m.sink_degraded),
+            ("worker_panics", m.worker_panics),
+        ] {
+            if value > 0 {
+                u64_str(&mut e, key, value);
+            }
+        }
         e.key("staleness_hist").begin_arr();
         for &c in &m.staleness_hist {
             e.num(c as f64);
@@ -505,6 +527,12 @@ impl Snapshot {
                         // Stage totals are finalized only at run end, so
                         // mid-run snapshots never carry them.
                         stage_totals: Vec::new(),
+                        // Robustness counters are schema-additive: absent
+                        // (pre-fault-subsystem or fault-free) means zero.
+                        faults_injected: get_u64_or_zero(v, "faults_injected")?,
+                        ckpt_retries: get_u64_or_zero(v, "ckpt_retries")?,
+                        sink_degraded: get_u64_or_zero(v, "sink_degraded")?,
+                        worker_panics: get_u64_or_zero(v, "worker_panics")?,
                     });
                 }
                 "center" => {
@@ -688,6 +716,25 @@ pub(crate) mod tests {
             assert_eq!(parsed, snap, "value round trip (seed {seed})");
             assert_eq!(parsed.serialize(), text, "byte round trip (seed {seed})");
         }
+    }
+
+    #[test]
+    fn fault_counters_are_schema_additive_in_checkpoints() {
+        // Zero counters emit no key: fault-free checkpoints are
+        // byte-identical to pre-fault-subsystem ones.
+        let clean = sample_snapshot(9).serialize();
+        for key in ["faults_injected", "ckpt_retries", "sink_degraded", "worker_panics"] {
+            assert!(!clean.contains(key), "{key} must be absent from a clean snapshot");
+        }
+        // Nonzero counters survive the round trip byte-exactly.
+        let mut snap = sample_snapshot(9);
+        snap.metrics.ckpt_retries = 2;
+        snap.metrics.worker_panics = 1;
+        let text = snap.serialize();
+        let parsed = Snapshot::parse(&text).unwrap();
+        assert_eq!(parsed.metrics.ckpt_retries, 2);
+        assert_eq!(parsed.metrics.worker_panics, 1);
+        assert_eq!(parsed.serialize(), text, "byte round trip with fault counters");
     }
 
     #[test]

@@ -67,6 +67,9 @@ fn apply_overrides(cfg: &mut RunConfig, p: &Parsed) -> Result<()> {
     if let Some(n) = p.opt("telemetry-every") {
         cfg.telemetry_every = n.parse().context("--telemetry-every")?;
     }
+    if let Some(spec) = p.opt("faults") {
+        cfg.faults = Some(crate::faults::FaultPlan::from_spec(spec).context("--faults")?);
+    }
     Ok(())
 }
 
@@ -83,6 +86,23 @@ fn apply_telemetry(cfg: &RunConfig) {
     }
 }
 
+/// Commit the configured fault plan to the process-global runtime before
+/// any worker thread spawns (DESIGN.md §12). The decision-stream seed
+/// falls back to a run-seed derivation so a chaotic run replays under the
+/// same `--seed` with no extra flags.
+fn apply_faults(cfg: &RunConfig) {
+    crate::faults::configure(cfg.faults.as_ref(), cfg.seed ^ 0xFA17);
+    if let Some(plan) = cfg.faults.as_ref().filter(|plan| plan.is_active()) {
+        log_warn!(
+            "fault injection: on (ckpt={} sink={} drop={} panic={:?})",
+            plan.ckpt_rate,
+            plan.sink_rate,
+            plan.drop_rate,
+            plan.panic_worker
+        );
+    }
+}
+
 /// `ecsgmcmc sample --config <file> [--seed n] [--transport t] [--shards n]
 /// [--sink kind] [--sink-path file] [--checkpoint-dir d]
 /// [--checkpoint-every r] [--churn rate] [--staleness-bound b]`.
@@ -93,6 +113,7 @@ pub fn cmd_sample(p: &Parsed) -> Result<i32> {
     cfg.validate()?;
     apply_dispatch(&cfg)?;
     apply_telemetry(&cfg);
+    apply_faults(&cfg);
     // Probe stream-path writability now: the scheme drivers treat sink
     // init as infallible, so an unwritable path must fail here with a
     // clean error before any sampling starts. Open in append mode — the
@@ -164,6 +185,7 @@ pub fn cmd_resume(p: &Parsed) -> Result<i32> {
     cfg.validate()?;
     apply_dispatch(&cfg)?;
     apply_telemetry(&cfg);
+    apply_faults(&cfg);
     if !matches!(cfg.scheme, Scheme::ElasticCoupling | Scheme::EcSgld) {
         return Err(anyhow!("resume supports the EC schemes (got {})", cfg.scheme.name()));
     }
@@ -445,6 +467,18 @@ fn report_run(cfg: &RunConfig, r: &RunResult) {
     if r.metrics.stale_rejects > 0 {
         println!("stale uploads rejected (bounded-staleness gate): {}", r.metrics.stale_rejects);
     }
+    if r.metrics.faults_injected > 0 {
+        println!("faults injected: {}", r.metrics.faults_injected);
+    }
+    if r.metrics.ckpt_retries > 0 {
+        println!("checkpoint write retries: {}", r.metrics.ckpt_retries);
+    }
+    if r.metrics.sink_degraded > 0 {
+        println!("sink degraded (buffered in memory) events: {}", r.metrics.sink_degraded);
+    }
+    if r.metrics.worker_panics > 0 {
+        println!("worker panics survived: {}", r.metrics.worker_panics);
+    }
     let spec = cfg.sink_spec();
     if let Some(stream) = spec.jsonl_path() {
         println!("stream: {}", stream.display());
@@ -502,7 +536,31 @@ pub fn cmd_replay(p: &Parsed) -> Result<i32> {
         }
         return Ok(0);
     }
-    let r = crate::sink::replay::replay_file(path)?;
+    let r = match crate::sink::replay::replay_file(path) {
+        Ok(r) => r,
+        Err(err) => {
+            // Torn or corrupt stream: report the intact prefix and the
+            // exact salvage point instead of a bare parse error.
+            let s = crate::sink::replay::salvage_file(path)?;
+            println!("stream is damaged: {err:#}");
+            println!(
+                "intact prefix: {} events ({} samples over {} chains), {} of {} bytes \
+                 ({} bytes unrecoverable)",
+                s.events,
+                s.samples,
+                s.chains,
+                s.bytes_salvaged,
+                s.bytes_total,
+                s.bytes_total - s.bytes_salvaged
+            );
+            println!(
+                "salvage: head -c {} {} > recovered.jsonl  (replays cleanly)",
+                s.bytes_salvaged,
+                path.display()
+            );
+            return Ok(1);
+        }
+    };
     println!(
         "replayed: {} chains, {} samples, {} center points, elapsed {:.2}s",
         r.chains.len(),
@@ -524,6 +582,69 @@ pub fn cmd_replay(p: &Parsed) -> Result<i32> {
         print_moments(&m.mean, &m.cov, d);
     }
     Ok(0)
+}
+
+/// `ecsgmcmc fsck --file <run.jsonl | ckpt-*.jsonl>`.
+///
+/// Integrity-check an artifact without loading it for use. Run streams
+/// get a lenient scan reporting the last intact event prefix and the
+/// exact salvage point; checkpoints are all-or-nothing (atomic rename +
+/// footer line count), so they report valid or corrupt. Exit status:
+/// 0 = intact, 1 = damaged.
+pub fn cmd_fsck(p: &Parsed) -> Result<i32> {
+    let path = p.opt("file").ok_or_else(|| anyhow!("--file is required"))?;
+    let path = std::path::Path::new(path);
+    let head = {
+        use std::io::Read as _;
+        let mut f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+        let mut buf = [0u8; 64];
+        let n = f.read(&mut buf).with_context(|| format!("reading {path:?}"))?;
+        String::from_utf8_lossy(&buf[..n]).into_owned()
+    };
+    if head.contains("\"ev\":\"ckpt\"") {
+        return match crate::checkpoint::CheckpointStore::load(path) {
+            Ok(snap) => {
+                println!(
+                    "checkpoint intact: boundary step {}, {} workers, seed {}",
+                    snap.boundary, snap.fingerprint.total_workers, snap.seed
+                );
+                Ok(0)
+            }
+            Err(e) => {
+                println!("checkpoint damaged: {e:#}");
+                println!(
+                    "checkpoints are atomic (tmp + rename): resume from the previous \
+                     snapshot in the store instead"
+                );
+                Ok(1)
+            }
+        };
+    }
+    let s = crate::sink::replay::salvage_file(path)?;
+    println!(
+        "stream: {} events ({} samples over {} chains) in the intact prefix",
+        s.events, s.samples, s.chains
+    );
+    println!(
+        "bytes: {} of {} intact ({} unrecoverable)",
+        s.bytes_salvaged,
+        s.bytes_total,
+        s.bytes_total - s.bytes_salvaged
+    );
+    if s.truncated {
+        if let Some(err) = &s.error {
+            println!("first damage: {err}");
+        }
+        println!(
+            "salvage: head -c {} {} > recovered.jsonl  (replays cleanly)",
+            s.bytes_salvaged,
+            path.display()
+        );
+        Ok(1)
+    } else {
+        println!("stream intact");
+        Ok(0)
+    }
 }
 
 fn print_moments(mean: &[f64], cov: &[f64], d: usize) {
@@ -669,6 +790,24 @@ pub fn cmd_experiment(p: &Parsed) -> Result<i32> {
                 );
             }
             experiments::series_to_csv(&format!("{out}/churn.csv"), "rate", &[&ec, &naive])?;
+        }
+        "CHAOS" => {
+            let r = experiments::chaos::run(scale, seed);
+            let (cov, rhat) = r.to_series();
+            print_series_table(
+                "CHAOS: EC posterior quality vs injected-fault intensity (Fig. 1 Gaussian)",
+                "level",
+                &r.levels,
+                &[(&cov.label, &cov.ys), (&rhat.label, &rhat.ys)],
+            );
+            for (i, &level) in r.levels.iter().enumerate() {
+                println!(
+                    "  level {level:.2}: {} faults injected, {} ckpt retries, \
+                     {} sink degradations, {} worker panics",
+                    r.faults_injected[i], r.ckpt_retries[i], r.sink_degraded[i], r.worker_panics[i]
+                );
+            }
+            experiments::series_to_csv(&format!("{out}/chaos.csv"), "level", &[&cov, &rhat])?;
         }
         "PERF" => {
             let max_k = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);

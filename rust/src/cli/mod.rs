@@ -7,12 +7,16 @@
 //!   its newest snapshot (bit-identical under the deterministic
 //!   transport, DESIGN.md §8);
 //! * `replay --file <run.jsonl>` — reconstruct or re-diagnose a streamed
-//!   run from its JSONL artifact (DESIGN.md §7);
+//!   run from its JSONL artifact (DESIGN.md §7); on a damaged stream it
+//!   reports the intact prefix and the salvage point;
+//! * `fsck --file <artifact>` — integrity-check a run stream or
+//!   checkpoint: last intact prefix, first damage, exact salvage command
+//!   (DESIGN.md §12);
 //! * `trace --file <run.jsonl>` — export the stream's telemetry frames
 //!   as a Chrome trace-event file (DESIGN.md §11);
 //! * `top --file <run.jsonl>` — live per-stage latency/counter view of a
 //!   running (or finished) streamed run;
-//! * `experiment --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF|CHURN>`
+//! * `experiment --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF|CHURN|CHAOS>`
 //!   — run a paper experiment and print its table (plus CSVs under
 //!   `--out`);
 //! * `bench --suite kernels` — GEMM kernel-variant sweep over the Fig. 2
@@ -38,6 +42,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
         "sample" => commands::cmd_sample(&parsed),
         "resume" => commands::cmd_resume(&parsed),
         "replay" => commands::cmd_replay(&parsed),
+        "fsck" => commands::cmd_fsck(&parsed),
         "trace" => commands::cmd_trace(&parsed),
         "top" => commands::cmd_top(&parsed),
         "experiment" => commands::cmd_experiment(&parsed),
@@ -85,6 +90,8 @@ COMMANDS:
                   --telemetry            enable span tracing + metrics frames
                   --telemetry-every <n>  center steps between telemetry frames
                                          (default 50)
+                  --faults <spec>        deterministic fault injection, e.g.
+                                         ckpt=0.5,sink=0.2,drop=0.1,panic=1,seed=7
     resume      Continue a checkpointed EC run from its newest snapshot
                   --config <file.toml>   the run's original config
                   --checkpoint-dir <d>   snapshot dir (or [checkpoint] dir)
@@ -93,6 +100,10 @@ COMMANDS:
                   --file <run.jsonl>     stream produced by --sink jsonl|tee
                   --diag                 stream diagnostics only (bounded memory)
                   --dim <d>              moment dimensions to report (default 2)
+    fsck        Integrity-check a run stream or checkpoint artifact
+                  --file <artifact>      run.jsonl stream or ckpt-*.jsonl snapshot
+                                         (exit 0 = intact, 1 = damaged + salvage
+                                         point printed)
     trace       Export a stream's telemetry frames as a Chrome trace
                   --file <run.jsonl>     stream recorded with --telemetry
                   --out <trace.json>     output file (default trace.json)
@@ -101,7 +112,7 @@ COMMANDS:
                   --follow               tail the stream and redraw live
                   --interval-ms <n>      redraw period with --follow (default 1000)
     experiment  Regenerate a paper experiment
-                  --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF|CHURN>
+                  --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF|CHURN|CHAOS>
                   --fast                 smoke-scale run
                   --seed <n>             (default 42)
                   --out <dir>            CSV output dir (default out/)

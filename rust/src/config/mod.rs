@@ -205,6 +205,11 @@ pub struct RunConfig {
     /// Per-thread span ring capacity, rounded up to a power of two
     /// (`[telemetry] ring_capacity`).
     pub telemetry_ring: usize,
+    /// Deterministic fault-injection plan (`[faults]` table, `--faults`);
+    /// `None` (the default) leaves the fault subsystem disabled — the
+    /// fast path is one relaxed atomic load per fault point
+    /// (DESIGN.md §12).
+    pub faults: Option<crate::faults::FaultPlan>,
 }
 
 impl Default for RunConfig {
@@ -240,6 +245,7 @@ impl Default for RunConfig {
             telemetry: false,
             telemetry_every: 50,
             telemetry_ring: 4096,
+            faults: None,
         }
     }
 }
@@ -346,6 +352,34 @@ impl RunConfig {
         cfg.telemetry_ring =
             t.get_usize("telemetry", "ring_capacity").unwrap_or(cfg.telemetry_ring);
 
+        {
+            let mut plan = crate::faults::FaultPlan::default();
+            let mut any = false;
+            if let Some(v) = t.get_usize("faults", "seed") {
+                plan.seed = Some(v as u64);
+                any = true;
+            }
+            if let Some(v) = t.get_f64("faults", "ckpt") {
+                plan.ckpt_rate = v;
+                any = true;
+            }
+            if let Some(v) = t.get_f64("faults", "sink") {
+                plan.sink_rate = v;
+                any = true;
+            }
+            if let Some(v) = t.get_f64("faults", "drop") {
+                plan.drop_rate = v;
+                any = true;
+            }
+            if let Some(v) = t.get_usize("faults", "panic") {
+                plan.panic_worker = Some(v);
+                any = true;
+            }
+            if any {
+                cfg.faults = Some(plan);
+            }
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -432,6 +466,37 @@ impl RunConfig {
             }
             if self.checkpoint_keep == 0 {
                 bail!("[checkpoint] keep must be >= 1");
+            }
+        }
+        if let Some(plan) = &self.faults {
+            for (name, v) in [
+                ("ckpt", plan.ckpt_rate),
+                ("sink", plan.sink_rate),
+                ("drop", plan.drop_rate),
+            ] {
+                if !(0.0..=1.0).contains(&v) {
+                    bail!("[faults] {name} must be a rate in [0, 1] (got {v})");
+                }
+            }
+            if plan.drop_rate > 0.0 {
+                if !is_ec {
+                    bail!(
+                        "[faults] drop only applies to the EC schemes (got {})",
+                        self.scheme.name()
+                    );
+                }
+                if self.transport != TransportKind::LockFree {
+                    bail!(
+                        "[faults] drop > 0 requires transport = \"lockfree\" (the \
+                         deterministic round-robin fabric has no drop point)"
+                    );
+                }
+            }
+            if plan.panic_worker.is_some() && !is_ec {
+                bail!(
+                    "[faults] panic only applies to the EC schemes (got {})",
+                    self.scheme.name()
+                );
             }
         }
         if self.telemetry_every == 0 {
@@ -680,6 +745,55 @@ alpha = 0.5
         // Degenerate knobs are rejected.
         assert!(RunConfig::from_toml_str("[telemetry]\nevery = 0\n").is_err());
         assert!(RunConfig::from_toml_str("[telemetry]\nring_capacity = 1\n").is_err());
+    }
+
+    #[test]
+    fn parses_faults_table() {
+        let cfg = RunConfig::from_toml_str(
+            "[run]\nscheme = \"ec\"\n\
+             [coordinator]\ntransport = \"lockfree\"\n\
+             [faults]\nseed = 7\nckpt = 0.5\nsink = 0.25\ndrop = 0.1\npanic = 1\n",
+        )
+        .unwrap();
+        let plan = cfg.faults.unwrap();
+        assert_eq!(plan.seed, Some(7));
+        assert!((plan.ckpt_rate - 0.5).abs() < 1e-12);
+        assert!((plan.sink_rate - 0.25).abs() < 1e-12);
+        assert!((plan.drop_rate - 0.1).abs() < 1e-12);
+        assert_eq!(plan.panic_worker, Some(1));
+        assert!(plan.is_active());
+        // Default: no plan at all.
+        let plain = RunConfig::from_toml_str("[run]\nscheme = \"ec\"\n").unwrap();
+        assert!(plain.faults.is_none());
+        // An all-zero [faults] table parses but is inactive (zero-cost
+        // contract: it must behave exactly like no table).
+        let zero = RunConfig::from_toml_str("[run]\nscheme = \"ec\"\n[faults]\nckpt = 0.0\n")
+            .unwrap();
+        assert!(!zero.faults.unwrap().is_active());
+    }
+
+    #[test]
+    fn faults_constraints_are_enforced() {
+        // Rates outside [0, 1] are rejected.
+        assert!(RunConfig::from_toml_str(
+            "[run]\nscheme = \"ec\"\n[faults]\nckpt = 1.5\n"
+        )
+        .is_err());
+        // Upload drops need the lock-free transport…
+        assert!(RunConfig::from_toml_str(
+            "[run]\nscheme = \"ec\"\n[faults]\ndrop = 0.5\n"
+        )
+        .is_err());
+        // …and an EC scheme; so do injected panics.
+        assert!(RunConfig::from_toml_str(
+            "[run]\nscheme = \"sghmc\"\n\
+             [coordinator]\ntransport = \"lockfree\"\n[faults]\ndrop = 0.5\n"
+        )
+        .is_err());
+        assert!(RunConfig::from_toml_str(
+            "[run]\nscheme = \"independent\"\n[faults]\npanic = 0\n"
+        )
+        .is_err());
     }
 
     #[test]

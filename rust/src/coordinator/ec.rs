@@ -729,6 +729,9 @@ fn run_ec_inner(
         total - cfg.workers
     );
     let start = Instant::now();
+    // Injection counter baseline: the global count is per-process, so a
+    // second run in the same process must only fold in its own delta.
+    let faults_base = crate::faults::injected_count();
     let s = cfg.sync_every;
     let b = cfg.opts.chains_per_worker.max(1);
     let dim = engines[0].dim();
@@ -784,6 +787,24 @@ fn run_ec_inner(
             start,
             hub.frame_sink(Frame::Chain(w), cfg.opts.max_samples),
         )
+    };
+    // A worker whose thread panicked consumed its cell in the unwind; a
+    // tombstone keeps the bookkeeping total (snapshots, result assembly)
+    // while marking the chain departed. The panic fires only *after* a
+    // segment completes (see the spawn sites), so a started worker
+    // really did advance to `stop_step.min(until)`; its streamed samples
+    // are already durable, only the in-memory trace died with it.
+    let tombstone = |id: usize, until: usize| WorkerCell {
+        span: spans[id],
+        state: ChainState::zeros(dim),
+        rng: Pcg64::new(seed, 1000 + id as u64),
+        jitter: Pcg64::new(seed ^ 0x9e37, 2000 + id as u64),
+        center: vec![0.0f32; dim],
+        rec: make_recorder(id),
+        next_step: spans[id].start_step.max(spans[id].stop_step.min(until)),
+        started: true,
+        departed: true,
+        seen: 0,
     };
 
     let (mut cells, mut center, elapsed_before, mut at): (
@@ -979,6 +1000,10 @@ fn run_ec_inner(
 
         let mut seg_ports: Vec<Option<Box<dyn WorkerPort>>> =
             seg_ports.into_iter().map(Some).collect();
+        // Worker threads that died this segment (fault injection or a
+        // real bug): their chains fold into membership as `fail`s below.
+        let mut panicked: Vec<usize> = Vec::new();
+        let mut panicked_threads = 0u64;
         if b <= 1 {
             let mut handles = Vec::with_capacity(participants.len());
             for id in 0..total {
@@ -995,22 +1020,39 @@ fn run_ec_inner(
                 let gate_opt = churn_active.then(|| gate.clone());
                 let (alpha, delay) = (cfg.alpha, cfg.delay);
                 let factor = delay.worker_factor(id, seed);
-                handles.push(
+                handles.push((
+                    id,
                     std::thread::Builder::new()
                         .name(format!("ec-worker-{id}"))
                         .spawn(move || {
-                            run_ec_worker_segment(
+                            let ret = run_ec_worker_segment(
                                 cell, engine, port, alpha, s, until, delay, factor, gate_opt,
-                            )
+                            );
+                            // Fault point `panic` (DESIGN.md §12): fires
+                            // AFTER the segment returns so the fabric's
+                            // upload accounting stays balanced; the
+                            // unwind then consumes cell + engine exactly
+                            // like a real mid-run crash would.
+                            if crate::faults::enabled() && crate::faults::worker_panic_due(id) {
+                                panic!("injected worker fault (worker {id})");
+                            }
+                            ret
                         })
                         .expect("spawn ec-worker"),
-                );
+                ));
             }
-            for h in handles {
-                let (cell, engine) = h.join().expect("ec worker panicked");
-                let id = cell.span.id;
-                engine_bank[id] = Some(engine);
-                cells[id] = Some(cell);
+            for (id, h) in handles {
+                match h.join() {
+                    Ok((cell, engine)) => {
+                        engine_bank[id] = Some(engine);
+                        cells[id] = Some(cell);
+                    }
+                    Err(_) => {
+                        cells[id] = Some(tombstone(id, until));
+                        panicked.push(id);
+                        panicked_threads += 1;
+                    }
+                }
             }
         } else {
             // Block scheduling (DESIGN.md §9): B chains per OS thread,
@@ -1042,29 +1084,75 @@ fn run_ec_inner(
                 let (alpha, delay) = (cfg.alpha, cfg.delay);
                 let factors: Vec<f64> =
                     ids.iter().map(|&id| delay.worker_factor(id, seed)).collect();
-                handles.push(
+                let thread_ids = ids.clone();
+                handles.push((
+                    ids,
                     std::thread::Builder::new()
-                        .name(format!("ec-block-{}", ids[0]))
+                        .name(format!("ec-block-{}", thread_ids[0]))
                         .spawn(move || {
-                            run_ec_block_segment(
+                            let ret = run_ec_block_segment(
                                 block_cells, engine, block_ports, alpha, s, until, delay,
                                 factors, gate_opt,
-                            )
+                            );
+                            // Fault point `panic`: post-segment, see the
+                            // b ≤ 1 spawn site. A block thread hosts B
+                            // chains, so one doomed id takes down all of
+                            // them — exactly like a real thread death.
+                            if crate::faults::enabled() {
+                                for &id in &thread_ids {
+                                    if crate::faults::worker_panic_due(id) {
+                                        panic!("injected worker fault (worker {id})");
+                                    }
+                                }
+                            }
+                            ret
                         })
                         .expect("spawn ec-block"),
-                );
+                ));
             }
-            for h in handles {
-                let (ret_cells, engine) = h.join().expect("ec block panicked");
-                let first = ret_cells[0].span.id;
-                engine_bank[first] = Some(engine);
-                for cell in ret_cells {
-                    let id = cell.span.id;
-                    cells[id] = Some(cell);
+            for (ids, h) in handles {
+                match h.join() {
+                    Ok((ret_cells, engine)) => {
+                        let first = ret_cells[0].span.id;
+                        engine_bank[first] = Some(engine);
+                        for cell in ret_cells {
+                            let id = cell.span.id;
+                            cells[id] = Some(cell);
+                        }
+                    }
+                    Err(_) => {
+                        // The whole block thread died: every chain it
+                        // drove gets a tombstone (the shared block engine
+                        // is gone with the unwind).
+                        panicked_threads += 1;
+                        for id in ids {
+                            cells[id] = Some(tombstone(id, until));
+                            panicked.push(id);
+                        }
+                    }
                 }
             }
         }
         center = server.join().expect("ec server panicked");
+        if !panicked.is_empty() {
+            // Harden-by-membership (DESIGN.md §12): a panicked worker is
+            // folded into the elastic machinery as a `fail` departure —
+            // the fleet shrinks, the center keeps sampling, and the run
+            // completes instead of propagating the panic.
+            let t_now = elapsed_before + start.elapsed().as_secs_f64();
+            for &id in &panicked {
+                log_warn!(
+                    "worker {id} panicked mid-run; folding into membership as a \
+                     fail departure (run continues)"
+                );
+                if center.active[id] {
+                    center.active[id] = false;
+                    center.metrics.worker_leaves += 1;
+                }
+                center.sink.record_member(t_now, id, "fail");
+            }
+            center.metrics.worker_panics += panicked_threads;
+        }
         at = until;
 
         // Persist a snapshot at this cut (never at the final boundary —
@@ -1081,12 +1169,14 @@ fn run_ec_inner(
                     &center,
                     &hub,
                 );
-                match store.save(&snap) {
-                    Ok(path) => {
+                match store.save_with_retries(&snap) {
+                    Ok((path, retries)) => {
+                        center.metrics.ckpt_retries += retries;
                         hub.write_checkpoint_marker(at, &path.display().to_string());
                         last_write = Instant::now();
                     }
                     Err(e) => {
+                        center.metrics.ckpt_retries += crate::checkpoint::SAVE_ATTEMPTS;
                         log_warn!("checkpoint save failed (run continues): {e:#}");
                     }
                 }
@@ -1127,6 +1217,8 @@ fn run_ec_inner(
     }
     // Overflow past the in-memory cap is accounted, not silently lost.
     cc.metrics.samples_dropped = cc.dropped_base + cc.sink.dropped();
+    // Faults fired during THIS run (the counter is per-process).
+    cc.metrics.faults_injected += crate::faults::injected_count().saturating_sub(faults_base);
     result.center_trace = cc.sink.take_samples();
     cc.sink.flush();
     result.metrics = cc.metrics;

@@ -42,6 +42,19 @@ pub struct Metrics {
     /// `stage_<name>_ns` keys (stream v3, DESIGN.md §7/§11), so v2
     /// streams and pre-telemetry checkpoints replay unchanged.
     pub stage_totals: Vec<(String, u64, u64)>,
+    /// Faults injected by the deterministic fault plan (DESIGN.md §12);
+    /// zero on fault-free runs. Serialized schema-additively (key absent
+    /// when zero), like the other robustness counters below.
+    pub faults_injected: u64,
+    /// Checkpoint save attempts that failed and were retried (the save
+    /// eventually succeeded or exhausted its retry budget).
+    pub ckpt_retries: u64,
+    /// Times a JSONL sink writer entered degraded (in-memory buffering)
+    /// mode after a write failure.
+    pub sink_degraded: u64,
+    /// Worker threads that panicked mid-run and were folded into elastic
+    /// membership as `fail` departures instead of killing the run.
+    pub worker_panics: u64,
 }
 
 impl Default for Metrics {
@@ -58,6 +71,10 @@ impl Default for Metrics {
             worker_joins: 0,
             worker_leaves: 0,
             stage_totals: Vec::new(),
+            faults_injected: 0,
+            ckpt_retries: 0,
+            sink_degraded: 0,
+            worker_panics: 0,
         }
     }
 }
@@ -110,6 +127,18 @@ impl Metrics {
                 map.insert(format!("stage_{stage}_count"), Json::Num(*count as f64));
                 map.insert(format!("stage_{stage}_ns"), Json::Num(*ns as f64));
             }
+            // Robustness counters (DESIGN.md §12): schema-additive, only
+            // present when nonzero, so fault-free artifacts are unchanged.
+            for (key, value) in [
+                ("faults_injected", self.faults_injected),
+                ("ckpt_retries", self.ckpt_retries),
+                ("sink_degraded", self.sink_degraded),
+                ("worker_panics", self.worker_panics),
+            ] {
+                if value > 0 {
+                    map.insert(key.to_string(), Json::Num(value as f64));
+                }
+            }
         }
         j
     }
@@ -141,6 +170,10 @@ impl Metrics {
             worker_joins: num("worker_joins") as u64,
             worker_leaves: num("worker_leaves") as u64,
             stage_totals,
+            faults_injected: num("faults_injected") as u64,
+            ckpt_retries: num("ckpt_retries") as u64,
+            sink_degraded: num("sink_degraded") as u64,
+            worker_panics: num("worker_panics") as u64,
         }
     }
 }
@@ -221,5 +254,28 @@ mod tests {
         assert_eq!(back.stale_rejects, 9);
         assert_eq!(back.worker_joins, 2);
         assert_eq!(back.worker_leaves, 3);
+    }
+
+    #[test]
+    fn fault_counters_are_schema_additive_and_round_trip() {
+        // Zero counters serialize to *no* key at all — fault-free runs
+        // produce byte-identical artifacts to pre-fault-subsystem builds.
+        let clean = Metrics::default().to_json();
+        for key in ["faults_injected", "ckpt_retries", "sink_degraded", "worker_panics"] {
+            assert!(clean.get(key).is_none(), "{key} must be absent when zero");
+        }
+        assert_eq!(Metrics::from_json(&clean).faults_injected, 0);
+        let m = Metrics {
+            faults_injected: 11,
+            ckpt_retries: 3,
+            sink_degraded: 2,
+            worker_panics: 1,
+            ..Default::default()
+        };
+        let back = Metrics::from_json(&m.to_json());
+        assert_eq!(back.faults_injected, 11);
+        assert_eq!(back.ckpt_retries, 3);
+        assert_eq!(back.sink_degraded, 2);
+        assert_eq!(back.worker_panics, 1);
     }
 }

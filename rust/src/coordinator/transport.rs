@@ -508,7 +508,13 @@ impl LockFreeWorkerPort {
 impl WorkerPort for LockFreeWorkerPort {
     fn exchange(&mut self, theta: &[f32], center: &mut CenterView) {
         let sh = &*self.shared;
-        sh.mailboxes[self.worker].publish(theta);
+        // Fault point `upload_drop` (DESIGN.md §12): a dropped upload is
+        // a lost network message — the worker still pulls the center and
+        // keeps sampling, the server just never sees this θ. Lock-free
+        // fabric only: the deterministic port's recv counts uploads.
+        if !(crate::faults::enabled() && crate::faults::upload_drop()) {
+            sh.mailboxes[self.worker].publish(theta);
+        }
         let seen = self.read_center(center);
         // Monotone store: center versions only grow, and this worker is
         // the slot's single writer.

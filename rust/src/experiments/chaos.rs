@@ -1,0 +1,130 @@
+//! CHAOS experiment (DESIGN.md §12): posterior quality under injected
+//! faults — the robustness claim made measurable.
+//!
+//! Each level runs the Fig. 1 EC configuration with checkpointing and a
+//! JSONL stream attached while the deterministic fault plan fails
+//! checkpoint I/O ops, sink line writes, and lock-free uploads at
+//! increasing rates, and panics one worker thread mid-run. The hardened
+//! recovery paths (bounded checkpoint retries, degraded in-memory sink
+//! buffering, panic-as-`fail`-departure) must keep the run alive and the
+//! pooled posterior close to the analytic target: covariance error and
+//! split-R̂ at every level sit alongside the fault counters, so a quality
+//! regression under faults is a failing table, not an anecdote.
+
+use super::churn_sweep::{cov_err, max_rhat_of};
+use super::{Scale, Series};
+use crate::checkpoint::CheckpointPolicy;
+use crate::coordinator::ec::EcCheckpoint;
+use crate::coordinator::{EcConfig, EcCoordinator, RunOptions, RunResult, TransportKind};
+use crate::faults::FaultPlan;
+use crate::potentials::gaussian::GaussianPotential;
+use crate::samplers::SghmcParams;
+use crate::sink::SinkSpec;
+use std::path::Path;
+use std::sync::Arc;
+
+/// One sweep over fault-intensity levels; parallel vectors, one entry
+/// per level (level 0 = the fault-free baseline).
+#[derive(Debug, Clone, Default)]
+pub struct ChaosResult {
+    /// Fault intensity: the checkpoint-op failure rate; sink writes fail
+    /// at half of it, lock-free uploads drop at a quarter of it, and one
+    /// worker thread panics at every nonzero level.
+    pub levels: Vec<f64>,
+    /// Max |Σ̂ − Σ| entry for pooled EC worker samples.
+    pub cov_err: Vec<f64>,
+    /// Split-R̂ across EC chains (NaN when fewer than 2 usable chains).
+    pub max_rhat: Vec<f64>,
+    pub faults_injected: Vec<u64>,
+    pub ckpt_retries: Vec<u64>,
+    pub sink_degraded: Vec<u64>,
+    pub worker_panics: Vec<u64>,
+}
+
+impl ChaosResult {
+    pub fn to_series(&self) -> (Series, Series) {
+        let mut cov = Series::new("ec cov err");
+        let mut rhat = Series::new("ec max R-hat");
+        for (i, &level) in self.levels.iter().enumerate() {
+            cov.push(level, self.cov_err[i]);
+            rhat.push(level, self.max_rhat[i]);
+        }
+        (cov, rhat)
+    }
+}
+
+/// The Fig. 1 EC run with every fault surface attached: lock-free
+/// transport (upload-drop point), a checkpoint store (I/O fault points),
+/// and a JSONL stream (sink-write fault point) teed with memory so the
+/// posterior is still measurable.
+fn ec_run(steps: usize, dir: &Path, seed: u64) -> RunResult {
+    let cfg = EcConfig {
+        workers: 4,
+        alpha: 1.0,
+        sync_every: 2,
+        steps,
+        transport: TransportKind::LockFree,
+        checkpoint: Some(EcCheckpoint {
+            dir: dir.join("ckpt"),
+            policy: CheckpointPolicy { every_rounds: 25, every_secs: None, keep: 2 },
+        }),
+        opts: RunOptions {
+            thin: 2,
+            burn_in: steps / 5,
+            log_every: (steps / 10).max(1),
+            sink: SinkSpec::Tee(vec![
+                SinkSpec::Memory,
+                SinkSpec::Jsonl { path: dir.join("run.jsonl") },
+            ]),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    EcCoordinator::new(
+        cfg,
+        SghmcParams { eps: 0.05, ..Default::default() },
+        Arc::new(GaussianPotential::fig1()),
+    )
+    .run(seed)
+}
+
+/// Sweep fault-intensity levels on the EC scheme. Commits the fault plan
+/// to the process-global injector per level and disables it afterwards —
+/// callers must not race concurrent fault-sensitive work in the same
+/// process (the CLI runs one experiment at a time).
+pub fn run(scale: Scale, seed: u64) -> ChaosResult {
+    let steps = scale.pick(2_000, 24_000);
+    let levels = match scale {
+        Scale::Fast => vec![0.0, 0.3],
+        Scale::Full => vec![0.0, 0.1, 0.3, 0.5],
+    };
+    let dir = std::env::temp_dir().join(format!("ecsgmcmc-chaos-{seed}"));
+    let mut out = ChaosResult::default();
+    for (i, &level) in levels.iter().enumerate() {
+        let plan = FaultPlan {
+            seed: Some(seed ^ 0xFA17),
+            ckpt_rate: level,
+            sink_rate: level / 2.0,
+            drop_rate: level / 4.0,
+            panic_worker: if level > 0.0 { Some(3) } else { None },
+        };
+        crate::faults::configure(if level > 0.0 { Some(&plan) } else { None }, seed ^ 0xFA17);
+        let run_dir = dir.join(format!("level{i}"));
+        std::fs::create_dir_all(&run_dir).ok();
+        let r = ec_run(steps, &run_dir, seed);
+        crate::faults::configure(None, 0);
+        out.levels.push(level);
+        out.cov_err.push(cov_err(&r));
+        out.max_rhat.push(max_rhat_of(&r));
+        out.faults_injected.push(r.metrics.faults_injected);
+        out.ckpt_retries.push(r.metrics.ckpt_retries);
+        out.sink_degraded.push(r.metrics.sink_degraded);
+        out.worker_panics.push(r.metrics.worker_panics);
+    }
+    out
+}
+
+// No in-crate tests: every level flips the process-global fault
+// injector, which would race the rest of the parallel lib-test suite.
+// The fast-scale sweep is exercised in `tests/test_faults.rs`, which
+// serializes all fault-enabling tests in their own process.

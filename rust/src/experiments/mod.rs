@@ -16,8 +16,10 @@
 //! | ABL-α  | coupling ablation       | [`alpha_sweep`]       |
 //! | PERF   | throughput microbench   | [`throughput`]        |
 //! | CHURN  | elastic membership      | [`churn_sweep`]       |
+//! | CHAOS  | fault injection         | [`chaos`]             |
 
 pub mod alpha_sweep;
+pub mod chaos;
 pub mod churn_sweep;
 pub mod easgd_cmp;
 pub mod fig1;

@@ -1,0 +1,332 @@
+//! Deterministic fault injection (DESIGN.md §12).
+//!
+//! A [`FaultPlan`] is a pure, seeded schedule — the same spirit as
+//! `DelayModel` and `ChurnModel`: given the same seed and the same
+//! sequence of fault-point visits, the same faults fire, so a chaotic
+//! run is exactly replayable. The plan is committed once per process
+//! (CLI commit point, like telemetry/dispatch) into relaxed atomics;
+//! each named fault point consults [`enabled`] first, so the disabled
+//! path costs ONE relaxed atomic load — the same zero-cost contract the
+//! telemetry subsystem holds (asserted bit-exact in
+//! `tests/test_faults.rs`).
+//!
+//! Fault points (each with its own occurrence counter, so decisions are
+//! independent across points but deterministic within one):
+//!
+//! * [`checkpoint_fault`] — `CheckpointStore` tmp-create/write/sync/
+//!   rename failures, alternating a generic I/O error with ENOSPC;
+//! * [`sink_write_fault`] — `JsonlWriter` line-write failures (drives
+//!   the degraded-buffering path);
+//! * [`upload_drop`] — lock-free transport upload publications dropped
+//!   on the floor (the mailbox keeps its stale value; the run's
+//!   correctness must not depend on any single upload landing);
+//! * [`worker_panic_due`] — one worker panics at its next segment
+//!   boundary (fires once per process; folded into elastic membership
+//!   as a `fail` departure).
+
+use anyhow::{anyhow, bail, Result};
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// A replayable fault schedule: per-point rates in [0, 1] plus an
+/// optional worker whose thread panics at a segment boundary. The plan
+/// is pure data; all firing state lives in the process-global injector
+/// below.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Decision-stream seed; `None` derives one from the run seed at
+    /// the commit point, so a chaotic run replays under the same
+    /// `--seed` without extra flags.
+    pub seed: Option<u64>,
+    /// P(each checkpoint I/O op fails).
+    pub ckpt_rate: f64,
+    /// P(each sink line write fails).
+    pub sink_rate: f64,
+    /// P(each lock-free upload publication is dropped).
+    pub drop_rate: f64,
+    /// Worker id whose thread panics at its next segment boundary.
+    pub panic_worker: Option<usize>,
+}
+
+impl FaultPlan {
+    /// Does this plan inject anything at all? A configured-but-all-zero
+    /// plan is *inactive*: the runtime stays on the untouched fast path
+    /// (the zero-cost satellite's contract).
+    pub fn is_active(&self) -> bool {
+        self.ckpt_rate > 0.0
+            || self.sink_rate > 0.0
+            || self.drop_rate > 0.0
+            || self.panic_worker.is_some()
+    }
+
+    /// Parse a `--faults` CLI spec: comma-separated `key=value` pairs
+    /// from `ckpt`, `sink`, `drop` (rates), `panic` (worker id), and
+    /// `seed`, e.g. `ckpt=0.5,sink=0.2,panic=1,seed=7`.
+    pub fn from_spec(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--faults: expected key=value, got '{part}'"))?;
+            let (key, value) = (key.trim(), value.trim());
+            let rate = || -> Result<f64> {
+                let r: f64 =
+                    value.parse().map_err(|_| anyhow!("--faults {key}: bad rate '{value}'"))?;
+                if !(0.0..=1.0).contains(&r) {
+                    bail!("--faults {key}: rate {r} outside [0, 1]");
+                }
+                Ok(r)
+            };
+            match key {
+                "ckpt" => plan.ckpt_rate = rate()?,
+                "sink" => plan.sink_rate = rate()?,
+                "drop" => plan.drop_rate = rate()?,
+                "panic" => {
+                    plan.panic_worker = Some(
+                        value
+                            .parse()
+                            .map_err(|_| anyhow!("--faults panic: bad worker id '{value}'"))?,
+                    )
+                }
+                "seed" => {
+                    plan.seed = Some(
+                        value
+                            .parse()
+                            .map_err(|_| anyhow!("--faults seed: bad u64 '{value}'"))?,
+                    )
+                }
+                other => bail!("--faults: unknown key '{other}' (ckpt|sink|drop|panic|seed)"),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Process-global injector state. One relaxed bool gates everything; the
+// rest is only touched when a plan is active.
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SEED: AtomicU64 = AtomicU64::new(0);
+/// Rates travel as f64 bit patterns (atomics have no f64).
+static CKPT_RATE: AtomicU64 = AtomicU64::new(0);
+static SINK_RATE: AtomicU64 = AtomicU64::new(0);
+static DROP_RATE: AtomicU64 = AtomicU64::new(0);
+/// Per-point visit counters: the decision stream's position.
+static CKPT_OCC: AtomicU64 = AtomicU64::new(0);
+static SINK_OCC: AtomicU64 = AtomicU64::new(0);
+static DROP_OCC: AtomicU64 = AtomicU64::new(0);
+/// Total faults actually fired since `configure`.
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+/// Worker id doomed to panic (`u64::MAX` = none).
+static PANIC_WORKER: AtomicU64 = AtomicU64::new(u64::MAX);
+/// The panic fires once per process, not per segment.
+static PANIC_FIRED: AtomicBool = AtomicBool::new(false);
+
+/// Is any fault plan active? The ONLY cost on the disabled path.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Commit a plan to the process-global injector (CLI commit point,
+/// before any worker thread spawns — same discipline as
+/// `telemetry::configure`). `None` or an all-zero plan disables
+/// injection entirely. `fallback_seed` seeds the decision stream when
+/// the plan leaves `seed` unset (callers derive it from the run seed).
+pub fn configure(plan: Option<&FaultPlan>, fallback_seed: u64) {
+    let active = plan.map(FaultPlan::is_active).unwrap_or(false);
+    let plan = plan.cloned().unwrap_or_default();
+    SEED.store(plan.seed.unwrap_or(fallback_seed), Ordering::Relaxed);
+    CKPT_RATE.store(plan.ckpt_rate.to_bits(), Ordering::Relaxed);
+    SINK_RATE.store(plan.sink_rate.to_bits(), Ordering::Relaxed);
+    DROP_RATE.store(plan.drop_rate.to_bits(), Ordering::Relaxed);
+    PANIC_WORKER.store(
+        if active { plan.panic_worker.map(|w| w as u64).unwrap_or(u64::MAX) } else { u64::MAX },
+        Ordering::Relaxed,
+    );
+    CKPT_OCC.store(0, Ordering::Relaxed);
+    SINK_OCC.store(0, Ordering::Relaxed);
+    DROP_OCC.store(0, Ordering::Relaxed);
+    INJECTED.store(0, Ordering::Relaxed);
+    PANIC_FIRED.store(false, Ordering::Relaxed);
+    ENABLED.store(active, Ordering::Relaxed);
+}
+
+/// Faults fired since the last `configure` (folded into
+/// `Metrics::faults_injected` by the run drivers).
+pub fn injected_count() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// splitmix64: the standard 64-bit finalizer — a pure, stateless mix so
+/// the decision at visit `occ` of a point is a function of (seed, tag,
+/// occ) alone, independent of thread interleaving at *other* points.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Pure fault decision: does visit `occ` of point `tag` fire under
+/// `seed` at `rate`? Maps the mixed bits to [0, 1) with 53-bit
+/// precision, exactly like `Pcg64::next_f64`.
+pub fn decide(seed: u64, tag: u64, occ: u64, rate: f64) -> bool {
+    if rate <= 0.0 {
+        return false;
+    }
+    let z = splitmix64(seed ^ tag.wrapping_mul(0xA24BAED4963EE407) ^ occ);
+    ((z >> 11) as f64 / (1u64 << 53) as f64) < rate
+}
+
+/// FNV-1a over a point name — a stable per-point stream tag.
+fn tag_of(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h = (h ^ *b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn record_injection(point: &str) {
+    INJECTED.fetch_add(1, Ordering::Relaxed);
+    if crate::telemetry::enabled() {
+        crate::telemetry::counter(&format!("faults.{point}")).add(1);
+    }
+}
+
+/// Checkpoint I/O fault point, consulted before each store operation
+/// (`op` ∈ create/write/sync/rename). Alternates a generic I/O error
+/// with ENOSPC so retry paths face both shapes.
+pub fn checkpoint_fault(op: &str) -> Option<io::Error> {
+    if !enabled() {
+        return None;
+    }
+    let occ = CKPT_OCC.fetch_add(1, Ordering::Relaxed);
+    let rate = f64::from_bits(CKPT_RATE.load(Ordering::Relaxed));
+    let seed = SEED.load(Ordering::Relaxed);
+    if !decide(seed, tag_of("ckpt"), occ, rate) {
+        return None;
+    }
+    record_injection("ckpt");
+    Some(if splitmix64(seed ^ occ) & 1 == 0 {
+        io::Error::from_raw_os_error(28) // ENOSPC
+    } else {
+        io::Error::other(format!("injected fault: checkpoint {op}"))
+    })
+}
+
+/// Sink line-write fault point: `true` = this write fails.
+pub fn sink_write_fault() -> bool {
+    if !enabled() {
+        return false;
+    }
+    let occ = SINK_OCC.fetch_add(1, Ordering::Relaxed);
+    let rate = f64::from_bits(SINK_RATE.load(Ordering::Relaxed));
+    if decide(SEED.load(Ordering::Relaxed), tag_of("sink"), occ, rate) {
+        record_injection("sink");
+        return true;
+    }
+    false
+}
+
+/// Lock-free upload fault point: `true` = drop this publication.
+pub fn upload_drop() -> bool {
+    if !enabled() {
+        return false;
+    }
+    let occ = DROP_OCC.fetch_add(1, Ordering::Relaxed);
+    let rate = f64::from_bits(DROP_RATE.load(Ordering::Relaxed));
+    if decide(SEED.load(Ordering::Relaxed), tag_of("drop"), occ, rate) {
+        record_injection("drop");
+        return true;
+    }
+    false
+}
+
+/// Worker-panic fault point, consulted by each worker thread as it
+/// crosses a segment boundary. Fires exactly once per process, only for
+/// the doomed worker.
+pub fn worker_panic_due(worker: usize) -> bool {
+    if !enabled() {
+        return false;
+    }
+    if PANIC_WORKER.load(Ordering::Relaxed) != worker as u64 {
+        return false;
+    }
+    if PANIC_FIRED.swap(true, Ordering::Relaxed) {
+        return false;
+    }
+    record_injection("panic");
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decide_is_deterministic_and_rate_bounded() {
+        for occ in 0..64 {
+            assert_eq!(decide(7, tag_of("ckpt"), occ, 0.5), decide(7, tag_of("ckpt"), occ, 0.5));
+            assert!(!decide(7, tag_of("ckpt"), occ, 0.0), "rate 0 never fires");
+            assert!(decide(7, tag_of("ckpt"), occ, 1.0), "rate 1 always fires");
+        }
+        // Different seeds and different point tags give different streams.
+        let stream = |seed, tag: &str| -> Vec<bool> {
+            (0..256).map(|occ| decide(seed, tag_of(tag), occ, 0.5)).collect()
+        };
+        assert_ne!(stream(1, "ckpt"), stream(2, "ckpt"));
+        assert_ne!(stream(1, "ckpt"), stream(1, "sink"));
+    }
+
+    #[test]
+    fn decide_rate_tracks_frequency() {
+        let n = 10_000u64;
+        let fired = (0..n).filter(|&occ| decide(42, tag_of("sink"), occ, 0.25)).count();
+        let frac = fired as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "empirical rate {frac}");
+    }
+
+    #[test]
+    fn from_spec_parses_full_and_partial_specs() {
+        let p = FaultPlan::from_spec("ckpt=0.5,sink=0.2,drop=0.1,panic=1,seed=7").unwrap();
+        assert_eq!(
+            p,
+            FaultPlan {
+                seed: Some(7),
+                ckpt_rate: 0.5,
+                sink_rate: 0.2,
+                drop_rate: 0.1,
+                panic_worker: Some(1),
+            }
+        );
+        assert!(p.is_active());
+        let p = FaultPlan::from_spec("sink=1").unwrap();
+        assert_eq!(p.sink_rate, 1.0);
+        assert!(p.is_active());
+        let p = FaultPlan::from_spec("").unwrap();
+        assert_eq!(p, FaultPlan::default());
+        assert!(!p.is_active(), "empty spec injects nothing");
+    }
+
+    #[test]
+    fn from_spec_rejects_garbage() {
+        assert!(FaultPlan::from_spec("ckpt").is_err());
+        assert!(FaultPlan::from_spec("ckpt=2.0").is_err());
+        assert!(FaultPlan::from_spec("ckpt=-0.1").is_err());
+        assert!(FaultPlan::from_spec("ckpt=x").is_err());
+        assert!(FaultPlan::from_spec("panic=alpha").is_err());
+        assert!(FaultPlan::from_spec("bogus=1").is_err());
+    }
+
+    #[test]
+    fn zero_rate_plan_is_inactive() {
+        let p = FaultPlan { seed: Some(9), ..Default::default() };
+        assert!(!p.is_active(), "a seed alone injects nothing");
+        assert!(FaultPlan { ckpt_rate: 0.01, ..Default::default() }.is_active());
+        assert!(FaultPlan { panic_worker: Some(0), ..Default::default() }.is_active());
+    }
+}

@@ -44,6 +44,7 @@ pub mod coordinator;
 pub mod data;
 pub mod diagnostics;
 pub mod experiments;
+pub mod faults;
 pub mod math;
 pub mod optimizers;
 pub mod potentials;

@@ -33,26 +33,55 @@
 use super::{Frame, SampleSink};
 use crate::coordinator::Metrics;
 use crate::util::json::Emitter;
+use std::collections::VecDeque;
 use std::fs::File;
 use std::io::{self, BufWriter, Write};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Stream format version, bumped on schema changes.
 pub const STREAM_VERSION: u64 = 3;
 
+/// Cap on lines buffered in memory while the writer is degraded; beyond
+/// this, new lines are dropped *and counted* — never silently.
+const PENDING_CAP: usize = 1024;
+
+/// The lock-protected write state: the file plus the degraded-mode
+/// buffer. Keeping both under ONE mutex preserves line order between
+/// writes that hit the file and writes that buffer.
+struct Inner {
+    out: BufWriter<File>,
+    /// Lines held in memory while degraded, drained FIFO on recovery.
+    pending: VecDeque<String>,
+}
+
 /// Line-atomic writer shared by every frame's [`JsonlSink`].
 ///
-/// I/O failure policy: the first write error logs once and latches the
-/// writer off — samplers must never die because a disk filled mid-run.
+/// I/O failure policy (DESIGN.md §12): a write error *degrades* the
+/// writer instead of killing the fleet — subsequent lines buffer in
+/// memory (bounded; overflow is dropped and counted) and every
+/// [`flush`](Self::flush) retries the drain, so a transient failure
+/// loses nothing and a permanent one loses a bounded, accounted tail.
+/// A panic elsewhere never cascades either: a poisoned lock is
+/// recovered, not `unwrap()`ed.
 pub struct JsonlWriter {
-    out: Mutex<BufWriter<File>>,
+    out: Mutex<Inner>,
+    /// Terminal off-switch (unrecoverable conditions / tests): all
+    /// subsequent lines are discarded and counted by callers.
     failed: AtomicBool,
+    /// In degraded mode: lines buffer until a recovery drain succeeds.
+    degraded: AtomicBool,
+    /// Times the writer *entered* degraded mode (→ `sink_degraded`).
+    degraded_events: AtomicU64,
+    /// Lines dropped because the degraded buffer overflowed.
+    dropped_lines: AtomicU64,
     /// The stream file, kept for checkpoint offset bookkeeping.
     path: std::path::PathBuf,
     /// Logical bytes appended so far (checkpoints record this so resume
-    /// can truncate post-cut events, DESIGN.md §8).
+    /// can truncate post-cut events, DESIGN.md §8). Advances only when a
+    /// line durably reaches the file — buffered lines don't count until
+    /// the recovery drain lands them.
     written: AtomicU64,
 }
 
@@ -63,12 +92,30 @@ impl JsonlWriter {
                 std::fs::create_dir_all(parent)?;
             }
         }
-        Ok(JsonlWriter {
-            out: Mutex::new(BufWriter::new(File::create(path)?)),
+        Ok(Self::from_file(File::create(path)?, path, 0))
+    }
+
+    fn from_file(f: File, path: &Path, offset: u64) -> JsonlWriter {
+        JsonlWriter {
+            out: Mutex::new(Inner { out: BufWriter::new(f), pending: VecDeque::new() }),
             failed: AtomicBool::new(false),
+            degraded: AtomicBool::new(false),
+            degraded_events: AtomicU64::new(0),
+            dropped_lines: AtomicU64::new(0),
             path: path.to_path_buf(),
-            written: AtomicU64::new(0),
-        })
+            written: AtomicU64::new(offset),
+        }
+    }
+
+    /// Lock the write state, recovering from a poisoned lock: a worker
+    /// that panicked mid-write corrupts at most its own line, and the
+    /// surviving fleet must keep streaming (the poisoned-mutex cascade
+    /// this used to cause took down every thread).
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        match self.out.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        }
     }
 
     /// Reopen an existing stream for a resumed run: truncate to the
@@ -89,12 +136,7 @@ impl JsonlWriter {
         f.set_len(offset)?;
         drop(f);
         let f = std::fs::OpenOptions::new().append(true).open(path)?;
-        Ok(JsonlWriter {
-            out: Mutex::new(BufWriter::new(f)),
-            failed: AtomicBool::new(false),
-            path: path.to_path_buf(),
-            written: AtomicU64::new(offset),
-        })
+        Ok(Self::from_file(f, path, offset))
     }
 
     pub fn path(&self) -> &Path {
@@ -108,23 +150,88 @@ impl JsonlWriter {
 
     /// Append one complete event line (the emitter escapes embedded
     /// newlines, so `text` never spans lines). Returns `false` when the
-    /// event was discarded because the writer latched off on an earlier
-    /// I/O error — callers count those toward their `dropped` totals so
-    /// a mid-run disk failure is never silent.
+    /// event was discarded — either because the writer latched off
+    /// terminally, or because the degraded-mode buffer overflowed —
+    /// callers count those toward their `dropped` totals so a mid-run
+    /// disk failure is never silent.
     pub fn line(&self, text: &str) -> bool {
         if self.failed.load(Ordering::Relaxed) {
             return false;
         }
-        let mut out = self.out.lock().unwrap();
-        let wrote = out.write_all(text.as_bytes()).and_then(|_| out.write_all(b"\n"));
-        if wrote.is_err() {
-            if !self.failed.swap(true, Ordering::Relaxed) {
-                crate::log_warn!("jsonl sink: write failed; dropping further stream events");
+        let mut inner = self.lock();
+        if self.degraded.load(Ordering::Relaxed) {
+            // Everything after a write failure buffers until a recovery
+            // drain succeeds — writing past buffered lines would reorder
+            // the stream.
+            return self.buffer_line(&mut inner, text);
+        }
+        let wrote = if crate::faults::enabled() && crate::faults::sink_write_fault() {
+            Err(io::Error::other("injected fault: sink write"))
+        } else {
+            inner.out.write_all(text.as_bytes()).and_then(|_| inner.out.write_all(b"\n"))
+        };
+        match wrote {
+            Ok(()) => {
+                self.written.fetch_add(text.len() as u64 + 1, Ordering::Relaxed);
+                true
             }
+            Err(e) => {
+                self.degraded.store(true, Ordering::Relaxed);
+                self.degraded_events.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!(
+                    "jsonl sink: write failed ({e}); buffering events in memory until a \
+                     flush succeeds"
+                );
+                self.buffer_line(&mut inner, text)
+            }
+        }
+    }
+
+    /// Hold `text` in the degraded buffer (bounded; overflow drops and
+    /// counts). Returns whether the line was retained.
+    fn buffer_line(&self, inner: &mut Inner, text: &str) -> bool {
+        if inner.pending.len() >= PENDING_CAP {
+            self.dropped_lines.fetch_add(1, Ordering::Relaxed);
             return false;
         }
-        self.written.fetch_add(text.len() as u64 + 1, Ordering::Relaxed);
+        inner.pending.push_back(text.to_string());
         true
+    }
+
+    /// Attempt to leave degraded mode: replay the buffered lines in
+    /// order. Stops at the first failure (stays degraded); on success
+    /// the writer resumes direct writes.
+    fn try_recover(&self, inner: &mut Inner) {
+        if !self.degraded.load(Ordering::Relaxed) {
+            return;
+        }
+        while let Some(text) = inner.pending.front() {
+            let wrote = if crate::faults::enabled() && crate::faults::sink_write_fault() {
+                Err(io::Error::other("injected fault: sink write"))
+            } else {
+                inner.out.write_all(text.as_bytes()).and_then(|_| inner.out.write_all(b"\n"))
+            };
+            match wrote {
+                Ok(()) => {
+                    self.written.fetch_add(text.len() as u64 + 1, Ordering::Relaxed);
+                    inner.pending.pop_front();
+                }
+                Err(_) => return,
+            }
+        }
+        self.degraded.store(false, Ordering::Relaxed);
+        crate::log_warn!("jsonl sink: recovered; buffered events drained to disk");
+    }
+
+    /// Times the writer entered degraded mode (folds into the
+    /// `sink_degraded` metric).
+    pub fn degraded_events(&self) -> u64 {
+        self.degraded_events.load(Ordering::Relaxed)
+    }
+
+    /// Lines lost to degraded-buffer overflow.
+    pub fn dropped_lines(&self) -> u64 {
+        self.dropped_lines.load(Ordering::Relaxed)
     }
 
     /// Run-header event. The seed travels as a string: our JSON numbers
@@ -167,6 +274,20 @@ impl JsonlWriter {
         for (stage, count, ns) in &m.stage_totals {
             e.key(&format!("stage_{stage}_count")).num(*count as f64);
             e.key(&format!("stage_{stage}_ns")).num(*ns as f64);
+        }
+        // Schema-additive robustness counters (DESIGN.md §12): absent
+        // when zero, so fault-free streams stay byte-identical.
+        if m.faults_injected > 0 {
+            e.key("faults_injected").num(m.faults_injected as f64);
+        }
+        if m.ckpt_retries > 0 {
+            e.key("ckpt_retries").num(m.ckpt_retries as f64);
+        }
+        if m.sink_degraded > 0 {
+            e.key("sink_degraded").num(m.sink_degraded as f64);
+        }
+        if m.worker_panics > 0 {
+            e.key("worker_panics").num(m.worker_panics as f64);
         }
         e.key("elapsed").num(elapsed);
         e.end_obj();
@@ -212,14 +333,31 @@ impl JsonlWriter {
 
     pub fn flush(&self) {
         let _span = crate::telemetry::span(crate::telemetry::Stage::SinkFlush);
-        if let Ok(mut out) = self.out.lock() {
-            let _ = out.flush();
-        }
+        let mut inner = self.lock();
+        self.try_recover(&mut inner);
+        let _ = inner.out.flush();
     }
 
     #[cfg(test)]
     pub(crate) fn latch_failed_for_tests(&self) {
         self.failed.store(true, Ordering::Relaxed);
+    }
+
+    /// Test hook: panic while holding the writer lock, poisoning it the
+    /// way a dying worker mid-write would.
+    #[cfg(test)]
+    pub(crate) fn panic_while_locked_for_tests(&self) {
+        let _guard = self.out.lock().unwrap();
+        panic!("induced panic while holding the writer lock");
+    }
+
+    /// Test hook: force degraded mode without an I/O error, to exercise
+    /// the buffer/drain path deterministically.
+    #[cfg(test)]
+    pub(crate) fn enter_degraded_for_tests(&self) {
+        if !self.degraded.swap(true, Ordering::Relaxed) {
+            self.degraded_events.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -434,6 +572,102 @@ mod tests {
         })
         .unwrap();
         assert_eq!(got, Some(seed));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_instead_of_cascading() {
+        // The PR-8 satellite fix: one worker dying mid-write used to
+        // poison the shared mutex, and the `.unwrap()` in `line()` then
+        // panicked every surviving thread. Now the guard is recovered
+        // and the fleet keeps streaming.
+        let path = tmp("poison");
+        let writer = Arc::new(JsonlWriter::create(&path).unwrap());
+        let poisoner = writer.clone();
+        let died = std::thread::spawn(move || poisoner.panic_while_locked_for_tests()).join();
+        assert!(died.is_err(), "the poisoning thread must have panicked");
+        let mut sink = JsonlSink::new(writer.clone(), Frame::Chain(0));
+        sink.record(0.5, &[1.0, 2.0]);
+        writer.flush();
+        assert_eq!(sink.dropped(), 0, "survivors must not drop events");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1, "{text}");
+        let v = Json::parse(lines[0]).unwrap();
+        assert_eq!(v.get("ev").unwrap().as_str(), Some("sample"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn degraded_writer_buffers_then_drains_in_order() {
+        let path = tmp("degraded");
+        let writer = Arc::new(JsonlWriter::create(&path).unwrap());
+        let mut sink = JsonlSink::new(writer.clone(), Frame::Chain(0));
+        sink.record(0.0, &[0.0]);
+        writer.flush();
+        let before = writer.position();
+        // Degrade: subsequent events buffer in memory, and `position()`
+        // (what a checkpoint would record) must NOT advance — those
+        // bytes aren't durable yet.
+        writer.enter_degraded_for_tests();
+        sink.record(1.0, &[1.0]);
+        sink.record(2.0, &[2.0]);
+        assert_eq!(writer.position(), before, "buffered lines are not durable");
+        assert_eq!(writer.degraded_events(), 1);
+        assert_eq!(sink.dropped(), 0, "buffered ≠ dropped");
+        // Recovery drain on flush: the buffered tail lands in order.
+        writer.flush();
+        assert!(writer.position() > before);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let ts: Vec<f64> = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap().get("t").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(ts, vec![0.0, 1.0, 2.0], "drain preserves event order:\n{text}");
+        assert_eq!(writer.position(), std::fs::metadata(&path).unwrap().len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn degraded_buffer_overflow_drops_and_counts() {
+        let path = tmp("overflow");
+        let writer = Arc::new(JsonlWriter::create(&path).unwrap());
+        writer.enter_degraded_for_tests();
+        let mut sink = JsonlSink::new(writer.clone(), Frame::Chain(0));
+        for i in 0..(PENDING_CAP + 7) {
+            sink.record(i as f64, &[0.0]);
+        }
+        assert_eq!(writer.dropped_lines(), 7);
+        assert_eq!(sink.dropped(), 7, "overflow drops count toward the frame's total");
+        writer.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), PENDING_CAP, "the capped buffer drained");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn metrics_event_emits_fault_keys_only_when_nonzero() {
+        let path = tmp("faultkeys");
+        let writer = Arc::new(JsonlWriter::create(&path).unwrap());
+        writer.metrics(&Metrics::default(), 0.5);
+        let m = Metrics {
+            faults_injected: 3,
+            ckpt_retries: 2,
+            sink_degraded: 1,
+            worker_panics: 1,
+            ..Default::default()
+        };
+        writer.metrics(&m, 0.5);
+        writer.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        for key in ["faults_injected", "ckpt_retries", "sink_degraded", "worker_panics"] {
+            assert!(!lines[0].contains(key), "zero counters stay absent: {}", lines[0]);
+            assert!(lines[1].contains(key), "nonzero counters appear: {}", lines[1]);
+        }
+        let v = Json::parse(lines[1]).unwrap();
+        assert_eq!(v.get("faults_injected").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("worker_panics").unwrap().as_usize(), Some(1));
         std::fs::remove_file(&path).ok();
     }
 

@@ -226,6 +226,14 @@ impl SinkHub {
         if let Some(diag) = self.diags.last() {
             result.online_diag = Some(diag.lock().unwrap().summary());
         }
+        // Give degraded writers a recovery chance *before* the metrics
+        // event, so the degraded count folded below is final and the
+        // metrics line itself lands on disk (or in the drain buffer)
+        // last, as usual.
+        for w in &self.writers {
+            w.flush();
+            result.metrics.sink_degraded += w.degraded_events();
+        }
         for w in &self.writers {
             w.metrics(&result.metrics, result.elapsed);
             w.flush();

@@ -116,6 +116,8 @@ fn theta_arr(v: &Json) -> Result<Vec<f32>> {
 
 /// Incrementally parse a JSONL run stream, invoking `on_event` per
 /// event. Memory is bounded by one line regardless of stream length.
+/// Every rejection — malformed JSON *or* well-formed JSON that is not a
+/// valid event — names the 1-based line it came from.
 pub fn scan_stream<R: Read>(
     mut src: R,
     mut on_event: impl FnMut(RunEvent) -> Result<()>,
@@ -129,13 +131,114 @@ pub fn scan_stream<R: Read>(
         }
         reader.feed(&chunk[..n]);
         while let Some(value) = reader.next_value() {
-            on_event(RunEvent::from_json(&value?)?)?;
+            let ev = RunEvent::from_json(&value?)
+                .with_context(|| format!("line {}", reader.line()))?;
+            on_event(ev)?;
         }
     }
     if let Some(value) = reader.finish() {
-        on_event(RunEvent::from_json(&value?)?)?;
+        let ev = RunEvent::from_json(&value?)
+            .with_context(|| format!("line {}", reader.line()))?;
+        on_event(ev)?;
     }
     Ok(())
+}
+
+/// What `ecsgmcmc fsck` reports for a run stream: how much of the file
+/// is an intact event prefix, and where the salvage point is. A damaged
+/// stream can be recovered by truncating it to `bytes_salvaged` bytes
+/// (`head -c`), after which it replays cleanly.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SalvageReport {
+    /// Events decoded from the intact prefix.
+    pub events: u64,
+    /// Distinct chains with at least one recovered sample.
+    pub chains: usize,
+    /// Sample events recovered.
+    pub samples: u64,
+    /// Total file size (bytes).
+    pub bytes_total: u64,
+    /// Length of the last intact prefix: every byte before this decodes,
+    /// every byte after is damage (or a clean file's own length).
+    pub bytes_salvaged: u64,
+    /// Whether any bytes had to be discarded.
+    pub truncated: bool,
+    /// First rejection, naming its line; `None` for an intact stream.
+    pub error: Option<String>,
+}
+
+/// Scan a stream file leniently: decode events until the first damaged
+/// line, then report the intact prefix instead of failing. The strict
+/// readers ([`replay_file`], [`stream_diag`]) stay strict; this is the
+/// recovery path (`ecsgmcmc fsck`, and `replay` on truncated streams).
+pub fn salvage_file(path: &Path) -> Result<SalvageReport> {
+    let file = File::open(path).with_context(|| format!("opening stream {path:?}"))?;
+    let bytes_total = file.metadata().with_context(|| format!("stat {path:?}"))?.len();
+    salvage_reader(file, bytes_total)
+}
+
+pub fn salvage_reader<R: Read>(mut src: R, bytes_total: u64) -> Result<SalvageReport> {
+    let mut reader = StreamReader::new();
+    let mut chunk = [0u8; 64 * 1024];
+    let mut report = SalvageReport { bytes_total, ..Default::default() };
+    let mut chains = std::collections::BTreeSet::new();
+    let mut fed = 0u64;
+    'outer: loop {
+        let n = src.read(&mut chunk).context("reading stream")?;
+        if n == 0 {
+            break;
+        }
+        fed += n as u64;
+        reader.feed(&chunk[..n]);
+        loop {
+            let value = match reader.next_value() {
+                None => break,
+                Some(Ok(v)) => v,
+                Some(Err(e)) => {
+                    report.error = Some(e.msg);
+                    break 'outer;
+                }
+            };
+            match RunEvent::from_json(&value) {
+                Ok(ev) => {
+                    report.events += 1;
+                    if let RunEvent::Sample { chain, .. } = &ev {
+                        chains.insert(*chain);
+                        report.samples += 1;
+                    }
+                    // End of the last intact line (blank lines between
+                    // events are part of the intact prefix too).
+                    report.bytes_salvaged = fed - reader.buffered() as u64;
+                }
+                Err(e) => {
+                    report.error = Some(format!("line {}: {e:#}", reader.line()));
+                    break 'outer;
+                }
+            }
+        }
+    }
+    if report.error.is_none() {
+        // A valid final line missing only its newline is recoverable; a
+        // half-written one is the torn tail fsck exists to find.
+        match reader.finish() {
+            None => report.bytes_salvaged = fed,
+            Some(Ok(value)) => match RunEvent::from_json(&value) {
+                Ok(ev) => {
+                    report.events += 1;
+                    if let RunEvent::Sample { chain, .. } = &ev {
+                        chains.insert(*chain);
+                        report.samples += 1;
+                    }
+                    report.bytes_salvaged = fed;
+                }
+                Err(e) => report.error = Some(format!("line {}: {e:#}", reader.line())),
+            },
+            Some(Err(e)) => report.error = Some(e.msg),
+        }
+    }
+    report.chains = chains.len();
+    report.truncated = report.error.is_some() || report.bytes_salvaged < report.bytes_total;
+    Ok(report)
 }
 
 /// Reconstruct a `RunResult` from a stream file: per-chain samples and
@@ -315,5 +418,69 @@ mod tests {
         let bad = "{\"ev\":\"sample\",\"chain\":0,\"t\":1,\"theta\":5}\n";
         let err = replay_reader(bad.as_bytes()).unwrap_err();
         assert!(format!("{err:#}").contains("theta"), "{err:#}");
+    }
+
+    #[test]
+    fn schema_rejections_name_their_line() {
+        // Well-formed JSON that is not a valid event must still say
+        // which line it sat on (satellite: corrupt-stream forensics).
+        let bad = "{\"ev\":\"meta\",\"version\":1}\n{\"ev\":\"sample\",\"t\":1}\n";
+        let err = replay_reader(bad.as_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+    }
+
+    #[test]
+    fn salvage_reports_intact_stream_as_fully_recovered() {
+        let r = salvage_reader(STREAM.as_bytes(), STREAM.len() as u64).unwrap();
+        assert_eq!(r.events, 7);
+        assert_eq!(r.chains, 2);
+        assert_eq!(r.samples, 3);
+        assert_eq!(r.bytes_salvaged, STREAM.len() as u64);
+        assert!(!r.truncated);
+        assert!(r.error.is_none());
+    }
+
+    #[test]
+    fn salvage_finds_last_intact_prefix_of_torn_stream() {
+        // Tear the stream mid-way through its final line, like a crash
+        // mid-write would.
+        let cut = STREAM.len() - 40;
+        let torn = &STREAM.as_bytes()[..cut];
+        let r = salvage_reader(torn, torn.len() as u64).unwrap();
+        // Everything before the torn line is intact…
+        let intact_end = STREAM[..cut].rfind('\n').unwrap() + 1;
+        assert_eq!(r.bytes_salvaged, intact_end as u64);
+        assert_eq!(r.events, 6);
+        assert_eq!(r.samples, 3);
+        assert!(r.truncated);
+        let err = r.error.unwrap();
+        assert!(err.contains("line "), "{err}");
+        // …and truncating to the salvage point replays cleanly.
+        assert!(replay_reader(&STREAM.as_bytes()[..intact_end]).is_ok());
+    }
+
+    #[test]
+    fn salvage_stops_at_first_damaged_line_mid_stream() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"{\"ev\":\"meta\",\"version\":1,\"scheme\":\"ec\"}\n");
+        let good_end = bytes.len() as u64;
+        bytes.extend_from_slice(b"{\"ev\":\"sample\",\"chain\":0,\xFF\xFE garbage\n");
+        bytes.extend_from_slice(b"{\"ev\":\"center\",\"t\":1,\"theta\":[0]}\n");
+        let total = bytes.len() as u64;
+        let r = salvage_reader(&bytes[..], total).unwrap();
+        assert_eq!(r.events, 1);
+        assert_eq!(r.bytes_salvaged, good_end);
+        assert!(r.truncated);
+        assert!(r.error.unwrap().contains("line 2"));
+    }
+
+    #[test]
+    fn salvage_recovers_valid_final_line_missing_its_newline() {
+        let s = "{\"ev\":\"meta\",\"version\":1}\n{\"ev\":\"center\",\"t\":1,\"theta\":[0]}";
+        let r = salvage_reader(s.as_bytes(), s.len() as u64).unwrap();
+        assert_eq!(r.events, 2);
+        assert_eq!(r.bytes_salvaged, s.len() as u64);
+        assert!(!r.truncated);
+        assert!(r.error.is_none());
     }
 }

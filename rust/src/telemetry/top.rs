@@ -48,7 +48,8 @@ impl TopState {
             }
             RunEvent::U { chain, step, t, .. } => {
                 let c = self.chains.entry(*chain).or_default();
-                c.steps = c.steps.max(*step + 1);
+                // Saturating: a corrupt stream can carry step = usize::MAX.
+                c.steps = c.steps.max(step.saturating_add(1));
                 c.last_t = c.last_t.max(*t);
             }
             RunEvent::Sample { chain, theta, t } => {
@@ -191,7 +192,8 @@ impl StreamTail {
             self.reader.feed(&chunk[..n]);
             while let Some(value) = self.reader.next_value() {
                 let raw = value?;
-                let ev = RunEvent::from_json(&raw)?;
+                let ev = RunEvent::from_json(&raw)
+                    .with_context(|| format!("line {}", self.reader.line()))?;
                 state.fold(&ev, &raw);
                 folded += 1;
             }

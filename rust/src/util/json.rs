@@ -89,7 +89,7 @@ impl Json {
 
     /// Parse a JSON document. Errors carry a byte offset for debugging.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -357,8 +357,14 @@ impl Emitter {
 /// boundaries parse once their closing newline arrives; blank lines are
 /// skipped; a final unterminated line is recovered by [`finish`].
 ///
+/// A line whose newline has not arrived by the time [`DEFAULT_MAX_LINE`]
+/// bytes are buffered is abandoned: the reader reports one error naming
+/// the line, drops what it buffered, and discards until the next newline
+/// — so a corrupt or adversarial stream (a missing newline splicing two
+/// records, a multi-gigabyte "line") cannot grow memory without bound.
+///
 /// [`finish`]: StreamReader::finish
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct StreamReader {
     buf: Vec<u8>,
     /// Consumed prefix of `buf`; compacted once per [`feed`], not per
@@ -368,11 +374,30 @@ pub struct StreamReader {
     pos: usize,
     /// Lines consumed so far (1-based in error messages).
     line: usize,
+    /// Buffered-bytes cap for a single unterminated line.
+    max_line: usize,
+    /// An overlong line was abandoned; discard until the next newline.
+    skipping: bool,
+}
+
+/// Default single-line cap (64 MiB): far above any record the sink emits,
+/// far below what would threaten the process.
+pub const DEFAULT_MAX_LINE: usize = 64 << 20;
+
+impl Default for StreamReader {
+    fn default() -> StreamReader {
+        StreamReader::new()
+    }
 }
 
 impl StreamReader {
     pub fn new() -> StreamReader {
-        StreamReader::default()
+        StreamReader::with_max_line(DEFAULT_MAX_LINE)
+    }
+
+    /// Reader with a custom single-line byte cap (tests use small caps).
+    pub fn with_max_line(max_line: usize) -> StreamReader {
+        StreamReader { buf: Vec::new(), pos: 0, line: 0, max_line, skipping: false }
     }
 
     pub fn feed(&mut self, bytes: &[u8]) {
@@ -388,10 +413,46 @@ impl StreamReader {
         self.buf.len() - self.pos
     }
 
+    /// Lines consumed so far (the 1-based number of the last line pulled).
+    pub fn line(&self) -> usize {
+        self.line
+    }
+
     /// Next complete value, if a full line has been fed.
     pub fn next_value(&mut self) -> Option<Result<Json, JsonError>> {
         loop {
-            let rel = self.buf[self.pos..].iter().position(|&b| b == b'\n')?;
+            if self.skipping {
+                // Discard the remainder of an abandoned overlong line
+                // (already reported and counted) without buffering it.
+                match self.buf[self.pos..].iter().position(|&b| b == b'\n') {
+                    Some(rel) => {
+                        self.pos += rel + 1;
+                        self.skipping = false;
+                    }
+                    None => {
+                        self.pos = self.buf.len();
+                        return None;
+                    }
+                }
+            }
+            let rel = match self.buf[self.pos..].iter().position(|&b| b == b'\n') {
+                Some(rel) => rel,
+                None => {
+                    if self.buffered() > self.max_line {
+                        self.line += 1;
+                        self.pos = self.buf.len();
+                        self.skipping = true;
+                        return Some(Err(JsonError {
+                            msg: format!(
+                                "line {}: line exceeds {} bytes without a newline; skipping",
+                                self.line, self.max_line
+                            ),
+                            offset: 0,
+                        }));
+                    }
+                    return None;
+                }
+            };
             let nl = self.pos + rel;
             self.line += 1;
             let parsed = {
@@ -413,6 +474,12 @@ impl StreamReader {
     pub fn finish(&mut self) -> Option<Result<Json, JsonError>> {
         let buf = std::mem::take(&mut self.buf);
         let pos = std::mem::take(&mut self.pos);
+        if self.skipping {
+            // The tail is the remainder of an already-reported overlong
+            // line; there is nothing recoverable in it.
+            self.skipping = false;
+            return None;
+        }
         let text = trim_ascii_ws(&buf[pos..]);
         if text.is_empty() {
             return None;
@@ -465,9 +532,17 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Containers deeper than this are rejected instead of recursing further:
+/// `value → array → value → …` descends one stack frame per level, so an
+/// adversarial `[[[[…` would otherwise overflow the stack long before it
+/// exhausts memory. 128 is far beyond any document this crate emits.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting, bounded by [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -517,12 +592,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -534,6 +619,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -543,10 +629,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -563,6 +651,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(map));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -924,6 +1013,54 @@ mod tests {
         // The reader keeps going after an error line.
         r.feed(b"[4]\n");
         assert_eq!(r.next_value().unwrap().unwrap(), Json::parse("[4]").unwrap());
+    }
+
+    #[test]
+    fn parser_rejects_pathological_nesting_without_overflowing() {
+        // Depth within the limit parses fine…
+        let ok = format!("{}{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&ok).is_ok());
+        // …depth beyond it is an error, not a stack overflow. 100k open
+        // brackets would blow the stack at one frame per level.
+        for bad in
+            ["[".repeat(100_000), format!("{}1{}", "[".repeat(129), "]".repeat(129))]
+        {
+            let err = Json::parse(&bad).unwrap_err();
+            assert!(err.msg.contains("nesting too deep"), "{err}");
+        }
+        let deep_obj = format!("{}1{}", "{\"k\":".repeat(200), "}".repeat(200));
+        assert!(Json::parse(&deep_obj).unwrap_err().msg.contains("nesting too deep"));
+    }
+
+    #[test]
+    fn stream_reader_abandons_overlong_lines_and_recovers() {
+        let mut r = StreamReader::with_max_line(64);
+        r.feed(b"{\"ok\":1}\n");
+        assert!(r.next_value().unwrap().is_ok());
+        // An unterminated line grows past the cap: one error naming the
+        // line, buffered bytes released, remainder discarded.
+        r.feed(&[b'a'; 100]);
+        let err = r.next_value().unwrap().unwrap_err();
+        assert!(err.msg.contains("line 2"), "{err}");
+        assert!(err.msg.contains("exceeds 64 bytes"), "{err}");
+        assert_eq!(r.buffered(), 0);
+        r.feed(&[b'a'; 300]); // still the same abandoned line
+        assert!(r.next_value().is_none());
+        assert_eq!(r.buffered(), 0, "skip mode must not buffer");
+        // The newline ends skip mode; subsequent lines parse normally.
+        r.feed(b"aaa\n[7]\n");
+        assert_eq!(r.next_value().unwrap().unwrap(), Json::parse("[7]").unwrap());
+        assert_eq!(r.line(), 3);
+        assert!(r.finish().is_none());
+    }
+
+    #[test]
+    fn stream_reader_finish_discards_abandoned_tail() {
+        let mut r = StreamReader::with_max_line(16);
+        r.feed(&[b'x'; 32]);
+        assert!(r.next_value().unwrap().is_err());
+        r.feed(&[b'x'; 8]); // tail of the abandoned line, never terminated
+        assert!(r.finish().is_none());
     }
 
     #[test]

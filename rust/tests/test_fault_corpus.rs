@@ -1,0 +1,391 @@
+//! Seeded corpus adversary for every untrusted-input surface
+//! (DESIGN.md §12): real stream and checkpoint artifacts are generated
+//! in-test, then mutated ≥ 10,000 ways — truncation at every byte
+//! offset, random bit flips, duplicated/reordered/spliced lines,
+//! overlong numbers, pathological nesting, invalid UTF-8 — and fed to
+//! the strict readers (`replay_reader`, `stream_diag`, `Snapshot::
+//! parse`), the lenient salvager (`salvage_reader`), and the `top` fold.
+//!
+//! The contract under mutation:
+//!
+//! * **zero panics** on any surface (every mutant runs under
+//!   `catch_unwind`);
+//! * the salvager never errors on byte damage — it reports the intact
+//!   prefix instead, and the prefix never exceeds the input;
+//! * strict-reader rejections of stream damage name the 1-based line.
+//!
+//! Everything is seeded (PCG64), so a failure names the mutant and
+//! replays exactly.
+
+use ecsgmcmc::checkpoint::{CheckpointPolicy, Snapshot};
+use ecsgmcmc::coordinator::ec::{run_ec, EcCheckpoint};
+use ecsgmcmc::coordinator::engine::{NativeEngine, StepKind, WorkerEngine};
+use ecsgmcmc::coordinator::{EcConfig, RunOptions, TransportKind};
+use ecsgmcmc::math::rng::Pcg64;
+use ecsgmcmc::potentials::gaussian::GaussianPotential;
+use ecsgmcmc::samplers::SghmcParams;
+use ecsgmcmc::sink::replay::{replay_reader, salvage_reader, stream_diag, RunEvent};
+use ecsgmcmc::sink::SinkSpec;
+use ecsgmcmc::telemetry::top::TopState;
+use ecsgmcmc::util::json::StreamReader;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ecsgmcmc-corpus-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn engines(n: usize, params: SghmcParams) -> Vec<Box<dyn WorkerEngine>> {
+    (0..n)
+        .map(|_| {
+            Box::new(NativeEngine::new(
+                Arc::new(GaussianPotential::fig1()),
+                params,
+                StepKind::Sghmc,
+            )) as Box<dyn WorkerEngine>
+        })
+        .collect()
+}
+
+/// A real run stream — the corpus substrate for the stream surfaces.
+fn stream_artifact() -> Vec<u8> {
+    let dir = tmp("stream");
+    let stream = dir.join("run.jsonl");
+    let cfg = EcConfig {
+        workers: 2,
+        alpha: 1.0,
+        sync_every: 2,
+        steps: 120,
+        transport: TransportKind::Deterministic,
+        opts: RunOptions {
+            thin: 1,
+            log_every: 20,
+            sink: SinkSpec::Jsonl { path: stream.clone() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: 0.05, ..Default::default() };
+    run_ec(&cfg, params, engines(2, params), 5);
+    let bytes = std::fs::read(&stream).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert!(bytes.len() >= 4096, "stream artifact too small: {} bytes", bytes.len());
+    bytes
+}
+
+/// A real checkpoint file — the corpus substrate for `Snapshot::parse`.
+fn checkpoint_artifact() -> String {
+    let dir = tmp("ckpt");
+    let cfg = EcConfig {
+        workers: 2,
+        alpha: 1.0,
+        sync_every: 2,
+        steps: 80,
+        transport: TransportKind::Deterministic,
+        checkpoint: Some(EcCheckpoint {
+            dir: dir.join("ckpt"),
+            policy: CheckpointPolicy { every_rounds: 10, every_secs: None, keep: 100 },
+        }),
+        opts: RunOptions { thin: 1, log_every: 20, ..Default::default() },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: 0.05, ..Default::default() };
+    run_ec(&cfg, params, engines(2, params), 8);
+    let mut snaps: Vec<PathBuf> =
+        std::fs::read_dir(dir.join("ckpt")).unwrap().flatten().map(|e| e.path()).collect();
+    snaps.sort();
+    let text = std::fs::read_to_string(snaps.first().expect("a snapshot exists")).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert!(text.len() >= 1024, "checkpoint artifact too small: {} bytes", text.len());
+    text
+}
+
+/// Run one mutant through every stream surface. Returns the number of
+/// surface exercises. `id` names the mutant in failure messages.
+fn hammer_stream(bytes: &[u8], id: &str) -> u64 {
+    // Lenient surface: the salvager never errors on byte damage, never
+    // claims more than it was fed, and names the line when it stops.
+    let report = salvage_reader(bytes, bytes.len() as u64)
+        .unwrap_or_else(|e| panic!("{id}: salvage errored on in-memory bytes: {e:#}"));
+    assert!(
+        report.bytes_salvaged <= bytes.len() as u64,
+        "{id}: salvaged {} of {} bytes",
+        report.bytes_salvaged,
+        bytes.len()
+    );
+    assert_eq!(
+        report.truncated,
+        report.error.is_some() || report.bytes_salvaged < report.bytes_total,
+        "{id}: inconsistent truncated flag: {report:?}"
+    );
+    if let Some(err) = &report.error {
+        assert!(err.contains("line "), "{id}: salvage error lacks a line number: {err}");
+    }
+
+    // Strict surface: replay either succeeds or rejects naming the line.
+    let replay = catch_unwind(AssertUnwindSafe(|| replay_reader(bytes)))
+        .unwrap_or_else(|_| panic!("{id}: replay_reader panicked"));
+    if let Err(e) = replay {
+        let msg = format!("{e:#}");
+        assert!(msg.contains("line "), "{id}: replay rejection lacks a line number: {msg}");
+    }
+
+    // Diagnostics surface: same contract as replay.
+    let diag = catch_unwind(AssertUnwindSafe(|| stream_diag(bytes)))
+        .unwrap_or_else(|_| panic!("{id}: stream_diag panicked"));
+    if let Err(e) = diag {
+        let msg = format!("{e:#}");
+        assert!(msg.contains("line "), "{id}: diag rejection lacks a line number: {msg}");
+    }
+
+    // `top` fold surface: feed whatever decodes, render at the end.
+    catch_unwind(AssertUnwindSafe(|| {
+        let mut reader = StreamReader::new();
+        let mut state = TopState::default();
+        reader.feed(bytes);
+        loop {
+            let value = match reader.next_value() {
+                Some(Ok(v)) => v,
+                Some(Err(_)) => continue,
+                None => break,
+            };
+            if let Ok(ev) = RunEvent::from_json(&value) {
+                state.fold(&ev, &value);
+            }
+        }
+        if let Some(Ok(value)) = reader.finish() {
+            if let Ok(ev) = RunEvent::from_json(&value) {
+                state.fold(&ev, &value);
+            }
+        }
+        let _screen = state.render();
+    }))
+    .unwrap_or_else(|_| panic!("{id}: top fold panicked"));
+    4
+}
+
+/// Run one mutant through the checkpoint parser (all-or-nothing: any
+/// outcome but a panic is acceptable).
+fn hammer_checkpoint(text: &str, id: &str) -> u64 {
+    catch_unwind(AssertUnwindSafe(|| {
+        let _ = Snapshot::parse(text);
+    }))
+    .unwrap_or_else(|_| panic!("{id}: Snapshot::parse panicked"));
+    1
+}
+
+/// Handcrafted hostile lines spliced into streams by the mutation loop:
+/// saturating numbers, null-typed fields, foreign events, pathological
+/// nesting, and raw invalid UTF-8.
+fn hostile_lines() -> Vec<Vec<u8>> {
+    let mut lines: Vec<Vec<u8>> = vec![
+        // usize saturation: step / chain overflow f64 → usize casts.
+        b"{\"ev\":\"u\",\"chain\":0,\"step\":99999999999999999999999,\"t\":1,\"u\":1}".to_vec(),
+        b"{\"ev\":\"sample\",\"chain\":1e300,\"t\":1,\"theta\":[1]}".to_vec(),
+        // Overlong number tokens and exponent extremes.
+        format!("{{\"ev\":\"u\",\"chain\":0,\"step\":1,\"t\":{},\"u\":1e999999999}}", "9".repeat(4096))
+            .into_bytes(),
+        b"{\"ev\":\"center\",\"t\":-1e-999999,\"theta\":[1e308,-1e308]}".to_vec(),
+        // Dimension changes and degenerate theta.
+        b"{\"ev\":\"sample\",\"chain\":0,\"t\":1,\"theta\":[]}".to_vec(),
+        b"{\"ev\":\"sample\",\"chain\":0,\"t\":null,\"theta\":[null,null,null,null,null]}".to_vec(),
+        b"{\"ev\":\"sample\",\"chain\":0,\"t\":1,\"theta\":\"not-an-array\"}".to_vec(),
+        // Foreign-but-valid JSON (a checkpoint header inside a stream).
+        b"{\"ev\":\"ckpt\",\"version\":1,\"scheme\":\"ec\"}".to_vec(),
+        // Structurally hostile.
+        b"{".repeat(200),
+        b"not json at all".to_vec(),
+        b"\xFF\xFE{\"ev\":\"meta\"}".to_vec(),
+        b"{\"ev\":\"\xFF\xFE\"}".to_vec(),
+    ];
+    // Deep nesting: 100k unterminated arrays (depth guard territory) and
+    // a balanced 200-deep value (over MAX_DEPTH = 128).
+    lines.push(b"[".repeat(100_000));
+    let mut deep = b"{\"ev\":\"telemetry\",\"t\":1,\"x\":".to_vec();
+    deep.extend(b"[".repeat(200));
+    deep.extend(b"1");
+    deep.extend(b"]".repeat(200));
+    deep.push(b'}');
+    lines.push(deep);
+    lines
+}
+
+#[test]
+fn corpus_adversary_ten_thousand_mutants_zero_panics() {
+    let stream = stream_artifact();
+    let ckpt = checkpoint_artifact();
+    let mut rng = Pcg64::seeded(0x00C0_FFEE);
+    let mut mutants = 0u64;
+    let mut exercises = 0u64;
+
+    // ------------------------------------------------------------------
+    // Class 1: truncation at EVERY byte offset of the stream. The bulk
+    // of the corpus — a torn write can stop anywhere.
+    // ------------------------------------------------------------------
+    for cut in 0..=stream.len() {
+        let slice = &stream[..cut];
+        let report = salvage_reader(slice, cut as u64)
+            .unwrap_or_else(|e| panic!("truncate@{cut}: salvage errored: {e:#}"));
+        assert!(report.bytes_salvaged <= cut as u64, "truncate@{cut}: {report:?}");
+        if let Some(err) = &report.error {
+            assert!(err.contains("line "), "truncate@{cut}: {err}");
+        }
+        mutants += 1;
+        exercises += 1;
+        // The heavier strict surfaces on a stride (full diff coverage of
+        // the salvager above keeps this class O(n²) instead of O(4n²)).
+        if cut % 37 == 0 {
+            exercises += hammer_stream(slice, &format!("truncate@{cut}"));
+        }
+    }
+    // The untouched artifact itself is intact.
+    let clean = salvage_reader(&stream[..], stream.len() as u64).unwrap();
+    assert!(!clean.truncated && clean.error.is_none(), "clean artifact flagged: {clean:?}");
+    assert!(clean.events > 0 && clean.samples > 0 && clean.chains == 2, "{clean:?}");
+
+    // ------------------------------------------------------------------
+    // Class 2: truncation at every offset of the checkpoint (its text is
+    // ASCII JSONL, so every byte offset is a char boundary).
+    // ------------------------------------------------------------------
+    assert!(ckpt.is_ascii(), "checkpoint text must be ASCII for offset slicing");
+    for cut in 0..=ckpt.len() {
+        exercises += hammer_checkpoint(&ckpt[..cut], &format!("ckpt-truncate@{cut}"));
+        // Any strict prefix must be rejected, never mis-parsed: the
+        // footer line count is the integrity seal. (The one exception is
+        // the cut that drops only the final newline — the content is
+        // still complete.)
+        if cut + 1 < ckpt.len() {
+            assert!(
+                Snapshot::parse(&ckpt[..cut]).is_err(),
+                "ckpt-truncate@{cut}: strict prefix parsed as valid"
+            );
+        }
+        mutants += 1;
+    }
+    assert!(Snapshot::parse(&ckpt).is_ok(), "clean checkpoint rejected");
+
+    // ------------------------------------------------------------------
+    // Class 3: seeded single-bit flips, stream + checkpoint.
+    // ------------------------------------------------------------------
+    for i in 0..3000u64 {
+        let mut m = stream.clone();
+        let pos = rng.below(m.len() as u64) as usize;
+        let bit = rng.below(8) as u32;
+        m[pos] ^= 1 << bit;
+        exercises += hammer_stream(&m, &format!("bitflip#{i}@{pos}.{bit}"));
+        mutants += 1;
+    }
+    for i in 0..2000u64 {
+        let mut m = ckpt.clone().into_bytes();
+        let pos = rng.below(m.len() as u64) as usize;
+        let bit = rng.below(8) as u32;
+        m[pos] ^= 1 << bit;
+        // A flipped high bit can break UTF-8; the parser surface takes
+        // &str, so damage that breaks the encoding is rejected upstream
+        // by the lossy decode — exactly what the CLI's file read does.
+        let text = String::from_utf8_lossy(&m);
+        exercises += hammer_checkpoint(&text, &format!("ckpt-bitflip#{i}@{pos}.{bit}"));
+        mutants += 1;
+    }
+
+    // ------------------------------------------------------------------
+    // Class 4: line-level chaos — duplicate, swap, drop, blank-insert,
+    // and splice hostile or foreign lines.
+    // ------------------------------------------------------------------
+    let stream_lines: Vec<&[u8]> = stream.split(|&b| b == b'\n').collect();
+    let ckpt_lines: Vec<&str> = ckpt.lines().collect();
+    let hostile = hostile_lines();
+    for i in 0..1500u64 {
+        let mut lines: Vec<Vec<u8>> = stream_lines.iter().map(|l| l.to_vec()).collect();
+        for _ in 0..=rng.below(3) {
+            let n = lines.len() as u64;
+            match rng.below(5) {
+                0 => {
+                    let a = rng.below(n) as usize;
+                    let dup = lines[a].clone();
+                    lines.insert(a, dup);
+                }
+                1 => {
+                    let (a, b) = (rng.below(n) as usize, rng.below(n) as usize);
+                    lines.swap(a, b);
+                }
+                2 => {
+                    lines.remove(rng.below(n) as usize);
+                }
+                3 => {
+                    let at = rng.below(n) as usize;
+                    let h = &hostile[rng.below(hostile.len() as u64) as usize];
+                    lines.insert(at, h.clone());
+                }
+                _ => {
+                    // Foreign splice: a checkpoint line inside a stream.
+                    let at = rng.below(n) as usize;
+                    let f = ckpt_lines[rng.below(ckpt_lines.len() as u64) as usize];
+                    lines.insert(at, f.as_bytes().to_vec());
+                }
+            }
+        }
+        let mutant = lines.join(&b'\n');
+        exercises += hammer_stream(&mutant, &format!("lines#{i}"));
+        mutants += 1;
+    }
+
+    // ------------------------------------------------------------------
+    // Class 5: every hostile line alone, and appended to a clean prefix
+    // (both with and without a trailing newline — the finish() path).
+    // ------------------------------------------------------------------
+    for (i, h) in hostile.iter().enumerate() {
+        for (j, base) in [&b""[..], &stream[..stream.len() / 2]].iter().enumerate() {
+            for terminated in [false, true] {
+                let mut m = base.to_vec();
+                m.extend_from_slice(h);
+                if terminated {
+                    m.push(b'\n');
+                }
+                exercises += hammer_stream(&m, &format!("hostile#{i}.{j}.{terminated}"));
+                mutants += 1;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Class 6: the overlong-line cap — an unterminated multi-megabyte
+    // "line" must be abandoned with a line-naming error, not buffered
+    // without bound (exercised at a small cap; the default cap's policy
+    // is identical).
+    // ------------------------------------------------------------------
+    for i in 0..64u64 {
+        let cap = 256usize;
+        let mut reader = StreamReader::with_max_line(cap);
+        let n = cap + 1 + rng.below(4 * cap as u64) as usize;
+        let junk: Vec<u8> = (0..n).map(|_| b'a' + (rng.below(26) as u8)).collect();
+        reader.feed(&junk);
+        let err = match reader.next_value() {
+            Some(Err(e)) => e,
+            other => panic!("overlong#{i}: expected abandonment, got {other:?}"),
+        };
+        assert!(err.msg.contains("line 1"), "overlong#{i}: {}", err.msg);
+        assert!(reader.buffered() == 0, "overlong#{i}: abandoned line still buffered");
+        // Recovery: a newline ends the junk, then a clean value parses.
+        reader.feed(b"\n{\"ev\":\"meta\",\"version\":1}\n");
+        match reader.next_value() {
+            Some(Ok(v)) => assert!(v.get("ev").is_some()),
+            other => panic!("overlong#{i}: no recovery after newline: {other:?}"),
+        }
+        mutants += 1;
+        exercises += 1;
+    }
+
+    assert!(
+        mutants >= 10_000,
+        "corpus too small: {mutants} mutants (need >= 10,000)"
+    );
+    // Sanity: the corpus actually exercised more surface calls than
+    // mutants (most stream mutants hit 4 surfaces).
+    assert!(exercises > mutants, "{exercises} exercises for {mutants} mutants");
+    println!("corpus: {mutants} mutants, {exercises} surface exercises, zero panics");
+}

@@ -1,0 +1,438 @@
+//! Integration tests for deterministic fault injection + hardened
+//! recovery (DESIGN.md §12):
+//!
+//! * the zero-cost contract: a configured-but-inactive `[faults]` plan
+//!   leaves trajectories, metrics, AND the JSONL stream identical to a
+//!   run with no faults section at all (wall-clock keys are the one
+//!   legitimately nondeterministic field);
+//! * transient checkpoint I/O faults are retried and never disturb the
+//!   kill-and-resume bit-identity guarantee;
+//! * a panicking worker thread folds into elastic membership as a
+//!   `fail` departure and the run completes;
+//! * sink write faults degrade to counted in-memory buffering and the
+//!   stream stays replayable;
+//! * lock-free upload drops are survived (the fault matrix across both
+//!   transports);
+//! * the CHAOS experiment's fast sweep produces finite posterior
+//!   quality at every fault level.
+//!
+//! Every test flips the PROCESS-GLOBAL fault injector, so the whole
+//! file serializes on one mutex and restores the disabled state through
+//! a drop guard (the same discipline as `tests/test_telemetry.rs`).
+
+use ecsgmcmc::checkpoint::{CheckpointPolicy, CheckpointStore};
+use ecsgmcmc::coordinator::ec::{resume_ec, run_ec, EcCheckpoint};
+use ecsgmcmc::coordinator::engine::{NativeEngine, StepKind, WorkerEngine};
+use ecsgmcmc::coordinator::{EcConfig, RunOptions, RunResult, TransportKind};
+use ecsgmcmc::experiments::{chaos, Scale};
+use ecsgmcmc::faults::{self, FaultPlan};
+use ecsgmcmc::potentials::gaussian::GaussianPotential;
+use ecsgmcmc::samplers::SghmcParams;
+use ecsgmcmc::sink::replay::replay_file;
+use ecsgmcmc::sink::SinkSpec;
+use ecsgmcmc::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// The fault injector is process-global: serialize every test here.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Restores the disabled state even if the test panics, so one failure
+/// can't leak an active fault plan into the next test.
+struct FaultsOff;
+
+impl Drop for FaultsOff {
+    fn drop(&mut self) {
+        faults::configure(None, 0);
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ecsgmcmc-faults-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn engines(n: usize, params: SghmcParams) -> Vec<Box<dyn WorkerEngine>> {
+    (0..n)
+        .map(|_| {
+            Box::new(NativeEngine::new(
+                Arc::new(GaussianPotential::fig1()),
+                params,
+                StepKind::Sghmc,
+            )) as Box<dyn WorkerEngine>
+        })
+        .collect()
+}
+
+/// The deterministic content of a run: θ streams per chain, Ũ values,
+/// center trajectory, and the hard counters — everything but wall-clock.
+type RunView = (Vec<Vec<Vec<f32>>>, Vec<Vec<(usize, f64)>>, Vec<Vec<f32>>, [u64; 4]);
+
+fn deterministic_view(r: &RunResult) -> RunView {
+    (
+        r.chains.iter().map(|c| c.samples.iter().map(|(_, t)| t.clone()).collect()).collect(),
+        r.chains
+            .iter()
+            .map(|c| c.u_trace.iter().map(|p| (p.step, p.u)).collect())
+            .collect(),
+        r.center_trace.iter().map(|(_, c)| c.clone()).collect(),
+        [
+            r.metrics.total_steps,
+            r.metrics.center_steps,
+            r.metrics.exchanges,
+            r.metrics.samples_dropped,
+        ],
+    )
+}
+
+/// Parse a JSONL stream into per-line values with the wall-clock keys
+/// (`t`, `steps_per_sec`, `elapsed`) removed — the rest of every event
+/// must be deterministic under the deterministic transport.
+fn normalized_stream(path: &Path) -> Vec<Json> {
+    let text = std::fs::read_to_string(path).unwrap();
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let v = Json::parse(l).unwrap_or_else(|e| panic!("bad line {l:?}: {e}"));
+            let mut m = v.as_obj().expect("stream lines are objects").clone();
+            for k in ["t", "steps_per_sec", "elapsed"] {
+                m.remove(k);
+            }
+            Json::Obj(m)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Satellite: the zero-cost contract.
+// ---------------------------------------------------------------------
+
+/// A `[faults]` table with every rate at zero must be indistinguishable
+/// from having no faults section at all: identical trajectories,
+/// identical metrics, and an identical JSONL stream (modulo wall-clock
+/// values) with none of the schema-additive fault keys present.
+#[test]
+fn inactive_fault_plan_is_bitwise_zero_cost() {
+    let _serial = serial();
+    let _off = FaultsOff;
+    let dir = tmp("zerocost");
+    let mk = |stream: &Path| EcConfig {
+        workers: 3,
+        alpha: 1.0,
+        sync_every: 2,
+        steps: 200,
+        transport: TransportKind::Deterministic,
+        opts: RunOptions {
+            thin: 1,
+            log_every: 50,
+            sink: SinkSpec::Jsonl { path: stream.to_path_buf() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: 0.05, ..Default::default() };
+
+    // Run A: no faults section at all.
+    faults::configure(None, 0);
+    let stream_a = dir.join("a.jsonl");
+    let a = run_ec(&mk(&stream_a), params, engines(3, params), 33);
+
+    // Run B: a `[faults]` plan is present but all-zero — the commit
+    // point must leave the injector disabled.
+    let plan = FaultPlan { seed: Some(7), ..Default::default() };
+    assert!(!plan.is_active());
+    faults::configure(Some(&plan), 123);
+    assert!(!faults::enabled(), "inactive plan must not enable the injector");
+    let stream_b = dir.join("b.jsonl");
+    let b = run_ec(&mk(&stream_b), params, engines(3, params), 33);
+
+    assert_eq!(deterministic_view(&a), deterministic_view(&b));
+    for r in [&a, &b] {
+        assert_eq!(r.metrics.faults_injected, 0);
+        assert_eq!(r.metrics.ckpt_retries, 0);
+        assert_eq!(r.metrics.sink_degraded, 0);
+        assert_eq!(r.metrics.worker_panics, 0);
+    }
+
+    let lines_a = normalized_stream(&stream_a);
+    let lines_b = normalized_stream(&stream_b);
+    assert_eq!(lines_a.len(), lines_b.len(), "stream lengths diverged");
+    assert_eq!(lines_a, lines_b, "streams diverged beyond wall-clock keys");
+    // Schema-additive contract: fault-free streams carry no fault keys.
+    for v in &lines_a {
+        for k in ["faults_injected", "ckpt_retries", "sink_degraded", "worker_panics"] {
+            assert!(v.get(k).is_none(), "fault-free stream leaked key {k}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Tentpole: hardened recovery under each fault point.
+// ---------------------------------------------------------------------
+
+/// Transient checkpoint I/O faults are absorbed by the bounded retry
+/// loop: snapshots still land, the retry counter reports the noise, and
+/// kill-and-resume still regenerates the exact uninterrupted stream.
+#[test]
+fn transient_checkpoint_faults_retry_and_preserve_resume_identity() {
+    let _serial = serial();
+    let _off = FaultsOff;
+    let dir = tmp("ckpt-retry");
+    let stream = dir.join("run.jsonl");
+    let ckpt_dir = dir.join("ckpt");
+    let cfg = EcConfig {
+        workers: 3,
+        alpha: 1.0,
+        sync_every: 2,
+        steps: 240,
+        transport: TransportKind::Deterministic,
+        checkpoint: Some(EcCheckpoint {
+            dir: ckpt_dir.clone(),
+            policy: CheckpointPolicy { every_rounds: 10, every_secs: None, keep: 100 },
+        }),
+        opts: RunOptions {
+            thin: 1,
+            log_every: 20,
+            sink: SinkSpec::Jsonl { path: stream.clone() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: 0.05, ..Default::default() };
+    let plan = FaultPlan { seed: Some(11), ckpt_rate: 0.3, ..Default::default() };
+
+    faults::configure(Some(&plan), 0);
+    let reference = run_ec(&cfg, params, engines(3, params), 99);
+    assert!(
+        reference.metrics.ckpt_retries > 0,
+        "a 30% op-fault rate over dozens of checkpoint ops must force retries"
+    );
+    assert!(reference.metrics.faults_injected > 0);
+    let replayed_ref = replay_file(&stream).unwrap();
+    let ref_view = deterministic_view(&replayed_ref);
+
+    // At least one snapshot survived the fault storm (4 attempts per
+    // save across 11 interior cuts).
+    let mut snaps: Vec<PathBuf> =
+        std::fs::read_dir(&ckpt_dir).unwrap().flatten().map(|e| e.path()).collect();
+    snaps.sort();
+    assert!(!snaps.is_empty(), "no snapshot survived the injected fault storm");
+    let snap = CheckpointStore::load(&snaps[0]).unwrap();
+    assert!(snap.boundary > 0 && snap.boundary < cfg.steps);
+
+    // "Kill": torn tail on the stream, then resume under the SAME fault
+    // plan — injected checkpoint faults must never leak into sample
+    // content, so the regenerated tail is bit-identical.
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&stream).unwrap();
+        f.write_all(b"{\"ev\":\"sample\",\"chain\":0,\"t\":9.9,\"theta\":[0,0]}\n").unwrap();
+        f.write_all(b"{\"ev\":\"sample\",\"chain\":1,\"t\":9.95,\"the").unwrap();
+    }
+    faults::configure(Some(&plan), 0);
+    let resumed = resume_ec(&cfg, params, engines(3, params), snap).unwrap();
+    assert_eq!(resumed.metrics.total_steps, reference.metrics.total_steps);
+    let replayed = replay_file(&stream).unwrap();
+    assert_eq!(ref_view, deterministic_view(&replayed), "resume under faults diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A worker thread that panics at a segment boundary is folded into
+/// elastic membership as a `fail` departure: the run completes, the
+/// stream records the member event, and the counters say what happened.
+#[test]
+fn panicked_worker_folds_into_membership_and_run_completes() {
+    let _serial = serial();
+    let _off = FaultsOff;
+    let dir = tmp("panic");
+    let stream = dir.join("run.jsonl");
+    let cfg = EcConfig {
+        workers: 4,
+        alpha: 1.0,
+        sync_every: 2,
+        steps: 200,
+        transport: TransportKind::Deterministic,
+        // Checkpoint cuts give the run interior segment boundaries — the
+        // panic fault point fires at the first one (step 20), not at the
+        // very end.
+        checkpoint: Some(EcCheckpoint {
+            dir: dir.join("ckpt"),
+            policy: CheckpointPolicy { every_rounds: 10, every_secs: None, keep: 2 },
+        }),
+        opts: RunOptions {
+            thin: 1,
+            log_every: 50,
+            sink: SinkSpec::Jsonl { path: stream.clone() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: 0.05, ..Default::default() };
+    let doomed = 2usize;
+    let plan = FaultPlan { seed: Some(5), panic_worker: Some(doomed), ..Default::default() };
+
+    faults::configure(Some(&plan), 0);
+    let r = run_ec(&cfg, params, engines(4, params), 17);
+
+    assert_eq!(r.metrics.worker_panics, 1, "exactly one thread panic survived");
+    assert!(r.metrics.worker_leaves >= 1, "the panic must register as a departure");
+    assert!(r.metrics.faults_injected >= 1);
+    assert_eq!(r.chains.len(), 4, "all chains still accounted for");
+    // The surviving workers kept sampling to the end.
+    assert!(r.metrics.total_steps > 0);
+    assert!(r
+        .chains
+        .iter()
+        .any(|c| c.samples.iter().any(|(_, t)| t.iter().all(|x| x.is_finite()))));
+
+    // The stream carries the `fail` member event for the doomed worker.
+    let members: Vec<(usize, String)> = normalized_stream(&stream)
+        .iter()
+        .filter(|v| v.get("ev").and_then(Json::as_str) == Some("member"))
+        .map(|v| {
+            (
+                v.get("worker").and_then(Json::as_usize).unwrap(),
+                v.get("kind").and_then(Json::as_str).unwrap().to_string(),
+            )
+        })
+        .collect();
+    assert!(
+        members.iter().any(|(w, k)| *w == doomed && k == "fail"),
+        "stream lacks the fail member event for worker {doomed}: {members:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Sink write faults flip the writer into degraded in-memory buffering;
+/// the run completes, the degradation is counted, and the stream that
+/// does land stays replayable (atomic lines, order preserved).
+#[test]
+fn sink_faults_degrade_to_buffering_and_stream_stays_replayable() {
+    let _serial = serial();
+    let _off = FaultsOff;
+    let dir = tmp("sink");
+    let stream = dir.join("run.jsonl");
+    let cfg = EcConfig {
+        workers: 3,
+        alpha: 1.0,
+        sync_every: 2,
+        steps: 200,
+        transport: TransportKind::Deterministic,
+        opts: RunOptions {
+            thin: 1,
+            log_every: 50,
+            sink: SinkSpec::Jsonl { path: stream.clone() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let params = SghmcParams { eps: 0.05, ..Default::default() };
+    let plan = FaultPlan { seed: Some(3), sink_rate: 0.2, ..Default::default() };
+
+    faults::configure(Some(&plan), 0);
+    let r = run_ec(&cfg, params, engines(3, params), 21);
+
+    assert!(r.metrics.sink_degraded > 0, "a 20% write-fault rate must trip degraded mode");
+    assert!(r.metrics.faults_injected > 0);
+    // Every line that reached disk is intact JSON and the stream as a
+    // whole still replays.
+    let replayed = replay_file(&stream).unwrap();
+    assert_eq!(replayed.metrics.total_steps, r.metrics.total_steps);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The fault matrix: checkpoint + sink + panic faults on BOTH
+/// transports (plus upload drops, which only exist on the lock-free
+/// fabric) — every combination must carry the run to completion.
+#[test]
+fn fault_matrix_completes_on_both_transports() {
+    let _serial = serial();
+    let _off = FaultsOff;
+    for (i, transport) in [TransportKind::Deterministic, TransportKind::LockFree]
+        .into_iter()
+        .enumerate()
+    {
+        let dir = tmp(&format!("matrix{i}"));
+        let cfg = EcConfig {
+            workers: 4,
+            alpha: 1.0,
+            sync_every: 2,
+            steps: 200,
+            transport,
+            checkpoint: Some(EcCheckpoint {
+                dir: dir.join("ckpt"),
+                policy: CheckpointPolicy { every_rounds: 10, every_secs: None, keep: 2 },
+            }),
+            opts: RunOptions {
+                thin: 1,
+                log_every: 50,
+                sink: SinkSpec::Tee(vec![
+                    SinkSpec::Memory,
+                    SinkSpec::Jsonl { path: dir.join("run.jsonl") },
+                ]),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let params = SghmcParams { eps: 0.05, ..Default::default() };
+        let plan = FaultPlan {
+            seed: Some(13 + i as u64),
+            ckpt_rate: 0.2,
+            sink_rate: 0.2,
+            // The upload-drop point only exists on the lock-free fabric.
+            drop_rate: if transport == TransportKind::LockFree { 0.2 } else { 0.0 },
+            panic_worker: Some(1),
+        };
+        faults::configure(Some(&plan), 0);
+        let r = run_ec(&cfg, params, engines(4, params), 55);
+        assert_eq!(r.metrics.worker_panics, 1, "{transport:?}: panic not survived");
+        assert!(r.metrics.faults_injected > 0, "{transport:?}: nothing injected");
+        assert!(r.metrics.total_steps > 0, "{transport:?}: run produced no work");
+        assert!(
+            r.chains
+                .iter()
+                .all(|c| c.samples.iter().all(|(_, t)| t.iter().all(|x| x.is_finite()))),
+            "{transport:?}: non-finite samples under faults"
+        );
+        faults::configure(None, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+// ---------------------------------------------------------------------
+// CHAOS experiment (fast scale).
+// ---------------------------------------------------------------------
+
+/// The CHAOS sweep's fast scale: posterior quality stays finite at
+/// every fault level, the baseline level injects nothing, and the
+/// chaotic level reports its panic + injections.
+#[test]
+fn chaos_fast_sweep_produces_finite_quality_under_faults() {
+    let _serial = serial();
+    let _off = FaultsOff;
+    let r = chaos::run(Scale::Fast, 7);
+    assert_eq!(r.levels, vec![0.0, 0.3]);
+    for (i, &level) in r.levels.iter().enumerate() {
+        assert!(r.cov_err[i].is_finite(), "level {level}: cov err not finite");
+        assert!(r.max_rhat[i].is_finite(), "level {level}: R-hat not finite");
+    }
+    // Baseline: injector disabled, counters silent.
+    assert_eq!(r.faults_injected[0], 0);
+    assert_eq!(r.ckpt_retries[0], 0);
+    assert_eq!(r.sink_degraded[0], 0);
+    assert_eq!(r.worker_panics[0], 0);
+    // Chaotic level: faults fired and one worker died mid-run.
+    assert!(r.faults_injected[1] > 0, "level 0.3 injected nothing");
+    assert_eq!(r.worker_panics[1], 1, "level 0.3 must panic exactly one thread");
+    let (cov, rhat) = r.to_series();
+    assert_eq!(cov.xs, r.levels);
+    assert_eq!(rhat.ys.len(), r.levels.len());
+    assert!(!faults::enabled(), "sweep must leave the injector disabled");
+}
