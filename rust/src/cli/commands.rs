@@ -70,6 +70,13 @@ fn apply_overrides(cfg: &mut RunConfig, p: &Parsed) -> Result<()> {
     if let Some(spec) = p.opt("faults") {
         cfg.faults = Some(crate::faults::FaultPlan::from_spec(spec).context("--faults")?);
     }
+    if p.has_flag("observe") {
+        cfg.observe = true;
+    }
+    if let Some(addr) = p.opt("observe-addr") {
+        cfg.observe = true;
+        cfg.observe_addr = addr.to_string();
+    }
     Ok(())
 }
 
@@ -103,6 +110,17 @@ fn apply_faults(cfg: &RunConfig) {
     }
 }
 
+/// Commit the observatory switches to the process-global runtime and bind
+/// the exposition socket before any worker thread spawns (DESIGN.md §13).
+/// Binding failures are hard errors: an operator who asked for `/metrics`
+/// must not silently run blind.
+fn apply_observe(cfg: &RunConfig) -> Result<()> {
+    if let Some(addr) = crate::observe::configure(cfg.observe, &cfg.observe_addr)? {
+        log_info!("observe: serving /metrics /status /healthz on http://{addr}");
+    }
+    Ok(())
+}
+
 /// `ecsgmcmc sample --config <file> [--seed n] [--transport t] [--shards n]
 /// [--sink kind] [--sink-path file] [--checkpoint-dir d]
 /// [--checkpoint-every r] [--churn rate] [--staleness-bound b]`.
@@ -114,6 +132,7 @@ pub fn cmd_sample(p: &Parsed) -> Result<i32> {
     apply_dispatch(&cfg)?;
     apply_telemetry(&cfg);
     apply_faults(&cfg);
+    apply_observe(&cfg)?;
     // Probe stream-path writability now: the scheme drivers treat sink
     // init as infallible, so an unwritable path must fail here with a
     // clean error before any sampling starts. Open in append mode — the
@@ -186,6 +205,7 @@ pub fn cmd_resume(p: &Parsed) -> Result<i32> {
     apply_dispatch(&cfg)?;
     apply_telemetry(&cfg);
     apply_faults(&cfg);
+    apply_observe(&cfg)?;
     if !matches!(cfg.scheme, Scheme::ElasticCoupling | Scheme::EcSgld) {
         return Err(anyhow!("resume supports the EC schemes (got {})", cfg.scheme.name()));
     }
@@ -855,21 +875,60 @@ fn print_fig2(series: &[Series], title: &str, out: &str, stem: &str) -> Result<(
     Ok(())
 }
 
-/// `ecsgmcmc bench [--suite kernels] [--out dir]`.
+/// `ecsgmcmc report --file <run.jsonl> [--out report.md]`.
+///
+/// Renders a streamed run into an offline Markdown + JSON report:
+/// convergence tables (same accumulator as `replay --diag`, bit-identical
+/// R-hat/ESS), stage time breakdown, staleness quantiles, health
+/// transitions, and the membership/checkpoint timeline (DESIGN.md §13).
+pub fn cmd_report(p: &Parsed) -> Result<i32> {
+    let stream = p.opt("file").ok_or_else(|| anyhow!("--file is required"))?;
+    let out = p.opt("out").unwrap_or("out/report.md");
+    let r = crate::observe::report::write_report(
+        std::path::Path::new(stream),
+        std::path::Path::new(out),
+    )?;
+    println!(
+        "report: {} events ({} samples over {} chains) -> {} + {}",
+        r.events,
+        r.samples,
+        r.chains,
+        r.markdown.display(),
+        r.json.display()
+    );
+    println!("convergence: max R-hat={:.4} min ESS={:.1}", r.max_rhat, r.min_ess);
+    Ok(0)
+}
+
+/// `ecsgmcmc bench [--suite kernels] [--out dir] [--compare baseline-dir]`.
 ///
 /// Runs a micro-benchmark suite outside the experiment harness. The only
 /// suite today is `kernels`: the GEMM kernel-variant sweep over the Fig. 2
 /// shapes, emitting `BENCH_kernels.json` + `KERNELS.md` (DESIGN.md §10).
+/// With `--compare`, skips the sweep when `--suite` is absent and instead
+/// diffs the `BENCH_*.json` artifacts in `--out` against a committed
+/// baseline directory, exiting 1 on regression (DESIGN.md §13).
 pub fn cmd_bench(p: &Parsed) -> Result<i32> {
-    let suite = p.opt("suite").unwrap_or("kernels");
     let out = p.opt("out").unwrap_or("out/bench");
-    match suite {
-        "kernels" => {
-            crate::bench::kernels::run(std::path::Path::new(out))?;
-            Ok(0)
+    if let Some(suite) = p.opt("suite") {
+        match suite {
+            "kernels" => crate::bench::kernels::run(std::path::Path::new(out))?,
+            other => return Err(anyhow!("unknown bench suite '{other}' (available: kernels)")),
         }
-        other => Err(anyhow!("unknown bench suite '{other}' (available: kernels)")),
+    } else if p.opt("compare").is_none() {
+        crate::bench::kernels::run(std::path::Path::new(out))?;
     }
+    if let Some(baseline) = p.opt("compare") {
+        let report = crate::observe::bench_compare::compare(
+            std::path::Path::new(out),
+            std::path::Path::new(baseline),
+        )?;
+        print!("{}", report.render());
+        if !report.regressions().is_empty() {
+            return Ok(1);
+        }
+    }
+    Ok(0)
 }
 
 /// `ecsgmcmc artifacts [--dir d]`.

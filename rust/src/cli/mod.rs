@@ -16,11 +16,16 @@
 //!   as a Chrome trace-event file (DESIGN.md §11);
 //! * `top --file <run.jsonl>` — live per-stage latency/counter view of a
 //!   running (or finished) streamed run;
+//! * `report --file <run.jsonl>` — offline Markdown + JSON run report:
+//!   convergence tables, stage breakdown, staleness quantiles, health
+//!   transitions, membership/fault timeline (DESIGN.md §13);
 //! * `experiment --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF|CHURN|CHAOS>`
 //!   — run a paper experiment and print its table (plus CSVs under
 //!   `--out`);
 //! * `bench --suite kernels` — GEMM kernel-variant sweep over the Fig. 2
 //!   shapes, emitting `BENCH_kernels.json` + `KERNELS.md` (DESIGN.md §10);
+//!   `bench --compare <dir>` diffs fresh `BENCH_*.json` artifacts against
+//!   committed baselines and fails on regression (DESIGN.md §13);
 //! * `artifacts [--dir <dir>]` — inspect the AOT artifact manifest;
 //! * `version` / `help`.
 
@@ -45,6 +50,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
         "fsck" => commands::cmd_fsck(&parsed),
         "trace" => commands::cmd_trace(&parsed),
         "top" => commands::cmd_top(&parsed),
+        "report" => commands::cmd_report(&parsed),
         "experiment" => commands::cmd_experiment(&parsed),
         "bench" => commands::cmd_bench(&parsed),
         "artifacts" => commands::cmd_artifacts(&parsed),
@@ -92,6 +98,9 @@ COMMANDS:
                                          (default 50)
                   --faults <spec>        deterministic fault injection, e.g.
                                          ckpt=0.5,sink=0.2,drop=0.1,panic=1,seed=7
+                  --observe              serve /metrics /status /healthz over HTTP
+                  --observe-addr <a>     exposition bind address (implies
+                                         --observe, default 127.0.0.1:9464)
     resume      Continue a checkpointed EC run from its newest snapshot
                   --config <file.toml>   the run's original config
                   --checkpoint-dir <d>   snapshot dir (or [checkpoint] dir)
@@ -111,6 +120,10 @@ COMMANDS:
                   --file <run.jsonl>     stream recorded with --telemetry
                   --follow               tail the stream and redraw live
                   --interval-ms <n>      redraw period with --follow (default 1000)
+    report      Render a streamed run into a Markdown + JSON report
+                  --file <run.jsonl>     stream produced by --sink jsonl|tee
+                  --out <report.md>      output file (default out/report.md;
+                                         JSON twin written alongside)
     experiment  Regenerate a paper experiment
                   --id <FIG1|FIG2L|FIG2R|SEC2|SEC5|ABL-ALPHA|PERF|CHURN|CHAOS>
                   --fast                 smoke-scale run
@@ -119,6 +132,8 @@ COMMANDS:
     bench       Run a micro-benchmark suite
                   --suite <s>            kernels (default kernels)
                   --out <dir>            output dir (default out/bench)
+                  --compare <dir>        diff BENCH_*.json in --out against a
+                                         baseline dir; exit 1 on regression
     artifacts   Inspect the AOT artifact manifest
                   --dir <dir>            (default artifacts/)
     version     Print the version

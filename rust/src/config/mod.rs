@@ -210,6 +210,14 @@ pub struct RunConfig {
     /// fast path is one relaxed atomic load per fault point
     /// (DESIGN.md §12).
     pub faults: Option<crate::faults::FaultPlan>,
+    /// Fleet observatory (`[observe] enabled`, `--observe`): HTTP
+    /// metrics/health exposition + run-health monitoring. Off by
+    /// default; when off the hook is one relaxed atomic load per run
+    /// (DESIGN.md §13).
+    pub observe: bool,
+    /// Bind address for the exposition server (`[observe] addr`,
+    /// `--observe-addr`). Port 0 picks an ephemeral port.
+    pub observe_addr: String,
 }
 
 impl Default for RunConfig {
@@ -246,6 +254,8 @@ impl Default for RunConfig {
             telemetry_every: 50,
             telemetry_ring: 4096,
             faults: None,
+            observe: false,
+            observe_addr: "127.0.0.1:9464".into(),
         }
     }
 }
@@ -380,6 +390,11 @@ impl RunConfig {
             }
         }
 
+        cfg.observe = t.get_bool("observe", "enabled").unwrap_or(cfg.observe);
+        if let Some(addr) = t.get_str("observe", "addr") {
+            cfg.observe_addr = addr.to_string();
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -504,6 +519,9 @@ impl RunConfig {
         }
         if self.telemetry_ring < 2 {
             bail!("[telemetry] ring_capacity must be >= 2 (got {})", self.telemetry_ring);
+        }
+        if self.observe && self.observe_addr.trim().is_empty() {
+            bail!("[observe] addr must be a non-empty bind address when enabled");
         }
         if self.dispatch == DispatchChoice::Simd && !crate::math::simd::simd_supported() {
             bail!(
@@ -745,6 +763,25 @@ alpha = 0.5
         // Degenerate knobs are rejected.
         assert!(RunConfig::from_toml_str("[telemetry]\nevery = 0\n").is_err());
         assert!(RunConfig::from_toml_str("[telemetry]\nring_capacity = 1\n").is_err());
+    }
+
+    #[test]
+    fn parses_observe_table() {
+        let cfg = RunConfig::from_toml_str(
+            "[observe]\nenabled = true\naddr = \"127.0.0.1:0\"\n",
+        )
+        .unwrap();
+        assert!(cfg.observe);
+        assert_eq!(cfg.observe_addr, "127.0.0.1:0");
+        // Defaults: off, standard exposition port.
+        let plain = RunConfig::from_toml_str("[run]\nscheme = \"ec\"\n").unwrap();
+        assert!(!plain.observe);
+        assert_eq!(plain.observe_addr, "127.0.0.1:9464");
+        // An enabled observatory needs somewhere to bind.
+        assert!(RunConfig::from_toml_str("[observe]\nenabled = true\naddr = \"\"\n").is_err());
+        // A custom addr without enabled = true parses and stays off.
+        let off = RunConfig::from_toml_str("[observe]\naddr = \"0.0.0.0:9000\"\n").unwrap();
+        assert!(!off.observe);
     }
 
     #[test]

@@ -221,6 +221,10 @@ struct CenterCell {
     /// Telemetry drain state (`Some` iff `--telemetry` is on): the
     /// center server doubles as the span-ring consumer (DESIGN.md §11).
     telem: Option<TelemetryState>,
+    /// Observatory cell (`Some` iff `[observe]` is on): health
+    /// monitoring at center-step boundaries plus the shared snapshot the
+    /// HTTP exposition endpoints read (DESIGN.md §13).
+    obs: Option<crate::observe::ObserveCell>,
 }
 
 /// The coordinator-side half of the telemetry pipeline: the cumulative
@@ -603,6 +607,12 @@ fn run_center_segment(
                     cc.sink.record_member(t0.elapsed().as_secs_f64(), worker, "join");
                 }
             }
+            if let Some(obs) = cc.obs.as_mut() {
+                // Arrival is liveness, admitted or not: a worker whose
+                // uploads are all staleness-rejected is gate-pressured,
+                // not stalled.
+                obs.note_upload(worker, cc.center_steps);
+            }
             // Center time advances s steps per full round of live-fleet
             // credits (Eq. 6 budgeting over the *current* fleet size).
             let fleet = cc.active.iter().filter(|&&a| a).count().max(1);
@@ -640,6 +650,20 @@ fn run_center_segment(
                             &cc.metrics.staleness_hist,
                         );
                     }
+                }
+                if let Some(obs) = cc.obs.as_mut() {
+                    // Health evaluates every center step (a divergence
+                    // must not hide between publish cadences); it only
+                    // publishes at telemetry cadence or on a status
+                    // transition.
+                    obs.tick(
+                        t0.elapsed().as_secs_f64(),
+                        &cc.state.theta,
+                        &cc.active,
+                        &cc.metrics,
+                        cc.center_steps,
+                        cc.telem.as_ref().map(|tel| &tel.agg),
+                    );
                 }
             }
             delay.exchange_sleep();
@@ -778,6 +802,22 @@ fn run_ec_inner(
             writer: hub.primary_writer(),
         })
     };
+    // Observatory (DESIGN.md §13): health monitoring + the shared
+    // snapshot the HTTP endpoints serve. `shared()` is one relaxed load
+    // when `[observe]` is off, and the run pays nothing further.
+    let make_obs = || {
+        crate::observe::shared().map(|shared| {
+            crate::observe::ObserveCell::new(
+                shared,
+                "ec",
+                total,
+                seed,
+                cfg.staleness_bound,
+                hub.primary_writer(),
+                hub.primary_diag(),
+            )
+        })
+    };
 
     let gate = Arc::new(Gate { exchanges: AtomicU64::new(0), steppers: AtomicUsize::new(0) });
     let make_recorder = |w: usize| {
@@ -852,6 +892,7 @@ fn run_ec_inner(
                 sink: hub.frame_sink(Frame::Center, cfg.opts.max_samples),
                 dropped_base: 0,
                 telem: make_telem(),
+                obs: make_obs(),
             };
             (cells, center, 0.0, 0)
         }
@@ -915,6 +956,7 @@ fn run_ec_inner(
                 sink: hub.frame_sink(Frame::Center, cfg.opts.max_samples),
                 dropped_base: c.dropped,
                 telem: make_telem(),
+                obs: make_obs(),
             };
             (cells, center, snap.elapsed, snap.boundary)
         }
@@ -1214,6 +1256,19 @@ fn run_ec_inner(
             &cc.metrics.staleness_hist,
         );
         cc.metrics.stage_totals = tel.stage_totals();
+    }
+    // Final health publish: even a run shorter than the publish cadence
+    // lands one terminal verdict, and `/status`/`/healthz` flip to
+    // `finished` for anyone still scraping.
+    if let Some(obs) = cc.obs.as_mut() {
+        obs.finish(
+            elapsed_before + start.elapsed().as_secs_f64(),
+            &cc.state.theta,
+            &cc.active,
+            &cc.metrics,
+            cc.center_steps,
+            cc.telem.as_ref().map(|tel| &tel.agg),
+        );
     }
     // Overflow past the in-memory cap is accounted, not silently lost.
     cc.metrics.samples_dropped = cc.dropped_base + cc.sink.dropped();

@@ -46,6 +46,7 @@ pub mod diagnostics;
 pub mod experiments;
 pub mod faults;
 pub mod math;
+pub mod observe;
 pub mod optimizers;
 pub mod potentials;
 pub mod runtime;

@@ -1,0 +1,355 @@
+//! Perf-regression harness (`ecsgmcmc bench --compare <baseline-dir>`):
+//! diff freshly produced `BENCH_*.json` artifacts against the committed
+//! baselines and fail loudly when a headline metric regresses.
+//!
+//! Each known artifact gets a small spec: which metric is the headline,
+//! which direction is better, how much drift the noisy-CI threshold
+//! tolerates, and which *environment keys* must match for the numbers
+//! to be comparable at all. Environment mismatches (e.g. a baseline
+//! recorded under SIMD dispatch compared against a scalar-forced CI
+//! leg) skip the file's checks with a note instead of reporting a fake
+//! regression — a skipped comparison is visible, a spurious red gate
+//! just gets ignored.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Direction + threshold for one headline metric.
+#[derive(Debug, Clone, Copy)]
+enum Bound {
+    /// Regression when `fresh < baseline * min_ratio`.
+    HigherBetter { min_ratio: f64 },
+    /// Regression when `fresh > baseline * max_ratio + slack` (the
+    /// additive slack keeps near-zero overhead baselines from turning
+    /// into impossible sub-percent gates).
+    LowerBetter { max_ratio: f64, slack: f64 },
+}
+
+struct Spec {
+    file: &'static str,
+    metric: &'static str,
+    bound: Bound,
+    /// Boolean pass/fail gate recorded in the artifact; a regression is
+    /// a gate that was true at baseline time and false now.
+    gate: Option<&'static str>,
+    /// Keys that must match between baseline and fresh for the numbers
+    /// to be comparable (dispatch mode, SIMD support, …).
+    env_keys: &'static [&'static str],
+}
+
+const SPECS: &[Spec] = &[
+    Spec {
+        file: "BENCH_kernels.json",
+        metric: "mlp_geomean_speedup_simd_vs_tiled",
+        bound: Bound::HigherBetter { min_ratio: 0.5 },
+        gate: Some("gate_simd_2x_pass"),
+        env_keys: &["simd_supported"],
+    },
+    Spec {
+        file: "BENCH_grad.json",
+        metric: "speedup_b16_vs_single_thread",
+        bound: Bound::HigherBetter { min_ratio: 0.5 },
+        gate: Some("gate_3x_pass"),
+        env_keys: &["sweep_dispatch"],
+    },
+    Spec {
+        file: "BENCH_checkpoint.json",
+        metric: "overhead_pct",
+        bound: Bound::LowerBetter { max_ratio: 2.0, slack: 1.0 },
+        gate: None,
+        env_keys: &[],
+    },
+    Spec {
+        file: "BENCH_telemetry.json",
+        metric: "overhead_pct",
+        bound: Bound::LowerBetter { max_ratio: 2.0, slack: 1.0 },
+        gate: Some("gate_overhead_pass"),
+        env_keys: &["dispatch"],
+    },
+];
+
+/// One executed comparison.
+#[derive(Debug, Clone)]
+pub struct Check {
+    pub file: String,
+    pub metric: String,
+    pub baseline: f64,
+    pub fresh: f64,
+    pub ok: bool,
+    pub note: String,
+}
+
+/// The harness outcome: executed checks plus everything it could *not*
+/// compare (and why) — silent coverage gaps defeat the purpose.
+#[derive(Debug, Default)]
+pub struct CompareReport {
+    pub checks: Vec<Check>,
+    pub skipped: Vec<String>,
+}
+
+impl CompareReport {
+    pub fn regressions(&self) -> usize {
+        self.checks.iter().filter(|c| !c.ok).count()
+    }
+
+    /// Plain-text table for the CLI / CI log.
+    pub fn render(&self) -> String {
+        let mut o = String::new();
+        let _ = writeln!(
+            o,
+            "{:<24} {:<36} {:>12} {:>12}  result",
+            "artifact", "metric", "baseline", "fresh"
+        );
+        for c in &self.checks {
+            let _ = writeln!(
+                o,
+                "{:<24} {:<36} {:>12.4} {:>12.4}  {}{}",
+                c.file,
+                c.metric,
+                c.baseline,
+                c.fresh,
+                if c.ok { "ok" } else { "REGRESSION" },
+                if c.note.is_empty() { String::new() } else { format!(" ({})", c.note) },
+            );
+        }
+        for s in &self.skipped {
+            let _ = writeln!(o, "skipped: {s}");
+        }
+        let _ = writeln!(
+            o,
+            "{} check(s), {} regression(s), {} skipped",
+            self.checks.len(),
+            self.regressions(),
+            self.skipped.len()
+        );
+        o
+    }
+}
+
+fn load(path: &Path) -> Result<Json> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading bench artifact {path:?}"))?;
+    Json::parse(text.trim()).map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))
+}
+
+/// String image of a JSON scalar, for env-key equality.
+fn scalar_image(v: Option<&Json>) -> String {
+    match v {
+        None => "<absent>".to_string(),
+        Some(Json::Str(s)) => s.clone(),
+        Some(Json::Bool(b)) => b.to_string(),
+        Some(Json::Num(n)) => format!("{n}"),
+        Some(other) => format!("{other:?}"),
+    }
+}
+
+/// Compare every known `BENCH_*.json` present in *both* directories.
+pub fn compare(fresh_dir: &Path, baseline_dir: &Path) -> Result<CompareReport> {
+    let mut report = CompareReport::default();
+    let mut any_pair = false;
+    for spec in SPECS {
+        let fresh_path = fresh_dir.join(spec.file);
+        let base_path = baseline_dir.join(spec.file);
+        match (fresh_path.exists(), base_path.exists()) {
+            (false, false) => continue,
+            (false, true) => {
+                report
+                    .skipped
+                    .push(format!("{}: baseline present but no fresh artifact", spec.file));
+                continue;
+            }
+            (true, false) => {
+                report.skipped.push(format!("{}: no committed baseline", spec.file));
+                continue;
+            }
+            (true, true) => {}
+        }
+        any_pair = true;
+        let fresh = load(&fresh_path)?;
+        let base = load(&base_path)?;
+
+        // Environment comparability gate.
+        let mismatch = spec.env_keys.iter().find(|k| {
+            scalar_image(fresh.get(k)) != scalar_image(base.get(k))
+        });
+        if let Some(key) = mismatch {
+            report.skipped.push(format!(
+                "{}: environment mismatch on '{key}' (baseline {}, fresh {}) — \
+                 numbers not comparable",
+                spec.file,
+                scalar_image(base.get(key)),
+                scalar_image(fresh.get(key)),
+            ));
+            continue;
+        }
+
+        // Headline metric.
+        match (base.get(spec.metric).and_then(Json::as_f64),
+               fresh.get(spec.metric).and_then(Json::as_f64)) {
+            (Some(b), Some(f)) => {
+                let (ok, note) = match spec.bound {
+                    Bound::HigherBetter { min_ratio } => {
+                        let floor = b * min_ratio;
+                        (f >= floor, format!("min allowed {floor:.4}"))
+                    }
+                    Bound::LowerBetter { max_ratio, slack } => {
+                        let ceil = b * max_ratio + slack;
+                        (f <= ceil, format!("max allowed {ceil:.4}"))
+                    }
+                };
+                report.checks.push(Check {
+                    file: spec.file.to_string(),
+                    metric: spec.metric.to_string(),
+                    baseline: b,
+                    fresh: f,
+                    ok,
+                    note,
+                });
+            }
+            (None, _) => report
+                .skipped
+                .push(format!("{}: baseline lacks metric '{}'", spec.file, spec.metric)),
+            (Some(b), None) => report.checks.push(Check {
+                file: spec.file.to_string(),
+                metric: spec.metric.to_string(),
+                baseline: b,
+                fresh: f64::NAN,
+                ok: false,
+                note: "fresh artifact lacks the metric".to_string(),
+            }),
+        }
+
+        // Pass/fail gate: regression only when it flipped true → false.
+        if let Some(gate) = spec.gate {
+            let as_bool = |v: &Json, key: &str| match v.get(key) {
+                Some(Json::Bool(b)) => Some(*b),
+                _ => None,
+            };
+            match (as_bool(&base, gate), as_bool(&fresh, gate)) {
+                (Some(bg), Some(fg)) => report.checks.push(Check {
+                    file: spec.file.to_string(),
+                    metric: gate.to_string(),
+                    baseline: f64::from(u8::from(bg)),
+                    fresh: f64::from(u8::from(fg)),
+                    ok: !(bg && !fg),
+                    note: "gate (1 = pass)".to_string(),
+                }),
+                _ => report
+                    .skipped
+                    .push(format!("{}: gate '{gate}' absent on one side", spec.file)),
+            }
+        }
+    }
+    if !any_pair {
+        report.skipped.push(format!(
+            "no BENCH_*.json artifacts found in both {fresh_dir:?} and {baseline_dir:?}"
+        ));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn dirs(name: &str) -> (PathBuf, PathBuf) {
+        let root =
+            std::env::temp_dir().join(format!("ecsgmcmc-cmp-{name}-{}", std::process::id()));
+        let fresh = root.join("fresh");
+        let base = root.join("base");
+        std::fs::create_dir_all(&fresh).unwrap();
+        std::fs::create_dir_all(&base).unwrap();
+        (fresh, base)
+    }
+
+    fn kernels(dir: &Path, speedup: f64, gate: bool, simd: bool) {
+        std::fs::write(
+            dir.join("BENCH_kernels.json"),
+            format!(
+                "{{\"suite\":\"kernels\",\"simd_supported\":{simd},\
+                 \"mlp_geomean_speedup_simd_vs_tiled\":{speedup},\
+                 \"gate_simd_2x_pass\":{gate}}}"
+            ),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn matching_artifacts_within_threshold_pass() {
+        let (fresh, base) = dirs("pass");
+        kernels(&base, 2.9, true, true);
+        kernels(&fresh, 2.7, true, true);
+        let r = compare(&fresh, &base).unwrap();
+        assert_eq!(r.regressions(), 0, "{}", r.render());
+        assert_eq!(r.checks.len(), 2, "metric + gate");
+        std::fs::remove_dir_all(fresh.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn halved_throughput_and_flipped_gates_regress() {
+        let (fresh, base) = dirs("regress");
+        kernels(&base, 2.9, true, true);
+        kernels(&fresh, 1.2, false, true); // < 2.9 * 0.5 and gate flipped
+        let r = compare(&fresh, &base).unwrap();
+        assert_eq!(r.regressions(), 2, "{}", r.render());
+        assert!(r.render().contains("REGRESSION"));
+        std::fs::remove_dir_all(fresh.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn environment_mismatch_skips_instead_of_failing() {
+        let (fresh, base) = dirs("env");
+        kernels(&base, 2.9, true, true);
+        kernels(&fresh, 0.9, false, false); // scalar box: not comparable
+        let r = compare(&fresh, &base).unwrap();
+        assert_eq!(r.regressions(), 0, "{}", r.render());
+        assert!(r.checks.is_empty());
+        assert_eq!(r.skipped.len(), 1);
+        assert!(r.skipped[0].contains("simd_supported"), "{}", r.skipped[0]);
+        std::fs::remove_dir_all(fresh.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn lower_better_overhead_uses_ratio_plus_slack() {
+        let (fresh, base) = dirs("lower");
+        let write = |dir: &Path, pct: f64| {
+            std::fs::write(
+                dir.join("BENCH_checkpoint.json"),
+                format!("{{\"bench\":\"checkpoint\",\"overhead_pct\":{pct}}}"),
+            )
+            .unwrap();
+        };
+        write(&base, 0.9);
+        write(&fresh, 2.5); // <= 0.9*2 + 1 = 2.8 → ok
+        assert_eq!(compare(&fresh, &base).unwrap().regressions(), 0);
+        write(&fresh, 3.1); // > 2.8 → regression
+        assert_eq!(compare(&fresh, &base).unwrap().regressions(), 1);
+        std::fs::remove_dir_all(fresh.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn missing_sides_are_reported_not_silently_ignored() {
+        let (fresh, base) = dirs("missing");
+        kernels(&base, 2.9, true, true);
+        let r = compare(&fresh, &base).unwrap();
+        assert!(r.checks.is_empty());
+        assert!(r.skipped.iter().any(|s| s.contains("no fresh artifact")), "{:?}", r.skipped);
+        // A fresh artifact that *lost* its headline metric is a failure.
+        std::fs::write(fresh.join("BENCH_kernels.json"), "{\"simd_supported\":true}").unwrap();
+        let r = compare(&fresh, &base).unwrap();
+        assert_eq!(r.regressions(), 1, "{}", r.render());
+        std::fs::remove_dir_all(fresh.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn empty_directories_note_the_absence() {
+        let (fresh, base) = dirs("empty");
+        let r = compare(&fresh, &base).unwrap();
+        assert_eq!(r.checks.len(), 0);
+        assert_eq!(r.skipped.len(), 1);
+        std::fs::remove_dir_all(fresh.parent().unwrap()).ok();
+    }
+}

@@ -1,0 +1,562 @@
+//! Run-health evaluation at center-step boundaries (DESIGN.md §13).
+//!
+//! The monitor derives higher-order signals from state the center loop
+//! already owns — no extra locks on the exchange path:
+//!
+//! * **stalled chains** — an *active* worker whose last upload (admitted
+//!   or gate-rejected; arrival is the liveness signal) is more than
+//!   [`STALL_CENTER_STEPS`] center steps old;
+//! * **divergence** — any non-finite θ coordinate, or ‖θ‖₂ above
+//!   [`DIVERGENCE_NORM`] (the sampler has left any plausible posterior);
+//! * **staleness-gate pressure** — over the window since the last
+//!   publish, more than [`PRESSURE_REJECT_RATE`] of uploads rejected by
+//!   the bounded-staleness gate (Chen et al. 2016's regime where stale
+//!   gradients stop buying mixing);
+//! * **ESS/sec** — `min_ess / elapsed` from the live `OnlineDiag` at
+//!   publish cadence, with the delta vs the previous publish as a trend.
+//!
+//! Signals fan out three ways at telemetry cadence (and immediately on
+//! any status transition): registry gauges (`health_*`, scraped via
+//! `/metrics`), a schema-additive `health` stream event (stream v4),
+//! and the shared [`RunSnapshot`] behind `/status` / `/healthz`.
+
+use super::{DiagSnap, RunSnapshot, Shared, StageSnap};
+use crate::coordinator::Metrics;
+use crate::sink::{JsonlWriter, OnlineDiag};
+use crate::telemetry::{self, Aggregate, Stage};
+use std::sync::{Arc, Mutex};
+
+/// Center steps without an upload before an active worker counts as
+/// stalled (uploads drive center steps, so round-robin gaps are ~fleet
+/// size — 200 is an order of magnitude of headroom).
+pub const STALL_CENTER_STEPS: u64 = 200;
+
+/// ‖θ‖₂ above this is divergence regardless of finiteness.
+pub const DIVERGENCE_NORM: f64 = 1e8;
+
+/// Windowed reject-rate threshold for staleness-gate pressure.
+pub const PRESSURE_REJECT_RATE: f64 = 0.5;
+
+/// Minimum exchanges in the window before the reject rate is meaningful.
+pub const PRESSURE_MIN_WINDOW: u64 = 16;
+
+/// Overall run condition, worst signal wins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HealthStatus {
+    /// Everything nominal.
+    #[default]
+    Ok,
+    /// Progress continues but a signal needs attention (stalls,
+    /// gate pressure).
+    Degraded,
+    /// The run is no longer producing usable samples (divergence).
+    Critical,
+}
+
+impl HealthStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthStatus::Ok => "ok",
+            HealthStatus::Degraded => "degraded",
+            HealthStatus::Critical => "critical",
+        }
+    }
+
+    /// Gauge encoding: 0 ok, 1 degraded, 2 critical.
+    pub fn code(self) -> i64 {
+        match self {
+            HealthStatus::Ok => 0,
+            HealthStatus::Degraded => 1,
+            HealthStatus::Critical => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<HealthStatus> {
+        match s {
+            "ok" => Some(HealthStatus::Ok),
+            "degraded" => Some(HealthStatus::Degraded),
+            "critical" => Some(HealthStatus::Critical),
+            _ => None,
+        }
+    }
+}
+
+/// One health evaluation — what the `health` stream event carries and
+/// `/healthz` answers from.
+#[derive(Debug, Clone, Default)]
+pub struct HealthSnapshot {
+    pub status: HealthStatus,
+    /// Run-relative seconds at evaluation.
+    pub t: f64,
+    pub center_steps: u64,
+    pub workers_active: usize,
+    /// Worker ids currently considered stalled.
+    pub stalled: Vec<usize>,
+    pub divergent: bool,
+    /// ‖θ_center‖₂ (NaN only if θ itself is non-finite in a way that
+    /// poisons the sum — still reported, still divergent).
+    pub theta_norm: f64,
+    /// Staleness-gate reject rate over the window since the last publish.
+    pub reject_rate: f64,
+    /// `min_ess / elapsed` at the last diagnostics refresh; NaN before
+    /// the first refresh or without a diag sink.
+    pub ess_per_sec: f64,
+    /// Change in `ess_per_sec` vs the previous refresh (0 until two
+    /// refreshes exist).
+    pub ess_trend: f64,
+    /// Human- and machine-readable causes, one per firing signal; empty
+    /// when `status` is `ok`.
+    pub reasons: Vec<String>,
+}
+
+/// Stateful evaluator owned by the EC center loop.
+pub struct HealthMonitor {
+    staleness_bound: Option<u64>,
+    /// Per-worker center-step stamp of the last seen upload.
+    last_up: Vec<u64>,
+    /// Reject-window baselines, rolled at each publish.
+    win_exchanges: u64,
+    win_rejects: u64,
+    /// ESS-rate state across publishes.
+    ess_rate: f64,
+    ess_trend: f64,
+    prev_ess_rate: f64,
+    /// Status at the last publish (None before the first), for
+    /// transition-triggered emits between cadence points.
+    published: Option<HealthStatus>,
+    /// Registry-mirroring baselines for the four fault counters
+    /// (deltas only — the registry outlives the run).
+    mirrored: [u64; 4],
+}
+
+impl HealthMonitor {
+    pub fn new(staleness_bound: Option<u64>) -> HealthMonitor {
+        HealthMonitor {
+            staleness_bound,
+            last_up: Vec::new(),
+            win_exchanges: 0,
+            win_rejects: 0,
+            ess_rate: f64::NAN,
+            ess_trend: 0.0,
+            prev_ess_rate: f64::NAN,
+            published: None,
+            mirrored: [0; 4],
+        }
+    }
+
+    /// Record that worker `w` delivered an upload at `center_steps`
+    /// (admitted or not — arrival is liveness).
+    pub fn note_upload(&mut self, w: usize, center_steps: u64) {
+        if self.last_up.len() <= w {
+            self.last_up.resize(w + 1, 0);
+        }
+        self.last_up[w] = center_steps;
+    }
+
+    /// Has `snap`'s status changed since the last publish?
+    pub fn transitioned(&self, snap: &HealthSnapshot) -> bool {
+        self.published != Some(snap.status)
+    }
+
+    /// Evaluate every signal at a center-step boundary. Pure read of the
+    /// center's own state; `diag` is only passed at publish cadence
+    /// (summary() walks the batch-means chains).
+    pub fn evaluate(
+        &mut self,
+        t: f64,
+        theta: &[f32],
+        active: &[bool],
+        metrics: &Metrics,
+        center_steps: u64,
+        diag: Option<&DiagSnap>,
+    ) -> HealthSnapshot {
+        let mut sumsq = 0.0f64;
+        let mut finite = true;
+        for &x in theta {
+            let x = x as f64;
+            if !x.is_finite() {
+                finite = false;
+            }
+            sumsq += x * x;
+        }
+        let theta_norm = sumsq.sqrt();
+        let divergent = !finite || !theta_norm.is_finite() || theta_norm > DIVERGENCE_NORM;
+
+        let mut stalled = Vec::new();
+        for (w, &is_active) in active.iter().enumerate() {
+            if !is_active {
+                continue;
+            }
+            let last = self.last_up.get(w).copied().unwrap_or(0);
+            if center_steps.saturating_sub(last) > STALL_CENTER_STEPS {
+                stalled.push(w);
+            }
+        }
+
+        let d_ex = metrics.exchanges.saturating_sub(self.win_exchanges);
+        let d_rej = metrics.stale_rejects.saturating_sub(self.win_rejects);
+        let reject_rate = if d_ex > 0 { d_rej as f64 / d_ex as f64 } else { 0.0 };
+        let pressure = self.staleness_bound.is_some()
+            && d_ex >= PRESSURE_MIN_WINDOW
+            && reject_rate > PRESSURE_REJECT_RATE;
+
+        if let Some(d) = diag {
+            if t > 1e-9 && d.min_ess.is_finite() {
+                let rate = d.min_ess / t;
+                self.ess_trend =
+                    if self.prev_ess_rate.is_finite() { rate - self.prev_ess_rate } else { 0.0 };
+                self.prev_ess_rate = rate;
+                self.ess_rate = rate;
+            }
+        }
+
+        let mut reasons = Vec::new();
+        if divergent {
+            if finite {
+                reasons.push(format!(
+                    "theta norm {theta_norm:.3e} exceeds divergence bound {DIVERGENCE_NORM:.0e}"
+                ));
+            } else {
+                reasons.push("theta has non-finite coordinates".to_string());
+            }
+        }
+        for &w in &stalled {
+            reasons.push(format!(
+                "worker {w} stalled: no upload for more than {STALL_CENTER_STEPS} center steps"
+            ));
+        }
+        if pressure {
+            reasons.push(format!(
+                "staleness gate under pressure: {:.0}% of the last {d_ex} uploads rejected",
+                reject_rate * 100.0
+            ));
+        }
+
+        let status = if divergent {
+            HealthStatus::Critical
+        } else if !stalled.is_empty() || pressure {
+            HealthStatus::Degraded
+        } else {
+            HealthStatus::Ok
+        };
+
+        HealthSnapshot {
+            status,
+            t,
+            center_steps,
+            workers_active: active.iter().filter(|a| **a).count(),
+            stalled,
+            divergent,
+            theta_norm,
+            reject_rate,
+            ess_per_sec: self.ess_rate,
+            ess_trend: self.ess_trend,
+            reasons,
+        }
+    }
+
+    /// Commit a publish: roll the reject window and remember the status
+    /// for transition detection.
+    fn roll(&mut self, metrics: &Metrics, status: HealthStatus) {
+        self.win_exchanges = metrics.exchanges;
+        self.win_rejects = metrics.stale_rejects;
+        self.published = Some(status);
+    }
+
+    /// Mirror the four fault counters into the metrics registry as
+    /// deltas, so they scrape live on `/metrics` instead of waiting for
+    /// the end-of-run summary. `sink_degraded_live` is the primary
+    /// writer's running count (folded into `Metrics` only at run end).
+    fn mirror_fault_counters(&mut self, metrics: &Metrics, sink_degraded_live: u64) {
+        const NAMES: [&str; 4] =
+            ["stale_rejects", "ckpt_retries", "sink_degraded", "worker_panics"];
+        let live = [
+            metrics.stale_rejects,
+            metrics.ckpt_retries,
+            metrics.sink_degraded + sink_degraded_live,
+            metrics.worker_panics,
+        ];
+        for (i, name) in NAMES.iter().enumerate() {
+            let delta = live[i].saturating_sub(self.mirrored[i]);
+            if delta > 0 {
+                telemetry::counter(name).add(delta);
+                self.mirrored[i] = live[i];
+            }
+        }
+    }
+}
+
+/// Everything the EC center loop needs to run the observatory: the
+/// monitor, the shared snapshot cell the HTTP server reads, and the
+/// optional stream writer / diag accumulator of the run's sink stack.
+/// Lives on `CenterCell` as `Option<ObserveCell>` — `None` (observe
+/// off) costs the one relaxed load that produced it.
+pub struct ObserveCell {
+    monitor: HealthMonitor,
+    shared: Arc<Shared>,
+    writer: Option<Arc<JsonlWriter>>,
+    diag: Option<Arc<Mutex<OnlineDiag>>>,
+    scheme: String,
+    workers_total: usize,
+    seed: u64,
+}
+
+impl ObserveCell {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        shared: Arc<Shared>,
+        scheme: &str,
+        workers_total: usize,
+        seed: u64,
+        staleness_bound: Option<u64>,
+        writer: Option<Arc<JsonlWriter>>,
+        diag: Option<Arc<Mutex<OnlineDiag>>>,
+    ) -> ObserveCell {
+        ObserveCell {
+            monitor: HealthMonitor::new(staleness_bound),
+            shared,
+            writer,
+            diag,
+            scheme: scheme.to_string(),
+            workers_total,
+            seed,
+        }
+    }
+
+    /// Forward an upload arrival to the stall tracker.
+    pub fn note_upload(&mut self, w: usize, center_steps: u64) {
+        self.monitor.note_upload(w, center_steps);
+    }
+
+    /// Center-step boundary hook: evaluate always, publish at telemetry
+    /// cadence or immediately on a status transition.
+    pub fn tick(
+        &mut self,
+        t: f64,
+        theta: &[f32],
+        active: &[bool],
+        metrics: &Metrics,
+        center_steps: u64,
+        agg: Option<&Aggregate>,
+    ) {
+        let due = center_steps % telemetry::every() == 0;
+        let diag = if due { self.diag_snap() } else { None };
+        let snap = self.monitor.evaluate(t, theta, active, metrics, center_steps, diag.as_ref());
+        if !(due || self.monitor.transitioned(&snap)) {
+            return;
+        }
+        self.publish(snap, diag, active, metrics, agg, false);
+    }
+
+    /// Final publish at run end: always emits, marks the run finished.
+    pub fn finish(
+        &mut self,
+        t: f64,
+        theta: &[f32],
+        active: &[bool],
+        metrics: &Metrics,
+        center_steps: u64,
+        agg: Option<&Aggregate>,
+    ) {
+        let diag = self.diag_snap();
+        let snap = self.monitor.evaluate(t, theta, active, metrics, center_steps, diag.as_ref());
+        self.publish(snap, diag, active, metrics, agg, true);
+    }
+
+    fn diag_snap(&self) -> Option<DiagSnap> {
+        let shared = self.diag.as_ref()?;
+        let guard = match shared.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let s = guard.summary();
+        Some(DiagSnap {
+            n: s.n,
+            chains: s.chains,
+            max_rhat: s.max_rhat,
+            min_ess: s.min_ess,
+            per_chain: guard.chain_counts(),
+        })
+    }
+
+    fn publish(
+        &mut self,
+        snap: HealthSnapshot,
+        diag: Option<DiagSnap>,
+        active: &[bool],
+        metrics: &Metrics,
+        agg: Option<&Aggregate>,
+        finished: bool,
+    ) {
+        let degraded_live = self.writer.as_ref().map_or(0, |w| w.degraded_events());
+        self.monitor.mirror_fault_counters(metrics, degraded_live);
+
+        telemetry::gauge("health_status").set(snap.status.code());
+        telemetry::gauge("health_stalled_chains").set(snap.stalled.len() as i64);
+        telemetry::gauge("health_divergent").set(snap.divergent as i64);
+        telemetry::gauge("health_workers_active").set(snap.workers_active as i64);
+
+        let stages: Vec<StageSnap> = agg
+            .map(|a| {
+                Stage::ALL
+                    .iter()
+                    .zip(a.stages.iter())
+                    .filter(|(_, h)| h.count() > 0)
+                    .map(|(s, h)| StageSnap {
+                        name: s.name(),
+                        count: h.count(),
+                        sum_ns: h.sum(),
+                        p50_ns: h.quantile(0.5),
+                        p95_ns: h.quantile(0.95),
+                        p99_ns: h.quantile(0.99),
+                        max_ns: h.max(),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        self.shared.update(|r: &mut RunSnapshot| {
+            r.started = true;
+            r.finished |= finished;
+            r.scheme = self.scheme.clone();
+            r.workers_total = self.workers_total;
+            r.seed = self.seed;
+            r.t = snap.t;
+            r.center_steps = snap.center_steps;
+            r.exchanges = metrics.exchanges;
+            r.stale_rejects = metrics.stale_rejects;
+            r.active = active.to_vec();
+            r.staleness_hist = metrics.staleness_hist.clone();
+            if !stages.is_empty() {
+                r.stages = stages.clone();
+            }
+            if diag.is_some() {
+                r.diag = diag.clone();
+            }
+            r.health = snap.clone();
+        });
+
+        if let Some(writer) = &self.writer {
+            writer.health(&snap);
+        }
+        self.monitor.roll(metrics, snap.status);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_metrics() -> Metrics {
+        Metrics::default()
+    }
+
+    #[test]
+    fn nominal_run_is_ok() {
+        let mut m = HealthMonitor::new(None);
+        m.note_upload(0, 10);
+        m.note_upload(1, 12);
+        let snap = m.evaluate(1.0, &[0.5, -0.5], &[true, true], &base_metrics(), 12, None);
+        assert_eq!(snap.status, HealthStatus::Ok);
+        assert!(snap.reasons.is_empty());
+        assert_eq!(snap.workers_active, 2);
+        assert!((snap.theta_norm - 0.5f64.hypot(0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_theta_is_critical() {
+        let mut m = HealthMonitor::new(None);
+        let snap = m.evaluate(1.0, &[f32::NAN, 0.0], &[true], &base_metrics(), 1, None);
+        assert_eq!(snap.status, HealthStatus::Critical);
+        assert!(snap.divergent);
+        assert!(snap.reasons.iter().any(|r| r.contains("non-finite")));
+    }
+
+    #[test]
+    fn exploding_norm_is_critical() {
+        let mut m = HealthMonitor::new(None);
+        let snap = m.evaluate(1.0, &[3.0e8, 0.0], &[true], &base_metrics(), 1, None);
+        assert_eq!(snap.status, HealthStatus::Critical);
+        assert!(snap.reasons.iter().any(|r| r.contains("divergence bound")));
+    }
+
+    #[test]
+    fn silent_active_worker_stalls_inactive_does_not() {
+        let mut m = HealthMonitor::new(None);
+        m.note_upload(0, 390);
+        // Worker 1 last uploaded at center step 100; worker 2 is retired.
+        m.note_upload(1, 100);
+        m.note_upload(2, 100);
+        let snap =
+            m.evaluate(2.0, &[0.0], &[true, true, false], &base_metrics(), 400, None);
+        assert_eq!(snap.status, HealthStatus::Degraded);
+        assert_eq!(snap.stalled, vec![1]);
+        assert_eq!(snap.workers_active, 2);
+    }
+
+    #[test]
+    fn reject_pressure_fires_and_clears_with_the_window() {
+        let mut m = HealthMonitor::new(Some(8));
+        let mut metrics = base_metrics();
+        metrics.exchanges = 100;
+        metrics.stale_rejects = 80;
+        let snap = m.evaluate(1.0, &[0.0], &[true], &metrics, 100, None);
+        assert_eq!(snap.status, HealthStatus::Degraded);
+        assert!((snap.reject_rate - 0.8).abs() < 1e-12);
+        m.roll(&metrics, snap.status);
+        // Next window: healthy again.
+        metrics.exchanges = 200;
+        metrics.stale_rejects = 81;
+        let snap = m.evaluate(2.0, &[0.0], &[true], &metrics, 200, None);
+        assert_eq!(snap.status, HealthStatus::Ok);
+        // Without a configured bound the same rates never fire.
+        let mut unbounded = HealthMonitor::new(None);
+        let snap = unbounded.evaluate(1.0, &[0.0], &[true], &metrics, 200, None);
+        assert_eq!(snap.status, HealthStatus::Ok);
+    }
+
+    #[test]
+    fn ess_rate_and_trend_track_refreshes() {
+        let mut m = HealthMonitor::new(None);
+        let snap = m.evaluate(1.0, &[0.0], &[true], &base_metrics(), 10, None);
+        assert!(snap.ess_per_sec.is_nan(), "no diag yet");
+        let d1 = DiagSnap { min_ess: 10.0, ..Default::default() };
+        let snap = m.evaluate(1.0, &[0.0], &[true], &base_metrics(), 20, Some(&d1));
+        assert!((snap.ess_per_sec - 10.0).abs() < 1e-12);
+        assert_eq!(snap.ess_trend, 0.0);
+        let d2 = DiagSnap { min_ess: 30.0, ..Default::default() };
+        let snap = m.evaluate(2.0, &[0.0], &[true], &base_metrics(), 30, Some(&d2));
+        assert!((snap.ess_per_sec - 15.0).abs() < 1e-12);
+        assert!((snap.ess_trend - 5.0).abs() < 1e-12);
+        // Between refreshes the last rate is carried.
+        let snap = m.evaluate(2.5, &[0.0], &[true], &base_metrics(), 35, None);
+        assert!((snap.ess_per_sec - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transition_detection_tracks_publishes() {
+        let mut m = HealthMonitor::new(None);
+        let ok = m.evaluate(1.0, &[0.0], &[true], &base_metrics(), 1, None);
+        assert!(m.transitioned(&ok), "first snapshot is always a transition");
+        m.roll(&base_metrics(), ok.status);
+        assert!(!m.transitioned(&ok));
+        let bad = m.evaluate(1.0, &[f32::INFINITY], &[true], &base_metrics(), 2, None);
+        assert!(m.transitioned(&bad));
+    }
+
+    #[test]
+    fn fault_counters_mirror_deltas_only() {
+        let mut m = HealthMonitor::new(None);
+        let base = telemetry::counter("ckpt_retries").get();
+        let mut metrics = base_metrics();
+        metrics.ckpt_retries = 3;
+        m.mirror_fault_counters(&metrics, 0);
+        assert_eq!(telemetry::counter("ckpt_retries").get(), base + 3);
+        // Re-mirroring the same totals adds nothing.
+        m.mirror_fault_counters(&metrics, 0);
+        assert_eq!(telemetry::counter("ckpt_retries").get(), base + 3);
+        metrics.ckpt_retries = 5;
+        m.mirror_fault_counters(&metrics, 0);
+        assert_eq!(telemetry::counter("ckpt_retries").get(), base + 5);
+    }
+}

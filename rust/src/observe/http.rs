@@ -1,0 +1,402 @@
+//! Dependency-free HTTP/1.1 exposition server for the observatory.
+//!
+//! Deliberately minimal: GET-only, `Connection: close`, bounded
+//! concurrent connections ([`MAX_ACTIVE`], overflow answered 503
+//! inline), 2 s socket timeouts. Handlers only read the [`Shared`]
+//! snapshot cell — a scrape can never touch coordinator state, so a
+//! slow or hostile client costs one short-lived thread, nothing else.
+//!
+//! Routes: `/metrics` (Prometheus text format), `/status` (JSON run
+//! summary via `util/json::Emitter`), `/healthz` (200/503 readiness
+//! with machine-readable reasons).
+
+use super::health::HealthStatus;
+use super::{prometheus, RunSnapshot, Shared};
+use crate::telemetry::hist::linear_hist_quantile;
+use crate::util::json::Emitter;
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Concurrent in-flight connections before new ones get an inline 503.
+pub const MAX_ACTIVE: usize = 8;
+
+/// Per-connection socket timeouts (read and write).
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Request head cap — anything longer is a bad request.
+const MAX_HEAD: usize = 8 * 1024;
+
+/// Running exposition server; dropping (or [`ServerHandle::shutdown`])
+/// stops the accept loop and joins it.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        let Some(handle) = self.accept.take() else { return };
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept() call with a throwaway connection.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(250));
+        let _ = handle.join();
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Bind `addr` and serve the observatory endpoints from a background
+/// accept thread until shutdown.
+pub fn serve(addr: &str, shared: Arc<Shared>) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("observe: cannot bind exposition server on {addr:?}"))?;
+    let bound = listener.local_addr().context("observe: listener has no local address")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_accept = stop.clone();
+    let active = Arc::new(AtomicUsize::new(0));
+    let accept = std::thread::Builder::new()
+        .name("observe-http".to_string())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop_accept.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(mut stream) = conn else { continue };
+                if active.load(Ordering::SeqCst) >= MAX_ACTIVE {
+                    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+                    let _ = stream.write_all(
+                        b"HTTP/1.1 503 Service Unavailable\r\nConnection: close\r\nContent-Length: 0\r\n\r\n",
+                    );
+                    continue;
+                }
+                active.fetch_add(1, Ordering::SeqCst);
+                let shared = shared.clone();
+                let active = active.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("observe-conn".to_string())
+                    .spawn(move || {
+                        handle_conn(stream, &shared);
+                        active.fetch_sub(1, Ordering::SeqCst);
+                    });
+                if let Err(_e) = spawned {
+                    active.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+        })
+        .context("observe: cannot spawn accept thread")?;
+    Ok(ServerHandle { addr: bound, stop, accept: Some(accept) })
+}
+
+fn handle_conn(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > MAX_HEAD {
+                    break;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let mut request = text.lines().next().unwrap_or("").split_whitespace();
+    let method = request.next().unwrap_or("");
+    let path = request.next().unwrap_or("/");
+    let path = path.split('?').next().unwrap_or(path);
+
+    let (code, reason, content_type, body) = route(method, path, shared);
+    let _ = write!(
+        stream,
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+fn route(method: &str, path: &str, shared: &Shared) -> (u16, &'static str, &'static str, String) {
+    if method != "GET" {
+        return (405, "Method Not Allowed", "application/json", error_body("method not allowed"));
+    }
+    let snap = shared.snapshot();
+    match path {
+        "/metrics" => (200, "OK", prometheus::CONTENT_TYPE, prometheus::render(&snap)),
+        "/status" => (200, "OK", "application/json", status_body(&snap)),
+        "/healthz" => {
+            let ready = snap.health.status != HealthStatus::Critical;
+            let (code, reason) =
+                if ready { (200, "OK") } else { (503, "Service Unavailable") };
+            (code, reason, "application/json", healthz_body(&snap, ready))
+        }
+        _ => (404, "Not Found", "application/json", error_body("not found")),
+    }
+}
+
+fn error_body(msg: &str) -> String {
+    let mut e = Emitter::new();
+    e.begin_obj();
+    e.key("error");
+    e.str_val(msg);
+    e.end_obj();
+    e.into_string()
+}
+
+fn emit_health(e: &mut Emitter, snap: &RunSnapshot, ready: Option<bool>) {
+    e.begin_obj();
+    if let Some(ready) = ready {
+        e.key("ready");
+        e.bool_val(ready);
+    }
+    e.key("status");
+    e.str_val(snap.health.status.name());
+    e.key("workers_active");
+    e.num(snap.health.workers_active as f64);
+    e.key("stalled_chains");
+    e.begin_arr();
+    for &w in &snap.health.stalled {
+        e.num(w as f64);
+    }
+    e.end_arr();
+    e.key("divergent");
+    e.bool_val(snap.health.divergent);
+    e.key("theta_norm");
+    e.num(snap.health.theta_norm);
+    e.key("reject_rate");
+    e.num(snap.health.reject_rate);
+    e.key("ess_per_sec");
+    e.num(snap.health.ess_per_sec);
+    e.key("ess_trend");
+    e.num(snap.health.ess_trend);
+    e.key("reasons");
+    e.begin_arr();
+    for r in &snap.health.reasons {
+        e.str_val(r);
+    }
+    e.end_arr();
+    e.end_obj();
+}
+
+/// `/healthz`: readiness plus every machine-readable reason.
+fn healthz_body(snap: &RunSnapshot, ready: bool) -> String {
+    let mut e = Emitter::new();
+    emit_health(&mut e, snap, Some(ready));
+    let mut body = e.into_string();
+    body.push('\n');
+    body
+}
+
+/// `/status`: the full run summary.
+fn status_body(snap: &RunSnapshot) -> String {
+    let mut e = Emitter::new();
+    e.begin_obj();
+    e.key("started");
+    e.bool_val(snap.started);
+    e.key("finished");
+    e.bool_val(snap.finished);
+    e.key("scheme");
+    e.str_val(&snap.scheme);
+    e.key("workers_total");
+    e.num(snap.workers_total as f64);
+    e.key("workers_active");
+    e.num(snap.active.iter().filter(|a| **a).count() as f64);
+    e.key("seed");
+    e.str_val(&format!("{}", snap.seed));
+    e.key("t");
+    e.num(snap.t);
+    e.key("center_steps");
+    e.num(snap.center_steps as f64);
+    e.key("exchanges");
+    e.num(snap.exchanges as f64);
+    e.key("stale_rejects");
+    e.num(snap.stale_rejects as f64);
+    e.key("active");
+    e.begin_arr();
+    for &a in &snap.active {
+        e.bool_val(a);
+    }
+    e.end_arr();
+    e.key("staleness");
+    e.begin_obj();
+    e.key("count");
+    e.num(snap.staleness_hist.iter().sum::<u64>() as f64);
+    for (key, q) in [("p50", 0.5), ("p95", 0.95), ("p99", 0.99)] {
+        e.key(key);
+        e.num(linear_hist_quantile(&snap.staleness_hist, q) as f64);
+    }
+    e.key("max");
+    e.num(snap.staleness_hist.iter().rposition(|&c| c > 0).unwrap_or(0) as f64);
+    e.end_obj();
+    if !snap.stages.is_empty() {
+        e.key("stages");
+        e.begin_obj();
+        for s in &snap.stages {
+            e.key(s.name);
+            e.begin_obj();
+            e.key("count");
+            e.num(s.count as f64);
+            e.key("total_ns");
+            e.num(s.sum_ns as f64);
+            e.key("p50_ns");
+            e.num(s.p50_ns as f64);
+            e.key("p99_ns");
+            e.num(s.p99_ns as f64);
+            e.end_obj();
+        }
+        e.end_obj();
+    }
+    if let Some(d) = &snap.diag {
+        e.key("diag");
+        e.begin_obj();
+        e.key("n");
+        e.num(d.n as f64);
+        e.key("chains");
+        e.num(d.chains as f64);
+        e.key("max_rhat");
+        e.num(d.max_rhat);
+        e.key("min_ess");
+        e.num(d.min_ess);
+        e.key("chain_samples");
+        e.begin_arr();
+        for &(chain, n) in &d.per_chain {
+            e.begin_obj();
+            e.key("chain");
+            e.num(chain as f64);
+            e.key("samples");
+            e.num(n as f64);
+            e.end_obj();
+        }
+        e.end_arr();
+        e.end_obj();
+    }
+    e.key("health");
+    emit_health(&mut e, snap, None);
+    e.end_obj();
+    let mut body = e.into_string();
+    body.push('\n');
+    body
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn get(addr: SocketAddr, request: &str) -> (u16, String) {
+        let mut s = TcpStream::connect_timeout(&addr, Duration::from_secs(2)).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        s.set_write_timeout(Some(Duration::from_secs(2))).unwrap();
+        s.write_all(request.as_bytes()).unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        let code = raw
+            .split_whitespace()
+            .nth(1)
+            .and_then(|c| c.parse::<u16>().ok())
+            .unwrap_or(0);
+        let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (code, body)
+    }
+
+    fn test_server(mutate: impl FnOnce(&mut RunSnapshot)) -> (ServerHandle, Arc<Shared>) {
+        let shared = Arc::new(Shared::default());
+        shared.update(mutate);
+        let server = serve("127.0.0.1:0", shared.clone()).unwrap();
+        (server, shared)
+    }
+
+    #[test]
+    fn endpoints_respond_with_expected_codes_and_bodies() {
+        let (server, _shared) = test_server(|r| {
+            r.started = true;
+            r.scheme = "ec".into();
+            r.workers_total = 4;
+            r.active = vec![true; 4];
+            r.staleness_hist = vec![0; 65];
+        });
+        let addr = server.addr();
+
+        let (code, body) = get(addr, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(code, 200);
+        prometheus::validate_exposition(&body).expect("parse-valid exposition");
+        assert!(body.contains("ecsgmcmc_up 1"));
+
+        let (code, body) = get(addr, "GET /status HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(code, 200);
+        let v = Json::parse(&body).expect("status is valid JSON");
+        assert_eq!(v.get("scheme").and_then(Json::as_str), Some("ec"));
+        assert!(v.get("health").is_some());
+
+        let (code, body) = get(addr, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(code, 200);
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("ok"));
+
+        let (code, _) = get(addr, "GET /nope HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(code, 404);
+        let (code, _) = get(addr, "POST /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(code, 405);
+
+        server.shutdown();
+    }
+
+    #[test]
+    fn critical_health_fails_readiness() {
+        let (server, shared) = test_server(|r| {
+            r.health.status = HealthStatus::Critical;
+            r.health.divergent = true;
+            r.health.reasons = vec!["theta has non-finite coordinates".into()];
+        });
+        let (code, body) = get(server.addr(), "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(code, 503);
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("ready").and_then(Json::as_f64), None); // bool, not number
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("critical"));
+        assert!(v
+            .get("reasons")
+            .and_then(Json::as_arr)
+            .is_some_and(|r| !r.is_empty()));
+        shared.update(|r| r.health = Default::default());
+        let (code, _) = get(server.addr(), "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(code, 200);
+        server.shutdown();
+    }
+
+    #[test]
+    fn garbage_requests_do_not_kill_the_server() {
+        let (server, _shared) = test_server(|_| {});
+        let addr = server.addr();
+        // Raw garbage, then a clean request must still work.
+        {
+            let mut s = TcpStream::connect_timeout(&addr, Duration::from_secs(2)).unwrap();
+            s.set_write_timeout(Some(Duration::from_secs(2))).unwrap();
+            let _ = s.write_all(b"\x00\xff\xfegarbage\r\n\r\n");
+        }
+        let (code, _) = get(addr, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(code, 200);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,220 @@
+//! Fleet observatory (DESIGN.md §13): network-exposed run observability.
+//!
+//! Three surfaces over one shared run snapshot:
+//!
+//! * an HTTP/1.1 exposition server ([`http`], std `TcpListener`, no
+//!   dependencies) serving `/metrics` (Prometheus text format rendered
+//!   from the telemetry registry + the live run snapshot), `/status`
+//!   (JSON run summary incl. live split-R̂/ESS) and `/healthz`
+//!   (readiness with machine-readable reasons);
+//! * a [`health::HealthMonitor`] the EC center loop evaluates at
+//!   center-step boundaries, deriving stalled-chain / divergence /
+//!   staleness-pressure / ESS-per-sec signals and emitting them as
+//!   registry gauges, schema-additive `health` stream events (stream
+//!   v4) and `ecsgmcmc top` rows;
+//! * offline harnesses: [`report`] (`ecsgmcmc report`, Markdown+JSON
+//!   experiment report from a run stream) and [`bench_compare`]
+//!   (`ecsgmcmc bench --compare`, regression diff of fresh
+//!   `BENCH_*.json` against committed baselines).
+//!
+//! **Overhead contract** (the §11 telemetry discipline): the observatory
+//! is *disabled* by default and the disabled path is exactly one relaxed
+//! atomic load per run (checked once at driver start, not per step).
+//! Enabled, the observer only ever *reads* sampler state — θ scans, diag
+//! locks and snapshot publishes touch no RNG stream — so an observed
+//! run's trajectories are bit-identical to an unobserved run's
+//! (asserted in `tests/test_observe.rs`).
+
+pub mod bench_compare;
+pub mod health;
+pub mod http;
+pub mod prometheus;
+pub mod report;
+
+pub use health::{HealthMonitor, HealthSnapshot, HealthStatus, ObserveCell};
+
+use anyhow::Result;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is the observatory on? The entire disabled-path cost: one relaxed
+/// load + branch, consulted once per run by the EC driver.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Process-global observatory state: the run snapshot cell the center
+/// loop publishes into, and the HTTP server reading it.
+struct Global {
+    shared: Mutex<Option<Arc<Shared>>>,
+    server: Mutex<Option<http::ServerHandle>>,
+}
+
+fn global() -> &'static Global {
+    static GLOBAL: OnceLock<Global> = OnceLock::new();
+    GLOBAL.get_or_init(|| Global { shared: Mutex::new(None), server: Mutex::new(None) })
+}
+
+fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// One-shot configuration from config/CLI (`[observe]`, `--observe` /
+/// `--observe-addr`), the `telemetry::configure` commit-point
+/// discipline: call before any worker thread spawns. Tears down any
+/// previous server either way; on enable, binds `addr`, spawns the
+/// accept thread and returns the bound address (`port 0` picks a free
+/// one — what tests use).
+pub fn configure(enabled: bool, addr: &str) -> Result<Option<SocketAddr>> {
+    let g = global();
+    ENABLED.store(false, Ordering::Relaxed);
+    if let Some(server) = lock_or_recover(&g.server).take() {
+        server.shutdown();
+    }
+    *lock_or_recover(&g.shared) = None;
+    if !enabled {
+        return Ok(None);
+    }
+    let shared = Arc::new(Shared::default());
+    let server = http::serve(addr, shared.clone())?;
+    let bound = server.addr();
+    *lock_or_recover(&g.shared) = Some(shared);
+    *lock_or_recover(&g.server) = Some(server);
+    ENABLED.store(true, Ordering::Relaxed);
+    Ok(Some(bound))
+}
+
+/// The live run-state cell, if the observatory is enabled — what the EC
+/// driver grabs once at run start to build its [`ObserveCell`].
+pub fn shared() -> Option<Arc<Shared>> {
+    if !enabled() {
+        return None;
+    }
+    lock_or_recover(&global().shared).clone()
+}
+
+/// Snapshot cell between the center loop (writer) and the HTTP handler
+/// threads (readers). One mutex around a plain-old-data snapshot: the
+/// center publishes at telemetry cadence, scrapes copy out — neither
+/// side ever blocks on I/O while holding it.
+#[derive(Default)]
+pub struct Shared {
+    run: Mutex<RunSnapshot>,
+}
+
+impl Shared {
+    pub fn snapshot(&self) -> RunSnapshot {
+        lock_or_recover(&self.run).clone()
+    }
+
+    pub fn update(&self, f: impl FnOnce(&mut RunSnapshot)) {
+        f(&mut lock_or_recover(&self.run));
+    }
+}
+
+/// Everything the endpoints render, copied out of the run at publish
+/// time (no endpoint ever reaches into live coordinator state).
+#[derive(Debug, Clone, Default)]
+pub struct RunSnapshot {
+    /// Set once the driver published anything at all.
+    pub started: bool,
+    /// Set by the driver's final publish.
+    pub finished: bool,
+    pub scheme: String,
+    pub workers_total: usize,
+    pub seed: u64,
+    /// Run-relative wall-clock seconds at the last publish.
+    pub t: f64,
+    pub center_steps: u64,
+    pub exchanges: u64,
+    pub stale_rejects: u64,
+    /// Per-worker liveness (elastic membership).
+    pub active: Vec<bool>,
+    /// The run's linear staleness histogram (copy of
+    /// `Metrics::staleness_hist`).
+    pub staleness_hist: Vec<u64>,
+    /// Per-stage latency snapshots from the telemetry aggregate; empty
+    /// when telemetry is off or no spans have landed yet.
+    pub stages: Vec<StageSnap>,
+    /// Live convergence diagnostics, when the run has an `OnlineDiag`
+    /// sink attached.
+    pub diag: Option<DiagSnap>,
+    pub health: HealthSnapshot,
+}
+
+/// One stage's cumulative latency distribution at publish time.
+#[derive(Debug, Clone)]
+pub struct StageSnap {
+    pub name: &'static str,
+    pub count: u64,
+    pub sum_ns: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+/// Convergence-diagnostics snapshot for `/status` and `/metrics`.
+#[derive(Debug, Clone, Default)]
+pub struct DiagSnap {
+    /// Pooled samples folded in so far.
+    pub n: u64,
+    pub chains: usize,
+    pub max_rhat: f64,
+    pub min_ess: f64,
+    /// (chain id, samples folded) per chain.
+    pub per_chain: Vec<(usize, u64)>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // configure() owns process-global state; serialize with the suite
+    // that also binds servers.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_observatory_has_no_shared_state() {
+        let _l = LOCK.lock().unwrap();
+        configure(false, "").unwrap();
+        assert!(!enabled());
+        assert!(shared().is_none());
+    }
+
+    #[test]
+    fn configure_binds_serves_and_tears_down() {
+        let _l = LOCK.lock().unwrap();
+        let addr = configure(true, "127.0.0.1:0").unwrap().expect("bound address");
+        assert!(enabled());
+        let cell = shared().expect("shared cell");
+        cell.update(|r| {
+            r.started = true;
+            r.scheme = "ec".into();
+        });
+        // Reconfiguring replaces the server (old port goes dark).
+        configure(false, "").unwrap();
+        assert!(!enabled());
+        assert!(shared().is_none());
+        let err = std::net::TcpStream::connect_timeout(
+            &addr,
+            std::time::Duration::from_millis(200),
+        );
+        assert!(err.is_err(), "old listener must be shut down");
+    }
+
+    #[test]
+    fn configure_rejects_unbindable_addresses() {
+        let _l = LOCK.lock().unwrap();
+        assert!(configure(true, "definitely not an address").is_err());
+        assert!(!enabled(), "failed enable leaves the observatory off");
+        configure(false, "").unwrap();
+    }
+}

@@ -1,0 +1,465 @@
+//! Prometheus text exposition (format 0.0.4) for `/metrics`.
+//!
+//! Rendered from two sources at scrape time: the process-global
+//! telemetry registry (counters/gauges — already name-sanitized at the
+//! registry boundary) and the run's published [`RunSnapshot`] (stage
+//! `LogHist` quantiles as summaries, the staleness histogram, health
+//! signals, convergence diagnostics). Every series carries the
+//! `ecsgmcmc_` prefix; run-derived families win name collisions with
+//! registry entries.
+
+use super::RunSnapshot;
+use crate::telemetry::hist::linear_hist_quantile;
+use crate::telemetry::{registry_snapshot, sanitize_metric_name};
+use std::collections::BTreeSet;
+
+/// Content-Type for the classic text exposition format.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+const PREFIX: &str = "ecsgmcmc_";
+
+/// Escape a label *value* per the exposition format: backslash, double
+/// quote, newline.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(ch),
+        }
+    }
+    out
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Incremental exposition writer tracking emitted family names so
+/// registry entries never duplicate a run-derived family.
+struct Expo {
+    out: String,
+    families: BTreeSet<String>,
+}
+
+impl Expo {
+    fn new() -> Expo {
+        Expo { out: String::with_capacity(4096), families: BTreeSet::new() }
+    }
+
+    fn family(&mut self, name: &str, kind: &str, help: &str) -> bool {
+        if !self.families.insert(name.to_string()) {
+            return false;
+        }
+        self.out.push_str(&format!("# HELP {PREFIX}{name} {help}\n"));
+        self.out.push_str(&format!("# TYPE {PREFIX}{name} {kind}\n"));
+        true
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(PREFIX);
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(value));
+        self.out.push('\n');
+    }
+
+    fn scalar(&mut self, name: &str, kind: &str, help: &str, value: f64) {
+        self.family(name, kind, help);
+        self.sample(name, &[], value);
+    }
+}
+
+/// Render the full `/metrics` body from a run snapshot + the registry.
+pub fn render(snap: &RunSnapshot) -> String {
+    let mut e = Expo::new();
+
+    e.scalar("up", "gauge", "Observatory liveness: 1 while the exposition server runs.", 1.0);
+    e.scalar(
+        "run_started",
+        "gauge",
+        "1 once the run published its first snapshot.",
+        snap.started as u64 as f64,
+    );
+    e.scalar(
+        "run_finished",
+        "gauge",
+        "1 once the run's final snapshot landed.",
+        snap.finished as u64 as f64,
+    );
+    e.scalar("run_elapsed_seconds", "gauge", "Run-relative seconds at last publish.", snap.t);
+    e.scalar("run_seed", "gauge", "Run seed.", snap.seed as f64);
+    e.scalar(
+        "workers_total",
+        "gauge",
+        "Configured fleet size at run start.",
+        snap.workers_total as f64,
+    );
+    e.scalar(
+        "workers_active",
+        "gauge",
+        "Workers currently active (elastic membership).",
+        snap.active.iter().filter(|a| **a).count() as f64,
+    );
+    e.scalar(
+        "center_steps_total",
+        "counter",
+        "Center-variable steps taken by the EC server.",
+        snap.center_steps as f64,
+    );
+    e.scalar(
+        "exchanges_total",
+        "counter",
+        "Worker-center exchanges observed.",
+        snap.exchanges as f64,
+    );
+    e.scalar(
+        "stale_rejects_total",
+        "counter",
+        "Uploads rejected by the bounded-staleness admission gate.",
+        snap.stale_rejects as f64,
+    );
+
+    // Staleness distribution: summary quantiles over the run's linear
+    // histogram (bucket i = staleness i, last bucket clamps >= 64).
+    let stale_count: u64 = snap.staleness_hist.iter().sum();
+    if e.family(
+        "staleness",
+        "summary",
+        "Observed upload staleness in center steps (last bucket clamps).",
+    ) {
+        for q in [0.5, 0.95, 0.99] {
+            let v = linear_hist_quantile(&snap.staleness_hist, q);
+            e.sample("staleness", &[("quantile", &format!("{q}"))], v as f64);
+        }
+        let max = snap.staleness_hist.iter().rposition(|&c| c > 0).unwrap_or(0);
+        e.sample("staleness", &[("quantile", "1")], max as f64);
+        let sum: u64 =
+            snap.staleness_hist.iter().enumerate().map(|(i, &c)| i as u64 * c).sum();
+        e.sample("staleness_sum", &[], sum as f64);
+        e.sample("staleness_count", &[], stale_count as f64);
+    }
+    e.families.insert("staleness_sum".to_string());
+    e.families.insert("staleness_count".to_string());
+
+    // Per-stage latency summaries from the telemetry aggregate.
+    if !snap.stages.is_empty()
+        && e.family(
+            "stage_duration_ns",
+            "summary",
+            "Per-stage span durations in nanoseconds (telemetry LogHist).",
+        )
+    {
+        for s in &snap.stages {
+            for (q, v) in
+                [("0.5", s.p50_ns), ("0.95", s.p95_ns), ("0.99", s.p99_ns), ("1", s.max_ns)]
+            {
+                e.sample("stage_duration_ns", &[("stage", s.name), ("quantile", q)], v as f64);
+            }
+            e.sample("stage_duration_ns_sum", &[("stage", s.name)], s.sum_ns as f64);
+            e.sample("stage_duration_ns_count", &[("stage", s.name)], s.count as f64);
+        }
+        e.families.insert("stage_duration_ns_sum".to_string());
+        e.families.insert("stage_duration_ns_count".to_string());
+    }
+
+    // Live health signals (the integer-coded ones also exist as registry
+    // gauges; the float-valued ones only live here).
+    e.scalar(
+        "health_status",
+        "gauge",
+        "Run health: 0 ok, 1 degraded, 2 critical.",
+        snap.health.status.code() as f64,
+    );
+    e.scalar(
+        "health_stalled_chains",
+        "gauge",
+        "Active workers with no upload for the stall window.",
+        snap.health.stalled.len() as f64,
+    );
+    e.scalar(
+        "health_divergent",
+        "gauge",
+        "1 when theta is non-finite or norm-exploded.",
+        snap.health.divergent as u64 as f64,
+    );
+    e.scalar(
+        "health_workers_active",
+        "gauge",
+        "Active workers at last health evaluation.",
+        snap.health.workers_active as f64,
+    );
+    e.scalar("health_theta_norm", "gauge", "L2 norm of the center theta.", snap.health.theta_norm);
+    e.scalar(
+        "health_reject_rate",
+        "gauge",
+        "Staleness-gate reject rate over the last publish window.",
+        snap.health.reject_rate,
+    );
+    e.scalar(
+        "health_ess_per_sec",
+        "gauge",
+        "min-ESS per second from the live diagnostics (NaN before first refresh).",
+        snap.health.ess_per_sec,
+    );
+    e.scalar(
+        "health_ess_trend",
+        "gauge",
+        "Change in ESS/sec vs the previous diagnostics refresh.",
+        snap.health.ess_trend,
+    );
+
+    // Live convergence diagnostics, when the run carries a diag sink.
+    if let Some(d) = &snap.diag {
+        e.scalar("diag_samples", "counter", "Samples folded into the online diagnostics.", d.n as f64);
+        e.scalar("diag_chains", "gauge", "Chains seen by the online diagnostics.", d.chains as f64);
+        e.scalar(
+            "diag_max_rhat",
+            "gauge",
+            "Split-Rhat maximized over tracked coordinates (NaN if undefined).",
+            d.max_rhat,
+        );
+        e.scalar(
+            "diag_min_ess",
+            "gauge",
+            "Min over tracked coordinates of chain-summed ESS (NaN if undefined).",
+            d.min_ess,
+        );
+        if e.family("chain_samples", "counter", "Samples folded per chain.") {
+            for (chain, n) in &d.per_chain {
+                e.sample("chain_samples", &[("chain", &format!("{chain}"))], *n as f64);
+            }
+        }
+    }
+
+    // Everything in the metrics registry (names sanitized at the
+    // registry boundary; re-sanitized defensively — idempotent).
+    let (counters, gauges) = registry_snapshot();
+    for (name, value) in counters {
+        let name = sanitize_metric_name(&name);
+        if e.family(&name, "counter", "Registry counter.") {
+            e.sample(&name, &[], value as f64);
+        }
+    }
+    for (name, value) in gauges {
+        let name = sanitize_metric_name(&name);
+        if e.family(&name, "gauge", "Registry gauge.") {
+            e.sample(&name, &[], value as f64);
+        }
+    }
+
+    e.out
+}
+
+/// Strict-enough parser for the text exposition format, used by tests
+/// and the CI smoke to assert `/metrics` stays machine-readable: checks
+/// comment structure, metric/label name charsets, label-value escaping
+/// and float-parsable values.
+pub fn validate_exposition(text: &str) -> Result<usize, String> {
+    fn name_ok(s: &str) -> bool {
+        let mut chars = s.chars();
+        match chars.next() {
+            Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+            _ => return false,
+        }
+        chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+    fn label_name_ok(s: &str) -> bool {
+        let mut chars = s.chars();
+        match chars.next() {
+            Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+            _ => return false,
+        }
+        chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+    }
+
+    let mut samples = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let n = lineno + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            if let Some(body) = rest.strip_prefix("HELP ").or_else(|| rest.strip_prefix("TYPE ")) {
+                let name = body.split_whitespace().next().unwrap_or("");
+                if !name_ok(name) {
+                    return Err(format!("line {n}: bad metric name in comment: {name:?}"));
+                }
+            }
+            continue;
+        }
+        // Metric line: name[{labels}] value [timestamp]
+        let (name_part, rest) = match line.find(|c| c == '{' || c == ' ') {
+            Some(i) => line.split_at(i),
+            None => return Err(format!("line {n}: no value: {line:?}")),
+        };
+        if !name_ok(name_part) {
+            return Err(format!("line {n}: bad metric name {name_part:?}"));
+        }
+        let rest = if let Some(stripped) = rest.strip_prefix('{') {
+            let close = stripped
+                .find('}')
+                .ok_or_else(|| format!("line {n}: unterminated label set"))?;
+            let labels = &stripped[..close];
+            for pair in labels.split(',').filter(|p| !p.is_empty()) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| format!("line {n}: label without '=': {pair:?}"))?;
+                if !label_name_ok(k) {
+                    return Err(format!("line {n}: bad label name {k:?}"));
+                }
+                let v = v
+                    .strip_prefix('"')
+                    .and_then(|v| v.strip_suffix('"'))
+                    .ok_or_else(|| format!("line {n}: unquoted label value {v:?}"))?;
+                let mut chars = v.chars();
+                while let Some(c) = chars.next() {
+                    match c {
+                        '\\' => match chars.next() {
+                            Some('\\') | Some('"') | Some('n') => {}
+                            other => {
+                                return Err(format!("line {n}: bad escape \\{other:?}"));
+                            }
+                        },
+                        '"' => return Err(format!("line {n}: raw quote in label value")),
+                        _ => {}
+                    }
+                }
+            }
+            &stripped[close + 1..]
+        } else {
+            rest
+        };
+        let mut fields = rest.split_whitespace();
+        let value = fields.next().ok_or_else(|| format!("line {n}: missing value"))?;
+        if value.parse::<f64>().is_err() {
+            return Err(format!("line {n}: unparsable value {value:?}"));
+        }
+        if let Some(ts) = fields.next() {
+            if ts.parse::<i64>().is_err() {
+                return Err(format!("line {n}: unparsable timestamp {ts:?}"));
+            }
+        }
+        if fields.next().is_some() {
+            return Err(format!("line {n}: trailing fields"));
+        }
+        samples += 1;
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{DiagSnap, StageSnap};
+    use super::*;
+
+    fn populated_snapshot() -> RunSnapshot {
+        let mut hist = vec![0u64; 65];
+        hist[0] = 90;
+        hist[3] = 9;
+        hist[64] = 1;
+        RunSnapshot {
+            started: true,
+            scheme: "ec".into(),
+            workers_total: 4,
+            seed: 42,
+            t: 1.5,
+            center_steps: 500,
+            exchanges: 1000,
+            stale_rejects: 7,
+            active: vec![true, true, true, false],
+            staleness_hist: hist,
+            stages: vec![StageSnap {
+                name: "gemm",
+                count: 1000,
+                sum_ns: 5_000_000,
+                p50_ns: 4000,
+                p95_ns: 9000,
+                p99_ns: 12000,
+                max_ns: 50000,
+            }],
+            diag: Some(DiagSnap {
+                n: 800,
+                chains: 4,
+                max_rhat: 1.01,
+                min_ess: f64::NAN,
+                per_chain: vec![(0, 200), (1, 200), (2, 200), (3, 200)],
+            }),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn render_is_valid_exposition_with_expected_families() {
+        let text = render(&populated_snapshot());
+        let samples = validate_exposition(&text).expect("valid exposition");
+        assert!(samples > 20, "got {samples} samples");
+        for needle in [
+            "ecsgmcmc_up 1",
+            "ecsgmcmc_workers_active 3",
+            "ecsgmcmc_stage_duration_ns{stage=\"gemm\",quantile=\"0.5\"} 4000",
+            "ecsgmcmc_stage_duration_ns_count{stage=\"gemm\"} 1000",
+            "ecsgmcmc_staleness{quantile=\"1\"} 64",
+            "ecsgmcmc_staleness_count 100",
+            "ecsgmcmc_health_status 0",
+            "ecsgmcmc_diag_min_ess NaN",
+            "ecsgmcmc_chain_samples{chain=\"2\"} 200",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn nan_and_infinities_render_parsable() {
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        for s in ["NaN", "+Inf", "-Inf"] {
+            assert!(s.parse::<f64>().is_ok(), "{s} must parse as f64");
+        }
+    }
+
+    #[test]
+    fn label_values_escape() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn validator_rejects_malformed_exposition() {
+        assert!(validate_exposition("bad-name 1\n").is_err());
+        assert!(validate_exposition("name notanumber\n").is_err());
+        assert!(validate_exposition("name{l=unquoted} 1\n").is_err());
+        assert!(validate_exposition("name{l=\"x\"} 1 2 3\n").is_err());
+        assert!(validate_exposition("name{l=\"ok\"} 1\n# arbitrary comment\n").is_ok());
+    }
+
+    #[test]
+    fn registry_metrics_appear_sanitized() {
+        crate::telemetry::counter("observe.test.counter").add(1);
+        let text = render(&RunSnapshot::default());
+        assert!(text.contains("ecsgmcmc_observe_test_counter"));
+        validate_exposition(&text).expect("valid with registry entries");
+    }
+}

@@ -1,0 +1,552 @@
+//! Offline run report (`ecsgmcmc report`): one bounded-memory pass over
+//! a JSONL run stream producing a Markdown report plus a machine-read
+//! JSON sibling.
+//!
+//! Convergence numbers are re-computed by folding every sample event
+//! into the *same* `OnlineDiag` accumulator `replay --diag` uses
+//! (`sink/replay.rs::stream_diag`), in the same stream order — so the
+//! report's split-R̂/ESS are bit-identical to the diagnostics a live
+//! run or a replay would print, never a parallel implementation that
+//! can drift.
+
+use crate::coordinator::Metrics;
+use crate::sink::replay::{scan_stream, RunEvent};
+use crate::sink::OnlineDiag;
+use crate::util::json::{Emitter, Json};
+use crate::util::timer::human_duration_secs;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs::File;
+use std::path::{Path, PathBuf};
+
+/// Cap on timeline rows rendered in the Markdown (the JSON sibling
+/// keeps full counts); beyond this the table says how many were elided.
+const TIMELINE_CAP: usize = 50;
+
+/// Everything one scan of the stream yields.
+#[derive(Default)]
+struct Collected {
+    version: u64,
+    scheme: String,
+    workers: usize,
+    seed: u64,
+    has_meta: bool,
+    events: u64,
+    samples: u64,
+    per_chain: BTreeMap<usize, u64>,
+    t_first: f64,
+    t_last: f64,
+    diag: OnlineDiag,
+    members: Vec<(f64, usize, String)>,
+    checkpoints: Vec<(usize, String)>,
+    telemetry_frames: u64,
+    last_telemetry: Option<Json>,
+    health_events: u64,
+    /// Status *transitions* only (first event always transitions), as
+    /// (t, status, reasons) — bounded by the number of real changes.
+    health_transitions: Vec<(f64, String, String)>,
+    last_health: Option<Json>,
+    metrics: Option<Metrics>,
+    elapsed: f64,
+}
+
+/// What `write_report` hands back: output paths plus the headline
+/// numbers, so the CLI can print them and tests can compare them
+/// bit-for-bit against `stream_diag` without re-parsing the files.
+pub struct Report {
+    pub markdown: PathBuf,
+    pub json: PathBuf,
+    pub events: u64,
+    pub samples: u64,
+    pub chains: usize,
+    pub max_rhat: f64,
+    pub min_ess: f64,
+}
+
+/// Scan `stream`, write `out` (Markdown) and its `.json` sibling.
+pub fn write_report(stream: &Path, out: &Path) -> Result<Report> {
+    let file = File::open(stream).with_context(|| format!("opening stream {stream:?}"))?;
+    let c = collect(file)?;
+    if c.events == 0 {
+        bail!("stream {stream:?} contains no events");
+    }
+    let name = stream
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| stream.display().to_string());
+    let md = render_markdown(&c, &name);
+    let json = render_json(&c, &name);
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating report dir {parent:?}"))?;
+        }
+    }
+    std::fs::write(out, &md).with_context(|| format!("writing report {out:?}"))?;
+    let json_path = out.with_extension("json");
+    std::fs::write(&json_path, &json)
+        .with_context(|| format!("writing report {json_path:?}"))?;
+    let summary = c.diag.summary();
+    Ok(Report {
+        markdown: out.to_path_buf(),
+        json: json_path,
+        events: c.events,
+        samples: c.samples,
+        chains: c.per_chain.len(),
+        max_rhat: summary.max_rhat,
+        min_ess: summary.min_ess,
+    })
+}
+
+fn collect<R: std::io::Read>(src: R) -> Result<Collected> {
+    let mut c = Collected { t_first: f64::NAN, t_last: f64::NAN, ..Default::default() };
+    scan_stream(src, |event| {
+        c.events += 1;
+        match event {
+            RunEvent::Meta { version, scheme, workers, seed } => {
+                c.version = version;
+                c.scheme = scheme;
+                c.workers = workers;
+                c.seed = seed;
+                c.has_meta = true;
+            }
+            RunEvent::Sample { chain, t, theta } => {
+                // Exactly what stream_diag does, in the same order.
+                c.diag.push(chain, &theta);
+                c.samples += 1;
+                *c.per_chain.entry(chain).or_insert(0) += 1;
+                if !c.t_first.is_finite() {
+                    c.t_first = t;
+                }
+                c.t_last = t;
+            }
+            RunEvent::U { .. } | RunEvent::Center { .. } => {}
+            RunEvent::Member { worker, kind, t } => c.members.push((t, worker, kind)),
+            RunEvent::Checkpoint { step, file } => c.checkpoints.push((step, file)),
+            RunEvent::Telemetry { json, .. } => {
+                c.telemetry_frames += 1;
+                c.last_telemetry = Some(json);
+            }
+            RunEvent::Health { t, json } => {
+                c.health_events += 1;
+                let status = json
+                    .get("status")
+                    .and_then(Json::as_str)
+                    .unwrap_or("?")
+                    .to_string();
+                let changed =
+                    c.health_transitions.last().map_or(true, |(_, s, _)| *s != status);
+                if changed {
+                    let reasons = json
+                        .get("reasons")
+                        .and_then(Json::as_arr)
+                        .map(|arr| {
+                            arr.iter()
+                                .filter_map(Json::as_str)
+                                .collect::<Vec<_>>()
+                                .join("; ")
+                        })
+                        .unwrap_or_default();
+                    c.health_transitions.push((t, status, reasons));
+                }
+                c.last_health = Some(json);
+            }
+            RunEvent::Metrics { metrics, elapsed } => {
+                c.metrics = Some(metrics);
+                c.elapsed = elapsed;
+            }
+        }
+        Ok(())
+    })?;
+    Ok(c)
+}
+
+/// `{v:.4}` with literal NaN/inf (deterministic, golden-file safe).
+fn f4(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        format!("{v}")
+    }
+}
+
+fn f1(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        format!("{v}")
+    }
+}
+
+fn render_markdown(c: &Collected, name: &str) -> String {
+    let mut o = String::new();
+    let w = &mut o;
+    let _ = writeln!(w, "# ecsgmcmc run report — {name}\n");
+
+    // ---- run summary -------------------------------------------------
+    let _ = writeln!(w, "## Run\n");
+    let _ = writeln!(w, "| field | value |");
+    let _ = writeln!(w, "|---|---|");
+    if c.has_meta {
+        let _ = writeln!(w, "| scheme | {} |", c.scheme);
+        let _ = writeln!(w, "| workers | {} |", c.workers);
+        let _ = writeln!(w, "| seed | {} |", c.seed);
+        let _ = writeln!(w, "| stream version | {} |", c.version);
+    } else {
+        let _ = writeln!(w, "| meta | *missing (truncated stream?)* |");
+    }
+    let _ = writeln!(w, "| events | {} |", c.events);
+    let _ = writeln!(w, "| samples | {} |", c.samples);
+    if c.t_first.is_finite() {
+        let _ = writeln!(w, "| sample span | t = {} … {} s |", f4(c.t_first), f4(c.t_last));
+    }
+    if c.metrics.is_some() {
+        let _ = writeln!(w, "| elapsed | {} |", human_duration_secs(c.elapsed));
+    }
+    let _ = writeln!(w);
+
+    // ---- convergence -------------------------------------------------
+    let _ = writeln!(w, "## Convergence\n");
+    if c.samples == 0 {
+        let _ = writeln!(w, "No sample events in the stream.\n");
+    } else {
+        let s = c.diag.summary();
+        let _ = writeln!(
+            w,
+            "Recomputed from the stream's sample events with the same \
+             bounded-memory accumulator `replay --diag` uses.\n"
+        );
+        let _ = writeln!(
+            w,
+            "- {} samples across {} chains ({} tracked coordinates)",
+            s.n, s.chains, s.tracked
+        );
+        let _ = writeln!(w, "- max split-R̂: **{}**", f4(s.max_rhat));
+        let _ = writeln!(w, "- min ESS: **{}**\n", f1(s.min_ess));
+        let per_coord = c.diag.per_coordinate();
+        if !per_coord.is_empty() {
+            let _ = writeln!(w, "| coordinate | split-R̂ | ESS |");
+            let _ = writeln!(w, "|---|---|---|");
+            for (j, (rhat, ess)) in per_coord.iter().enumerate() {
+                let _ = writeln!(w, "| θ{j} | {} | {} |", f4(*rhat), f1(*ess));
+            }
+            let _ = writeln!(w);
+        }
+        let _ = writeln!(w, "| chain | samples |");
+        let _ = writeln!(w, "|---|---|");
+        for (chain, n) in &c.per_chain {
+            let _ = writeln!(w, "| {chain} | {n} |");
+        }
+        let _ = writeln!(w);
+    }
+
+    // ---- stage time breakdown ---------------------------------------
+    let stages = c.metrics.as_ref().map(|m| &m.stage_totals);
+    if let Some(stages) = stages.filter(|s| !s.is_empty()) {
+        let _ = writeln!(w, "## Stage time breakdown\n");
+        let _ = writeln!(w, "| stage | count | total | mean |");
+        let _ = writeln!(w, "|---|---|---|---|");
+        for (stage, count, ns) in stages {
+            let mean = if *count > 0 { *ns as f64 / *count as f64 } else { 0.0 };
+            let _ = writeln!(
+                w,
+                "| {stage} | {count} | {} | {} |",
+                human_duration_secs(*ns as f64 / 1e9),
+                human_duration_secs(mean / 1e9),
+            );
+        }
+        let _ = writeln!(w);
+    }
+
+    // ---- staleness ---------------------------------------------------
+    let staleness = c.last_telemetry.as_ref().and_then(|t| t.get("staleness")).cloned();
+    if let Some(st) = staleness {
+        let _ = writeln!(w, "## Staleness\n");
+        let _ = writeln!(w, "From the last telemetry frame (gradient age in center steps).\n");
+        let _ = writeln!(w, "| count | mean | p50 | p95 | p99 | max |");
+        let _ = writeln!(w, "|---|---|---|---|---|---|");
+        let cell = |key: &str| -> String {
+            match st.get(key).and_then(Json::as_f64) {
+                Some(v) if v == v.trunc() => format!("{}", v as i64),
+                Some(v) => f4(v),
+                None => "—".to_string(),
+            }
+        };
+        let _ = writeln!(
+            w,
+            "| {} | {} | {} | {} | {} | {} |",
+            cell("count"),
+            cell("mean"),
+            cell("p50"),
+            cell("p95"),
+            cell("p99"),
+            cell("max"),
+        );
+        let _ = writeln!(w);
+    } else if let Some(m) = &c.metrics {
+        if m.exchanges > 0 {
+            let _ = writeln!(w, "## Staleness\n");
+            let _ = writeln!(
+                w,
+                "Mean staleness {} center steps (no telemetry frames in the \
+                 stream, so no quantiles).\n",
+                f4(m.mean_staleness())
+            );
+        }
+    }
+
+    // ---- health ------------------------------------------------------
+    if c.health_events > 0 {
+        let _ = writeln!(w, "## Health\n");
+        let last = c
+            .health_transitions
+            .last()
+            .map(|(_, s, _)| s.as_str())
+            .unwrap_or("?");
+        let _ = writeln!(
+            w,
+            "{} health verdicts; final status **{last}**; {} status transition(s).\n",
+            c.health_events,
+            c.health_transitions.len()
+        );
+        let _ = writeln!(w, "| t (s) | status | reasons |");
+        let _ = writeln!(w, "|---|---|---|");
+        for (t, status, reasons) in c.health_transitions.iter().take(TIMELINE_CAP) {
+            let r = if reasons.is_empty() { "—" } else { reasons.as_str() };
+            let _ = writeln!(w, "| {} | {status} | {r} |", f4(*t));
+        }
+        if c.health_transitions.len() > TIMELINE_CAP {
+            let _ = writeln!(
+                w,
+                "| … | | {} more transitions elided |",
+                c.health_transitions.len() - TIMELINE_CAP
+            );
+        }
+        let _ = writeln!(w);
+    }
+
+    // ---- churn / fault timeline -------------------------------------
+    if !c.members.is_empty() || !c.checkpoints.is_empty() {
+        let _ = writeln!(w, "## Membership & checkpoint timeline\n");
+        let _ = writeln!(w, "| t (s) | event |");
+        let _ = writeln!(w, "|---|---|");
+        for (t, worker, kind) in c.members.iter().take(TIMELINE_CAP) {
+            let _ = writeln!(w, "| {} | worker {worker} {kind} |", f4(*t));
+        }
+        if c.members.len() > TIMELINE_CAP {
+            let _ = writeln!(w, "| … | {} more membership events elided |",
+                c.members.len() - TIMELINE_CAP);
+        }
+        for (step, file) in c.checkpoints.iter().take(TIMELINE_CAP) {
+            let _ = writeln!(w, "| — | checkpoint at step {step} → `{file}` |");
+        }
+        if c.checkpoints.len() > TIMELINE_CAP {
+            let _ = writeln!(w, "| … | {} more checkpoints elided |",
+                c.checkpoints.len() - TIMELINE_CAP);
+        }
+        let _ = writeln!(w);
+    }
+
+    // ---- counters ----------------------------------------------------
+    if let Some(m) = &c.metrics {
+        let _ = writeln!(w, "## Counters\n");
+        let _ = writeln!(w, "| metric | value |");
+        let _ = writeln!(w, "|---|---|");
+        let _ = writeln!(w, "| total_steps | {} |", m.total_steps);
+        let _ = writeln!(w, "| center_steps | {} |", m.center_steps);
+        let _ = writeln!(w, "| exchanges | {} |", m.exchanges);
+        let _ = writeln!(w, "| grads_computed | {} |", m.grads_computed);
+        let _ = writeln!(w, "| steps_per_sec | {} |", f1(m.steps_per_sec));
+        let _ = writeln!(w, "| samples_dropped | {} |", m.samples_dropped);
+        let _ = writeln!(w, "| stale_rejects | {} |", m.stale_rejects);
+        let _ = writeln!(w, "| worker_joins | {} |", m.worker_joins);
+        let _ = writeln!(w, "| worker_leaves | {} |", m.worker_leaves);
+        for (key, v) in [
+            ("faults_injected", m.faults_injected),
+            ("ckpt_retries", m.ckpt_retries),
+            ("sink_degraded", m.sink_degraded),
+            ("worker_panics", m.worker_panics),
+        ] {
+            if v > 0 {
+                let _ = writeln!(w, "| {key} | {v} |");
+            }
+        }
+        let _ = writeln!(w);
+    }
+
+    if c.telemetry_frames > 0 {
+        let _ = writeln!(
+            w,
+            "*{} telemetry frame(s) in the stream; inspect with `ecsgmcmc \
+             trace` or `ecsgmcmc top`.*",
+            c.telemetry_frames
+        );
+    }
+    o
+}
+
+fn render_json(c: &Collected, name: &str) -> String {
+    let s = c.diag.summary();
+    let mut e = Emitter::new();
+    e.begin_obj();
+    e.key("report").str_val("ecsgmcmc-run");
+    e.key("stream").str_val(name);
+    if c.has_meta {
+        e.key("scheme").str_val(&c.scheme);
+        e.key("workers").num(c.workers as f64);
+        e.key("seed").str_val(&c.seed.to_string());
+        e.key("stream_version").num(c.version as f64);
+    }
+    e.key("events").num(c.events as f64);
+    e.key("samples").num(c.samples as f64);
+    e.key("chains").begin_arr();
+    for (chain, n) in &c.per_chain {
+        e.begin_obj();
+        e.key("chain").num(*chain as f64);
+        e.key("samples").num(*n as f64);
+        e.end_obj();
+    }
+    e.end_arr();
+    e.key("diag").begin_obj();
+    e.key("n").num(s.n as f64);
+    e.key("chains").num(s.chains as f64);
+    e.key("tracked").num(s.tracked as f64);
+    e.key("max_rhat").num(s.max_rhat);
+    e.key("min_ess").num(s.min_ess);
+    e.key("per_coordinate").begin_arr();
+    for (rhat, ess) in c.diag.per_coordinate() {
+        e.begin_obj();
+        e.key("rhat").num(rhat);
+        e.key("ess").num(ess);
+        e.end_obj();
+    }
+    e.end_arr();
+    e.end_obj();
+    if let Some(m) = &c.metrics {
+        e.key("metrics").begin_obj();
+        e.key("total_steps").num(m.total_steps as f64);
+        e.key("center_steps").num(m.center_steps as f64);
+        e.key("exchanges").num(m.exchanges as f64);
+        e.key("stale_rejects").num(m.stale_rejects as f64);
+        e.key("worker_joins").num(m.worker_joins as f64);
+        e.key("worker_leaves").num(m.worker_leaves as f64);
+        e.key("samples_dropped").num(m.samples_dropped as f64);
+        e.key("mean_staleness").num(m.mean_staleness());
+        e.key("faults_injected").num(m.faults_injected as f64);
+        e.key("ckpt_retries").num(m.ckpt_retries as f64);
+        e.key("sink_degraded").num(m.sink_degraded as f64);
+        e.key("worker_panics").num(m.worker_panics as f64);
+        e.key("elapsed").num(c.elapsed);
+        e.end_obj();
+    }
+    e.key("members").num(c.members.len() as f64);
+    e.key("checkpoints").num(c.checkpoints.len() as f64);
+    e.key("telemetry_frames").num(c.telemetry_frames as f64);
+    e.key("health_events").num(c.health_events as f64);
+    if let Some((_, status, _)) = c.health_transitions.last() {
+        e.key("final_health").str_val(status);
+    }
+    e.end_obj();
+    let mut out = e.into_string();
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sink::replay::stream_diag;
+
+    const STREAM: &str = concat!(
+        "{\"ev\":\"meta\",\"version\":4,\"scheme\":\"ec\",\"workers\":2,\"seed\":\"42\"}\n",
+        "{\"ev\":\"member\",\"worker\":0,\"kind\":\"join\",\"t\":0}\n",
+        "{\"ev\":\"sample\",\"chain\":0,\"t\":0.01,\"theta\":[1.5,-0.25]}\n",
+        "{\"ev\":\"sample\",\"chain\":1,\"t\":0.02,\"theta\":[0.5,0.75]}\n",
+        "{\"ev\":\"sample\",\"chain\":0,\"t\":0.03,\"theta\":[0.25,0.5]}\n",
+        "{\"ev\":\"sample\",\"chain\":1,\"t\":0.04,\"theta\":[-0.5,1.25]}\n",
+        "{\"ev\":\"health\",\"t\":0.05,\"center_steps\":10,\"status\":\"ok\",",
+        "\"workers_active\":2,\"stalled_chains\":[],\"divergent\":false,",
+        "\"theta_norm\":1.5,\"reject_rate\":0,\"ess_per_sec\":null,",
+        "\"ess_trend\":0,\"reasons\":[]}\n",
+        "{\"ev\":\"checkpoint\",\"step\":20,\"file\":\"out/ckpt/c.jsonl\"}\n",
+        "{\"ev\":\"metrics\",\"total_steps\":40,\"center_steps\":10,\"exchanges\":20,",
+        "\"grads_computed\":40,\"steps_per_sec\":100,\"samples_dropped\":0,",
+        "\"stale_rejects\":1,\"worker_joins\":1,\"worker_leaves\":0,",
+        "\"mean_staleness\":0.5,\"elapsed\":0.4}\n",
+    );
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ecsgmcmc-report-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn report_diag_matches_stream_diag_bit_for_bit() {
+        let dir = tmp("bits");
+        std::fs::create_dir_all(&dir).unwrap();
+        let stream = dir.join("run.jsonl");
+        std::fs::write(&stream, STREAM).unwrap();
+        let report = write_report(&stream, &dir.join("report.md")).unwrap();
+        let (expected, metrics) = stream_diag(STREAM.as_bytes()).unwrap();
+        assert_eq!(report.max_rhat.to_bits(), expected.max_rhat.to_bits());
+        assert_eq!(report.min_ess.to_bits(), expected.min_ess.to_bits());
+        assert_eq!(report.samples, 4);
+        assert_eq!(report.chains, 2);
+        assert_eq!(metrics.unwrap().total_steps, 40);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn markdown_and_json_cover_every_section() {
+        let dir = tmp("sections");
+        std::fs::create_dir_all(&dir).unwrap();
+        let stream = dir.join("run.jsonl");
+        std::fs::write(&stream, STREAM).unwrap();
+        let report = write_report(&stream, &dir.join("report.md")).unwrap();
+        let md = std::fs::read_to_string(&report.markdown).unwrap();
+        for needle in [
+            "# ecsgmcmc run report — run.jsonl",
+            "## Run",
+            "| scheme | ec |",
+            "| seed | 42 |",
+            "## Convergence",
+            "| θ0 |",
+            "| θ1 |",
+            "| chain | samples |",
+            "## Health",
+            "final status **ok**",
+            "## Membership & checkpoint timeline",
+            "worker 0 join",
+            "checkpoint at step 20",
+            "## Counters",
+            "| stale_rejects | 1 |",
+        ] {
+            assert!(md.contains(needle), "missing {needle:?} in:\n{md}");
+        }
+        let json = std::fs::read_to_string(&report.json).unwrap();
+        let v = Json::parse(json.trim()).unwrap();
+        assert_eq!(v.get("samples").and_then(Json::as_usize), Some(4));
+        assert_eq!(v.get("final_health").and_then(Json::as_str), Some("ok"));
+        assert_eq!(
+            v.path(&["diag", "per_coordinate"]).and_then(Json::as_arr).map(|a| a.len()),
+            Some(2)
+        );
+        let got_rhat = v.path(&["diag", "max_rhat"]).and_then(Json::as_f64).unwrap();
+        let (expected, _) = stream_diag(STREAM.as_bytes()).unwrap();
+        assert_eq!(got_rhat.to_bits(), expected.max_rhat.to_bits(), "shortest round-trip");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn damaged_streams_error_and_empty_streams_refuse() {
+        let dir = tmp("damaged");
+        std::fs::create_dir_all(&dir).unwrap();
+        let stream = dir.join("run.jsonl");
+        std::fs::write(&stream, "{not json\n").unwrap();
+        assert!(write_report(&stream, &dir.join("r.md")).is_err());
+        std::fs::write(&stream, "").unwrap();
+        let err = write_report(&stream, &dir.join("r.md")).unwrap_err();
+        assert!(format!("{err:#}").contains("no events"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -108,33 +108,56 @@ impl OnlineDiag {
         self.n += 1;
     }
 
+    /// Per-coordinate `(split-R̂, chain-summed ESS)` over the tracked
+    /// coordinates — the table `ecsgmcmc report` renders. [`Self::summary`]
+    /// folds exactly these values, so the report's numbers and `replay
+    /// --diag`'s always agree bit-for-bit.
+    pub fn per_coordinate(&self) -> Vec<(f64, f64)> {
+        (0..self.track)
+            .map(|j| {
+                let per_chain: Vec<Vec<f64>> =
+                    self.chains.values().map(|c| c[j].values.clone()).collect();
+                // Split-R̂ over completed batch means (exact draws while
+                // the batch size is 1). Degenerate coordinates (zero
+                // within-chain variance — e.g. untouched padding) return
+                // NaN, skipped by the summary fold.
+                let r = rhat::rhat(&per_chain);
+                // ESS: Geyer per chain over batch means, rescaled by the
+                // batch size (exact while it is 1), summed over chains.
+                let mut ess_sum = 0.0;
+                for scalars in self.chains.values() {
+                    let c = &scalars[j];
+                    let b = c.batch.max(1);
+                    ess_sum += (ess::ess(&c.values) * b as f64).min(c.n as f64);
+                }
+                (r, ess_sum)
+            })
+            .collect()
+    }
+
+    /// `(chain id, samples folded)` per chain — fleet membership as the
+    /// diagnostics saw it (`/status`, `ecsgmcmc report`).
+    pub fn chain_counts(&self) -> Vec<(usize, u64)> {
+        self.chains.iter().map(|(&id, s)| (id, s.first().map_or(0, |c| c.n))).collect()
+    }
+
     /// Snapshot of the diagnostics; callable mid-run or at the end.
     pub fn summary(&self) -> OnlineDiagSummary {
         let mut max_rhat = f64::NAN;
         let mut min_ess = f64::NAN;
-        let mut batch = 0usize;
-        for j in 0..self.track {
-            let per_chain: Vec<Vec<f64>> =
-                self.chains.values().map(|c| c[j].values.clone()).collect();
-            // Split-R̂ over completed batch means (exact draws while the
-            // batch size is 1). Degenerate coordinates (zero within-chain
-            // variance — e.g. untouched padding) return NaN and are
-            // skipped, like the post-hoc max_rhat fold.
-            let r = rhat::rhat(&per_chain);
+        for (r, ess_sum) in self.per_coordinate() {
             if r.is_finite() {
                 max_rhat = if max_rhat.is_nan() { r } else { max_rhat.max(r) };
             }
-            // ESS: Geyer per chain over batch means, rescaled by the
-            // batch size (exact while it is 1), summed over chains.
-            let mut ess_sum = 0.0;
-            for scalars in self.chains.values() {
-                let c = &scalars[j];
-                let b = c.batch.max(1);
-                batch = batch.max(b);
-                ess_sum += (ess::ess(&c.values) * b as f64).min(c.n as f64);
-            }
             min_ess = if min_ess.is_nan() { ess_sum } else { min_ess.min(ess_sum) };
         }
+        let batch = self
+            .chains
+            .values()
+            .flat_map(|scalars| scalars.iter())
+            .map(|c| c.batch.max(1))
+            .max()
+            .unwrap_or(0);
         let (mean, cov) = match &self.pooled {
             Some(p) => (p.mean().to_vec(), p.cov()),
             None => (Vec::new(), Vec::new()),
@@ -318,6 +341,27 @@ mod tests {
         diag.push(0, &[3.0]); // corrupt stream line: narrower than track
         diag.push(0, &[5.0, 6.0]);
         assert_eq!(diag.summary().n, 2);
+    }
+
+    #[test]
+    fn per_coordinate_and_chain_counts_agree_with_summary() {
+        let chains = synth_chains(3, 800, 0.5, 9);
+        let mut diag = OnlineDiag::default();
+        for (c, chain) in chains.iter().enumerate() {
+            for theta in chain {
+                diag.push(c, theta);
+            }
+        }
+        let s = diag.summary();
+        let per = diag.per_coordinate();
+        assert_eq!(per.len(), s.tracked);
+        let max_rhat =
+            per.iter().map(|p| p.0).filter(|r| r.is_finite()).fold(f64::NAN, f64::max);
+        let min_ess = per.iter().map(|p| p.1).fold(f64::NAN, f64::min);
+        assert_eq!(max_rhat.to_bits(), s.max_rhat.to_bits());
+        assert_eq!(min_ess.to_bits(), s.min_ess.to_bits());
+        let counts = diag.chain_counts();
+        assert_eq!(counts, vec![(0, 800), (1, 800), (2, 800)]);
     }
 
     #[test]

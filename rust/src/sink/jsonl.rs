@@ -1,9 +1,9 @@
 //! Streaming JSONL sink: one self-describing event per line.
 //!
-//! Event schema (stream version 3; see DESIGN.md §7 for the full table):
+//! Event schema (stream version 4; see DESIGN.md §7 for the full table):
 //!
 //! ```text
-//! {"ev":"meta","version":3,"scheme":"ec","workers":4,"seed":"42",
+//! {"ev":"meta","version":4,"scheme":"ec","workers":4,"seed":"42",
 //!  "dispatch":"simd","cpu":"x86_64 avx2 fma"}
 //! {"ev":"sample","chain":0,"t":0.0123,"theta":[0.5,-1.25]}
 //! {"ev":"u","chain":0,"step":100,"t":0.0119,"u":1.875}
@@ -11,6 +11,7 @@
 //! {"ev":"member","worker":5,"kind":"join","t":0.2}
 //! {"ev":"checkpoint","step":400,"file":"out/ckpt/ckpt-000000000400.jsonl"}
 //! {"ev":"telemetry","t":0.3,"center_steps":400,"stages":{...},...}
+//! {"ev":"health","t":0.35,"center_steps":420,"status":"ok",...}
 //! {"ev":"metrics","total_steps":4000,...,"elapsed":0.42}
 //! ```
 //!
@@ -21,7 +22,10 @@
 //! dispatch, DESIGN.md §10) — replay ignores unknown keys. v3 added the
 //! periodic `telemetry` event (full schema in `telemetry/event.rs` /
 //! DESIGN.md §11) and the schema-additive `stage_*_count`/`stage_*_ns`
-//! metrics keys; v2 streams parse unchanged.
+//! metrics keys; v2 streams parse unchanged. v4 added the `health`
+//! event (run-health verdicts from the observatory, `observe/health.rs`
+//! / DESIGN.md §13); it is emitted only when `[observe]` is enabled, so
+//! observe-off streams differ from v3 only in the version number.
 //!
 //! Framing: every event line carries its own frame tag (`chain` id, or
 //! the `center` event kind), and [`JsonlWriter`] locks per *line* — so K
@@ -41,7 +45,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Stream format version, bumped on schema changes.
-pub const STREAM_VERSION: u64 = 3;
+pub const STREAM_VERSION: u64 = 4;
 
 /// Cap on lines buffered in memory while the writer is degraded; beyond
 /// this, new lines are dropped *and counted* — never silently.
@@ -331,6 +335,37 @@ impl JsonlWriter {
         self.line(e.as_str());
     }
 
+    /// Run-health verdict (stream v4, DESIGN.md §13): the observatory's
+    /// periodic assessment — stalled chains, divergence, staleness-gate
+    /// pressure, ESS/sec trend. Schema-additive like `telemetry`; only
+    /// written when `[observe]` is enabled.
+    pub fn health(&self, h: &crate::observe::HealthSnapshot) {
+        let mut e = Emitter::new();
+        e.begin_obj();
+        e.key("ev").str_val("health");
+        e.key("t").num(h.t);
+        e.key("center_steps").num(h.center_steps as f64);
+        e.key("status").str_val(h.status.name());
+        e.key("workers_active").num(h.workers_active as f64);
+        e.key("stalled_chains").begin_arr();
+        for w in &h.stalled {
+            e.num(*w as f64);
+        }
+        e.end_arr();
+        e.key("divergent").bool_val(h.divergent);
+        e.key("theta_norm").num(h.theta_norm);
+        e.key("reject_rate").num(h.reject_rate);
+        e.key("ess_per_sec").num(h.ess_per_sec);
+        e.key("ess_trend").num(h.ess_trend);
+        e.key("reasons").begin_arr();
+        for r in &h.reasons {
+            e.str_val(r);
+        }
+        e.end_arr();
+        e.end_obj();
+        self.line(e.as_str());
+    }
+
     pub fn flush(&self) {
         let _span = crate::telemetry::span(crate::telemetry::Stage::SinkFlush);
         let mut inner = self.lock();
@@ -548,6 +583,44 @@ mod tests {
         assert_eq!(lines[2].get("ev").unwrap().as_str(), Some("checkpoint"));
         assert_eq!(lines[2].get("step").unwrap().as_usize(), Some(400));
         assert_eq!(lines[3].get("kind").unwrap().as_str(), Some("leave"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn health_events_are_well_formed_and_replayable() {
+        let path = tmp("health");
+        let writer = Arc::new(JsonlWriter::create(&path).unwrap());
+        let snap = crate::observe::HealthSnapshot {
+            status: crate::observe::HealthStatus::Degraded,
+            t: 0.35,
+            center_steps: 420,
+            workers_active: 3,
+            stalled: vec![1, 2],
+            divergent: false,
+            theta_norm: 2.5,
+            reject_rate: 0.125,
+            ess_per_sec: f64::NAN,
+            ess_trend: 0.0,
+            reasons: vec!["chain 1 stalled".to_string()],
+        };
+        writer.health(&snap);
+        writer.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("ev").unwrap().as_str(), Some("health"));
+        assert_eq!(v.get("status").unwrap().as_str(), Some("degraded"));
+        assert_eq!(v.get("workers_active").unwrap().as_usize(), Some(3));
+        let stalled = v.get("stalled_chains").unwrap().as_arr().unwrap();
+        assert_eq!(stalled.len(), 2);
+        // Non-finite ESS rate serializes as null, replays as NaN.
+        assert!(matches!(v.get("ess_per_sec"), Some(Json::Null)));
+        match crate::sink::replay::RunEvent::from_json(&v).unwrap() {
+            crate::sink::replay::RunEvent::Health { t, json } => {
+                assert!((t - 0.35).abs() < 1e-12);
+                assert_eq!(json.get("status").unwrap().as_str(), Some("degraded"));
+            }
+            other => panic!("{other:?}"),
+        }
         std::fs::remove_file(&path).ok();
     }
 

@@ -192,6 +192,14 @@ impl SinkHub {
         self.writers.first().cloned()
     }
 
+    /// The online-diagnostics accumulator a finished run reports from
+    /// (`finish()` summarizes `diags.last()`), if any — the observatory
+    /// reads live split-R̂/ESS from the same accumulator so `/status`
+    /// and the end-of-run summary can never disagree.
+    pub fn primary_diag(&self) -> Option<Arc<Mutex<OnlineDiag>>> {
+        self.diags.last().cloned()
+    }
+
     /// Append a checkpoint marker to every attached stream.
     pub fn write_checkpoint_marker(&self, step: usize, file: &str) {
         for w in &self.writers {

@@ -31,6 +31,11 @@ pub enum RunEvent {
     /// (`ecsgmcmc trace`/`top`) read the schema-additive payload without
     /// this enum chasing every key.
     Telemetry { t: f64, json: Json },
+    /// Run-health verdict (stream v4, DESIGN.md §13): the observatory's
+    /// periodic status/stall/divergence/pressure assessment. Carried as
+    /// the full parsed object, like `Telemetry`, so `top`/`report` read
+    /// the schema-additive payload without this enum chasing keys.
+    Health { t: f64, json: Json },
     Metrics { metrics: Metrics, elapsed: f64 },
 }
 
@@ -84,6 +89,10 @@ impl RunEvent {
                 file: v.get("file").and_then(Json::as_str).unwrap_or("").to_string(),
             },
             "telemetry" => RunEvent::Telemetry {
+                t: num_or_nan(v, "t").unwrap_or(f64::NAN),
+                json: v.clone(),
+            },
+            "health" => RunEvent::Health {
                 t: num_or_nan(v, "t").unwrap_or(f64::NAN),
                 json: v.clone(),
             },
@@ -262,11 +271,14 @@ pub fn replay_reader<R: Read>(src: R) -> Result<RunResult> {
                 chain_entry(&mut chains, chain).u_trace.push(TracePoint { step, t, u });
             }
             RunEvent::Center { t, theta } => result.center_trace.push((t, theta)),
-            // Membership transitions, checkpoint markers and telemetry
-            // frames are run *annotations*: the counters they summarize
-            // travel in the metrics event, so reconstruction skips them.
-            RunEvent::Member { .. } | RunEvent::Checkpoint { .. } | RunEvent::Telemetry { .. } => {
-            }
+            // Membership transitions, checkpoint markers, telemetry
+            // frames and health verdicts are run *annotations*: the
+            // counters they summarize travel in the metrics event, so
+            // reconstruction skips them.
+            RunEvent::Member { .. }
+            | RunEvent::Checkpoint { .. }
+            | RunEvent::Telemetry { .. }
+            | RunEvent::Health { .. } => {}
             RunEvent::Metrics { metrics, elapsed } => {
                 result.metrics = metrics;
                 result.elapsed = elapsed;
@@ -398,6 +410,30 @@ mod tests {
         .unwrap();
         assert_eq!(kinds, vec![(1, "join".to_string()), (0, "fail".to_string())]);
         assert_eq!(ckpt_steps, vec![40]);
+    }
+
+    #[test]
+    fn health_events_annotate_without_breaking_replay() {
+        let stream = concat!(
+            "{\"ev\":\"meta\",\"version\":4,\"scheme\":\"ec\",\"workers\":2,\"seed\":\"9\"}\n",
+            "{\"ev\":\"sample\",\"chain\":0,\"t\":0.1,\"theta\":[1,2]}\n",
+            "{\"ev\":\"health\",\"t\":0.2,\"center_steps\":40,\"status\":\"degraded\",",
+            "\"workers_active\":1,\"stalled_chains\":[1],\"divergent\":false,",
+            "\"theta_norm\":2.5,\"reject_rate\":0,\"ess_per_sec\":null,",
+            "\"ess_trend\":0,\"reasons\":[\"chain 1 stalled\"]}\n",
+        );
+        let r = replay_reader(stream.as_bytes()).unwrap();
+        assert_eq!(r.samples.len(), 1);
+        let mut statuses = Vec::new();
+        scan_stream(stream.as_bytes(), |ev| {
+            if let RunEvent::Health { t, json } = ev {
+                assert!((t - 0.2).abs() < 1e-12);
+                statuses.push(json.get("status").and_then(Json::as_str).unwrap().to_string());
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(statuses, vec!["degraded".to_string()]);
     }
 
     #[test]

@@ -258,19 +258,46 @@ fn metrics_registry() -> &'static MetricsRegistry {
     })
 }
 
-/// Get-or-create the named counter. Callers cache the `Arc` (the lookup
+/// Canonicalize a metric name to the Prometheus exposition charset
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`): every illegal character becomes `_`
+/// and a leading digit gains a `_` prefix. Idempotent, and applied at
+/// the registry boundary — free-form callers (fault points like
+/// `faults.ckpt`, thread-derived labels) can use any name and every
+/// name that reaches `/metrics` or a telemetry frame is legal by
+/// construction. Aliasing is the contract: `faults.ckpt` and
+/// `faults_ckpt` are the same counter.
+pub fn sanitize_metric_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 1);
+    for ch in name.chars() {
+        if out.is_empty() && ch.is_ascii_digit() {
+            out.push('_');
+        }
+        if ch.is_ascii_alphanumeric() || ch == '_' || ch == ':' {
+            out.push(ch);
+        } else {
+            out.push('_');
+        }
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+/// Get-or-create the named counter (name sanitized — see
+/// [`sanitize_metric_name`]). Callers cache the `Arc` (the lookup
 /// locks); `Counter::add` itself is a relaxed atomic.
 pub fn counter(name: &str) -> Arc<Counter> {
     let reg = metrics_registry();
     let mut counters = reg.counters.lock().unwrap();
-    counters.entry(name.to_string()).or_default().clone()
+    counters.entry(sanitize_metric_name(name)).or_default().clone()
 }
 
-/// Get-or-create the named gauge.
+/// Get-or-create the named gauge (name sanitized like [`counter`]).
 pub fn gauge(name: &str) -> Arc<Gauge> {
     let reg = metrics_registry();
     let mut gauges = reg.gauges.lock().unwrap();
-    gauges.entry(name.to_string()).or_default().clone()
+    gauges.entry(sanitize_metric_name(name)).or_default().clone()
 }
 
 /// Snapshot every registered counter and gauge for the telemetry event.
@@ -428,15 +455,42 @@ mod tests {
 
     #[test]
     fn counters_and_gauges_are_shared_by_name() {
+        // Registry names are sanitized at the boundary, so the dotted
+        // spelling and the canonical spelling alias the same counter.
         let a = counter("test.uploads");
-        let b = counter("test.uploads");
+        let b = counter("test_uploads");
         a.add(2);
         b.add(3);
         assert_eq!(counter("test.uploads").get(), 5);
         gauge("test.depth").set(9);
         let (cs, gs) = registry_snapshot();
-        assert!(cs.iter().any(|(k, v)| k == "test.uploads" && *v == 5));
-        assert!(gs.iter().any(|(k, v)| k == "test.depth" && *v == 9));
+        assert!(cs.iter().any(|(k, v)| k == "test_uploads" && *v == 5));
+        assert!(cs.iter().all(|(k, _)| !k.contains('.')), "snapshot names must be sanitized");
+        assert!(gs.iter().any(|(k, v)| k == "test_depth" && *v == 9));
+    }
+
+    #[test]
+    fn sanitize_legalizes_and_round_trips() {
+        for (raw, want) in [
+            ("faults.ckpt", "faults_ckpt"),
+            ("ec-worker-3", "ec_worker_3"),
+            ("stage p99 (ns)", "stage_p99__ns_"),
+            ("9lives", "_9lives"),
+            ("", "_"),
+            ("already_legal:total", "already_legal:total"),
+            ("héllo", "h_llo"),
+        ] {
+            let got = sanitize_metric_name(raw);
+            assert_eq!(got, want, "sanitize({raw:?})");
+            // Idempotent: a sanitized name survives re-sanitization, so
+            // reads and writes through the registry always alias.
+            assert_eq!(sanitize_metric_name(&got), got);
+            // The result is exposition-legal.
+            let mut chars = got.chars();
+            let first = chars.next().unwrap();
+            assert!(first.is_ascii_alphabetic() || first == '_' || first == ':');
+            assert!(chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'));
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use crate::sink::diag::OnlineDiag;
 use crate::sink::replay::RunEvent;
 use crate::util::json::{Json, StreamReader};
-use crate::util::timer::human_duration;
+use crate::util::timer::human_duration_secs;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::fs::File;
@@ -33,9 +33,14 @@ pub struct TopState {
     chains: BTreeMap<usize, ChainStat>,
     diag: OnlineDiag,
     last_telemetry: Option<Json>,
+    /// Newest health verdict (stream v4), shown verbatim in the header.
+    last_health: Option<Json>,
     /// Set once the stream's end-of-run metrics event arrives.
     pub finished: bool,
     events: u64,
+    /// Lines the tail could not decode (damage survives follow mode).
+    damaged: u64,
+    first_damage: Option<String>,
 }
 
 impl TopState {
@@ -59,8 +64,19 @@ impl TopState {
                 self.diag.push(*chain, theta);
             }
             RunEvent::Telemetry { .. } => self.last_telemetry = Some(raw.clone()),
+            RunEvent::Health { .. } => self.last_health = Some(raw.clone()),
             RunEvent::Metrics { .. } => self.finished = true,
             _ => {}
+        }
+    }
+
+    /// Record a line the tail could not decode. `top --follow` keeps
+    /// tailing across damage (a torn write mid-follow must not kill the
+    /// dashboard); the damage stays visible on the screen instead.
+    pub fn note_damage(&mut self, line: usize, msg: &str) {
+        self.damaged += 1;
+        if self.first_damage.is_none() {
+            self.first_damage = Some(format!("line {line}: {msg}"));
         }
     }
 
@@ -88,6 +104,28 @@ impl TopState {
             push(&mut out, format!("{id:<7} {:>9} {rate:>10.1} {:>9}", c.steps, c.samples));
         }
 
+        if let Some(h) = &self.last_health {
+            let status = h.get("status").and_then(Json::as_str).unwrap_or("?");
+            let active = h.get("workers_active").and_then(Json::as_usize).unwrap_or(0);
+            let stalled =
+                h.get("stalled_chains").and_then(Json::as_arr).map_or(0, |a| a.len());
+            let reasons = h
+                .get("reasons")
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter().filter_map(Json::as_str).collect::<Vec<_>>().join("; ")
+                })
+                .unwrap_or_default();
+            push(
+                &mut out,
+                format!(
+                    "health: {status} — {active} active, {stalled} stalled{}{}",
+                    if reasons.is_empty() { "" } else { " — " },
+                    reasons
+                ),
+            );
+        }
+
         if let Some(t) = &self.last_telemetry {
             if let Some(stages) = t.get("stages").and_then(Json::as_obj) {
                 push(
@@ -104,10 +142,10 @@ impl TopState {
                         format!(
                             "{name:<17} {:>9} {:>9} {:>9} {:>9} {:>10}",
                             num("count") as u64,
-                            human_duration(num("p50_ns") / 1e9),
-                            human_duration(num("p95_ns") / 1e9),
-                            human_duration(num("p99_ns") / 1e9),
-                            human_duration(num("total_ns") / 1e9),
+                            human_duration_secs(num("p50_ns") / 1e9),
+                            human_duration_secs(num("p95_ns") / 1e9),
+                            human_duration_secs(num("p99_ns") / 1e9),
+                            human_duration_secs(num("total_ns") / 1e9),
                         ),
                     );
                 }
@@ -157,6 +195,16 @@ impl TopState {
                 ),
             );
         }
+        if self.damaged > 0 {
+            push(
+                &mut out,
+                format!(
+                    "stream damage: {} undecodable line(s), first at {}",
+                    self.damaged,
+                    self.first_damage.as_deref().unwrap_or("?")
+                ),
+            );
+        }
         out
     }
 }
@@ -178,8 +226,22 @@ impl Default for StreamTail {
 impl StreamTail {
     /// Read everything appended since the last poll into `state`.
     /// Returns the number of events folded.
+    ///
+    /// Damage tolerance (`--follow` must survive what `fsck` merely
+    /// reports): an undecodable line — torn write, corrupt bytes,
+    /// schema-invalid event — is counted via [`TopState::note_damage`]
+    /// and skipped, and the tail keeps folding subsequent lines. A
+    /// partially-appended final line is not damage: its bytes stay
+    /// buffered in the framing reader until the writer finishes it. A
+    /// file that *shrank* below our offset (a resumed run truncating
+    /// post-checkpoint events) restarts the fold from scratch.
     pub fn poll(&mut self, path: &Path, state: &mut TopState) -> Result<usize> {
         let mut file = File::open(path).with_context(|| format!("opening stream {path:?}"))?;
+        let len = file.metadata().with_context(|| format!("stat {path:?}"))?.len();
+        if len < self.offset {
+            *self = StreamTail::default();
+            *state = TopState::default();
+        }
         file.seek(SeekFrom::Start(self.offset)).context("seeking stream")?;
         let mut chunk = [0u8; 64 * 1024];
         let mut folded = 0;
@@ -191,11 +253,20 @@ impl StreamTail {
             self.offset += n as u64;
             self.reader.feed(&chunk[..n]);
             while let Some(value) = self.reader.next_value() {
-                let raw = value?;
-                let ev = RunEvent::from_json(&raw)
-                    .with_context(|| format!("line {}", self.reader.line()))?;
-                state.fold(&ev, &raw);
-                folded += 1;
+                let raw = match value {
+                    Ok(raw) => raw,
+                    Err(e) => {
+                        state.note_damage(self.reader.line(), &e.msg);
+                        continue;
+                    }
+                };
+                match RunEvent::from_json(&raw) {
+                    Ok(ev) => {
+                        state.fold(&ev, &raw);
+                        folded += 1;
+                    }
+                    Err(e) => state.note_damage(self.reader.line(), &format!("{e:#}")),
+                }
             }
         }
         Ok(folded)
@@ -263,6 +334,68 @@ mod tests {
         drop(f);
         assert_eq!(tail.poll(&p, &mut state).unwrap(), 1);
         assert!(state.render().contains("10"), "{}", state.render());
+    }
+
+    #[test]
+    fn health_events_render_in_the_header() {
+        let body = concat!(
+            "{\"ev\":\"meta\",\"version\":4,\"scheme\":\"ec\",\"workers\":2,\"seed\":\"1\"}\n",
+            "{\"ev\":\"health\",\"t\":0.2,\"center_steps\":40,\"status\":\"degraded\",",
+            "\"workers_active\":1,\"stalled_chains\":[1],\"divergent\":false,",
+            "\"theta_norm\":2.5,\"reject_rate\":0,\"ess_per_sec\":null,",
+            "\"ess_trend\":0,\"reasons\":[\"chain 1 stalled\"]}\n",
+        );
+        let p = write_stream("health.jsonl", body);
+        let screen = top_once(&p).unwrap();
+        assert!(
+            screen.contains("health: degraded — 1 active, 1 stalled — chain 1 stalled"),
+            "{screen}"
+        );
+    }
+
+    #[test]
+    fn follow_survives_torn_and_corrupt_lines_mid_stream() {
+        let meta =
+            "{\"ev\":\"meta\",\"version\":3,\"scheme\":\"ec\",\"workers\":1,\"seed\":\"1\"}\n";
+        let p = write_stream("torn.jsonl", meta);
+        let mut state = TopState::default();
+        let mut tail = StreamTail::default();
+        assert_eq!(tail.poll(&p, &mut state).unwrap(), 1);
+        use std::io::Write;
+        // A torn (incomplete) line: not damage yet, just buffered bytes.
+        let mut f = std::fs::OpenOptions::new().append(true).open(&p).unwrap();
+        f.write_all(b"{\"ev\":\"sample\",\"chain\":0,\"t\":0.1,\"the").unwrap();
+        drop(f);
+        assert_eq!(tail.poll(&p, &mut state).unwrap(), 0);
+        assert_eq!(state.damaged, 0, "incomplete tail is not damage");
+        // The writer finishes the line: it folds on the next poll.
+        let mut f = std::fs::OpenOptions::new().append(true).open(&p).unwrap();
+        f.write_all(b"ta\":[1.5]}\n").unwrap();
+        // Then genuinely corrupt bytes, then a valid event after them.
+        f.write_all(b"{corrupt garbage\n").unwrap();
+        f.write_all(b"{\"ev\":\"vibes\"}\n").unwrap();
+        f.write_all(b"{\"ev\":\"u\",\"chain\":0,\"step\":9,\"t\":0.2,\"u\":1.0}\n").unwrap();
+        drop(f);
+        assert_eq!(tail.poll(&p, &mut state).unwrap(), 2, "sample + u fold, damage skipped");
+        assert_eq!(state.damaged, 2, "bad json + unknown event both counted");
+        let screen = state.render();
+        assert!(screen.contains("stream damage: 2 undecodable line(s)"), "{screen}");
+        assert!(screen.contains("line 3"), "first damage names its line: {screen}");
+    }
+
+    #[test]
+    fn shrunken_stream_restarts_the_fold() {
+        let meta =
+            "{\"ev\":\"meta\",\"version\":3,\"scheme\":\"ec\",\"workers\":1,\"seed\":\"1\"}\n";
+        let two = format!("{meta}{{\"ev\":\"u\",\"chain\":0,\"step\":9,\"t\":0.1,\"u\":1.0}}\n");
+        let p = write_stream("shrink.jsonl", &two);
+        let mut state = TopState::default();
+        let mut tail = StreamTail::default();
+        assert_eq!(tail.poll(&p, &mut state).unwrap(), 2);
+        // A resume truncates the stream below our offset.
+        std::fs::write(&p, meta).unwrap();
+        assert_eq!(tail.poll(&p, &mut state).unwrap(), 1, "re-folds from scratch");
+        assert_eq!(state.events, 1);
     }
 
     #[test]

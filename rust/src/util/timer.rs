@@ -30,7 +30,17 @@ impl Stopwatch {
 
 /// Format a duration like `1.23ms`, `4.5s`, `2m03s`, `3h25m07s`.
 pub fn human_duration(d: Duration) -> String {
-    let s = d.as_secs_f64();
+    human_duration_secs(d.as_secs_f64())
+}
+
+/// [`human_duration`] over fractional seconds, for durations that come
+/// from a stream or a quantile (ns/1e9) rather than a live `Duration`.
+/// Non-finite and negative inputs render literally rather than panic —
+/// they mean the stream was damaged, and the display layer must say so.
+pub fn human_duration_secs(s: f64) -> String {
+    if !s.is_finite() || s < 0.0 {
+        return format!("{s}s");
+    }
     if s < 1e-3 {
         format!("{:.1}us", s * 1e6)
     } else if s < 1.0 {
@@ -68,6 +78,14 @@ mod tests {
         assert_eq!(human_duration(Duration::from_secs(7265)), "2h01m05s");
         assert_eq!(human_duration(Duration::from_secs(36000)), "10h00m00s");
         assert_eq!(human_duration(Duration::from_secs(90061)), "25h01m01s");
+    }
+
+    #[test]
+    fn secs_form_matches_duration_form_and_tolerates_junk() {
+        assert_eq!(human_duration_secs(0.000120), "120.0us");
+        assert_eq!(human_duration_secs(3.0), human_duration(Duration::from_secs(3)));
+        assert_eq!(human_duration_secs(f64::NAN), "NaNs");
+        assert_eq!(human_duration_secs(-1.0), "-1s");
     }
 
     #[test]

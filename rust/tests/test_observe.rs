@@ -1,0 +1,276 @@
+//! Observatory end-to-end: enabling the fleet observatory must not
+//! perturb the sampled trajectories (the observer only *reads* sampler
+//! state), the HTTP endpoints must serve parse-valid exposition while a
+//! run is live, health events must land in the stream schema-additively
+//! (v4), and the offline `report` harness must reproduce `replay
+//! --diag`'s convergence numbers bit-for-bit — including against the
+//! committed miniature golden stream.
+
+use ecsgmcmc::coordinator::{EcConfig, EcCoordinator, RunOptions, RunResult};
+use ecsgmcmc::observe;
+use ecsgmcmc::potentials::gaussian::GaussianPotential;
+use ecsgmcmc::samplers::SghmcParams;
+use ecsgmcmc::sink::{replay, SinkSpec};
+use ecsgmcmc::util::json::Json;
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// The observatory switches are process-global; every test that flips
+/// them runs under this lock and restores "off" on exit.
+static LOCK: Mutex<()> = Mutex::new(());
+
+struct ObserveOff;
+impl Drop for ObserveOff {
+    fn drop(&mut self) {
+        observe::configure(false, "").ok();
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ecsgmcmc-observe-{name}-{}.jsonl", std::process::id()))
+}
+
+fn ec_run(sink: SinkSpec, steps: usize, seed: u64) -> RunResult {
+    let cfg = EcConfig {
+        workers: 4,
+        alpha: 1.0,
+        sync_every: 2,
+        steps,
+        opts: RunOptions {
+            thin: 2,
+            burn_in: 50,
+            log_every: 100,
+            sink,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    EcCoordinator::new(
+        cfg,
+        SghmcParams { eps: 0.05, ..Default::default() },
+        Arc::new(GaussianPotential::fig1()),
+    )
+    .run(seed)
+}
+
+fn assert_same_trajectories(a: &RunResult, b: &RunResult) {
+    assert_eq!(a.chains.len(), b.chains.len());
+    for (ca, cb) in a.chains.iter().zip(&b.chains) {
+        assert_eq!(ca.worker, cb.worker);
+        assert_eq!(ca.samples, cb.samples, "chain {} samples", ca.worker);
+        assert_eq!(ca.u_trace.len(), cb.u_trace.len(), "chain {} u trace", ca.worker);
+        for (ua, ub) in ca.u_trace.iter().zip(&cb.u_trace) {
+            assert_eq!(ua.step, ub.step);
+            assert_eq!(ua.u, ub.u);
+        }
+    }
+    assert_eq!(a.center_trace, b.center_trace);
+    assert_eq!(a.metrics.exchanges, b.metrics.exchanges);
+    assert_eq!(a.metrics.total_steps, b.metrics.total_steps);
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let mut s = TcpStream::connect_timeout(&addr, Duration::from_secs(2)).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(2))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: observatory\r\nConnection: close\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let code = raw.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap_or(0);
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (code, body)
+}
+
+#[test]
+fn fig1_run_is_bit_identical_with_observatory_on() {
+    let _guard = LOCK.lock().unwrap();
+    let _restore = ObserveOff;
+    observe::configure(false, "").unwrap();
+    let off = ec_run(SinkSpec::Memory, 600, 7);
+
+    observe::configure(true, "127.0.0.1:0").unwrap().expect("bound");
+    let on = ec_run(SinkSpec::Memory, 600, 7);
+    let snap = observe::shared().expect("shared cell").snapshot();
+    observe::configure(false, "").unwrap();
+
+    assert_same_trajectories(&off, &on);
+    // The run actually published into the snapshot cell on the way.
+    assert!(snap.started && snap.finished, "driver published: {snap:?}");
+    assert_eq!(snap.scheme, "ec");
+    assert_eq!(snap.workers_total, 4);
+    assert_eq!(snap.center_steps, on.metrics.center_steps);
+}
+
+#[test]
+fn observed_stream_adds_only_health_events() {
+    let _guard = LOCK.lock().unwrap();
+    let _restore = ObserveOff;
+    observe::configure(false, "").unwrap();
+    let path_off = tmp("stream-off");
+    let path_on = tmp("stream-on");
+
+    ec_run(SinkSpec::Jsonl { path: path_off.clone() }, 400, 11);
+    observe::configure(true, "127.0.0.1:0").unwrap();
+    ec_run(SinkSpec::Jsonl { path: path_on.clone() }, 400, 11);
+    observe::configure(false, "").unwrap();
+
+    // Replay ignores the health annotations: both streams reconstruct
+    // the same run.
+    let off = replay::replay_file(&path_off).unwrap();
+    let on = replay::replay_file(&path_on).unwrap();
+    assert_same_trajectories(&off, &on);
+
+    // Byte-level: stripping `health` lines from the observed stream
+    // leaves the unobserved stream, except the metrics event whose
+    // elapsed/steps_per_sec are wall-clock (compare those structurally).
+    let text_off = std::fs::read_to_string(&path_off).unwrap();
+    let text_on = std::fs::read_to_string(&path_on).unwrap();
+    let lines_off: Vec<&str> = text_off.lines().collect();
+    let lines_on: Vec<&str> =
+        text_on.lines().filter(|l| !l.contains("\"ev\":\"health\"")).collect();
+    assert!(text_on.lines().any(|l| l.contains("\"ev\":\"health\"")), "health events present");
+    assert_eq!(lines_off.len(), lines_on.len(), "same events modulo health");
+    for (a, b) in lines_off.iter().zip(&lines_on) {
+        if a.contains("\"ev\":\"metrics\"") {
+            let (va, vb) = (Json::parse(a).unwrap(), Json::parse(b).unwrap());
+            for key in ["total_steps", "center_steps", "exchanges", "mean_staleness"] {
+                assert_eq!(
+                    va.get(key).and_then(Json::as_f64),
+                    vb.get(key).and_then(Json::as_f64),
+                    "metrics field {key}"
+                );
+            }
+        } else {
+            assert_eq!(a, b, "non-metrics lines are byte-identical");
+        }
+    }
+
+    // The health events parse as stream v4 events and `top` renders them.
+    let mut health = 0usize;
+    let file = std::fs::File::open(&path_on).unwrap();
+    replay::scan_stream(file, |ev| {
+        if let replay::RunEvent::Health { json, .. } = ev {
+            health += 1;
+            assert!(json.get("status").and_then(Json::as_str).is_some());
+            assert!(json.get("workers_active").is_some());
+        }
+        Ok(())
+    })
+    .unwrap();
+    assert!(health > 0);
+    let rendered = ecsgmcmc::telemetry::top::top_once(&path_on).unwrap();
+    assert!(rendered.contains("health:"), "top shows the health line:\n{rendered}");
+
+    std::fs::remove_file(&path_off).ok();
+    std::fs::remove_file(&path_on).ok();
+}
+
+#[test]
+fn endpoints_serve_valid_exposition_during_a_live_run() {
+    let _guard = LOCK.lock().unwrap();
+    let _restore = ObserveOff;
+    observe::configure(false, "").unwrap();
+    let baseline = ec_run(SinkSpec::Memory, 2000, 17);
+
+    let addr = observe::configure(true, "127.0.0.1:0").unwrap().expect("bound");
+    let run = std::thread::spawn(move || ec_run(SinkSpec::Memory, 2000, 17));
+    // Scrape while the run is live (and at least once after it ends —
+    // the final publish survives until reconfiguration).
+    let mut mid_run_scrapes = 0usize;
+    while !run.is_finished() {
+        let (code, body) = http_get(addr, "/metrics");
+        assert_eq!(code, 200);
+        observe::prometheus::validate_exposition(&body)
+            .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{body}"));
+        mid_run_scrapes += 1;
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let observed = run.join().unwrap();
+
+    let (code, body) = http_get(addr, "/metrics");
+    assert_eq!(code, 200);
+    observe::prometheus::validate_exposition(&body).expect("final exposition parses");
+    assert!(body.contains("ecsgmcmc_up 1"), "{body}");
+    assert!(body.contains("ecsgmcmc_center_steps_total"), "{body}");
+    assert!(body.contains("ecsgmcmc_health_status"), "{body}");
+
+    let (code, body) = http_get(addr, "/status");
+    assert_eq!(code, 200);
+    let v = Json::parse(body.trim()).expect("status is valid JSON");
+    assert_eq!(v.get("scheme").and_then(Json::as_str), Some("ec"));
+    assert_eq!(v.get("finished"), Some(&Json::Bool(true)));
+    assert!(v.path(&["health", "status"]).is_some());
+
+    let (code, body) = http_get(addr, "/healthz");
+    assert_eq!(code, 200, "finished healthy run stays ready: {body}");
+    observe::configure(false, "").unwrap();
+
+    // Scraping concurrently changed nothing about the dynamics.
+    assert_same_trajectories(&baseline, &observed);
+    assert!(mid_run_scrapes > 0 || observed.elapsed < 1.0, "scraped during the run");
+}
+
+#[test]
+fn report_matches_replay_diag_on_a_real_observed_stream() {
+    let _guard = LOCK.lock().unwrap();
+    let _restore = ObserveOff;
+    let stream = tmp("report");
+    observe::configure(true, "127.0.0.1:0").unwrap();
+    ec_run(SinkSpec::Jsonl { path: stream.clone() }, 400, 13);
+    observe::configure(false, "").unwrap();
+
+    let dir = std::env::temp_dir()
+        .join(format!("ecsgmcmc-observe-reportdir-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let report = observe::report::write_report(&stream, &dir.join("report.md")).unwrap();
+    let (diag, _) =
+        replay::stream_diag(std::fs::File::open(&stream).unwrap()).unwrap();
+    assert_eq!(report.max_rhat.to_bits(), diag.max_rhat.to_bits(), "same R-hat bits");
+    assert_eq!(report.min_ess.to_bits(), diag.min_ess.to_bits(), "same ESS bits");
+    assert_eq!(report.chains, diag.chains);
+
+    let md = std::fs::read_to_string(&report.markdown).unwrap();
+    assert!(md.contains("## Health"), "observed stream reports health:\n{md}");
+    assert!(md.contains("## Convergence"));
+
+    std::fs::remove_file(&stream).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn golden_report_for_the_committed_miniature_stream() {
+    // No process-global state involved: pure file-in, file-out.
+    let data = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data");
+    let stream = data.join("mini_run.jsonl");
+    let golden = data.join("mini_run_report.md");
+    let dir = std::env::temp_dir()
+        .join(format!("ecsgmcmc-observe-golden-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let report = observe::report::write_report(&stream, &dir.join("mini_run_report.md")).unwrap();
+    let got = std::fs::read_to_string(&report.markdown).unwrap();
+    let want = std::fs::read_to_string(&golden).unwrap();
+    if got != want {
+        for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
+            assert_eq!(g, w, "first divergence at golden line {}", i + 1);
+        }
+        assert_eq!(got, want, "generated report drifted from {golden:?}");
+    }
+
+    // The JSON sibling carries the same facts machine-readably.
+    let json = std::fs::read_to_string(&report.json).unwrap();
+    let v = Json::parse(json.trim()).unwrap();
+    assert_eq!(v.get("samples").and_then(Json::as_usize), Some(4));
+    assert_eq!(v.get("final_health").and_then(Json::as_str), Some("degraded"));
+    assert_eq!(v.get("health_events").and_then(Json::as_usize), Some(2));
+    assert!(
+        matches!(v.path(&["diag", "max_rhat"]), Some(Json::Null)),
+        "4-draw chains are too short for split-R-hat"
+    );
+    assert_eq!(v.path(&["diag", "min_ess"]).and_then(Json::as_f64), Some(4.0));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
