@@ -102,15 +102,14 @@ impl Bench {
         let n = samples_ns.len() as f64;
         let mean = samples_ns.iter().sum::<f64>() / n;
         let var = samples_ns.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
-        let mut sorted = samples_ns.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (min_ns, p50_ns) = min_and_median(&samples_ns);
         let m = Measurement {
             name: name.to_string(),
             iters: batch * samples_ns.len() as u64,
             mean_ns: mean,
             std_ns: var.sqrt(),
-            min_ns: sorted[0],
-            p50_ns: sorted[sorted.len() / 2],
+            min_ns,
+            p50_ns,
         };
         println!(
             "{:<48} {:>12.3} us/iter (± {:>8.3}, min {:>10.3}, n={})",
@@ -138,6 +137,15 @@ impl Bench {
             println!("-> wrote {}", path.display());
         }
     }
+}
+
+/// Min and median of a non-empty sample set. `total_cmp` ordering: a NaN
+/// sample (a poisoned clock, a zero-duration division) sorts after every
+/// finite value instead of panicking the whole suite mid-sweep.
+fn min_and_median(samples_ns: &[f64]) -> (f64, f64) {
+    let mut sorted = samples_ns.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    (sorted[0], sorted[sorted.len() / 2])
 }
 
 /// Pretty-print a paper-style series table: one row per x value, one column
@@ -183,6 +191,15 @@ mod tests {
         assert!(m.mean_ns > 0.0);
         assert!(m.iters > 0);
         assert!(m.min_ns <= m.mean_ns * 1.5);
+    }
+
+    #[test]
+    fn percentiles_tolerate_nan_samples() {
+        let (min, p50) = min_and_median(&[3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(min, 1.0);
+        assert_eq!(p50, 3.0); // NaN sorts last; median index 2 of [1,2,3,NaN]
+        let (min, p50) = min_and_median(&[f64::NAN]);
+        assert!(min.is_nan() && p50.is_nan());
     }
 
     #[test]

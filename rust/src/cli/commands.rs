@@ -30,8 +30,9 @@ fn apply_overrides(cfg: &mut RunConfig, p: &Parsed) -> Result<()> {
         cfg.seed = seed.parse().context("--seed")?;
     }
     if let Some(t) = p.opt("transport") {
-        cfg.transport = TransportKind::from_str(t)
-            .ok_or_else(|| anyhow!("--transport expects deterministic|lockfree, got '{t}'"))?;
+        cfg.transport = TransportKind::from_str(t).ok_or_else(|| {
+            anyhow!("--transport expects deterministic|lockfree|tcp, got '{t}'")
+        })?;
     }
     if let Some(s) = p.opt("shards") {
         cfg.shards = s.parse().context("--shards")?;
@@ -76,6 +77,18 @@ fn apply_overrides(cfg: &mut RunConfig, p: &Parsed) -> Result<()> {
     if let Some(addr) = p.opt("observe-addr") {
         cfg.observe = true;
         cfg.observe_addr = addr.to_string();
+    }
+    if let Some(addr) = p.opt("listen") {
+        cfg.net_listen = addr.to_string();
+    }
+    if let Some(addr) = p.opt("connect") {
+        cfg.net_connect = Some(addr.to_string());
+    }
+    if let Some(n) = p.opt("join-gate") {
+        cfg.net_join_gate = n.parse().context("--join-gate")?;
+    }
+    if let Some(n) = p.opt("retries") {
+        cfg.net_retries = n.parse().context("--retries")?;
     }
     Ok(())
 }
@@ -133,11 +146,19 @@ pub fn cmd_sample(p: &Parsed) -> Result<i32> {
     apply_telemetry(&cfg);
     apply_faults(&cfg);
     apply_observe(&cfg)?;
-    // Probe stream-path writability now: the scheme drivers treat sink
-    // init as infallible, so an unwritable path must fail here with a
-    // clean error before any sampling starts. Open in append mode — the
-    // previous run's artifact must survive until the new run actually
-    // begins (the driver's own hub truncates it then).
+    probe_sink_path(&cfg)?;
+    probe_checkpoint_dir(&cfg)?;
+    let result = run_configured(&cfg)?;
+    report_run(&cfg, &result);
+    Ok(0)
+}
+
+/// Probe stream-path writability now: the scheme drivers treat sink init
+/// as infallible, so an unwritable path must fail here with a clean error
+/// before any sampling starts. Open in append mode — the previous run's
+/// artifact must survive until the new run actually begins (the driver's
+/// own hub truncates it then).
+fn probe_sink_path(cfg: &RunConfig) -> Result<()> {
     let spec = cfg.sink_spec();
     if let Some(stream) = spec.jsonl_path() {
         if let Some(parent) = stream.parent() {
@@ -152,8 +173,134 @@ pub fn cmd_sample(p: &Parsed) -> Result<i32> {
             .open(stream)
             .with_context(|| format!("opening stream {stream:?}"))?;
     }
+    Ok(())
+}
+
+/// Shared validation + engine construction for the fleet subcommands:
+/// both ends of a TCP fleet must resolve the same EC experiment, and the
+/// engine's θ layout fixes the wire dimension.
+fn fleet_engine(cfg: &RunConfig) -> Result<Box<dyn WorkerEngine>> {
+    if !matches!(cfg.scheme, Scheme::ElasticCoupling | Scheme::EcSgld) {
+        return Err(anyhow!(
+            "fleet mode runs the EC schemes (got {}); set [run] scheme = \"ec\"",
+            cfg.scheme.name()
+        ));
+    }
+    if cfg.transport != TransportKind::Tcp {
+        return Err(anyhow!(
+            "fleet mode needs [coordinator] transport = \"tcp\" (got \"{}\") so \
+             in-process and cross-machine runs can't be mixed by accident",
+            cfg.transport.name()
+        ));
+    }
+    if matches!(
+        cfg.target,
+        Target::Mlp { backend: Backend::Xla } | Target::Resnet { backend: Backend::Xla }
+    ) {
+        return Err(anyhow!(
+            "fleet mode supports the native backends only (XLA artifacts are \
+             per-process; use backend = \"native\")"
+        ));
+    }
+    let potential = build_potential(cfg)?;
+    let kind = match cfg.scheme {
+        Scheme::Sgld | Scheme::EcSgld => StepKind::Sgld,
+        _ => StepKind::Sghmc,
+    };
+    Ok(build_engines(cfg, &potential, kind, 1)?.remove(0))
+}
+
+/// `ecsgmcmc center --config <file> [--listen addr] [--resume]` — serve a
+/// cross-machine EC fleet: own (c, r), admit workers over TCP, run the
+/// unmodified center segment loop (DESIGN.md §14).
+pub fn cmd_center(p: &Parsed) -> Result<i32> {
+    use crate::coordinator::net;
+    let path = p.opt("config").ok_or_else(|| anyhow!("--config is required"))?;
+    let mut cfg = RunConfig::from_file(path)?;
+    apply_overrides(&mut cfg, p)?;
+    cfg.validate()?;
+    apply_dispatch(&cfg)?;
+    apply_telemetry(&cfg);
+    apply_faults(&cfg);
+    apply_observe(&cfg)?;
+    probe_sink_path(&cfg)?;
     probe_checkpoint_dir(&cfg)?;
-    let result = run_configured(&cfg)?;
+    let engine = fleet_engine(&cfg)?;
+    let (dim, live) = (engine.dim(), engine.live_dim());
+    drop(engine);
+    let listener = net::bind(&cfg.net_listen)?;
+    if let Ok(addr) = listener.local_addr() {
+        log_info!(
+            "fleet center: listening on {addr} for {} founders (dim {dim}, s={})",
+            cfg.workers,
+            cfg.sync_every
+        );
+    }
+    let ccfg = net::CenterConfig {
+        workers: cfg.workers,
+        alpha: cfg.alpha,
+        sync_every: cfg.sync_every,
+        steps: cfg.steps,
+        shards: cfg.shards,
+        dim,
+        live,
+        seed: cfg.seed,
+        params: cfg.sampler,
+        opts: run_options(&cfg),
+        delay: DelayModel::with_exchange_ms(cfg.delay_ms),
+        staleness_bound: cfg.staleness_bound,
+        checkpoint: cfg.checkpoint(),
+        resume: p.has_flag("resume"),
+        idle_timeout: std::time::Duration::from_millis(cfg.net_idle_timeout_ms.max(1)),
+    };
+    let result = net::run_center_on(listener, ccfg)?;
+    report_run(&cfg, &result);
+    Ok(0)
+}
+
+/// `ecsgmcmc worker --config <file> --connect <addr> [--join-gate n]
+/// [--retries n]` — join a TCP fleet and sample against its center.
+pub fn cmd_worker(p: &Parsed) -> Result<i32> {
+    use crate::coordinator::net;
+    let path = p.opt("config").ok_or_else(|| anyhow!("--config is required"))?;
+    let mut cfg = RunConfig::from_file(path)?;
+    apply_overrides(&mut cfg, p)?;
+    cfg.validate()?;
+    apply_dispatch(&cfg)?;
+    apply_telemetry(&cfg);
+    apply_faults(&cfg);
+    probe_sink_path(&cfg)?;
+    let engine = fleet_engine(&cfg)?;
+    let connect = cfg
+        .net_connect
+        .clone()
+        .ok_or_else(|| anyhow!("--connect (or [net] connect) is required"))?;
+    // Both ends derive the fingerprint from their own config; the
+    // handshake compares hashes, so a drifted config fails fast instead
+    // of silently sampling a different experiment.
+    let fp = net::fleet_fingerprint(
+        cfg.workers,
+        cfg.alpha,
+        cfg.sync_every,
+        cfg.steps,
+        cfg.shards,
+        engine.dim(),
+        engine.live_dim(),
+        cfg.staleness_bound,
+    );
+    let wcfg = net::WorkerConfig {
+        connect,
+        seed: cfg.seed,
+        steps: cfg.steps,
+        sync_every: cfg.sync_every,
+        alpha: cfg.alpha,
+        opts: run_options(&cfg),
+        delay: DelayModel::with_exchange_ms(cfg.delay_ms),
+        fingerprint_hash: net::fingerprint_hash(&fp),
+        join_gate: cfg.net_join_gate,
+        retries: cfg.net_retries,
+    };
+    let result = net::run_worker(&wcfg, engine)?;
     report_run(&cfg, &result);
     Ok(0)
 }
@@ -424,6 +571,13 @@ pub fn run_configured(cfg: &RunConfig) -> Result<RunResult> {
             IndependentCoordinator::new(cfg.steps, opts).run(engines, cfg.seed)
         }
         Scheme::ElasticCoupling | Scheme::EcSgld => {
+            if cfg.transport == TransportKind::Tcp {
+                return Err(anyhow!(
+                    "the tcp transport runs as separate processes; launch \
+                     `ecsgmcmc center --config <cfg>` and `ecsgmcmc worker \
+                     --config <cfg> --connect <addr>` instead of an in-process run"
+                ));
+            }
             let ec_cfg = ec_config(cfg, opts, delay);
             let fleet = crate::coordinator::ec::planned_spans(&ec_cfg, cfg.seed).len();
             let engines = build_engines(cfg, &potential, kind, fleet)?;

@@ -6,6 +6,9 @@
 //! * `resume --config <file.toml>` — continue a checkpointed EC run from
 //!   its newest snapshot (bit-identical under the deterministic
 //!   transport, DESIGN.md §8);
+//! * `center --config <file.toml>` / `worker --connect <addr>` — the two
+//!   halves of a cross-machine fleet: a center server owning (c, r) and
+//!   worker processes exchanging with it over TCP (DESIGN.md §14);
 //! * `replay --file <run.jsonl>` — reconstruct or re-diagnose a streamed
 //!   run from its JSONL artifact (DESIGN.md §7); on a damaged stream it
 //!   reports the intact prefix and the salvage point;
@@ -46,6 +49,8 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
     match parsed.command.as_str() {
         "sample" => commands::cmd_sample(&parsed),
         "resume" => commands::cmd_resume(&parsed),
+        "center" => commands::cmd_center(&parsed),
+        "worker" => commands::cmd_worker(&parsed),
         "replay" => commands::cmd_replay(&parsed),
         "fsck" => commands::cmd_fsck(&parsed),
         "trace" => commands::cmd_trace(&parsed),
@@ -105,6 +110,18 @@ COMMANDS:
                   --config <file.toml>   the run's original config
                   --checkpoint-dir <d>   snapshot dir (or [checkpoint] dir)
                   --file <ckpt.jsonl>    resume a specific snapshot instead
+    center      Serve an EC fleet center over TCP (transport = \"tcp\")
+                  --config <file.toml>   shared fleet config (both ends)
+                  --listen <addr>        bind address (default 127.0.0.1:9618)
+                  --resume               continue from the newest snapshot in
+                                         the checkpoint dir
+                  (accepts the sample checkpoint/sink/telemetry/observe flags)
+    worker      Join a TCP fleet and sample against its center
+                  --config <file.toml>   shared fleet config (both ends)
+                  --connect <addr>       center address (or [net] connect)
+                  --join-gate <n>        activate after the fleet has made n
+                                         exchanges (default 0 = founder)
+                  --retries <n>          connection attempts (default 5)
     replay      Reconstruct a streamed run from its JSONL artifact
                   --file <run.jsonl>     stream produced by --sink jsonl|tee
                   --diag                 stream diagnostics only (bounded memory)

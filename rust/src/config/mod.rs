@@ -218,6 +218,21 @@ pub struct RunConfig {
     /// Bind address for the exposition server (`[observe] addr`,
     /// `--observe-addr`). Port 0 picks an ephemeral port.
     pub observe_addr: String,
+    /// Fleet center bind address (`[net] listen`, `--listen`) for
+    /// `ecsgmcmc center` with the TCP transport (DESIGN.md §14).
+    pub net_listen: String,
+    /// Center address (`[net] connect`, `--connect`) a worker process
+    /// dials; `None` outside worker mode.
+    pub net_connect: Option<String>,
+    /// Fleet-progress gate (`[net] join_gate`, `--join-gate`) a worker
+    /// waits behind before activating; 0 = founder.
+    pub net_join_gate: u64,
+    /// Worker connection attempts before giving up (`[net] retries`,
+    /// `--retries`), with exponential backoff between them.
+    pub net_retries: u32,
+    /// Center idle timeout in ms (`[net] idle_timeout_ms`): give up when
+    /// no worker ever connects, and fail a silent connection, after this.
+    pub net_idle_timeout_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -256,6 +271,11 @@ impl Default for RunConfig {
             faults: None,
             observe: false,
             observe_addr: "127.0.0.1:9464".into(),
+            net_listen: "127.0.0.1:9618".into(),
+            net_connect: None,
+            net_join_gate: 0,
+            net_retries: 5,
+            net_idle_timeout_ms: 30_000,
         }
     }
 }
@@ -306,7 +326,9 @@ impl RunConfig {
         cfg.collect = t.get_usize("coordinator", "collect").unwrap_or(cfg.collect);
         if let Some(s) = t.get_str("coordinator", "transport") {
             cfg.transport = TransportKind::from_str(s)
-                .ok_or_else(|| anyhow::anyhow!("unknown transport '{s}' (deterministic|lockfree)"))?;
+                .ok_or_else(|| {
+                    anyhow::anyhow!("unknown transport '{s}' (deterministic|lockfree|tcp)")
+                })?;
         }
         cfg.shards = t.get_usize("coordinator", "shards").unwrap_or(cfg.shards);
         cfg.alpha = t.get_f64("coordinator", "alpha").unwrap_or(cfg.alpha);
@@ -381,6 +403,14 @@ impl RunConfig {
                 plan.drop_rate = v;
                 any = true;
             }
+            if let Some(v) = t.get_f64("faults", "net_drop") {
+                plan.net_drop_rate = v;
+                any = true;
+            }
+            if let Some(v) = t.get_f64("faults", "net_delay") {
+                plan.net_delay_rate = v;
+                any = true;
+            }
             if let Some(v) = t.get_usize("faults", "panic") {
                 plan.panic_worker = Some(v);
                 any = true;
@@ -394,6 +424,19 @@ impl RunConfig {
         if let Some(addr) = t.get_str("observe", "addr") {
             cfg.observe_addr = addr.to_string();
         }
+
+        if let Some(addr) = t.get_str("net", "listen") {
+            cfg.net_listen = addr.to_string();
+        }
+        if let Some(addr) = t.get_str("net", "connect") {
+            cfg.net_connect = Some(addr.to_string());
+        }
+        cfg.net_join_gate =
+            t.get_usize("net", "join_gate").unwrap_or(cfg.net_join_gate as usize) as u64;
+        cfg.net_retries = t.get_usize("net", "retries").unwrap_or(cfg.net_retries as usize) as u32;
+        cfg.net_idle_timeout_ms = t
+            .get_usize("net", "idle_timeout_ms")
+            .unwrap_or(cfg.net_idle_timeout_ms as usize) as u64;
 
         cfg.validate()?;
         Ok(cfg)
@@ -488,6 +531,8 @@ impl RunConfig {
                 ("ckpt", plan.ckpt_rate),
                 ("sink", plan.sink_rate),
                 ("drop", plan.drop_rate),
+                ("net_drop", plan.net_drop_rate),
+                ("net_delay", plan.net_delay_rate),
             ] {
                 if !(0.0..=1.0).contains(&v) {
                     bail!("[faults] {name} must be a rate in [0, 1] (got {v})");
@@ -782,6 +827,53 @@ alpha = 0.5
         // A custom addr without enabled = true parses and stays off.
         let off = RunConfig::from_toml_str("[observe]\naddr = \"0.0.0.0:9000\"\n").unwrap();
         assert!(!off.observe);
+    }
+
+    #[test]
+    fn parses_net_table() {
+        let cfg = RunConfig::from_toml_str(
+            "[run]\nscheme = \"ec\"\n\
+             [coordinator]\ntransport = \"tcp\"\n\
+             [net]\nlisten = \"0.0.0.0:7000\"\nconnect = \"10.0.0.1:7000\"\n\
+             join_gate = 12\nretries = 9\nidle_timeout_ms = 1500\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.transport, TransportKind::Tcp);
+        assert_eq!(cfg.net_listen, "0.0.0.0:7000");
+        assert_eq!(cfg.net_connect.as_deref(), Some("10.0.0.1:7000"));
+        assert_eq!(cfg.net_join_gate, 12);
+        assert_eq!(cfg.net_retries, 9);
+        assert_eq!(cfg.net_idle_timeout_ms, 1500);
+        // Defaults: loopback listen, founder gate, no connect target.
+        let plain = RunConfig::from_toml_str("[run]\nscheme = \"ec\"\n").unwrap();
+        assert_eq!(plain.net_listen, "127.0.0.1:9618");
+        assert_eq!(plain.net_connect, None);
+        assert_eq!(plain.net_join_gate, 0);
+        assert_eq!(plain.net_retries, 5);
+        assert_eq!(plain.net_idle_timeout_ms, 30_000);
+    }
+
+    #[test]
+    fn parses_net_fault_keys() {
+        let cfg = RunConfig::from_toml_str(
+            "[run]\nscheme = \"ec\"\n\
+             [coordinator]\ntransport = \"tcp\"\n\
+             [faults]\nnet_drop = 0.2\nnet_delay = 0.4\n",
+        )
+        .unwrap();
+        let plan = cfg.faults.unwrap();
+        assert!((plan.net_drop_rate - 0.2).abs() < 1e-12);
+        assert!((plan.net_delay_rate - 0.4).abs() < 1e-12);
+        assert!(plan.is_active());
+        // Net fault rates are validated like the others.
+        assert!(RunConfig::from_toml_str(
+            "[run]\nscheme = \"ec\"\n[faults]\nnet_drop = 1.5\n"
+        )
+        .is_err());
+        assert!(RunConfig::from_toml_str(
+            "[run]\nscheme = \"ec\"\n[faults]\nnet_delay = -0.1\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -201,44 +201,46 @@ struct WorkerCell {
     seen: u64,
 }
 
-/// The center server's persistent state across segments.
-struct CenterCell {
-    state: ChainState,
+/// The center server's persistent state across segments. `pub(crate)`
+/// because the TCP fabric (`coordinator::net`) drives the same segment
+/// loop from a separate server process.
+pub(crate) struct CenterCell {
+    pub(crate) state: ChainState,
     /// One RNG stream per shard ((seed, 1 + j); shard 0 keeps the
     /// pre-sharding stream so unsharded runs stay byte-compatible).
-    rngs: Vec<Pcg64>,
+    pub(crate) rngs: Vec<Pcg64>,
     /// Latest θ view per worker (founders seeded with the shared init).
-    snapshots: Vec<Vec<f32>>,
+    pub(crate) snapshots: Vec<Vec<f32>>,
     /// Which workers contribute to the snapshot mean right now.
-    active: Vec<bool>,
+    pub(crate) active: Vec<bool>,
     /// Fractional center-step budget (credits · s / fleet).
-    budget: f64,
-    center_steps: u64,
-    metrics: Metrics,
-    sink: Box<dyn SampleSink>,
+    pub(crate) budget: f64,
+    pub(crate) center_steps: u64,
+    pub(crate) metrics: Metrics,
+    pub(crate) sink: Box<dyn SampleSink>,
     /// Center samples lost before this process (restored on resume).
-    dropped_base: u64,
+    pub(crate) dropped_base: u64,
     /// Telemetry drain state (`Some` iff `--telemetry` is on): the
     /// center server doubles as the span-ring consumer (DESIGN.md §11).
-    telem: Option<TelemetryState>,
+    pub(crate) telem: Option<TelemetryState>,
     /// Observatory cell (`Some` iff `[observe]` is on): health
     /// monitoring at center-step boundaries plus the shared snapshot the
     /// HTTP exposition endpoints read (DESIGN.md §13).
-    obs: Option<crate::observe::ObserveCell>,
+    pub(crate) obs: Option<crate::observe::ObserveCell>,
 }
 
 /// The coordinator-side half of the telemetry pipeline: the cumulative
 /// [`crate::telemetry::Aggregate`] every ring drains into, plus the
 /// stream the periodic `telemetry` events go to (`None` when the run has
 /// no JSONL sink — rings still drain so memory stays bounded).
-struct TelemetryState {
-    agg: crate::telemetry::Aggregate,
-    writer: Option<Arc<crate::sink::JsonlWriter>>,
+pub(crate) struct TelemetryState {
+    pub(crate) agg: crate::telemetry::Aggregate,
+    pub(crate) writer: Option<Arc<crate::sink::JsonlWriter>>,
 }
 
 impl TelemetryState {
     /// Drain every ring and emit one `telemetry` stream event.
-    fn emit(&mut self, t: f64, center_steps: u64, staleness_hist: &[u64]) {
+    pub(crate) fn emit(&mut self, t: f64, center_steps: u64, staleness_hist: &[u64]) {
         crate::telemetry::drain_into(&mut self.agg);
         let (spans, elided) = self.agg.take_recent();
         if let Some(w) = &self.writer {
@@ -255,7 +257,7 @@ impl TelemetryState {
     }
 
     /// Cumulative `(stage, count, total_ns)` rows for the run summary.
-    fn stage_totals(&self) -> Vec<(String, u64, u64)> {
+    pub(crate) fn stage_totals(&self) -> Vec<(String, u64, u64)> {
         crate::telemetry::Stage::ALL
             .iter()
             .filter_map(|s| {
@@ -556,9 +558,11 @@ fn run_ec_block_segment(
 /// Serve one segment: consume uploads, apply the bounded-staleness
 /// admission gate, advance the center dynamics by `sync_every / fleet`
 /// steps per admitted credit, publish/ack, and fold membership
-/// transitions into the active set (DESIGN.md §8).
+/// transitions into the active set (DESIGN.md §8). `pub(crate)` so the
+/// TCP fabric's center process (`coordinator::net`) reuses the exact
+/// admission/budget/membership semantics over its socket-backed port.
 #[allow(clippy::too_many_arguments)]
-fn run_center_segment(
+pub(crate) fn run_center_segment(
     mut cc: CenterCell,
     mut port: Box<dyn ServerPort>,
     layout: ShardLayout,

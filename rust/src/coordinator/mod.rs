@@ -34,6 +34,7 @@ pub mod engine;
 pub mod independent;
 pub mod metrics;
 pub mod naive;
+pub mod net;
 pub mod single;
 pub mod staleness;
 pub mod topology;

@@ -1,0 +1,874 @@
+//! The fleet center server: owns (c, r), listens for worker connections,
+//! and drives the exact in-process segment loop
+//! ([`crate::coordinator::ec::run_center_segment`]) over a socket-backed
+//! [`ServerPort`] (DESIGN.md §14).
+//!
+//! Concurrency layout:
+//!
+//! * an **acceptor** thread polls the listener and spawns one handler
+//!   thread per connection;
+//! * each **handler** thread runs the handshake, then reads frames and
+//!   enqueues uploads/departures into [`FleetShared`];
+//! * the **center** thread (the caller) consumes the queue through
+//!   [`NetServerPort::recv`] and steps the center — identical admission,
+//!   staleness, join-gate and budget semantics to the in-process fabrics,
+//!   because it *is* the same code.
+//!
+//! Socket-write discipline: the handler writes on its socket only before
+//! registering the write clone (REJECT/WELCOME); afterwards the center
+//! thread is the sole writer (CENTER acks). One writer per socket means
+//! frames never interleave.
+//!
+//! Slots are assigned monotonically and never reused: a worker that
+//! drops and reconnects is a *new* gated member with a fresh slot, so a
+//! late `fail` event for the old slot can never retire the new one.
+
+use super::frame::{self, FrameReader, Message, PROTO_VERSION};
+use crate::checkpoint::{CenterSnap, CheckpointStore, Fingerprint, RngSnap, Snapshot};
+use crate::coordinator::ec::{run_center_segment, CenterCell, EcCheckpoint, TelemetryState};
+use crate::coordinator::topology::{init_state, Departure, MemberEvent, ShardLayout};
+use crate::coordinator::transport::{ServerPort, Upload};
+use crate::coordinator::{DelayModel, Metrics, RunOptions, RunResult};
+use crate::math::rng::Pcg64;
+use crate::samplers::{ChainState, SghmcParams};
+use crate::sink::{Frame, SinkHub};
+use crate::{log_info, log_warn};
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::Read;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Everything the center process needs to serve a fleet.
+#[derive(Debug, Clone)]
+pub struct CenterConfig {
+    /// Founding fleet size K (the budget denominator starts here; the
+    /// join gate and reconnects ride on top).
+    pub workers: usize,
+    pub alpha: f64,
+    pub sync_every: usize,
+    /// Per-worker run horizon — fingerprinted so center and workers
+    /// agree on the experiment, the workers own the actual loop.
+    pub steps: usize,
+    pub shards: usize,
+    /// Padded θ dimension (must match every worker's engine).
+    pub dim: usize,
+    /// Live (unpadded) θ dimension.
+    pub live: usize,
+    pub seed: u64,
+    pub params: SghmcParams,
+    pub opts: RunOptions,
+    pub delay: DelayModel,
+    pub staleness_bound: Option<u64>,
+    pub checkpoint: Option<EcCheckpoint>,
+    /// Resume from the newest snapshot in the checkpoint dir.
+    pub resume: bool,
+    /// Give up if no worker ever connects (and fail idle connections)
+    /// after this long.
+    pub idle_timeout: Duration,
+}
+
+/// Connection slots the center provisions: the founding fleet plus
+/// headroom for gated joins and reconnects. Slots are never reused, so
+/// this bounds the total admissions over the run's lifetime.
+pub fn fleet_capacity(workers: usize) -> usize {
+    workers * 4 + 4
+}
+
+/// The fleet fingerprint for a TCP run. `total_workers` is 0 — worker
+/// state lives in the worker processes, so center snapshots carry no
+/// worker lines (the snapshot codec checks the two agree). The wire
+/// handshake hashes this with [`frame`]-level rules (kernel dispatch
+/// excluded — fleets may legitimately mix scalar and SIMD machines).
+#[allow(clippy::too_many_arguments)]
+pub fn fleet_fingerprint(
+    workers: usize,
+    alpha: f64,
+    sync_every: usize,
+    steps: usize,
+    shards: usize,
+    dim: usize,
+    live: usize,
+    staleness_bound: Option<u64>,
+) -> Fingerprint {
+    Fingerprint {
+        founders: workers,
+        total_workers: 0,
+        alpha,
+        sync_every,
+        steps,
+        shards,
+        chains_per_worker: 1,
+        transport: "tcp".to_string(),
+        dim,
+        live,
+        churn_leave: 0.0,
+        churn_fail: 0.0,
+        churn_join: 0.0,
+        staleness_bound,
+        kernel_dispatch: crate::math::simd::kernel_kind().name().to_string(),
+    }
+}
+
+/// FNV-1a over the experiment-identity fields of a [`Fingerprint`],
+/// field by field in declaration order. `kernel_dispatch` is excluded:
+/// it is per-machine, and a fleet may mix scalar and SIMD hosts.
+pub fn fingerprint_hash(fp: &Fingerprint) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(&(fp.founders as u64).to_le_bytes());
+    eat(&(fp.total_workers as u64).to_le_bytes());
+    eat(&fp.alpha.to_bits().to_le_bytes());
+    eat(&(fp.sync_every as u64).to_le_bytes());
+    eat(&(fp.steps as u64).to_le_bytes());
+    eat(&(fp.shards as u64).to_le_bytes());
+    eat(&(fp.chains_per_worker as u64).to_le_bytes());
+    eat(fp.transport.as_bytes());
+    eat(&(fp.dim as u64).to_le_bytes());
+    eat(&(fp.live as u64).to_le_bytes());
+    eat(&fp.churn_leave.to_bits().to_le_bytes());
+    eat(&fp.churn_fail.to_bits().to_le_bytes());
+    eat(&fp.churn_join.to_bits().to_le_bytes());
+    eat(&fp.staleness_bound.map_or(u64::MAX, |b| b).to_le_bytes());
+    eat(&[u8::from(fp.staleness_bound.is_some())]);
+    h
+}
+
+/// Upload queue + membership state shared between the handler threads
+/// (producers) and the center thread (consumer).
+struct QueueState {
+    /// (sequence, upload) in arrival order; sequences are global and
+    /// strictly increasing, so consumption order == sequence order.
+    uploads: VecDeque<(u64, Upload)>,
+    next_seq: u64,
+    /// Highest sequence the center has consumed via `recv`.
+    consumed_seq: u64,
+    /// Departures gated behind their worker's last upload: the event is
+    /// surfaced only once `consumed_seq` passes `after_seq`, honoring
+    /// the ServerPort contract (drain-before-departure).
+    events: Vec<(u64, MemberEvent)>,
+}
+
+pub(crate) struct FleetShared {
+    q: Mutex<QueueState>,
+    cv: Condvar,
+    /// Fleet-wide exchange count — the join-gate clock. Restored from
+    /// `exchanges_gate` on resume so gates stay monotone across restarts.
+    exchanges: AtomicU64,
+    live: AtomicUsize,
+    /// Workers ever admitted; 0 live with >0 ever (and a drained queue)
+    /// means the run is over.
+    ever: AtomicUsize,
+    next_slot: AtomicUsize,
+    shutdown: AtomicBool,
+    /// Latest published full center (θ, version), served to joiners in
+    /// WELCOME frames.
+    latest: Mutex<(Vec<f32>, u64)>,
+    /// Per-slot write halves for CENTER acks; `None` = never registered
+    /// or already torn down. Only the center thread writes these.
+    conns: Mutex<Vec<Option<TcpStream>>>,
+    capacity: usize,
+    dim: usize,
+    expected_fingerprint: u64,
+    expected_seed: u64,
+    idle_timeout: Duration,
+    conn_gauge: Option<Arc<crate::telemetry::Gauge>>,
+    frame_counter: Option<Arc<crate::telemetry::Counter>>,
+}
+
+impl FleetShared {
+    fn new(cfg: &CenterConfig, latest: (Vec<f32>, u64), fingerprint: u64) -> Arc<FleetShared> {
+        let capacity = fleet_capacity(cfg.workers);
+        Arc::new(FleetShared {
+            q: Mutex::new(QueueState {
+                uploads: VecDeque::new(),
+                next_seq: 1,
+                consumed_seq: 0,
+                events: Vec::new(),
+            }),
+            cv: Condvar::new(),
+            exchanges: AtomicU64::new(0),
+            live: AtomicUsize::new(0),
+            ever: AtomicUsize::new(0),
+            next_slot: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            latest: Mutex::new(latest),
+            conns: Mutex::new((0..capacity).map(|_| None).collect()),
+            capacity,
+            dim: cfg.dim,
+            expected_fingerprint: fingerprint,
+            expected_seed: cfg.seed,
+            idle_timeout: cfg.idle_timeout,
+            conn_gauge: crate::telemetry::enabled()
+                .then(|| crate::telemetry::gauge("net.connections")),
+            frame_counter: crate::telemetry::enabled()
+                .then(|| crate::telemetry::counter("net.frames")),
+        })
+    }
+
+    /// Enqueue one upload under `slot`, returning its sequence number.
+    fn enqueue_upload(&self, slot: usize, seen_version: u64, theta: Vec<f32>) -> u64 {
+        let seq = {
+            let mut q = self.q.lock().unwrap();
+            let seq = q.next_seq;
+            q.next_seq += 1;
+            q.uploads.push_back((
+                seq,
+                Upload { worker: slot, credits: 1, seen_version, theta },
+            ));
+            seq
+        };
+        self.exchanges.fetch_add(1, Ordering::AcqRel);
+        self.cv.notify_all();
+        seq
+    }
+
+    fn enqueue_event(&self, slot: usize, departure: Departure, after_seq: u64) {
+        let mut q = self.q.lock().unwrap();
+        q.events.push((after_seq, MemberEvent { worker: slot, departure }));
+        drop(q);
+        self.cv.notify_all();
+    }
+
+    fn count_frame(&self) {
+        if let Some(c) = &self.frame_counter {
+            c.add(1);
+        }
+    }
+
+    fn set_conn_gauge(&self) {
+        if let Some(g) = &self.conn_gauge {
+            g.set(self.live.load(Ordering::Acquire) as i64);
+        }
+    }
+
+    /// Every admitted worker has departed and nothing is left to consume.
+    fn fleet_done(&self) -> bool {
+        self.ever.load(Ordering::Acquire) > 0
+            && self.live.load(Ordering::Acquire) == 0
+            && self.q.lock().unwrap().uploads.is_empty()
+    }
+
+    /// Ack path: write a CENTER frame on `slot`'s registered socket. A
+    /// failed write tears the socket down — the handler's reader sees
+    /// EOF and folds the worker into a `fail` departure.
+    fn send_center(&self, slot: usize, center: &[f32], version: u64) {
+        let mut conns = self.conns.lock().unwrap();
+        let Some(entry) = conns.get_mut(slot) else { return };
+        let Some(stream) = entry.as_mut() else { return };
+        let msg = Message::Center { version, theta: center.to_vec() };
+        if frame::write_frame(stream, &msg).is_err() {
+            let _ = stream.shutdown(Shutdown::Both);
+            *entry = None;
+        } else {
+            self.count_frame();
+        }
+    }
+}
+
+/// The socket-backed [`ServerPort`] one segment runs over.
+struct NetServerPort {
+    shared: Arc<FleetShared>,
+    /// Credits to consume before returning `false` for a checkpoint cut
+    /// (`u64::MAX` = no checkpointing, run to fleet exhaustion).
+    cut_credits: u64,
+    consumed: u64,
+    started: Instant,
+}
+
+impl ServerPort for NetServerPort {
+    fn recv(&mut self, out: &mut Vec<Upload>) -> bool {
+        let shared = self.shared.clone();
+        let mut q = shared.q.lock().unwrap();
+        loop {
+            // Cut check first: leftover uploads stay queued for the next
+            // segment's port, nothing is lost across a checkpoint.
+            if self.consumed >= self.cut_credits {
+                return false;
+            }
+            if !q.uploads.is_empty() {
+                while let Some((seq, up)) = q.uploads.pop_front() {
+                    q.consumed_seq = seq;
+                    self.consumed += up.credits;
+                    out.push(up);
+                }
+                return true;
+            }
+            if shared.shutdown.load(Ordering::Acquire) {
+                return false;
+            }
+            let ever = shared.ever.load(Ordering::Acquire);
+            if ever > 0 && shared.live.load(Ordering::Acquire) == 0 {
+                return false; // fleet drained: everyone came and went
+            }
+            if ever == 0 && self.started.elapsed() > shared.idle_timeout {
+                return false; // nobody ever connected
+            }
+            let (guard, _) = shared.cv.wait_timeout(q, Duration::from_millis(200)).unwrap();
+            q = guard;
+        }
+    }
+
+    fn publish(&mut self, shard: usize, center: &[f32], version: u64) {
+        // The segment loop passes the full θ on every shard call; one
+        // record per center step is enough for WELCOME bootstraps.
+        if shard == 0 {
+            let mut latest = self.shared.latest.lock().unwrap();
+            latest.0.clear();
+            latest.0.extend_from_slice(center);
+            latest.1 = version;
+        }
+    }
+
+    fn ack(&mut self, worker: usize, center: &[f32], version: u64) {
+        self.shared.send_center(worker, center, version);
+    }
+
+    fn member_events(&mut self, out: &mut Vec<MemberEvent>) {
+        let mut q = self.shared.q.lock().unwrap();
+        let consumed = q.consumed_seq;
+        // Index scan, not front-only: worker A's still-gated departure
+        // must not block worker B's ready one.
+        let mut i = 0;
+        while i < q.events.len() {
+            if q.events[i].0 <= consumed {
+                out.push(q.events.remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+use super::would_block;
+
+/// Read exactly one frame with a deadline (handshake path). `None` on
+/// timeout, EOF, malformed input, or shutdown.
+fn read_one_frame(
+    stream: &mut TcpStream,
+    deadline: Duration,
+    shared: &FleetShared,
+) -> Option<Message> {
+    let start = Instant::now();
+    let mut fr = FrameReader::new();
+    let mut tmp = [0u8; 4096];
+    loop {
+        match fr.next_frame() {
+            Ok(Some(msg)) => return Some(msg),
+            Ok(None) => {}
+            Err(_) => return None,
+        }
+        if start.elapsed() > deadline || shared.shutdown.load(Ordering::Acquire) {
+            return None;
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return None,
+            Ok(n) => fr.feed(&tmp[..n]),
+            Err(e) if would_block(&e) => {}
+            Err(_) => return None,
+        }
+    }
+}
+
+fn reject(stream: &mut TcpStream, reason: &str) {
+    let _ = frame::write_frame(stream, &Message::Reject { reason: reason.to_string() });
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// One connection's lifetime: handshake → gate → admit → read frames →
+/// departure bookkeeping.
+fn handle_conn(shared: Arc<FleetShared>, mut stream: TcpStream, live_dim: usize) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+
+    // --- Handshake ------------------------------------------------------
+    let hello = read_one_frame(&mut stream, Duration::from_secs(10), &shared);
+    let join_gate = match hello {
+        Some(Message::Hello { proto, fingerprint, seed, join_gate }) => {
+            if proto != PROTO_VERSION {
+                reject(&mut stream, &format!("protocol {proto} != {PROTO_VERSION}"));
+                return;
+            }
+            if fingerprint != shared.expected_fingerprint {
+                reject(
+                    &mut stream,
+                    "config fingerprint mismatch (run both ends from the same config)",
+                );
+                return;
+            }
+            if seed != shared.expected_seed {
+                reject(&mut stream, "seed mismatch (pass the center's --seed)");
+                return;
+            }
+            join_gate
+        }
+        _ => {
+            reject(&mut stream, "expected HELLO");
+            return;
+        }
+    };
+    shared.count_frame();
+
+    let slot = shared.next_slot.fetch_add(1, Ordering::AcqRel);
+    if slot >= shared.capacity {
+        reject(&mut stream, "fleet is full (no admission slots left)");
+        return;
+    }
+
+    // --- Join gate: wait behind the fleet-progress clock ---------------
+    while shared.exchanges.load(Ordering::Acquire) < join_gate {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // --- Admit: WELCOME (last handler write), then register ------------
+    let (theta, version) = {
+        let latest = shared.latest.lock().unwrap();
+        (latest.0.clone(), latest.1)
+    };
+    let welcome = Message::Welcome {
+        worker: slot as u32,
+        dim: shared.dim as u32,
+        live: live_dim as u32,
+        version,
+        theta,
+    };
+    if frame::write_frame(&mut stream, &welcome).is_err() {
+        return;
+    }
+    shared.count_frame();
+    match stream.try_clone() {
+        Ok(clone) => shared.conns.lock().unwrap()[slot] = Some(clone),
+        Err(_) => return,
+    }
+    shared.live.fetch_add(1, Ordering::AcqRel);
+    shared.ever.fetch_add(1, Ordering::AcqRel);
+    shared.set_conn_gauge();
+    shared.cv.notify_all();
+    log_info!("fleet: worker slot {slot} admitted (gate {join_gate})");
+
+    // --- Frame loop -----------------------------------------------------
+    let mut fr = FrameReader::new();
+    let mut tmp = [0u8; 64 * 1024];
+    let mut last_seq = 0u64;
+    let mut last_activity = Instant::now();
+    let mut clean = false;
+    'conn: loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        if last_activity.elapsed() > shared.idle_timeout {
+            log_warn!("fleet: worker slot {slot} idle past the timeout, failing it");
+            break;
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(n) => {
+                last_activity = Instant::now();
+                fr.feed(&tmp[..n]);
+                loop {
+                    match fr.next_frame() {
+                        Ok(Some(Message::Upload { seen_version, theta, .. })) => {
+                            shared.count_frame();
+                            // Slot id is authoritative; the wire's worker
+                            // field is advisory. Shape is validated here
+                            // so hostile frames cannot poison the center.
+                            if theta.len() != shared.dim {
+                                break 'conn;
+                            }
+                            last_seq = shared.enqueue_upload(slot, seen_version, theta);
+                        }
+                        Ok(Some(Message::Depart { fail, seen_version, theta })) => {
+                            shared.count_frame();
+                            if let Some(theta) = theta {
+                                if theta.len() == shared.dim {
+                                    last_seq =
+                                        shared.enqueue_upload(slot, seen_version, theta);
+                                }
+                            }
+                            let kind =
+                                if fail { Departure::Fail } else { Departure::Leave };
+                            shared.enqueue_event(slot, kind, last_seq);
+                            clean = true;
+                            break 'conn;
+                        }
+                        Ok(Some(_)) => break 'conn, // protocol violation
+                        Ok(None) => break,
+                        Err(_) => break 'conn,
+                    }
+                }
+            }
+            Err(e) if would_block(&e) => {}
+            Err(_) => break,
+        }
+    }
+
+    // --- Teardown -------------------------------------------------------
+    if !clean {
+        // Abrupt disconnect (kill, crash, cable pull): a fail departure
+        // gated behind whatever this worker last uploaded.
+        shared.enqueue_event(slot, Departure::Fail, last_seq);
+        log_warn!("fleet: worker slot {slot} connection lost, folded into a fail departure");
+    }
+    if let Some(entry) = shared.conns.lock().unwrap().get_mut(slot) {
+        if let Some(s) = entry.take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+    shared.live.fetch_sub(1, Ordering::AcqRel);
+    shared.set_conn_gauge();
+    shared.cv.notify_all();
+}
+
+fn spawn_acceptor(
+    shared: Arc<FleetShared>,
+    listener: TcpListener,
+    live_dim: usize,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("net-accept".into())
+        .spawn(move || {
+            if listener.set_nonblocking(true).is_err() {
+                log_warn!("fleet: listener refused nonblocking mode; not accepting");
+                return;
+            }
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, addr)) => {
+                        log_info!("fleet: connection from {addr}");
+                        let sh = shared.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("net-conn".into())
+                            .spawn(move || handle_conn(sh, stream, live_dim));
+                    }
+                    Err(e) if would_block(&e) => {
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(50)),
+                }
+            }
+        })
+        .expect("spawn net-accept thread")
+}
+
+/// Bind the center's listen socket (separate from [`run_center_on`] so
+/// tests can bind port 0 and read the ephemeral address back).
+pub fn bind(listen: &str) -> Result<TcpListener> {
+    TcpListener::bind(listen).with_context(|| format!("binding fleet center on {listen}"))
+}
+
+/// Serve a fleet run to completion on an already-bound listener and
+/// return the center's result (worker traces live with the workers).
+pub fn run_center_on(listener: TcpListener, cfg: CenterConfig) -> Result<RunResult> {
+    let start = Instant::now();
+    let faults_base = crate::faults::injected_count();
+    let layout = ShardLayout::contiguous(cfg.dim, cfg.shards);
+    let capacity = fleet_capacity(cfg.workers);
+    let fingerprint = fleet_fingerprint(
+        cfg.workers,
+        cfg.alpha,
+        cfg.sync_every,
+        cfg.steps,
+        cfg.shards,
+        cfg.dim,
+        cfg.live,
+        cfg.staleness_bound,
+    );
+
+    let ckpt = cfg
+        .checkpoint
+        .as_ref()
+        .map(|c| (CheckpointStore::new(&c.dir, c.policy.keep), c.policy.clone()));
+    let resume_snap: Option<Snapshot> = if cfg.resume {
+        let Some((store, _)) = &ckpt else {
+            bail!("--resume needs a checkpoint dir ([checkpoint] dir or --checkpoint-dir)");
+        };
+        let (path, snap) = store.load_latest()?;
+        log_info!("fleet center: resuming from {}", path.display());
+        Some(snap)
+    } else {
+        None
+    };
+
+    let hub = match &resume_snap {
+        None => SinkHub::new(&cfg.opts.sink).context("sink init failed")?,
+        Some(snap) => SinkHub::resume(&cfg.opts.sink, &snap.sink_offsets)
+            .context("reopening run streams for resume")?,
+    };
+    let telem_on = crate::telemetry::enabled();
+    if telem_on {
+        crate::telemetry::discard_pending();
+    }
+    let telem = telem_on
+        .then(|| TelemetryState { agg: Default::default(), writer: hub.primary_writer() });
+    let obs = crate::observe::shared().map(|sh| {
+        crate::observe::ObserveCell::new(
+            sh,
+            "ec",
+            capacity,
+            cfg.seed,
+            cfg.staleness_bound,
+            hub.primary_writer(),
+            hub.primary_diag(),
+        )
+    });
+
+    let (mut cc, elapsed_before, exchanges_base) = match &resume_snap {
+        None => {
+            hub.write_meta("ec", capacity, cfg.seed);
+            let init0 = init_state(cfg.dim, cfg.live, &cfg.opts, cfg.seed, 0);
+            let cc = CenterCell {
+                state: ChainState::from_theta(init0.theta.clone()),
+                rngs: (0..layout.shards())
+                    .map(|j| Pcg64::new(cfg.seed, 1 + j as u64))
+                    .collect(),
+                snapshots: vec![init0.theta; capacity],
+                active: vec![false; capacity],
+                budget: 0.0,
+                center_steps: 0,
+                metrics: Metrics::default(),
+                sink: hub.frame_sink(Frame::Center, cfg.opts.max_samples),
+                dropped_base: 0,
+                telem,
+                obs,
+            };
+            (cc, 0.0, 0u64)
+        }
+        Some(snap) => {
+            if snap.fingerprint != fingerprint {
+                bail!(
+                    "checkpoint fingerprint mismatch: snapshot {:?} vs configured {:?}",
+                    snap.fingerprint,
+                    fingerprint
+                );
+            }
+            let c = &snap.center;
+            if c.rngs.len() != layout.shards()
+                || c.views.len() != capacity
+                || c.active.len() != capacity
+            {
+                bail!(
+                    "checkpoint shape mismatch: {} rng streams / {} views for a \
+                     {}-shard, {}-slot fleet",
+                    c.rngs.len(),
+                    c.views.len(),
+                    layout.shards(),
+                    capacity
+                );
+            }
+            if c.theta.len() != cfg.dim || c.p.len() != cfg.dim {
+                bail!("checkpoint dim {} != configured {}", c.theta.len(), cfg.dim);
+            }
+            let cc = CenterCell {
+                state: ChainState { theta: c.theta.clone(), p: c.p.clone() },
+                rngs: c.rngs.iter().map(RngSnap::restore).collect(),
+                snapshots: c.views.clone(),
+                // The sockets behind the old active set died with the old
+                // process; workers reconnect under fresh slots and re-join
+                // on their first admitted upload.
+                active: vec![false; capacity],
+                budget: c.budget,
+                center_steps: c.center_steps,
+                metrics: snap.metrics.clone(),
+                sink: hub.frame_sink(Frame::Center, cfg.opts.max_samples),
+                dropped_base: c.dropped,
+                telem,
+                obs,
+            };
+            (cc, snap.elapsed, snap.exchanges_gate)
+        }
+    };
+
+    let hash = fingerprint_hash(&fingerprint);
+    let shared = FleetShared::new(&cfg, (cc.state.theta.clone(), cc.center_steps), hash);
+    shared.exchanges.store(exchanges_base, Ordering::SeqCst);
+    let acceptor = spawn_acceptor(shared.clone(), listener, cfg.live);
+    log_info!(
+        "fleet center: serving {} founder slots (capacity {capacity}), dim {}, s={}",
+        cfg.workers,
+        cfg.dim,
+        cfg.sync_every
+    );
+
+    // Checkpoint cut cadence in consumed credits: one "round" is one
+    // exchange from each founder, mirroring the in-process cut policy.
+    let cut_credits = ckpt
+        .as_ref()
+        .map(|(_, p)| p.every_rounds.max(1).saturating_mul(cfg.workers as u64))
+        .unwrap_or(u64::MAX);
+    let mut last_write = Instant::now();
+    loop {
+        let port: Box<dyn ServerPort> = Box::new(NetServerPort {
+            shared: shared.clone(),
+            cut_credits,
+            consumed: 0,
+            started: Instant::now(),
+        });
+        cc = run_center_segment(
+            cc,
+            port,
+            layout.clone(),
+            cfg.params,
+            cfg.alpha,
+            cfg.sync_every,
+            cfg.delay,
+            cfg.opts.clone(),
+            cfg.live,
+            cfg.staleness_bound,
+            start,
+        );
+        if shared.shutdown.load(Ordering::Acquire) || shared.fleet_done() {
+            break;
+        }
+        if shared.ever.load(Ordering::Acquire) == 0 && start.elapsed() > cfg.idle_timeout {
+            log_warn!(
+                "fleet center: no worker connected within {:.0?}; shutting down",
+                cfg.idle_timeout
+            );
+            break;
+        }
+        if let Some((store, policy)) = &ckpt {
+            if policy.should_write(last_write.elapsed().as_secs_f64()) {
+                let snap = build_center_snapshot(
+                    &cfg,
+                    &fingerprint,
+                    &shared,
+                    &cc,
+                    &hub,
+                    elapsed_before + start.elapsed().as_secs_f64(),
+                );
+                match store.save_with_retries(&snap) {
+                    Ok((path, retries)) => {
+                        cc.metrics.ckpt_retries += retries;
+                        hub.write_checkpoint_marker(
+                            cc.center_steps as usize,
+                            &path.display().to_string(),
+                        );
+                        last_write = Instant::now();
+                    }
+                    Err(e) => {
+                        cc.metrics.ckpt_retries += crate::checkpoint::SAVE_ATTEMPTS;
+                        log_warn!("checkpoint save failed (run continues): {e:#}");
+                    }
+                }
+            }
+        }
+    }
+    shared.shutdown.store(true, Ordering::Release);
+    shared.cv.notify_all();
+    let _ = acceptor.join();
+
+    // --- Result assembly (mirrors the in-process EC driver) -------------
+    let mut result = RunResult::default();
+    let elapsed = elapsed_before + start.elapsed().as_secs_f64();
+    cc.metrics.center_steps = cc.center_steps;
+    if let Some(tel) = cc.telem.as_mut() {
+        tel.emit(elapsed, cc.center_steps, &cc.metrics.staleness_hist);
+        cc.metrics.stage_totals = tel.stage_totals();
+    }
+    if let Some(obs) = cc.obs.as_mut() {
+        obs.finish(
+            elapsed,
+            &cc.state.theta,
+            &cc.active,
+            &cc.metrics,
+            cc.center_steps,
+            cc.telem.as_ref().map(|tel| &tel.agg),
+        );
+    }
+    cc.metrics.samples_dropped = cc.dropped_base + cc.sink.dropped();
+    cc.metrics.faults_injected +=
+        crate::faults::injected_count().saturating_sub(faults_base);
+    result.center_trace = cc.sink.take_samples();
+    cc.sink.flush();
+    result.metrics = cc.metrics;
+    result.elapsed = elapsed;
+    result.merge_samples();
+    hub.finish(&mut result);
+    Ok(result)
+}
+
+fn build_center_snapshot(
+    cfg: &CenterConfig,
+    fingerprint: &Fingerprint,
+    shared: &FleetShared,
+    cc: &CenterCell,
+    hub: &SinkHub,
+    elapsed: f64,
+) -> Snapshot {
+    Snapshot {
+        seed: cfg.seed,
+        boundary: cc.center_steps as usize,
+        elapsed,
+        exchanges_gate: shared.exchanges.load(Ordering::SeqCst),
+        fingerprint: fingerprint.clone(),
+        // Worker state lives in the worker processes; the center snapshot
+        // carries none (total_workers = 0 in the fleet fingerprint).
+        workers: Vec::new(),
+        center: CenterSnap {
+            theta: cc.state.theta.clone(),
+            p: cc.state.p.clone(),
+            budget: cc.budget,
+            center_steps: cc.center_steps,
+            dropped: cc.dropped_base + cc.sink.dropped(),
+            rngs: cc.rngs.iter().map(RngSnap::of).collect(),
+            active: cc.active.clone(),
+            views: cc.snapshots.clone(),
+        },
+        metrics: cc.metrics.clone(),
+        sink_offsets: hub.stream_positions(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp() -> Fingerprint {
+        fleet_fingerprint(4, 0.75, 2, 100, 1, 2, 2, Some(64))
+    }
+
+    #[test]
+    fn fingerprint_hash_ignores_kernel_dispatch_only() {
+        let a = fp();
+        let mut b = fp();
+        b.kernel_dispatch = "something-else".into();
+        assert_eq!(fingerprint_hash(&a), fingerprint_hash(&b));
+        for tweak in [
+            |f: &mut Fingerprint| f.founders = 5,
+            |f: &mut Fingerprint| f.alpha += 0.5,
+            |f: &mut Fingerprint| f.sync_every = 3,
+            |f: &mut Fingerprint| f.steps = 101,
+            |f: &mut Fingerprint| f.dim = 3,
+            |f: &mut Fingerprint| f.staleness_bound = None,
+            |f: &mut Fingerprint| f.staleness_bound = Some(65),
+        ] {
+            let mut c = fp();
+            tweak(&mut c);
+            assert_ne!(fingerprint_hash(&a), fingerprint_hash(&c));
+        }
+    }
+
+    #[test]
+    fn capacity_leaves_reconnect_headroom() {
+        assert!(fleet_capacity(1) > 1);
+        assert!(fleet_capacity(4) >= 4 * 2);
+    }
+}

@@ -1,0 +1,423 @@
+//! Wire framing for the TCP fleet fabric (DESIGN.md §14).
+//!
+//! Every message travels as one length-prefixed binary frame:
+//!
+//! ```text
+//! [len: u32 LE][tag: u8][payload: len-1 bytes]
+//! ```
+//!
+//! `len` counts the tag byte plus the payload, so a frame occupies
+//! `4 + len` bytes on the wire. All integers are little-endian; θ vectors
+//! are a `u32` element count followed by packed `f32` bits. The decoder
+//! ([`FrameReader`]) is incremental (feed arbitrary byte chunks, frames
+//! come out whole) and **panic-free on arbitrary input** — every length
+//! is bounds-checked and every malformed frame surfaces as an
+//! [`anyhow::Error`], never an index/alloc panic. The fault-corpus
+//! adversary in `tests/test_fault_corpus.rs` holds it to that.
+
+use anyhow::{bail, Result};
+use std::io::Write;
+
+/// Protocol version carried in HELLO; the center rejects mismatches
+/// outright instead of guessing at frame layouts.
+pub const PROTO_VERSION: u16 = 1;
+
+/// HELLO magic ("ECSG" LE) so a stray connection from some other service
+/// fails the handshake instead of being misread as a fleet worker.
+pub const MAGIC: u32 = 0x4543_5347;
+
+/// Upper bound on one frame's `len` field. θ for the NN targets is a few
+/// hundred KiB; 64 MiB leaves room for very large models while making a
+/// corrupt length prefix (or a hostile peer) fail fast instead of
+/// triggering a multi-GiB allocation.
+pub const MAX_FRAME: usize = 64 << 20;
+
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_UPLOAD: u8 = 3;
+const TAG_CENTER: u8 = 4;
+const TAG_DEPART: u8 = 5;
+const TAG_REJECT: u8 = 6;
+
+/// One fleet-protocol message (DESIGN.md §14 lists the exchange rules).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker → center, first frame on a connection: prove protocol and
+    /// experiment compatibility, request admission. `join_gate` is the
+    /// fleet-exchange count this worker waits behind (0 = founder).
+    Hello { proto: u16, fingerprint: u64, seed: u64, join_gate: u64 },
+    /// Center → worker, admission granted: the assigned worker slot, the
+    /// model shape, and the current center (θ, version) to start from.
+    Welcome { worker: u32, dim: u32, live: u32, version: u64, theta: Vec<f32> },
+    /// Worker → center: one exchange upload (credits = 1, like the
+    /// deterministic fabric — TCP delivers every frame in order).
+    Upload { worker: u32, seen_version: u64, theta: Vec<f32> },
+    /// Center → worker: the center θ at `version` (the ack/publish path).
+    Center { version: u64, theta: Vec<f32> },
+    /// Worker → center: clean exit. `theta` drains a final un-uploaded θ
+    /// (counted at `seen_version` for staleness, like a normal upload).
+    Depart { fail: bool, seen_version: u64, theta: Option<Vec<f32>> },
+    /// Center → worker: admission refused, with the reason.
+    Reject { reason: String },
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode one message as a complete wire frame (length prefix included).
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let mut payload = Vec::new();
+    let tag = match msg {
+        Message::Hello { proto, fingerprint, seed, join_gate } => {
+            put_u32(&mut payload, MAGIC);
+            put_u16(&mut payload, *proto);
+            put_u64(&mut payload, *fingerprint);
+            put_u64(&mut payload, *seed);
+            put_u64(&mut payload, *join_gate);
+            TAG_HELLO
+        }
+        Message::Welcome { worker, dim, live, version, theta } => {
+            put_u32(&mut payload, *worker);
+            put_u32(&mut payload, *dim);
+            put_u32(&mut payload, *live);
+            put_u64(&mut payload, *version);
+            put_f32s(&mut payload, theta);
+            TAG_WELCOME
+        }
+        Message::Upload { worker, seen_version, theta } => {
+            put_u32(&mut payload, *worker);
+            put_u64(&mut payload, *seen_version);
+            put_f32s(&mut payload, theta);
+            TAG_UPLOAD
+        }
+        Message::Center { version, theta } => {
+            put_u64(&mut payload, *version);
+            put_f32s(&mut payload, theta);
+            TAG_CENTER
+        }
+        Message::Depart { fail, seen_version, theta } => {
+            payload.push(u8::from(*fail));
+            put_u64(&mut payload, *seen_version);
+            payload.push(u8::from(theta.is_some()));
+            if let Some(theta) = theta {
+                put_f32s(&mut payload, theta);
+            }
+            TAG_DEPART
+        }
+        Message::Reject { reason } => {
+            payload.extend_from_slice(reason.as_bytes());
+            TAG_REJECT
+        }
+    };
+    let mut out = Vec::with_capacity(5 + payload.len());
+    put_u32(&mut out, (1 + payload.len()) as u32);
+    out.push(tag);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Write one complete frame and flush (uploads must not sit in a
+/// buffered writer while the worker goes back to sampling).
+pub fn write_frame<W: Write>(w: &mut W, msg: &Message) -> std::io::Result<()> {
+    w.write_all(&encode(msg))?;
+    w.flush()
+}
+
+/// Bounds-checked payload cursor: every read is validated against the
+/// remaining bytes, so hostile/corrupt payloads error instead of panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let remaining = self.buf.len() - self.at;
+        if n > remaining {
+            bail!("payload truncated: need {n} bytes, {remaining} left");
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A θ vector: element count, then packed f32s. The count is checked
+    /// against the bytes actually present *before* any allocation, so a
+    /// corrupt count cannot request a huge buffer.
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let Some(nbytes) = n.checked_mul(4) else {
+            bail!("theta length {n} overflows");
+        };
+        let bytes = self.take(nbytes)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.at..];
+        self.at = self.buf.len();
+        s
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.at != self.buf.len() {
+            bail!("{} trailing bytes after payload", self.buf.len() - self.at);
+        }
+        Ok(())
+    }
+}
+
+/// Decode one frame's body (`tag` + `payload`, the bytes after the
+/// length prefix). Errors on unknown tags, truncated or oversized
+/// payloads, bad magic, and trailing garbage — never panics.
+pub fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
+    let mut c = Cursor { buf: payload, at: 0 };
+    let msg = match tag {
+        TAG_HELLO => {
+            let magic = c.u32()?;
+            if magic != MAGIC {
+                bail!("bad hello magic {magic:#x} (not a fleet worker)");
+            }
+            Message::Hello {
+                proto: c.u16()?,
+                fingerprint: c.u64()?,
+                seed: c.u64()?,
+                join_gate: c.u64()?,
+            }
+        }
+        TAG_WELCOME => Message::Welcome {
+            worker: c.u32()?,
+            dim: c.u32()?,
+            live: c.u32()?,
+            version: c.u64()?,
+            theta: c.f32s()?,
+        },
+        TAG_UPLOAD => Message::Upload {
+            worker: c.u32()?,
+            seen_version: c.u64()?,
+            theta: c.f32s()?,
+        },
+        TAG_CENTER => Message::Center { version: c.u64()?, theta: c.f32s()? },
+        TAG_DEPART => {
+            let fail = match c.u8()? {
+                0 => false,
+                1 => true,
+                other => bail!("bad depart kind {other}"),
+            };
+            let seen_version = c.u64()?;
+            let theta = match c.u8()? {
+                0 => None,
+                1 => Some(c.f32s()?),
+                other => bail!("bad depart theta flag {other}"),
+            };
+            Message::Depart { fail, seen_version, theta }
+        }
+        TAG_REJECT => {
+            let reason = String::from_utf8_lossy(c.rest()).into_owned();
+            Message::Reject { reason }
+        }
+        other => bail!("unknown frame tag {other}"),
+    };
+    c.finish()?;
+    Ok(msg)
+}
+
+/// Incremental frame decoder: feed raw socket bytes in any chunking,
+/// pull complete messages out. Malformed input (zero/oversized length,
+/// bad tag, truncated payload) returns `Err` — the connection should be
+/// dropped, there is no way to resynchronize a binary stream.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader { buf: Vec::new() }
+    }
+
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed as a frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Next complete message, `Ok(None)` if more bytes are needed.
+    pub fn next_frame(&mut self) -> Result<Option<Message>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+        if len == 0 {
+            bail!("zero-length frame");
+        }
+        if len > MAX_FRAME {
+            bail!("frame length {len} exceeds the {MAX_FRAME}-byte cap");
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let msg = decode(self.buf[4], &self.buf[5..4 + len])?;
+        self.buf.drain(..4 + len);
+        Ok(Some(msg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Message) {
+        let wire = encode(&msg);
+        let mut fr = FrameReader::new();
+        fr.feed(&wire);
+        assert_eq!(fr.next_frame().unwrap(), Some(msg));
+        assert_eq!(fr.buffered(), 0);
+        assert!(fr.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn every_message_kind_round_trips() {
+        roundtrip(Message::Hello {
+            proto: PROTO_VERSION,
+            fingerprint: u64::MAX - 3,
+            seed: 42,
+            join_gate: 17,
+        });
+        roundtrip(Message::Welcome {
+            worker: 3,
+            dim: 4,
+            live: 2,
+            version: 9,
+            theta: vec![1.0, -2.5, f32::NAN, 0.0],
+        });
+        roundtrip(Message::Upload { worker: 1, seen_version: 8, theta: vec![0.25; 7] });
+        roundtrip(Message::Center { version: 11, theta: vec![] });
+        roundtrip(Message::Depart { fail: true, seen_version: 5, theta: None });
+        roundtrip(Message::Depart {
+            fail: false,
+            seen_version: 6,
+            theta: Some(vec![3.0, 4.0]),
+        });
+        roundtrip(Message::Reject { reason: "fleet is full".into() });
+    }
+
+    // NaN != NaN breaks the derived PartialEq path above, so check the
+    // NaN lane by bits instead.
+    #[test]
+    fn nan_theta_survives_by_bits() {
+        let wire = encode(&Message::Center { version: 1, theta: vec![f32::NAN] });
+        let mut fr = FrameReader::new();
+        fr.feed(&wire);
+        match fr.next_frame().unwrap() {
+            Some(Message::Center { theta, .. }) => {
+                assert_eq!(theta[0].to_bits(), f32::NAN.to_bits());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn frames_reassemble_from_arbitrary_chunking() {
+        let a = encode(&Message::Upload { worker: 0, seen_version: 1, theta: vec![1.0; 33] });
+        let b = encode(&Message::Depart { fail: false, seen_version: 2, theta: None });
+        let mut wire = a;
+        wire.extend_from_slice(&b);
+        for chunk in [1usize, 2, 3, 7, wire.len()] {
+            let mut fr = FrameReader::new();
+            let mut got = Vec::new();
+            for piece in wire.chunks(chunk) {
+                fr.feed(piece);
+                while let Some(m) = fr.next_frame().unwrap() {
+                    got.push(m);
+                }
+            }
+            assert_eq!(got.len(), 2, "chunk size {chunk}");
+            assert!(matches!(got[0], Message::Upload { .. }));
+            assert!(matches!(got[1], Message::Depart { .. }));
+        }
+    }
+
+    #[test]
+    fn malformed_frames_error_instead_of_panicking() {
+        // Zero length.
+        let mut fr = FrameReader::new();
+        fr.feed(&[0, 0, 0, 0]);
+        assert!(fr.next_frame().is_err());
+        // Oversized length prefix.
+        let mut fr = FrameReader::new();
+        fr.feed(&u32::MAX.to_le_bytes());
+        assert!(fr.next_frame().is_err());
+        // Unknown tag.
+        let mut fr = FrameReader::new();
+        fr.feed(&[1, 0, 0, 0, 99]);
+        assert!(fr.next_frame().is_err());
+        // Truncated payload inside a complete frame.
+        let mut fr = FrameReader::new();
+        fr.feed(&[3, 0, 0, 0, TAG_CENTER, 1, 2]);
+        assert!(fr.next_frame().is_err());
+        // θ count promising more elements than the payload holds.
+        let mut payload = vec![TAG_CENTER];
+        payload.extend_from_slice(&7u64.to_le_bytes());
+        payload.extend_from_slice(&1000u32.to_le_bytes());
+        let mut wire = (payload.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&payload);
+        let mut fr = FrameReader::new();
+        fr.feed(&wire);
+        assert!(fr.next_frame().is_err());
+        // Wrong hello magic.
+        let mut fr = FrameReader::new();
+        let mut hello = encode(&Message::Hello {
+            proto: 1,
+            fingerprint: 0,
+            seed: 0,
+            join_gate: 0,
+        });
+        hello[5] ^= 0xFF; // first magic byte
+        fr.feed(&hello);
+        assert!(fr.next_frame().is_err());
+        // Trailing garbage after a valid payload.
+        let mut wire = encode(&Message::Depart { fail: true, seen_version: 0, theta: None });
+        let len = u32::from_le_bytes(wire[..4].try_into().unwrap()) + 1;
+        wire[..4].copy_from_slice(&len.to_le_bytes());
+        wire.push(0xAB);
+        let mut fr = FrameReader::new();
+        fr.feed(&wire);
+        assert!(fr.next_frame().is_err());
+    }
+}

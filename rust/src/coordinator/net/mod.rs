@@ -1,0 +1,43 @@
+//! Cross-machine fleets: the seqlock/mailbox exchange protocol over TCP
+//! (DESIGN.md §14).
+//!
+//! The in-process transports (`deterministic`, `lockfree`) bound a fleet
+//! to one OS process. This module runs the *same* upload/exchange
+//! protocol between processes: a **center server** (`ecsgmcmc center`)
+//! owns (c, r) and drives the unmodified segment loop from `ec.rs`, and
+//! **worker processes** (`ecsgmcmc worker --connect host:port`) run the
+//! unmodified step → record → jitter → exchange iteration against a
+//! socket-backed port. Staleness accounting is identical to the
+//! in-process fabric — UPLOAD frames carry the worker's `seen_version`,
+//! and the center's admission/staleness/join gates run unchanged.
+//!
+//! Layout:
+//!
+//! * [`frame`]  — the length-prefixed binary wire codec (panic-free
+//!   decoder; version-negotiated HELLO carries a config-fingerprint
+//!   hash and the seed);
+//! * [`center`] — listener, per-connection supervision threads, the
+//!   socket-backed `ServerPort`, checkpoint/resume of the center;
+//! * [`worker`] — connect-with-retry, handshake, the socket-backed
+//!   `WorkerPort` with a latest-wins ack mailbox.
+//!
+//! Fault tolerance is membership, not magic: a dropped or timed-out
+//! connection folds into a `fail` member event (the run completes with
+//! the survivors), and a reconnecting worker is a *new* gated join
+//! through the fleet-progress clock — never a resurrection of its old
+//! slot.
+
+pub mod center;
+pub mod frame;
+pub mod worker;
+
+pub use center::{
+    bind, fingerprint_hash, fleet_capacity, fleet_fingerprint, run_center_on, CenterConfig,
+};
+pub use worker::{run_worker, WorkerConfig};
+
+/// Non-fatal read outcomes on a socket with a read timeout: Unix
+/// reports `WouldBlock`, Windows `TimedOut`.
+pub(crate) fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}

@@ -1,0 +1,313 @@
+//! The fleet worker process: connects to a center, runs the standard
+//! worker iteration (step → record → jitter → exchange) against the
+//! socket-backed [`WorkerPort`], and returns its own chain trace
+//! (DESIGN.md §14).
+//!
+//! The exchange is **asynchronous and fire-and-forget**, exactly like
+//! the in-process lock-free fabric: an UPLOAD frame carries θ plus the
+//! `seen_version` of the last center the worker folded in (the center's
+//! staleness gate runs on that, unchanged), and the CENTER ack is read
+//! by a background thread into a latest-wins mailbox — the sampler
+//! never blocks on the network.
+//!
+//! A dead connection is not an error for the fleet: the worker logs,
+//! stops sampling, and exits with whatever it recorded; the center
+//! folds the EOF into a `fail` member event and the survivors complete
+//! the run.
+
+use super::frame::{self, FrameReader, Message, PROTO_VERSION};
+use crate::coordinator::topology::{init_state, Departure, Recorder};
+use crate::coordinator::transport::{CenterView, WorkerPort};
+use crate::coordinator::{DelayModel, RunOptions, RunResult, WorkerEngine};
+use crate::math::rng::Pcg64;
+use crate::samplers::ChainState;
+use crate::sink::{Frame, SinkHub};
+use crate::{log_info, log_warn};
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Everything a worker process needs to join a fleet.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Center address, `host:port`.
+    pub connect: String,
+    pub seed: u64,
+    pub steps: usize,
+    pub sync_every: usize,
+    pub alpha: f64,
+    pub opts: RunOptions,
+    pub delay: DelayModel,
+    /// Hash of the fleet [`crate::checkpoint::Fingerprint`]; the center
+    /// rejects a HELLO whose hash disagrees with its own.
+    pub fingerprint_hash: u64,
+    /// Fleet-progress clock value to wait behind before activating
+    /// (0 = founder, joins immediately).
+    pub join_gate: u64,
+    /// Connection attempts before giving up (exponential backoff).
+    pub retries: u32,
+}
+
+fn connect_with_retry(addr: &str, retries: u32) -> Result<TcpStream> {
+    let mut backoff = Duration::from_millis(200);
+    let mut last = None;
+    for attempt in 0..=retries {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if attempt < retries {
+                    log_warn!(
+                        "fleet worker: connect to {addr} failed ({e}), retrying in {backoff:?}"
+                    );
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_secs(5));
+                }
+                last = Some(e);
+            }
+        }
+    }
+    Err(last.unwrap()).with_context(|| {
+        format!("connecting to fleet center at {addr} ({} attempts)", retries + 1)
+    })
+}
+
+/// Block until the center answers the handshake. No overall deadline:
+/// a gated join legitimately waits as long as the fleet takes to reach
+/// the gate. EOF and REJECT still terminate it.
+fn read_welcome(stream: &mut TcpStream) -> Result<(usize, usize, usize, u64, Vec<f32>)> {
+    let mut fr = FrameReader::new();
+    let mut tmp = [0u8; 64 * 1024];
+    loop {
+        match fr.next_frame()? {
+            Some(Message::Welcome { worker, dim, live, version, theta }) => {
+                return Ok((worker as usize, dim as usize, live as usize, version, theta));
+            }
+            Some(Message::Reject { reason }) => {
+                bail!("center rejected this worker: {reason}");
+            }
+            Some(other) => bail!("expected WELCOME, got {other:?}"),
+            None => {}
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => bail!("center closed the connection during handshake"),
+            Ok(n) => fr.feed(&tmp[..n]),
+            Err(e) if super::would_block(&e) => {}
+            Err(e) => return Err(e).context("reading handshake reply"),
+        }
+    }
+}
+
+/// Latest-wins mailbox the ack-reader thread fills and the sampler
+/// drains — the socket twin of the lock-free fabric's seqlock cell.
+type LatestCenter = Arc<Mutex<(Vec<f32>, u64)>>;
+
+struct NetWorkerPort {
+    stream: TcpStream,
+    worker: usize,
+    latest: LatestCenter,
+    disconnected: Arc<AtomicBool>,
+    /// Version of the center currently folded into the coupling term.
+    seen: u64,
+    /// Uploads actually written (== exchanges from the fleet's view).
+    sent: u64,
+}
+
+impl WorkerPort for NetWorkerPort {
+    fn exchange(&mut self, theta: &[f32], center: &mut CenterView) {
+        if !self.disconnected.load(Ordering::Acquire) {
+            // Fault points mirror the in-process fabric's upload_drop:
+            // net_drop loses the frame (the center just sees a staler
+            // worker), net_delay stalls it like a congested link.
+            if crate::faults::enabled() && crate::faults::net_drop() {
+                // dropped on the (simulated) wire
+            } else {
+                if crate::faults::enabled() && crate::faults::net_delay() {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                let msg = Message::Upload {
+                    worker: self.worker as u32,
+                    seen_version: self.seen,
+                    theta: theta.to_vec(),
+                };
+                match frame::write_frame(&mut self.stream, &msg) {
+                    Ok(()) => self.sent += 1,
+                    Err(_) => self.disconnected.store(true, Ordering::Release),
+                }
+            }
+        }
+        self.fetch(center);
+    }
+
+    fn fetch(&mut self, center: &mut CenterView) {
+        let latest = self.latest.lock().unwrap();
+        if latest.1 > self.seen {
+            match center {
+                CenterView::Owned(buf) => {
+                    buf.clear();
+                    buf.extend_from_slice(&latest.0);
+                }
+                CenterView::Shared(_) => {
+                    *center = CenterView::Owned(latest.0.clone());
+                }
+            }
+            self.seen = latest.1;
+        }
+    }
+
+    fn depart(&mut self, final_theta: Option<&[f32]>, kind: Departure) {
+        if self.disconnected.load(Ordering::Acquire) {
+            return;
+        }
+        let msg = Message::Depart {
+            fail: matches!(kind, Departure::Fail),
+            seen_version: self.seen,
+            theta: final_theta.map(<[f32]>::to_vec),
+        };
+        let _ = frame::write_frame(&mut self.stream, &msg);
+    }
+
+    fn seen_version(&self) -> u64 {
+        self.seen
+    }
+}
+
+/// Join a fleet and sample to completion (or to disconnection).
+pub fn run_worker(cfg: &WorkerConfig, mut engine: Box<dyn WorkerEngine>) -> Result<RunResult> {
+    let start = Instant::now();
+    let mut stream = connect_with_retry(&cfg.connect, cfg.retries)?;
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(Duration::from_millis(250)))
+        .context("setting socket read timeout")?;
+
+    frame::write_frame(
+        &mut stream,
+        &Message::Hello {
+            proto: PROTO_VERSION,
+            fingerprint: cfg.fingerprint_hash,
+            seed: cfg.seed,
+            join_gate: cfg.join_gate,
+        },
+    )
+    .context("sending HELLO")?;
+    let (w, dim, live, version, theta0) = read_welcome(&mut stream)?;
+    if engine.dim() != dim || engine.live_dim() != live {
+        bail!(
+            "engine dim {}x{} != fleet dim {dim}x{live} (same model on both ends?)",
+            engine.dim(),
+            engine.live_dim()
+        );
+    }
+    log_info!("fleet worker: admitted as slot {w} (center version {version})");
+
+    // Founders start from the shared init draw — bit-identical to the
+    // in-process run. Gated joiners start from the center they were
+    // handed, like the in-process join path.
+    let mut state = if cfg.join_gate == 0 {
+        init_state(dim, live, &cfg.opts, cfg.seed, w)
+    } else {
+        ChainState::from_theta(theta0.clone())
+    };
+    let mut center = CenterView::Owned(theta0);
+
+    let latest: LatestCenter = Arc::new(Mutex::new((center.as_slice().to_vec(), version)));
+    let disconnected = Arc::new(AtomicBool::new(false));
+    let done = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let mut rx = stream.try_clone().context("cloning socket for the ack reader")?;
+        let latest = latest.clone();
+        let disconnected = disconnected.clone();
+        let done = done.clone();
+        std::thread::Builder::new()
+            .name("net-center-rx".into())
+            .spawn(move || {
+                let mut fr = FrameReader::new();
+                let mut tmp = [0u8; 64 * 1024];
+                loop {
+                    if done.load(Ordering::Acquire) {
+                        return;
+                    }
+                    match rx.read(&mut tmp) {
+                        Ok(0) => break,
+                        Ok(n) => {
+                            fr.feed(&tmp[..n]);
+                            loop {
+                                match fr.next_frame() {
+                                    Ok(Some(Message::Center { version, theta })) => {
+                                        let mut l = latest.lock().unwrap();
+                                        if version >= l.1 {
+                                            l.0 = theta;
+                                            l.1 = version;
+                                        }
+                                    }
+                                    Ok(Some(_)) | Err(_) => {
+                                        disconnected.store(true, Ordering::Release);
+                                        return;
+                                    }
+                                    Ok(None) => break,
+                                }
+                            }
+                        }
+                        Err(e) if super::would_block(&e) => {}
+                        Err(_) => break,
+                    }
+                }
+                disconnected.store(true, Ordering::Release);
+            })
+            .expect("spawn net-center-rx thread")
+    };
+
+    let hub = SinkHub::new(&cfg.opts.sink).context("sink init failed")?;
+    hub.write_meta("ec-worker", 1, cfg.seed);
+    let mut rec =
+        Recorder::new(w, cfg.opts.clone(), start, hub.frame_sink(Frame::Chain(w), cfg.opts.max_samples));
+    let mut port = NetWorkerPort {
+        stream,
+        worker: w,
+        latest,
+        disconnected: disconnected.clone(),
+        seen: version,
+        sent: 0,
+    };
+    let mut rng = Pcg64::new(cfg.seed, 1000 + w as u64);
+    let mut jitter = Pcg64::new(cfg.seed ^ 0x9e37, 2000 + w as u64);
+    let factor = cfg.delay.worker_factor(w, cfg.seed);
+
+    let mut executed = 0usize;
+    for t in 0..cfg.steps {
+        if disconnected.load(Ordering::Acquire) {
+            log_warn!("fleet worker: center connection lost at step {t}; stopping");
+            break;
+        }
+        let u = engine.step(&mut state, Some((center.as_slice(), cfg.alpha)), &mut rng);
+        rec.observe(t, u, &state.theta);
+        cfg.delay.step_sleep(factor, &mut jitter);
+        if (t + 1) % cfg.sync_every == 0 {
+            let _span = crate::telemetry::span(crate::telemetry::Stage::Exchange);
+            port.exchange(&state.theta, &mut center);
+        }
+        executed = t + 1;
+    }
+
+    // Drain the tail segment (if any steps ran past the last exchange)
+    // inside the departure, so the center's final average sees it — the
+    // same drain-then-depart contract as the in-process fabrics.
+    let undrained = executed > 0 && executed % cfg.sync_every != 0;
+    port.depart(undrained.then_some(state.theta.as_slice()), Departure::Leave);
+    done.store(true, Ordering::Release);
+    let _ = port.stream.shutdown(Shutdown::Write);
+    let _ = reader.join();
+
+    let mut result = RunResult::default();
+    result.chains.push(rec.finish());
+    result.metrics.total_steps = executed as u64;
+    result.metrics.exchanges = port.sent;
+    result.elapsed = start.elapsed().as_secs_f64();
+    result.metrics.steps_per_sec = executed as f64 / result.elapsed.max(1e-12);
+    result.merge_samples();
+    hub.finish(&mut result);
+    Ok(result)
+}

@@ -39,6 +39,11 @@ pub enum TransportKind {
     Deterministic,
     /// Seqlock center publication + per-worker mailboxes (never blocks).
     LockFree,
+    /// Length-prefixed TCP frames between separate center/worker
+    /// processes (`coordinator::net`, DESIGN.md §14). Not constructible
+    /// through [`build_transport`]: the fleet runs as `ecsgmcmc center`
+    /// plus `ecsgmcmc worker --connect` processes.
+    Tcp,
 }
 
 impl TransportKind {
@@ -46,6 +51,7 @@ impl TransportKind {
         match s {
             "deterministic" | "det" | "channel" => Some(TransportKind::Deterministic),
             "lockfree" | "lock_free" | "lock-free" => Some(TransportKind::LockFree),
+            "tcp" | "net" => Some(TransportKind::Tcp),
             _ => None,
         }
     }
@@ -54,6 +60,7 @@ impl TransportKind {
         match self {
             TransportKind::Deterministic => "deterministic",
             TransportKind::LockFree => "lockfree",
+            TransportKind::Tcp => "tcp",
         }
     }
 }
@@ -665,6 +672,11 @@ pub fn build_transport(
             base_version,
             init_seen,
         )),
+        TransportKind::Tcp => panic!(
+            "the tcp transport runs as separate processes; launch \
+             `ecsgmcmc center` and `ecsgmcmc worker --connect <addr>` \
+             instead of an in-process run"
+        ),
     }
 }
 
@@ -674,7 +686,9 @@ mod tests {
 
     #[test]
     fn transport_kind_names_roundtrip() {
-        for kind in [TransportKind::Deterministic, TransportKind::LockFree] {
+        for kind in
+            [TransportKind::Deterministic, TransportKind::LockFree, TransportKind::Tcp]
+        {
             assert_eq!(TransportKind::from_str(kind.name()), Some(kind));
         }
         assert_eq!(TransportKind::from_str("carrier-pigeon"), None);

@@ -26,8 +26,11 @@ fn erf(x: f64) -> f64 {
 pub fn ks_statistic(xs: &[f64], mean: f64, std: f64) -> f64 {
     assert!(!xs.is_empty());
     assert!(std > 0.0);
+    // total_cmp: a divergent chain's NaNs sort after every finite value
+    // and drop out of the max below (f64::max ignores NaN operands), so
+    // the diagnostic returns a verdict instead of panicking.
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let n = sorted.len() as f64;
     let mut d = 0.0f64;
     for (i, x) in sorted.iter().enumerate() {
@@ -91,6 +94,20 @@ mod tests {
         let xs: Vec<f64> = (0..3000).map(|_| rng.next_normal() + 0.3).collect();
         let d = ks_statistic(&xs, 0.0, 1.0);
         assert!(d > 0.08, "d={d}");
+    }
+
+    #[test]
+    fn ks_tolerates_nan_samples() {
+        // A divergent chain must get a verdict, not a panic: the NaNs
+        // sort last and drop out of the max, and the finite entries'
+        // shifted ranks still register a (large) distance.
+        let mut rng = Pcg64::seeded(94);
+        let mut xs: Vec<f64> = (0..1000).map(|_| rng.next_normal()).collect();
+        xs.extend(std::iter::repeat(f64::NAN).take(500));
+        let d = ks_statistic(&xs, 0.0, 1.0);
+        assert!(d.is_finite(), "d={d}");
+        assert!(d > 0.2, "a 1/3-NaN chain should look badly non-normal: d={d}");
+        assert!(ks_statistic(&[f64::NAN, f64::NAN], 0.0, 1.0).is_finite());
     }
 
     #[test]

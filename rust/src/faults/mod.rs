@@ -20,6 +20,10 @@
 //! * [`upload_drop`] — lock-free transport upload publications dropped
 //!   on the floor (the mailbox keeps its stale value; the run's
 //!   correctness must not depend on any single upload landing);
+//! * [`net_drop`] / [`net_delay`] — TCP fabric upload frames dropped
+//!   before hitting the socket / delayed by a fixed latency spike
+//!   (DESIGN.md §14 — the wire analogue of `upload_drop` and
+//!   `DelayModel`);
 //! * [`worker_panic_due`] — one worker panics at its next segment
 //!   boundary (fires once per process; folded into elastic membership
 //!   as a `fail` departure).
@@ -44,6 +48,10 @@ pub struct FaultPlan {
     pub sink_rate: f64,
     /// P(each lock-free upload publication is dropped).
     pub drop_rate: f64,
+    /// P(each TCP upload frame is dropped before the socket write).
+    pub net_drop_rate: f64,
+    /// P(each TCP upload frame is delayed by a latency spike).
+    pub net_delay_rate: f64,
     /// Worker id whose thread panics at its next segment boundary.
     pub panic_worker: Option<usize>,
 }
@@ -56,12 +64,15 @@ impl FaultPlan {
         self.ckpt_rate > 0.0
             || self.sink_rate > 0.0
             || self.drop_rate > 0.0
+            || self.net_drop_rate > 0.0
+            || self.net_delay_rate > 0.0
             || self.panic_worker.is_some()
     }
 
     /// Parse a `--faults` CLI spec: comma-separated `key=value` pairs
-    /// from `ckpt`, `sink`, `drop` (rates), `panic` (worker id), and
-    /// `seed`, e.g. `ckpt=0.5,sink=0.2,panic=1,seed=7`.
+    /// from `ckpt`, `sink`, `drop`, `net_drop`, `net_delay` (rates),
+    /// `panic` (worker id), and `seed`, e.g.
+    /// `ckpt=0.5,sink=0.2,panic=1,seed=7`.
     pub fn from_spec(spec: &str) -> Result<FaultPlan> {
         let mut plan = FaultPlan::default();
         for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
@@ -81,6 +92,8 @@ impl FaultPlan {
                 "ckpt" => plan.ckpt_rate = rate()?,
                 "sink" => plan.sink_rate = rate()?,
                 "drop" => plan.drop_rate = rate()?,
+                "net_drop" => plan.net_drop_rate = rate()?,
+                "net_delay" => plan.net_delay_rate = rate()?,
                 "panic" => {
                     plan.panic_worker = Some(
                         value
@@ -95,7 +108,10 @@ impl FaultPlan {
                             .map_err(|_| anyhow!("--faults seed: bad u64 '{value}'"))?,
                     )
                 }
-                other => bail!("--faults: unknown key '{other}' (ckpt|sink|drop|panic|seed)"),
+                other => bail!(
+                    "--faults: unknown key '{other}' \
+                     (ckpt|sink|drop|net_drop|net_delay|panic|seed)"
+                ),
             }
         }
         Ok(plan)
@@ -113,10 +129,14 @@ static SEED: AtomicU64 = AtomicU64::new(0);
 static CKPT_RATE: AtomicU64 = AtomicU64::new(0);
 static SINK_RATE: AtomicU64 = AtomicU64::new(0);
 static DROP_RATE: AtomicU64 = AtomicU64::new(0);
+static NET_DROP_RATE: AtomicU64 = AtomicU64::new(0);
+static NET_DELAY_RATE: AtomicU64 = AtomicU64::new(0);
 /// Per-point visit counters: the decision stream's position.
 static CKPT_OCC: AtomicU64 = AtomicU64::new(0);
 static SINK_OCC: AtomicU64 = AtomicU64::new(0);
 static DROP_OCC: AtomicU64 = AtomicU64::new(0);
+static NET_DROP_OCC: AtomicU64 = AtomicU64::new(0);
+static NET_DELAY_OCC: AtomicU64 = AtomicU64::new(0);
 /// Total faults actually fired since `configure`.
 static INJECTED: AtomicU64 = AtomicU64::new(0);
 /// Worker id doomed to panic (`u64::MAX` = none).
@@ -142,6 +162,8 @@ pub fn configure(plan: Option<&FaultPlan>, fallback_seed: u64) {
     CKPT_RATE.store(plan.ckpt_rate.to_bits(), Ordering::Relaxed);
     SINK_RATE.store(plan.sink_rate.to_bits(), Ordering::Relaxed);
     DROP_RATE.store(plan.drop_rate.to_bits(), Ordering::Relaxed);
+    NET_DROP_RATE.store(plan.net_drop_rate.to_bits(), Ordering::Relaxed);
+    NET_DELAY_RATE.store(plan.net_delay_rate.to_bits(), Ordering::Relaxed);
     PANIC_WORKER.store(
         if active { plan.panic_worker.map(|w| w as u64).unwrap_or(u64::MAX) } else { u64::MAX },
         Ordering::Relaxed,
@@ -149,6 +171,8 @@ pub fn configure(plan: Option<&FaultPlan>, fallback_seed: u64) {
     CKPT_OCC.store(0, Ordering::Relaxed);
     SINK_OCC.store(0, Ordering::Relaxed);
     DROP_OCC.store(0, Ordering::Relaxed);
+    NET_DROP_OCC.store(0, Ordering::Relaxed);
+    NET_DELAY_OCC.store(0, Ordering::Relaxed);
     INJECTED.store(0, Ordering::Relaxed);
     PANIC_FIRED.store(false, Ordering::Relaxed);
     ENABLED.store(active, Ordering::Relaxed);
@@ -246,6 +270,38 @@ pub fn upload_drop() -> bool {
     false
 }
 
+/// TCP upload fault point: `true` = drop this frame before the socket
+/// write (the wire loses it; the center keeps serving the stale θ —
+/// DESIGN.md §14's analogue of [`upload_drop`]).
+pub fn net_drop() -> bool {
+    if !enabled() {
+        return false;
+    }
+    let occ = NET_DROP_OCC.fetch_add(1, Ordering::Relaxed);
+    let rate = f64::from_bits(NET_DROP_RATE.load(Ordering::Relaxed));
+    if decide(SEED.load(Ordering::Relaxed), tag_of("net_drop"), occ, rate) {
+        record_injection("net_drop");
+        return true;
+    }
+    false
+}
+
+/// TCP latency-spike fault point: `true` = the caller should sleep a
+/// fixed spike before writing this frame (drives the staleness gate the
+/// way a congested wire would).
+pub fn net_delay() -> bool {
+    if !enabled() {
+        return false;
+    }
+    let occ = NET_DELAY_OCC.fetch_add(1, Ordering::Relaxed);
+    let rate = f64::from_bits(NET_DELAY_RATE.load(Ordering::Relaxed));
+    if decide(SEED.load(Ordering::Relaxed), tag_of("net_delay"), occ, rate) {
+        record_injection("net_delay");
+        return true;
+    }
+    false
+}
+
 /// Worker-panic fault point, consulted by each worker thread as it
 /// crosses a segment boundary. Fires exactly once per process, only for
 /// the doomed worker.
@@ -292,7 +348,10 @@ mod tests {
 
     #[test]
     fn from_spec_parses_full_and_partial_specs() {
-        let p = FaultPlan::from_spec("ckpt=0.5,sink=0.2,drop=0.1,panic=1,seed=7").unwrap();
+        let p = FaultPlan::from_spec(
+            "ckpt=0.5,sink=0.2,drop=0.1,net_drop=0.05,net_delay=0.02,panic=1,seed=7",
+        )
+        .unwrap();
         assert_eq!(
             p,
             FaultPlan {
@@ -300,6 +359,8 @@ mod tests {
                 ckpt_rate: 0.5,
                 sink_rate: 0.2,
                 drop_rate: 0.1,
+                net_drop_rate: 0.05,
+                net_delay_rate: 0.02,
                 panic_worker: Some(1),
             }
         );

@@ -168,11 +168,15 @@ pub fn covariance(samples: &[Vec<f64>]) -> Vec<f64> {
 }
 
 /// Empirical quantile via linear interpolation (q in [0, 1]).
+///
+/// Ordering is `total_cmp`, so a chain that diverged to NaN still gets a
+/// verdict (NaNs sort after every finite value) instead of a panic in
+/// the diagnostic path.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty());
     assert!((0.0..=1.0).contains(&q));
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let pos = q * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -298,6 +302,16 @@ mod tests {
         assert_eq!(quantile(&xs, 0.0), 1.0);
         assert_eq!(quantile(&xs, 1.0), 4.0);
         assert_eq!(quantile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn quantile_tolerates_nan() {
+        // A chain that diverged to NaN must yield a verdict, not a panic.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5); // NaN sorts last under total_cmp
+        assert!(quantile(&xs, 1.0).is_nan());
+        assert!(quantile(&[f64::NAN], 0.5).is_nan());
     }
 
     #[test]

@@ -63,6 +63,25 @@ impl Drop for ServerHandle {
     }
 }
 
+/// RAII claim on one of the [`MAX_ACTIVE`] connection slots: releases on
+/// drop, which unwinding reaches even when the handler panics.
+struct SlotGuard {
+    active: Arc<AtomicUsize>,
+}
+
+impl SlotGuard {
+    fn claim(active: &Arc<AtomicUsize>) -> SlotGuard {
+        active.fetch_add(1, Ordering::SeqCst);
+        SlotGuard { active: active.clone() }
+    }
+}
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        self.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// Bind `addr` and serve the observatory endpoints from a background
 /// accept thread until shutdown.
 pub fn serve(addr: &str, shared: Arc<Shared>) -> Result<ServerHandle> {
@@ -87,18 +106,20 @@ pub fn serve(addr: &str, shared: Arc<Shared>) -> Result<ServerHandle> {
                     );
                     continue;
                 }
-                active.fetch_add(1, Ordering::SeqCst);
+                // The slot is released by a drop guard, not a trailing
+                // statement: a panicking handler must not burn one of the
+                // MAX_ACTIVE slots forever (8 panics would 503 every
+                // future scrape). The guard also covers the spawn-failure
+                // path below.
+                let slot = SlotGuard::claim(&active);
                 let shared = shared.clone();
-                let active = active.clone();
                 let spawned = std::thread::Builder::new()
                     .name("observe-conn".to_string())
                     .spawn(move || {
+                        let _slot = slot;
                         handle_conn(stream, &shared);
-                        active.fetch_sub(1, Ordering::SeqCst);
                     });
-                if let Err(_e) = spawned {
-                    active.fetch_sub(1, Ordering::SeqCst);
-                }
+                drop(spawned); // Err: the unspawned guard released the slot
             }
         })
         .context("observe: cannot spawn accept thread")?;
@@ -114,8 +135,14 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) {
         match stream.read(&mut buf) {
             Ok(0) => break,
             Ok(n) => {
+                // Scan only the new bytes plus a 3-byte overlap for a
+                // terminator straddling the read boundary — rescanning
+                // the whole buffer per read is quadratic in head size
+                // (a slow-trickling client could burn ~32M comparisons
+                // inside an 8 KiB head).
+                let from = head.len().saturating_sub(3);
                 head.extend_from_slice(&buf[..n]);
-                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > MAX_HEAD {
+                if head[from..].windows(4).any(|w| w == b"\r\n\r\n") || head.len() > MAX_HEAD {
                     break;
                 }
             }
@@ -141,6 +168,13 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) {
 fn route(method: &str, path: &str, shared: &Shared) -> (u16, &'static str, &'static str, String) {
     if method != "GET" {
         return (405, "Method Not Allowed", "application/json", error_body("method not allowed"));
+    }
+    // Test-only hostile handler: proves a panicking connection thread
+    // releases its slot (the SlotGuard contract) without shipping a
+    // panic route in release builds.
+    #[cfg(test)]
+    if path == "/__panic" {
+        panic!("test-injected handler panic");
     }
     let snap = shared.snapshot();
     match path {
@@ -382,6 +416,49 @@ mod tests {
         shared.update(|r| r.health = Default::default());
         let (code, _) = get(server.addr(), "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
         assert_eq!(code, 200);
+        server.shutdown();
+    }
+
+    #[test]
+    fn panicking_handlers_release_their_connection_slots() {
+        let (server, _shared) = test_server(|_| {});
+        let addr = server.addr();
+        // Burn through more panics than there are slots: if a panic
+        // leaked its slot, the MAX_ACTIVE'th+1 scrape would see 503s
+        // forever. (Each panicking thread prints to stderr; that noise
+        // is the point of the test.)
+        for _ in 0..(MAX_ACTIVE + 4) {
+            let mut s = TcpStream::connect_timeout(&addr, Duration::from_secs(2)).unwrap();
+            s.set_write_timeout(Some(Duration::from_secs(2))).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            let _ = s.write_all(b"GET /__panic HTTP/1.1\r\nHost: t\r\n\r\n");
+            // The handler dies without replying; read-to-end observes
+            // the reset/EOF, which also serializes against the handler
+            // thread's unwind (and thus its slot release).
+            let mut sink = Vec::new();
+            let _ = s.read_to_end(&mut sink);
+        }
+        let (code, _) = get(addr, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(code, 200, "a panicked handler leaked its connection slot");
+        server.shutdown();
+    }
+
+    #[test]
+    fn request_head_split_across_reads_is_still_detected() {
+        // The incremental scan keeps a 3-byte overlap: a terminator
+        // straddling two reads must still end header collection.
+        let (server, _shared) = test_server(|r| r.staleness_hist = vec![0; 8]);
+        let addr = server.addr();
+        let mut s = TcpStream::connect_timeout(&addr, Duration::from_secs(2)).unwrap();
+        s.set_write_timeout(Some(Duration::from_secs(2))).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        s.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n").unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(50)); // force two reads
+        s.write_all(b"\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 200"), "got: {raw:?}");
         server.shutdown();
     }
 

@@ -19,6 +19,7 @@
 
 use ecsgmcmc::checkpoint::{CheckpointPolicy, Snapshot};
 use ecsgmcmc::coordinator::ec::{run_ec, EcCheckpoint};
+use ecsgmcmc::coordinator::net::frame::{self, FrameReader, Message};
 use ecsgmcmc::coordinator::engine::{NativeEngine, StepKind, WorkerEngine};
 use ecsgmcmc::coordinator::{EcConfig, RunOptions, TransportKind};
 use ecsgmcmc::math::rng::Pcg64;
@@ -388,4 +389,148 @@ fn corpus_adversary_ten_thousand_mutants_zero_panics() {
     // mutants (most stream mutants hit 4 surfaces).
     assert!(exercises > mutants, "{exercises} exercises for {mutants} mutants");
     println!("corpus: {mutants} mutants, {exercises} surface exercises, zero panics");
+}
+
+// ----------------------------------------------------------------------
+// The fleet wire codec (DESIGN.md §14) is an untrusted-input surface
+// too: anything can connect to the center's port. Same contract as the
+// stream surfaces — zero panics under ≥ 10,000 mutants, and damage is a
+// clean `Err`, never an abort or unbounded allocation.
+// ----------------------------------------------------------------------
+
+/// A realistic frame stream: every message kind, including non-finite θ
+/// payloads (the codec moves bits, not numbers).
+fn frame_artifact() -> (Vec<u8>, usize) {
+    let msgs = vec![
+        Message::Hello { proto: 1, fingerprint: 0xDEAD_BEEF, seed: 42, join_gate: 7 },
+        Message::Welcome {
+            worker: 3,
+            dim: 4,
+            live: 2,
+            version: 9,
+            theta: vec![0.5, -1.25, f32::NAN, f32::INFINITY],
+        },
+        Message::Upload {
+            worker: 3,
+            seen_version: 9,
+            theta: vec![1.0, 2.0, 3.0, f32::NEG_INFINITY],
+        },
+        Message::Center { version: 10, theta: vec![0.0; 16] },
+        Message::Depart { fail: false, seen_version: 10, theta: Some(vec![1.0, 2.0]) },
+        Message::Depart { fail: true, seen_version: 11, theta: None },
+        Message::Reject { reason: "config fingerprint mismatch".into() },
+    ];
+    let mut bytes = Vec::new();
+    for m in &msgs {
+        frame::write_frame(&mut bytes, m).unwrap();
+    }
+    (bytes, msgs.len())
+}
+
+/// Feed one mutant to a fresh decoder and drain it. Returns (frames
+/// decoded, hit an error). The decoder must never panic.
+fn drain_frames(bytes: &[u8], id: &str) -> (usize, bool) {
+    catch_unwind(AssertUnwindSafe(|| {
+        let mut fr = FrameReader::new();
+        fr.feed(bytes);
+        let mut n = 0usize;
+        loop {
+            match fr.next_frame() {
+                Ok(Some(_)) => n += 1,
+                Ok(None) => return (n, false),
+                Err(_) => return (n, true),
+            }
+        }
+    }))
+    .unwrap_or_else(|_| panic!("{id}: frame decoder panicked"))
+}
+
+#[test]
+fn frame_decoder_corpus_zero_panics() {
+    let (stream, count) = frame_artifact();
+    let mut rng = Pcg64::seeded(0x0F1E_ED00);
+    let mut mutants = 0u64;
+
+    // The clean artifact decodes completely.
+    let (n, err) = drain_frames(&stream, "clean");
+    assert_eq!((n, err), (count, false), "clean frame stream damaged");
+
+    // Class 1: truncation at every byte offset. A prefix decodes some
+    // whole frames and then waits for more bytes or rejects — never more
+    // frames than the artifact holds.
+    for cut in 0..=stream.len() {
+        let (n, _) = drain_frames(&stream[..cut], &format!("frame-truncate@{cut}"));
+        assert!(n <= count, "frame-truncate@{cut}: {n} frames from a prefix");
+        mutants += 1;
+    }
+
+    // Class 2: seeded single-bit flips. Length-field damage must bound
+    // itself (MAX_FRAME), payload damage must decode or reject cleanly.
+    for i in 0..6000u64 {
+        let mut m = stream.clone();
+        let pos = rng.below(m.len() as u64) as usize;
+        m[pos] ^= 1 << (rng.below(8) as u32);
+        drain_frames(&m, &format!("frame-bitflip#{i}@{pos}"));
+        mutants += 1;
+    }
+
+    // Class 3: pure noise buffers — the decoder sees a hostile port scan.
+    for i in 0..3000u64 {
+        let n = rng.below(512) as usize;
+        let junk: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        drain_frames(&junk, &format!("frame-noise#{i}"));
+        mutants += 1;
+    }
+
+    // Class 4: adversarial length prefixes — claims that would allocate
+    // gigabytes must reject without allocating.
+    for (i, hostile) in [
+        vec![0, 0, 0, 0],                            // zero-length frame
+        vec![0xFF, 0xFF, 0xFF, 0xFF, 3],             // 4 GiB claim
+        vec![5, 0, 0, 0, 99, 1, 2, 3, 4],            // unknown tag
+        {
+            // upload whose θ count field claims u32::MAX floats
+            let mut b = vec![17, 0, 0, 0, 3];
+            b.extend_from_slice(&3u32.to_le_bytes());
+            b.extend_from_slice(&0u64.to_le_bytes());
+            b.extend_from_slice(&u32::MAX.to_le_bytes());
+            b
+        },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let (_, err) = drain_frames(&hostile, &format!("frame-hostile#{i}"));
+        assert!(err, "frame-hostile#{i}: hostile frame decoded cleanly");
+        mutants += 1;
+    }
+
+    // Class 5: random chunking of the clean stream — reassembly across
+    // arbitrary read boundaries loses nothing.
+    for i in 0..1200u64 {
+        let decoded = catch_unwind(AssertUnwindSafe(|| {
+            let mut fr = FrameReader::new();
+            let mut at = 0usize;
+            let mut n = 0usize;
+            while at < stream.len() {
+                let take = 1 + rng.below(19) as usize;
+                let end = (at + take).min(stream.len());
+                fr.feed(&stream[at..end]);
+                at = end;
+                while let Ok(Some(_)) = fr.next_frame() {
+                    n += 1;
+                }
+            }
+            n
+        }))
+        .unwrap_or_else(|_| panic!("frame-chunk#{i}: panicked"));
+        assert_eq!(decoded, count, "frame-chunk#{i}: lost frames across boundaries");
+        mutants += 1;
+    }
+
+    assert!(
+        mutants >= 10_000,
+        "frame corpus too small: {mutants} mutants (need >= 10,000)"
+    );
+    println!("frame corpus: {mutants} mutants, zero panics");
 }

@@ -1,0 +1,299 @@
+//! Localhost loopback tests of the TCP fleet fabric (DESIGN.md §14):
+//!
+//! * parity: a K = 4 TCP fleet on the Fig. 1 Gaussian matches the
+//!   analytic posterior moments at the same tolerance as the in-process
+//!   lock-free fabric, and the two pooled sample sets agree;
+//! * fault tolerance: killing a worker mid-run (abrupt socket drop, no
+//!   DEPART) folds into a `fail` member event and the survivors
+//!   complete the run;
+//! * admission: a worker whose config fingerprint disagrees is rejected
+//!   at the handshake with a named reason.
+
+use ecsgmcmc::coordinator::ec::run_ec;
+use ecsgmcmc::coordinator::engine::{NativeEngine, StepKind, WorkerEngine};
+use ecsgmcmc::coordinator::net::frame::{self, FrameReader, Message, PROTO_VERSION};
+use ecsgmcmc::coordinator::net::{self, CenterConfig, WorkerConfig};
+use ecsgmcmc::coordinator::{DelayModel, EcConfig, RunOptions, RunResult, TransportKind};
+use ecsgmcmc::potentials::gaussian::GaussianPotential;
+use ecsgmcmc::samplers::SghmcParams;
+use ecsgmcmc::sink::SinkSpec;
+use std::io::Read;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+const ALPHA: f64 = 1.0;
+const SYNC: usize = 2;
+
+fn params() -> SghmcParams {
+    SghmcParams { eps: 0.05, ..Default::default() }
+}
+
+fn engine() -> Box<dyn WorkerEngine> {
+    Box::new(NativeEngine::new(
+        Arc::new(GaussianPotential::fig1()),
+        params(),
+        StepKind::Sghmc,
+    ))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ecsgmcmc-net-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn center_config(k: usize, steps: usize, seed: u64, opts: RunOptions) -> CenterConfig {
+    CenterConfig {
+        workers: k,
+        alpha: ALPHA,
+        sync_every: SYNC,
+        steps,
+        shards: 1,
+        dim: 2,
+        live: 2,
+        seed,
+        params: params(),
+        opts,
+        delay: DelayModel::default(),
+        staleness_bound: None,
+        checkpoint: None,
+        resume: false,
+        idle_timeout: Duration::from_secs(30),
+    }
+}
+
+fn worker_config(addr: &str, k: usize, steps: usize, seed: u64, opts: RunOptions) -> WorkerConfig {
+    let fp = net::fleet_fingerprint(k, ALPHA, SYNC, steps, 1, 2, 2, None);
+    WorkerConfig {
+        connect: addr.to_string(),
+        seed,
+        steps,
+        sync_every: SYNC,
+        alpha: ALPHA,
+        opts,
+        delay: DelayModel::default(),
+        fingerprint_hash: net::fingerprint_hash(&fp),
+        join_gate: 0,
+        retries: 5,
+    }
+}
+
+/// Serve a K-founder fleet on an ephemeral loopback port and run every
+/// worker as a process-local thread (same code path as a real remote
+/// process — the socket does not care).
+fn run_fleet(
+    k: usize,
+    steps: usize,
+    seed: u64,
+    opts: RunOptions,
+    center_opts: RunOptions,
+) -> (RunResult, Vec<RunResult>) {
+    let listener = net::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let ccfg = center_config(k, steps, seed, center_opts);
+    let center = std::thread::spawn(move || net::run_center_on(listener, ccfg).unwrap());
+    let workers: Vec<_> = (0..k)
+        .map(|_| {
+            let wcfg = worker_config(&addr, k, steps, seed, opts.clone());
+            std::thread::spawn(move || net::run_worker(&wcfg, engine()).unwrap())
+        })
+        .collect();
+    let worker_results = workers.into_iter().map(|h| h.join().unwrap()).collect();
+    (center.join().unwrap(), worker_results)
+}
+
+/// Pool every worker's retained samples into one (time, θ) list.
+fn pooled(workers: &[RunResult]) -> Vec<Vec<f64>> {
+    workers
+        .iter()
+        .flat_map(|r| r.samples.iter())
+        .map(|(_, t)| t.iter().map(|&x| x as f64).collect())
+        .collect()
+}
+
+#[test]
+fn tcp_fleet_matches_lockfree_moments_on_fig1() {
+    let k = 4;
+    let steps = 30_000;
+    let seed = 17;
+    let opts = RunOptions { thin: 10, burn_in: 3_000, log_every: 5_000, ..Default::default() };
+    let (center, workers) =
+        run_fleet(k, steps, seed, opts.clone(), RunOptions { log_every: 5_000, ..Default::default() });
+
+    // Exchange accounting survives the wire: every upload is credited.
+    let sent: u64 = workers.iter().map(|r| r.metrics.exchanges).sum();
+    assert_eq!(sent, (k * (steps / SYNC)) as u64);
+    assert_eq!(center.metrics.exchanges, sent);
+    assert!(center.metrics.center_steps > 0);
+    // All founders departed cleanly at their horizon.
+    assert_eq!(center.metrics.worker_leaves, k as u64);
+    assert_eq!(center.metrics.stale_rejects, 0);
+    for (_, c) in &center.center_trace {
+        assert!(c.iter().all(|x| x.is_finite()));
+    }
+
+    // Posterior moments at the lock-free fabric's own tolerance.
+    let samples = pooled(&workers);
+    assert!(samples.len() > 5_000, "only {} pooled samples", samples.len());
+    let m = ecsgmcmc::diagnostics::moments(&samples);
+    assert!(m.mean_error(&[0.0, 0.0]) < 0.15, "mean={:?}", m.mean);
+    assert!(m.cov_error(&[1.0, 0.6, 0.6, 0.8]) < 0.3, "cov={:?}", m.cov);
+
+    // And head-to-head against the in-process lock-free run with the same
+    // experiment: both are noisy estimates of the same posterior.
+    let cfg = EcConfig {
+        workers: k,
+        alpha: ALPHA,
+        sync_every: SYNC,
+        steps,
+        transport: TransportKind::LockFree,
+        opts,
+        ..Default::default()
+    };
+    let engines: Vec<Box<dyn WorkerEngine>> = (0..k).map(|_| engine()).collect();
+    let lf = run_ec(&cfg, params(), engines, seed);
+    let lf_samples = ecsgmcmc::diagnostics::to_f64_samples(lf.thetas(), 2);
+    let lm = ecsgmcmc::diagnostics::moments(&lf_samples);
+    for i in 0..2 {
+        assert!(
+            (m.mean[i] - lm.mean[i]).abs() < 0.2,
+            "tcp mean {:?} vs lockfree {:?}",
+            m.mean,
+            lm.mean
+        );
+    }
+    for i in 0..4 {
+        assert!(
+            (m.cov[i] - lm.cov[i]).abs() < 0.4,
+            "tcp cov {:?} vs lockfree {:?}",
+            m.cov,
+            lm.cov
+        );
+    }
+}
+
+/// Speak just enough of the wire protocol to impersonate a worker, then
+/// vanish without a DEPART — indistinguishable from SIGKILL as far as
+/// the center can tell.
+fn killed_worker(addr: &str, k: usize, steps: usize, seed: u64) {
+    let fp = net::fleet_fingerprint(k, ALPHA, SYNC, steps, 1, 2, 2, None);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    frame::write_frame(
+        &mut stream,
+        &Message::Hello {
+            proto: PROTO_VERSION,
+            fingerprint: net::fingerprint_hash(&fp),
+            seed,
+            join_gate: 0,
+        },
+    )
+    .unwrap();
+    let mut fr = FrameReader::new();
+    let mut tmp = [0u8; 4096];
+    let (mut seen, worker) = loop {
+        if let Some(msg) = fr.next_frame().unwrap() {
+            match msg {
+                Message::Welcome { worker, version, .. } => break (version, worker),
+                other => panic!("expected WELCOME, got {other:?}"),
+            }
+        }
+        let n = stream.read(&mut tmp).unwrap();
+        assert!(n > 0, "center closed during handshake");
+        fr.feed(&tmp[..n]);
+    };
+    for _ in 0..5 {
+        frame::write_frame(
+            &mut stream,
+            &Message::Upload { worker, seen_version: seen, theta: vec![0.1, -0.2] },
+        )
+        .unwrap();
+        seen += 1;
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Dropping the stream here sends no DEPART: the center's reader sees
+    // a dead socket and must fold this slot into a `fail` event.
+}
+
+#[test]
+fn killing_a_worker_folds_into_fail_and_survivors_complete() {
+    let k = 3;
+    let steps = 6_000;
+    let seed = 23;
+    let dir = tmp("kill");
+    let stream_path = dir.join("center.jsonl");
+    let opts = RunOptions { thin: 10, burn_in: 500, log_every: 2_000, ..Default::default() };
+    let center_opts = RunOptions {
+        log_every: 2_000,
+        sink: SinkSpec::Jsonl { path: stream_path.clone() },
+        ..Default::default()
+    };
+
+    let listener = net::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let ccfg = center_config(k, steps, seed, center_opts);
+    let center = std::thread::spawn(move || net::run_center_on(listener, ccfg).unwrap());
+
+    let survivors: Vec<_> = (0..k - 1)
+        .map(|_| {
+            let wcfg = worker_config(&addr, k, steps, seed, opts.clone());
+            std::thread::spawn(move || net::run_worker(&wcfg, engine()).unwrap())
+        })
+        .collect();
+    killed_worker(&addr, k, steps, seed);
+
+    let survivor_results: Vec<RunResult> =
+        survivors.into_iter().map(|h| h.join().unwrap()).collect();
+    let center_result = center.join().unwrap();
+
+    // Survivors ran to their full horizon despite the casualty.
+    for r in &survivor_results {
+        assert_eq!(r.metrics.total_steps, steps as u64);
+        assert_eq!(r.metrics.exchanges, (steps / SYNC) as u64);
+    }
+    // All three members are accounted for: two leaves plus one fail.
+    assert_eq!(center_result.metrics.worker_leaves, k as u64);
+    assert!(center_result.metrics.center_steps > 0);
+
+    // The stream records the membership transition as a fail, not a leave.
+    let text = std::fs::read_to_string(&stream_path).unwrap();
+    assert!(
+        text.lines().any(|l| l.contains("\"ev\":\"member\"") && l.contains("\"kind\":\"fail\"")),
+        "no fail member event in the center stream"
+    );
+    assert!(
+        text.lines().any(|l| l.contains("\"ev\":\"member\"") && l.contains("\"kind\":\"leave\"")),
+        "no leave member events in the center stream"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mismatched_fingerprint_is_rejected_at_the_handshake() {
+    let k = 1;
+    let steps = 200;
+    let seed = 31;
+    let listener = net::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut ccfg = center_config(k, steps, seed, RunOptions::default());
+    ccfg.idle_timeout = Duration::from_secs(2);
+    let center = std::thread::spawn(move || net::run_center_on(listener, ccfg).unwrap());
+
+    // A worker whose config drifted (different sync_every → different
+    // fingerprint) must be turned away with a reason, not silently join
+    // a different experiment.
+    let mut wcfg = worker_config(&addr, k, steps, seed, RunOptions::default());
+    wcfg.fingerprint_hash ^= 1;
+    wcfg.retries = 0;
+    let err = net::run_worker(&wcfg, engine()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rejected"), "unexpected error: {msg}");
+    assert!(msg.contains("fingerprint"), "rejection lacks the reason: {msg}");
+
+    // The center, having never admitted anyone, gives up at its idle
+    // timeout instead of serving forever.
+    let center_result = center.join().unwrap();
+    assert_eq!(center_result.metrics.worker_leaves, 0);
+}
